@@ -1,0 +1,73 @@
+//! Personalization demo (Figure 5 scenario in miniature).
+//!
+//! Ten clients with writer-heterogeneous handwriting data train (1) alone,
+//! (2) with FedAvg, (3) with FedPer, and (4) with pFedPara; each client is
+//! then evaluated on its *own* distribution. Shows pFedPara's split:
+//! shared knowledge travels through W1 while each client's W2 stays
+//! private.
+//!
+//!     make artifacts && cargo run --release --example personalization
+
+use anyhow::Result;
+use fedpara::config::{Optimizer, RunConfig, Sharing};
+use fedpara::coordinator::Federation;
+use fedpara::data::synth_vision;
+use fedpara::runtime::Engine;
+use fedpara::util::rng::Rng;
+
+fn main() -> Result<()> {
+    fedpara::util::logging::init_from_env();
+    let engine = Engine::new(&Engine::artifacts_dir())?;
+    let clients = 10;
+    let rounds = 10;
+
+    // Writer-heterogeneous federation: each client draws from its own
+    // style-shifted distribution (the FEMNIST property).
+    let spec = synth_vision::femnist_like();
+    let (all_local, _) = synth_vision::generate_federation(&spec, clients, 160, 0.8, 16, 21);
+    let mut rng = Rng::new(22);
+    let mut trains = Vec::new();
+    let mut tests = Vec::new();
+    for d in all_local {
+        let (tr, te) = d.train_test_split(0.25, &mut rng);
+        trains.push(tr);
+        tests.push(te);
+    }
+
+    let algos: Vec<(&str, &str, Sharing)> = vec![
+        ("Local-only", "mlp62_orig", Sharing::LocalOnly),
+        ("FedAvg", "mlp62_orig", Sharing::Full),
+        (
+            "FedPer",
+            "mlp62_orig",
+            Sharing::FedPer { local_prefixes: vec!["fc2".into()] },
+        ),
+        ("pFedPara", "mlp62_pfedpara", Sharing::GlobalSegments),
+    ];
+
+    println!("{:<12} {:>14} {:>20}", "algorithm", "mean own-acc", "bytes/client-round");
+    for (name, artifact, sharing) in algos {
+        let cfg = RunConfig {
+            artifact: artifact.into(),
+            sample_frac: 1.0, // Paper: no sub-sampling in the Fig-5 setup.
+            rounds,
+            local_epochs: 2,
+            lr: 0.05,
+            lr_decay: 0.999,
+            optimizer: Optimizer::FedAvg,
+            quantize_upload: false,
+            sharing,
+            eval_every: 0,
+            seed: 23,
+        };
+        let mut fed = Federation::new(&engine, cfg, trains.clone(), tests[0].clone())?;
+        fed.run(rounds)?;
+        let accs = fed.evaluate_personalized(&tests)?;
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        let per_round = fed.comm.total_bytes() / (rounds as u64 * clients as u64).max(1);
+        println!("{:<12} {:>13.2}% {:>20}", name, mean * 100.0, per_round);
+    }
+    println!("\n(the pFedPara row should rival or beat FedAvg/FedPer while");
+    println!(" transferring several times fewer bytes — paper Figure 5)");
+    Ok(())
+}

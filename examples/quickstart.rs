@@ -1,0 +1,77 @@
+//! Quickstart: the end-to-end validation driver (DESIGN.md §6).
+//!
+//! Trains an MLP federated on the synthetic FEMNIST stand-in twice — once
+//! with the original parameterization, once with FedPara's low-rank
+//! Hadamard factors — and prints round-by-round loss/accuracy along with
+//! cumulative communication, demonstrating the paper's headline trade:
+//! comparable accuracy at a fraction of the transferred bytes.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use fedpara::config::{Optimizer, RunConfig, Sharing};
+use fedpara::coordinator::Federation;
+use fedpara::data::{partition, synth_vision};
+use fedpara::runtime::Engine;
+use fedpara::util::rng::Rng;
+
+fn main() -> Result<()> {
+    fedpara::util::logging::init_from_env();
+    let engine = Engine::new(&Engine::artifacts_dir())?;
+
+    // A 12-client federation over the synthetic FEMNIST stand-in.
+    let spec = synth_vision::femnist_like();
+    let data = synth_vision::generate(&spec, 12 * 120, 7);
+    let test = synth_vision::generate(&spec, 512, 8);
+    let mut rng = Rng::new(7);
+    let part = partition::dirichlet(&data.labels, spec.classes, 12, 0.5, &mut rng);
+    let locals: Vec<_> = part.clients.iter().map(|idx| data.subset(idx)).collect();
+
+    let rounds = 12;
+    for artifact in ["mlp62_orig", "mlp62_pfedpara"] {
+        println!("\n=== {artifact} ===");
+        let cfg = RunConfig {
+            artifact: artifact.into(),
+            sample_frac: 0.5,
+            rounds,
+            local_epochs: 2,
+            lr: 0.1,
+            lr_decay: 0.992,
+            optimizer: Optimizer::FedAvg,
+            quantize_upload: false,
+            sharing: if artifact.contains("pfedpara") {
+                Sharing::GlobalSegments
+            } else {
+                Sharing::Full
+            },
+            eval_every: 2,
+            seed: 42,
+        };
+        let mut fed = Federation::new(&engine, cfg, locals.clone(), test.clone())?;
+        println!(
+            "model: {} params, {} bytes transferred per client-round",
+            fed.meta().param_count,
+            fed.meta().global_bytes()
+        );
+        for _ in 0..rounds {
+            let r = fed.run_round()?;
+            println!(
+                "round {:>3}  loss {:.4}  acc {:>8}  cumulative {:.4} GB",
+                r.round,
+                r.mean_train_loss,
+                r.test_acc.map(|a| format!("{:.2}%", a * 100.0)).unwrap_or("-".into()),
+                r.cum_gbytes
+            );
+        }
+        let e = fed.evaluate_global()?;
+        println!(
+            "final accuracy {:.2}%  |  total comm {:.4} GB  |  energy {:.5} MJ",
+            e.accuracy() * 100.0,
+            fed.comm.total_gbytes(),
+            fed.comm.total_energy_mj()
+        );
+    }
+    println!("\npFedPara transfers only the global inner factors (X1, Y1) —");
+    println!("compare the per-round GB above (paper §2.3: half of FedPara's).");
+    Ok(())
+}

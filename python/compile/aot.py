@@ -1,0 +1,270 @@
+"""AOT lowering: every (model, scheme, gamma) the experiments need -> HLO text.
+
+This is the only place Python runs in the whole system, and it runs once
+(`make artifacts`). Each artifact is a pair of HLO-text programs
+
+    <name>.train.hlo.txt   train_epoch(params, x, y, lr, correction, anchor, mu)
+    <name>.eval.hlo.txt    eval_batches(params, x, y)
+
+plus a shared ``manifest.json`` describing parameter counts, flat-vector
+layouts (for pFedPara's global/local split) and batch shapes. The rust
+runtime (`rust/src/runtime/`) loads these via `HloModuleProto::from_text_file`.
+
+HLO *text* is the interchange format — xla_extension 0.5.1 rejects
+jax>=0.5's serialized protos (64-bit instruction ids); the text parser
+reassigns ids. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--filter REGEX] [--list]
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models, train
+
+# ---------------------------------------------------------------------------
+# Artifact table
+# ---------------------------------------------------------------------------
+
+VISION_TRAIN = {"nbatches": 4, "batch": 32}
+VISION_EVAL = {"nbatches": 8, "batch": 64}
+TEXT_TRAIN = {"nbatches": 4, "batch": 16}
+TEXT_EVAL = {"nbatches": 8, "batch": 32}
+
+
+def artifact_specs():
+    """The full artifact list (DESIGN.md section 5 maps experiments here)."""
+    specs = []
+
+    def add(name, build_kw, train_shape, eval_shape, variant="plain"):
+        specs.append(
+            {
+                "name": name,
+                "build": build_kw,
+                "train_shape": train_shape,
+                "eval_shape": eval_shape,
+                "variant": variant,  # "plain" | "jacreg"
+            }
+        )
+
+    # --- MLP (Figure 5 personalization; FEMNIST=62 classes, MNIST=10) -----
+    for classes, tag in ((10, "mlp10"), (62, "mlp62")):
+        add(f"{tag}_orig", dict(model="mlp", classes=classes), VISION_TRAIN, VISION_EVAL)
+        add(
+            f"{tag}_pfedpara",
+            dict(model="mlp", classes=classes, scheme="pfedpara", gamma=0.5),
+            VISION_TRAIN,
+            VISION_EVAL,
+        )
+
+    # --- VggMini (Tables 2,3,4,9,10; Figures 3,4,7) ------------------------
+    for classes, tag in ((10, "vgg10"), (100, "vgg100")):
+        add(f"{tag}_orig", dict(model="vggmini", classes=classes), VISION_TRAIN, VISION_EVAL)
+        add(
+            f"{tag}_low_g01",
+            dict(model="vggmini", classes=classes, scheme="lowrank", gamma=0.1),
+            VISION_TRAIN,
+            VISION_EVAL,
+        )
+    for g in (0.1, 0.3, 0.5, 0.7, 0.9):
+        add(
+            f"vgg10_fedpara_g{int(g*10):02d}",
+            dict(model="vggmini", classes=10, scheme="fedpara", gamma=g),
+            VISION_TRAIN,
+            VISION_EVAL,
+        )
+    for g in (0.1, 0.5, 0.9):
+        add(
+            f"vgg100_fedpara_g{int(g*10):02d}",
+            dict(model="vggmini", classes=100, scheme="fedpara", gamma=g),
+            VISION_TRAIN,
+            VISION_EVAL,
+        )
+
+    # Supp. B ablation (Table 4): Tanh nonlinearity and/or Jacobian reg.
+    add(
+        "vgg10_fedpara_tanh_g01",
+        dict(model="vggmini", classes=10, scheme="fedpara_tanh", gamma=0.1),
+        VISION_TRAIN,
+        VISION_EVAL,
+    )
+    add(
+        "vgg10_fedpara_jacreg_g01",
+        dict(model="vggmini", classes=10, scheme="fedpara", gamma=0.1),
+        VISION_TRAIN,
+        VISION_EVAL,
+        variant="jacreg",
+    )
+    add(
+        "vgg10_fedpara_both_g01",
+        dict(model="vggmini", classes=10, scheme="fedpara_tanh", gamma=0.1),
+        VISION_TRAIN,
+        VISION_EVAL,
+        variant="jacreg",
+    )
+
+    # Pufferfish hybrid baseline (Table 10): front convs original, rest
+    # conventional low-rank.
+    add(
+        "vgg10_pufferfish_small",
+        dict(model="vggmini", classes=10, gamma=0.2, pufferfish_split=2),
+        VISION_TRAIN,
+        VISION_EVAL,
+    )
+    add(
+        "vgg10_pufferfish_large",
+        dict(model="vggmini", classes=10, gamma=0.5, pufferfish_split=2),
+        VISION_TRAIN,
+        VISION_EVAL,
+    )
+
+    # --- ResMini (Supp. D.2, Figure 8) --------------------------------------
+    add("res10_orig", dict(model="resmini", classes=10), VISION_TRAIN, VISION_EVAL)
+    for g in (0.1, 0.5, 0.9):
+        add(
+            f"res10_fedpara_g{int(g*10):02d}",
+            dict(model="resmini", classes=10, scheme="fedpara", gamma=g),
+            VISION_TRAIN,
+            VISION_EVAL,
+        )
+
+    # --- CharLSTM (Table 2b, Table 11) --------------------------------------
+    add("lstm_orig", dict(model="lstm"), TEXT_TRAIN, TEXT_EVAL)
+    add("lstm_low", dict(model="lstm", scheme="lowrank", gamma=0.0), TEXT_TRAIN, TEXT_EVAL)
+    add("lstm_fedpara", dict(model="lstm", scheme="fedpara", gamma=0.0), TEXT_TRAIN, TEXT_EVAL)
+
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> HLO text via an XlaComputation.
+
+    `return_tuple=True` so the rust side always unwraps a tuple root.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(spec, out_dir):
+    """Lower one artifact's train+eval programs; return its manifest entry."""
+    model = models.build(**spec["build"])
+    p = model.layout.total
+    d = model.feature_dim
+
+    tn, tb = spec["train_shape"]["nbatches"], spec["train_shape"]["batch"]
+    en, eb = spec["eval_shape"]["nbatches"], spec["eval_shape"]["batch"]
+
+    f32 = jnp.float32
+    pspec = jax.ShapeDtypeStruct((p,), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+
+    if spec["variant"] == "jacreg":
+        train_fn = train.make_train_epoch_jacreg(model, lam=1.0)
+    else:
+        train_fn = train.make_train_epoch(model)
+    eval_fn = train.make_eval(model)
+
+    train_lowered = jax.jit(train_fn).lower(
+        pspec,
+        jax.ShapeDtypeStruct((tn, tb, d), f32),
+        jax.ShapeDtypeStruct((tn, tb), f32),
+        scalar,
+        pspec,
+        pspec,
+        scalar,
+    )
+    eval_lowered = jax.jit(eval_fn).lower(
+        pspec,
+        jax.ShapeDtypeStruct((en, eb, d), f32),
+        jax.ShapeDtypeStruct((en, eb), f32),
+    )
+
+    name = spec["name"]
+    train_file = f"{name}.train.hlo.txt"
+    eval_file = f"{name}.eval.hlo.txt"
+    with open(os.path.join(out_dir, train_file), "w") as f:
+        f.write(to_hlo_text(train_lowered))
+    with open(os.path.join(out_dir, eval_file), "w") as f:
+        f.write(to_hlo_text(eval_lowered))
+
+    build = dict(spec["build"])
+    return {
+        "train_hlo": train_file,
+        "eval_hlo": eval_file,
+        "param_count": p,
+        "global_len": model.layout.global_len(),
+        "layout": model.layout.manifest_entries(),
+        "train": {"nbatches": tn, "batch": tb, "feature_dim": d},
+        "eval": {"nbatches": en, "batch": eb, "feature_dim": d},
+        "model": build.pop("model"),
+        "scheme": build.get("scheme", "original"),
+        "gamma": build.get("gamma", 0.0),
+        "classes": model.classes,
+        "is_text": model.is_text,
+        "eval_denominator_per_batch": model.eval_denominator(eb),
+        "variant": spec["variant"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--filter", default="", help="regex over artifact names")
+    ap.add_argument("--list", action="store_true", help="list artifact names and exit")
+    args = ap.parse_args()
+
+    specs = artifact_specs()
+    if args.filter:
+        rx = re.compile(args.filter)
+        specs = [s for s in specs if rx.search(s["name"])]
+    if args.list:
+        for s in specs:
+            print(s["name"])
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    # Incremental: keep entries for artifacts we are not rebuilding.
+    manifest = {"version": 1, "artifacts": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            try:
+                manifest = json.load(f)
+            except json.JSONDecodeError:
+                pass
+
+    t_all = time.time()
+    for i, spec in enumerate(specs):
+        t0 = time.time()
+        entry = lower_artifact(spec, args.out_dir)
+        manifest["artifacts"][spec["name"]] = entry
+        print(
+            f"[{i+1}/{len(specs)}] {spec['name']}: {entry['param_count']} params, "
+            f"{time.time()-t0:.1f}s",
+            flush=True,
+        )
+        # Write the manifest incrementally so partial builds stay usable.
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"lowered {len(specs)} artifacts in {time.time()-t_all:.1f}s -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,324 @@
+"""FedPara parameterization schemes, parameter layout, and init (L2).
+
+This module is the source of truth for how a model's parameters are packed
+into the single flat f32 vector the AOT artifacts consume. The rust
+coordinator reads the resulting layout from ``artifacts/manifest.json``
+(mirrored by ``rust/src/parameterization/layout.rs``) to do pFedPara's
+global/local split and communication accounting.
+
+Schemes per weight (paper §2):
+  * ``original``       — the unfactorized weight.
+  * ``lowrank``        — X·Yᵀ for FC; Tucker-2 (TKD, Phan et al. 2020) for conv.
+  * ``fedpara``        — Prop.1 (FC) / Prop.3 (conv) low-rank Hadamard product.
+  * ``fedpara_tanh``   — Supp.B Tanh variant.
+  * ``pfedpara``       — §2.3: W = W1 ⊙ (W2 + 1); (X1,Y1) global, (X2,Y2) local.
+
+Rank selection follows §3.1: r = (1-γ)·r_min + γ·r_max with
+r_min = ⌈√min(m,n)⌉ (Corollary 1) and r_max the parameter-budget cap.
+"""
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hadamard, ref
+
+SCHEMES = ("original", "lowrank", "fedpara", "fedpara_tanh", "pfedpara")
+
+
+# ---------------------------------------------------------------------------
+# Rank schedule (mirrors rust/src/parameterization/shapes.rs)
+# ---------------------------------------------------------------------------
+
+
+def r_min_fc(m: int, n: int) -> int:
+    return max(1, math.ceil(math.sqrt(min(m, n))))
+
+
+def r_max_fc(m: int, n: int) -> int:
+    return max(1, (m * n) // (2 * (m + n)))
+
+
+def r_min_conv(o: int, i: int, k1: int, k2: int) -> int:
+    # Full rank of the 1st unfolding needs R² >= min(O, I·K1·K2).
+    return max(1, math.ceil(math.sqrt(min(o, i * k1 * k2))))
+
+
+def r_max_conv(o: int, i: int, k1: int, k2: int) -> int:
+    # 2R(O+I) + 2R²K <= OIK with K = k1·k2.
+    kk = float(k1 * k2)
+    b = float(o + i)
+    c = float(o * i) * kk
+    disc = math.sqrt(b * b + 2.0 * kk * c)
+    return max(1, int((disc - b) / (2.0 * kk)))
+
+
+def gamma_rank_fc(m: int, n: int, gamma: float) -> int:
+    lo, hi = r_min_fc(m, n), r_max_fc(m, n)
+    r = round((1.0 - gamma) * lo + gamma * hi)
+    return int(min(max(r, 1), min(m, n)))
+
+
+def gamma_rank_conv(o: int, i: int, k1: int, k2: int, gamma: float) -> int:
+    lo, hi = r_min_conv(o, i, k1, k2), r_max_conv(o, i, k1, k2)
+    r = round((1.0 - gamma) * lo + gamma * hi)
+    return int(min(max(r, 1), min(o, i)))
+
+
+def lowrank_rank_for_budget_fc(m: int, n: int, budget: int) -> int:
+    return max(1, budget // (m + n))
+
+
+def lowrank_rank_for_budget_conv(o: int, i: int, k1: int, k2: int, budget: int) -> int:
+    # r(o+i) + r²·k1k2 <= budget; solve the quadratic.
+    kk = float(k1 * k2)
+    b = float(o + i)
+    disc = math.sqrt(b * b + 4.0 * kk * budget)
+    return max(1, int((disc - b) / (2.0 * kk)))
+
+
+# ---------------------------------------------------------------------------
+# Weight specs and segments
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One named slice of the flat parameter vector."""
+
+    name: str
+    shape: tuple
+    kind: str  # "global" | "local"
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightSpec:
+    """How one weight tensor is parameterized."""
+
+    name: str
+    kind: str  # "fc" | "conv" | "vec"
+    shape: tuple  # fc: (m, n); conv: (o, i, k1, k2); vec: (n,)
+    scheme: str = "original"
+    rank: Optional[int] = None
+
+    def __post_init__(self):
+        assert self.scheme in SCHEMES, self.scheme
+        if self.scheme != "original":
+            assert self.rank is not None and self.rank >= 1
+            assert self.kind in ("fc", "conv"), "only fc/conv can be factorized"
+
+    def segments(self):
+        """Flat-vector segments, in pack order."""
+        n = self.name
+        r = self.rank
+        if self.scheme == "original":
+            return [Segment(f"{n}.w", self.shape, "global")]
+        if self.kind == "fc":
+            m, c = self.shape
+            if self.scheme == "lowrank":
+                return [
+                    Segment(f"{n}.x", (m, r), "global"),
+                    Segment(f"{n}.y", (c, r), "global"),
+                ]
+            local = "local" if self.scheme == "pfedpara" else "global"
+            return [
+                Segment(f"{n}.x1", (m, r), "global"),
+                Segment(f"{n}.y1", (c, r), "global"),
+                Segment(f"{n}.x2", (m, r), local),
+                Segment(f"{n}.y2", (c, r), local),
+            ]
+        # conv
+        o, i, k1, k2 = self.shape
+        if self.scheme == "lowrank":
+            return [
+                Segment(f"{n}.core", (r, r, k1, k2), "global"),
+                Segment(f"{n}.x", (o, r), "global"),
+                Segment(f"{n}.y", (i, r), "global"),
+            ]
+        local = "local" if self.scheme == "pfedpara" else "global"
+        return [
+            Segment(f"{n}.t1", (r, r, k1, k2), "global"),
+            Segment(f"{n}.x1", (o, r), "global"),
+            Segment(f"{n}.y1", (i, r), "global"),
+            Segment(f"{n}.t2", (r, r, k1, k2), local),
+            Segment(f"{n}.x2", (o, r), local),
+            Segment(f"{n}.y2", (i, r), local),
+        ]
+
+    def num_params(self) -> int:
+        return sum(s.size for s in self.segments())
+
+    # -- init ---------------------------------------------------------------
+
+    def fan_in(self) -> int:
+        if self.kind == "fc":
+            return self.shape[1]
+        if self.kind == "conv":
+            _, i, k1, k2 = self.shape
+            return i * k1 * k2
+        return self.shape[0]
+
+    def segment_stds(self):
+        """Init std per segment (He et al. 2015 adapted so the *composed*
+        weight has He variance). 0.0 means init to zeros (biases).
+
+        This mapping is exported in the manifest (`init_std`) so the rust
+        coordinator can sample fresh initializations without Python.
+        """
+        segs = self.segments()
+        target_var = 2.0 / max(1, self.fan_in())
+        if self.scheme == "original":
+            if self.kind == "vec":
+                return {segs[0].name: 0.0}
+            return {segs[0].name: math.sqrt(target_var)}
+
+        r = self.rank
+        if self.scheme == "lowrank":
+            if self.kind == "fc":
+                # var(XYᵀ) = r·σ⁴ -> σ = (target/r)^(1/4)
+                std = (target_var / r) ** 0.25
+            else:
+                # var(core ×₁ X ×₂ Y) = r²·σ⁶ -> σ = (target/r²)^(1/6)
+                std = (target_var / (r * r)) ** (1.0 / 6.0)
+            return {s.name: std for s in segs}
+
+        if self.scheme == "pfedpara":
+            # W = W1 ⊙ (W2+1): start with W2 ≈ 0 so W ≈ W1 has He scale;
+            # small nonzero local factors keep gradients alive.
+            std1 = (
+                (target_var / r) ** 0.25
+                if self.kind == "fc"
+                else (target_var / (r * r)) ** (1.0 / 6.0)
+            )
+            return {s.name: (0.01 if s.kind == "local" else std1) for s in segs}
+
+        # fedpara / fedpara_tanh: var(W) = var(W1)·var(W2),
+        # aim var(W1) = var(W2) = sqrt(target_var).
+        inner_var = math.sqrt(target_var)
+        if self.kind == "fc":
+            std = (inner_var / r) ** 0.25
+        else:
+            std = (inner_var / (r * r)) ** (1.0 / 6.0)
+        return {s.name: std for s in segs}
+
+    def init(self, key):
+        """Sample an initialization. Returns dict name->array."""
+        segs = self.segments()
+        keys = jax.random.split(key, len(segs))
+        stds = self.segment_stds()
+        out = {}
+        for s, k in zip(segs, keys):
+            std = stds[s.name]
+            if std == 0.0:
+                out[s.name] = jnp.zeros(s.shape, jnp.float32)
+            else:
+                out[s.name] = std * jax.random.normal(k, s.shape)
+        return out
+
+    # -- composition ---------------------------------------------------------
+
+    def compose(self, arrays, use_pallas: bool = True):
+        """Rebuild the weight tensor from its factor arrays.
+
+        Args:
+          arrays: dict segment-name -> array (as produced by unpack/init).
+          use_pallas: route the composition through the L1 Pallas kernels
+            (the AOT path); False uses the jnp oracle (tests A/B both).
+        """
+        n = self.name
+        if self.scheme == "original":
+            return arrays[f"{n}.w"]
+        if self.kind == "fc":
+            if self.scheme == "lowrank":
+                return arrays[f"{n}.x"] @ arrays[f"{n}.y"].T
+            a = (arrays[f"{n}.x1"], arrays[f"{n}.y1"], arrays[f"{n}.x2"], arrays[f"{n}.y2"])
+            if self.scheme == "fedpara_tanh":
+                return hadamard.compose_fedpara_tanh(*a)
+            if self.scheme == "pfedpara":
+                return hadamard.compose_pfedpara(*a) if use_pallas else ref.compose_pfedpara(*a)
+            return hadamard.compose_fedpara(*a) if use_pallas else ref.compose_fedpara(*a)
+        # conv
+        if self.scheme == "lowrank":
+            return ref.tucker2(arrays[f"{n}.core"], arrays[f"{n}.x"], arrays[f"{n}.y"])
+        a = (
+            arrays[f"{n}.t1"],
+            arrays[f"{n}.x1"],
+            arrays[f"{n}.y1"],
+            arrays[f"{n}.t2"],
+            arrays[f"{n}.x2"],
+            arrays[f"{n}.y2"],
+        )
+        if self.scheme == "fedpara_tanh":
+            w1 = jnp.tanh(ref.tucker2(a[0], a[1], a[2]))
+            w2 = jnp.tanh(ref.tucker2(a[3], a[4], a[5]))
+            return w1 * w2
+        if self.scheme == "pfedpara":
+            w1 = ref.tucker2(a[0], a[1], a[2])
+            w2 = ref.tucker2(a[3], a[4], a[5])
+            return w1 * (w2 + 1.0)
+        return hadamard.compose_conv_prop3(*a) if use_pallas else ref.compose_conv_prop3(*a)
+
+
+# ---------------------------------------------------------------------------
+# Flat packing
+# ---------------------------------------------------------------------------
+
+
+class Layout:
+    """Flat-vector layout over a list of WeightSpecs."""
+
+    def __init__(self, weight_specs):
+        self.weight_specs = list(weight_specs)
+        self.segments = []
+        offset = 0
+        self.offsets = {}
+        for ws in self.weight_specs:
+            for s in ws.segments():
+                self.segments.append(s)
+                self.offsets[s.name] = offset
+                offset += s.size
+        self.total = offset
+
+    def global_len(self) -> int:
+        return sum(s.size for s in self.segments if s.kind == "global")
+
+    def pack(self, arrays) -> jnp.ndarray:
+        """dict name->array (matching segments) -> flat vector."""
+        flats = []
+        for s in self.segments:
+            a = arrays[s.name]
+            assert tuple(a.shape) == tuple(s.shape), (s.name, a.shape, s.shape)
+            flats.append(a.reshape(-1))
+        return jnp.concatenate(flats) if flats else jnp.zeros((0,), jnp.float32)
+
+    def unpack(self, flat):
+        """Flat vector -> dict name->array. Works under jit (static slices)."""
+        out = {}
+        for s in self.segments:
+            off = self.offsets[s.name]
+            out[s.name] = jax.lax.dynamic_slice_in_dim(flat, off, s.size).reshape(s.shape)
+        return out
+
+    def init_flat(self, key) -> jnp.ndarray:
+        arrays = {}
+        keys = jax.random.split(key, max(1, len(self.weight_specs)))
+        for ws, k in zip(self.weight_specs, keys):
+            arrays.update(ws.init(k))
+        return self.pack(arrays)
+
+    def manifest_entries(self):
+        """Layout as manifest JSON entries (order defines offsets)."""
+        stds = {}
+        for ws in self.weight_specs:
+            stds.update(ws.segment_stds())
+        return [
+            {"name": s.name, "len": s.size, "kind": s.kind, "init_std": stds[s.name]}
+            for s in self.segments
+        ]

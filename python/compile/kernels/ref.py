@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in ``hadamard.py`` is checked against these references by
+``python/tests/test_kernels.py`` (hypothesis sweeps over shapes) before the
+AOT artifacts are built. The references are also the fallback compose path
+(``use_pallas=False``) used to A/B the kernels inside the lowered model.
+"""
+
+import jax.numpy as jnp
+
+
+def compose_fedpara(x1, y1, x2, y2):
+    """FedPara matrix composition ``W = (X1·Y1ᵀ) ⊙ (X2·Y2ᵀ)`` (Prop. 1).
+
+    Args:
+      x1: (m, r1) factor.
+      y1: (n, r1) factor.
+      x2: (m, r2) factor.
+      y2: (n, r2) factor.
+
+    Returns:
+      (m, n) composed weight.
+    """
+    return (x1 @ y1.T) * (x2 @ y2.T)
+
+
+def compose_fedpara_tanh(x1, y1, x2, y2):
+    """Tanh-variant composition ``W = tanh(W1) ⊙ tanh(W2)`` (Supp. B)."""
+    return jnp.tanh(x1 @ y1.T) * jnp.tanh(x2 @ y2.T)
+
+
+def compose_pfedpara(x1, y1, x2, y2):
+    """pFedPara composition ``W = W1 ⊙ (W2 + 1)`` (§2.3).
+
+    W1 = X1·Y1ᵀ is the global (transferred) factor, W2 = X2·Y2ᵀ the local
+    (private) factor.
+    """
+    return (x1 @ y1.T) * (x2 @ y2.T + 1.0)
+
+
+def fedpara_matmul(x, x1, y1, x2, y2):
+    """Fused forward ``y = x @ Wᵀ`` with W composed on the fly.
+
+    Args:
+      x: (B, n) activations.
+      x1, y1, x2, y2: FedPara factors of W ∈ (m, n).
+
+    Returns:
+      (B, m) output.
+    """
+    w = compose_fedpara(x1, y1, x2, y2)
+    return x @ w.T
+
+
+def tucker2(core, x, y):
+    """Tucker-2 reconstruction ``K = core ×₁ X ×₂ Y``.
+
+    Args:
+      core: (ra, rb, k1, k2) core tensor.
+      x: (o, ra) mode-1 factor.
+      y: (i, rb) mode-2 factor.
+
+    Returns:
+      (o, i, k1, k2) kernel.
+    """
+    return jnp.einsum("oa,ib,abkl->oikl", x, y, core)
+
+
+def compose_conv_prop3(t1, x1, y1, t2, x2, y2):
+    """Prop-3 conv kernel composition.
+
+    ``𝒲 = (𝒯1 ×₁ X1 ×₂ Y1) ⊙ (𝒯2 ×₁ X2 ×₂ Y2)``
+
+    Args:
+      t1, t2: (R, R, k1, k2) inner cores.
+      x1, x2: (O, R) output-channel factors.
+      y1, y2: (I, R) input-channel factors.
+
+    Returns:
+      (O, I, k1, k2) conv kernel.
+    """
+    return tucker2(t1, x1, y1) * tucker2(t2, x2, y2)

@@ -1,0 +1,448 @@
+"""Model definitions (L2): MLP, VGG-style CNN, ResNet-style CNN, char-LSTM.
+
+Scaled-down versions of the architectures the paper evaluates (VGG16,
+ResNet18, 2-FC MLP, 2-layer LSTM) — the parameterization machinery is
+dimension-generic, and this environment is a single CPU core (DESIGN.md §3).
+
+Every model is a pure function of a single flat f32 parameter vector (see
+``fedpara.Layout``), so the rust coordinator treats all models uniformly.
+Conventions:
+
+* vision input `x`: (B, H·W·C) flat, reshaped to NHWC internally;
+* text input `x`: (B, L+1) character ids stored as f32; positions 0..L are
+  the input, 1..L+1 the next-char targets (`y` is ignored);
+* `loss(params, x, y)` -> scalar mean loss;
+* `eval_batch(params, x, y)` -> (correct_count, loss_sum) f32 pair.
+
+Following the paper: VGG uses GroupNorm instead of BatchNorm (Hsieh et al.
+2020), the classifier-head FC layers stay unfactorized, and the first conv
+(3 input channels — nothing to compress) stays original. ResNet keeps its
+1×1 shortcut convs original (Supp. D.2 sets their γ to 1).
+"""
+
+import dataclasses
+import math
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import fedpara
+from .fedpara import Layout, WeightSpec
+from .kernels import hadamard
+
+
+# ---------------------------------------------------------------------------
+# Small functional NN pieces
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, stride=1):
+    """NHWC conv with OIHW kernel, SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+    )
+
+
+def max_pool(x, window=2, stride=2):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        "VALID",
+    )
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def group_norm(x, gamma, beta, groups=8, eps=1e-5):
+    """GroupNorm over NHWC."""
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + eps)
+    return xg.reshape(b, h, w, c) * gamma + beta
+
+
+def cross_entropy(logits, labels):
+    """Mean CE; labels are f32 class ids."""
+    labels = labels.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Model container
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    """A model over one flat parameter vector."""
+
+    name: str
+    layout: Layout
+    feature_dim: int
+    classes: int
+    # forward_weights(weights: dict name->composed array, x) -> logits
+    forward_weights: Callable
+    is_text: bool = False
+    use_pallas: bool = True
+
+    def compose_all(self, flat):
+        """Unpack the flat vector and compose every factorized weight."""
+        arrays = self.layout.unpack(flat)
+        weights = {}
+        for ws in self.layout.weight_specs:
+            weights[ws.name] = ws.compose(arrays, use_pallas=self.use_pallas)
+        return weights
+
+    def forward(self, flat, x):
+        return self.forward_weights(self.compose_all(flat), x)
+
+    # -- losses --------------------------------------------------------------
+
+    def loss(self, flat, x, y):
+        if self.is_text:
+            logits, targets = self._text_logits(flat, x)
+            return cross_entropy(logits, targets)
+        return cross_entropy(self.forward(flat, x), y)
+
+    def loss_from_weights(self, weights, x, y):
+        """Loss as a function of *composed* weights (Jacobian-reg support)."""
+        if self.is_text:
+            logits, targets = self._text_logits_weights(weights, x)
+            return cross_entropy(logits, targets)
+        return cross_entropy(self.forward_weights(weights, x), y)
+
+    def eval_batch(self, flat, x, y):
+        """Returns (correct_count, loss_sum) as f32 scalars."""
+        return self.eval_batch_from_weights(self.compose_all(flat), x, y)
+
+    def eval_batch_from_weights(self, weights, x, y):
+        """`eval_batch` over pre-composed weights — lets the eval artifact
+        compose W once outside the batch scan (§Perf: the parameters do not
+        change during evaluation, unlike training)."""
+        if self.is_text:
+            logits, targets = self._text_logits_weights(weights, x)
+            pred = jnp.argmax(logits, axis=-1)
+            correct = jnp.sum((pred == targets).astype(jnp.float32))
+            loss = cross_entropy(logits, targets) * targets.size
+            return correct, loss
+        logits = self.forward_weights(weights, x)
+        pred = jnp.argmax(logits, axis=-1)
+        correct = jnp.sum((pred == y.astype(jnp.int32)).astype(jnp.float32))
+        loss = cross_entropy(logits, y) * y.shape[0]
+        return correct, loss
+
+    def eval_denominator(self, batch: int) -> int:
+        """Number of predictions per batch (text predicts every position)."""
+        if self.is_text:
+            return batch * (self.feature_dim - 1)
+        return batch
+
+    # -- text helpers ----------------------------------------------------------
+
+    def _text_logits(self, flat, x):
+        return self._text_logits_weights(self.compose_all(flat), x)
+
+    def _text_logits_weights(self, weights, x):
+        ids = x.astype(jnp.int32)
+        return self.forward_weights(weights, ids[:, :-1]), ids[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Scheme assignment helpers
+# ---------------------------------------------------------------------------
+
+
+def _fc_spec(name, m, n, scheme, gamma, budget_ref=None):
+    """WeightSpec for an FC weight under `scheme`, sized by γ."""
+    if scheme == "original" or min(m, n) < 16:
+        return WeightSpec(name, "fc", (m, n))
+    if scheme == "lowrank":
+        # Budget-matched to the FedPara model at the same γ (Table 2 setup).
+        budget = budget_ref if budget_ref is not None else (
+            2 * fedpara.gamma_rank_fc(m, n, gamma) * (m + n)
+        )
+        r = fedpara.lowrank_rank_for_budget_fc(m, n, budget)
+        return WeightSpec(name, "fc", (m, n), "lowrank", max(1, r))
+    r = fedpara.gamma_rank_fc(m, n, gamma)
+    return WeightSpec(name, "fc", (m, n), scheme, r)
+
+
+def _conv_spec(name, o, i, k, scheme, gamma):
+    """WeightSpec for a conv weight under `scheme`, sized by γ."""
+    factorizable = min(o, i) >= 16
+    if scheme == "original" or not factorizable:
+        return WeightSpec(name, "conv", (o, i, k, k))
+    if scheme == "lowrank":
+        budget = 2 * fedpara.gamma_rank_conv(o, i, k, k, gamma) * (
+            o + i + fedpara.gamma_rank_conv(o, i, k, k, gamma) * k * k
+        )
+        r = fedpara.lowrank_rank_for_budget_conv(o, i, k, k, budget)
+        return WeightSpec(name, "conv", (o, i, k, k), "lowrank", max(1, min(r, min(o, i))))
+    r = fedpara.gamma_rank_conv(o, i, k, k, gamma)
+    return WeightSpec(name, "conv", (o, i, k, k), scheme, r)
+
+
+# ---------------------------------------------------------------------------
+# MLP (the paper's 2-FC personalization model)
+# ---------------------------------------------------------------------------
+
+
+def build_mlp(
+    classes: int,
+    scheme: str = "original",
+    gamma: float = 0.5,
+    in_dim: int = 784,
+    hidden: int = 256,
+    use_pallas: bool = True,
+) -> Model:
+    """784 → 256 → classes, both FC weights under `scheme` (McMahan 2017)."""
+    specs = [
+        _fc_spec("fc1", hidden, in_dim, scheme, gamma),
+        WeightSpec("fc1_b", "vec", (hidden,)),
+        _fc_spec("fc2", classes, hidden, scheme, gamma),
+        WeightSpec("fc2_b", "vec", (classes,)),
+    ]
+    layout = Layout(specs)
+
+    def forward_weights(w, x):
+        h = jax.nn.relu(x @ w["fc1"].T + w["fc1_b"])
+        return h @ w["fc2"].T + w["fc2_b"]
+
+    return Model(
+        name=f"mlp{classes}_{scheme}",
+        layout=layout,
+        feature_dim=in_dim,
+        classes=classes,
+        forward_weights=forward_weights,
+        use_pallas=use_pallas,
+    )
+
+
+# ---------------------------------------------------------------------------
+# VggMini — 4 conv blocks + GN + 2-FC head (VGG16 stand-in)
+# ---------------------------------------------------------------------------
+
+VGG_CHANNELS = (16, 32, 64, 64)
+
+
+def build_vggmini(
+    classes: int,
+    scheme: str = "original",
+    gamma: float = 0.1,
+    hw: int = 16,
+    in_ch: int = 3,
+    use_pallas: bool = True,
+    pufferfish_split: Optional[int] = None,
+) -> Model:
+    """VGG-style CNN: [conv-GN-relu-pool]×4 → FC128 → FC-classes.
+
+    `pufferfish_split`: if set, implements the Pufferfish hybrid (Wang et
+    al. 2021): conv layers with index < split stay original, the rest are
+    conventional low-rank (no Hadamard) — the Table-10 baseline.
+    """
+    specs: List[WeightSpec] = []
+    ch_in = in_ch
+    for li, ch_out in enumerate(VGG_CHANNELS):
+        if pufferfish_split is not None:
+            conv_scheme = "original" if li < pufferfish_split else "lowrank"
+            specs.append(_conv_spec(f"conv{li}", ch_out, ch_in, 3, conv_scheme, gamma))
+        else:
+            specs.append(_conv_spec(f"conv{li}", ch_out, ch_in, 3, scheme, gamma))
+        specs.append(WeightSpec(f"gn{li}_g", "vec", (ch_out,)))
+        specs.append(WeightSpec(f"gn{li}_b", "vec", (ch_out,)))
+        ch_in = ch_out
+    flat_hw = hw // (2 ** len(VGG_CHANNELS))
+    flat_dim = flat_hw * flat_hw * VGG_CHANNELS[-1]
+    # Head FCs stay original (paper keeps VGG's last FC layers unfactorized).
+    specs += [
+        WeightSpec("fc1", "fc", (128, flat_dim)),
+        WeightSpec("fc1_b", "vec", (128,)),
+        WeightSpec("fc2", "fc", (classes, 128)),
+        WeightSpec("fc2_b", "vec", (classes,)),
+    ]
+    layout = Layout(specs)
+
+    def forward_weights(w, x):
+        b = x.shape[0]
+        h = x.reshape(b, hw, hw, in_ch)
+        for li in range(len(VGG_CHANNELS)):
+            h = conv2d(h, w[f"conv{li}"])
+            h = group_norm(h, w[f"gn{li}_g"] + 1.0, w[f"gn{li}_b"])
+            h = jax.nn.relu(h)
+            h = max_pool(h)
+        h = h.reshape(b, -1)
+        h = jax.nn.relu(h @ w["fc1"].T + w["fc1_b"])
+        return h @ w["fc2"].T + w["fc2_b"]
+
+    tag = f"pf{pufferfish_split}" if pufferfish_split is not None else scheme
+    return Model(
+        name=f"vgg{classes}_{tag}",
+        layout=layout,
+        feature_dim=hw * hw * in_ch,
+        classes=classes,
+        forward_weights=forward_weights,
+        use_pallas=use_pallas,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ResMini — conv stem + 3 residual blocks (ResNet18 stand-in)
+# ---------------------------------------------------------------------------
+
+RES_STAGES = ((16, 1), (32, 2), (64, 2))  # (channels, stride)
+
+
+def build_resmini(
+    classes: int,
+    scheme: str = "original",
+    gamma: float = 0.1,
+    hw: int = 16,
+    in_ch: int = 3,
+    use_pallas: bool = True,
+) -> Model:
+    """ResNet-style CNN with GN; 3×3 convs factorized, 1×1 shortcuts kept
+    original (the paper's ResNet18 recipe, Supp. D.2)."""
+    specs: List[WeightSpec] = [
+        _conv_spec("stem", 16, in_ch, 3, "original", gamma),
+        WeightSpec("stem_gn_g", "vec", (16,)),
+        WeightSpec("stem_gn_b", "vec", (16,)),
+    ]
+    ch_in = 16
+    for si, (ch, _stride) in enumerate(RES_STAGES):
+        specs += [
+            _conv_spec(f"res{si}_c1", ch, ch_in, 3, scheme, gamma),
+            WeightSpec(f"res{si}_gn1_g", "vec", (ch,)),
+            WeightSpec(f"res{si}_gn1_b", "vec", (ch,)),
+            _conv_spec(f"res{si}_c2", ch, ch, 3, scheme, gamma),
+            WeightSpec(f"res{si}_gn2_g", "vec", (ch,)),
+            WeightSpec(f"res{si}_gn2_b", "vec", (ch,)),
+        ]
+        if ch != ch_in or _stride != 1:
+            specs.append(WeightSpec(f"res{si}_sc", "conv", (ch, ch_in, 1, 1)))
+        ch_in = ch
+    specs += [
+        WeightSpec("fc", "fc", (classes, ch_in)),
+        WeightSpec("fc_b", "vec", (classes,)),
+    ]
+    layout = Layout(specs)
+
+    def forward_weights(w, x):
+        b = x.shape[0]
+        h = x.reshape(b, hw, hw, in_ch)
+        h = conv2d(h, w["stem"])
+        h = jax.nn.relu(group_norm(h, w["stem_gn_g"] + 1.0, w["stem_gn_b"]))
+        ch_prev = 16
+        for si, (ch, stride) in enumerate(RES_STAGES):
+            identity = h
+            out = conv2d(h, w[f"res{si}_c1"], stride=stride)
+            out = jax.nn.relu(group_norm(out, w[f"res{si}_gn1_g"] + 1.0, w[f"res{si}_gn1_b"]))
+            out = conv2d(out, w[f"res{si}_c2"])
+            out = group_norm(out, w[f"res{si}_gn2_g"] + 1.0, w[f"res{si}_gn2_b"])
+            if ch != ch_prev or stride != 1:
+                identity = conv2d(h, w[f"res{si}_sc"], stride=stride)
+            h = jax.nn.relu(out + identity)
+            ch_prev = ch
+        h = global_avg_pool(h)
+        return h @ w["fc"].T + w["fc_b"]
+
+    return Model(
+        name=f"res{classes}_{scheme}",
+        layout=layout,
+        feature_dim=hw * hw * in_ch,
+        classes=classes,
+        forward_weights=forward_weights,
+        use_pallas=use_pallas,
+    )
+
+
+# ---------------------------------------------------------------------------
+# CharLSTM — embedding + LSTM + FC head (Shakespeare stand-in model)
+# ---------------------------------------------------------------------------
+
+
+def build_lstm(
+    vocab: int = 80,
+    hidden: int = 96,
+    embed: int = 32,
+    scheme: str = "original",
+    gamma: float = 0.0,
+    seq_len: int = 48,
+    use_pallas: bool = True,
+) -> Model:
+    """Char-LSTM: the recurrent weights (4H×E and 4H×H) carry the scheme.
+
+    The embedding table stays original (it is a lookup, not a GEMM), as
+    does the small bias. The output head is factorizable.
+    """
+    specs = [
+        WeightSpec("embed", "fc", (vocab, embed)),  # kept original below
+        _fc_spec("w_ih", 4 * hidden, embed, scheme, gamma),
+        _fc_spec("w_hh", 4 * hidden, hidden, scheme, gamma),
+        WeightSpec("b", "vec", (4 * hidden,)),
+        _fc_spec("head", vocab, hidden, scheme, gamma),
+        WeightSpec("head_b", "vec", (vocab,)),
+    ]
+    layout = Layout(specs)
+
+    def forward_weights(w, ids):
+        b, t = ids.shape
+        emb = jnp.take(w["embed"], ids, axis=0)  # (B, T, E)
+        h0 = jnp.zeros((b, hidden), emb.dtype)
+        c0 = jnp.zeros((b, hidden), emb.dtype)
+
+        def cell(carry, x_t):
+            h, c = carry
+            gates = x_t @ w["w_ih"].T + h @ w["w_hh"].T + w["b"]
+            i_g, f_g, g_g, o_g = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f_g + 1.0) * c + jax.nn.sigmoid(i_g) * jnp.tanh(g_g)
+            h = jax.nn.sigmoid(o_g) * jnp.tanh(c)
+            return (h, c), h
+
+        xs = jnp.swapaxes(emb, 0, 1)  # (T, B, E)
+        (_, _), hs = jax.lax.scan(cell, (h0, c0), xs)
+        hs = jnp.swapaxes(hs, 0, 1)  # (B, T, H)
+        return hs @ w["head"].T + w["head_b"]
+
+    return Model(
+        name=f"lstm{vocab}_{scheme}",
+        layout=layout,
+        feature_dim=seq_len + 1,
+        classes=vocab,
+        forward_weights=forward_weights,
+        is_text=True,
+        use_pallas=use_pallas,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry used by aot.py and the tests
+# ---------------------------------------------------------------------------
+
+
+def build(model: str, **kw) -> Model:
+    if model == "mlp":
+        return build_mlp(**kw)
+    if model == "vggmini":
+        return build_vggmini(**kw)
+    if model == "resmini":
+        return build_resmini(**kw)
+    if model == "lstm":
+        return build_lstm(**kw)
+    raise ValueError(f"unknown model '{model}'")

@@ -1,0 +1,171 @@
+"""Local-training and evaluation steps (L2), AOT-lowered for the rust L3.
+
+One `train_epoch` signature covers every FL optimizer the paper combines
+with FedPara (Table 3), so a single artifact per model serves FedAvg,
+FedProx, SCAFFOLD and FedDyn (FedAdam is server-side, implemented in rust):
+
+    new_params, mean_loss = train_epoch(params, x, y, lr, correction,
+                                        anchor, mu)
+
+with the per-batch SGD update
+
+    g_total = ∇L(p) + correction + mu · (p − anchor)
+
+* FedAvg:    correction = 0,        mu = 0
+* FedProx:   correction = 0,        mu = μ_prox, anchor = server params
+* SCAFFOLD:  correction = c − c_i,  mu = 0      (rust maintains c, c_i)
+* FedDyn:    correction = −λ_i,     mu = α,     anchor = server params
+
+The whole epoch runs as one `lax.scan` over `nbatches` stacked batches, so
+the artifact is called once per local epoch — no Python anywhere near the
+round loop.
+
+The Jacobian-correction variant (Supp. B, Eq. 9) is a separate entry point
+(`train_epoch_jacreg`) adding λ/2‖W' − (W − ηJ_W)‖₂ per factorized layer.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .fedpara import WeightSpec
+
+
+def make_train_epoch(model):
+    """Build the generic train-epoch function for `model`."""
+
+    def train_epoch(params, x, y, lr, correction, anchor, mu):
+        """One local epoch of SGD over stacked batches.
+
+        Args:
+          params: (P,) flat parameter vector.
+          x: (N, B, D) stacked batches.
+          y: (N, B) labels (ignored for text models).
+          lr: scalar learning rate.
+          correction: (P,) additive gradient correction.
+          anchor: (P,) proximal anchor (server params).
+          mu: scalar proximal coefficient.
+
+        Returns:
+          (new_params, mean_loss)
+        """
+
+        def step(p, batch):
+            xb, yb = batch
+            loss, g = jax.value_and_grad(model.loss)(p, xb, yb)
+            g = g + correction + mu * (p - anchor)
+            # Text models ignore yb; keep the argument alive so the lowered
+            # entry signature is identical across all models (the mlir->XLA
+            # conversion prunes dead parameters otherwise).
+            return p - lr * g, loss + 0.0 * jnp.sum(yb)
+
+        params, losses = jax.lax.scan(step, params, (x, y))
+        return params, jnp.mean(losses)
+
+    return train_epoch
+
+
+def make_eval(model):
+    """Build the batched eval function: (params, x, y) -> (correct, loss_sum).
+
+    x: (N, B, D), y: (N, B). Accuracy denominator is
+    N · model.eval_denominator(B) on the rust side.
+    """
+
+    def eval_batches(params, x, y):
+        # Compose every factorized weight ONCE — parameters are constant
+        # during evaluation, so re-composing per scanned batch (as training
+        # must) would be pure waste (§Perf L2 optimization).
+        weights = model.compose_all(params)
+
+        def step(carry, batch):
+            xb, yb = batch
+            c, l = model.eval_batch_from_weights(weights, xb, yb)
+            # Keep yb alive for text models (see make_train_epoch).
+            return (carry[0] + c + 0.0 * jnp.sum(yb), carry[1] + l), 0.0
+
+        (correct, loss), _ = jax.lax.scan(
+            step, (jnp.float32(0.0), jnp.float32(0.0)), (x, y)
+        )
+        return correct, loss
+
+    return eval_batches
+
+
+# ---------------------------------------------------------------------------
+# Jacobian correction regularization (Supp. B)
+# ---------------------------------------------------------------------------
+
+
+def _factorized_fc_specs(model):
+    return [
+        ws
+        for ws in model.layout.weight_specs
+        if ws.kind == "fc" and ws.scheme in ("fedpara", "fedpara_tanh", "pfedpara")
+    ]
+
+
+def _jacobian_penalty(model, p, x, y, eta):
+    """λ-free part of Eq. 9: ‖W' − (W − η·J_W)‖₂ summed over FedPara FC
+    layers.
+
+    J_W (the gradient w.r.t. each *composed* weight) and the factor
+    Jacobians are treated as constants (stop_gradient), exactly as Eq. 9
+    prescribes: the regularizer shapes the factors, not the Jacobians.
+    """
+    arrays = model.layout.unpack(p)
+    weights = {ws.name: ws.compose(arrays, use_pallas=False) for ws in model.layout.weight_specs}
+
+    # J_W for every composed weight.
+    j_weights = jax.grad(lambda w: model.loss_from_weights(w, x, y))(weights)
+
+    penalty = jnp.float32(0.0)
+    for ws in _factorized_fc_specs(model):
+        n = ws.name
+        x1, y1 = arrays[f"{n}.x1"], arrays[f"{n}.y1"]
+        x2, y2 = arrays[f"{n}.x2"], arrays[f"{n}.y2"]
+        w1 = x1 @ y1.T
+        w2 = x2 @ y2.T
+        w = weights[n]
+        j_w = jax.lax.stop_gradient(j_weights[n])
+        # Eq. 6: factor Jacobians via the chain rule (constants).
+        j_w1 = jax.lax.stop_gradient(j_w * w2)
+        j_w2 = jax.lax.stop_gradient(j_w * w1)
+        j_x1 = j_w1 @ y1
+        j_y1 = j_w1.T @ x1
+        j_x2 = j_w2 @ y2
+        j_y2 = j_w2.T @ x2
+        # One virtual SGD step on the factors (Eq. 7) ...
+        x1p, y1p = x1 - eta * j_x1, y1 - eta * j_y1
+        x2p, y2p = x2 - eta * j_x2, y2 - eta * j_y2
+        # ... gives W' (Eq. 8); penalize its deviation from the ideal
+        # W − η·J_W (Eq. 9).
+        w_prime = (x1p @ y1p.T) * (x2p @ y2p.T)
+        target = w - eta * j_w
+        penalty = penalty + jnp.sqrt(jnp.sum((w_prime - target) ** 2) + 1e-12)
+    return penalty
+
+
+def make_train_epoch_jacreg(model, lam: float = 1.0):
+    """Train-epoch variant with the Jacobian correction regularizer.
+
+    Signature matches `make_train_epoch` so the rust runtime can treat both
+    uniformly (the regularizer strength λ is baked at AOT time, like the
+    paper's fixed λ = 1).
+    """
+
+    def train_epoch(params, x, y, lr, correction, anchor, mu):
+        def objective(p, xb, yb):
+            base = model.loss(p, xb, yb)
+            reg = _jacobian_penalty(model, p, xb, yb, lr)
+            return base + 0.5 * lam * reg
+
+        def step(p, batch):
+            xb, yb = batch
+            loss, g = jax.value_and_grad(objective)(p, xb, yb)
+            g = g + correction + mu * (p - anchor)
+            return p - lr * g, loss + 0.0 * jnp.sum(yb)
+
+        params, losses = jax.lax.scan(step, params, (x, y))
+        return params, jnp.mean(losses)
+
+    return train_epoch

@@ -1,0 +1,198 @@
+"""L2 parameterization: layouts, packing, init statistics, rank schedule."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import fedpara
+from compile.fedpara import Layout, WeightSpec
+
+
+class TestRankSchedule:
+    def test_r_min_corollary1(self):
+        assert fedpara.r_min_fc(100, 100) == 10  # Supp A.2 example.
+        assert fedpara.r_min_fc(784, 256) == 16
+        # r_min² >= min(m,n) and (r_min-1)² < min(m,n).
+        for m, n in [(7, 9), (128, 300), (50, 2)]:
+            r = fedpara.r_min_fc(m, n)
+            assert r * r >= min(m, n)
+            assert (r - 1) * (r - 1) < min(m, n)
+
+    def test_r_max_budget(self):
+        for m, n in [(256, 256), (784, 100), (512, 128)]:
+            r = fedpara.r_max_fc(m, n)
+            assert 2 * r * (m + n) <= m * n
+            assert 2 * (r + 1) * (m + n) > m * n
+
+    def test_r_max_conv_budget(self):
+        for o, i, k in [(64, 32, 3), (256, 256, 3), (128, 64, 5)]:
+            r = fedpara.r_max_conv(o, i, k, k)
+            assert 2 * r * (o + i + r * k * k) <= o * i * k * k
+            rp = r + 1
+            assert 2 * rp * (o + i + rp * k * k) > o * i * k * k
+
+    def test_gamma_monotone(self):
+        prev = 0
+        for g in np.linspace(0, 1, 11):
+            r = fedpara.gamma_rank_conv(128, 64, 3, 3, float(g))
+            assert r >= prev
+            prev = r
+
+    def test_table1_example(self):
+        # m=n=256, R=16: FedPara FC params = 2R(m+n) = 16384.
+        ws = WeightSpec("w", "fc", (256, 256), "fedpara", 16)
+        assert ws.num_params() == 16_384
+        conv = WeightSpec("c", "conv", (256, 256, 3, 3), "fedpara", 16)
+        assert conv.num_params() == 2 * 16 * (256 + 256 + 16 * 9)  # 20 992
+
+
+class TestSegments:
+    def test_original(self):
+        ws = WeightSpec("w", "fc", (8, 4))
+        segs = ws.segments()
+        assert len(segs) == 1 and segs[0].size == 32 and segs[0].kind == "global"
+
+    def test_fedpara_fc(self):
+        ws = WeightSpec("w", "fc", (8, 4), "fedpara", 2)
+        segs = ws.segments()
+        assert [s.name.split(".")[1] for s in segs] == ["x1", "y1", "x2", "y2"]
+        assert all(s.kind == "global" for s in segs)
+        assert sum(s.size for s in segs) == 2 * 2 * (8 + 4)
+
+    def test_pfedpara_split(self):
+        ws = WeightSpec("w", "fc", (8, 4), "pfedpara", 2)
+        kinds = {s.name.split(".")[1]: s.kind for s in ws.segments()}
+        assert kinds == {"x1": "global", "y1": "global", "x2": "local", "y2": "local"}
+
+    def test_pfedpara_conv_split(self):
+        ws = WeightSpec("w", "conv", (16, 16, 3, 3), "pfedpara", 4)
+        kinds = {s.name.split(".")[1]: s.kind for s in ws.segments()}
+        assert kinds["t1"] == "global" and kinds["t2"] == "local"
+
+    def test_vec_zero_init(self):
+        ws = WeightSpec("b", "vec", (7,))
+        out = ws.init(jax.random.PRNGKey(0))
+        assert np.allclose(np.asarray(out["b.w"]), 0.0)
+
+
+class TestLayout:
+    def make(self):
+        return Layout(
+            [
+                WeightSpec("a", "fc", (8, 4), "fedpara", 2),
+                WeightSpec("b", "vec", (8,)),
+                WeightSpec("c", "fc", (6, 4), "pfedpara", 2),
+            ]
+        )
+
+    def test_total(self):
+        lay = self.make()
+        assert lay.total == 48 + 8 + 40
+        assert lay.global_len() == 48 + 8 + 20
+
+    def test_pack_unpack_roundtrip(self):
+        lay = self.make()
+        flat = lay.init_flat(jax.random.PRNGKey(1))
+        arrays = lay.unpack(flat)
+        repacked = lay.pack(arrays)
+        np.testing.assert_array_equal(np.asarray(flat), np.asarray(repacked))
+
+    def test_unpack_under_jit(self):
+        lay = self.make()
+        flat = lay.init_flat(jax.random.PRNGKey(2))
+
+        @jax.jit
+        def f(p):
+            a = lay.unpack(p)
+            return a["a.x1"].sum() + a["c.y2"].sum()
+
+        assert np.isfinite(float(f(flat)))
+
+    def test_manifest_entries_order(self):
+        lay = self.make()
+        entries = lay.manifest_entries()
+        assert sum(e["len"] for e in entries) == lay.total
+        # Order must match segment order (offsets are implied).
+        assert [e["name"] for e in entries] == [s.name for s in lay.segments]
+
+
+class TestInitStatistics:
+    @settings(max_examples=6, deadline=None)
+    @given(
+        m=st.sampled_from([64, 128, 256]),
+        n=st.sampled_from([64, 128, 256]),
+        seed=st.integers(0, 1000),
+    )
+    def test_fedpara_composed_variance_he_like(self, m, n, seed):
+        r = fedpara.gamma_rank_fc(m, n, 0.3)
+        ws = WeightSpec("w", "fc", (m, n), "fedpara", r)
+        arrays = ws.init(jax.random.PRNGKey(seed))
+        w = np.asarray(ws.compose(arrays, use_pallas=False))
+        target = 2.0 / n
+        var = w.var()
+        # Product-of-gaussians tails are heavy; accept a factor-3 band.
+        assert target / 3 < var < target * 3, (var, target)
+
+    def test_pfedpara_starts_near_global(self):
+        ws = WeightSpec("w", "fc", (64, 64), "pfedpara", 8)
+        arrays = ws.init(jax.random.PRNGKey(3))
+        w = np.asarray(ws.compose(arrays, use_pallas=False))
+        w1 = np.asarray(arrays["w.x1"] @ arrays["w.y1"].T)
+        # W = W1 ⊙ (W2+1) ≈ W1 at init (local factors ~0.01).
+        assert np.abs(w - w1).max() < 0.1 * np.abs(w1).max() + 1e-3
+
+    def test_original_he(self):
+        ws = WeightSpec("w", "fc", (256, 512))
+        arrays = ws.init(jax.random.PRNGKey(4))
+        var = np.asarray(arrays["w.w"]).var()
+        assert abs(var - 2.0 / 512) < 0.3 * (2.0 / 512)
+
+    def test_conv_fedpara_variance(self):
+        o, i, k = 64, 64, 3
+        r = fedpara.gamma_rank_conv(o, i, k, k, 0.3)
+        ws = WeightSpec("w", "conv", (o, i, k, k), "fedpara", r)
+        arrays = ws.init(jax.random.PRNGKey(5))
+        w = np.asarray(ws.compose(arrays, use_pallas=False))
+        target = 2.0 / (i * k * k)
+        assert target / 4 < w.var() < target * 4, (w.var(), target)
+
+
+class TestComposePallasVsRef:
+    """compose() must agree between the Pallas and jnp paths for every
+    scheme (this is what guarantees the AOT artifacts compute the same
+    function the tests validate)."""
+
+    @pytest.mark.parametrize("scheme", ["fedpara", "pfedpara", "fedpara_tanh"])
+    def test_fc(self, scheme):
+        r = 4
+        ws = WeightSpec("w", "fc", (48, 32), scheme, r)
+        arrays = ws.init(jax.random.PRNGKey(7))
+        a = np.asarray(ws.compose(arrays, use_pallas=True))
+        b = np.asarray(ws.compose(arrays, use_pallas=False))
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("scheme", ["fedpara"])
+    def test_conv(self, scheme):
+        ws = WeightSpec("w", "conv", (32, 16, 3, 3), scheme, 4)
+        arrays = ws.init(jax.random.PRNGKey(8))
+        a = np.asarray(ws.compose(arrays, use_pallas=True))
+        b = np.asarray(ws.compose(arrays, use_pallas=False))
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_lowrank_fc_shape(self):
+        ws = WeightSpec("w", "fc", (24, 16), "lowrank", 3)
+        arrays = ws.init(jax.random.PRNGKey(9))
+        assert ws.compose(arrays).shape == (24, 16)
+
+    def test_lowrank_conv_tucker(self):
+        ws = WeightSpec("w", "conv", (16, 16, 3, 3), "lowrank", 4)
+        arrays = ws.init(jax.random.PRNGKey(10))
+        w = np.asarray(ws.compose(arrays), np.float64)
+        # Tucker-2 with rank 4 -> unfolding rank <= 4 (the low-rank
+        # restriction FedPara escapes).
+        s = np.linalg.svd(w.reshape(16, -1), compute_uv=False)
+        assert int((s > s[0] * 1e-5).sum()) <= 4

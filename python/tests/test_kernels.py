@@ -1,0 +1,222 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (and ranks) so tile-boundary and non-power-of-two
+cases are exercised; gradients are checked against autodiff through the
+oracle, validating the custom VJPs built from the paper's Eq. 6.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import hadamard as hk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([4, 7, 12, 16, 24, 31, 48, 64, 100])
+RANKS = st.sampled_from([1, 2, 3, 5, 8])
+
+
+def factors(seed, m, n, r1, r2=None):
+    r2 = r2 or r1
+    rng = np.random.RandomState(seed)
+    return (
+        jnp.asarray(rng.randn(m, r1), jnp.float32),
+        jnp.asarray(rng.randn(n, r1), jnp.float32),
+        jnp.asarray(rng.randn(m, r2), jnp.float32),
+        jnp.asarray(rng.randn(n, r2), jnp.float32),
+    )
+
+
+class TestCompose:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, n=DIMS, r=RANKS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, n, r, seed):
+        a = factors(seed % 10_000, m, n, r)
+        assert_allclose(
+            np.asarray(hk.compose_fedpara(*a)),
+            np.asarray(ref.compose_fedpara(*a)),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=DIMS, n=DIMS, r=RANKS, seed=st.integers(0, 10_000))
+    def test_pfedpara_matches_ref(self, m, n, r, seed):
+        a = factors(seed, m, n, r)
+        assert_allclose(
+            np.asarray(hk.compose_pfedpara(*a)),
+            np.asarray(ref.compose_pfedpara(*a)),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_asymmetric_ranks(self):
+        a = factors(0, 20, 12, 3, 5)
+        assert_allclose(
+            np.asarray(hk.compose_fedpara(*a)),
+            np.asarray(ref.compose_fedpara(*a)),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(m=DIMS, n=DIMS, r=RANKS, seed=st.integers(0, 10_000))
+    def test_gradients_match_oracle(self, m, n, r, seed):
+        a = factors(seed, m, n, r)
+
+        def f_pallas(*fs):
+            return jnp.sum(jnp.sin(hk.compose_fedpara(*fs)))
+
+        def f_ref(*fs):
+            return jnp.sum(jnp.sin(ref.compose_fedpara(*fs)))
+
+        gp = jax.grad(f_pallas, argnums=(0, 1, 2, 3))(*a)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2, 3))(*a)
+        for p_, r_ in zip(gp, gr):
+            assert_allclose(np.asarray(p_), np.asarray(r_), rtol=2e-3, atol=2e-3)
+
+    def test_pfedpara_gradients(self):
+        a = factors(3, 24, 16, 4)
+        gp = jax.grad(lambda *f: jnp.sum(hk.compose_pfedpara(*f) ** 2), argnums=(0, 1, 2, 3))(*a)
+        gr = jax.grad(lambda *f: jnp.sum(ref.compose_pfedpara(*f) ** 2), argnums=(0, 1, 2, 3))(*a)
+        for p_, r_ in zip(gp, gr):
+            assert_allclose(np.asarray(p_), np.asarray(r_), rtol=2e-3, atol=2e-3)
+
+    def test_rank_property_prop1(self):
+        # rank(W) <= r1·r2 numerically (Proposition 1).
+        m = n = 32
+        for r in (2, 3):
+            a = factors(r, m, n, r)
+            w = np.asarray(hk.compose_fedpara(*a), np.float64)
+            s = np.linalg.svd(w, compute_uv=False)
+            numeric_rank = int((s > s[0] * 1e-5).sum())
+            assert numeric_rank <= r * r
+
+    def test_full_rank_achievable(self):
+        # Corollary 1: r² >= min(m,n) -> full rank w.h.p. (the key claim).
+        m = n = 36
+        a = factors(123, m, n, 6)
+        w = np.asarray(hk.compose_fedpara(*a), np.float64)
+        s = np.linalg.svd(w, compute_uv=False)
+        assert int((s > s[0] * 1e-5).sum()) == 36
+
+
+class TestFusedMatmul:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.sampled_from([1, 3, 8, 16]),
+        m=DIMS,
+        n=DIMS,
+        r=RANKS,
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_ref(self, b, m, n, r, seed):
+        x1, y1, x2, y2 = factors(seed, m, n, r)
+        x = jnp.asarray(np.random.RandomState(seed + 1).randn(b, n), jnp.float32)
+        assert_allclose(
+            np.asarray(hk.fedpara_matmul(x, x1, y1, x2, y2)),
+            np.asarray(ref.fedpara_matmul(x, x1, y1, x2, y2)),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+    def test_gradients(self):
+        x1, y1, x2, y2 = factors(9, 24, 20, 4)
+        x = jnp.asarray(np.random.RandomState(5).randn(6, 20), jnp.float32)
+        args = (x, x1, y1, x2, y2)
+        gp = jax.grad(lambda *a: jnp.sum(jnp.tanh(hk.fedpara_matmul(*a))), argnums=tuple(range(5)))(*args)
+        gr = jax.grad(lambda *a: jnp.sum(jnp.tanh(ref.fedpara_matmul(*a))), argnums=tuple(range(5)))(*args)
+        for p_, r_ in zip(gp, gr):
+            assert_allclose(np.asarray(p_), np.asarray(r_), rtol=2e-3, atol=2e-3)
+
+
+class TestConvProp3:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        o=st.sampled_from([8, 16, 24, 32]),
+        i=st.sampled_from([8, 16, 20]),
+        k=st.sampled_from([1, 3, 5]),
+        r=st.sampled_from([1, 2, 4]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_matches_ref(self, o, i, k, r, seed):
+        rng = np.random.RandomState(seed)
+        t1 = jnp.asarray(rng.randn(r, r, k, k), jnp.float32)
+        t2 = jnp.asarray(rng.randn(r, r, k, k), jnp.float32)
+        x1 = jnp.asarray(rng.randn(o, r), jnp.float32)
+        x2 = jnp.asarray(rng.randn(o, r), jnp.float32)
+        y1 = jnp.asarray(rng.randn(i, r), jnp.float32)
+        y2 = jnp.asarray(rng.randn(i, r), jnp.float32)
+        assert_allclose(
+            np.asarray(hk.compose_conv_prop3(t1, x1, y1, t2, x2, y2)),
+            np.asarray(ref.compose_conv_prop3(t1, x1, y1, t2, x2, y2)),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+    def test_gradients(self):
+        rng = np.random.RandomState(1)
+        r, k, o, i = 3, 3, 16, 8
+        args = tuple(
+            jnp.asarray(a, jnp.float32)
+            for a in (
+                rng.randn(r, r, k, k),
+                rng.randn(o, r),
+                rng.randn(i, r),
+                rng.randn(r, r, k, k),
+                rng.randn(o, r),
+                rng.randn(i, r),
+            )
+        )
+        gp = jax.grad(lambda *a: jnp.sum(jnp.sin(hk.compose_conv_prop3(*a))), argnums=tuple(range(6)))(*args)
+        gr = jax.grad(lambda *a: jnp.sum(jnp.sin(ref.compose_conv_prop3(*a))), argnums=tuple(range(6)))(*args)
+        for p_, r_ in zip(gp, gr):
+            assert_allclose(np.asarray(p_), np.asarray(r_), rtol=5e-3, atol=5e-3)
+
+    def test_unfolding_rank_bound(self):
+        # Proposition 3: rank of the 1st unfolding <= R².
+        rng = np.random.RandomState(2)
+        r, k, o, i = 2, 3, 12, 10
+        w = np.asarray(
+            ref.compose_conv_prop3(
+                jnp.asarray(rng.randn(r, r, k, k), jnp.float32),
+                jnp.asarray(rng.randn(o, r), jnp.float32),
+                jnp.asarray(rng.randn(i, r), jnp.float32),
+                jnp.asarray(rng.randn(r, r, k, k), jnp.float32),
+                jnp.asarray(rng.randn(o, r), jnp.float32),
+                jnp.asarray(rng.randn(i, r), jnp.float32),
+            ),
+            np.float64,
+        )
+        unfold1 = w.reshape(o, -1)
+        s = np.linalg.svd(unfold1, compute_uv=False)
+        assert int((s > s[0] * 1e-5).sum()) <= r * r
+
+
+class TestTanhVariant:
+    def test_matches_ref(self):
+        a = factors(4, 20, 16, 3)
+        assert_allclose(
+            np.asarray(hk.compose_fedpara_tanh(*a)),
+            np.asarray(ref.compose_fedpara_tanh(*a)),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_bounded(self):
+        # tanh ⊙ tanh composition is bounded in [-1, 1].
+        a = factors(5, 16, 16, 4)
+        w = np.asarray(hk.compose_fedpara_tanh(*[10.0 * f for f in a]))
+        assert np.all(np.abs(w) <= 1.0 + 1e-6)
+
+
+@pytest.mark.parametrize("dim,target,expect_divides", [(784, 128, True), (64, 128, True), (97, 64, True)])
+def test_block_divides(dim, target, expect_divides):
+    b = hk._block(dim, target)
+    assert 1 <= b <= min(dim, target)
+    assert (dim % b == 0) == expect_divides

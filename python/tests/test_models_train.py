@@ -1,0 +1,182 @@
+"""L2 model + train-step behaviour: shapes, learnability, optimizer
+variants' algebra, and the artifact table's integrity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, models, train
+
+
+def synthetic_vision(seed, n, b, d, classes, signal_dims=8):
+    """Learnable toy task: class = argmax over the first `signal_dims`."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n, b, d).astype(np.float32)
+    y = np.abs(x[:, :, :min(signal_dims, classes)]).argmax(-1).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+class TestForwardShapes:
+    @pytest.mark.parametrize(
+        "build_kw",
+        [
+            dict(model="mlp", classes=10),
+            dict(model="mlp", classes=62, scheme="pfedpara", gamma=0.5),
+            dict(model="vggmini", classes=10, scheme="fedpara", gamma=0.1),
+            dict(model="vggmini", classes=10, scheme="lowrank", gamma=0.1),
+            dict(model="resmini", classes=10, scheme="fedpara", gamma=0.1),
+        ],
+    )
+    def test_logit_shapes(self, build_kw):
+        m = models.build(**build_kw)
+        p = m.layout.init_flat(jax.random.PRNGKey(0))
+        x = jnp.zeros((4, m.feature_dim))
+        logits = m.forward(p, x)
+        assert logits.shape == (4, m.classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_lstm_shapes(self):
+        m = models.build(model="lstm", scheme="fedpara", gamma=0.0)
+        p = m.layout.init_flat(jax.random.PRNGKey(0))
+        x = jnp.zeros((3, 49))
+        loss = m.loss(p, x, jnp.zeros((3,)))
+        assert np.isfinite(float(loss))
+        c, l = m.eval_batch(p, x, jnp.zeros((3,)))
+        assert 0 <= float(c) <= 3 * 48
+
+
+class TestLearnability:
+    @pytest.mark.parametrize("scheme", ["original", "lowrank", "fedpara", "pfedpara"])
+    def test_mlp_loss_decreases(self, scheme):
+        m = models.build(model="mlp", classes=10, scheme=scheme, gamma=0.3)
+        p = m.layout.init_flat(jax.random.PRNGKey(1))
+        x, y = synthetic_vision(0, 4, 16, 784, 10)
+        te = jax.jit(train.make_train_epoch(m))
+        zero = jnp.zeros_like(p)
+        first = None
+        for _ in range(6):
+            p, loss = te(p, x, y, jnp.float32(0.1), zero, zero, jnp.float32(0.0))
+            first = first if first is not None else float(loss)
+        assert float(loss) < first * 0.7, (scheme, first, float(loss))
+
+    def test_eval_improves_with_training(self):
+        m = models.build(model="mlp", classes=10, scheme="fedpara", gamma=0.3)
+        p0 = m.layout.init_flat(jax.random.PRNGKey(2))
+        x, y = synthetic_vision(1, 4, 16, 784, 10)
+        ev = jax.jit(train.make_eval(m))
+        te = jax.jit(train.make_train_epoch(m))
+        zero = jnp.zeros_like(p0)
+        c0, _ = ev(p0, x, y)
+        p = p0
+        for _ in range(12):
+            p, _ = te(p, x, y, jnp.float32(0.1), zero, zero, jnp.float32(0.0))
+        c1, _ = ev(p, x, y)
+        assert float(c1) > float(c0)
+
+
+class TestOptimizerAlgebra:
+    """The single train_epoch signature must implement each FL optimizer's
+    local update exactly (DESIGN/train.py table)."""
+
+    def setup_method(self):
+        self.m = models.build(model="mlp", classes=10, scheme="fedpara", gamma=0.3)
+        self.p = self.m.layout.init_flat(jax.random.PRNGKey(3))
+        self.x, self.y = synthetic_vision(2, 1, 8, 784, 10)
+        self.te = jax.jit(train.make_train_epoch(self.m))
+        self.zero = jnp.zeros_like(self.p)
+
+    def test_one_step_is_plain_sgd(self):
+        lr = jnp.float32(0.05)
+        p1, _ = self.te(self.p, self.x, self.y, lr, self.zero, self.zero, jnp.float32(0.0))
+        g = jax.grad(self.m.loss)(self.p, self.x[0], self.y[0])
+        expected = self.p - lr * g
+        np.testing.assert_allclose(np.asarray(p1), np.asarray(expected), rtol=1e-5, atol=1e-6)
+
+    def test_correction_shifts_update(self):
+        # SCAFFOLD semantics: constant correction adds -lr*c to the step.
+        lr = jnp.float32(0.05)
+        c = 0.01 * jnp.ones_like(self.p)
+        p_plain, _ = self.te(self.p, self.x, self.y, lr, self.zero, self.zero, jnp.float32(0.0))
+        p_corr, _ = self.te(self.p, self.x, self.y, lr, c, self.zero, jnp.float32(0.0))
+        np.testing.assert_allclose(
+            np.asarray(p_plain - p_corr), np.asarray(lr * c), rtol=1e-4, atol=1e-7
+        )
+
+    def test_prox_pulls_toward_anchor(self):
+        # FedProx: with huge mu the step is dominated by -lr*mu*(p-anchor).
+        lr = jnp.float32(0.01)
+        anchor = self.p + 1.0
+        p_prox, _ = self.te(self.p, self.x, self.y, lr, self.zero, anchor, jnp.float32(100.0))
+        # Moves toward the anchor (positive direction).
+        assert float(jnp.mean(p_prox - self.p)) > 0.5 * float(lr) * 100.0 * 0.5
+
+    def test_prox_zero_mu_is_noop(self):
+        lr = jnp.float32(0.05)
+        anchor = self.p + 123.0  # Irrelevant when mu = 0.
+        a, _ = self.te(self.p, self.x, self.y, lr, self.zero, anchor, jnp.float32(0.0))
+        b, _ = self.te(self.p, self.x, self.y, lr, self.zero, self.zero, jnp.float32(0.0))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+class TestJacobianReg:
+    def test_runs_and_decreases(self):
+        m = models.build(model="mlp", classes=10, scheme="fedpara", gamma=0.3)
+        p = m.layout.init_flat(jax.random.PRNGKey(4))
+        x, y = synthetic_vision(3, 2, 8, 784, 10)
+        te = jax.jit(train.make_train_epoch_jacreg(m, lam=1.0))
+        zero = jnp.zeros_like(p)
+        losses = []
+        for _ in range(5):
+            p, loss = te(p, x, y, jnp.float32(0.05), zero, zero, jnp.float32(0.0))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+        assert all(np.isfinite(l) for l in losses)
+
+    def test_penalty_is_nonnegative(self):
+        m = models.build(model="mlp", classes=10, scheme="fedpara", gamma=0.3)
+        p = m.layout.init_flat(jax.random.PRNGKey(5))
+        x, y = synthetic_vision(4, 1, 4, 784, 10)
+        pen = train._jacobian_penalty(m, p, x[0], y[0], jnp.float32(0.1))
+        assert float(pen) >= 0.0
+
+
+class TestArtifactTable:
+    def test_names_unique(self):
+        names = [s["name"] for s in aot.artifact_specs()]
+        assert len(names) == len(set(names))
+
+    def test_all_buildable(self):
+        # Every artifact's model must construct (cheap — no lowering).
+        for s in aot.artifact_specs():
+            m = models.build(**s["build"])
+            assert m.layout.total > 0
+
+    def test_fedpara_smaller_than_original(self):
+        specs = {s["name"]: s for s in aot.artifact_specs()}
+        orig = models.build(**specs["vgg10_orig"]["build"]).layout.total
+        fp = models.build(**specs["vgg10_fedpara_g01"]["build"]).layout.total
+        assert fp < 0.45 * orig, (fp, orig)
+        # Low-rank baseline budget-matched to FedPara at the same gamma:
+        low = models.build(**specs["vgg10_low_g01"]["build"]).layout.total
+        assert abs(low - fp) < 0.12 * orig, (low, fp)
+
+    def test_gamma_monotone_in_params(self):
+        specs = {s["name"]: s for s in aot.artifact_specs()}
+        sizes = [
+            models.build(**specs[f"vgg10_fedpara_g{g:02d}"]["build"]).layout.total
+            for g in (1, 3, 5, 7, 9)
+        ]
+        assert sizes == sorted(sizes)
+
+    def test_pfedpara_global_is_half_of_factors(self):
+        specs = {s["name"]: s for s in aot.artifact_specs()}
+        m = models.build(**specs["mlp62_pfedpara"]["build"])
+        g = m.layout.global_len()
+        assert g < m.layout.total
+        # For the MLP every weight is factorized, so global ≈ (total +
+        # vec-params) / 2.
+        vecs = sum(
+            ws.num_params() for ws in m.layout.weight_specs if ws.kind == "vec"
+        )
+        assert abs(g - (m.layout.total - vecs) / 2 - vecs) <= 2

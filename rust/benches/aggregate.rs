@@ -1,0 +1,90 @@
+//! Bench: server-side aggregation over realistic client/model sizes — the
+//! L3 hot loop outside PJRT. Covers weighted mean, the optimizer states,
+//! the pFedPara gather/scatter codec, and fp16 quantization.
+
+use fedpara::coordinator::aggregate::{weighted_mean, AdamState, FedDynState, ScaffoldState};
+use fedpara::parameterization::{Layout, Segment, SegmentKind};
+use fedpara::util::f16;
+use fedpara::util::rng::Rng;
+use fedpara::util::stats::Welford;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    for _ in 0..3 {
+        f();
+    }
+    let mut w = Welford::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        w.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "{name:<44} {:>9.3} ms ± {:>7.3} (n={iters})",
+        w.mean(),
+        w.std_dev()
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    // 16 clients × 1M params ≈ the paper's VGG16-FedPara at γ≈0.5.
+    for &(clients, dim) in &[(16usize, 100_000usize), (16, 1_000_000), (64, 100_000)] {
+        let uploads: Vec<Vec<f32>> = (0..clients)
+            .map(|_| (0..dim).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        let weights: Vec<f64> = (0..clients).map(|_| 1.0 + rng.f64()).collect();
+        bench(&format!("weighted_mean {clients}cl × {dim}"), 10, || {
+            std::hint::black_box(weighted_mean(&uploads, &weights));
+        });
+    }
+
+    let dim = 1_000_000;
+    let theta: Vec<f32> = (0..dim).map(|_| rng.gaussian() as f32).collect();
+    let avg: Vec<f32> = theta.iter().map(|&x| x + 0.01).collect();
+    let mut adam = AdamState::new(dim);
+    bench("fedadam server step 1M", 10, || {
+        std::hint::black_box(adam.step(&theta, &avg));
+    });
+
+    let deltas: Vec<Vec<f32>> = (0..8).map(|_| avg.clone()).collect();
+    let dcs = deltas.clone();
+    let mut sc = ScaffoldState::new(dim, 100);
+    bench("scaffold server step 8cl × 1M", 5, || {
+        std::hint::black_box(sc.step(&theta, &deltas, &dcs));
+    });
+    let mut fd = FedDynState::new(dim, 0.1, 100);
+    bench("feddyn server step 8cl × 1M", 5, || {
+        std::hint::black_box(fd.step(&theta, &deltas));
+    });
+
+    // pFedPara codec: alternating global/local segments.
+    let seg = 1000usize;
+    let segments: Vec<Segment> = (0..dim / seg)
+        .map(|i| Segment {
+            name: format!("s{i}"),
+            offset: i * seg,
+            len: seg,
+            kind: if i % 2 == 0 { SegmentKind::Global } else { SegmentKind::Local },
+            init_std: 0.0,
+        })
+        .collect();
+    let layout = Layout::new(segments).unwrap();
+    let params = theta.clone();
+    bench("pfedpara gather_global 1M (half global)", 20, || {
+        std::hint::black_box(layout.gather_global(&params));
+    });
+    let global = layout.gather_global(&params);
+    let mut target = params.clone();
+    bench("pfedpara scatter_global 1M", 20, || {
+        layout.scatter_global(&mut target, &global);
+        std::hint::black_box(&target);
+    });
+
+    bench("fp16 quantize roundtrip 1M", 10, || {
+        std::hint::black_box(f16::quantize_roundtrip(&params));
+    });
+    bench("fp16 pack 1M", 10, || {
+        std::hint::black_box(f16::pack(&params));
+    });
+}

@@ -1,0 +1,59 @@
+//! Bench: rust-side FedPara weight composition + the rank machinery.
+//!
+//! No criterion offline — a small harness=false timing loop with warmup,
+//! reporting mean ± std over iterations (see util::stats::Welford).
+//! Run via `cargo bench` or `cargo bench --bench compose`.
+
+use fedpara::linalg::Mat;
+use fedpara::parameterization::compose::FcFactors;
+use fedpara::util::rng::Rng;
+use fedpara::util::stats::Welford;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    let mut w = Welford::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        w.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "{name:<44} {:>9.3} ms ± {:>7.3} (n={iters}, min {:.3})",
+        w.mean(),
+        w.std_dev(),
+        w.min()
+    );
+}
+
+fn main() {
+    println!("== compose: W = (X1·Y1ᵀ)⊙(X2·Y2ᵀ) (rust reference path) ==");
+    let mut rng = Rng::new(42);
+    for &(m, n, r) in &[(128usize, 128usize, 12usize), (256, 256, 16), (512, 512, 23)] {
+        let f = FcFactors::randn(m, n, r, r, &mut rng);
+        bench(&format!("compose {m}x{n} r={r}"), 20, || {
+            std::hint::black_box(f.compose());
+        });
+    }
+
+    println!("\n== numerical rank (complete-pivot elimination) ==");
+    for &(m, n, r) in &[(100usize, 100usize, 10usize), (200, 200, 14)] {
+        let f = FcFactors::randn(m, n, r, r, &mut rng);
+        let w = f.compose();
+        bench(&format!("rank {m}x{n}"), 10, || {
+            std::hint::black_box(w.rank());
+        });
+    }
+
+    println!("\n== matmul_t (A·Bᵀ) baseline ==");
+    for &(m, n, k) in &[(256usize, 256usize, 16usize), (512, 512, 32)] {
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(n, k, &mut rng);
+        bench(&format!("matmul_t {m}x{k} · ({n}x{k})ᵀ"), 20, || {
+            std::hint::black_box(a.matmul_t(&b));
+        });
+    }
+}

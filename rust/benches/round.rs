@@ -1,0 +1,121 @@
+//! Bench: end-to-end federated rounds through the real PJRT artifacts —
+//! the numbers behind Supp. Table 7's t_comp and the §Perf log. One row per
+//! paper model family (original vs FedPara), measuring a full round
+//! (download → E local epochs → upload → aggregate) and the eval call.
+//!
+//! Requires `make artifacts`; exits gracefully otherwise so `cargo bench`
+//! stays green on fresh checkouts.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use fedpara::config::{Optimizer, RunConfig, Sharing};
+use fedpara::coordinator::Federation;
+use fedpara::data::{partition, synth_text, synth_vision};
+use fedpara::runtime::Engine;
+use fedpara::util::rng::Rng;
+use fedpara::util::stats::Welford;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP round bench: artifacts/ not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let engine = Engine::new(&dir)?;
+
+    println!("== end-to-end round (4 clients, E=2) ==");
+    for artifact in [
+        "mlp10_orig",
+        "mlp62_pfedpara",
+        "vgg10_orig",
+        "vgg10_fedpara_g01",
+        "vgg10_fedpara_g09",
+        "res10_orig",
+        "res10_fedpara_g01",
+    ] {
+        let meta = engine.manifest.get(artifact).map_err(anyhow::Error::msg)?;
+        let is_femnist = meta.classes == 62;
+        let spec = if meta.train.feature_dim == 768 {
+            synth_vision::cifar10_like()
+        } else if is_femnist {
+            synth_vision::femnist_like()
+        } else {
+            synth_vision::mnist_like()
+        };
+        let data = synth_vision::generate(&spec, 4 * 96, 1);
+        let test = synth_vision::generate(&spec, 128, 2);
+        let mut rng = Rng::new(3);
+        let part = partition::iid(data.len(), 4, &mut rng);
+        let locals: Vec<_> = part.clients.iter().map(|i| data.subset(i)).collect();
+        let cfg = RunConfig {
+            artifact: artifact.into(),
+            sample_frac: 1.0,
+            rounds: 8,
+            local_epochs: 2,
+            lr: 0.05,
+            lr_decay: 1.0,
+            optimizer: Optimizer::FedAvg,
+            quantize_upload: false,
+            sharing: if meta.scheme == "pfedpara" {
+                Sharing::GlobalSegments
+            } else {
+                Sharing::Full
+            },
+            eval_every: 0,
+            seed: 4,
+        };
+        let mut fed = Federation::new(&engine, cfg, locals, test)?;
+        fed.run_round()?; // Warmup (includes PJRT compile).
+        let mut w = Welford::new();
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            fed.run_round()?;
+            w.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mut e = Welford::new();
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            let _ = fed.evaluate_global()?;
+            e.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        println!(
+            "{artifact:<22} {:>8} params  round {:>9.1} ms ± {:>6.1}   eval(512) {:>8.1} ms",
+            meta.param_count,
+            w.mean(),
+            w.std_dev(),
+            e.mean(),
+        );
+    }
+
+    println!("\n== LSTM round ==");
+    {
+        let spec = synth_text::shakespeare_like();
+        let (locals, test) = synth_text::generate_federation(&spec, 4, 48, 0.0, 128, 5);
+        for artifact in ["lstm_orig", "lstm_fedpara"] {
+            let cfg = RunConfig {
+                artifact: artifact.into(),
+                sample_frac: 1.0,
+                rounds: 8,
+                local_epochs: 1,
+                lr: 1.0,
+                lr_decay: 1.0,
+                optimizer: Optimizer::FedAvg,
+                quantize_upload: false,
+                sharing: Sharing::Full,
+                eval_every: 0,
+                seed: 6,
+            };
+            let mut fed = Federation::new(&engine, cfg, locals.clone(), test.clone())?;
+            fed.run_round()?;
+            let mut w = Welford::new();
+            for _ in 0..5 {
+                let t0 = Instant::now();
+                fed.run_round()?;
+                w.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            println!("{artifact:<22} round {:>9.1} ms ± {:>6.1}", w.mean(), w.std_dev());
+        }
+    }
+    Ok(())
+}

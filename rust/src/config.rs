@@ -1,0 +1,188 @@
+//! Run configuration: the knobs of one federated training run, mirroring
+//! the paper's hyper-parameter table (Supp. Table 6).
+
+/// Which FL optimizer drives the run (Table 3 compatibility set).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Optimizer {
+    /// FedAvg (McMahan et al. 2017) — the backbone for all main results.
+    FedAvg,
+    /// FedProx (Li et al. 2020) with proximal coefficient μ.
+    FedProx { mu: f32 },
+    /// SCAFFOLD (Karimireddy et al. 2020), Option II control variates.
+    Scaffold,
+    /// FedDyn (Acar et al. 2021) with regularization α.
+    FedDyn { alpha: f32 },
+    /// FedAdam (Reddi et al. 2021) — server-side Adam.
+    FedAdam,
+}
+
+impl Optimizer {
+    pub fn parse(s: &str) -> Result<Optimizer, String> {
+        Ok(match s {
+            "fedavg" => Optimizer::FedAvg,
+            "fedprox" => Optimizer::FedProx { mu: 0.1 },
+            "scaffold" => Optimizer::Scaffold,
+            "feddyn" => Optimizer::FedDyn { alpha: 0.1 },
+            "fedadam" => Optimizer::FedAdam,
+            other => return Err(format!("unknown optimizer '{other}'")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Optimizer::FedAvg => "FedAvg",
+            Optimizer::FedProx { .. } => "FedProx",
+            Optimizer::Scaffold => "SCAFFOLD",
+            Optimizer::FedDyn { .. } => "FedDyn",
+            Optimizer::FedAdam => "FedAdam",
+        }
+    }
+}
+
+/// What part of the model is shared with the server.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Sharing {
+    /// Everything is transferred (FedAvg/FedPara default).
+    Full,
+    /// Only the layout's `global` segments travel (pFedPara, §2.3).
+    GlobalSegments,
+    /// FedPer (Arivazhagan et al. 2019): segments whose name starts with
+    /// one of these prefixes stay local; the rest is transferred.
+    FedPer { local_prefixes: Vec<String> },
+    /// No communication after init — the Figure-5 "FedPAQ/local-only"
+    /// baseline (each client trains alone).
+    LocalOnly,
+}
+
+/// One federated run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Manifest artifact name (model × scheme × γ).
+    pub artifact: String,
+    /// Fraction of clients sampled each round (paper: 0.16).
+    pub sample_frac: f64,
+    /// Total rounds T.
+    pub rounds: usize,
+    /// Local epochs E per selected client per round.
+    pub local_epochs: usize,
+    /// Initial learning rate η.
+    pub lr: f32,
+    /// Multiplicative per-round lr decay τ (paper: 0.992).
+    pub lr_decay: f64,
+    pub optimizer: Optimizer,
+    /// FedPAQ-style fp16 uplink quantization (Supp. D.3).
+    pub quantize_upload: bool,
+    pub sharing: Sharing,
+    /// Evaluate the global model every `eval_every` rounds (0 = only final).
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            artifact: String::new(),
+            sample_frac: 0.25,
+            rounds: 20,
+            local_epochs: 2,
+            lr: 0.1,
+            lr_decay: 0.992,
+            optimizer: Optimizer::FedAvg,
+            quantize_upload: false,
+            sharing: Sharing::Full,
+            eval_every: 1,
+            seed: 42,
+        }
+    }
+}
+
+/// Experiment scale presets: `tiny` for CI smoke, `small` for the recorded
+/// EXPERIMENTS.md numbers, `paper` mirrors the paper's counts (Supp. C.4;
+/// not practical on a single CPU core but wired for completeness).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Tiny,
+    Small,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Result<Scale, String> {
+        match s {
+            "tiny" => Ok(Scale::Tiny),
+            "small" => Ok(Scale::Small),
+            "paper" => Ok(Scale::Paper),
+            other => Err(format!("unknown scale '{other}' (tiny|small|paper)")),
+        }
+    }
+
+    /// (num_clients, samples_per_client, test_samples) for vision runs.
+    pub fn vision_population(&self) -> (usize, usize, usize) {
+        match self {
+            Scale::Tiny => (8, 96, 512),
+            Scale::Small => (24, 160, 512),
+            Scale::Paper => (100, 500, 10_000),
+        }
+    }
+
+    /// Default rounds for a "T = 200"-class experiment.
+    pub fn rounds(&self, paper_rounds: usize) -> usize {
+        match self {
+            Scale::Tiny => 8,
+            Scale::Small => 30,
+            Scale::Paper => paper_rounds,
+        }
+    }
+
+    /// Sample fraction (paper: 16%).
+    pub fn sample_frac(&self) -> f64 {
+        match self {
+            Scale::Tiny => 0.5,
+            Scale::Small => 0.25,
+            Scale::Paper => 0.16,
+        }
+    }
+
+    /// Local epochs E (paper: 10 IID / 5 non-IID for vision).
+    pub fn local_epochs(&self) -> usize {
+        match self {
+            Scale::Tiny => 2,
+            Scale::Small => 2,
+            Scale::Paper => 10,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimizer_parsing() {
+        assert_eq!(Optimizer::parse("fedavg").unwrap(), Optimizer::FedAvg);
+        assert_eq!(Optimizer::parse("scaffold").unwrap(), Optimizer::Scaffold);
+        assert!(matches!(
+            Optimizer::parse("fedprox").unwrap(),
+            Optimizer::FedProx { .. }
+        ));
+        assert!(Optimizer::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn scale_parsing_and_presets() {
+        assert_eq!(Scale::parse("tiny").unwrap(), Scale::Tiny);
+        assert!(Scale::parse("huge").is_err());
+        let (k, per, test) = Scale::Small.vision_population();
+        assert!(k > 0 && per > 0 && test > 0);
+        assert!(Scale::Paper.rounds(200) == 200);
+        assert!(Scale::Tiny.rounds(200) < 20);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = RunConfig::default();
+        assert!(c.sample_frac > 0.0 && c.sample_frac <= 1.0);
+        assert!(c.lr > 0.0);
+        assert_eq!(c.sharing, Sharing::Full);
+    }
+}

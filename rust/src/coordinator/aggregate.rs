@@ -1,0 +1,280 @@
+//! Server-side aggregation primitives.
+//!
+//! * [`weighted_mean`] — FedAvg's sample-count-weighted model average.
+//! * [`AdamState`] — FedAdam (Reddi et al. 2021): server-side Adam over the
+//!   average client delta.
+//! * [`ScaffoldState`] — SCAFFOLD (Karimireddy et al. 2020) server control
+//!   variate and global-lr update.
+//! * [`FedDynState`] — FedDyn (Acar et al. 2021) server `h` state.
+//!
+//! All operate on flat f32 vectors (the transfer representation), so they
+//! compose with the pFedPara global/local split transparently.
+
+/// Sample-count-weighted mean of client vectors. All vectors must share a
+/// length; weights must be positive.
+pub fn weighted_mean(vectors: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
+    assert_eq!(vectors.len(), weights.len());
+    assert!(!vectors.is_empty(), "no vectors to aggregate");
+    let n = vectors[0].len();
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "weights sum to zero");
+    let mut out = vec![0f64; n];
+    for (v, &w) in vectors.iter().zip(weights) {
+        assert_eq!(v.len(), n, "inconsistent vector lengths");
+        let w = w / total;
+        for (o, &x) in out.iter_mut().zip(v.iter()) {
+            *o += w * x as f64;
+        }
+    }
+    out.into_iter().map(|x| x as f32).collect()
+}
+
+/// In-place `a += s · b`.
+pub fn axpy(a: &mut [f32], s: f32, b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += s * y;
+    }
+}
+
+/// `a - b` elementwise.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x - y).collect()
+}
+
+/// FedAdam server state (Adam over the aggregated pseudo-gradient).
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eta: f64,
+    pub eps: f64,
+    pub t: u64,
+}
+
+impl AdamState {
+    /// Paper's hyper-parameters (Supp. C.5): β1=0.9, β2=0.99, η_g=0.01.
+    pub fn new(dim: usize) -> AdamState {
+        AdamState {
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            beta1: 0.9,
+            beta2: 0.99,
+            eta: 0.01,
+            eps: 1e-8,
+            t: 0,
+        }
+    }
+
+    /// Apply one server step given the mean client model `avg` and the
+    /// current server model `theta`; returns the new server model.
+    /// The pseudo-gradient is `Δ = avg − θ`.
+    pub fn step(&mut self, theta: &[f32], avg: &[f32]) -> Vec<f32> {
+        assert_eq!(theta.len(), avg.len());
+        assert_eq!(theta.len(), self.m.len());
+        self.t += 1;
+        let b1 = self.beta1;
+        let b2 = self.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let mut out = Vec::with_capacity(theta.len());
+        for i in 0..theta.len() {
+            let delta = (avg[i] - theta[i]) as f64;
+            self.m[i] = (b1 * self.m[i] as f64 + (1.0 - b1) * delta) as f32;
+            self.v[i] = (b2 * self.v[i] as f64 + (1.0 - b2) * delta * delta) as f32;
+            let m_hat = self.m[i] as f64 / bc1;
+            let v_hat = self.v[i] as f64 / bc2;
+            out.push((theta[i] as f64 + self.eta * m_hat / (v_hat.sqrt() + self.eps)) as f32);
+        }
+        out
+    }
+}
+
+/// SCAFFOLD server state: global control variate `c` and global lr.
+#[derive(Clone, Debug)]
+pub struct ScaffoldState {
+    pub c: Vec<f32>,
+    /// Global model step size on the averaged delta (Option II, η_g = 1).
+    pub eta_g: f64,
+    /// Total number of clients K (the c update scales by |S|/K).
+    pub num_clients: usize,
+}
+
+impl ScaffoldState {
+    pub fn new(dim: usize, num_clients: usize) -> ScaffoldState {
+        ScaffoldState { c: vec![0.0; dim], eta_g: 1.0, num_clients }
+    }
+
+    /// Server update given the sampled clients' model deltas and control
+    /// deltas: `θ += η_g·mean(Δθ)`, `c += (|S|/K)·mean(Δc)`.
+    pub fn step(
+        &mut self,
+        theta: &[f32],
+        delta_models: &[Vec<f32>],
+        delta_controls: &[Vec<f32>],
+    ) -> Vec<f32> {
+        let s = delta_models.len();
+        assert!(s > 0 && s == delta_controls.len());
+        let w = vec![1.0; s];
+        let mean_dm = weighted_mean(delta_models, &w);
+        let mean_dc = weighted_mean(delta_controls, &w);
+        let mut out = theta.to_vec();
+        axpy(&mut out, self.eta_g as f32, &mean_dm);
+        let scale = s as f32 / self.num_clients as f32;
+        axpy(&mut self.c, scale, &mean_dc);
+        out
+    }
+}
+
+/// FedDyn server state `h` (Acar et al. 2021, Eq. 7-8).
+#[derive(Clone, Debug)]
+pub struct FedDynState {
+    pub h: Vec<f32>,
+    pub alpha: f64,
+    pub num_clients: usize,
+}
+
+impl FedDynState {
+    pub fn new(dim: usize, alpha: f64, num_clients: usize) -> FedDynState {
+        FedDynState { h: vec![0.0; dim], alpha, num_clients }
+    }
+
+    /// `h ← h − α·(1/K)·Σ_{i∈S}(θ_i − θ)`; `θ⁺ = mean(θ_i) − h/α`.
+    pub fn step(&mut self, theta: &[f32], client_models: &[Vec<f32>]) -> Vec<f32> {
+        let s = client_models.len();
+        assert!(s > 0);
+        let w = vec![1.0; s];
+        let avg = weighted_mean(client_models, &w);
+        let scale = (self.alpha * s as f64 / self.num_clients as f64) as f32;
+        for i in 0..self.h.len() {
+            self.h[i] -= scale * (avg[i] - theta[i]);
+        }
+        let mut out = avg;
+        let inv_alpha = (1.0 / self.alpha) as f32;
+        for i in 0..out.len() {
+            out[i] -= inv_alpha * self.h[i];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weighted_mean_basic() {
+        let a = vec![vec![1.0f32, 0.0], vec![3.0, 4.0]];
+        let m = weighted_mean(&a, &[1.0, 3.0]);
+        assert_eq!(m, vec![2.5, 3.0]);
+    }
+
+    #[test]
+    fn weighted_mean_identity_on_equal_inputs() {
+        let a = vec![vec![0.5f32; 8]; 5];
+        let m = weighted_mean(&a, &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(m.iter().all(|&x| (x - 0.5).abs() < 1e-7));
+    }
+
+    #[test]
+    fn prop_weighted_mean_bounds_and_permutation_invariance() {
+        pt::check(
+            77,
+            |rng: &mut Rng| {
+                let k = 2 + rng.below(5);
+                let n = 1 + rng.below(16);
+                let vs: Vec<Vec<f32>> = (0..k)
+                    .map(|_| (0..n).map(|_| rng.gaussian() as f32).collect())
+                    .collect();
+                let ws: Vec<f64> = (0..k).map(|_| 0.1 + rng.f64() * 5.0).collect();
+                (vs, ws)
+            },
+            pt::no_shrink,
+            |(vs, ws)| {
+                let m = weighted_mean(vs, ws);
+                // Convexity: each coordinate within [min, max] of inputs.
+                for i in 0..m.len() {
+                    let lo = vs.iter().map(|v| v[i]).fold(f32::INFINITY, f32::min);
+                    let hi = vs.iter().map(|v| v[i]).fold(f32::NEG_INFINITY, f32::max);
+                    if m[i] < lo - 1e-4 || m[i] > hi + 1e-4 {
+                        return Err(format!("coord {i}: {} outside [{lo},{hi}]", m[i]));
+                    }
+                }
+                // Permutation invariance.
+                let mut vs2 = vs.clone();
+                let mut ws2 = ws.clone();
+                vs2.rotate_left(1);
+                ws2.rotate_left(1);
+                let m2 = weighted_mean(&vs2, &ws2);
+                for (a, b) in m.iter().zip(m2.iter()) {
+                    if (a - b).abs() > 1e-5 {
+                        return Err("not permutation invariant".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn adam_moves_toward_average() {
+        let mut adam = AdamState::new(4);
+        let theta = vec![0.0f32; 4];
+        let avg = vec![1.0f32, -1.0, 2.0, 0.5];
+        let out = adam.step(&theta, &avg);
+        // First step moves by ~eta in the sign of delta.
+        for (o, &a) in out.iter().zip(avg.iter()) {
+            assert!(o.signum() == a.signum());
+            assert!(o.abs() <= adam.eta as f32 * 1.5);
+        }
+    }
+
+    #[test]
+    fn adam_no_delta_no_move() {
+        let mut adam = AdamState::new(3);
+        let theta = vec![1.0f32, 2.0, 3.0];
+        let out = adam.step(&theta.clone(), &theta);
+        for (o, t) in out.iter().zip(theta.iter()) {
+            assert!((o - t).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn scaffold_plain_average_when_eta1() {
+        let mut st = ScaffoldState::new(3, 10);
+        let theta = vec![1.0f32, 1.0, 1.0];
+        let dm = vec![vec![0.5f32, 0.0, -0.5], vec![1.5, 0.0, -1.5]];
+        let dc = vec![vec![0.1f32; 3], vec![0.3; 3]];
+        let out = st.step(&theta, &dm, &dc);
+        assert_eq!(out, vec![2.0, 1.0, 0.0]);
+        // c updated by (2/10)·mean = 0.2·0.2 = 0.04.
+        assert!((st.c[0] - 0.04).abs() < 1e-6);
+    }
+
+    #[test]
+    fn feddyn_reduces_to_average_plus_drift_term() {
+        let mut st = FedDynState::new(2, 0.1, 4);
+        let theta = vec![0.0f32, 0.0];
+        let clients = vec![vec![1.0f32, 2.0], vec![3.0, 2.0]];
+        let out = st.step(&theta, &clients);
+        // avg = [2, 2]; h = -alpha*(2/4)*avg = -0.05*[2,2] = [-0.1,-0.1];
+        // out = avg - h/alpha = [2,2] + [1,1] = [3,3].
+        assert!((out[0] - 3.0).abs() < 1e-5, "{out:?}");
+        assert!((out[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sub_and_axpy() {
+        let a = vec![3.0f32, 4.0];
+        let b = vec![1.0f32, 1.5];
+        assert_eq!(sub(&a, &b), vec![2.0, 2.5]);
+        let mut c = a.clone();
+        axpy(&mut c, 2.0, &b);
+        assert_eq!(c, vec![5.0, 7.0]);
+    }
+}

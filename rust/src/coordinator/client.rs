@@ -1,0 +1,35 @@
+//! Per-client state held by the (simulated) federation.
+
+use crate::data::Dataset;
+
+/// One client: its private data and whatever state persists across rounds.
+#[derive(Clone, Debug)]
+pub struct ClientState {
+    /// Private local dataset (never leaves the client).
+    pub data: Dataset,
+    /// Full-length parameter vector. Global segments are overwritten on
+    /// download; local segments (pFedPara/FedPer) persist here.
+    pub params: Vec<f32>,
+    /// SCAFFOLD client control variate c_i.
+    pub control: Option<Vec<f32>>,
+    /// FedDyn client gradient state λ_i.
+    pub lambda: Option<Vec<f32>>,
+    /// Rounds this client has participated in (diagnostics).
+    pub participations: usize,
+}
+
+impl ClientState {
+    pub fn new(data: Dataset, init_params: Vec<f32>) -> ClientState {
+        ClientState {
+            data,
+            params: init_params,
+            control: None,
+            lambda: None,
+            participations: 0,
+        }
+    }
+
+    pub fn num_samples(&self) -> usize {
+        self.data.len()
+    }
+}

@@ -1,0 +1,166 @@
+//! Communication accounting: bytes, energy, simulated wall-clock.
+//!
+//! The paper's cost metric is total transferred bits,
+//! `2 × (#participants) × (model size) × (#rounds)` (§3.2), i.e. both
+//! up- and down-link are counted. Energy follows the user-to-data-center
+//! topology model of Yan et al. (2019) — a per-byte constant — and the
+//! wall-clock simulation (Supp. D.1) uses
+//! `t = t_comp + 2 · model_bytes / network_speed` with homogeneous link
+//! quality across clients.
+
+/// Joules per transferred byte (Yan et al. 2019-style access+core network
+/// energy intensity, ≈0.31 µJ/bit). Only scales the energy axis; the
+/// paper's comparisons are ratios.
+pub const ENERGY_J_PER_BYTE: f64 = 2.5e-6;
+
+/// Running ledger of transferred bytes.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    /// Per-round history of (up, down) for curves like Figure 3.
+    pub per_round: Vec<(u64, u64)>,
+    round_up: u64,
+    round_down: u64,
+}
+
+impl CommLedger {
+    pub fn new() -> CommLedger {
+        CommLedger::default()
+    }
+
+    pub fn record_upload(&mut self, bytes: u64) {
+        self.up_bytes += bytes;
+        self.round_up += bytes;
+    }
+
+    pub fn record_download(&mut self, bytes: u64) {
+        self.down_bytes += bytes;
+        self.round_down += bytes;
+    }
+
+    /// Close out the current round's accounting.
+    pub fn end_round(&mut self) {
+        self.per_round.push((self.round_up, self.round_down));
+        self.round_up = 0;
+        self.round_down = 0;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.up_bytes + self.down_bytes
+    }
+
+    pub fn total_gbytes(&self) -> f64 {
+        self.total_bytes() as f64 / 1e9
+    }
+
+    /// Energy consumed by all transfers (Joules).
+    pub fn total_energy_j(&self) -> f64 {
+        self.total_bytes() as f64 * ENERGY_J_PER_BYTE
+    }
+
+    pub fn total_energy_mj(&self) -> f64 {
+        self.total_energy_j() / 1e6
+    }
+}
+
+/// Simulated network for the Supp. D.1 wall-clock tables.
+#[derive(Clone, Copy, Debug)]
+pub struct Network {
+    /// Link speed in megabits per second (the paper uses 2/10/50 Mbps).
+    pub mbps: f64,
+}
+
+impl Network {
+    pub fn new(mbps: f64) -> Network {
+        assert!(mbps > 0.0);
+        Network { mbps }
+    }
+
+    /// Seconds to transfer `bytes` one way.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        (bytes as f64 * 8.0) / (self.mbps * 1e6)
+    }
+
+    /// Per-round communication time for one client: download + upload of
+    /// `model_bytes` (the paper's `2·size/speed`).
+    pub fn round_comm_secs(&self, model_bytes: u64) -> f64 {
+        self.transfer_secs(2 * model_bytes)
+    }
+}
+
+/// Quantize an upload through fp16 (FedPAQ-style, Supp. D.3): returns the
+/// dequantized values the server will see and the bytes on the wire.
+pub fn quantize_fp16(values: &[f32]) -> (Vec<f32>, u64) {
+    let deq = crate::util::f16::quantize_roundtrip(values);
+    (deq, (values.len() * 2) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates_and_rounds() {
+        let mut l = CommLedger::new();
+        l.record_download(100);
+        l.record_upload(50);
+        l.end_round();
+        l.record_download(100);
+        l.end_round();
+        assert_eq!(l.total_bytes(), 250);
+        assert_eq!(l.per_round, vec![(50, 100), (0, 100)]);
+    }
+
+    #[test]
+    fn paper_cost_formula() {
+        // 2 × participants × model_size × rounds.
+        let mut l = CommLedger::new();
+        let participants = 16u64;
+        let model_bytes = 1000u64;
+        let rounds = 5;
+        for _ in 0..rounds {
+            for _ in 0..participants {
+                l.record_download(model_bytes);
+                l.record_upload(model_bytes);
+            }
+            l.end_round();
+        }
+        assert_eq!(l.total_bytes(), 2 * participants * model_bytes * rounds);
+    }
+
+    #[test]
+    fn network_times_match_supp_table7() {
+        // VGG16 (15.25M params ≈ 58.2 MB at f32): paper reports
+        // t_comm = 470.2 s at 2 Mbps for up+down.
+        let vgg16_bytes = 15_250_000u64 * 4;
+        let net = Network::new(2.0);
+        let t = net.round_comm_secs(vgg16_bytes);
+        assert!(
+            (t - 470.2).abs() < 30.0,
+            "2 Mbps round time {t:.1}s should be ≈470s like the paper"
+        );
+        // 50 Mbps → ≈18.6 s.
+        let t50 = Network::new(50.0).round_comm_secs(vgg16_bytes);
+        assert!((t50 - 18.61).abs() < 1.5, "50 Mbps time {t50:.2}");
+    }
+
+    #[test]
+    fn energy_scales_with_bytes() {
+        let mut l = CommLedger::new();
+        l.record_upload(1_000_000_000);
+        assert!((l.total_energy_j() - 2500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fp16_quantization_halves_bytes() {
+        let vals: Vec<f32> = (0..1000).map(|i| i as f32 * 0.01 - 5.0).collect();
+        let (deq, bytes) = quantize_fp16(&vals);
+        assert_eq!(bytes, 2000);
+        assert_eq!(deq.len(), vals.len());
+        // Quantization error bounded for in-range values.
+        for (a, b) in vals.iter().zip(deq.iter()) {
+            assert!((a - b).abs() <= a.abs() / 1024.0 + 1e-4);
+        }
+    }
+}

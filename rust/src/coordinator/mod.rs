@@ -1,0 +1,11 @@
+//! The L3 federated-learning coordinator (the paper's Algorithms 1–2 plus
+//! the optimizer strategies of Table 3 and the transfer policies of §2.3).
+
+pub mod aggregate;
+pub mod client;
+pub mod comm;
+pub mod sampler;
+pub mod server;
+
+pub use comm::{CommLedger, Network};
+pub use server::{eval_on, Federation, RoundReport};

@@ -1,0 +1,100 @@
+//! Client sampling: each round the server samples a fraction of clients
+//! uniformly without replacement (FedAvg; the paper samples 16% of 100
+//! clients). Deterministic given (seed, round).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    num_clients: usize,
+    per_round: usize,
+    root: Rng,
+}
+
+impl Sampler {
+    /// `frac` of `num_clients` per round, at least 1.
+    pub fn new(num_clients: usize, frac: f64, seed: u64) -> Sampler {
+        assert!(num_clients > 0);
+        assert!((0.0..=1.0).contains(&frac));
+        let per_round = ((num_clients as f64 * frac).round() as usize).clamp(1, num_clients);
+        Sampler { num_clients, per_round, root: Rng::new(seed ^ 0x5A3B_17) }
+    }
+
+    /// All clients every round (the paper's Figure-5 personalization setup
+    /// assumes no sub-sampling).
+    pub fn full(num_clients: usize) -> Sampler {
+        Sampler::new(num_clients, 1.0, 0)
+    }
+
+    pub fn per_round(&self) -> usize {
+        self.per_round
+    }
+
+    /// Sample the participant set for `round` (sorted for determinism of
+    /// downstream iteration order).
+    pub fn sample(&self, round: usize) -> Vec<usize> {
+        let mut rng = self.root.child(round as u64);
+        let mut ids = rng.sample_indices(self.num_clients, self.per_round);
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_fraction() {
+        let s = Sampler::new(100, 0.16, 1);
+        assert_eq!(s.per_round(), 16);
+        assert_eq!(s.sample(0).len(), 16);
+    }
+
+    #[test]
+    fn at_least_one() {
+        let s = Sampler::new(10, 0.01, 1);
+        assert_eq!(s.per_round(), 1);
+    }
+
+    #[test]
+    fn deterministic_per_round() {
+        let s1 = Sampler::new(50, 0.2, 7);
+        let s2 = Sampler::new(50, 0.2, 7);
+        for r in 0..5 {
+            assert_eq!(s1.sample(r), s2.sample(r));
+        }
+        assert_ne!(s1.sample(0), s1.sample(1));
+    }
+
+    #[test]
+    fn distinct_in_range_sorted() {
+        let s = Sampler::new(30, 0.5, 3);
+        for r in 0..10 {
+            let ids = s.sample(r);
+            let mut d = ids.clone();
+            d.dedup();
+            assert_eq!(d.len(), ids.len(), "duplicates in round {r}");
+            assert!(ids.windows(2).all(|w| w[0] < w[1]));
+            assert!(ids.iter().all(|&i| i < 30));
+        }
+    }
+
+    #[test]
+    fn covers_all_clients_over_time() {
+        let s = Sampler::new(20, 0.25, 5);
+        let mut seen = vec![false; 20];
+        for r in 0..60 {
+            for i in s.sample(r) {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "some client never sampled");
+    }
+
+    #[test]
+    fn full_sampler() {
+        let s = Sampler::full(7);
+        assert_eq!(s.sample(3), (0..7).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,432 @@
+//! The federated round loop — the L3 counterpart of paper Algorithms 1–2.
+//!
+//! A [`Federation`] owns the client population, the server model, the
+//! optimizer state, and the communication ledger. Every round it samples
+//! clients, ships them the global parameters (download), runs their local
+//! epochs through the AOT train artifact, collects (optionally
+//! fp16-quantized) uploads, and aggregates with the configured strategy.
+//! Python never runs here — local training is one PJRT call per epoch.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::aggregate::{self, AdamState, FedDynState, ScaffoldState};
+use super::client::ClientState;
+use super::comm::{quantize_fp16, CommLedger};
+use super::sampler::Sampler;
+use crate::config::{Optimizer, RunConfig, Sharing};
+use crate::data::{assemble_batches, Dataset};
+use crate::parameterization::{Layout, SegmentKind};
+use crate::runtime::{Engine, EvalOutput, ModelRuntime};
+use crate::util::rng::Rng;
+
+/// Per-round record (feeds every accuracy-vs-communication figure).
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    pub round: usize,
+    pub lr: f32,
+    pub participants: usize,
+    pub mean_train_loss: f64,
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    pub cum_gbytes: f64,
+    pub cum_energy_mj: f64,
+    /// Global-model test accuracy, if evaluated this round.
+    pub test_acc: Option<f64>,
+    pub test_loss: Option<f64>,
+    /// Measured local-compute wall time this round (seconds).
+    pub t_comp_secs: f64,
+}
+
+/// Server-side optimizer state.
+enum ServerOpt {
+    Plain,
+    Adam(AdamState),
+    Scaffold(ScaffoldState),
+    FedDyn(FedDynState),
+}
+
+/// A running federation.
+pub struct Federation {
+    pub cfg: RunConfig,
+    rt: Rc<ModelRuntime>,
+    /// Effective transfer layout (manifest layout with `Sharing` applied).
+    layout: Layout,
+    clients: Vec<ClientState>,
+    test: Dataset,
+    /// Full-length server parameter vector (local segments hold the common
+    /// init, matching Algorithm 2's "transmit everything at start").
+    server_params: Vec<f32>,
+    opt: ServerOpt,
+    pub comm: CommLedger,
+    sampler: Sampler,
+    root_rng: Rng,
+    pub round: usize,
+    pub reports: Vec<RoundReport>,
+}
+
+/// Apply a `Sharing` policy to the manifest layout.
+pub fn effective_layout(base: &Layout, sharing: &Sharing) -> Layout {
+    let mut l = base.clone();
+    match sharing {
+        Sharing::Full | Sharing::LocalOnly => {
+            for s in l.segments.iter_mut() {
+                s.kind = SegmentKind::Global;
+            }
+        }
+        Sharing::GlobalSegments => {}
+        Sharing::FedPer { local_prefixes } => {
+            for s in l.segments.iter_mut() {
+                s.kind = if local_prefixes.iter().any(|p| s.name.starts_with(p.as_str())) {
+                    SegmentKind::Local
+                } else {
+                    SegmentKind::Global
+                };
+            }
+        }
+    }
+    l
+}
+
+impl Federation {
+    /// Build a federation over per-client datasets and a shared test set.
+    pub fn new(
+        engine: &Engine,
+        cfg: RunConfig,
+        locals: Vec<Dataset>,
+        test: Dataset,
+    ) -> Result<Federation> {
+        if locals.is_empty() {
+            return Err(anyhow!("no clients"));
+        }
+        let rt = engine.load(&cfg.artifact)?;
+        let meta = &rt.meta;
+        let layout = effective_layout(&meta.layout, &cfg.sharing);
+        if matches!(cfg.optimizer, Optimizer::Scaffold | Optimizer::FedDyn { .. })
+            && !matches!(cfg.sharing, Sharing::Full)
+        {
+            return Err(anyhow!(
+                "SCAFFOLD/FedDyn require full sharing (control state spans all params)"
+            ));
+        }
+        let mut root_rng = Rng::new(cfg.seed);
+        let server_params = meta.layout.init_params(&mut root_rng);
+        let clients: Vec<ClientState> = locals
+            .into_iter()
+            .map(|d| ClientState::new(d, server_params.clone()))
+            .collect();
+        let dim = meta.param_count;
+        let opt = match cfg.optimizer {
+            Optimizer::FedAvg | Optimizer::FedProx { .. } => ServerOpt::Plain,
+            Optimizer::FedAdam => ServerOpt::Adam(AdamState::new(layout_global_len(&layout))),
+            Optimizer::Scaffold => ServerOpt::Scaffold(ScaffoldState::new(dim, clients.len())),
+            Optimizer::FedDyn { alpha } => {
+                ServerOpt::FedDyn(FedDynState::new(dim, alpha as f64, clients.len()))
+            }
+        };
+        let sampler = match cfg.sharing {
+            Sharing::LocalOnly => Sampler::full(clients.len()),
+            _ => Sampler::new(clients.len(), cfg.sample_frac, cfg.seed),
+        };
+        Ok(Federation {
+            cfg,
+            rt,
+            layout,
+            clients,
+            test,
+            server_params,
+            opt,
+            comm: CommLedger::new(),
+            sampler,
+            root_rng,
+            round: 0,
+            reports: Vec::new(),
+        })
+    }
+
+    pub fn meta(&self) -> &crate::runtime::ArtifactMeta {
+        &self.rt.meta
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Transferred bytes for one model download at this sharing policy.
+    fn down_bytes(&self) -> u64 {
+        (self.layout.global_len() * 4) as u64
+    }
+
+    /// Current learning rate (η·τ^round, Supp. C.4).
+    pub fn current_lr(&self) -> f32 {
+        (self.cfg.lr as f64 * self.cfg.lr_decay.powi(self.round as i32)) as f32
+    }
+
+    /// Run one federated round.
+    pub fn run_round(&mut self) -> Result<RoundReport> {
+        let lr = self.current_lr();
+        let participants = self.sampler.sample(self.round);
+        let local_only = matches!(self.cfg.sharing, Sharing::LocalOnly);
+        let server_global = self.layout.gather_global(&self.server_params);
+        let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(participants.len());
+        let mut weights: Vec<f64> = Vec::with_capacity(participants.len());
+        let mut delta_controls: Vec<Vec<f32>> = Vec::new();
+        let mut full_models: Vec<Vec<f32>> = Vec::new();
+        let mut loss_acc = 0.0f64;
+        let t_comp_start = Instant::now();
+
+        let t = self.rt.meta.train;
+        let steps_per_round = (self.cfg.local_epochs * t.nbatches) as f32;
+
+        for &cid in &participants {
+            // ---- download ------------------------------------------------
+            if !local_only {
+                self.layout
+                    .scatter_global(&mut self.clients[cid].params, &server_global);
+                self.comm.record_download(self.down_bytes());
+                if matches!(self.cfg.optimizer, Optimizer::Scaffold) {
+                    // Server control variate rides along with the model.
+                    self.comm.record_download((self.rt.meta.param_count * 4) as u64);
+                }
+            }
+            let anchor = self.clients[cid].params.clone();
+
+            // Optimizer-specific extra inputs.
+            let (correction, anchor_opt, mu): (Option<Vec<f32>>, Option<&[f32]>, f32) =
+                match &self.cfg.optimizer {
+                    Optimizer::FedAvg | Optimizer::FedAdam => (None, None, 0.0),
+                    Optimizer::FedProx { mu } => (None, Some(&anchor), *mu),
+                    Optimizer::Scaffold => {
+                        let c_global = match &self.opt {
+                            ServerOpt::Scaffold(s) => s.c.clone(),
+                            _ => unreachable!(),
+                        };
+                        let c_i = self.clients[cid]
+                            .control
+                            .get_or_insert_with(|| vec![0.0; c_global.len()])
+                            .clone();
+                        (Some(aggregate::sub(&c_global, &c_i)), None, 0.0)
+                    }
+                    Optimizer::FedDyn { alpha } => {
+                        let lam = self.clients[cid]
+                            .lambda
+                            .get_or_insert_with(|| vec![0.0; anchor.len()])
+                            .clone();
+                        let neg: Vec<f32> = lam.iter().map(|&x| -x).collect();
+                        (Some(neg), Some(&anchor), *alpha)
+                    }
+                };
+
+            // ---- local training -------------------------------------------
+            let mut params = self.clients[cid].params.clone();
+            let mut rng = self.root_rng.child((self.round as u64) << 20 | cid as u64);
+            let idx: Vec<usize> = (0..self.clients[cid].data.len()).collect();
+            for _epoch in 0..self.cfg.local_epochs {
+                let stack =
+                    assemble_batches(&self.clients[cid].data, &idx, t.nbatches, t.batch, &mut rng);
+                let out = self.rt.train_epoch(
+                    &params,
+                    &stack.x,
+                    &stack.y,
+                    lr,
+                    correction.as_deref(),
+                    anchor_opt,
+                    mu,
+                )?;
+                params = out.params;
+                loss_acc += out.mean_loss as f64;
+            }
+
+            // ---- client state updates -------------------------------------
+            match self.cfg.optimizer {
+                Optimizer::Scaffold => {
+                    // Option II: c_i⁺ = c_i − c + (x − y_i)/(K·η).
+                    let c_global = match &self.opt {
+                        ServerOpt::Scaffold(s) => s.c.clone(),
+                        _ => unreachable!(),
+                    };
+                    let c_i = self.clients[cid].control.as_mut().unwrap();
+                    let scale = 1.0 / (steps_per_round * lr);
+                    let mut new_c = Vec::with_capacity(c_i.len());
+                    let mut delta_c = Vec::with_capacity(c_i.len());
+                    for j in 0..c_i.len() {
+                        let v = c_i[j] - c_global[j] + scale * (anchor[j] - params[j]);
+                        delta_c.push(v - c_i[j]);
+                        new_c.push(v);
+                    }
+                    *c_i = new_c;
+                    delta_controls.push(delta_c);
+                }
+                Optimizer::FedDyn { alpha } => {
+                    let lam = self.clients[cid].lambda.as_mut().unwrap();
+                    for j in 0..lam.len() {
+                        lam[j] -= alpha * (params[j] - anchor[j]);
+                    }
+                }
+                _ => {}
+            }
+            self.clients[cid].params = params;
+            self.clients[cid].participations += 1;
+
+            // ---- upload ---------------------------------------------------
+            if !local_only {
+                let mut up = self.layout.gather_global(&self.clients[cid].params);
+                let bytes = if self.cfg.quantize_upload {
+                    let (deq, b) = quantize_fp16(&up);
+                    up = deq;
+                    b
+                } else {
+                    (up.len() * 4) as u64
+                };
+                self.comm.record_upload(bytes);
+                if matches!(self.cfg.optimizer, Optimizer::Scaffold) {
+                    self.comm.record_upload((self.rt.meta.param_count * 4) as u64);
+                }
+                if matches!(self.cfg.optimizer, Optimizer::FedDyn { .. } | Optimizer::Scaffold) {
+                    full_models.push(self.clients[cid].params.clone());
+                }
+                uploads.push(up);
+                weights.push(self.clients[cid].num_samples() as f64);
+            }
+        }
+        let t_comp = t_comp_start.elapsed().as_secs_f64();
+
+        // ---- aggregation ---------------------------------------------------
+        if !local_only {
+            let new_global = match &mut self.opt {
+                ServerOpt::Plain => aggregate::weighted_mean(&uploads, &weights),
+                ServerOpt::Adam(adam) => adam.step(
+                    &server_global,
+                    &aggregate::weighted_mean(&uploads, &weights),
+                ),
+                ServerOpt::Scaffold(sc) => {
+                    let deltas: Vec<Vec<f32>> = full_models
+                        .iter()
+                        .map(|m| aggregate::sub(m, &self.server_params))
+                        .collect();
+                    let new_full = sc.step(&self.server_params, &deltas, &delta_controls);
+                    self.server_params = new_full;
+                    self.layout.gather_global(&self.server_params)
+                }
+                ServerOpt::FedDyn(fd) => {
+                    let new_full = fd.step(&self.server_params, &full_models);
+                    self.server_params = new_full;
+                    self.layout.gather_global(&self.server_params)
+                }
+            };
+            self.layout.scatter_global(&mut self.server_params, &new_global);
+        }
+        self.comm.end_round();
+
+        // ---- report ---------------------------------------------------------
+        let evaluate = self.cfg.eval_every > 0 && (self.round + 1) % self.cfg.eval_every == 0;
+        let (test_acc, test_loss) = if evaluate && !local_only {
+            let e = self.evaluate_global()?;
+            (Some(e.accuracy()), Some(e.mean_loss()))
+        } else {
+            (None, None)
+        };
+        let (up, down) = *self.comm.per_round.last().unwrap();
+        let report = RoundReport {
+            round: self.round,
+            lr,
+            participants: participants.len(),
+            mean_train_loss: loss_acc
+                / (participants.len().max(1) * self.cfg.local_epochs) as f64,
+            up_bytes: up,
+            down_bytes: down,
+            cum_gbytes: self.comm.total_gbytes(),
+            cum_energy_mj: self.comm.total_energy_mj(),
+            test_acc,
+            test_loss,
+            t_comp_secs: t_comp,
+        };
+        self.round += 1;
+        self.reports.push(report.clone());
+        Ok(report)
+    }
+
+    /// Run `rounds` rounds, returning the reports.
+    pub fn run(&mut self, rounds: usize) -> Result<&[RoundReport]> {
+        for _ in 0..rounds {
+            let r = self.run_round()?;
+            if crate::util::logging::enabled(crate::util::logging::Level::Info) {
+                let acc = r.test_acc.map(|a| format!("{:.2}%", a * 100.0)).unwrap_or_default();
+                crate::log_info!(
+                    "round {:>4}  loss {:.4}  lr {:.4}  cum {:.4} GB  {}",
+                    r.round,
+                    r.mean_train_loss,
+                    r.lr,
+                    r.cum_gbytes,
+                    acc
+                );
+            }
+        }
+        Ok(&self.reports)
+    }
+
+    /// Evaluate the current global model on the shared test set.
+    pub fn evaluate_global(&self) -> Result<EvalOutput> {
+        eval_on(&self.rt, &self.server_params, &self.test)
+    }
+
+    /// Evaluate each client's *personalized* model (its full parameter
+    /// vector, local segments included) on its own test set — the Figure-5
+    /// protocol. Returns per-client accuracies.
+    pub fn evaluate_personalized(&self, client_tests: &[Dataset]) -> Result<Vec<f64>> {
+        if client_tests.len() != self.clients.len() {
+            return Err(anyhow!("need one test set per client"));
+        }
+        let mut accs = Vec::with_capacity(self.clients.len());
+        for (c, t) in self.clients.iter().zip(client_tests) {
+            // A client that never trained evaluates its init — fine.
+            let mut params = c.params.clone();
+            if !matches!(self.cfg.sharing, Sharing::LocalOnly) {
+                // Personalized model = latest global + own local segments.
+                let g = self.layout.gather_global(&self.server_params);
+                self.layout.scatter_global(&mut params, &g);
+            }
+            accs.push(eval_on(&self.rt, &params, t)?.accuracy());
+        }
+        Ok(accs)
+    }
+
+    /// Snapshot of the server model (global vector view).
+    pub fn server_global(&self) -> Vec<f32> {
+        self.layout.gather_global(&self.server_params)
+    }
+}
+
+fn layout_global_len(l: &Layout) -> usize {
+    l.global_len()
+}
+
+/// Evaluate `params` on a whole dataset by chunking it through the fixed
+/// eval shape (the final chunk wraps around; with test sizes that are
+/// multiples of the eval call size there is no double counting).
+pub fn eval_on(rt: &ModelRuntime, params: &[f32], data: &Dataset) -> Result<EvalOutput> {
+    let e = rt.meta.eval;
+    let need = e.nbatches * e.batch;
+    let mut merged: Option<EvalOutput> = None;
+    let mut start = 0usize;
+    while start < data.len() {
+        let idx: Vec<usize> = (start..start + need).map(|i| i % data.len()).collect();
+        let sub = data.subset(&idx);
+        let mut x = Vec::with_capacity(need * data.feature_dim);
+        let mut y = Vec::with_capacity(need);
+        for i in 0..need {
+            let (f, l) = sub.sample(i);
+            x.extend_from_slice(f);
+            y.push(l as f32);
+        }
+        let out = rt.eval_call(params, &x, &y)?;
+        match merged.as_mut() {
+            Some(m) => m.merge(&out),
+            None => merged = Some(out),
+        }
+        start += need;
+    }
+    merged.ok_or_else(|| anyhow!("empty test set"))
+}

@@ -1,0 +1,211 @@
+//! Datasets and federated partitioning.
+//!
+//! The environment has no network access, so the paper's benchmark datasets
+//! (CIFAR-10/100, CINIC-10, MNIST, FEMNIST, Shakespeare) are replaced by
+//! procedurally generated equivalents with the same shapes, class counts
+//! and — critically — the same *heterogeneity structure* (IID vs
+//! Dirichlet-partitioned vs pathological 2-class vs per-writer shift).
+//! See DESIGN.md §3 for the substitution rationale.
+//!
+//! * [`synth_vision`] — class-conditional image generator (CIFAR-like
+//!   32×32×3, handwritten-like 28×28×1 with per-writer transforms).
+//! * [`synth_text`] — seeded Markov-chain character corpus (Shakespeare-like,
+//!   80-symbol vocabulary) for the LSTM experiments.
+//! * [`partition`] — IID / Dirichlet(α) / pathological shard partitioners.
+
+pub mod partition;
+pub mod synth_text;
+pub mod synth_vision;
+
+use crate::util::rng::Rng;
+
+/// An in-memory supervised dataset with flat f32 features.
+///
+/// Vision: `feature_dim = H·W·C`, `labels` are class ids.
+/// Text: `feature_dim = seq_len + 1` character ids stored as f32 (the model
+/// consumes positions 0..L as input and 1..L+1 as next-char targets);
+/// `labels` is all zeros and unused.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub features: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub feature_dim: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> (&[f32], u32) {
+        (
+            &self.features[i * self.feature_dim..(i + 1) * self.feature_dim],
+            self.labels[i],
+        )
+    }
+
+    /// Split off a held-out test set: the last `frac` of a shuffled copy.
+    pub fn train_test_split(&self, frac_test: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&frac_test));
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let n_test = ((self.len() as f64) * frac_test).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        (self.subset(train_idx), self.subset(test_idx))
+    }
+
+    /// Materialize a subset by indices.
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let mut features = Vec::with_capacity(indices.len() * self.feature_dim);
+        let mut labels = Vec::with_capacity(indices.len());
+        for &i in indices {
+            let (f, l) = self.sample(i);
+            features.extend_from_slice(f);
+            labels.push(l);
+        }
+        Dataset {
+            features,
+            labels,
+            feature_dim: self.feature_dim,
+            num_classes: self.num_classes,
+        }
+    }
+
+    /// Per-class sample counts (for partition diagnostics / tests).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.num_classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Fixed-shape batch stack for one local-training call: the AOT train-step
+/// artifact takes `x: (nbatches, batch, feature_dim)` and
+/// `y: (nbatches, batch)` so shapes stay static across clients.
+#[derive(Clone, Debug)]
+pub struct BatchStack {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub nbatches: usize,
+    pub batch: usize,
+    pub feature_dim: usize,
+}
+
+/// Assemble `nbatches` batches of size `batch` from the client's local
+/// indices. Clients whose local datasets are smaller than `nbatches·batch`
+/// sample with replacement (standard practice for fixed-shape FL steps;
+/// documented in DESIGN.md). Larger datasets get a shuffled pass.
+pub fn assemble_batches(
+    data: &Dataset,
+    indices: &[usize],
+    nbatches: usize,
+    batch: usize,
+    rng: &mut Rng,
+) -> BatchStack {
+    assert!(!indices.is_empty(), "client has no data");
+    let need = nbatches * batch;
+    let mut order: Vec<usize> = Vec::with_capacity(need);
+    if indices.len() >= need {
+        let mut shuffled = indices.to_vec();
+        rng.shuffle(&mut shuffled);
+        order.extend_from_slice(&shuffled[..need]);
+    } else {
+        // Cycle a shuffled copy, reshuffling per epoch-equivalent pass.
+        let mut shuffled = indices.to_vec();
+        while order.len() < need {
+            rng.shuffle(&mut shuffled);
+            let take = (need - order.len()).min(shuffled.len());
+            order.extend_from_slice(&shuffled[..take]);
+        }
+    }
+    let mut x = Vec::with_capacity(need * data.feature_dim);
+    let mut y = Vec::with_capacity(need);
+    for &i in &order {
+        let (f, l) = data.sample(i);
+        x.extend_from_slice(f);
+        y.push(l as f32);
+    }
+    BatchStack { x, y, nbatches, batch, feature_dim: data.feature_dim }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dataset() -> Dataset {
+        // 10 samples, feature_dim 3, 2 classes.
+        Dataset {
+            features: (0..30).map(|i| i as f32).collect(),
+            labels: (0..10).map(|i| (i % 2) as u32).collect(),
+            feature_dim: 3,
+            num_classes: 2,
+        }
+    }
+
+    #[test]
+    fn sample_access() {
+        let d = tiny_dataset();
+        let (f, l) = d.sample(2);
+        assert_eq!(f, &[6.0, 7.0, 8.0]);
+        assert_eq!(l, 0);
+    }
+
+    #[test]
+    fn subset_preserves_rows() {
+        let d = tiny_dataset();
+        let s = d.subset(&[3, 0, 7]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.sample(0).0, d.sample(3).0);
+        assert_eq!(s.sample(1).1, d.sample(0).1);
+    }
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let d = tiny_dataset();
+        let mut rng = Rng::new(1);
+        let (train, test) = d.train_test_split(0.3, &mut rng);
+        assert_eq!(train.len() + test.len(), d.len());
+        assert_eq!(test.len(), 3);
+    }
+
+    #[test]
+    fn class_counts_sum() {
+        let d = tiny_dataset();
+        assert_eq!(d.class_counts(), vec![5, 5]);
+    }
+
+    #[test]
+    fn batches_exact_fit() {
+        let d = tiny_dataset();
+        let mut rng = Rng::new(2);
+        let idx: Vec<usize> = (0..10).collect();
+        let b = assemble_batches(&d, &idx, 2, 5, &mut rng);
+        assert_eq!(b.x.len(), 2 * 5 * 3);
+        assert_eq!(b.y.len(), 10);
+        // Exactly a permutation of all ten labels (no replacement needed).
+        let mut ys: Vec<i32> = b.y.iter().map(|&v| v as i32).collect();
+        ys.sort_unstable();
+        assert_eq!(ys, vec![0, 0, 0, 0, 0, 1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn batches_with_replacement_when_scarce() {
+        let d = tiny_dataset();
+        let mut rng = Rng::new(3);
+        let idx = vec![1usize, 4];
+        let b = assemble_batches(&d, &idx, 3, 4, &mut rng);
+        assert_eq!(b.y.len(), 12);
+        // All drawn labels must come from the two allowed samples.
+        for chunk in b.x.chunks(3) {
+            let first = chunk[0];
+            assert!(first == 3.0 || first == 12.0, "unexpected row {first}");
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Federated data partitioners.
+//!
+//! * [`iid`] — uniform random split (the paper's IID setting).
+//! * [`dirichlet`] — label-skewed non-IID split: for every class, the
+//!   class's samples are distributed over clients with proportions drawn
+//!   from Dirichlet(α·1_K) (He et al. 2020b; the paper uses α = 0.5).
+//! * [`pathological`] — McMahan et al. (2017) shard split where each client
+//!   receives shards from at most `shards_per_client` classes (the paper's
+//!   highly-skew MNIST setting uses 2).
+
+use crate::util::rng::Rng;
+
+/// Assignment of sample indices to clients.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub clients: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn total_samples(&self) -> usize {
+        self.clients.iter().map(|c| c.len()).sum()
+    }
+
+    /// Validate: every index in [0, n) appears exactly once.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        let mut seen = vec![false; n];
+        for (ci, idxs) in self.clients.iter().enumerate() {
+            for &i in idxs {
+                if i >= n {
+                    return Err(format!("client {ci}: index {i} out of range {n}"));
+                }
+                if seen[i] {
+                    return Err(format!("index {i} assigned twice"));
+                }
+                seen[i] = true;
+            }
+        }
+        if let Some(missing) = seen.iter().position(|&s| !s) {
+            return Err(format!("index {missing} unassigned"));
+        }
+        Ok(())
+    }
+
+    /// Per-client label histograms (diagnostics + tests).
+    pub fn label_histograms(&self, labels: &[u32], num_classes: usize) -> Vec<Vec<usize>> {
+        self.clients
+            .iter()
+            .map(|idxs| {
+                let mut h = vec![0usize; num_classes];
+                for &i in idxs {
+                    h[labels[i] as usize] += 1;
+                }
+                h
+            })
+            .collect()
+    }
+}
+
+/// IID: shuffle and deal into `k` near-equal chunks.
+pub fn iid(n: usize, k: usize, rng: &mut Rng) -> Partition {
+    assert!(k > 0 && n >= k, "need at least one sample per client");
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut clients = vec![Vec::with_capacity(n / k + 1); k];
+    for (pos, i) in idx.into_iter().enumerate() {
+        clients[pos % k].push(i);
+    }
+    Partition { clients }
+}
+
+/// Dirichlet label-skew: per class c, draw p ~ Dir(α·1_K) and split that
+/// class's samples over clients in those proportions. Guarantees every
+/// client ends up non-empty by reassigning from the largest client when
+/// needed (matching common FedML-style implementations).
+pub fn dirichlet(labels: &[u32], num_classes: usize, k: usize, alpha: f64, rng: &mut Rng) -> Partition {
+    assert!(k > 0 && labels.len() >= k);
+    let mut clients: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for c in 0..num_classes {
+        let mut class_idx: Vec<usize> =
+            (0..labels.len()).filter(|&i| labels[i] as usize == c).collect();
+        if class_idx.is_empty() {
+            continue;
+        }
+        rng.shuffle(&mut class_idx);
+        let p = rng.dirichlet(alpha, k);
+        // Cumulative cut points over the class's samples.
+        let n_c = class_idx.len();
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (ci, &pi) in p.iter().enumerate() {
+            acc += pi;
+            let end = if ci + 1 == k { n_c } else { (acc * n_c as f64).round() as usize };
+            let end = end.clamp(start, n_c);
+            clients[ci].extend_from_slice(&class_idx[start..end]);
+            start = end;
+        }
+    }
+    // Repair empty clients: move one sample from the largest client.
+    loop {
+        let empty = match clients.iter().position(|c| c.is_empty()) {
+            Some(e) => e,
+            None => break,
+        };
+        let donor = (0..k).max_by_key(|&i| clients[i].len()).unwrap();
+        assert!(clients[donor].len() > 1, "not enough samples to cover all clients");
+        let moved = clients[donor].pop().unwrap();
+        clients[empty].push(moved);
+    }
+    Partition { clients }
+}
+
+/// Pathological shard split: sort indices by label, cut into
+/// `k · shards_per_client` contiguous shards, deal `shards_per_client`
+/// random shards to each client. With 2 shards each client sees ≤ 2 classes.
+pub fn pathological(labels: &[u32], k: usize, shards_per_client: usize, rng: &mut Rng) -> Partition {
+    let n = labels.len();
+    let num_shards = k * shards_per_client;
+    assert!(n >= num_shards, "need at least one sample per shard");
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by_key(|&i| labels[i]);
+    // Shard boundaries.
+    let mut shard_order: Vec<usize> = (0..num_shards).collect();
+    rng.shuffle(&mut shard_order);
+    let mut clients = vec![Vec::new(); k];
+    for (pos, &shard) in shard_order.iter().enumerate() {
+        let client = pos / shards_per_client;
+        let lo = shard * n / num_shards;
+        let hi = (shard + 1) * n / num_shards;
+        clients[client].extend_from_slice(&idx[lo..hi]);
+    }
+    Partition { clients }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+
+    fn labels_balanced(n: usize, classes: usize) -> Vec<u32> {
+        (0..n).map(|i| (i % classes) as u32).collect()
+    }
+
+    #[test]
+    fn iid_covers_everything() {
+        let mut rng = Rng::new(21);
+        let p = iid(103, 10, &mut rng);
+        p.validate(103).unwrap();
+        // Near-equal sizes.
+        for c in &p.clients {
+            assert!(c.len() == 10 || c.len() == 11);
+        }
+    }
+
+    #[test]
+    fn iid_is_label_balanced_in_expectation() {
+        let mut rng = Rng::new(22);
+        let labels = labels_balanced(1000, 10);
+        let p = iid(1000, 10, &mut rng);
+        let hists = p.label_histograms(&labels, 10);
+        // Each client should see every class a handful of times.
+        for h in hists {
+            for &count in &h {
+                assert!(count >= 2, "IID client missing a class: {h:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dirichlet_covers_everything() {
+        let mut rng = Rng::new(23);
+        let labels = labels_balanced(500, 10);
+        let p = dirichlet(&labels, 10, 20, 0.5, &mut rng);
+        p.validate(500).unwrap();
+        assert!(p.clients.iter().all(|c| !c.is_empty()));
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_skew() {
+        let mut rng = Rng::new(24);
+        let labels = labels_balanced(4000, 10);
+        // Average max class share per client, over a few draws.
+        let avg_max_share = |alpha: f64, rng: &mut Rng| {
+            let mut total = 0.0;
+            let reps = 3;
+            for _ in 0..reps {
+                let p = dirichlet(&labels, 10, 10, alpha, rng);
+                let hists = p.label_histograms(&labels, 10);
+                for h in hists {
+                    let n: usize = h.iter().sum();
+                    let mx = *h.iter().max().unwrap();
+                    total += mx as f64 / n.max(1) as f64;
+                }
+            }
+            total / (reps * 10) as f64
+        };
+        let skewed = avg_max_share(0.1, &mut rng);
+        let balanced = avg_max_share(100.0, &mut rng);
+        assert!(
+            skewed > balanced + 0.15,
+            "alpha=0.1 share {skewed:.3} should exceed alpha=100 share {balanced:.3}"
+        );
+        assert!(balanced < 0.2, "alpha=100 should be near-uniform, got {balanced:.3}");
+    }
+
+    #[test]
+    fn pathological_limits_classes_per_client() {
+        let mut rng = Rng::new(25);
+        // 1000 samples, 10 classes, perfectly sorted shards.
+        let labels = {
+            let mut l = labels_balanced(1000, 10);
+            l.sort_unstable();
+            l
+        };
+        let p = pathological(&labels, 100, 2, &mut rng);
+        p.validate(1000).unwrap();
+        let hists = p.label_histograms(&labels, 10);
+        for (ci, h) in hists.iter().enumerate() {
+            let classes_present = h.iter().filter(|&&c| c > 0).count();
+            // A shard can straddle a class boundary, but with equal class
+            // sizes and aligned shards each client sees at most 2 + 1
+            // boundary classes; the McMahan construction targets <= 2.
+            assert!(classes_present <= 3, "client {ci} sees {classes_present} classes: {h:?}");
+        }
+        // The typical client must be heavily skewed: median clients see <= 2.
+        let le2 = hists.iter().filter(|h| h.iter().filter(|&&c| c > 0).count() <= 2).count();
+        assert!(le2 >= 90, "only {le2}/100 clients are <=2-class");
+    }
+
+    #[test]
+    fn prop_partitions_are_exact() {
+        pt::check(
+            31,
+            |rng| {
+                let n = 50 + rng.below(300);
+                let k = 2 + rng.below(10);
+                let classes = 2 + rng.below(8);
+                let alpha = 10f64.powf(rng.range_f64(-1.0, 1.0));
+                let seed = rng.next_u64();
+                (n, k, classes, alpha, seed)
+            },
+            pt::no_shrink,
+            |&(n, k, classes, alpha, seed)| {
+                let mut rng = Rng::new(seed);
+                let labels: Vec<u32> = (0..n).map(|i| (i % classes) as u32).collect();
+                for (name, p) in [
+                    ("iid", iid(n, k, &mut rng)),
+                    ("dirichlet", dirichlet(&labels, classes, k, alpha, &mut rng)),
+                ] {
+                    p.validate(n).map_err(|e| format!("{name}: {e}"))?;
+                    if p.num_clients() != k {
+                        return Err(format!("{name}: wrong client count"));
+                    }
+                    if p.clients.iter().any(|c| c.is_empty()) {
+                        return Err(format!("{name}: empty client"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn partition_determinism() {
+        let labels = labels_balanced(200, 10);
+        let a = dirichlet(&labels, 10, 7, 0.5, &mut Rng::new(99));
+        let b = dirichlet(&labels, 10, 7, 0.5, &mut Rng::new(99));
+        assert_eq!(a.clients, b.clients);
+    }
+}

@@ -1,0 +1,232 @@
+//! Seeded Markov-chain character corpus (Shakespeare stand-in).
+//!
+//! The paper's Shakespeare experiments do next-character prediction over an
+//! 80-symbol vocabulary with per-client (per-role) text. Without network
+//! access we synthesize an equivalent: a base order-1 Markov chain with a
+//! sparse, structured transition matrix (each symbol has a handful of
+//! likely successors, so an LSTM can learn real statistical structure), and
+//! per-client "roles" that perturb the chain — heterogeneity 0 gives the
+//! IID setting, larger values give client-specific dialects (non-IID).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Vocabulary size and sequence length of a synthetic text dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct TextSpec {
+    pub vocab: usize,
+    /// Model sequence length L; each sample stores L+1 symbols.
+    pub seq_len: usize,
+    pub family_seed: u64,
+}
+
+/// Shakespeare stand-in: 80 symbols (the LEAF char vocabulary size), L=48.
+pub fn shakespeare_like() -> TextSpec {
+    TextSpec { vocab: 80, seq_len: 48, family_seed: 0x5A4E }
+}
+
+/// Row-stochastic transition matrix of the chain.
+#[derive(Clone, Debug)]
+pub struct Chain {
+    pub vocab: usize,
+    /// vocab × vocab row-major probabilities.
+    pub probs: Vec<f64>,
+}
+
+impl Chain {
+    /// The base chain: each symbol gets `fanout` preferred successors with
+    /// geometric-ish weights plus a small uniform floor.
+    pub fn base(spec: &TextSpec) -> Chain {
+        let mut rng = Rng::new(spec.family_seed ^ 0xBA5E);
+        Chain::random(spec.vocab, 5, 0.02, &mut rng)
+    }
+
+    fn random(vocab: usize, fanout: usize, floor: f64, rng: &mut Rng) -> Chain {
+        let mut probs = vec![0f64; vocab * vocab];
+        for s in 0..vocab {
+            let row = &mut probs[s * vocab..(s + 1) * vocab];
+            // Uniform floor keeps the chain ergodic.
+            for p in row.iter_mut() {
+                *p = floor / vocab as f64;
+            }
+            let succ = rng.sample_indices(vocab, fanout.min(vocab));
+            let mut w = 1.0;
+            for &t in &succ {
+                row[t] += w;
+                w *= 0.55; // Geometric decay: strong first choice.
+            }
+            let total: f64 = row.iter().sum();
+            for p in row.iter_mut() {
+                *p /= total;
+            }
+        }
+        Chain { vocab, probs }
+    }
+
+    /// Per-client role chain: convex mix of the base chain with a
+    /// client-specific random chain. `h = 0` → base; `h = 1` → fully
+    /// client-specific.
+    pub fn for_role(spec: &TextSpec, role: usize, h: f64) -> Chain {
+        let base = Chain::base(spec);
+        if h <= 0.0 {
+            return base;
+        }
+        let mut rng = Rng::new(spec.family_seed ^ (0x0107E + role as u64 * 0x3_0000_0005));
+        let own = Chain::random(spec.vocab, 5, 0.02, &mut rng);
+        let probs = base
+            .probs
+            .iter()
+            .zip(own.probs.iter())
+            .map(|(&b, &o)| (1.0 - h) * b + h * o)
+            .collect();
+        Chain { vocab: spec.vocab, probs }
+    }
+
+    /// Sample the successor of `s`.
+    pub fn step(&self, s: usize, rng: &mut Rng) -> usize {
+        let row = &self.probs[s * self.vocab..(s + 1) * self.vocab];
+        rng.categorical(row)
+    }
+
+    /// Generate a stream of `len` symbols starting from a random state.
+    pub fn stream(&self, len: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut out = Vec::with_capacity(len);
+        let mut s = rng.below(self.vocab);
+        for _ in 0..len {
+            s = self.step(s, rng);
+            out.push(s);
+        }
+        out
+    }
+}
+
+/// Cut a symbol stream into (L+1)-length samples, stride L (adjacent
+/// samples share one boundary symbol, like standard LM chunking).
+fn chop(stream: &[usize], seq_len: usize, vocab: usize) -> Dataset {
+    let window = seq_len + 1;
+    let n = if stream.len() >= window { (stream.len() - window) / seq_len + 1 } else { 0 };
+    let mut features = Vec::with_capacity(n * window);
+    for i in 0..n {
+        let start = i * seq_len;
+        for &s in &stream[start..start + window] {
+            features.push(s as f32);
+        }
+    }
+    Dataset { features, labels: vec![0; n], feature_dim: window, num_classes: vocab }
+}
+
+/// Generate `n` samples from the base chain (IID corpus; partition it with
+/// `data::partition::iid`).
+pub fn generate(spec: &TextSpec, n: usize, seed: u64) -> Dataset {
+    let chain = Chain::base(spec);
+    let mut rng = Rng::new(seed ^ spec.family_seed);
+    let stream = chain.stream(n * spec.seq_len + 1, &mut rng);
+    let d = chop(&stream, spec.seq_len, spec.vocab);
+    debug_assert_eq!(d.len(), n);
+    d
+}
+
+/// Generate a per-role federation: each client has its own dialect of
+/// strength `h`, plus a base-chain test set.
+pub fn generate_federation(
+    spec: &TextSpec,
+    clients: usize,
+    per_client: usize,
+    h: f64,
+    test_n: usize,
+    seed: u64,
+) -> (Vec<Dataset>, Dataset) {
+    let locals = (0..clients)
+        .map(|c| {
+            let chain = Chain::for_role(spec, c, h);
+            let mut rng = Rng::new(seed ^ (0xD1A1 + c as u64 * 0x7_0000_000B));
+            let stream = chain.stream(per_client * spec.seq_len + 1, &mut rng);
+            chop(&stream, spec.seq_len, spec.vocab)
+        })
+        .collect();
+    let test = generate(spec, test_n, seed ^ 0x7E57_7E57);
+    (locals, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_rows_are_stochastic() {
+        let spec = shakespeare_like();
+        let c = Chain::base(&spec);
+        for s in 0..spec.vocab {
+            let row_sum: f64 = c.probs[s * spec.vocab..(s + 1) * spec.vocab].iter().sum();
+            assert!((row_sum - 1.0).abs() < 1e-9, "row {s} sums to {row_sum}");
+        }
+    }
+
+    #[test]
+    fn dataset_shapes() {
+        let spec = shakespeare_like();
+        let d = generate(&spec, 100, 3);
+        assert_eq!(d.len(), 100);
+        assert_eq!(d.feature_dim, 49);
+        assert_eq!(d.num_classes, 80);
+        // Symbols in range.
+        assert!(d.features.iter().all(|&x| x >= 0.0 && x < 80.0 && x.fract() == 0.0));
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = shakespeare_like();
+        let a = generate(&spec, 20, 9);
+        let b = generate(&spec, 20, 9);
+        assert_eq!(a.features, b.features);
+    }
+
+    #[test]
+    fn chain_is_predictable_above_chance() {
+        // The most-likely-successor predictor should be far above 1/80 —
+        // this is what gives the LSTM something to learn.
+        let spec = shakespeare_like();
+        let chain = Chain::base(&spec);
+        let mut rng = Rng::new(10);
+        let stream = chain.stream(20_000, &mut rng);
+        let argmax = |s: usize| -> usize {
+            let row = &chain.probs[s * spec.vocab..(s + 1) * spec.vocab];
+            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        let mut correct = 0usize;
+        for w in stream.windows(2) {
+            if argmax(w[0]) == w[1] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / (stream.len() - 1) as f64;
+        assert!(acc > 0.3, "bayes-ish accuracy {acc} too low");
+        assert!(acc < 0.95, "chain too deterministic: {acc}");
+    }
+
+    #[test]
+    fn roles_differ_and_h_zero_is_base() {
+        let spec = shakespeare_like();
+        let base = Chain::base(&spec);
+        let r0 = Chain::for_role(&spec, 0, 0.0);
+        assert_eq!(base.probs, r0.probs);
+        let ra = Chain::for_role(&spec, 1, 0.8);
+        let rb = Chain::for_role(&spec, 2, 0.8);
+        let dist: f64 = ra
+            .probs
+            .iter()
+            .zip(rb.probs.iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(dist > 1.0, "role chains should differ, L1={dist}");
+    }
+
+    #[test]
+    fn federation_shapes() {
+        let spec = shakespeare_like();
+        let (locals, test) = generate_federation(&spec, 5, 40, 0.5, 60, 4);
+        assert_eq!(locals.len(), 5);
+        assert!(locals.iter().all(|d| d.len() == 40));
+        assert_eq!(test.len(), 60);
+    }
+}

@@ -1,0 +1,329 @@
+//! Procedural class-conditional image generator.
+//!
+//! Stands in for CIFAR-10/100, CINIC-10, MNIST and FEMNIST (no downloads in
+//! this environment; DESIGN.md §3). Each class is a deterministic "texture
+//! template": a sum of oriented 2-D sinusoidal gratings with class-specific
+//! frequencies, orientations, phases and per-channel tints. A sample is its
+//! class template evaluated with instance-specific phase jitter and
+//! amplitude scaling plus pixel noise — so classes are learnable but not
+//! trivially separable, and difficulty is controlled by the noise level.
+//!
+//! FEMNIST-style *writer heterogeneity* applies a per-writer transform
+//! (translation phase, stroke gain, contrast bias) on top of the class
+//! template, giving a naturally non-IID federation exactly where the paper
+//! uses FEMNIST (Figure 5 scenarios).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Shape + difficulty of a synthetic vision dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct VisionSpec {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub classes: usize,
+    /// Pixel gaussian noise std.
+    pub noise: f64,
+    /// Number of grating components per class template.
+    pub components: usize,
+    /// Seed namespace so e.g. cifar-like and cinic-like differ.
+    pub family_seed: u64,
+}
+
+impl VisionSpec {
+    pub fn feature_dim(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// CIFAR-10 stand-in: 32×32×3, 10 classes.
+pub fn cifar10_like() -> VisionSpec {
+    // 16×16 rather than 32×32: single-core scaling (DESIGN.md §3); the
+    // FL comparisons are resolution-generic.
+    VisionSpec { h: 16, w: 16, c: 3, classes: 10, noise: 0.55, components: 3, family_seed: 0xC1FA }
+}
+
+/// CIFAR-100 stand-in: 32×32×3, 100 classes (harder: templates are drawn
+/// from the same component budget, so classes are closer together).
+pub fn cifar100_like() -> VisionSpec {
+    VisionSpec { h: 16, w: 16, c: 3, classes: 100, noise: 0.5, components: 3, family_seed: 0xC100 }
+}
+
+/// CINIC-10 stand-in: CIFAR-like but noisier (CINIC mixes ImageNet-derived
+/// imagery and is empirically harder than CIFAR-10).
+pub fn cinic10_like() -> VisionSpec {
+    VisionSpec { h: 16, w: 16, c: 3, classes: 10, noise: 0.8, components: 3, family_seed: 0xC141C }
+}
+
+/// MNIST stand-in: 28×28×1, 10 classes, relatively easy.
+pub fn mnist_like() -> VisionSpec {
+    VisionSpec { h: 28, w: 28, c: 1, classes: 10, noise: 0.35, components: 3, family_seed: 0x3A15 }
+}
+
+/// FEMNIST stand-in: 28×28×1, 62 classes (digits+letters).
+pub fn femnist_like() -> VisionSpec {
+    VisionSpec { h: 28, w: 28, c: 1, classes: 62, noise: 0.4, components: 3, family_seed: 0xFE31 }
+}
+
+/// One grating component of a class template.
+#[derive(Clone, Copy, Debug)]
+struct Grating {
+    fx: f64,
+    fy: f64,
+    phase: f64,
+    /// Per-channel amplitudes (up to 3 channels used).
+    amp: [f64; 3],
+}
+
+/// The deterministic per-class template parameters.
+fn class_gratings(spec: &VisionSpec, class: usize) -> Vec<Grating> {
+    let mut rng = Rng::new(spec.family_seed ^ (0x9E37 + class as u64 * 0x1_0000_0001));
+    (0..spec.components)
+        .map(|_| {
+            // Frequencies in cycles across the image; small integers keep
+            // gratings smooth enough for 3×3-conv features to pick up.
+            let fx = rng.range_f64(0.5, 4.0) * if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            let fy = rng.range_f64(0.5, 4.0);
+            let phase = rng.range_f64(0.0, std::f64::consts::TAU);
+            let mut amp = [0.0; 3];
+            for a in amp.iter_mut().take(spec.c.min(3)) {
+                *a = rng.range_f64(0.3, 1.0) * if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            }
+            Grating { fx, fy, phase, amp }
+        })
+        .collect()
+}
+
+/// Per-writer style transform (FEMNIST heterogeneity).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WriterStyle {
+    /// Phase offsets ≈ translation of the strokes.
+    pub dx: f64,
+    pub dy: f64,
+    /// Multiplicative stroke gain.
+    pub gain: f64,
+    /// Additive brightness bias.
+    pub bias: f64,
+}
+
+impl WriterStyle {
+    /// Neutral style (no shift).
+    pub fn neutral() -> WriterStyle {
+        WriterStyle { dx: 0.0, dy: 0.0, gain: 1.0, bias: 0.0 }
+    }
+
+    /// Style for `writer` with heterogeneity strength `h` in [0, 1].
+    pub fn for_writer(writer: usize, h: f64, family_seed: u64) -> WriterStyle {
+        let mut rng = Rng::new(family_seed ^ (0xA11CE + writer as u64 * 0x2_0000_0003));
+        WriterStyle {
+            dx: rng.range_f64(-1.2, 1.2) * h,
+            dy: rng.range_f64(-1.2, 1.2) * h,
+            gain: 1.0 + rng.range_f64(-0.45, 0.45) * h,
+            bias: rng.range_f64(-0.35, 0.35) * h,
+        }
+    }
+}
+
+/// Render one sample of `class` into `out` (length h·w·c, channel-minor:
+/// index = (row·w + col)·c + ch).
+fn render(
+    spec: &VisionSpec,
+    gratings: &[Grating],
+    style: &WriterStyle,
+    rng: &mut Rng,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), spec.feature_dim());
+    // Instance jitter: small phase shift and amplitude scale shared by all
+    // components (a rigid-ish transform of the texture).
+    let jx = rng.range_f64(-0.6, 0.6) + style.dx;
+    let jy = rng.range_f64(-0.6, 0.6) + style.dy;
+    let scale = (1.0 + rng.range_f64(-0.25, 0.25)) * style.gain;
+    let inv_h = 1.0 / spec.h as f64;
+    let inv_w = 1.0 / spec.w as f64;
+    for row in 0..spec.h {
+        let y = row as f64 * inv_h * std::f64::consts::TAU;
+        for col in 0..spec.w {
+            let x = col as f64 * inv_w * std::f64::consts::TAU;
+            let base = (row * spec.w + col) * spec.c;
+            for ch in 0..spec.c {
+                let mut v = style.bias;
+                for g in gratings {
+                    v += g.amp[ch.min(2)] * (g.fx * (x + jx) + g.fy * (y + jy) + g.phase).sin();
+                }
+                let noisy = v * scale + rng.gaussian() * spec.noise;
+                out[base + ch] = noisy as f32;
+            }
+        }
+    }
+}
+
+/// Generate `n` samples with (near-)balanced random classes.
+pub fn generate(spec: &VisionSpec, n: usize, seed: u64) -> Dataset {
+    generate_with_style(spec, n, seed, &WriterStyle::neutral())
+}
+
+/// Generate `n` samples in a specific writer style.
+pub fn generate_with_style(spec: &VisionSpec, n: usize, seed: u64, style: &WriterStyle) -> Dataset {
+    let mut rng = Rng::new(seed ^ spec.family_seed.rotate_left(13));
+    let fdim = spec.feature_dim();
+    let mut features = vec![0f32; n * fdim];
+    let mut labels = Vec::with_capacity(n);
+    // Balanced class sequence, then shuffled: exact balance helps the
+    // Dirichlet partitioner's per-class splits behave.
+    let mut classes: Vec<usize> = (0..n).map(|i| i % spec.classes).collect();
+    rng.shuffle(&mut classes);
+    // Cache templates.
+    let templates: Vec<Vec<Grating>> =
+        (0..spec.classes).map(|k| class_gratings(spec, k)).collect();
+    for (i, &k) in classes.iter().enumerate() {
+        render(spec, &templates[k], style, &mut rng, &mut features[i * fdim..(i + 1) * fdim]);
+        labels.push(k as u32);
+    }
+    Dataset { features, labels, feature_dim: fdim, num_classes: spec.classes }
+}
+
+/// Generate a per-writer federation: `writers` datasets of `per_writer`
+/// samples each, with writer heterogeneity `h` (0 = IID writers), plus a
+/// style-neutral pooled test set of `test_n` samples.
+pub fn generate_federation(
+    spec: &VisionSpec,
+    writers: usize,
+    per_writer: usize,
+    h: f64,
+    test_n: usize,
+    seed: u64,
+) -> (Vec<Dataset>, Dataset) {
+    let locals = (0..writers)
+        .map(|w| {
+            let style = WriterStyle::for_writer(w, h, spec.family_seed);
+            generate_with_style(spec, per_writer, seed ^ (w as u64 * 0x51_7E), &style)
+        })
+        .collect();
+    let test = generate(spec, test_n, seed ^ 0x7E57);
+    (locals, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let spec = cifar10_like();
+        let d = generate(&spec, 200, 7);
+        assert_eq!(d.len(), 200);
+        assert_eq!(d.feature_dim, 16 * 16 * 3);
+        let counts = d.class_counts();
+        assert_eq!(counts, vec![20; 10]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = mnist_like();
+        let a = generate(&spec, 20, 5);
+        let b = generate(&spec, 20, 5);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.features, b.features);
+        let c = generate(&spec, 20, 6);
+        assert_ne!(a.features, c.features);
+    }
+
+    #[test]
+    fn classes_are_statistically_separable() {
+        // Nearest-class-mean classification on clean data should beat
+        // chance by a wide margin; this is the learnability smoke test.
+        let spec = mnist_like();
+        let train = generate(&spec, 600, 11);
+        let test = generate(&spec, 200, 12);
+        let fdim = spec.feature_dim();
+        let mut means = vec![vec![0f64; fdim]; spec.classes];
+        let counts = train.class_counts();
+        for i in 0..train.len() {
+            let (f, l) = train.sample(i);
+            for (m, &x) in means[l as usize].iter_mut().zip(f) {
+                *m += x as f64;
+            }
+        }
+        for (k, m) in means.iter_mut().enumerate() {
+            for v in m.iter_mut() {
+                *v /= counts[k].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.len() {
+            let (f, l) = test.sample(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for (k, m) in means.iter().enumerate() {
+                let d: f64 = m.iter().zip(f).map(|(&mm, &x)| (x as f64 - mm).powi(2)).sum();
+                if d < best.0 {
+                    best = (d, k);
+                }
+            }
+            if best.1 == l as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.5, "nearest-mean accuracy {acc} too low (chance = 0.1)");
+    }
+
+    #[test]
+    fn writer_styles_shift_distributions() {
+        let spec = femnist_like();
+        let (locals, _test) = generate_federation(&spec, 4, 400, 1.0, 30, 3);
+        assert_eq!(locals.len(), 4);
+        // Mean images of different writers should differ more than two
+        // draws of the same writer.
+        let mean_img = |d: &Dataset| -> Vec<f64> {
+            let mut m = vec![0f64; d.feature_dim];
+            for i in 0..d.len() {
+                for (acc, &x) in m.iter_mut().zip(d.sample(i).0) {
+                    *acc += x as f64 / d.len() as f64;
+                }
+            }
+            m
+        };
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f64>().sqrt()
+        };
+        let m0 = mean_img(&locals[0]);
+        let m1 = mean_img(&locals[1]);
+        // Same writer, different sample halves:
+        let d0a = mean_img(&locals[0].subset(&(0..200).collect::<Vec<_>>()));
+        let d0b = mean_img(&locals[0].subset(&(200..400).collect::<Vec<_>>()));
+        let within = dist(&d0a, &d0b);
+        let between = dist(&m0, &m1);
+        assert!(
+            between > within,
+            "between-writer distance {between:.3} should exceed within-writer {within:.3}"
+        );
+    }
+
+    #[test]
+    fn heterogeneity_zero_is_neutral() {
+        let spec = femnist_like();
+        let s = WriterStyle::for_writer(3, 0.0, spec.family_seed);
+        assert_eq!(s.dx, 0.0);
+        assert_eq!(s.dy, 0.0);
+        assert_eq!(s.gain, 1.0);
+        assert_eq!(s.bias, 0.0);
+    }
+
+    #[test]
+    fn pixel_range_is_sane() {
+        let spec = cifar10_like();
+        let d = generate(&spec, 50, 9);
+        let maxabs = d.features.iter().fold(0f32, |a, &x| a.max(x.abs()));
+        assert!(maxabs < 12.0, "pixel magnitudes exploded: {maxabs}");
+        // Not degenerate either.
+        let var: f64 = {
+            let mean: f64 =
+                d.features.iter().map(|&x| x as f64).sum::<f64>() / d.features.len() as f64;
+            d.features.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>()
+                / d.features.len() as f64
+        };
+        assert!(var > 0.05, "pixels nearly constant: var={var}");
+    }
+}

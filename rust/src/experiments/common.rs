@@ -1,0 +1,237 @@
+//! Shared experiment machinery: dataset federations per paper dataset,
+//! config presets (Supp. Table 6 scaled per `Scale`), run loops, and
+//! result formatting.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::{Optimizer, RunConfig, Scale, Sharing};
+use crate::coordinator::{Federation, RoundReport};
+use crate::data::{partition, synth_text, synth_vision, Dataset};
+use crate::runtime::Engine;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Context handed to every experiment.
+pub struct ExpCtx<'a> {
+    pub engine: &'a Engine,
+    pub scale: Scale,
+    pub seed: u64,
+    pub results_dir: PathBuf,
+    /// Optional overrides from the CLI.
+    pub rounds: Option<usize>,
+    pub repeats: Option<usize>,
+}
+
+impl<'a> ExpCtx<'a> {
+    pub fn rounds_for(&self, paper_rounds: usize) -> usize {
+        self.rounds.unwrap_or_else(|| self.scale.rounds(paper_rounds))
+    }
+
+    pub fn repeats_or(&self, default: usize) -> usize {
+        self.repeats.unwrap_or(default)
+    }
+}
+
+/// The paper's vision datasets (synthetic stand-ins; DESIGN.md §3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VisionKind {
+    Cifar10,
+    Cifar100,
+    Cinic10,
+    Mnist,
+    Femnist,
+}
+
+impl VisionKind {
+    pub fn spec(&self) -> synth_vision::VisionSpec {
+        match self {
+            VisionKind::Cifar10 => synth_vision::cifar10_like(),
+            VisionKind::Cifar100 => synth_vision::cifar100_like(),
+            VisionKind::Cinic10 => synth_vision::cinic10_like(),
+            VisionKind::Mnist => synth_vision::mnist_like(),
+            VisionKind::Femnist => synth_vision::femnist_like(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            VisionKind::Cifar10 => "CIFAR-10*",
+            VisionKind::Cifar100 => "CIFAR-100*",
+            VisionKind::Cinic10 => "CINIC-10*",
+            VisionKind::Mnist => "MNIST*",
+            VisionKind::Femnist => "FEMNIST*",
+        }
+    }
+
+    /// Paper target rounds T (Table 2 / Supp. C.4).
+    pub fn paper_rounds(&self) -> usize {
+        match self {
+            VisionKind::Cifar10 => 200,
+            VisionKind::Cifar100 => 400,
+            VisionKind::Cinic10 => 300,
+            VisionKind::Mnist | VisionKind::Femnist => 100,
+        }
+    }
+}
+
+/// Build a partitioned vision federation: (per-client datasets, test set).
+pub fn vision_federation(
+    kind: VisionKind,
+    non_iid: bool,
+    scale: Scale,
+    seed: u64,
+) -> (Vec<Dataset>, Dataset) {
+    let spec = kind.spec();
+    let (clients, per_client, test_n) = scale.vision_population();
+    let n = clients * per_client;
+    let data = synth_vision::generate(&spec, n, seed);
+    let test = synth_vision::generate(&spec, test_n, seed ^ 0x7E57_0001);
+    let mut rng = Rng::new(seed ^ 0x9A57);
+    let part = if non_iid {
+        // Dirichlet(0.5), the paper's non-IID setting (He et al. 2020b).
+        partition::dirichlet(&data.labels, spec.classes, clients, 0.5, &mut rng)
+    } else {
+        partition::iid(data.len(), clients, &mut rng)
+    };
+    let locals = part.clients.iter().map(|idx| data.subset(idx)).collect();
+    (locals, test)
+}
+
+/// Build a text federation (Shakespeare*): per-role datasets + test set.
+pub fn text_federation(non_iid: bool, scale: Scale, seed: u64) -> (Vec<Dataset>, Dataset) {
+    let spec = synth_text::shakespeare_like();
+    let (clients, per_client, test_n) = match scale {
+        Scale::Tiny => (8, 48, 256),
+        Scale::Small => (16, 96, 256),
+        Scale::Paper => (100, 500, 2000),
+    };
+    let h = if non_iid { 0.6 } else { 0.0 };
+    synth_text::generate_federation(&spec, clients, per_client, h, test_n, seed)
+}
+
+/// Config preset mirroring Supp. Table 6 at the given scale.
+pub fn preset(ctx: &ExpCtx, artifact: &str, paper_rounds: usize, non_iid: bool) -> RunConfig {
+    RunConfig {
+        artifact: artifact.to_string(),
+        sample_frac: ctx.scale.sample_frac(),
+        rounds: ctx.rounds_for(paper_rounds),
+        local_epochs: if non_iid {
+            ctx.scale.local_epochs().div_ceil(2).max(1)
+        } else {
+            ctx.scale.local_epochs()
+        },
+        lr: 0.1,
+        lr_decay: 0.992,
+        optimizer: Optimizer::FedAvg,
+        quantize_upload: false,
+        sharing: Sharing::Full,
+        eval_every: 1,
+        seed: ctx.seed,
+    }
+}
+
+/// Outcome of one federated run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub artifact: String,
+    pub final_acc: f64,
+    pub best_acc: f64,
+    pub reports: Vec<RoundReport>,
+    pub param_count: usize,
+    pub total_gbytes: f64,
+    pub total_energy_mj: f64,
+}
+
+impl RunResult {
+    /// First round index whose test accuracy reaches `target`, with the
+    /// cumulative GB spent by then.
+    pub fn rounds_to_acc(&self, target: f64) -> Option<(usize, f64)> {
+        self.reports
+            .iter()
+            .find(|r| r.test_acc.map(|a| a >= target).unwrap_or(false))
+            .map(|r| (r.round + 1, r.cum_gbytes))
+    }
+
+    pub fn curve(&self) -> Vec<(f64, f64)> {
+        self.reports
+            .iter()
+            .filter_map(|r| r.test_acc.map(|a| (r.cum_gbytes, a)))
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifact", Json::Str(self.artifact.clone())),
+            ("final_acc", Json::Num(self.final_acc)),
+            ("best_acc", Json::Num(self.best_acc)),
+            ("param_count", Json::Num(self.param_count as f64)),
+            ("total_gbytes", Json::Num(self.total_gbytes)),
+            ("total_energy_mj", Json::Num(self.total_energy_mj)),
+            (
+                "curve",
+                Json::Arr(
+                    self.curve()
+                        .into_iter()
+                        .map(|(g, a)| Json::arr_f64(&[g, a]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Run one federated training to completion.
+pub fn run_federation(
+    ctx: &ExpCtx,
+    cfg: RunConfig,
+    locals: Vec<Dataset>,
+    test: Dataset,
+) -> Result<RunResult> {
+    let rounds = cfg.rounds;
+    let artifact = cfg.artifact.clone();
+    let mut fed = Federation::new(ctx.engine, cfg, locals, test)?;
+    fed.run(rounds)?;
+    let final_acc = fed.evaluate_global()?.accuracy();
+    let best_acc = fed
+        .reports
+        .iter()
+        .filter_map(|r| r.test_acc)
+        .fold(final_acc, f64::max);
+    Ok(RunResult {
+        param_count: fed.meta().param_count,
+        total_gbytes: fed.comm.total_gbytes(),
+        total_energy_mj: fed.comm.total_energy_mj(),
+        artifact,
+        final_acc,
+        best_acc,
+        reports: fed.reports.clone(),
+    })
+}
+
+/// Print a formatted row: label followed by columns.
+pub fn print_row(label: &str, cols: &[String]) {
+    println!("  {:<28} {}", label, cols.join("  "));
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:>6.2}%", x * 100.0)
+}
+
+/// Mean ± 95% CI formatting for repeated runs.
+pub fn ci_string(xs: &[f64]) -> String {
+    format!(
+        "{:.2} ± {:.2}",
+        crate::util::stats::mean(xs) * 100.0,
+        crate::util::stats::ci95_half_width(xs) * 100.0
+    )
+}
+
+/// Header banner for an experiment.
+pub fn banner(id: &str, paper: &str, what: &str, scale: Scale) {
+    println!("================================================================");
+    println!("{id} — {paper}: {what}");
+    println!("scale = {scale:?} (see DESIGN.md §3 for scaling substitutions)");
+    println!("================================================================");
+}

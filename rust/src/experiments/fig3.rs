@@ -1,0 +1,132 @@
+//! Figure 3: (a–f) accuracy vs cumulative communication [GB] for
+//! VggMini_original vs VggMini_FedPara on three datasets × {IID, non-IID};
+//! (g) communication and energy to reach a target accuracy.
+//!
+//! The reproduction target: FedPara reaches comparable accuracy at a small
+//! fraction of the transferred bytes (paper: 2.8–10.1× less).
+
+use anyhow::Result;
+
+use super::common::{
+    banner, preset, run_federation, vision_federation, ExpCtx, RunResult, VisionKind,
+};
+use crate::util::json::Json;
+
+/// FedPara artifact per dataset, matching the paper's per-dataset model
+/// sizes (10.1% / 29.4% / 21.8% of original for C10 / C100 / CINIC).
+fn fedpara_artifact(kind: VisionKind) -> &'static str {
+    match kind {
+        VisionKind::Cifar10 => "vgg10_fedpara_g01",
+        VisionKind::Cifar100 => "vgg100_fedpara_g05",
+        VisionKind::Cinic10 => "vgg10_fedpara_g03",
+        _ => "vgg10_fedpara_g01",
+    }
+}
+
+fn orig_artifact(kind: VisionKind) -> &'static str {
+    match kind {
+        VisionKind::Cifar100 => "vgg100_orig",
+        _ => "vgg10_orig",
+    }
+}
+
+pub fn panels(ctx: &ExpCtx) -> Result<Vec<(String, RunResult, RunResult)>> {
+    let mut out = Vec::new();
+    for kind in [VisionKind::Cifar10, VisionKind::Cifar100, VisionKind::Cinic10] {
+        for non_iid in [false, true] {
+            let (locals, test) = vision_federation(kind, non_iid, ctx.scale, ctx.seed);
+            let cfg_o = preset(ctx, orig_artifact(kind), kind.paper_rounds(), non_iid);
+            let cfg_f = preset(ctx, fedpara_artifact(kind), kind.paper_rounds(), non_iid);
+            let res_o = run_federation(ctx, cfg_o, locals.clone(), test.clone())?;
+            let res_f = run_federation(ctx, cfg_f, locals, test)?;
+            let label = format!(
+                "{} {}",
+                kind.name(),
+                if non_iid { "non-IID" } else { "IID" }
+            );
+            crate::log_info!(
+                "fig3 {label}: orig {:.2}% @ {:.4} GB | fedpara {:.2}% @ {:.4} GB",
+                res_o.final_acc * 100.0,
+                res_o.total_gbytes,
+                res_f.final_acc * 100.0,
+                res_f.total_gbytes
+            );
+            out.push((label, res_o, res_f));
+        }
+    }
+    Ok(out)
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<Json> {
+    banner("fig3", "Figure 3a-f", "accuracy vs communication cost", ctx.scale);
+    let panels = panels(ctx)?;
+    let mut doc = Vec::new();
+    for (label, o, f) in &panels {
+        println!("\n[{label}] (GB, acc%) series:");
+        let fmt = |r: &RunResult| {
+            r.curve()
+                .iter()
+                .map(|(g, a)| format!("({g:.4},{:.1})", a * 100.0))
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
+        println!("  original: {}", fmt(o));
+        println!("  fedpara : {}", fmt(f));
+        doc.push(Json::obj(vec![
+            ("panel", Json::Str(label.clone())),
+            ("original", o.to_json()),
+            ("fedpara", f.to_json()),
+        ]));
+    }
+    run_g_inner(&panels)?;
+    Ok(Json::Arr(doc))
+}
+
+/// Figure 3g rows from already-computed panels.
+fn run_g_inner(panels: &[(String, RunResult, RunResult)]) -> Result<Json> {
+    println!("\n[Figure 3g] GB / energy to reach target accuracy");
+    println!(
+        "  {:<22} {:>8} {:>11} {:>11} {:>11} {:>11} {:>7}",
+        "panel", "target", "orig GB", "fp GB", "orig MJ", "fp MJ", "ratio"
+    );
+    let mut rows = Vec::new();
+    for (label, o, f) in panels {
+        // Target accuracy: 95% of the *lower* final accuracy, so both runs
+        // plausibly reach it (paper picks per-dataset absolute targets).
+        let target = 0.95 * o.final_acc.min(f.final_acc);
+        let (og, fg) = (o.rounds_to_acc(target), f.rounds_to_acc(target));
+        if let (Some((_, og)), Some((_, fg))) = (og, fg) {
+            let ratio = og / fg.max(1e-12);
+            let om = og * 1e9 * crate::coordinator::comm::ENERGY_J_PER_BYTE / 1e6;
+            let fm = fg * 1e9 * crate::coordinator::comm::ENERGY_J_PER_BYTE / 1e6;
+            println!(
+                "  {:<22} {:>7.1}% {:>10.4} {:>10.4} {:>11.4} {:>11.4} {:>6.1}x",
+                label,
+                target * 100.0,
+                og,
+                fg,
+                om,
+                fm,
+                ratio
+            );
+            rows.push(Json::obj(vec![
+                ("panel", Json::Str(label.clone())),
+                ("target_acc", Json::Num(target)),
+                ("orig_gb", Json::Num(og)),
+                ("fedpara_gb", Json::Num(fg)),
+                ("ratio", Json::Num(ratio)),
+            ]));
+        } else {
+            println!("  {label:<22} target not reached by both runs at this scale");
+        }
+    }
+    println!("  (paper: 2.8x – 10.1x fewer GB/MJ for FedPara)");
+    Ok(Json::Arr(rows))
+}
+
+/// Standalone fig3g entry (runs the panels itself).
+pub fn run_g(ctx: &ExpCtx) -> Result<Json> {
+    banner("fig3g", "Figure 3g", "GB and energy to target accuracy", ctx.scale);
+    let panels = panels(ctx)?;
+    run_g_inner(&panels)
+}

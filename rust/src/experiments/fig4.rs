@@ -1,0 +1,77 @@
+//! Figure 4: test accuracy vs parameter ratio — the γ sweep. The paper
+//! shows accuracy mostly increasing with γ, crossing the original model's
+//! accuracy at moderate ratios (regularization effect).
+
+use anyhow::Result;
+
+use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use crate::util::json::Json;
+
+pub fn run(ctx: &ExpCtx) -> Result<Json> {
+    banner("fig4", "Figure 4", "accuracy vs parameter ratio (γ sweep)", ctx.scale);
+    let mut doc = Vec::new();
+    // CIFAR-10*: 5-point sweep; CIFAR-100*: 3 points (artifact table).
+    let sweeps: [(VisionKind, &str, Vec<&str>); 2] = [
+        (
+            VisionKind::Cifar10,
+            "vgg10_orig",
+            vec![
+                "vgg10_fedpara_g01",
+                "vgg10_fedpara_g03",
+                "vgg10_fedpara_g05",
+                "vgg10_fedpara_g07",
+                "vgg10_fedpara_g09",
+            ],
+        ),
+        (
+            VisionKind::Cifar100,
+            "vgg100_orig",
+            vec!["vgg100_fedpara_g01", "vgg100_fedpara_g05", "vgg100_fedpara_g09"],
+        ),
+    ];
+    for (kind, orig_name, sweep) in sweeps {
+        let non_iid = false;
+        let (locals, test) = vision_federation(kind, non_iid, ctx.scale, ctx.seed);
+        let orig = run_federation(
+            ctx,
+            preset(ctx, orig_name, kind.paper_rounds(), non_iid),
+            locals.clone(),
+            test.clone(),
+        )?;
+        println!(
+            "\n[{}] original: {:.2}% ({} params — the dotted line)",
+            kind.name(),
+            orig.final_acc * 100.0,
+            orig.param_count
+        );
+        println!("  {:>6} {:>12} {:>9}", "gamma", "param ratio", "acc");
+        let mut series = Vec::new();
+        for artifact in sweep {
+            let res = run_federation(
+                ctx,
+                preset(ctx, artifact, kind.paper_rounds(), non_iid),
+                locals.clone(),
+                test.clone(),
+            )?;
+            let gamma = ctx.engine.manifest.get(artifact).map(|m| m.gamma).unwrap_or(0.0);
+            let ratio = res.param_count as f64 / orig.param_count as f64;
+            println!(
+                "  {gamma:>6.1} {:>11.1}% {:>8.2}%{}",
+                ratio * 100.0,
+                res.final_acc * 100.0,
+                if res.final_acc > orig.final_acc { "  (beats original)" } else { "" }
+            );
+            series.push(Json::obj(vec![
+                ("gamma", Json::Num(gamma)),
+                ("param_ratio", Json::Num(ratio)),
+                ("acc", Json::Num(res.final_acc)),
+            ]));
+        }
+        doc.push(Json::obj(vec![
+            ("dataset", Json::Str(kind.name().into())),
+            ("orig_acc", Json::Num(orig.final_acc)),
+            ("series", Json::Arr(series)),
+        ]));
+    }
+    Ok(Json::Arr(doc))
+}

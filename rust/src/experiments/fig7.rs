@@ -1,0 +1,51 @@
+//! Supp. Figure 7: accuracy vs communication for three γ values of
+//! VggMini_FedPara against the original, across datasets/settings —
+//! larger γ costs more bytes per round but reaches higher accuracy.
+
+use anyhow::Result;
+
+use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use crate::util::json::Json;
+
+pub fn run(ctx: &ExpCtx) -> Result<Json> {
+    banner("fig7", "Supp. Figure 7", "γ ∈ {low, mid, high} comm curves", ctx.scale);
+    let mut doc = Vec::new();
+    for (kind, orig, sweep) in [
+        (
+            VisionKind::Cifar10,
+            "vgg10_orig",
+            ["vgg10_fedpara_g01", "vgg10_fedpara_g05", "vgg10_fedpara_g09"],
+        ),
+        (
+            VisionKind::Cifar100,
+            "vgg100_orig",
+            ["vgg100_fedpara_g01", "vgg100_fedpara_g05", "vgg100_fedpara_g09"],
+        ),
+    ] {
+        for non_iid in [false, true] {
+            let (locals, test) = vision_federation(kind, non_iid, ctx.scale, ctx.seed);
+            let label = format!("{} {}", kind.name(), if non_iid { "non-IID" } else { "IID" });
+            println!("\n[{label}]");
+            let mut panel = Vec::new();
+            for artifact in std::iter::once(orig).chain(sweep) {
+                let cfg = preset(ctx, artifact, kind.paper_rounds(), non_iid);
+                let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+                println!(
+                    "  {:<22} final {:>6.2}%  total {:>8.4} GB",
+                    artifact,
+                    res.final_acc * 100.0,
+                    res.total_gbytes
+                );
+                panel.push(Json::obj(vec![
+                    ("artifact", Json::Str(artifact.into())),
+                    ("result", res.to_json()),
+                ]));
+            }
+            doc.push(Json::obj(vec![
+                ("panel", Json::Str(label)),
+                ("series", Json::Arr(panel)),
+            ]));
+        }
+    }
+    Ok(Json::Arr(doc))
+}

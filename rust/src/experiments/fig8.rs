@@ -1,0 +1,60 @@
+//! Supp. Figure 8: ResNet (ResMini) — (a) accuracy vs communication for
+//! three γ values vs original; (b) GB to reach a shared target accuracy.
+
+use anyhow::Result;
+
+use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use crate::util::json::Json;
+
+pub fn run(ctx: &ExpCtx) -> Result<Json> {
+    banner("fig8", "Supp. Figure 8", "ResMini comm curves + GB-to-target", ctx.scale);
+    let kind = VisionKind::Cifar10;
+    let (locals, test) = vision_federation(kind, false, ctx.scale, ctx.seed);
+    let artifacts = [
+        ("ResMini_orig", "res10_orig"),
+        ("ResMini_FedPara γ=0.1", "res10_fedpara_g01"),
+        ("ResMini_FedPara γ=0.5", "res10_fedpara_g05"),
+        ("ResMini_FedPara γ=0.9", "res10_fedpara_g09"),
+    ];
+    let mut results = Vec::new();
+    println!("(a) final accuracy vs total GB:");
+    for (label, artifact) in artifacts {
+        let cfg = preset(ctx, artifact, 200, false);
+        let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+        println!(
+            "  {:<24} {:>6.2}%  {:>8.4} GB  ({} params)",
+            label,
+            res.final_acc * 100.0,
+            res.total_gbytes,
+            res.param_count
+        );
+        results.push((label, res));
+    }
+
+    // (b) GB to shared target (90% of the worst final accuracy).
+    let target = 0.9
+        * results
+            .iter()
+            .map(|(_, r)| r.final_acc)
+            .fold(f64::INFINITY, f64::min);
+    println!("\n(b) GB to reach {:.1}% accuracy:", target * 100.0);
+    let mut doc = Vec::new();
+    let base_gb = results[0].1.rounds_to_acc(target).map(|(_, g)| g);
+    for (label, res) in &results {
+        match res.rounds_to_acc(target) {
+            Some((r, gb)) => {
+                let ratio = base_gb.map(|b| format!(" ({:.2}x less)", b / gb)).unwrap_or_default();
+                println!("  {label:<24} {gb:>8.4} GB in {r} rounds{ratio}");
+                doc.push(Json::obj(vec![
+                    ("model", Json::Str(label.to_string())),
+                    ("gb_to_target", Json::Num(gb)),
+                    ("rounds", Json::Num(r as f64)),
+                    ("final_acc", Json::Num(res.final_acc)),
+                ]));
+            }
+            None => println!("  {label:<24} target not reached"),
+        }
+    }
+    println!("\n(paper: ResNet18_FedPara needs 1.17–5.1x fewer GB than original)");
+    Ok(Json::Arr(doc))
+}

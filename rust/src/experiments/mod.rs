@@ -1,0 +1,153 @@
+//! Experiment registry: one module per table/figure of the paper.
+//!
+//! Every experiment is `fn(&ExpCtx) -> Result<Json>`: it prints the paper's
+//! rows/series to stdout and returns a JSON result document that the CLI
+//! writes to `results/<id>.json`. DESIGN.md §5 is the index; EXPERIMENTS.md
+//! records paper-vs-measured.
+
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+pub mod table10;
+pub mod table11;
+pub mod table12;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table7;
+pub mod table9;
+
+pub use common::ExpCtx;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+type ExpFn = fn(&ExpCtx) -> Result<Json>;
+
+/// (id, paper artifact, description, function).
+pub fn registry() -> Vec<(&'static str, &'static str, &'static str, ExpFn)> {
+    vec![
+        (
+            "table1",
+            "Table 1",
+            "parameter count & maximal rank per parameterization (analytic)",
+            table1::run,
+        ),
+        (
+            "table2",
+            "Table 2",
+            "low-rank vs FedPara accuracy at equal parameters (CNN + LSTM)",
+            table2::run,
+        ),
+        (
+            "fig3",
+            "Figure 3a-f",
+            "accuracy vs communication cost, FedPara vs original",
+            fig3::run,
+        ),
+        (
+            "fig3g",
+            "Figure 3g",
+            "GB and energy to reach target accuracy",
+            fig3::run_g,
+        ),
+        (
+            "fig4",
+            "Figure 4",
+            "accuracy vs parameter ratio (gamma sweep)",
+            fig4::run,
+        ),
+        (
+            "table3",
+            "Table 3",
+            "FedPara combined with FedAvg/FedProx/SCAFFOLD/FedDyn/FedAdam",
+            table3::run,
+        ),
+        (
+            "fig5",
+            "Figure 5",
+            "personalization: local-only vs FedAvg vs FedPer vs pFedPara",
+            fig5::run,
+        ),
+        (
+            "fig6",
+            "Figure 6 (supp)",
+            "rank histogram of the composed weight (1000 trials)",
+            fig6::run,
+        ),
+        (
+            "table4",
+            "Table 4 (supp)",
+            "ablation: Tanh nonlinearity and Jacobian correction",
+            table4::run,
+        ),
+        (
+            "table5",
+            "Table 5 (supp)",
+            "gamma -> parameter count for real VGG16 dims (analytic)",
+            table5::run,
+        ),
+        (
+            "table7",
+            "Tables 7+8 (supp)",
+            "per-round and total wall-clock at 2/10/50 Mbps",
+            table7::run,
+        ),
+        (
+            "table9",
+            "Table 9 (supp)",
+            "short vs long training rounds across gamma",
+            table9::run,
+        ),
+        (
+            "table10",
+            "Table 10 (supp)",
+            "Pufferfish hybrid baseline vs FedPara",
+            table10::run,
+        ),
+        (
+            "table11",
+            "Table 11 (supp)",
+            "LSTM original vs low-rank vs FedPara",
+            table11::run,
+        ),
+        (
+            "table12",
+            "Table 12 (supp)",
+            "FedPAQ quantization vs FedPara and their combination",
+            table12::run,
+        ),
+        (
+            "fig7",
+            "Figure 7 (supp)",
+            "accuracy vs communication across three gamma values",
+            fig7::run,
+        ),
+        (
+            "fig8",
+            "Figure 8 (supp)",
+            "ResNet: accuracy vs communication + GB to target",
+            fig8::run,
+        ),
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<Json> {
+    for (eid, _, _, f) in registry() {
+        if eid == id {
+            return f(ctx);
+        }
+    }
+    anyhow::bail!(
+        "unknown experiment '{id}'; available: {}",
+        registry().iter().map(|(i, _, _, _)| *i).collect::<Vec<_>>().join(", ")
+    )
+}

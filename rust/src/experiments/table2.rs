@@ -1,0 +1,94 @@
+//! Table 2: low-rank parameterization vs FedPara at (near-)equal parameter
+//! counts. (a) CNN on CIFAR-10*/CIFAR-100*/CINIC-10* under IID and non-IID;
+//! (b) LSTM on Shakespeare*. The reproduction target is the *ordering*:
+//! FedPara > low-rank everywhere at equal parameter budget.
+
+use anyhow::Result;
+
+use super::common::{
+    banner, preset, print_row, run_federation, text_federation, vision_federation, ExpCtx,
+    VisionKind,
+};
+use crate::util::json::Json;
+
+pub fn run(ctx: &ExpCtx) -> Result<Json> {
+    banner("table2", "Table 2", "low-rank vs FedPara at equal params", ctx.scale);
+    let mut results = Vec::new();
+
+    // (a) CNN.
+    println!("(a) CNN (VggMini):");
+    println!(
+        "  {:<28} {:>7}  {:>7}  {:>7}  {:>7}  {:>7}  {:>7}",
+        "", "C10 IID", "nonIID", "C100 IID", "nonIID", "CIN IID", "nonIID"
+    );
+    let datasets = [VisionKind::Cifar10, VisionKind::Cifar100, VisionKind::Cinic10];
+    let mut low_cols = Vec::new();
+    let mut fp_cols = Vec::new();
+    for kind in datasets {
+        let classes_tag = if kind == VisionKind::Cifar100 { "vgg100" } else { "vgg10" };
+        for non_iid in [false, true] {
+            let (locals, test) = vision_federation(kind, non_iid, ctx.scale, ctx.seed);
+            for (which, artifact) in [
+                ("low", format!("{classes_tag}_low_g01")),
+                ("fedpara", format!("{classes_tag}_fedpara_g01")),
+            ] {
+                let cfg = preset(ctx, &artifact, kind.paper_rounds(), non_iid);
+                let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+                crate::log_info!(
+                    "table2: {} {} non_iid={} -> {:.2}%",
+                    kind.name(),
+                    which,
+                    non_iid,
+                    res.final_acc * 100.0
+                );
+                if which == "low" {
+                    low_cols.push(res.final_acc);
+                } else {
+                    fp_cols.push(res.final_acc);
+                }
+                results.push((
+                    format!("{}_{}_{}", kind.name(), which, if non_iid { "noniid" } else { "iid" }),
+                    res,
+                ));
+            }
+        }
+    }
+    print_row(
+        "VggMini_low",
+        &low_cols.iter().map(|a| format!("{:>6.2}%", a * 100.0)).collect::<Vec<_>>(),
+    );
+    print_row(
+        "VggMini_FedPara (ours)",
+        &fp_cols.iter().map(|a| format!("{:>6.2}%", a * 100.0)).collect::<Vec<_>>(),
+    );
+    let cnn_wins = fp_cols.iter().zip(low_cols.iter()).filter(|(f, l)| f > l).count();
+    println!("  FedPara wins {cnn_wins}/{} CNN settings (paper: 6/6)", fp_cols.len());
+
+    // (b) LSTM.
+    println!("\n(b) RNN (CharLSTM) on Shakespeare*:");
+    let mut lstm_rows = Vec::new();
+    for non_iid in [false, true] {
+        let (locals, test) = text_federation(non_iid, ctx.scale, ctx.seed);
+        for artifact in ["lstm_low", "lstm_fedpara"] {
+            let mut cfg = preset(ctx, artifact, 500, non_iid);
+            cfg.lr = 1.0; // Supp. Table 6: LSTM lr = 1.0, E = 1.
+            cfg.local_epochs = 1;
+            let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+            lstm_rows.push((artifact, non_iid, res.final_acc));
+            results.push((format!("{artifact}_{}", if non_iid { "noniid" } else { "iid" }), res));
+        }
+    }
+    println!("  {:<28} {:>8} {:>8}", "", "IID", "non-IID");
+    for name in ["lstm_low", "lstm_fedpara"] {
+        let iid = lstm_rows.iter().find(|(a, n, _)| *a == name && !n).unwrap().2;
+        let non = lstm_rows.iter().find(|(a, n, _)| *a == name && *n).unwrap().2;
+        print_row(name, &[format!("{:>7.2}%", iid * 100.0), format!("{:>7.2}%", non * 100.0)]);
+    }
+
+    Ok(Json::Obj(
+        results
+            .into_iter()
+            .map(|(k, v)| (k, v.to_json()))
+            .collect(),
+    ))
+}

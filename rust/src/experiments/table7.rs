@@ -1,0 +1,119 @@
+//! Supp. Tables 7 + 8: wall-clock simulation.
+//!
+//! Table 7 — per-round time t = t_comp + t_comm at 2/10/50 Mbps, where
+//! t_comp is *measured* on this machine (local epochs through the AOT
+//! artifact) and t_comm = 2·model_bytes/speed (homogeneous-link model the
+//! paper adopts from the communication literature).
+//!
+//! Table 8 — total training time to reach a shared target accuracy:
+//! (rounds to target) × per-round time.
+
+use anyhow::Result;
+
+use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use crate::coordinator::Network;
+use crate::util::json::Json;
+
+pub fn run(ctx: &ExpCtx) -> Result<Json> {
+    banner("table7", "Supp. Tables 7+8", "wall-clock at 2/10/50 Mbps", ctx.scale);
+    let kind = VisionKind::Cifar10;
+    let (locals, test) = vision_federation(kind, false, ctx.scale, ctx.seed);
+
+    // Train both models, measuring t_comp per round and rounds-to-target.
+    let mut runs = Vec::new();
+    for (label, artifact) in [
+        ("VggMini_orig", "vgg10_orig"),
+        ("VggMini_FedPara (γ=0.1)", "vgg10_fedpara_g01"),
+    ] {
+        let cfg = preset(ctx, artifact, 200, false);
+        let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+        let mean_t_comp = res.reports.iter().map(|r| r.t_comp_secs).sum::<f64>()
+            / res.reports.len() as f64
+            / res.reports[0].participants.max(1) as f64; // Per-client.
+        runs.push((label, res, mean_t_comp));
+    }
+    let target = 0.95 * runs.iter().map(|(_, r, _)| r.final_acc).fold(f64::INFINITY, f64::min);
+
+    println!("\n[Table 7] per-round time (per client):");
+    println!(
+        "{:<10} {:<26} {:>10} {:>10} {:>10} {:>8}",
+        "speed", "model", "t_comp", "t_comm", "t_total", "speedup"
+    );
+    let mut t7 = Vec::new();
+    for mbps in [2.0, 10.0, 50.0] {
+        let net = Network::new(mbps);
+        let mut totals = Vec::new();
+        for (label, res, t_comp) in &runs {
+            let model_bytes = (res.param_count * 4) as u64;
+            let t_comm = net.round_comm_secs(model_bytes);
+            let total = t_comp + t_comm;
+            totals.push(total);
+            let speedup = if totals.len() == 2 {
+                format!("(x{:.2})", totals[0] / total)
+            } else {
+                String::new()
+            };
+            println!(
+                "{:<10} {:<26} {:>9.3}s {:>9.3}s {:>9.3}s {:>8}",
+                format!("{mbps} Mbps"),
+                label,
+                t_comp,
+                t_comm,
+                total,
+                speedup
+            );
+            t7.push(Json::obj(vec![
+                ("mbps", Json::Num(mbps)),
+                ("model", Json::Str(label.to_string())),
+                ("t_comp", Json::Num(*t_comp)),
+                ("t_comm", Json::Num(t_comm)),
+            ]));
+        }
+    }
+
+    println!("\n[Table 8] total training time to reach {:.1}% accuracy:", target * 100.0);
+    println!("{:<10} {:<26} {:>10} {:>12} {:>8}", "speed", "model", "rounds", "train time", "speedup");
+    let mut t8 = Vec::new();
+    for mbps in [2.0, 10.0, 50.0] {
+        let net = Network::new(mbps);
+        let mut times = Vec::new();
+        for (label, res, t_comp) in &runs {
+            let rounds = res.rounds_to_acc(target).map(|(r, _)| r);
+            let model_bytes = (res.param_count * 4) as u64;
+            let per_round = t_comp + net.round_comm_secs(model_bytes);
+            match rounds {
+                Some(r) => {
+                    let total_min = r as f64 * per_round / 60.0;
+                    times.push(total_min);
+                    let speedup = if times.len() == 2 {
+                        format!("(x{:.2})", times[0] / total_min)
+                    } else {
+                        String::new()
+                    };
+                    println!(
+                        "{:<10} {:<26} {:>10} {:>10.2}m {:>8}",
+                        format!("{mbps} Mbps"),
+                        label,
+                        r,
+                        total_min,
+                        speedup
+                    );
+                    t8.push(Json::obj(vec![
+                        ("mbps", Json::Num(mbps)),
+                        ("model", Json::Str(label.to_string())),
+                        ("rounds", Json::Num(r as f64)),
+                        ("minutes", Json::Num(total_min)),
+                    ]));
+                }
+                None => println!(
+                    "{:<10} {:<26} {:>10}",
+                    format!("{mbps} Mbps"),
+                    label,
+                    "target not reached"
+                ),
+            }
+        }
+    }
+    println!("\n(paper: FedPara 4.8–9.5x faster per round, 4.7–9.3x faster to target)");
+    Ok(Json::obj(vec![("table7", Json::Arr(t7)), ("table8", Json::Arr(t8))]))
+}

@@ -1,0 +1,29 @@
+//! # FedPara — rust + JAX + Pallas reproduction
+//!
+//! Reproduction of *"FedPara: Low-rank Hadamard Product for
+//! Communication-Efficient Federated Learning"* (Hyeon-Woo, Ye-Bin, Oh;
+//! ICLR 2022) as a three-layer system:
+//!
+//! * **L3 (this crate)** — the federated-learning coordinator: round loop,
+//!   client sampling, aggregation strategies (FedAvg / FedProx / SCAFFOLD /
+//!   FedDyn / FedAdam), the FedPara/pFedPara parameter codecs,
+//!   communication/energy/wall-clock accounting, synthetic datasets and
+//!   non-IID partitioners, and the experiment registry regenerating every
+//!   table and figure of the paper.
+//! * **L2** — JAX model + local-training step, AOT-lowered to HLO text by
+//!   `python/compile/aot.py` (build time only; Python never runs on the
+//!   request path).
+//! * **L1** — Pallas kernels for the FedPara weight composition
+//!   `W = (X1·Y1ᵀ) ⊙ (X2·Y2ᵀ)`, validated against a pure-jnp oracle.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod parameterization;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,437 @@
+//! Dense linear algebra substrate.
+//!
+//! Backs the rank-property experiments (Propositions 1–3, Figure 6) and the
+//! parameterization tests: a small f64 row-major matrix type, matmul,
+//! Hadamard and outer products, numerical rank via row echelon with partial
+//! pivoting, and 4th-order tensor mode-unfoldings / mode products for the
+//! Proposition-3 convolution parameterization.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    /// Standard-gaussian random matrix (Figure 6 sampling).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let data = (0..rows * cols).map(|_| rng.gaussian()).collect();
+        Mat { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    /// `A · Bᵀ` — the shape used by the low-rank factorizations X·Yᵀ.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "inner dims for A·Bᵀ");
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a_row = &self.data[i * self.cols..(i + 1) * self.cols];
+            for j in 0..other.rows {
+                let b_row = &other.data[j * other.cols..(j + 1) * other.cols];
+                let mut acc = 0.0;
+                for k in 0..self.cols {
+                    acc += a_row[k] * b_row[k];
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+
+    /// `A · B`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "inner dims for A·B");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * other.cols + j] += a * other.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    /// Element-wise (Hadamard) product — the paper's ⊙.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| a * b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| a + b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x * s).collect(),
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|&x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Numerical rank via Gaussian elimination with **complete pivoting**
+    /// (max over the whole remaining submatrix), which is rank-revealing in
+    /// practice. The step tolerance is relative to the *initial* pivot
+    /// magnitude (like a relative singular-value cutoff).
+    pub fn rank(&self) -> usize {
+        let (m, n) = (self.rows, self.cols);
+        let mut a = self.data.clone();
+        // Track live rows/cols via index maps (cheaper than swapping cols).
+        let mut rows: Vec<usize> = (0..m).collect();
+        let mut cols: Vec<usize> = (0..n).collect();
+        let mut rank = 0;
+        let mut first_pivot = 0.0f64;
+        while rank < m.min(n) {
+            // Find the largest |entry| in the remaining submatrix.
+            let (mut br, mut bc, mut bv) = (rank, rank, 0.0f64);
+            for ri in rank..m {
+                for ci in rank..n {
+                    let v = a[rows[ri] * n + cols[ci]].abs();
+                    if v > bv {
+                        (br, bc, bv) = (ri, ci, v);
+                    }
+                }
+            }
+            if rank == 0 {
+                if bv == 0.0 {
+                    return 0;
+                }
+                first_pivot = bv;
+            }
+            // Relative cutoff: pivot decayed to round-off of the original.
+            let tol = first_pivot * (m.max(n) as f64) * f64::EPSILON * 16.0;
+            if bv <= tol {
+                break;
+            }
+            rows.swap(rank, br);
+            cols.swap(rank, bc);
+            let prow = rows[rank];
+            let pcol = cols[rank];
+            let pv = a[prow * n + pcol];
+            for ri in rank + 1..m {
+                let r = rows[ri];
+                let f = a[r * n + pcol] / pv;
+                if f == 0.0 {
+                    continue;
+                }
+                for ci in rank..n {
+                    let c = cols[ci];
+                    a[r * n + c] -= f * a[prow * n + c];
+                }
+            }
+            rank += 1;
+        }
+        rank
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// 4th-order tensor in index order (k1, k2, k3, k4), row-major strides.
+/// Models a conv kernel laid out (O, I, K1, K2) like the paper's 𝒲.
+#[derive(Clone, Debug)]
+pub struct Tensor4 {
+    pub dims: [usize; 4],
+    pub data: Vec<f64>,
+}
+
+impl Tensor4 {
+    pub fn zeros(dims: [usize; 4]) -> Tensor4 {
+        Tensor4 { dims, data: vec![0.0; dims.iter().product()] }
+    }
+
+    pub fn randn(dims: [usize; 4], rng: &mut Rng) -> Tensor4 {
+        let data = (0..dims.iter().product()).map(|_| rng.gaussian()).collect();
+        Tensor4 { dims, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, i: [usize; 4]) -> usize {
+        let d = self.dims;
+        ((i[0] * d[1] + i[1]) * d[2] + i[2]) * d[3] + i[3]
+    }
+
+    #[inline]
+    pub fn at(&self, i: [usize; 4]) -> f64 {
+        self.data[self.idx(i)]
+    }
+
+    /// Mode-`mode` unfolding T^(mode): rows indexed by dim `mode`, columns
+    /// by the remaining dims in their natural cyclic order (Kolda-Bader
+    /// convention used by Rabanser et al. 2017, which the paper cites).
+    pub fn unfold(&self, mode: usize) -> Mat {
+        assert!(mode < 4);
+        let d = self.dims;
+        let rows = d[mode];
+        let cols: usize = d.iter().product::<usize>() / rows;
+        let mut out = Mat::zeros(rows, cols);
+        // Kolda-Bader: element (i1..i4) maps to column
+        // 1 + sum_{k != mode} (i_k) * prod_{m < k, m != mode} d_m
+        for i0 in 0..d[0] {
+            for i1 in 0..d[1] {
+                for i2 in 0..d[2] {
+                    for i3 in 0..d[3] {
+                        let idx = [i0, i1, i2, i3];
+                        let mut col = 0usize;
+                        let mut stride = 1usize;
+                        for k in 0..4 {
+                            if k == mode {
+                                continue;
+                            }
+                            col += idx[k] * stride;
+                            stride *= d[k];
+                        }
+                        out[(idx[mode], col)] = self.at(idx);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// n-mode product with a matrix along `mode`: (T ×_mode M) where
+    /// `M ∈ R^{new_dim × d[mode]}`.
+    pub fn mode_product(&self, mode: usize, m: &Mat) -> Tensor4 {
+        assert!(mode < 4);
+        assert_eq!(m.cols, self.dims[mode], "mode product inner dim");
+        let mut dims = self.dims;
+        dims[mode] = m.rows;
+        let mut out = Tensor4::zeros(dims);
+        let d = self.dims;
+        for i0 in 0..dims[0] {
+            for i1 in 0..dims[1] {
+                for i2 in 0..dims[2] {
+                    for i3 in 0..dims[3] {
+                        let oi = [i0, i1, i2, i3];
+                        let mut acc = 0.0;
+                        for k in 0..d[mode] {
+                            let mut si = oi;
+                            si[mode] = k;
+                            acc += m.at(oi[mode], k) * self.at(si);
+                        }
+                        let oidx = out.idx(oi);
+                        out.data[oidx] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Element-wise product.
+    pub fn hadamard(&self, other: &Tensor4) -> Tensor4 {
+        assert_eq!(self.dims, other.dims);
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| a * b)
+            .collect();
+        Tensor4 { dims: self.dims, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_t_equals_matmul_transpose() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(4, 3, &mut rng);
+        let b = Mat::randn(5, 3, &mut rng);
+        let direct = a.matmul_t(&b);
+        let via_t = a.matmul(&b.transpose());
+        for (x, y) in direct.data.iter().zip(via_t.data.iter()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rank_of_identity_and_zero() {
+        assert_eq!(Mat::identity(5).rank(), 5);
+        assert_eq!(Mat::zeros(4, 6).rank(), 0);
+    }
+
+    #[test]
+    fn rank_of_outer_product_is_one() {
+        let mut rng = Rng::new(12);
+        let x = Mat::randn(8, 1, &mut rng);
+        let y = Mat::randn(6, 1, &mut rng);
+        let w = x.matmul_t(&y);
+        assert_eq!(w.rank(), 1);
+    }
+
+    #[test]
+    fn rank_of_low_rank_product() {
+        let mut rng = Rng::new(13);
+        for r in 1..5 {
+            let x = Mat::randn(10, r, &mut rng);
+            let y = Mat::randn(12, r, &mut rng);
+            assert_eq!(x.matmul_t(&y).rank(), r, "r={r}");
+        }
+    }
+
+    #[test]
+    fn rank_random_is_full() {
+        let mut rng = Rng::new(14);
+        let m = Mat::randn(9, 7, &mut rng);
+        assert_eq!(m.rank(), 7);
+    }
+
+    #[test]
+    fn rank_detects_duplicated_rows() {
+        let mut m = Mat::identity(4);
+        // Make row 3 = row 0 + row 1.
+        for c in 0..4 {
+            m[(3, c)] = m.at(0, c) + m.at(1, c);
+        }
+        assert_eq!(m.rank(), 3);
+    }
+
+    #[test]
+    fn hadamard_basic() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.hadamard(&b).data, vec![5.0, 12.0, 21.0, 32.0]);
+    }
+
+    #[test]
+    fn unfold_shapes() {
+        let t = Tensor4::zeros([2, 3, 4, 5]);
+        assert_eq!((t.unfold(0).rows, t.unfold(0).cols), (2, 60));
+        assert_eq!((t.unfold(1).rows, t.unfold(1).cols), (3, 40));
+        assert_eq!((t.unfold(2).rows, t.unfold(2).cols), (4, 30));
+        assert_eq!((t.unfold(3).rows, t.unfold(3).cols), (5, 24));
+    }
+
+    #[test]
+    fn unfold_preserves_entries() {
+        let mut rng = Rng::new(15);
+        let t = Tensor4::randn([2, 3, 2, 2], &mut rng);
+        for mode in 0..4 {
+            let u = t.unfold(mode);
+            let sum_t: f64 = t.data.iter().map(|x| x * x).sum();
+            let sum_u: f64 = u.data.iter().map(|x| x * x).sum();
+            assert!((sum_t - sum_u).abs() < 1e-12, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn mode_product_matches_unfold_identity() {
+        // (T ×_1 M)^(1) = M · T^(1)  — the defining property.
+        let mut rng = Rng::new(16);
+        let t = Tensor4::randn([3, 4, 2, 2], &mut rng);
+        let m = Mat::randn(5, 3, &mut rng);
+        let lhs = t.mode_product(0, &m).unfold(0);
+        let rhs = m.matmul(&t.unfold(0));
+        assert_eq!((lhs.rows, lhs.cols), (rhs.rows, rhs.cols));
+        for (a, b) in lhs.data.iter().zip(rhs.data.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn mode_product_mode2() {
+        let mut rng = Rng::new(17);
+        let t = Tensor4::randn([3, 4, 2, 2], &mut rng);
+        let m = Mat::randn(6, 4, &mut rng);
+        let lhs = t.mode_product(1, &m).unfold(1);
+        let rhs = m.matmul(&t.unfold(1));
+        for (a, b) in lhs.data.iter().zip(rhs.data.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn tensor_hadamard() {
+        let mut rng = Rng::new(18);
+        let a = Tensor4::randn([2, 2, 2, 2], &mut rng);
+        let b = Tensor4::randn([2, 2, 2, 2], &mut rng);
+        let h = a.hadamard(&b);
+        for i in 0..16 {
+            assert!((h.data[i] - a.data[i] * b.data[i]).abs() < 1e-15);
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! `fedpara` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   list                      list experiments and artifacts
+//!   exp <id> [--scale s]      regenerate a paper table/figure
+//!   exp all [--scale s]       run every experiment
+//!   run [--artifact a ...]    one ad-hoc federated training run
+//!   help
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use fedpara::config::{Optimizer, RunConfig, Scale, Sharing};
+use fedpara::coordinator::Federation;
+use fedpara::experiments::{self, common, ExpCtx};
+use fedpara::runtime::Engine;
+use fedpara::util::cli::Args;
+
+fn main() {
+    fedpara::util::logging::init_from_env();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn declare_common(args: &mut Args) {
+    args.declare("scale", "experiment scale: tiny | small | paper (default tiny)")
+        .declare("seed", "base RNG seed (default 42)")
+        .declare("rounds", "override number of rounds")
+        .declare("repeats", "override repeat count for CI experiments")
+        .declare("artifacts", "artifacts directory (default ./artifacts)")
+        .declare("results", "results output directory (default ./results)");
+}
+
+fn make_ctx<'a>(engine: &'a Engine, args: &Args) -> Result<ExpCtx<'a>> {
+    let scale = Scale::parse(args.get_or("scale", "tiny")).map_err(|e| anyhow!(e))?;
+    let results_dir = PathBuf::from(args.get_or("results", "results"));
+    std::fs::create_dir_all(&results_dir)?;
+    Ok(ExpCtx {
+        engine,
+        scale,
+        seed: args.get_u64("seed", 42).map_err(|e| anyhow!(e))?,
+        results_dir,
+        rounds: args
+            .get("rounds")
+            .map(|v| v.parse())
+            .transpose()
+            .map_err(|_| anyhow!("--rounds expects an integer"))?,
+        repeats: args
+            .get("repeats")
+            .map(|v| v.parse())
+            .transpose()
+            .map_err(|_| anyhow!("--repeats expects an integer"))?,
+    })
+}
+
+fn engine_from(args: &Args) -> Result<Engine> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Engine::artifacts_dir);
+    Engine::new(&dir)
+}
+
+fn dispatch(mut args: Args) -> Result<()> {
+    declare_common(&mut args);
+    match args.subcommand.as_deref() {
+        Some("list") => {
+            args.validate().map_err(|e| anyhow!(e))?;
+            println!("experiments (fedpara exp <id>):");
+            for (id, paper, what, _) in experiments::registry() {
+                println!("  {id:<10} {paper:<18} {what}");
+            }
+            if let Ok(engine) = engine_from(&args) {
+                println!("\nartifacts ({}):", engine.artifacts_root().display());
+                for (name, meta) in &engine.manifest.artifacts {
+                    println!(
+                        "  {name:<28} {:>9} params  {:<9} γ={:.1}",
+                        meta.param_count, meta.scheme, meta.gamma
+                    );
+                }
+            } else {
+                println!("\n(artifacts not built; run `make artifacts`)");
+            }
+            Ok(())
+        }
+        Some("exp") => {
+            args.validate().map_err(|e| anyhow!(e))?;
+            let id = args
+                .positionals
+                .first()
+                .ok_or_else(|| anyhow!("usage: fedpara exp <id>|all [--scale tiny|small|paper]"))?
+                .clone();
+            let engine = engine_from(&args)?;
+            let ctx = make_ctx(&engine, &args)?;
+            let ids: Vec<String> = if id == "all" {
+                experiments::registry()
+                    .iter()
+                    .map(|(i, _, _, _)| i.to_string())
+                    // fig3g is a sub-view of fig3's runs; skip the duplicate
+                    // training when running the whole suite.
+                    .filter(|i| i != "fig3g")
+                    .collect()
+            } else {
+                vec![id]
+            };
+            for id in ids {
+                let t0 = std::time::Instant::now();
+                let result = experiments::run(&id, &ctx)?;
+                let path = ctx.results_dir.join(format!("{id}.json"));
+                std::fs::write(&path, result.to_string_pretty())?;
+                println!(
+                    "\n[{id}] done in {:.1}s -> {}\n",
+                    t0.elapsed().as_secs_f64(),
+                    path.display()
+                );
+            }
+            Ok(())
+        }
+        Some("run") => {
+            args.declare("artifact", "manifest artifact name (e.g. vgg10_fedpara_g01)")
+                .declare("dataset", "cifar10|cifar100|cinic10|mnist|femnist|shakespeare")
+                .declare("non-iid", "Dirichlet(0.5) non-IID partition")
+                .declare("optimizer", "fedavg|fedprox|scaffold|feddyn|fedadam")
+                .declare("epochs", "local epochs per round")
+                .declare("lr", "initial learning rate")
+                .declare("frac", "client sample fraction per round")
+                .declare("quantize", "fp16 uplink quantization (FedPAQ)")
+                .declare("pfedpara", "share only global segments (pFedPara)");
+            args.validate().map_err(|e| anyhow!(e))?;
+            let engine = engine_from(&args)?;
+            let ctx = make_ctx(&engine, &args)?;
+            let artifact = args.get_or("artifact", "mlp10_orig").to_string();
+            let dataset = args.get_or("dataset", "mnist").to_string();
+            let non_iid = args.flag("non-iid");
+            let (locals, test) = if dataset == "shakespeare" {
+                common::text_federation(non_iid, ctx.scale, ctx.seed)
+            } else {
+                let kind = match dataset.as_str() {
+                    "cifar10" => common::VisionKind::Cifar10,
+                    "cifar100" => common::VisionKind::Cifar100,
+                    "cinic10" => common::VisionKind::Cinic10,
+                    "mnist" => common::VisionKind::Mnist,
+                    "femnist" => common::VisionKind::Femnist,
+                    other => return Err(anyhow!("unknown dataset '{other}'")),
+                };
+                common::vision_federation(kind, non_iid, ctx.scale, ctx.seed)
+            };
+            let cfg = RunConfig {
+                artifact,
+                sample_frac: args
+                    .get_f64("frac", ctx.scale.sample_frac())
+                    .map_err(|e| anyhow!(e))?,
+                rounds: ctx.rounds_for(100),
+                local_epochs: args
+                    .get_usize("epochs", ctx.scale.local_epochs())
+                    .map_err(|e| anyhow!(e))?,
+                lr: args.get_f64("lr", 0.1).map_err(|e| anyhow!(e))? as f32,
+                lr_decay: 0.992,
+                optimizer: Optimizer::parse(args.get_or("optimizer", "fedavg"))
+                    .map_err(|e| anyhow!(e))?,
+                quantize_upload: args.flag("quantize"),
+                sharing: if args.flag("pfedpara") {
+                    Sharing::GlobalSegments
+                } else {
+                    Sharing::Full
+                },
+                eval_every: 1,
+                seed: ctx.seed,
+            };
+            let rounds = cfg.rounds;
+            println!(
+                "run: artifact={} dataset={} non_iid={} optimizer={} rounds={}",
+                cfg.artifact,
+                dataset,
+                non_iid,
+                cfg.optimizer.name(),
+                rounds
+            );
+            let mut fed = Federation::new(&engine, cfg, locals, test)?;
+            for _ in 0..rounds {
+                let r = fed.run_round()?;
+                println!(
+                    "round {:>4}  loss {:.4}  acc {}  cum {:.4} GB  ({} clients, {:.2}s compute)",
+                    r.round,
+                    r.mean_train_loss,
+                    r.test_acc.map(|a| format!("{:.2}%", a * 100.0)).unwrap_or("-".into()),
+                    r.cum_gbytes,
+                    r.participants,
+                    r.t_comp_secs,
+                );
+            }
+            let final_eval = fed.evaluate_global()?;
+            println!(
+                "final: acc {:.2}%  loss {:.4}  total {:.4} GB  energy {:.4} MJ",
+                final_eval.accuracy() * 100.0,
+                final_eval.mean_loss(),
+                fed.comm.total_gbytes(),
+                fed.comm.total_energy_mj()
+            );
+            Ok(())
+        }
+        Some("help") | None => {
+            println!(
+                "fedpara — FedPara (ICLR 2022) reproduction\n\n\
+                 usage:\n\
+                 \x20 fedpara list                        experiments + artifacts\n\
+                 \x20 fedpara exp <id>|all [options]      regenerate a table/figure\n\
+                 \x20 fedpara run [options]               ad-hoc federated run\n\n\
+                 common options:\n{}",
+                {
+                    let mut a = Args::default();
+                    declare_common(&mut a);
+                    a.help_text()
+                }
+            );
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand '{other}' (try `fedpara help`)")),
+    }
+}

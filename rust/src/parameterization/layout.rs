@@ -1,0 +1,322 @@
+//! Flat parameter-vector layout.
+//!
+//! The AOT train/eval artifacts take model parameters as one flat f32
+//! vector; `python/compile/fedpara.py` defines the layout (one segment per
+//! layer factor) and writes it into `artifacts/manifest.json`. This module
+//! is the rust mirror: it validates the layout, and implements the
+//! gather/scatter the coordinator needs for
+//!
+//! * pFedPara — only `Global` segments (X1, Y1 of every layer) travel to
+//!   the server; `Local` segments stay on the device (Algorithm 2);
+//! * FedPer — all segments except the last layer's are global;
+//! * communication accounting — transferred bytes = 4·(global length).
+
+use crate::util::json::Json;
+
+/// Whether a segment is shared with the server or kept on-device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SegmentKind {
+    Global,
+    Local,
+}
+
+/// One contiguous slice of the flat parameter vector (e.g. `layer3.x1`).
+#[derive(Clone, Debug)]
+pub struct Segment {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+    pub kind: SegmentKind,
+    /// Gaussian init std for this segment (0.0 = init to zeros); written
+    /// into the manifest by `python/compile/fedpara.py::segment_stds`.
+    pub init_std: f64,
+}
+
+/// A validated parameter layout: segments are contiguous, ordered, and
+/// exactly cover `[0, total)`.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub total: usize,
+    pub segments: Vec<Segment>,
+}
+
+impl Layout {
+    /// Build and validate.
+    pub fn new(segments: Vec<Segment>) -> Result<Layout, String> {
+        let mut expected = 0usize;
+        for s in &segments {
+            if s.offset != expected {
+                return Err(format!(
+                    "segment '{}' starts at {} but {} expected (gap/overlap)",
+                    s.name, s.offset, expected
+                ));
+            }
+            if s.len == 0 {
+                return Err(format!("segment '{}' has zero length", s.name));
+            }
+            expected += s.len;
+        }
+        Ok(Layout { total: expected, segments })
+    }
+
+    /// Single all-global segment (original / low-rank / plain FedPara
+    /// models where the whole vector is transferred).
+    pub fn single(total: usize) -> Layout {
+        Layout {
+            total,
+            segments: vec![Segment {
+                name: "params".into(),
+                offset: 0,
+                len: total,
+                kind: SegmentKind::Global,
+                init_std: 0.0,
+            }],
+        }
+    }
+
+    /// Parse from the manifest's `layout` array:
+    /// `[{"name": ..., "len": ..., "kind": "global"|"local"}, ...]`
+    /// (offsets are implied by order, matching the python packer).
+    pub fn from_json(j: &Json) -> Result<Layout, String> {
+        let arr = j.as_arr().ok_or("layout must be an array")?;
+        let mut segments = Vec::with_capacity(arr.len());
+        let mut offset = 0usize;
+        for item in arr {
+            let name = item
+                .get("name")
+                .as_str()
+                .ok_or("layout entry missing 'name'")?
+                .to_string();
+            let len = item
+                .get("len")
+                .as_usize()
+                .ok_or_else(|| format!("layout entry '{name}' missing integer 'len'"))?;
+            let kind = match item.get("kind").as_str() {
+                Some("global") | None => SegmentKind::Global,
+                Some("local") => SegmentKind::Local,
+                Some(other) => return Err(format!("unknown segment kind '{other}'")),
+            };
+            let init_std = item.get("init_std").as_f64().unwrap_or(0.0);
+            segments.push(Segment { name, offset, len, kind, init_std });
+            offset += len;
+        }
+        Layout::new(segments)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.segments
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("name", Json::Str(s.name.clone())),
+                        ("len", Json::Num(s.len as f64)),
+                        ("init_std", Json::Num(s.init_std)),
+                        (
+                            "kind",
+                            Json::Str(
+                                match s.kind {
+                                    SegmentKind::Global => "global",
+                                    SegmentKind::Local => "local",
+                                }
+                                .into(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn global_len(&self) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| s.kind == SegmentKind::Global)
+            .map(|s| s.len)
+            .sum()
+    }
+
+    pub fn local_len(&self) -> usize {
+        self.total - self.global_len()
+    }
+
+    /// Gather the global segments of `params` into a dense vector (what a
+    /// pFedPara client uploads).
+    pub fn gather_global(&self, params: &[f32]) -> Vec<f32> {
+        assert_eq!(params.len(), self.total, "param length mismatch");
+        let mut out = Vec::with_capacity(self.global_len());
+        for s in &self.segments {
+            if s.kind == SegmentKind::Global {
+                out.extend_from_slice(&params[s.offset..s.offset + s.len]);
+            }
+        }
+        out
+    }
+
+    /// Scatter a dense global vector back into `params`, leaving local
+    /// segments untouched (what a pFedPara client does on download).
+    pub fn scatter_global(&self, params: &mut [f32], global: &[f32]) {
+        assert_eq!(params.len(), self.total, "param length mismatch");
+        assert_eq!(global.len(), self.global_len(), "global length mismatch");
+        let mut pos = 0usize;
+        for s in &self.segments {
+            if s.kind == SegmentKind::Global {
+                params[s.offset..s.offset + s.len].copy_from_slice(&global[pos..pos + s.len]);
+                pos += s.len;
+            }
+        }
+    }
+
+    /// Find a segment by name.
+    pub fn segment(&self, name: &str) -> Option<&Segment> {
+        self.segments.iter().find(|s| s.name == name)
+    }
+
+    /// Sample a fresh initialization of the flat parameter vector, using
+    /// the per-segment init stds the AOT manifest records (gaussian; 0.0
+    /// std means zeros — biases and GN offsets).
+    pub fn init_params(&self, rng: &mut crate::util::rng::Rng) -> Vec<f32> {
+        let mut out = vec![0f32; self.total];
+        for s in &self.segments {
+            if s.init_std > 0.0 {
+                for v in &mut out[s.offset..s.offset + s.len] {
+                    *v = rng.gaussian_ms(0.0, s.init_std) as f32;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+    use crate::util::rng::Rng;
+
+    fn demo_layout() -> Layout {
+        Layout::new(vec![
+            Segment { name: "l1.x1".into(), offset: 0, len: 6, kind: SegmentKind::Global, init_std: 0.1 },
+            Segment { name: "l1.y1".into(), offset: 6, len: 4, kind: SegmentKind::Global, init_std: 0.1 },
+            Segment { name: "l1.x2".into(), offset: 10, len: 6, kind: SegmentKind::Local, init_std: 0.1 },
+            Segment { name: "l1.y2".into(), offset: 16, len: 4, kind: SegmentKind::Local, init_std: 0.1 },
+            Segment { name: "l2.w".into(), offset: 20, len: 5, kind: SegmentKind::Global, init_std: 0.1 },
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn lengths() {
+        let l = demo_layout();
+        assert_eq!(l.total, 25);
+        assert_eq!(l.global_len(), 15);
+        assert_eq!(l.local_len(), 10);
+    }
+
+    #[test]
+    fn rejects_gaps_overlaps_and_empty() {
+        assert!(Layout::new(vec![
+            Segment { name: "a".into(), offset: 1, len: 3, kind: SegmentKind::Global, init_std: 0.1 }
+        ])
+        .is_err());
+        assert!(Layout::new(vec![
+            Segment { name: "a".into(), offset: 0, len: 3, kind: SegmentKind::Global, init_std: 0.1 },
+            Segment { name: "b".into(), offset: 2, len: 3, kind: SegmentKind::Global, init_std: 0.1 },
+        ])
+        .is_err());
+        assert!(Layout::new(vec![
+            Segment { name: "a".into(), offset: 0, len: 0, kind: SegmentKind::Global, init_std: 0.1 }
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let l = demo_layout();
+        let params: Vec<f32> = (0..25).map(|i| i as f32).collect();
+        let global = l.gather_global(&params);
+        assert_eq!(global.len(), 15);
+        // Expected: segments l1.x1 (0..6), l1.y1 (6..10), l2.w (20..25).
+        let expected: Vec<f32> = (0..10).chain(20..25).map(|i| i as f32).collect();
+        assert_eq!(global, expected);
+
+        let mut target = vec![-1.0f32; 25];
+        l.scatter_global(&mut target, &global);
+        // Global positions match, local positions untouched.
+        for s in &l.segments {
+            for i in s.offset..s.offset + s.len {
+                match s.kind {
+                    SegmentKind::Global => assert_eq!(target[i], params[i]),
+                    SegmentKind::Local => assert_eq!(target[i], -1.0),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let l = demo_layout();
+        let j = l.to_json();
+        let l2 = Layout::from_json(&j).unwrap();
+        assert_eq!(l2.total, l.total);
+        assert_eq!(l2.global_len(), l.global_len());
+        assert_eq!(l2.segments.len(), l.segments.len());
+        for (a, b) in l.segments.iter().zip(l2.segments.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.offset, b.offset);
+            assert_eq!(a.len, b.len);
+            assert_eq!(a.kind, b.kind);
+        }
+    }
+
+    #[test]
+    fn from_json_defaults_to_global() {
+        let j = Json::parse(r#"[{"name":"w","len":7}]"#).unwrap();
+        let l = Layout::from_json(&j).unwrap();
+        assert_eq!(l.global_len(), 7);
+    }
+
+    /// Property: scatter(gather(p)) over fresh zeros then gather again is
+    /// idempotent, for random layouts.
+    #[test]
+    fn prop_gather_scatter_idempotent() {
+        pt::check(
+            2024,
+            |rng: &mut Rng| {
+                // Random layout of 1..8 segments with random kinds.
+                let nseg = 1 + rng.below(7);
+                let mut segs = Vec::new();
+                let mut off = 0;
+                for i in 0..nseg {
+                    let len = 1 + rng.below(16);
+                    let kind = if rng.below(2) == 0 { SegmentKind::Global } else { SegmentKind::Local };
+                    segs.push(Segment { name: format!("s{i}"), offset: off, len, kind, init_std: 0.05 });
+                    off += len;
+                }
+                let layout = Layout::new(segs).unwrap();
+                let params: Vec<f32> = (0..layout.total).map(|_| rng.gaussian() as f32).collect();
+                (layout.to_json().to_string(), params)
+            },
+            pt::no_shrink,
+            |(layout_json, params)| {
+                let layout = Layout::from_json(&Json::parse(layout_json).unwrap()).unwrap();
+                let g1 = layout.gather_global(params);
+                let mut p2 = vec![0f32; layout.total];
+                layout.scatter_global(&mut p2, &g1);
+                let g2 = layout.gather_global(&p2);
+                if g1 != g2 {
+                    return Err("gather∘scatter∘gather != gather".into());
+                }
+                // Local entries of p2 must remain zero.
+                for s in &layout.segments {
+                    if s.kind == SegmentKind::Local
+                        && p2[s.offset..s.offset + s.len].iter().any(|&x| x != 0.0)
+                    {
+                        return Err(format!("local segment '{}' was written", s.name));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! The paper's parameterizations and their bookkeeping.
+//!
+//! * [`shapes`] — layer shape descriptors, parameter-count and maximal-rank
+//!   formulas (Table 1), the γ → inner-rank mapping built on Proposition 2 /
+//!   Corollary 1 (`r_min = ⌈√min(m,n)⌉`, `r_max` from the original-size
+//!   budget).
+//! * [`compose`] — rust-side reference composition `W = (X1Y1ᵀ)⊙(X2Y2ᵀ)`
+//!   (and the Prop-3 tensor form, and pFedPara's `W1⊙(W2+1)`), used by the
+//!   Figure-6 rank experiment and for validating the JAX/Pallas layers from
+//!   the coordinator's side.
+//! * [`layout`] — the flat parameter-vector layout shared with the AOT
+//!   artifacts: named segments per layer factor, global/local split for
+//!   pFedPara, and the segment codec the server aggregates through.
+
+pub mod compose;
+pub mod layout;
+pub mod shapes;
+
+pub use layout::{Layout, Segment, SegmentKind};
+pub use shapes::{gamma_rank, LayerShape, Scheme};

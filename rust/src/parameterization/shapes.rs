@@ -1,0 +1,316 @@
+//! Layer shapes, parameter counts, and rank bounds (paper Table 1), plus
+//! the γ → inner-rank schedule from §3.1:
+//!
+//! `r = (1 − γ)·r_min + γ·r_max`, where `r_min` is the smallest inner rank
+//! that still allows a full-rank composed weight (Corollary 1:
+//! `R² ≥ min(m,n)` ⇒ `r_min = ⌈√min(m,n)⌉`), and `r_max` is the largest
+//! inner rank whose FedPara parameter count does not exceed the original
+//! layer's.
+
+/// Shape of a learnable layer's weight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerShape {
+    /// Fully-connected `W ∈ R^{m×n}` (m = out features, n = in features).
+    Fc { m: usize, n: usize },
+    /// Convolution kernel `W ∈ R^{O×I×K1×K2}`.
+    Conv { o: usize, i: usize, k1: usize, k2: usize },
+}
+
+/// Parameterization scheme for one layer. `r` is the *inner* rank
+/// (the paper's r1 = r2 = R, optimal by Proposition 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// The unfactorized weight.
+    Original,
+    /// Conventional low-rank: `W = X·Yᵀ` with rank ≤ r (FC), or Tucker-2
+    /// with mode-(1,2) ranks r (conv) following TKD (Phan et al. 2020).
+    LowRank { r: usize },
+    /// FedPara via matrix reshape (Proposition 1): conv kernels reshaped to
+    /// `O × (I·K1·K2)`.
+    FedParaProp1 { r: usize },
+    /// FedPara for conv without reshape (Proposition 3). For FC layers this
+    /// is identical to Prop 1.
+    FedPara { r: usize },
+    /// pFedPara: same factor structure as FedPara, but `W = W1 ⊙ (W2 + 1)`
+    /// with (X1,Y1) global and (X2,Y2) local.
+    PFedPara { r: usize },
+}
+
+impl LayerShape {
+    /// (m, n) of the matrix the rank statements apply to: the FC weight
+    /// itself, or the 1st unfolding `O × (I·K1·K2)` for conv kernels.
+    pub fn unfolded(&self) -> (usize, usize) {
+        match *self {
+            LayerShape::Fc { m, n } => (m, n),
+            LayerShape::Conv { o, i, k1, k2 } => (o, i * k1 * k2),
+        }
+    }
+
+    /// Number of parameters of the original (unfactorized) weight.
+    pub fn original_params(&self) -> usize {
+        let (m, n) = self.unfolded();
+        m * n
+    }
+
+    /// Maximal achievable rank of the (unfolded) weight.
+    pub fn max_possible_rank(&self) -> usize {
+        let (m, n) = self.unfolded();
+        m.min(n)
+    }
+}
+
+impl Scheme {
+    /// Number of parameters this scheme uses for `shape` (Table 1).
+    pub fn params(&self, shape: LayerShape) -> usize {
+        match (*self, shape) {
+            (Scheme::Original, s) => s.original_params(),
+
+            // FC rows of Table 1.
+            (Scheme::LowRank { r }, LayerShape::Fc { m, n }) => r * (m + n),
+            (Scheme::FedPara { r } | Scheme::FedParaProp1 { r } | Scheme::PFedPara { r }, LayerShape::Fc { m, n }) => {
+                2 * r * (m + n)
+            }
+
+            // Conv rows of Table 1.
+            // Low-rank baseline in Tucker-2 form (TKD): X ∈ O×r, Y ∈ I×r,
+            // core ∈ r×r×K1×K2.
+            (Scheme::LowRank { r }, LayerShape::Conv { o, i, k1, k2 }) => {
+                r * (o + i) + r * r * k1 * k2
+            }
+            // Prop 1: reshape to O × (I·K1·K2), params 2R(O + I·K1·K2).
+            (Scheme::FedParaProp1 { r }, LayerShape::Conv { o, i, k1, k2 }) => {
+                2 * r * (o + i * k1 * k2)
+            }
+            // Prop 3: two cores R×R×K1×K2 plus X ∈ O×R, Y ∈ I×R each:
+            // 2R(O + I + R·K1·K2).
+            (Scheme::FedPara { r } | Scheme::PFedPara { r }, LayerShape::Conv { o, i, k1, k2 }) => {
+                2 * r * (o + i + r * k1 * k2)
+            }
+        }
+    }
+
+    /// Upper bound on the rank of the composed (unfolded) weight (Table 1).
+    pub fn max_rank(&self, shape: LayerShape) -> usize {
+        let cap = shape.max_possible_rank();
+        match *self {
+            Scheme::Original => cap,
+            Scheme::LowRank { r } => r.min(cap),
+            Scheme::FedPara { r } | Scheme::FedParaProp1 { r } | Scheme::PFedPara { r } => {
+                (r * r).min(cap)
+            }
+        }
+    }
+
+    /// Inner rank if this scheme has one.
+    pub fn inner_rank(&self) -> Option<usize> {
+        match *self {
+            Scheme::Original => None,
+            Scheme::LowRank { r }
+            | Scheme::FedPara { r }
+            | Scheme::FedParaProp1 { r }
+            | Scheme::PFedPara { r } => Some(r),
+        }
+    }
+}
+
+/// Smallest inner rank R with R² ≥ min(m,n) (Corollary 1): the minimum that
+/// removes the low-rank restriction on the composed weight.
+pub fn r_min(shape: LayerShape) -> usize {
+    let (m, n) = shape.unfolded();
+    (((m.min(n)) as f64).sqrt().ceil() as usize).max(1)
+}
+
+/// Largest inner rank whose FedPara parameter count stays within the
+/// original layer's parameter budget.
+pub fn r_max(shape: LayerShape) -> usize {
+    match shape {
+        LayerShape::Fc { m, n } => {
+            // 2R(m+n) <= mn  =>  R <= mn / (2(m+n)).
+            ((m * n) as f64 / (2.0 * (m + n) as f64)).floor() as usize
+        }
+        LayerShape::Conv { o, i, k1, k2 } => {
+            // 2R(O+I) + 2R²K <= OIK, K = k1·k2 (quadratic in R).
+            let kk = (k1 * k2) as f64;
+            let b = (o + i) as f64;
+            let c = (o * i) as f64 * kk;
+            // 2·kk·R² + 2·b·R − c <= 0  =>  R <= (−b + √(b² + 2·kk·c)) / (2·kk)
+            let disc = (b * b + 2.0 * kk * c).sqrt();
+            ((disc - b) / (2.0 * kk)).floor() as usize
+        }
+    }
+    .max(1)
+}
+
+/// The paper's rank schedule: `r = (1−γ)·r_min + γ·r_max`, γ ∈ [0,1].
+/// Clamped so the result is always at least 1 and at most min(m,n)
+/// (Propositions require r ≤ min(m,n)).
+pub fn gamma_rank(shape: LayerShape, gamma: f64) -> usize {
+    assert!((0.0..=1.0).contains(&gamma), "gamma must be in [0,1]");
+    let lo = r_min(shape) as f64;
+    let hi = r_max(shape) as f64;
+    let r = ((1.0 - gamma) * lo + gamma * hi).round() as usize;
+    let (m, n) = shape.unfolded();
+    r.clamp(1, m.min(n).max(1))
+}
+
+/// For the low-rank baseline: the rank that matches a target parameter
+/// budget as closely as possible without exceeding it (used to compare
+/// "same number of parameters" per Table 2 / Figure 1).
+pub fn lowrank_rank_for_budget(shape: LayerShape, budget_params: usize) -> usize {
+    let mut best = 1;
+    for r in 1..=shape.max_possible_rank() {
+        if (Scheme::LowRank { r }).params(shape) <= budget_params {
+            best = r;
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1's reference example: m=n=O=I=256, K1=K2=3, R=16.
+    #[test]
+    fn table1_fc_example() {
+        let fc = LayerShape::Fc { m: 256, n: 256 };
+        assert_eq!(Scheme::Original.params(fc), 65_536); // "66 K"
+        assert_eq!(Scheme::Original.max_rank(fc), 256);
+
+        // Low-rank at 2R = 32 (the table's same-parameter comparison).
+        let low = Scheme::LowRank { r: 32 };
+        assert_eq!(low.params(fc), 16_384); // "16 K"
+        assert_eq!(low.max_rank(fc), 32);
+
+        let fp = Scheme::FedPara { r: 16 };
+        assert_eq!(fp.params(fc), 16_384); // "16 K"
+        assert_eq!(fp.max_rank(fc), 256); // R² = 256 = full rank.
+    }
+
+    #[test]
+    fn table1_conv_example() {
+        let conv = LayerShape::Conv { o: 256, i: 256, k1: 3, k2: 3 };
+        assert_eq!(Scheme::Original.params(conv), 589_824); // "590 K"
+        assert_eq!(Scheme::Original.max_rank(conv), 256);
+
+        let p1 = Scheme::FedParaProp1 { r: 16 };
+        assert_eq!(p1.params(conv), 2 * 16 * (256 + 256 * 9)); // 81 920 ≈ "82 K"
+        assert_eq!(p1.max_rank(conv), 256);
+
+        let p3 = Scheme::FedPara { r: 16 };
+        assert_eq!(p3.params(conv), 2 * 16 * (256 + 256 + 16 * 9)); // 20 992 ≈ "21 K"
+        assert_eq!(p3.max_rank(conv), 256);
+
+        // Prop 3 is ~3.9x smaller than Prop 1 here (paper: "3.8 times").
+        let ratio = p1.params(conv) as f64 / p3.params(conv) as f64;
+        assert!((3.5..4.2).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn r_min_is_corollary1_threshold() {
+        let fc = LayerShape::Fc { m: 100, n: 100 };
+        assert_eq!(r_min(fc), 10); // Supp A.2 uses exactly this example.
+        let fc2 = LayerShape::Fc { m: 784, n: 256 };
+        assert_eq!(r_min(fc2), 16); // ceil(sqrt(256)).
+        // r_min² >= min(m,n) always.
+        for &(m, n) in &[(7, 9), (128, 300), (50, 2), (1, 1)] {
+            let s = LayerShape::Fc { m, n };
+            assert!(r_min(s) * r_min(s) >= m.min(n));
+            assert!((r_min(s) - 1) * (r_min(s) - 1) < m.min(n));
+        }
+    }
+
+    #[test]
+    fn r_max_respects_budget() {
+        for shape in [
+            LayerShape::Fc { m: 256, n: 256 },
+            LayerShape::Fc { m: 784, n: 100 },
+            LayerShape::Conv { o: 64, i: 32, k1: 3, k2: 3 },
+            LayerShape::Conv { o: 256, i: 256, k1: 3, k2: 3 },
+        ] {
+            let r = r_max(shape);
+            let fp = Scheme::FedPara { r };
+            assert!(
+                fp.params(shape) <= shape.original_params(),
+                "{shape:?}: {} > {}",
+                fp.params(shape),
+                shape.original_params()
+            );
+            // r+1 would exceed the budget (or hit the dimension cap).
+            let fp_next = Scheme::FedPara { r: r + 1 };
+            assert!(
+                fp_next.params(shape) > shape.original_params(),
+                "{shape:?}: r_max not maximal"
+            );
+        }
+    }
+
+    #[test]
+    fn gamma_schedule_monotone() {
+        let shape = LayerShape::Conv { o: 128, i: 64, k1: 3, k2: 3 };
+        let mut prev = 0;
+        for g in 0..=10 {
+            let gamma = g as f64 / 10.0;
+            let r = gamma_rank(shape, gamma);
+            assert!(r >= prev, "gamma schedule must be nondecreasing");
+            prev = r;
+        }
+        assert_eq!(gamma_rank(shape, 0.0), r_min(shape));
+        assert_eq!(gamma_rank(shape, 1.0), r_max(shape).clamp(1, 64));
+    }
+
+    #[test]
+    fn fedpara_beats_lowrank_rank_at_equal_params() {
+        // The central claim of Figure 1/Table 1: same parameter count,
+        // square-factor higher max rank.
+        for &(m, n) in &[(256, 256), (512, 128), (100, 100)] {
+            let shape = LayerShape::Fc { m, n };
+            let r = r_min(shape) + 2;
+            let fp = Scheme::FedPara { r };
+            let budget = fp.params(shape);
+            let lr = Scheme::LowRank { r: lowrank_rank_for_budget(shape, budget) };
+            assert!(lr.params(shape) <= budget);
+            assert!(
+                fp.max_rank(shape) > lr.max_rank(shape),
+                "({m},{n}): fedpara rank {} <= lowrank rank {}",
+                fp.max_rank(shape),
+                lr.max_rank(shape)
+            );
+        }
+    }
+
+    #[test]
+    fn prop2_equal_ranks_are_optimal() {
+        // (r1+r2)(m+n) s.t. r1·r2 >= R² is minimized at r1 = r2 = R:
+        // check by brute force on a grid.
+        let (m, n) = (40, 30);
+        for cap in 2..12usize {
+            let target = cap * cap;
+            let mut best = usize::MAX;
+            let mut best_pair = (0, 0);
+            for r1 in 1..=target {
+                for r2 in 1..=target {
+                    if r1 * r2 >= target {
+                        let cost = (r1 + r2) * (m + n);
+                        if cost < best {
+                            best = cost;
+                            best_pair = (r1, r2);
+                        }
+                    }
+                }
+            }
+            assert_eq!(best_pair, (cap, cap), "R={cap}");
+            assert_eq!(best, 2 * cap * (m + n));
+        }
+    }
+
+    #[test]
+    fn lowrank_budget_rank() {
+        let shape = LayerShape::Fc { m: 256, n: 256 };
+        // Budget of 16384 params -> rank 32 exactly (r(m+n) = 512r).
+        assert_eq!(lowrank_rank_for_budget(shape, 16_384), 32);
+        assert_eq!(lowrank_rank_for_budget(shape, 16_383), 31);
+    }
+}

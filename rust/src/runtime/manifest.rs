@@ -1,0 +1,220 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! (which writes it) and the rust runtime (which loads artifacts by name).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::parameterization::Layout;
+use crate::util::json::Json;
+
+/// Static batch shape of one AOT program.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchShape {
+    pub nbatches: usize,
+    pub batch: usize,
+    pub feature_dim: usize,
+}
+
+impl BatchShape {
+    pub fn samples_per_call(&self) -> usize {
+        self.nbatches * self.batch
+    }
+
+    fn from_json(j: &Json) -> Result<BatchShape, String> {
+        Ok(BatchShape {
+            nbatches: j.get("nbatches").as_usize().ok_or("missing nbatches")?,
+            batch: j.get("batch").as_usize().ok_or("missing batch")?,
+            feature_dim: j.get("feature_dim").as_usize().ok_or("missing feature_dim")?,
+        })
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub param_count: usize,
+    pub global_len: usize,
+    pub layout: Layout,
+    pub train: BatchShape,
+    pub eval: BatchShape,
+    pub model: String,
+    pub scheme: String,
+    pub variant: String,
+    pub gamma: f64,
+    pub classes: usize,
+    pub is_text: bool,
+    /// Predictions per eval batch (text models predict every position).
+    pub eval_denominator_per_batch: usize,
+}
+
+impl ArtifactMeta {
+    /// Bytes transferred for a full model upload or download at f32.
+    pub fn full_model_bytes(&self) -> usize {
+        self.param_count * 4
+    }
+
+    /// Bytes for the global (transferred) part — pFedPara/FedPer upload.
+    pub fn global_bytes(&self) -> usize {
+        self.global_len * 4
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest, String> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Manifest::parse(&text, artifacts_dir)
+    }
+
+    pub fn parse(text: &str, artifacts_dir: &Path) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let arts = j
+            .get("artifacts")
+            .as_obj()
+            .ok_or("manifest missing 'artifacts' object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in arts {
+            let meta = Self::parse_entry(name, entry, artifacts_dir)
+                .map_err(|e| format!("artifact '{name}': {e}"))?;
+            artifacts.insert(name.clone(), meta);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    fn parse_entry(name: &str, j: &Json, dir: &Path) -> Result<ArtifactMeta, String> {
+        let layout = Layout::from_json(j.get("layout"))?;
+        let param_count = j.get("param_count").as_usize().ok_or("missing param_count")?;
+        if layout.total != param_count {
+            return Err(format!(
+                "layout total {} != param_count {param_count}",
+                layout.total
+            ));
+        }
+        let global_len = j.get("global_len").as_usize().ok_or("missing global_len")?;
+        if layout.global_len() != global_len {
+            return Err(format!(
+                "layout global {} != global_len {global_len}",
+                layout.global_len()
+            ));
+        }
+        Ok(ArtifactMeta {
+            name: name.to_string(),
+            train_hlo: dir.join(j.get("train_hlo").as_str().ok_or("missing train_hlo")?),
+            eval_hlo: dir.join(j.get("eval_hlo").as_str().ok_or("missing eval_hlo")?),
+            param_count,
+            global_len,
+            layout,
+            train: BatchShape::from_json(j.get("train"))?,
+            eval: BatchShape::from_json(j.get("eval"))?,
+            model: j.get("model").as_str().unwrap_or("?").to_string(),
+            scheme: j.get("scheme").as_str().unwrap_or("original").to_string(),
+            variant: j.get("variant").as_str().unwrap_or("plain").to_string(),
+            gamma: j.get("gamma").as_f64().unwrap_or(0.0),
+            classes: j.get("classes").as_usize().unwrap_or(0),
+            is_text: j.get("is_text").as_bool().unwrap_or(false),
+            eval_denominator_per_batch: j
+                .get("eval_denominator_per_batch")
+                .as_usize()
+                .unwrap_or_else(|| j.get("eval").get("batch").as_usize().unwrap_or(1)),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta, String> {
+        self.artifacts.get(name).ok_or_else(|| {
+            let known: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+            format!("unknown artifact '{name}'; known: {}", known.join(", "))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": {
+        "demo": {
+          "train_hlo": "demo.train.hlo.txt",
+          "eval_hlo": "demo.eval.hlo.txt",
+          "param_count": 14,
+          "global_len": 10,
+          "layout": [
+            {"name": "a.x1", "len": 4, "kind": "global"},
+            {"name": "a.y1", "len": 6, "kind": "global"},
+            {"name": "a.x2", "len": 2, "kind": "local"},
+            {"name": "a.y2", "len": 2, "kind": "local"}
+          ],
+          "train": {"nbatches": 4, "batch": 32, "feature_dim": 8},
+          "eval": {"nbatches": 2, "batch": 16, "feature_dim": 8},
+          "model": "mlp", "scheme": "pfedpara", "variant": "plain",
+          "gamma": 0.5, "classes": 10, "is_text": false,
+          "eval_denominator_per_batch": 16
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/arts")).unwrap();
+        let a = m.get("demo").unwrap();
+        assert_eq!(a.param_count, 14);
+        assert_eq!(a.global_len, 10);
+        assert_eq!(a.layout.segments.len(), 4);
+        assert_eq!(a.train.samples_per_call(), 128);
+        assert_eq!(a.train.feature_dim, 8);
+        assert!(a.train_hlo.ends_with("demo.train.hlo.txt"));
+        assert_eq!(a.full_model_bytes(), 56);
+        assert_eq!(a.global_bytes(), 40);
+    }
+
+    #[test]
+    fn rejects_inconsistent_counts() {
+        let bad = SAMPLE.replace("\"param_count\": 14", "\"param_count\": 15");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+        let bad2 = SAMPLE.replace("\"global_len\": 10", "\"global_len\": 11");
+        assert!(Manifest::parse(&bad2, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_error_lists_known() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let err = m.get("nope").unwrap_err();
+        assert!(err.contains("demo"));
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Integration-lite: parse the actual artifacts/manifest.json when
+        // `make artifacts` has run (skipped otherwise).
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 10, "expected a full artifact set");
+        for (name, a) in &m.artifacts {
+            assert!(a.train_hlo.exists(), "{name}: missing {:?}", a.train_hlo);
+            assert!(a.eval_hlo.exists(), "{name}: missing {:?}", a.eval_hlo);
+            assert!(a.param_count > 0);
+        }
+        // pFedPara artifacts must transfer strictly less than full size.
+        let p = m.get("mlp62_pfedpara").unwrap();
+        assert!(p.global_len < p.param_count);
+    }
+}

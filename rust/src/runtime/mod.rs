@@ -1,0 +1,234 @@
+//! PJRT runtime: load + compile + execute the AOT artifacts (request path).
+//!
+//! The `Engine` owns one `PjRtClient` (CPU) and a compile cache keyed by
+//! artifact name. A `ModelRuntime` is a compiled train/eval pair with typed
+//! entry points over flat f32 buffers:
+//!
+//! ```text
+//! train_epoch(params, x, y, lr, correction, anchor, mu)
+//!     -> (new_params, mean_loss)
+//! eval(params, x, y) -> (correct_count, loss_sum)
+//! ```
+//!
+//! PJRT handles are not `Send`/`Sync` in the `xla` crate, so the engine is
+//! used from the coordinator thread; parallelism lives in data generation
+//! and aggregation, not in PJRT calls (single-core target anyway).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactMeta, BatchShape, Manifest};
+
+/// Compiled train+eval executables for one artifact.
+pub struct ModelRuntime {
+    pub meta: ArtifactMeta,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    /// Reusable zero vector for the correction/anchor inputs.
+    zeros: Vec<f32>,
+}
+
+/// Output of one local training call.
+#[derive(Clone, Debug)]
+pub struct TrainOutput {
+    pub params: Vec<f32>,
+    pub mean_loss: f32,
+}
+
+/// Output of one eval call.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOutput {
+    pub correct: f64,
+    pub loss_sum: f64,
+    pub denominator: f64,
+}
+
+impl EvalOutput {
+    pub fn accuracy(&self) -> f64 {
+        if self.denominator == 0.0 {
+            0.0
+        } else {
+            self.correct / self.denominator
+        }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.denominator == 0.0 {
+            0.0
+        } else {
+            self.loss_sum / self.denominator
+        }
+    }
+
+    pub fn merge(&mut self, other: &EvalOutput) {
+        self.correct += other.correct;
+        self.loss_sum += other.loss_sum;
+        self.denominator += other.denominator;
+    }
+}
+
+fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("literal shape {:?} != data len {}", dims, data.len()));
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+fn literal_scalar(v: f32) -> Result<xla::Literal> {
+    literal_f32(&[v], &[])
+}
+
+impl ModelRuntime {
+    /// Run one local epoch. `correction`/`anchor` default to zeros and `mu`
+    /// to 0 (plain FedAvg SGD); see python/compile/train.py for the
+    /// optimizer mapping.
+    pub fn train_epoch(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        correction: Option<&[f32]>,
+        anchor: Option<&[f32]>,
+        mu: f32,
+    ) -> Result<TrainOutput> {
+        let p = self.meta.param_count;
+        let t = self.meta.train;
+        if params.len() != p {
+            return Err(anyhow!("params len {} != {p}", params.len()));
+        }
+        let corr = correction.unwrap_or(&self.zeros);
+        let anch = anchor.unwrap_or(&self.zeros);
+        if corr.len() != p || anch.len() != p {
+            return Err(anyhow!("correction/anchor length mismatch"));
+        }
+        let args = [
+            literal_f32(params, &[p])?,
+            literal_f32(x, &[t.nbatches, t.batch, t.feature_dim])?,
+            literal_f32(y, &[t.nbatches, t.batch])?,
+            literal_scalar(lr)?,
+            literal_f32(corr, &[p])?,
+            literal_f32(anch, &[p])?,
+            literal_scalar(mu)?,
+        ];
+        let result = self.train_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 2 {
+            return Err(anyhow!("train artifact returned {} outputs, want 2", parts.len()));
+        }
+        let new_params = parts[0].to_vec::<f32>()?;
+        let mean_loss = parts[1].to_vec::<f32>()?[0];
+        Ok(TrainOutput { params: new_params, mean_loss })
+    }
+
+    /// Evaluate one stacked batch set.
+    pub fn eval_call(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<EvalOutput> {
+        let p = self.meta.param_count;
+        let e = self.meta.eval;
+        let args = [
+            literal_f32(params, &[p])?,
+            literal_f32(x, &[e.nbatches, e.batch, e.feature_dim])?,
+            literal_f32(y, &[e.nbatches, e.batch])?,
+        ];
+        let result = self.eval_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 2 {
+            return Err(anyhow!("eval artifact returned {} outputs, want 2", parts.len()));
+        }
+        let correct = parts[0].to_vec::<f32>()?[0] as f64;
+        let loss_sum = parts[1].to_vec::<f32>()?[0] as f64;
+        Ok(EvalOutput {
+            correct,
+            loss_sum,
+            denominator: (e.nbatches * self.meta.eval_denominator_per_batch) as f64,
+        })
+    }
+}
+
+/// The PJRT engine: client + manifest + compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<ModelRuntime>>>,
+}
+
+impl Engine {
+    /// Create an engine over `artifacts_dir` (reads manifest.json).
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        crate::log_debug!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory: `$FEDPARA_ARTIFACTS` or `./artifacts`.
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var("FEDPARA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?)
+    }
+
+    /// Load (compile-once) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<ModelRuntime>> {
+        if let Some(rt) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(rt));
+        }
+        let meta = self.manifest.get(name).map_err(|e| anyhow!(e))?.clone();
+        let t0 = Instant::now();
+        let train_exe = self.compile(&meta.train_hlo)?;
+        let eval_exe = self.compile(&meta.eval_hlo)?;
+        crate::log_info!(
+            "compiled artifact '{name}' ({} params) in {:.2}s",
+            meta.param_count,
+            t0.elapsed().as_secs_f64()
+        );
+        let rt = Rc::new(ModelRuntime {
+            zeros: vec![0.0; meta.param_count],
+            meta,
+            train_exe,
+            eval_exe,
+        });
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&rt));
+        Ok(rt)
+    }
+
+    pub fn artifacts_root(&self) -> &Path {
+        &self.dir
+    }
+}

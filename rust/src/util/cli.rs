@@ -1,0 +1,172 @@
+//! Tiny command-line parser (no `clap` offline).
+//!
+//! Grammar: `fedpara <subcommand> [positionals] [--flag] [--key value]...`
+//! `--key=value` is also accepted. Unknown flags are an error so typos
+//! surface immediately.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Option/flag names this command accepts (for validation + help).
+    known: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err("bare '--' is not supported".into());
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // Peek: if the next token is not another flag, treat it
+                    // as this option's value; otherwise it's a boolean flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            a.options.insert(stripped.to_string(), v);
+                        }
+                        _ => a.flags.push(stripped.to_string()),
+                    }
+                }
+            } else if a.subcommand.is_none() {
+                a.subcommand = Some(tok);
+            } else {
+                a.positionals.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Declare a known option (for `validate` + help text).
+    pub fn declare(&mut self, name: &str, help: &str) -> &mut Self {
+        self.known.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    /// Error on any option/flag that was never declared.
+    pub fn validate(&self) -> Result<(), String> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !self.known.iter().any(|(n, _)| n == k) {
+                let mut msg = format!("unknown option --{k}. known options:");
+                for (n, h) in &self.known {
+                    msg.push_str(&format!("\n  --{n:<18} {h}"));
+                }
+                return Err(msg);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        for (n, h) in &self.known {
+            s.push_str(&format!("  --{n:<18} {h}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["exp", "table2", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positionals, vec!["table2", "extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse(&["run", "--rounds", "50", "--gamma=0.3"]);
+        assert_eq!(a.get("rounds"), Some("50"));
+        assert_eq!(a.get("gamma"), Some("0.3"));
+        assert_eq!(a.get_usize("rounds", 0).unwrap(), 50);
+        assert_eq!(a.get_f64("gamma", 0.0).unwrap(), 0.3);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["run", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["run", "--verbose", "--rounds", "10"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("rounds"), Some("10"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["run", "--rounds", "ten"]);
+        assert!(a.get_usize("rounds", 5).is_err());
+        assert_eq!(a.get_usize("epochs", 5).unwrap(), 5);
+        assert_eq!(a.get_or("scale", "tiny"), "tiny");
+    }
+
+    #[test]
+    fn validate_rejects_unknown() {
+        let mut a = parse(&["run", "--boguss", "1"]);
+        a.declare("rounds", "number of rounds");
+        assert!(a.validate().is_err());
+        let mut b = parse(&["run", "--rounds", "1"]);
+        b.declare("rounds", "number of rounds");
+        assert!(b.validate().is_ok());
+    }
+}

@@ -1,0 +1,208 @@
+//! IEEE 754 binary16 (half precision) conversion.
+//!
+//! Used by the FedPAQ-style uplink quantizer (paper Supp. D.3: quantize the
+//! uploaded model from fp32 to fp16). No `half` crate offline, so we do the
+//! bit manipulation ourselves. Round-to-nearest-even, with proper handling
+//! of subnormals, infinities and NaN.
+
+/// Convert an f32 to its binary16 bit pattern (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN. Preserve NaN-ness with a quiet mantissa bit.
+        return if mant == 0 { sign | 0x7C00 } else { sign | 0x7E00 };
+    }
+
+    // Unbiased exponent, then re-bias for half (15).
+    let unbiased = exp - 127;
+    let half_exp = unbiased + 15;
+
+    if half_exp >= 0x1F {
+        // Overflow -> infinity.
+        return sign | 0x7C00;
+    }
+
+    if half_exp <= 0 {
+        // Subnormal half or underflow to zero.
+        if half_exp < -10 {
+            return sign; // Rounds to zero even from the largest mantissa.
+        }
+        // Add the implicit leading 1, then shift right.
+        let mant = mant | 0x0080_0000;
+        let shift = (14 - half_exp) as u32; // 14..24
+        let half_mant = mant >> shift;
+        // Round to nearest even on the dropped bits.
+        let rem = mant & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = half_mant as u16;
+        if rem > halfway || (rem == halfway && (h & 1) == 1) {
+            h += 1; // May carry into the exponent; that is correct behaviour.
+        }
+        return sign | h;
+    }
+
+    // Normal number: keep top 10 mantissa bits, round-to-nearest-even.
+    let half_mant = (mant >> 13) as u16;
+    let rem = mant & 0x1FFF;
+    let mut h = sign | ((half_exp as u16) << 10) | half_mant;
+    if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+        h = h.wrapping_add(1); // Mantissa carry rolls into exponent correctly.
+    }
+    h
+}
+
+/// Convert a binary16 bit pattern back to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // +-0
+        } else {
+            // Subnormal: value = mant * 2^-24. Normalize so the leading 1
+            // sits at bit 10; after s left-shifts the unbiased exponent is
+            // -14 - s, i.e. an f32 exponent field of 113 - s.
+            let mut s = 0i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                s += 1;
+            }
+            let m = m & 0x03FF;
+            let exp32 = (113 - s) as u32;
+            sign | (exp32 << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        if mant == 0 {
+            sign | 0x7F80_0000 // Inf
+        } else {
+            sign | 0x7FC0_0000 | (mant << 13) // NaN
+        }
+    } else {
+        let exp32 = exp + 127 - 15;
+        sign | (exp32 << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize a slice through fp16 and back (the FedPAQ uplink transform).
+pub fn quantize_roundtrip(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| f16_bits_to_f32(f32_to_f16_bits(x))).collect()
+}
+
+/// Pack a slice of f32 into fp16 bytes (what actually goes on the wire).
+pub fn pack(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+    out
+}
+
+/// Unpack fp16 bytes back into f32.
+pub fn unpack(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 2 == 0, "fp16 byte stream must be even length");
+    bytes
+        .chunks_exact(2)
+        .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25, 1024.0] {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(x, y, "{x} -> {y}");
+            // Sign of zero must be preserved.
+            assert_eq!(x.is_sign_negative(), y.is_sign_negative());
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // Largest normal half.
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(6.103515625e-5), 0x0400); // Smallest normal.
+        assert_eq!(f32_to_f16_bits(5.9604645e-8), 0x0001); // Smallest subnormal.
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xFC00);
+        assert!(f16_bits_to_f32(0x7C00).is_infinite());
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        let h = f32_to_f16_bits(f32::NAN);
+        assert!(f16_bits_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn underflow_to_zero() {
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1e-10), 0x8000);
+    }
+
+    #[test]
+    fn relative_error_bound_for_normals() {
+        // Half has 11 significand bits -> rel error <= 2^-11 for values in
+        // the normal range. This is the property the Table-12 quantizer
+        // relies on.
+        let mut state = 0x1234_5678_9abc_def0u64;
+        for _ in 0..10_000 {
+            let r = crate::util::rng::splitmix64(&mut state);
+            // Random values across the half-normal range.
+            let x = ((r >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * 100.0;
+            if x.abs() < 6.2e-5 {
+                continue;
+            }
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            let rel = ((x - y) / x).abs();
+            assert!(rel <= 1.0 / 2048.0 + 1e-7, "x={x} y={y} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between two representable halves;
+        // RNE keeps the even mantissa (i.e. rounds down to 1.0).
+        let x = 1.0f32 + 2.0f32.powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), 1.0);
+        // 1 + 3*2^-11 is halfway and must round *up* to even.
+        let x = 1.0f32 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(x), 0x3C02);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let xs: Vec<f32> = (0..257).map(|i| (i as f32 - 128.0) * 0.37).collect();
+        let packed = pack(&xs);
+        assert_eq!(packed.len(), xs.len() * 2);
+        let back = unpack(&packed);
+        let direct = quantize_roundtrip(&xs);
+        assert_eq!(back, direct);
+    }
+
+    #[test]
+    fn subnormal_roundtrips() {
+        // All 1024 subnormal half patterns decode+encode to themselves.
+        for bits in 1u16..0x0400 {
+            let f = f16_bits_to_f32(bits);
+            assert_eq!(f32_to_f16_bits(f), bits, "bits={bits:#06x} f={f}");
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Leveled stderr logger (no `log`/`env_logger` wiring needed offline).
+//!
+//! Level comes from `FEDPARA_LOG` (error|warn|info|debug|trace) or
+//! `set_level`. Macros `log_info!` etc. live at crate root via
+//! `#[macro_export]`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info default.
+static INIT: std::sync::Once = std::sync::Once::new();
+static mut START: Option<Instant> = None;
+
+pub fn init_from_env() {
+    INIT.call_once(|| {
+        unsafe { START = Some(Instant::now()) };
+        if let Ok(v) = std::env::var("FEDPARA_LOG") {
+            if let Some(l) = parse_level(&v) {
+                LEVEL.store(l as u8, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Some(Level::Error),
+        "warn" | "warning" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
+}
+
+pub fn set_level(l: Level) {
+    init_from_env();
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    init_from_env();
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Seconds since logger init, for relative timestamps.
+pub fn elapsed_secs() -> f64 {
+    init_from_env();
+    // Safe: START is written once inside Once.
+    unsafe {
+        let ptr = std::ptr::addr_of!(START);
+        (*ptr).map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+}
+
+pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{:>9.3}s {} {}] {}", elapsed_secs(), tag, module, msg);
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level("info"), Some(Level::Info));
+        assert_eq!(parse_level("WARN"), Some(Level::Warn));
+        assert_eq!(parse_level("warning"), Some(Level::Warn));
+        assert_eq!(parse_level("nope"), None);
+    }
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // Restore default for other tests.
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Error < Level::Trace);
+    }
+}

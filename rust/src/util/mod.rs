@@ -1,0 +1,12 @@
+//! Foundation substrates built in-repo (the offline environment provides no
+//! crates beyond `xla`/`anyhow`): RNG, JSON, fp16, CLI parsing, thread pool,
+//! logging, statistics, and a mini property-test harness.
+
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

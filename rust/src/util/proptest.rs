@@ -1,0 +1,162 @@
+//! In-repo mini property-testing harness (no `proptest` crate offline).
+//!
+//! Deliberately small: seeded case generation from `util::rng`, a fixed
+//! case count (overridable with FEDPARA_PROPTEST_CASES), and greedy input
+//! shrinking for the common generator shapes we use (vectors, sizes).
+//! Coordinator invariants (codec roundtrips, partition exactness,
+//! aggregation algebra, ...) run through this.
+
+use crate::util::rng::Rng;
+
+/// Number of random cases per property.
+pub fn default_cases() -> usize {
+    std::env::var("FEDPARA_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen` from a seeded RNG. On
+/// failure, attempt to shrink with `shrink` (smaller candidates first) and
+/// panic with the smallest failing input's Debug form.
+pub fn check<T, G, S, P>(seed: u64, gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let cases = default_cases();
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink loop.
+            let mut best = (input.clone(), msg);
+            loop {
+                let mut improved = false;
+                for cand in shrink(&best.0) {
+                    if let Err(m) = prop(&cand) {
+                        best = (cand, m);
+                        improved = true;
+                        break;
+                    }
+                }
+                if !improved {
+                    break;
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case})\n  minimal input: {:?}\n  error: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// No shrinking (for inputs where smaller isn't meaningful).
+pub fn no_shrink<T: Clone>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+/// Shrink a Vec<f32> by halving and by zeroing elements.
+pub fn shrink_vec_f32(v: &Vec<f32>) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+    }
+    if let Some(i) = v.iter().position(|&x| x != 0.0) {
+        let mut z = v.clone();
+        z[i] = 0.0;
+        out.push(z);
+    }
+    out
+}
+
+/// Shrink a usize toward 1.
+pub fn shrink_usize_to_one(n: &usize) -> Vec<usize> {
+    let n = *n;
+    let mut out = Vec::new();
+    if n > 1 {
+        out.push(n / 2);
+        out.push(n - 1);
+    }
+    out
+}
+
+/// Generate a random f32 vector with magnitudes spanning several decades
+/// (exercises numeric edge behaviour better than uniform [0,1)).
+pub fn gen_vec_f32(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let len = 1 + rng.below(max_len.max(1));
+    (0..len)
+        .map(|_| {
+            let mag = 10f64.powf(rng.range_f64(-6.0, 4.0));
+            (rng.gaussian() * mag) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            1,
+            |r| gen_vec_f32(r, 32),
+            shrink_vec_f32,
+            |v| {
+                if v.iter().all(|x| x.is_finite()) {
+                    Ok(())
+                } else {
+                    Err("non-finite".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let res = std::panic::catch_unwind(|| {
+            check(
+                2,
+                |r| {
+                    let len = 1 + r.below(64);
+                    vec![1.0f32; len]
+                },
+                shrink_vec_f32,
+                |v: &Vec<f32>| {
+                    if v.len() < 3 {
+                        Ok(())
+                    } else {
+                        Err(format!("len {} >= 3", v.len()))
+                    }
+                },
+            )
+        });
+        let err = res.expect_err("property should fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        // Shrinker halves until just above the threshold.
+        assert!(msg.contains("minimal input"), "{msg}");
+        assert!(msg.contains("len 3 >= 3") || msg.contains("len 4 >= 3"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // Same seed -> same sequence of generated cases.
+        let collect = |seed: u64| {
+            let mut v = Vec::new();
+            let mut rng = Rng::new(seed);
+            for _ in 0..5 {
+                v.push(gen_vec_f32(&mut rng, 8));
+            }
+            v
+        };
+        assert_eq!(collect(7), collect(7));
+    }
+}

@@ -1,0 +1,397 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build has no `rand` crate, so we implement the generators the
+//! coordinator needs: a PCG64-style core generator, SplitMix64 for seeding,
+//! Box-Muller gaussians, Marsaglia–Tsang gamma variates, and Dirichlet
+//! sampling (used by the non-IID partitioner, following He et al. 2020's
+//! Dirichlet(α) client split that the paper adopts).
+//!
+//! Everything is deterministic given a seed; experiments record their seeds
+//! so every table/figure is exactly reproducible.
+
+/// SplitMix64: used to expand a single `u64` seed into stream state.
+/// Reference: Steele, Lea, Flood — "Fast Splittable Pseudorandom Number
+/// Generators" (OOPSLA 2014).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32 combined into a 64-bit output generator (two streams).
+///
+/// We keep two independently-seeded 64-bit LCG states and combine their
+/// 32-bit PCG outputs; this gives a full 64-bit output word with PCG's
+/// statistical quality, which is plenty for simulation workloads.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: [u64; 2],
+    inc: [u64; 2],
+    /// Cached second gaussian from Box-Muller.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Rng {
+    /// Create a generator from a seed. Distinct seeds give independent
+    /// streams (seed expansion via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut r = Rng {
+            state: [splitmix64(&mut sm), splitmix64(&mut sm)],
+            inc: [splitmix64(&mut sm) | 1, splitmix64(&mut sm) | 1],
+            gauss_spare: None,
+        };
+        // Warm up so that near-zero seeds decorrelate.
+        for _ in 0..4 {
+            r.next_u64();
+        }
+        r
+    }
+
+    /// Derive a child generator; `tag` distinguishes siblings. Used to give
+    /// each client / round / layer its own stream without sharing state.
+    pub fn child(&self, tag: u64) -> Rng {
+        // Mix current state with the tag through SplitMix.
+        let mut s = self.state[0] ^ self.state[1].rotate_left(17) ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Rng::new(splitmix64(&mut s))
+    }
+
+    #[inline]
+    fn pcg32(state: &mut u64, inc: u64) -> u32 {
+        let old = *state;
+        *state = old.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        Self::pcg32(&mut self.state[0], self.inc[0])
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let hi = Self::pcg32(&mut self.state[0], self.inc[0]) as u64;
+        let lo = Self::pcg32(&mut self.state[1], self.inc[1]) as u64;
+        (hi << 32) | lo
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random bits into the mantissa.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n). Unbiased via Lemire's multiply-shift with
+    /// rejection below the `2^64 mod n` threshold.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let threshold = n.wrapping_neg() % n; // 2^64 mod n
+        loop {
+            let m = (self.next_u64() as u128) * (n as u128);
+            if (m as u64) >= threshold {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard gaussian via Box-Muller (with spare caching).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(s) = self.gauss_spare.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Gaussian with mean/std.
+    pub fn gaussian_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gaussian()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia & Tsang (2000); shape > 0.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0, "gamma shape must be positive");
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = loop {
+                let u = self.f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.gaussian();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Sample from Dirichlet(alpha * 1_k): normalized iid Gamma(alpha)
+    /// variates. Used for the non-IID label partition (He et al. 2020b).
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        assert!(k > 0);
+        let mut v: Vec<f64> = (0..k).map(|_| self.gamma(alpha).max(1e-300)).collect();
+        let s: f64 = v.iter().sum();
+        for x in v.iter_mut() {
+            *x /= s;
+        }
+        v
+    }
+
+    /// Sample an index from an (unnormalized, nonnegative) weight vector.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical weights sum to zero");
+        let mut t = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w;
+            if t < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        if xs.is_empty() {
+            return;
+        }
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Fill a slice with He-normal (fan_in) initialized f32 values —
+    /// mirrors the init the paper uses (He et al. 2015).
+    pub fn fill_he_normal(&mut self, out: &mut [f32], fan_in: usize) {
+        let std = (2.0 / fan_in.max(1) as f64).sqrt();
+        for v in out.iter_mut() {
+            *v = self.gaussian_ms(0.0, std) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn child_streams_differ() {
+        let root = Rng::new(7);
+        let mut a = root.child(0);
+        let mut b = root.child(1);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let x = r.below(7);
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gaussian();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(4);
+        for &shape in &[0.3, 0.5, 1.0, 2.5, 10.0] {
+            let n = 20_000;
+            let mut s = 0.0;
+            for _ in 0..n {
+                let g = r.gamma(shape);
+                assert!(g >= 0.0);
+                s += g;
+            }
+            let mean = s / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.15 * shape.max(0.5),
+                "shape={shape} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(5);
+        for &alpha in &[0.1, 0.5, 1.0, 5.0] {
+            let p = r.dirichlet(alpha, 10);
+            assert_eq!(p.len(), 10);
+            let s: f64 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_behaviour() {
+        // Small alpha -> spiky distributions (high max); large alpha -> flat.
+        let mut r = Rng::new(6);
+        let trials = 200;
+        let avg_max = |r: &mut Rng, alpha: f64| -> f64 {
+            (0..trials)
+                .map(|_| {
+                    r.dirichlet(alpha, 10)
+                        .into_iter()
+                        .fold(0.0f64, |a, b| a.max(b))
+                })
+                .sum::<f64>()
+                / trials as f64
+        };
+        let spiky = avg_max(&mut r, 0.1);
+        let flat = avg_max(&mut r, 100.0);
+        assert!(spiky > 0.5, "spiky={spiky}");
+        assert!(flat < 0.2, "flat={flat}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(7);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..4000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(9);
+        let s = r.sample_indices(20, 8);
+        assert_eq!(s.len(), 8);
+        let mut t = s.clone();
+        t.sort_unstable();
+        t.dedup();
+        assert_eq!(t.len(), 8);
+        assert!(t.iter().all(|&i| i < 20));
+    }
+
+    #[test]
+    fn he_init_variance() {
+        let mut r = Rng::new(10);
+        let fan_in = 128;
+        let mut buf = vec![0f32; 40_000];
+        r.fill_he_normal(&mut buf, fan_in);
+        let mean = buf.iter().map(|&x| x as f64).sum::<f64>() / buf.len() as f64;
+        let var = buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
+        let expected = 2.0 / fan_in as f64;
+        assert!((var - expected).abs() < 0.15 * expected, "var={var} expected={expected}");
+    }
+}

@@ -1,0 +1,176 @@
+//! Minimal scoped thread pool (no `tokio`/`rayon` offline).
+//!
+//! The coordinator uses this to fan client local-training jobs out across
+//! cores. On the single-core CI box the pool degenerates to sequential
+//! execution, but the structure (and its tests) keep the runtime ready for
+//! multi-core hosts. Jobs are `FnOnce` closures; `scope_map` provides the
+//! common "map a function over items in parallel, preserving order" shape.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size worker pool. Dropping the pool joins all workers.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    sender: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                thread::Builder::new()
+                    .name(format!("fedpara-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // Sender dropped: shut down.
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { workers, sender: Some(sender) }
+    }
+
+    /// Pool sized to the machine (capped: PJRT CPU execution is itself
+    /// single-threaded per call and we avoid oversubscription).
+    pub fn for_host() -> ThreadPool {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n.min(8))
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Map `f` over `items` on the pool, blocking until all complete, and
+    /// return outputs in input order. Panics in jobs are propagated.
+    pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            self.execute(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(item)));
+                // Receiver may be gone if an earlier job already panicked.
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, res) = rx.recv().expect("all senders dropped early");
+            match res {
+                Ok(r) => slots[i] = Some(r),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+        slots.into_iter().map(|s| s.expect("missing result")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Close the channel so workers exit, then join them.
+        self.sender.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.scope_map((0..50).collect::<Vec<usize>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_on_single_worker() {
+        let pool = ThreadPool::new(1);
+        let out = pool.scope_map(vec![3usize, 1, 4], |x| x + 1);
+        assert_eq!(out, vec![4, 2, 5]);
+    }
+
+    #[test]
+    fn scope_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.scope_map(Vec::<usize>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn scope_map_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        pool.scope_map(vec![0usize, 1, 2], |x| {
+            if x == 1 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f = Arc::clone(&flag);
+        pool.execute(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(pool); // Must not hang; job must have run.
+        assert_eq!(flag.load(Ordering::SeqCst), 1);
+    }
+}

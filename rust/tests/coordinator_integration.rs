@@ -1,0 +1,227 @@
+//! End-to-end coordinator tests over real artifacts: a small federation
+//! must learn, account its communication exactly, and honor the sharing /
+//! quantization / optimizer policies. Skipped when artifacts/ is missing.
+
+use std::path::PathBuf;
+
+use fedpara::config::{Optimizer, RunConfig, Sharing};
+use fedpara::coordinator::Federation;
+use fedpara::data::{partition, synth_vision};
+use fedpara::runtime::Engine;
+use fedpara::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Split a generated dataset into per-client datasets (IID).
+fn iid_locals(
+    spec: &synth_vision::VisionSpec,
+    n: usize,
+    clients: usize,
+    seed: u64,
+) -> (Vec<fedpara::data::Dataset>, fedpara::data::Dataset) {
+    let data = synth_vision::generate(spec, n, seed);
+    let test = synth_vision::generate(spec, 512, seed ^ 0xE0E0);
+    let mut rng = Rng::new(seed);
+    let part = partition::iid(data.len(), clients, &mut rng);
+    let locals = part.clients.iter().map(|idx| data.subset(idx)).collect();
+    (locals, test)
+}
+
+fn base_cfg(artifact: &str) -> RunConfig {
+    RunConfig {
+        artifact: artifact.into(),
+        sample_frac: 0.5,
+        rounds: 6,
+        local_epochs: 1,
+        lr: 0.1,
+        lr_decay: 0.992,
+        optimizer: Optimizer::FedAvg,
+        quantize_upload: false,
+        sharing: Sharing::Full,
+        eval_every: 3,
+        seed: 1,
+    }
+}
+
+#[test]
+fn fedavg_learns_and_accounts_comm() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let spec = synth_vision::mnist_like();
+    let (locals, test) = iid_locals(&spec, 8 * 80, 8, 11);
+    let cfg = base_cfg("mlp10_orig");
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+
+    let before = fed.evaluate_global().unwrap().accuracy();
+    fed.run(6).unwrap();
+    let after = fed.evaluate_global().unwrap().accuracy();
+    assert!(
+        after > before + 0.1,
+        "federated training failed to learn: {before:.3} -> {after:.3}"
+    );
+
+    // Comm accounting: 2 × participants × model_bytes × rounds.
+    let model_bytes = fed.meta().full_model_bytes() as u64;
+    let expected = 2 * 4 * model_bytes * 6; // 4 participants/round (8 × 0.5)
+    assert_eq!(fed.comm.total_bytes(), expected);
+
+    // Loss decreases across rounds.
+    let losses: Vec<f64> = fed.reports.iter().map(|r| r.mean_train_loss).collect();
+    assert!(losses.last().unwrap() < losses.first().unwrap());
+}
+
+#[test]
+fn fedpara_artifact_transfers_fewer_bytes_per_round() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let spec = synth_vision::cifar10_like();
+    let (locals, test) = iid_locals(&spec, 6 * 64, 6, 12);
+    let (l2, t2) = (locals.clone(), test.clone());
+
+    let mut orig = Federation::new(&engine, base_cfg("vgg10_orig"), locals, test).unwrap();
+    let mut fp = Federation::new(&engine, base_cfg("vgg10_fedpara_g01"), l2, t2).unwrap();
+    orig.run_round().unwrap();
+    fp.run_round().unwrap();
+    let ratio = orig.comm.total_bytes() as f64 / fp.comm.total_bytes() as f64;
+    // vgg10_orig ≈ 308k params vs fedpara γ=0.1 ≈ 98k → ≈3.1× fewer bytes.
+    assert!(ratio > 2.0, "expected ≥2x comm reduction, got {ratio:.2}x");
+}
+
+#[test]
+fn pfedpara_transfers_only_global_half() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let spec = synth_vision::femnist_like();
+    let (locals, test) = iid_locals(&spec, 4 * 96, 4, 13);
+    let mut cfg = base_cfg("mlp62_pfedpara");
+    cfg.sharing = Sharing::GlobalSegments;
+    cfg.sample_frac = 1.0;
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    fed.run_round().unwrap();
+    let meta = fed.meta();
+    let expected = 2 * 4 * meta.global_bytes() as u64; // 4 clients, up+down
+    assert_eq!(fed.comm.total_bytes(), expected);
+    assert!(meta.global_bytes() < meta.full_model_bytes());
+}
+
+#[test]
+fn local_only_never_communicates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let spec = synth_vision::mnist_like();
+    let (locals, test) = iid_locals(&spec, 4 * 64, 4, 14);
+    let mut cfg = base_cfg("mlp10_orig");
+    cfg.sharing = Sharing::LocalOnly;
+    let mut fed = Federation::new(&engine, cfg, locals.clone(), test).unwrap();
+    fed.run(3).unwrap();
+    assert_eq!(fed.comm.total_bytes(), 0);
+    // Clients still learn locally: personalized eval on own data improves
+    // over a fresh model (use the train shards as "own" test sets).
+    let accs = fed.evaluate_personalized(&locals).unwrap();
+    let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+    assert!(mean > 0.2, "local-only clients failed to learn: {mean:.3}");
+}
+
+#[test]
+fn quantized_upload_halves_uplink() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let spec = synth_vision::mnist_like();
+    let (locals, test) = iid_locals(&spec, 4 * 64, 4, 15);
+    let mut cfg = base_cfg("mlp10_orig");
+    cfg.quantize_upload = true;
+    cfg.sample_frac = 1.0;
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    fed.run_round().unwrap();
+    let model_bytes = fed.meta().full_model_bytes() as u64;
+    // Down: 4 clients × 4-byte model; up: 4 clients × 2-byte model.
+    assert_eq!(fed.comm.down_bytes, 4 * model_bytes);
+    assert_eq!(fed.comm.up_bytes, 4 * model_bytes / 2);
+}
+
+#[test]
+fn optimizer_variants_run_and_learn() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let spec = synth_vision::mnist_like();
+    for opt in [
+        Optimizer::FedProx { mu: 0.1 },
+        Optimizer::Scaffold,
+        Optimizer::FedDyn { alpha: 0.1 },
+        Optimizer::FedAdam,
+    ] {
+        let (locals, test) = iid_locals(&spec, 6 * 64, 6, 16);
+        let mut cfg = base_cfg("mlp10_orig");
+        cfg.optimizer = opt;
+        cfg.rounds = 4;
+        let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+        let before = fed.evaluate_global().unwrap().accuracy();
+        fed.run(4).unwrap();
+        let after = fed.evaluate_global().unwrap().accuracy();
+        assert!(
+            after > before,
+            "{}: accuracy {before:.3} -> {after:.3}",
+            opt.name()
+        );
+        for r in &fed.reports {
+            assert!(r.mean_train_loss.is_finite(), "{}: NaN loss", opt.name());
+        }
+    }
+}
+
+#[test]
+fn scaffold_accounts_double_traffic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let spec = synth_vision::mnist_like();
+    let (locals, test) = iid_locals(&spec, 4 * 64, 4, 17);
+    let mut cfg = base_cfg("mlp10_orig");
+    cfg.optimizer = Optimizer::Scaffold;
+    cfg.sample_frac = 1.0;
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    fed.run_round().unwrap();
+    let model_bytes = fed.meta().full_model_bytes() as u64;
+    // Model + control variate in both directions.
+    assert_eq!(fed.comm.total_bytes(), 2 * 2 * 4 * model_bytes);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let spec = synth_vision::mnist_like();
+    let run = || {
+        let (locals, test) = iid_locals(&spec, 4 * 64, 4, 18);
+        let mut fed = Federation::new(&engine, base_cfg("mlp10_orig"), locals, test).unwrap();
+        fed.run(3).unwrap();
+        fed.server_global()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn fedper_keeps_last_layer_local() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let spec = synth_vision::femnist_like();
+    let (locals, test) = iid_locals(&spec, 4 * 96, 4, 19);
+    let mut cfg = base_cfg("mlp62_orig");
+    cfg.sharing = Sharing::FedPer { local_prefixes: vec!["fc2".into()] };
+    cfg.sample_frac = 1.0;
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    fed.run_round().unwrap();
+    let meta = fed.meta();
+    // Transfer = everything except fc2 (+bias): strictly less than full,
+    // but only slightly (the paper notes FedPer's reduction is ~1.07×).
+    let per_client = fed.comm.total_bytes() / (2 * 4);
+    assert!(per_client < meta.full_model_bytes() as u64);
+    assert!(per_client > (meta.full_model_bytes() as f64 * 0.8) as u64);
+}

@@ -1,0 +1,221 @@
+//! Integration: load real AOT artifacts through PJRT and check the whole
+//! train/eval path end-to-end (numerics, shapes, optimizer semantics).
+//!
+//! Requires `make artifacts` to have run; tests skip (with a message) when
+//! the artifacts directory is missing so `cargo test` stays green on a
+//! fresh checkout.
+
+use std::path::PathBuf;
+
+use fedpara::data::{synth_vision, Dataset};
+use fedpara::runtime::Engine;
+use fedpara::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Build stacked train batches from a synthetic dataset.
+fn batches(d: &Dataset, n: usize, b: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+    let idx: Vec<usize> = (0..d.len()).collect();
+    let stack = fedpara::data::assemble_batches(d, &idx, n, b, rng);
+    (stack.x, stack.y)
+}
+
+#[test]
+fn mlp_artifact_trains_and_learns() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let rt = engine.load("mlp10_orig").unwrap();
+    let meta = &rt.meta;
+    assert_eq!(meta.train.feature_dim, 784);
+
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, 512, 42);
+    let mut rng = Rng::new(7);
+    let mut params = meta.layout.init_params(&mut rng);
+
+    // Eval before training.
+    let (ex, ey) = {
+        let idx: Vec<usize> = (0..data.len()).collect();
+        let s = fedpara::data::assemble_batches(
+            &data,
+            &idx,
+            meta.eval.nbatches,
+            meta.eval.batch,
+            &mut rng,
+        );
+        (s.x, s.y)
+    };
+    let before = rt.eval_call(&params, &ex, &ey).unwrap();
+
+    // A few local epochs of training.
+    let mut last_loss = f32::INFINITY;
+    let mut first_loss = None;
+    for _ in 0..10 {
+        let (tx, ty) = batches(&data, meta.train.nbatches, meta.train.batch, &mut rng);
+        let out = rt.train_epoch(&params, &tx, &ty, 0.1, None, None, 0.0).unwrap();
+        params = out.params;
+        last_loss = out.mean_loss;
+        first_loss.get_or_insert(out.mean_loss);
+    }
+    let after = rt.eval_call(&params, &ex, &ey).unwrap();
+
+    assert!(last_loss.is_finite());
+    assert!(
+        last_loss < first_loss.unwrap(),
+        "loss did not decrease: {first_loss:?} -> {last_loss}"
+    );
+    assert!(
+        after.accuracy() > before.accuracy(),
+        "accuracy did not improve: {:.3} -> {:.3}",
+        before.accuracy(),
+        after.accuracy()
+    );
+    assert!(after.accuracy() > 0.3, "final accuracy too low: {}", after.accuracy());
+}
+
+#[test]
+fn fedpara_artifact_trains() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let rt = engine.load("mlp10_pfedpara").unwrap();
+    let meta = &rt.meta;
+    // pFedPara transfers strictly less than the full parameter vector.
+    assert!(meta.global_len < meta.param_count);
+
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, 256, 3);
+    let mut rng = Rng::new(8);
+    let mut params = meta.layout.init_params(&mut rng);
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let (tx, ty) = batches(&data, meta.train.nbatches, meta.train.batch, &mut rng);
+        let out = rt.train_epoch(&params, &tx, &ty, 0.1, None, None, 0.0).unwrap();
+        params = out.params;
+        losses.push(out.mean_loss);
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(losses.last().unwrap() < losses.first().unwrap());
+}
+
+#[test]
+fn prox_and_correction_inputs_change_updates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let rt = engine.load("mlp10_orig").unwrap();
+    let meta = &rt.meta;
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, 128, 4);
+    let mut rng = Rng::new(9);
+    let params = meta.layout.init_params(&mut rng);
+    let (tx, ty) = batches(&data, meta.train.nbatches, meta.train.batch, &mut rng);
+
+    let plain = rt.train_epoch(&params, &tx, &ty, 0.05, None, None, 0.0).unwrap();
+
+    // SCAFFOLD-style constant correction shifts each of the N steps by
+    // -lr * c.
+    let c = vec![0.01f32; meta.param_count];
+    let corrected = rt.train_epoch(&params, &tx, &ty, 0.05, Some(&c), None, 0.0).unwrap();
+    let n_steps = meta.train.nbatches as f32;
+    let expected_shift = 0.05 * 0.01 * n_steps;
+    let mean_shift: f32 = plain
+        .params
+        .iter()
+        .zip(corrected.params.iter())
+        .map(|(a, b)| a - b)
+        .sum::<f32>()
+        / meta.param_count as f32;
+    assert!(
+        (mean_shift - expected_shift).abs() < 0.15 * expected_shift,
+        "mean shift {mean_shift} vs expected {expected_shift}"
+    );
+
+    // FedProx with a large mu pulls parameters toward the anchor.
+    let anchor: Vec<f32> = params.iter().map(|p| p + 1.0).collect();
+    let prox = rt
+        .train_epoch(&params, &tx, &ty, 0.01, None, Some(&anchor), 10.0)
+        .unwrap();
+    let mean_move: f32 = prox
+        .params
+        .iter()
+        .zip(params.iter())
+        .map(|(a, b)| a - b)
+        .sum::<f32>()
+        / meta.param_count as f32;
+    assert!(mean_move > 0.05, "prox did not pull toward anchor: {mean_move}");
+}
+
+#[test]
+fn determinism_same_inputs_same_outputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let rt = engine.load("mlp10_orig").unwrap();
+    let meta = &rt.meta;
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, 128, 5);
+    let mut rng = Rng::new(10);
+    let params = meta.layout.init_params(&mut rng);
+    let (tx, ty) = batches(&data, meta.train.nbatches, meta.train.batch, &mut rng);
+    let a = rt.train_epoch(&params, &tx, &ty, 0.1, None, None, 0.0).unwrap();
+    let b = rt.train_epoch(&params, &tx, &ty, 0.1, None, None, 0.0).unwrap();
+    assert_eq!(a.params, b.params);
+    assert_eq!(a.mean_loss, b.mean_loss);
+}
+
+#[test]
+fn lstm_artifact_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let rt = engine.load("lstm_fedpara").unwrap();
+    let meta = &rt.meta;
+    assert!(meta.is_text);
+
+    let spec = fedpara::data::synth_text::shakespeare_like();
+    let data = fedpara::data::synth_text::generate(&spec, 256, 11);
+    let mut rng = Rng::new(11);
+    let mut params = meta.layout.init_params(&mut rng);
+    let mut losses = Vec::new();
+    for _ in 0..4 {
+        let idx: Vec<usize> = (0..data.len()).collect();
+        let s = fedpara::data::assemble_batches(
+            &data,
+            &idx,
+            meta.train.nbatches,
+            meta.train.batch,
+            &mut rng,
+        );
+        let out = rt.train_epoch(&params, &s.x, &s.y, 1.0, None, None, 0.0).unwrap();
+        params = out.params;
+        losses.push(out.mean_loss);
+    }
+    // Starting loss ≈ ln(80) ≈ 4.38; training must reduce it.
+    assert!(losses[0] < 6.0 && losses[0] > 3.0, "odd initial loss {}", losses[0]);
+    assert!(losses.last().unwrap() < &losses[0]);
+}
+
+#[test]
+fn eval_output_accounting() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).unwrap();
+    let rt = engine.load("mlp10_orig").unwrap();
+    let meta = &rt.meta;
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, 512, 6);
+    let mut rng = Rng::new(12);
+    let params = meta.layout.init_params(&mut rng);
+    let idx: Vec<usize> = (0..data.len()).collect();
+    let s = fedpara::data::assemble_batches(&data, &idx, meta.eval.nbatches, meta.eval.batch, &mut rng);
+    let out = rt.eval_call(&params, &s.x, &s.y).unwrap();
+    let denom = (meta.eval.nbatches * meta.eval.batch) as f64;
+    assert_eq!(out.denominator, denom);
+    assert!(out.correct >= 0.0 && out.correct <= denom);
+    // Untrained accuracy should be near chance (10 classes).
+    assert!(out.accuracy() < 0.35, "untrained acc suspiciously high: {}", out.accuracy());
+}
