@@ -59,6 +59,7 @@ fn main() -> Result<()> {
             sharing,
             eval_every: 0,
             seed: 23,
+            num_threads: 0,
         };
         let mut fed = Federation::new(&engine, cfg, trains.clone(), tests[0].clone())?;
         fed.run(rounds)?;

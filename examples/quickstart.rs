@@ -46,6 +46,7 @@ fn main() -> Result<()> {
             },
             eval_every: 2,
             seed: 42,
+            num_threads: 0,
         };
         let mut fed = Federation::new(&engine, cfg, locals.clone(), test.clone())?;
         println!(

@@ -1,0 +1,5 @@
+"""L2 build-time package: models, FedPara parameterizations, AOT lowering.
+
+Import as `from compile import models, train` with `python/` on the path
+(the tests do this via `python/tests/conftest.py`).
+"""

@@ -148,6 +148,30 @@ class Model:
         loss = cross_entropy(logits, y) * y.shape[0]
         return correct, loss
 
+    def eval_per_sample_from_weights(self, weights, x, y):
+        """Per-sample `(correct, loss)` vectors, both shaped `(B,)`.
+
+        The eval artifact returns these so the rust runtime can mask the
+        padded tail of a wrapped chunk exactly — scalar sums cannot be
+        un-counted, which double-counted samples whenever the test-set size
+        was not a multiple of the eval call size. Text models sum over each
+        sample's positions (the rust denominator uses
+        `eval_denominator / batch` predictions per sample).
+        """
+        if self.is_text:
+            logits, targets = self._text_logits_weights(weights, x)
+            pred = jnp.argmax(logits, axis=-1)
+            correct = jnp.sum((pred == targets).astype(jnp.float32), axis=-1)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+            return correct, jnp.sum(nll, axis=-1)
+        logits = self.forward_weights(weights, x)
+        pred = jnp.argmax(logits, axis=-1)
+        correct = (pred == y.astype(jnp.int32)).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y.astype(jnp.int32)[..., None], axis=-1)[..., 0]
+        return correct, nll
+
     def eval_denominator(self, batch: int) -> int:
         """Number of predictions per batch (text predicts every position)."""
         if self.is_text:

@@ -65,10 +65,14 @@ def make_train_epoch(model):
 
 
 def make_eval(model):
-    """Build the batched eval function: (params, x, y) -> (correct, loss_sum).
+    """Build the batched eval function:
+    (params, x, y) -> (correct (N·B,), loss (N·B,)) per-sample vectors.
 
-    x: (N, B, D), y: (N, B). Accuracy denominator is
-    N · model.eval_denominator(B) on the rust side.
+    x: (N, B, D), y: (N, B). Per-sample outputs let the rust side mask the
+    padded tail of the final chunk exactly (`eval_call_partial`), so
+    accuracy never double-counts when the test-set size is not a multiple
+    of the eval call size. The rust accuracy denominator stays
+    `counted_samples · eval_denominator(B) / B`.
     """
 
     def eval_batches(params, x, y):
@@ -79,14 +83,12 @@ def make_eval(model):
 
         def step(carry, batch):
             xb, yb = batch
-            c, l = model.eval_batch_from_weights(weights, xb, yb)
+            c, l = model.eval_per_sample_from_weights(weights, xb, yb)
             # Keep yb alive for text models (see make_train_epoch).
-            return (carry[0] + c + 0.0 * jnp.sum(yb), carry[1] + l), 0.0
+            return carry, (c + 0.0 * jnp.sum(yb), l)
 
-        (correct, loss), _ = jax.lax.scan(
-            step, (jnp.float32(0.0), jnp.float32(0.0)), (x, y)
-        )
-        return correct, loss
+        _, (correct, loss) = jax.lax.scan(step, jnp.float32(0.0), (x, y))
+        return correct.reshape(-1), loss.reshape(-1)
 
     return eval_batches
 

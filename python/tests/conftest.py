@@ -1,0 +1,7 @@
+"""Put `python/` on sys.path so `from compile import ...` works regardless
+of the pytest invocation directory."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,10 +1,16 @@
-//! Bench: end-to-end federated rounds through the real PJRT artifacts —
-//! the numbers behind Supp. Table 7's t_comp and the §Perf log. One row per
-//! paper model family (original vs FedPara), measuring a full round
-//! (download → E local epochs → upload → aggregate) and the eval call.
+//! Bench: end-to-end federated rounds — the numbers behind Supp. Table 7's
+//! t_comp and the §Perf log.
 //!
-//! Requires `make artifacts`; exits gracefully otherwise so `cargo bench`
-//! stays green on fresh checkouts.
+//! Two sections:
+//!
+//! 1. **Pool-size sweep** (always runs, native backend): the same
+//!    federation at worker pool sizes 1/2/4/8, reporting per-round wall
+//!    time and speedup vs. sequential. Results are bit-identical across
+//!    pool sizes (asserted by `tests/parallel_round.rs`); this bench
+//!    measures only wall clock.
+//! 2. **AOT artifacts** (requires `make artifacts` + `--features pjrt`):
+//!    one row per paper model family, as before. Skipped gracefully so
+//!    `cargo bench` stays green on fresh checkouts.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -16,15 +22,67 @@ use fedpara::runtime::Engine;
 use fedpara::util::rng::Rng;
 use fedpara::util::stats::Welford;
 
-fn main() -> anyhow::Result<()> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP round bench: artifacts/ not built (run `make artifacts`)");
-        return Ok(());
+fn native_cfg(artifact: &str, num_threads: usize) -> RunConfig {
+    RunConfig {
+        artifact: artifact.into(),
+        sample_frac: 1.0,
+        rounds: 8,
+        local_epochs: 2,
+        lr: 0.05,
+        lr_decay: 1.0,
+        optimizer: Optimizer::FedAvg,
+        quantize_upload: false,
+        sharing: Sharing::Full,
+        eval_every: 0,
+        seed: 4,
+        num_threads,
     }
-    let engine = Engine::new(&dir)?;
+}
 
-    println!("== end-to-end round (4 clients, E=2) ==");
+fn pool_sweep() -> anyhow::Result<()> {
+    let engine = Engine::native();
+    let clients = 8;
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, clients * 96, 1);
+    let test = synth_vision::generate(&spec, 128, 2);
+    let mut rng = Rng::new(3);
+    let part = partition::iid(data.len(), clients, &mut rng);
+    let locals: Vec<_> = part.clients.iter().map(|i| data.subset(i)).collect();
+
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "== pool-size sweep (native backend, {clients} clients, E=2, host has {host} cores) =="
+    );
+    let mut baseline = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let mut fed = Federation::new(
+            &engine,
+            native_cfg("native_mlp10_fedpara", threads),
+            locals.clone(),
+            test.clone(),
+        )?;
+        fed.run_round()?; // Warmup.
+        let mut w = Welford::new();
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            fed.run_round()?;
+            w.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        if threads == 1 {
+            baseline = w.mean();
+        }
+        println!(
+            "pool={threads:<2} round {:>8.1} ms ± {:>6.1}   speedup {:>5.2}x",
+            w.mean(),
+            w.std_dev(),
+            baseline / w.mean()
+        );
+    }
+    Ok(())
+}
+
+fn artifact_rows(engine: &Engine) -> anyhow::Result<()> {
+    println!("\n== end-to-end round (AOT artifacts, 4 clients, E=2) ==");
     for artifact in [
         "mlp10_orig",
         "mlp62_pfedpara",
@@ -48,24 +106,13 @@ fn main() -> anyhow::Result<()> {
         let mut rng = Rng::new(3);
         let part = partition::iid(data.len(), 4, &mut rng);
         let locals: Vec<_> = part.clients.iter().map(|i| data.subset(i)).collect();
-        let cfg = RunConfig {
-            artifact: artifact.into(),
-            sample_frac: 1.0,
-            rounds: 8,
-            local_epochs: 2,
-            lr: 0.05,
-            lr_decay: 1.0,
-            optimizer: Optimizer::FedAvg,
-            quantize_upload: false,
-            sharing: if meta.scheme == "pfedpara" {
-                Sharing::GlobalSegments
-            } else {
-                Sharing::Full
-            },
-            eval_every: 0,
-            seed: 4,
+        let mut cfg = native_cfg(artifact, 0);
+        cfg.sharing = if meta.scheme == "pfedpara" {
+            Sharing::GlobalSegments
+        } else {
+            Sharing::Full
         };
-        let mut fed = Federation::new(&engine, cfg, locals, test)?;
+        let mut fed = Federation::new(engine, cfg, locals, test)?;
         fed.run_round()?; // Warmup (includes PJRT compile).
         let mut w = Welford::new();
         for _ in 0..5 {
@@ -89,33 +136,34 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\n== LSTM round ==");
-    {
-        let spec = synth_text::shakespeare_like();
-        let (locals, test) = synth_text::generate_federation(&spec, 4, 48, 0.0, 128, 5);
-        for artifact in ["lstm_orig", "lstm_fedpara"] {
-            let cfg = RunConfig {
-                artifact: artifact.into(),
-                sample_frac: 1.0,
-                rounds: 8,
-                local_epochs: 1,
-                lr: 1.0,
-                lr_decay: 1.0,
-                optimizer: Optimizer::FedAvg,
-                quantize_upload: false,
-                sharing: Sharing::Full,
-                eval_every: 0,
-                seed: 6,
-            };
-            let mut fed = Federation::new(&engine, cfg, locals.clone(), test.clone())?;
+    let spec = synth_text::shakespeare_like();
+    let (locals, test) = synth_text::generate_federation(&spec, 4, 48, 0.0, 128, 5);
+    for artifact in ["lstm_orig", "lstm_fedpara"] {
+        let mut cfg = native_cfg(artifact, 0);
+        cfg.local_epochs = 1;
+        cfg.lr = 1.0;
+        cfg.seed = 6;
+        let mut fed = Federation::new(engine, cfg, locals.clone(), test.clone())?;
+        fed.run_round()?;
+        let mut w = Welford::new();
+        for _ in 0..5 {
+            let t0 = Instant::now();
             fed.run_round()?;
-            let mut w = Welford::new();
-            for _ in 0..5 {
-                let t0 = Instant::now();
-                fed.run_round()?;
-                w.push(t0.elapsed().as_secs_f64() * 1e3);
-            }
-            println!("{artifact:<22} round {:>9.1} ms ± {:>6.1}", w.mean(), w.std_dev());
+            w.push(t0.elapsed().as_secs_f64() * 1e3);
         }
+        println!("{artifact:<22} round {:>9.1} ms ± {:>6.1}", w.mean(), w.std_dev());
     }
     Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    pool_sweep()?;
+
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP artifact rows: artifacts/ not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let engine = Engine::new(&dir)?;
+    artifact_rows(&engine)
 }

@@ -76,6 +76,11 @@ pub struct RunConfig {
     /// Evaluate the global model every `eval_every` rounds (0 = only final).
     pub eval_every: usize,
     pub seed: u64,
+    /// Worker threads for the per-round client fan-out (0 = size the pool
+    /// to the host). Results are bit-identical for every pool size: client
+    /// RNG streams are keyed by `(round, cid)` and the reduce folds
+    /// outcomes in participant order regardless of completion order.
+    pub num_threads: usize,
 }
 
 impl Default for RunConfig {
@@ -92,6 +97,7 @@ impl Default for RunConfig {
             sharing: Sharing::Full,
             eval_every: 1,
             seed: 42,
+            num_threads: 0,
         }
     }
 }
@@ -184,5 +190,6 @@ mod tests {
         assert!(c.sample_frac > 0.0 && c.sample_frac <= 1.0);
         assert!(c.lr > 0.0);
         assert_eq!(c.sharing, Sharing::Full);
+        assert_eq!(c.num_threads, 0, "default pool auto-sizes to the host");
     }
 }

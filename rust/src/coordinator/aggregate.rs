@@ -10,23 +10,66 @@
 //! All operate on flat f32 vectors (the transfer representation), so they
 //! compose with the pFedPara global/local split transparently.
 
+/// Streaming sample-count-weighted mean accumulator.
+///
+/// The round loop folds each client upload into this as it arrives (in
+/// participant order) and drops the upload immediately, so aggregation
+/// itself holds `O(dim)` state instead of the `O(participants × dim)` the
+/// old materialize-all-uploads path needed (the ordered fold can still
+/// buffer out-of-order job results upstream — see `ThreadPool::scope_fold`).
+/// Accumulation is f64 for the same numerics as the batch
+/// [`weighted_mean`].
+#[derive(Clone, Debug)]
+pub struct WeightedAccumulator {
+    sum: Vec<f64>,
+    total_weight: f64,
+    count: usize,
+}
+
+impl WeightedAccumulator {
+    pub fn new(dim: usize) -> WeightedAccumulator {
+        WeightedAccumulator { sum: vec![0.0; dim], total_weight: 0.0, count: 0 }
+    }
+
+    /// Fold one vector in with weight `w` (> 0).
+    pub fn push(&mut self, v: &[f32], w: f64) {
+        assert_eq!(v.len(), self.sum.len(), "inconsistent vector lengths");
+        assert!(w > 0.0, "non-positive weight");
+        for (o, &x) in self.sum.iter_mut().zip(v.iter()) {
+            *o += w * x as f64;
+        }
+        self.total_weight += w;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// The weighted mean of everything pushed so far.
+    pub fn mean(&self) -> Vec<f32> {
+        assert!(self.count > 0, "no vectors to aggregate");
+        assert!(self.total_weight > 0.0, "weights sum to zero");
+        let inv = 1.0 / self.total_weight;
+        self.sum.iter().map(|&x| (x * inv) as f32).collect()
+    }
+}
+
 /// Sample-count-weighted mean of client vectors. All vectors must share a
-/// length; weights must be positive.
+/// length; weights must be positive. (Batch convenience over
+/// [`WeightedAccumulator`]; the round loop streams instead.)
 pub fn weighted_mean(vectors: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
     assert_eq!(vectors.len(), weights.len());
     assert!(!vectors.is_empty(), "no vectors to aggregate");
-    let n = vectors[0].len();
-    let total: f64 = weights.iter().sum();
-    assert!(total > 0.0, "weights sum to zero");
-    let mut out = vec![0f64; n];
+    let mut acc = WeightedAccumulator::new(vectors[0].len());
     for (v, &w) in vectors.iter().zip(weights) {
-        assert_eq!(v.len(), n, "inconsistent vector lengths");
-        let w = w / total;
-        for (o, &x) in out.iter_mut().zip(v.iter()) {
-            *o += w * x as f64;
-        }
+        acc.push(v, w);
     }
-    out.into_iter().map(|x| x as f32).collect()
+    acc.mean()
 }
 
 /// In-place `a += s · b`.
@@ -121,10 +164,24 @@ impl ScaffoldState {
         let w = vec![1.0; s];
         let mean_dm = weighted_mean(delta_models, &w);
         let mean_dc = weighted_mean(delta_controls, &w);
+        self.step_from_means(theta, &mean_dm, &mean_dc, s)
+    }
+
+    /// Streaming form of [`ScaffoldState::step`]: the caller folds the
+    /// per-client deltas through [`WeightedAccumulator`]s (equal weights)
+    /// and hands over just the two means plus the participant count `s`.
+    pub fn step_from_means(
+        &mut self,
+        theta: &[f32],
+        mean_delta_model: &[f32],
+        mean_delta_control: &[f32],
+        s: usize,
+    ) -> Vec<f32> {
+        assert!(s > 0);
         let mut out = theta.to_vec();
-        axpy(&mut out, self.eta_g as f32, &mean_dm);
+        axpy(&mut out, self.eta_g as f32, mean_delta_model);
         let scale = s as f32 / self.num_clients as f32;
-        axpy(&mut self.c, scale, &mean_dc);
+        axpy(&mut self.c, scale, mean_delta_control);
         out
     }
 }
@@ -148,6 +205,14 @@ impl FedDynState {
         assert!(s > 0);
         let w = vec![1.0; s];
         let avg = weighted_mean(client_models, &w);
+        self.step_from_mean(theta, avg, s)
+    }
+
+    /// Streaming form of [`FedDynState::step`]: takes the pre-folded
+    /// unweighted mean of the participating client models plus the
+    /// participant count `s`.
+    pub fn step_from_mean(&mut self, theta: &[f32], avg: Vec<f32>, s: usize) -> Vec<f32> {
+        assert!(s > 0);
         let scale = (self.alpha * s as f64 / self.num_clients as f64) as f32;
         for i in 0..self.h.len() {
             self.h[i] -= scale * (avg[i] - theta[i]);
@@ -172,6 +237,32 @@ mod tests {
         let a = vec![vec![1.0f32, 0.0], vec![3.0, 4.0]];
         let m = weighted_mean(&a, &[1.0, 3.0]);
         assert_eq!(m, vec![2.5, 3.0]);
+    }
+
+    #[test]
+    fn streaming_accumulator_matches_batch_mean() {
+        let mut rng = Rng::new(31);
+        let k = 7;
+        let n = 33;
+        let vs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        let ws: Vec<f64> = (0..k).map(|_| 0.5 + rng.f64() * 3.0).collect();
+        let batch = weighted_mean(&vs, &ws);
+        let mut acc = WeightedAccumulator::new(n);
+        for (v, &w) in vs.iter().zip(&ws) {
+            acc.push(v, w);
+        }
+        // Bit-identical: weighted_mean is defined on top of the accumulator.
+        assert_eq!(acc.mean(), batch);
+        assert_eq!(acc.count(), k);
+        assert!(!acc.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "no vectors")]
+    fn empty_accumulator_mean_panics() {
+        WeightedAccumulator::new(4).mean();
     }
 
     #[test]

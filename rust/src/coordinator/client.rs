@@ -1,12 +1,15 @@
 //! Per-client state held by the (simulated) federation.
 
+use std::sync::Arc;
+
 use crate::data::Dataset;
 
 /// One client: its private data and whatever state persists across rounds.
 #[derive(Clone, Debug)]
 pub struct ClientState {
-    /// Private local dataset (never leaves the client).
-    pub data: Dataset,
+    /// Private local dataset (never leaves the client). Shared by `Arc` so
+    /// local-training jobs on the worker pool borrow it without copying.
+    pub data: Arc<Dataset>,
     /// Full-length parameter vector. Global segments are overwritten on
     /// download; local segments (pFedPara/FedPer) persist here.
     pub params: Vec<f32>,
@@ -21,7 +24,7 @@ pub struct ClientState {
 impl ClientState {
     pub fn new(data: Dataset, init_params: Vec<f32>) -> ClientState {
         ClientState {
-            data,
+            data: Arc::new(data),
             params: init_params,
             control: None,
             lambda: None,

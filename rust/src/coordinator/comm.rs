@@ -13,6 +13,28 @@
 /// paper's comparisons are ratios.
 pub const ENERGY_J_PER_BYTE: f64 = 2.5e-6;
 
+/// Per-job communication record: one client's traffic for one round.
+///
+/// Local-training jobs run on the worker pool and cannot touch the shared
+/// [`CommLedger`]; each job accumulates its own delta and the round loop
+/// merges them into the ledger **in participant order**, so ledger contents
+/// are byte-identical to a sequential round regardless of pool size.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommDelta {
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+}
+
+impl CommDelta {
+    pub fn record_upload(&mut self, bytes: u64) {
+        self.up_bytes += bytes;
+    }
+
+    pub fn record_download(&mut self, bytes: u64) {
+        self.down_bytes += bytes;
+    }
+}
+
 /// Running ledger of transferred bytes.
 #[derive(Clone, Debug, Default)]
 pub struct CommLedger {
@@ -37,6 +59,12 @@ impl CommLedger {
     pub fn record_download(&mut self, bytes: u64) {
         self.down_bytes += bytes;
         self.round_down += bytes;
+    }
+
+    /// Merge one client job's traffic into the current round.
+    pub fn apply(&mut self, delta: CommDelta) {
+        self.record_upload(delta.up_bytes);
+        self.record_download(delta.down_bytes);
     }
 
     /// Close out the current round's accounting.
@@ -110,6 +138,28 @@ mod tests {
         l.end_round();
         assert_eq!(l.total_bytes(), 250);
         assert_eq!(l.per_round, vec![(50, 100), (0, 100)]);
+    }
+
+    #[test]
+    fn delta_merge_matches_direct_recording() {
+        // Recording through per-job deltas must equal direct recording.
+        let mut direct = CommLedger::new();
+        direct.record_download(100);
+        direct.record_upload(40);
+        direct.record_download(200);
+        direct.record_upload(80);
+        direct.end_round();
+
+        let mut merged = CommLedger::new();
+        for (down, up) in [(100, 40), (200, 80)] {
+            let mut d = CommDelta::default();
+            d.record_download(down);
+            d.record_upload(up);
+            merged.apply(d);
+        }
+        merged.end_round();
+        assert_eq!(direct.per_round, merged.per_round);
+        assert_eq!(direct.total_bytes(), merged.total_bytes());
     }
 
     #[test]

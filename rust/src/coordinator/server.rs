@@ -2,25 +2,37 @@
 //!
 //! A [`Federation`] owns the client population, the server model, the
 //! optimizer state, and the communication ledger. Every round it samples
-//! clients, ships them the global parameters (download), runs their local
-//! epochs through the AOT train artifact, collects (optionally
-//! fp16-quantized) uploads, and aggregates with the configured strategy.
-//! Python never runs here — local training is one PJRT call per epoch.
+//! clients and fans one pure [`LocalTrainJob`] per participant out over a
+//! [`ThreadPool`]: each job downloads a parameter snapshot, runs its local
+//! epochs through the (Arc-shared, `Send + Sync`) [`ModelRuntime`], and
+//! returns its upload, its optimizer side-state, and a [`CommDelta`]. The
+//! reduce side folds outcomes **in participant order** on the coordinator
+//! thread — uploads stream into a [`WeightedAccumulator`] and are dropped
+//! as soon as they are folded, so aggregation typically holds `O(dim)`
+//! state rather than materializing every upload. (Peak memory is still
+//! `O(participants × dim)`: job parameter snapshots are materialized at
+//! fan-out, and out-of-order outcomes buffer until their fold turn — the
+//! win over collect-then-aggregate is the streaming drop of uploads, not
+//! an asymptotic bound.) The fixed fold
+//! order makes every ledger byte, loss, and server parameter bit-identical
+//! across pool sizes (client RNG streams are keyed by `(round, cid)`,
+//! never by worker).
 
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use super::aggregate::{self, AdamState, FedDynState, ScaffoldState};
+use super::aggregate::{self, AdamState, FedDynState, ScaffoldState, WeightedAccumulator};
 use super::client::ClientState;
-use super::comm::{quantize_fp16, CommLedger};
+use super::comm::{quantize_fp16, CommDelta, CommLedger};
 use super::sampler::Sampler;
 use crate::config::{Optimizer, RunConfig, Sharing};
 use crate::data::{assemble_batches, Dataset};
 use crate::parameterization::{Layout, SegmentKind};
 use crate::runtime::{Engine, EvalOutput, ModelRuntime};
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 
 /// Per-round record (feeds every accuracy-vs-communication figure).
 #[derive(Clone, Debug)]
@@ -51,9 +63,9 @@ enum ServerOpt {
 /// A running federation.
 pub struct Federation {
     pub cfg: RunConfig,
-    rt: Rc<ModelRuntime>,
+    rt: Arc<ModelRuntime>,
     /// Effective transfer layout (manifest layout with `Sharing` applied).
-    layout: Layout,
+    layout: Arc<Layout>,
     clients: Vec<ClientState>,
     test: Dataset,
     /// Full-length server parameter vector (local segments hold the common
@@ -63,6 +75,7 @@ pub struct Federation {
     pub comm: CommLedger,
     sampler: Sampler,
     root_rng: Rng,
+    pool: ThreadPool,
     pub round: usize,
     pub reports: Vec<RoundReport>,
 }
@@ -90,6 +103,181 @@ pub fn effective_layout(base: &Layout, sharing: &Sharing) -> Layout {
     l
 }
 
+/// Optimizer-specific inputs one local-training job carries.
+enum JobOpt {
+    Plain,
+    Prox { mu: f32 },
+    Scaffold {
+        c_global: Arc<Vec<f32>>,
+        c_i: Vec<f32>,
+        /// `1 / (K·η)` for the Option-II control update.
+        inv_k_eta: f32,
+    },
+    FedDyn { alpha: f32, lambda: Vec<f32> },
+}
+
+/// One participant's work for one round: download snapshot → local epochs →
+/// upload + optimizer side-state. Pure (owns or `Arc`-shares every input),
+/// so any worker thread can run it.
+struct LocalTrainJob {
+    cid: usize,
+    rt: Arc<ModelRuntime>,
+    layout: Arc<Layout>,
+    data: Arc<Dataset>,
+    /// The client's full parameter vector as of the previous round; the
+    /// job applies the download itself so a failed round leaves client
+    /// state untouched.
+    params: Vec<f32>,
+    /// Server global snapshot to scatter in on download (`None` when
+    /// local-only — nothing is transferred).
+    download: Option<Arc<Vec<f32>>>,
+    /// Client RNG stream, keyed by `(round, cid)` — pool-size independent.
+    rng: Rng,
+    lr: f32,
+    local_epochs: usize,
+    opt: JobOpt,
+    quantize_upload: bool,
+    local_only: bool,
+    /// Download bytes recorded at job construction.
+    comm: CommDelta,
+    /// Aggregation weight (client sample count).
+    weight: f64,
+}
+
+/// What a job hands back to the reduce.
+struct LocalTrainOutcome {
+    cid: usize,
+    /// Client's full parameter vector after local training.
+    params: Vec<f32>,
+    /// The global vector the server receives (dequantized wire values);
+    /// empty when local-only.
+    upload: Vec<f32>,
+    /// Sum of per-epoch mean losses, in epoch order.
+    loss_sum: f64,
+    weight: f64,
+    comm: CommDelta,
+    /// SCAFFOLD: updated client control and its (wire) delta.
+    new_control: Option<Vec<f32>>,
+    delta_control: Option<Vec<f32>>,
+    /// FedDyn: updated client λ state.
+    new_lambda: Option<Vec<f32>>,
+}
+
+impl LocalTrainJob {
+    fn run(self) -> Result<LocalTrainOutcome> {
+        let LocalTrainJob {
+            cid,
+            rt,
+            layout,
+            data,
+            params,
+            download,
+            mut rng,
+            lr,
+            local_epochs,
+            opt,
+            quantize_upload,
+            local_only,
+            mut comm,
+            weight,
+        } = self;
+        let t = rt.meta.train;
+        // ---- download -----------------------------------------------------
+        let mut p = params;
+        if let Some(g) = &download {
+            layout.scatter_global(&mut p, g);
+        }
+        // FedProx/FedDyn anchor and SCAFFOLD's control update need the
+        // post-download snapshot; plain FedAvg/FedAdam skip the clone.
+        let start = if matches!(opt, JobOpt::Plain) { Vec::new() } else { p.clone() };
+        let correction: Option<Vec<f32>> = match &opt {
+            JobOpt::Scaffold { c_global, c_i, .. } => Some(aggregate::sub(c_global, c_i)),
+            JobOpt::FedDyn { lambda, .. } => Some(lambda.iter().map(|&x| -x).collect()),
+            _ => None,
+        };
+        let (use_anchor, mu) = match &opt {
+            JobOpt::Prox { mu } => (true, *mu),
+            JobOpt::FedDyn { alpha, .. } => (true, *alpha),
+            _ => (false, 0.0),
+        };
+        let anchor = if use_anchor { Some(start.as_slice()) } else { None };
+
+        // ---- local training -----------------------------------------------
+        let mut loss_sum = 0.0f64;
+        let idx: Vec<usize> = (0..data.len()).collect();
+        for _epoch in 0..local_epochs {
+            let stack = assemble_batches(&data, &idx, t.nbatches, t.batch, &mut rng);
+            let out =
+                rt.train_epoch(&p, &stack.x, &stack.y, lr, correction.as_deref(), anchor, mu)?;
+            p = out.params;
+            loss_sum += out.mean_loss as f64;
+        }
+
+        // ---- optimizer side-state -----------------------------------------
+        let (new_control, mut delta_control, new_lambda) = match opt {
+            JobOpt::Scaffold { c_global, c_i, inv_k_eta } => {
+                // Option II: c_i⁺ = c_i − c + (x − y_i)/(K·η).
+                let mut new_c = Vec::with_capacity(c_i.len());
+                let mut delta_c = Vec::with_capacity(c_i.len());
+                for j in 0..c_i.len() {
+                    let v = c_i[j] - c_global[j] + inv_k_eta * (start[j] - p[j]);
+                    delta_c.push(v - c_i[j]);
+                    new_c.push(v);
+                }
+                (Some(new_c), Some(delta_c), None)
+            }
+            JobOpt::FedDyn { alpha, mut lambda } => {
+                for j in 0..lambda.len() {
+                    lambda[j] -= alpha * (p[j] - start[j]);
+                }
+                (None, None, Some(lambda))
+            }
+            JobOpt::Plain | JobOpt::Prox { .. } => (None, None, None),
+        };
+
+        // ---- upload -------------------------------------------------------
+        let mut upload = Vec::new();
+        if !local_only {
+            let mut up = layout.gather_global(&p);
+            let bytes = if quantize_upload {
+                let (deq, b) = quantize_fp16(&up);
+                up = deq;
+                b
+            } else {
+                (up.len() * 4) as u64
+            };
+            comm.record_upload(bytes);
+            if let Some(dc) = delta_control.take() {
+                // The SCAFFOLD control variate rides the same (quantized)
+                // uplink as the model — account and transform it the same
+                // way, so fp16 uploads don't get billed at fp32.
+                let dc = if quantize_upload {
+                    let (deq, b) = quantize_fp16(&dc);
+                    comm.record_upload(b);
+                    deq
+                } else {
+                    comm.record_upload((dc.len() * 4) as u64);
+                    dc
+                };
+                delta_control = Some(dc);
+            }
+            upload = up;
+        }
+
+        Ok(LocalTrainOutcome {
+            cid,
+            params: p,
+            upload,
+            loss_sum,
+            weight,
+            comm,
+            new_control,
+            delta_control,
+            new_lambda,
+        })
+    }
+}
+
 impl Federation {
     /// Build a federation over per-client datasets and a shared test set.
     pub fn new(
@@ -103,7 +291,7 @@ impl Federation {
         }
         let rt = engine.load(&cfg.artifact)?;
         let meta = &rt.meta;
-        let layout = effective_layout(&meta.layout, &cfg.sharing);
+        let layout = Arc::new(effective_layout(&meta.layout, &cfg.sharing));
         if matches!(cfg.optimizer, Optimizer::Scaffold | Optimizer::FedDyn { .. })
             && !matches!(cfg.sharing, Sharing::Full)
         {
@@ -120,7 +308,7 @@ impl Federation {
         let dim = meta.param_count;
         let opt = match cfg.optimizer {
             Optimizer::FedAvg | Optimizer::FedProx { .. } => ServerOpt::Plain,
-            Optimizer::FedAdam => ServerOpt::Adam(AdamState::new(layout_global_len(&layout))),
+            Optimizer::FedAdam => ServerOpt::Adam(AdamState::new(layout.global_len())),
             Optimizer::Scaffold => ServerOpt::Scaffold(ScaffoldState::new(dim, clients.len())),
             Optimizer::FedDyn { alpha } => {
                 ServerOpt::FedDyn(FedDynState::new(dim, alpha as f64, clients.len()))
@@ -130,6 +318,13 @@ impl Federation {
             Sharing::LocalOnly => Sampler::full(clients.len()),
             _ => Sampler::new(clients.len(), cfg.sample_frac, cfg.seed),
         };
+        // A round never has more jobs in flight than clients, so don't
+        // spawn (and later join) workers that could never be used.
+        let requested = match cfg.num_threads {
+            0 => ThreadPool::host_parallelism(),
+            n => n,
+        };
+        let pool = ThreadPool::new(requested.min(clients.len()));
         Ok(Federation {
             cfg,
             rt,
@@ -141,6 +336,7 @@ impl Federation {
             comm: CommLedger::new(),
             sampler,
             root_rng,
+            pool,
             round: 0,
             reports: Vec::new(),
         })
@@ -152,6 +348,11 @@ impl Federation {
 
     pub fn num_clients(&self) -> usize {
         self.clients.len()
+    }
+
+    /// Worker threads serving the per-round client fan-out.
+    pub fn pool_size(&self) -> usize {
+        self.pool.size()
     }
 
     /// Transferred bytes for one model download at this sharing policy.
@@ -169,149 +370,159 @@ impl Federation {
         let lr = self.current_lr();
         let participants = self.sampler.sample(self.round);
         let local_only = matches!(self.cfg.sharing, Sharing::LocalOnly);
-        let server_global = self.layout.gather_global(&self.server_params);
-        let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(participants.len());
-        let mut weights: Vec<f64> = Vec::with_capacity(participants.len());
-        let mut delta_controls: Vec<Vec<f32>> = Vec::new();
-        let mut full_models: Vec<Vec<f32>> = Vec::new();
-        let mut loss_acc = 0.0f64;
-        let t_comp_start = Instant::now();
-
+        // Shared by every job's download (and by the FedAdam step below).
+        let server_global = Arc::new(self.layout.gather_global(&self.server_params));
         let t = self.rt.meta.train;
         let steps_per_round = (self.cfg.local_epochs * t.nbatches) as f32;
+        let param_count = self.rt.meta.param_count;
+        let c_global: Option<Arc<Vec<f32>>> = match &self.opt {
+            ServerOpt::Scaffold(s) => Some(Arc::new(s.c.clone())),
+            _ => None,
+        };
 
+        // ---- fan-out: one pure job per participant ------------------------
+        let mut jobs: Vec<LocalTrainJob> = Vec::with_capacity(participants.len());
         for &cid in &participants {
-            // ---- download ------------------------------------------------
+            let mut comm = CommDelta::default();
             if !local_only {
-                self.layout
-                    .scatter_global(&mut self.clients[cid].params, &server_global);
-                self.comm.record_download(self.down_bytes());
+                comm.record_download(self.down_bytes());
                 if matches!(self.cfg.optimizer, Optimizer::Scaffold) {
                     // Server control variate rides along with the model.
-                    self.comm.record_download((self.rt.meta.param_count * 4) as u64);
+                    comm.record_download((param_count * 4) as u64);
                 }
             }
-            let anchor = self.clients[cid].params.clone();
-
-            // Optimizer-specific extra inputs.
-            let (correction, anchor_opt, mu): (Option<Vec<f32>>, Option<&[f32]>, f32) =
-                match &self.cfg.optimizer {
-                    Optimizer::FedAvg | Optimizer::FedAdam => (None, None, 0.0),
-                    Optimizer::FedProx { mu } => (None, Some(&anchor), *mu),
-                    Optimizer::Scaffold => {
-                        let c_global = match &self.opt {
-                            ServerOpt::Scaffold(s) => s.c.clone(),
-                            _ => unreachable!(),
-                        };
-                        let c_i = self.clients[cid]
-                            .control
-                            .get_or_insert_with(|| vec![0.0; c_global.len()])
-                            .clone();
-                        (Some(aggregate::sub(&c_global, &c_i)), None, 0.0)
-                    }
-                    Optimizer::FedDyn { alpha } => {
-                        let lam = self.clients[cid]
-                            .lambda
-                            .get_or_insert_with(|| vec![0.0; anchor.len()])
-                            .clone();
-                        let neg: Vec<f32> = lam.iter().map(|&x| -x).collect();
-                        (Some(neg), Some(&anchor), *alpha)
-                    }
-                };
-
-            // ---- local training -------------------------------------------
-            let mut params = self.clients[cid].params.clone();
-            let mut rng = self.root_rng.child((self.round as u64) << 20 | cid as u64);
-            let idx: Vec<usize> = (0..self.clients[cid].data.len()).collect();
-            for _epoch in 0..self.cfg.local_epochs {
-                let stack =
-                    assemble_batches(&self.clients[cid].data, &idx, t.nbatches, t.batch, &mut rng);
-                let out = self.rt.train_epoch(
-                    &params,
-                    &stack.x,
-                    &stack.y,
-                    lr,
-                    correction.as_deref(),
-                    anchor_opt,
-                    mu,
-                )?;
-                params = out.params;
-                loss_acc += out.mean_loss as f64;
-            }
-
-            // ---- client state updates -------------------------------------
-            match self.cfg.optimizer {
+            let opt = match &self.cfg.optimizer {
+                Optimizer::FedAvg | Optimizer::FedAdam => JobOpt::Plain,
+                Optimizer::FedProx { mu } => JobOpt::Prox { mu: *mu },
                 Optimizer::Scaffold => {
-                    // Option II: c_i⁺ = c_i − c + (x − y_i)/(K·η).
-                    let c_global = match &self.opt {
-                        ServerOpt::Scaffold(s) => s.c.clone(),
-                        _ => unreachable!(),
-                    };
-                    let c_i = self.clients[cid].control.as_mut().unwrap();
-                    let scale = 1.0 / (steps_per_round * lr);
-                    let mut new_c = Vec::with_capacity(c_i.len());
-                    let mut delta_c = Vec::with_capacity(c_i.len());
-                    for j in 0..c_i.len() {
-                        let v = c_i[j] - c_global[j] + scale * (anchor[j] - params[j]);
-                        delta_c.push(v - c_i[j]);
-                        new_c.push(v);
-                    }
-                    *c_i = new_c;
-                    delta_controls.push(delta_c);
+                    let c_global = Arc::clone(c_global.as_ref().expect("scaffold state"));
+                    let c_i = self.clients[cid]
+                        .control
+                        .get_or_insert_with(|| vec![0.0; c_global.len()])
+                        .clone();
+                    JobOpt::Scaffold { c_global, c_i, inv_k_eta: 1.0 / (steps_per_round * lr) }
                 }
                 Optimizer::FedDyn { alpha } => {
-                    let lam = self.clients[cid].lambda.as_mut().unwrap();
-                    for j in 0..lam.len() {
-                        lam[j] -= alpha * (params[j] - anchor[j]);
-                    }
+                    let lambda = self.clients[cid]
+                        .lambda
+                        .get_or_insert_with(|| vec![0.0; param_count])
+                        .clone();
+                    JobOpt::FedDyn { alpha: *alpha, lambda }
                 }
-                _ => {}
-            }
-            self.clients[cid].params = params;
-            self.clients[cid].participations += 1;
+            };
+            jobs.push(LocalTrainJob {
+                cid,
+                rt: Arc::clone(&self.rt),
+                layout: Arc::clone(&self.layout),
+                data: Arc::clone(&self.clients[cid].data),
+                params: self.clients[cid].params.clone(),
+                download: (!local_only).then(|| Arc::clone(&server_global)),
+                // 32-bit split keeps (round, cid) tags collision-free well
+                // past the million-client scale the roadmap targets.
+                rng: self.root_rng.child((self.round as u64) << 32 | cid as u64),
+                lr,
+                local_epochs: self.cfg.local_epochs,
+                opt,
+                quantize_upload: self.cfg.quantize_upload,
+                local_only,
+                comm,
+                weight: self.clients[cid].num_samples() as f64,
+            });
+        }
 
-            // ---- upload ---------------------------------------------------
-            if !local_only {
-                let mut up = self.layout.gather_global(&self.clients[cid].params);
-                let bytes = if self.cfg.quantize_upload {
-                    let (deq, b) = quantize_fp16(&up);
-                    up = deq;
-                    b
-                } else {
-                    (up.len() * 4) as u64
-                };
-                self.comm.record_upload(bytes);
-                if matches!(self.cfg.optimizer, Optimizer::Scaffold) {
-                    self.comm.record_upload((self.rt.meta.param_count * 4) as u64);
-                }
-                if matches!(self.cfg.optimizer, Optimizer::FedDyn { .. } | Optimizer::Scaffold) {
-                    full_models.push(self.clients[cid].params.clone());
-                }
-                uploads.push(up);
-                weights.push(self.clients[cid].num_samples() as f64);
-            }
+        // ---- run on the pool, reduce in participant order -----------------
+        let needs_full = matches!(
+            self.cfg.optimizer,
+            Optimizer::Scaffold | Optimizer::FedDyn { .. }
+        ) && !local_only;
+        // Each accumulator is allocated only for the path that feeds it.
+        let upload_dim = if needs_full || local_only { 0 } else { self.layout.global_len() };
+        let mut acc_upload = WeightedAccumulator::new(upload_dim);
+        // SCAFFOLD folds model/control deltas; FedDyn folds full models.
+        let mut acc_a = WeightedAccumulator::new(if needs_full { param_count } else { 0 });
+        let mut acc_b = WeightedAccumulator::new(if needs_full { param_count } else { 0 });
+        let mut loss_acc = 0.0f64;
+        let mut first_err: Option<anyhow::Error> = None;
+        let t_comp_start = Instant::now();
+        {
+            let clients = &mut self.clients;
+            let comm = &mut self.comm;
+            let server_params = &self.server_params;
+            let optimizer = self.cfg.optimizer;
+            self.pool.scope_fold(
+                jobs,
+                LocalTrainJob::run,
+                |_, outcome: Result<LocalTrainOutcome>| {
+                    // After a failure, later outcomes are discarded so the
+                    // committed state is a clean participant-order prefix —
+                    // the same shape a sequential loop leaves on early
+                    // return. (Jobs already in flight still finish; the
+                    // pool has no cancellation.)
+                    let out = match (outcome, first_err.is_some()) {
+                        (Ok(o), false) => o,
+                        (Ok(_), true) => return,
+                        (Err(e), prior) => {
+                            if !prior {
+                                first_err = Some(e);
+                            }
+                            return;
+                        }
+                    };
+                    comm.apply(out.comm);
+                    loss_acc += out.loss_sum;
+                    let c = &mut clients[out.cid];
+                    c.params = out.params;
+                    c.participations += 1;
+                    if let Some(nc) = out.new_control {
+                        c.control = Some(nc);
+                    }
+                    if let Some(nl) = out.new_lambda {
+                        c.lambda = Some(nl);
+                    }
+                    if local_only {
+                        return;
+                    }
+                    match optimizer {
+                        Optimizer::Scaffold => {
+                            // Stream Δθ = (wire model) − θ and Δc.
+                            acc_a.push(&aggregate::sub(&out.upload, server_params), 1.0);
+                            acc_b.push(&out.delta_control.expect("scaffold delta"), 1.0);
+                        }
+                        Optimizer::FedDyn { .. } => {
+                            acc_a.push(&out.upload, 1.0);
+                        }
+                        _ => acc_upload.push(&out.upload, out.weight),
+                    }
+                    // `out.upload` drops here — aggregation stays O(dim).
+                },
+            );
         }
         let t_comp = t_comp_start.elapsed().as_secs_f64();
+        if let Some(e) = first_err {
+            return Err(e);
+        }
 
-        // ---- aggregation ---------------------------------------------------
+        // ---- aggregation --------------------------------------------------
         if !local_only {
             let new_global = match &mut self.opt {
-                ServerOpt::Plain => aggregate::weighted_mean(&uploads, &weights),
-                ServerOpt::Adam(adam) => adam.step(
-                    &server_global,
-                    &aggregate::weighted_mean(&uploads, &weights),
-                ),
+                ServerOpt::Plain => acc_upload.mean(),
+                ServerOpt::Adam(adam) => adam.step(&server_global, &acc_upload.mean()),
                 ServerOpt::Scaffold(sc) => {
-                    let deltas: Vec<Vec<f32>> = full_models
-                        .iter()
-                        .map(|m| aggregate::sub(m, &self.server_params))
-                        .collect();
-                    let new_full = sc.step(&self.server_params, &deltas, &delta_controls);
+                    let new_full = sc.step_from_means(
+                        &self.server_params,
+                        &acc_a.mean(),
+                        &acc_b.mean(),
+                        participants.len(),
+                    );
                     self.server_params = new_full;
                     self.layout.gather_global(&self.server_params)
                 }
                 ServerOpt::FedDyn(fd) => {
-                    let new_full = fd.step(&self.server_params, &full_models);
+                    let new_full = fd.step_from_mean(
+                        &self.server_params,
+                        acc_a.mean(),
+                        participants.len(),
+                    );
                     self.server_params = new_full;
                     self.layout.gather_global(&self.server_params)
                 }
@@ -320,7 +531,7 @@ impl Federation {
         }
         self.comm.end_round();
 
-        // ---- report ---------------------------------------------------------
+        // ---- report -------------------------------------------------------
         let evaluate = self.cfg.eval_every > 0 && (self.round + 1) % self.cfg.eval_every == 0;
         let (test_acc, test_loss) = if evaluate && !local_only {
             let e = self.evaluate_global()?;
@@ -399,20 +610,22 @@ impl Federation {
     }
 }
 
-fn layout_global_len(l: &Layout) -> usize {
-    l.global_len()
-}
-
 /// Evaluate `params` on a whole dataset by chunking it through the fixed
-/// eval shape (the final chunk wraps around; with test sizes that are
-/// multiples of the eval call size there is no double counting).
+/// eval shape. The final chunk is padded by wrapping around to the front of
+/// the dataset, but only the `valid` fresh samples are counted
+/// (`eval_call_partial` masks the pad), so the merged output covers every
+/// sample exactly once for **any** test-set size.
 pub fn eval_on(rt: &ModelRuntime, params: &[f32], data: &Dataset) -> Result<EvalOutput> {
+    if data.is_empty() {
+        return Err(anyhow!("empty test set"));
+    }
     let e = rt.meta.eval;
-    let need = e.nbatches * e.batch;
+    let need = e.samples_per_call();
     let mut merged: Option<EvalOutput> = None;
     let mut start = 0usize;
     while start < data.len() {
-        let idx: Vec<usize> = (start..start + need).map(|i| i % data.len()).collect();
+        let valid = (data.len() - start).min(need);
+        let idx: Vec<usize> = (0..need).map(|i| (start + i) % data.len()).collect();
         let sub = data.subset(&idx);
         let mut x = Vec::with_capacity(need * data.feature_dim);
         let mut y = Vec::with_capacity(need);
@@ -421,7 +634,7 @@ pub fn eval_on(rt: &ModelRuntime, params: &[f32], data: &Dataset) -> Result<Eval
             x.extend_from_slice(f);
             y.push(l as f32);
         }
-        let out = rt.eval_call(params, &x, &y)?;
+        let out = rt.eval_call_partial(params, &x, &y, valid)?;
         match merged.as_mut() {
             Some(m) => m.merge(&out),
             None => merged = Some(out),

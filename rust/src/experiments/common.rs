@@ -129,6 +129,7 @@ pub fn preset(ctx: &ExpCtx, artifact: &str, paper_rounds: usize, non_iid: bool) 
         sharing: Sharing::Full,
         eval_every: 1,
         seed: ctx.seed,
+        num_threads: 0,
     }
 }
 

@@ -125,6 +125,7 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
                     sharing: sharing.clone(),
                     eval_every: 0,
                     seed,
+                    num_threads: 0,
                 };
                 // Global test set unused for personalization; pass client 0's.
                 let mut fed = Federation::new(ctx.engine, cfg, trains, tests[0].clone())?;

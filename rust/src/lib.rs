@@ -12,12 +12,19 @@
 //!   table and figure of the paper.
 //! * **L2** — JAX model + local-training step, AOT-lowered to HLO text by
 //!   `python/compile/aot.py` (build time only; Python never runs on the
-//!   request path).
+//!   request path). A pure-rust mirror of the MLP family
+//!   (`runtime::native`) serves the same contract offline, so the whole
+//!   coordinator runs and is tested without XLA.
 //! * **L1** — Pallas kernels for the FedPara weight composition
 //!   `W = (X1·Y1ᵀ) ⊙ (X2·Y2ᵀ)`, validated against a pure-jnp oracle.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! The round loop fans client local training out over
+//! `util::ThreadPool::scope_fold` and reduces in participant order, so
+//! every report/ledger/parameter is bit-identical for any pool size.
+//!
+//! See `rust/DESIGN.md` for the system inventory, the L1/L2/L3 split and
+//! the fan-out round architecture, and `rust/EXPERIMENTS.md` for
+//! paper-vs-measured results and perf numbers.
 
 pub mod config;
 pub mod coordinator;

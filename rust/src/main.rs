@@ -68,7 +68,16 @@ fn engine_from(args: &Args) -> Result<Engine> {
         .get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(Engine::artifacts_dir);
-    Engine::new(&dir)
+    if dir.join("manifest.json").exists() {
+        Engine::new(&dir)
+    } else {
+        eprintln!(
+            "note: {} has no manifest.json — using the built-in native backend \
+             (artifacts: native_mlp10_orig / native_mlp10_fedpara / native_mlp10_pfedpara)",
+            dir.display()
+        );
+        Ok(Engine::native())
+    }
 }
 
 fn dispatch(mut args: Args) -> Result<()> {
@@ -135,7 +144,8 @@ fn dispatch(mut args: Args) -> Result<()> {
                 .declare("lr", "initial learning rate")
                 .declare("frac", "client sample fraction per round")
                 .declare("quantize", "fp16 uplink quantization (FedPAQ)")
-                .declare("pfedpara", "share only global segments (pFedPara)");
+                .declare("pfedpara", "share only global segments (pFedPara)")
+                .declare("threads", "worker threads for the client fan-out (0 = host)");
             args.validate().map_err(|e| anyhow!(e))?;
             let engine = engine_from(&args)?;
             let ctx = make_ctx(&engine, &args)?;
@@ -176,6 +186,7 @@ fn dispatch(mut args: Args) -> Result<()> {
                 },
                 eval_every: 1,
                 seed: ctx.seed,
+                num_threads: args.get_usize("threads", 0).map_err(|e| anyhow!(e))?,
             };
             let rounds = cfg.rounds;
             println!(

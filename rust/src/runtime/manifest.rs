@@ -29,10 +29,21 @@ impl BatchShape {
     }
 }
 
+/// Which execution backend serves an artifact.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// AOT HLO text compiled through PJRT (requires the `pjrt` feature and
+    /// real XLA bindings; see `vendor/README.md`).
+    Hlo,
+    /// The pure-rust native executor (`runtime::native`), always available.
+    Native(super::native::NativeSpec),
+}
+
 /// One artifact's metadata.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
     pub name: String,
+    pub backend: Backend,
     pub train_hlo: PathBuf,
     pub eval_hlo: PathBuf,
     pub param_count: usize,
@@ -113,6 +124,7 @@ impl Manifest {
         }
         Ok(ArtifactMeta {
             name: name.to_string(),
+            backend: Backend::Hlo,
             train_hlo: dir.join(j.get("train_hlo").as_str().ok_or("missing train_hlo")?),
             eval_hlo: dir.join(j.get("eval_hlo").as_str().ok_or("missing eval_hlo")?),
             param_count,

@@ -1,39 +1,73 @@
-//! PJRT runtime: load + compile + execute the AOT artifacts (request path).
+//! Model runtime: typed train/eval entry points over flat f32 buffers.
 //!
-//! The `Engine` owns one `PjRtClient` (CPU) and a compile cache keyed by
-//! artifact name. A `ModelRuntime` is a compiled train/eval pair with typed
-//! entry points over flat f32 buffers:
+//! An [`Engine`] owns a manifest of artifacts and a compile cache; an
+//! [`ModelRuntime`] is one artifact's executable pair:
 //!
 //! ```text
 //! train_epoch(params, x, y, lr, correction, anchor, mu)
 //!     -> (new_params, mean_loss)
-//! eval(params, x, y) -> (correct_count, loss_sum)
+//! eval_call(params, x, y) -> (correct_count, loss_sum)
 //! ```
 //!
-//! PJRT handles are not `Send`/`Sync` in the `xla` crate, so the engine is
-//! used from the coordinator thread; parallelism lives in data generation
-//! and aggregation, not in PJRT calls (single-core target anyway).
+//! Two execution backends serve that contract:
+//!
+//! * **native** (always available) — the pure-rust mirror of the L2
+//!   programs in [`native`]; plain data, `Send + Sync`, so the coordinator
+//!   can fan client jobs out over `util::ThreadPool` with each worker
+//!   calling into the same `Arc<ModelRuntime>`.
+//! * **pjrt** (`--features pjrt`) — AOT HLO text compiled through PJRT.
+//!   PJRT handles are not thread-affine but the bindings are not `Send`;
+//!   calls are serialized through a `Mutex`, which the safety argument for
+//!   the manual `Send`/`Sync` impls relies on.
+//!
+//! `ModelRuntime` is shared as `Arc<ModelRuntime>` everywhere (it used to
+//! be `Rc`, which pinned the whole round loop to one thread).
 
 pub mod manifest;
+pub mod native;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Arc;
+#[cfg(feature = "pjrt")]
+use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
-pub use manifest::{ArtifactMeta, BatchShape, Manifest};
+pub use manifest::{ArtifactMeta, Backend, BatchShape, Manifest};
 
 /// Compiled train+eval executables for one artifact.
 pub struct ModelRuntime {
     pub meta: ArtifactMeta,
-    train_exe: xla::PjRtLoadedExecutable,
-    eval_exe: xla::PjRtLoadedExecutable,
+    exec: Exec,
     /// Reusable zero vector for the correction/anchor inputs.
     zeros: Vec<f32>,
 }
+
+enum Exec {
+    Native(native::NativeExec),
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtExec),
+}
+
+#[cfg(feature = "pjrt")]
+struct PjrtExec {
+    train_exe: Mutex<xla::PjRtLoadedExecutable>,
+    eval_exe: Mutex<xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: PJRT CPU executables are not thread-affine (any thread may call
+// into them), the bindings just don't assert `Send`/`Sync`. All calls go
+// through the `Mutex`es above, so at most one thread touches a handle at a
+// time and no handle is ever aliased mutably.
+#[cfg(feature = "pjrt")]
+unsafe impl Send for PjrtExec {}
+#[cfg(feature = "pjrt")]
+unsafe impl Sync for PjrtExec {}
 
 /// Output of one local training call.
 #[derive(Clone, Debug)]
@@ -74,6 +108,7 @@ impl EvalOutput {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
     if n != data.len() {
@@ -88,6 +123,7 @@ fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     )?)
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_scalar(v: f32) -> Result<xla::Literal> {
     literal_f32(&[v], &[])
 }
@@ -107,7 +143,6 @@ impl ModelRuntime {
         mu: f32,
     ) -> Result<TrainOutput> {
         let p = self.meta.param_count;
-        let t = self.meta.train;
         if params.len() != p {
             return Err(anyhow!("params len {} != {p}", params.len()));
         }
@@ -116,73 +151,183 @@ impl ModelRuntime {
         if corr.len() != p || anch.len() != p {
             return Err(anyhow!("correction/anchor length mismatch"));
         }
-        let args = [
-            literal_f32(params, &[p])?,
-            literal_f32(x, &[t.nbatches, t.batch, t.feature_dim])?,
-            literal_f32(y, &[t.nbatches, t.batch])?,
-            literal_scalar(lr)?,
-            literal_f32(corr, &[p])?,
-            literal_f32(anch, &[p])?,
-            literal_scalar(mu)?,
-        ];
-        let result = self.train_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != 2 {
-            return Err(anyhow!("train artifact returned {} outputs, want 2", parts.len()));
+        let t = self.meta.train;
+        let need = t.samples_per_call();
+        if x.len() != need * t.feature_dim || y.len() != need {
+            return Err(anyhow!(
+                "train batch shape mismatch: x {} (want {}), y {} (want {need})",
+                x.len(),
+                need * t.feature_dim,
+                y.len()
+            ));
         }
-        let new_params = parts[0].to_vec::<f32>()?;
-        let mean_loss = parts[1].to_vec::<f32>()?[0];
-        Ok(TrainOutput { params: new_params, mean_loss })
+        match &self.exec {
+            Exec::Native(exec) => {
+                let (new_params, mean_loss) =
+                    exec.train_epoch(self.meta.train, params, x, y, lr, corr, anch, mu);
+                Ok(TrainOutput { params: new_params, mean_loss })
+            }
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(exec) => {
+                let args = [
+                    literal_f32(params, &[p])?,
+                    literal_f32(x, &[t.nbatches, t.batch, t.feature_dim])?,
+                    literal_f32(y, &[t.nbatches, t.batch])?,
+                    literal_scalar(lr)?,
+                    literal_f32(corr, &[p])?,
+                    literal_f32(anch, &[p])?,
+                    literal_scalar(mu)?,
+                ];
+                let exe = exec.train_exe.lock().unwrap();
+                let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+                drop(exe);
+                let parts = result.to_tuple()?;
+                if parts.len() != 2 {
+                    return Err(anyhow!("train artifact returned {} outputs, want 2", parts.len()));
+                }
+                let new_params = parts[0].to_vec::<f32>()?;
+                let mean_loss = parts[1].to_vec::<f32>()?[0];
+                Ok(TrainOutput { params: new_params, mean_loss })
+            }
+        }
     }
 
-    /// Evaluate one stacked batch set.
+    /// Evaluate one full stacked batch set.
     pub fn eval_call(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<EvalOutput> {
+        self.eval_call_partial(params, x, y, self.meta.eval.samples_per_call())
+    }
+
+    /// Evaluate a stacked batch set counting only the first `valid`
+    /// samples. `eval_on` uses this to mask the padded tail of the final
+    /// chunk exactly, so reported accuracy never double-counts samples when
+    /// the test-set size is not a multiple of the eval call size.
+    pub fn eval_call_partial(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        valid: usize,
+    ) -> Result<EvalOutput> {
         let p = self.meta.param_count;
         let e = self.meta.eval;
-        let args = [
-            literal_f32(params, &[p])?,
-            literal_f32(x, &[e.nbatches, e.batch, e.feature_dim])?,
-            literal_f32(y, &[e.nbatches, e.batch])?,
-        ];
-        let result = self.eval_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        if parts.len() != 2 {
-            return Err(anyhow!("eval artifact returned {} outputs, want 2", parts.len()));
+        let total = e.samples_per_call();
+        if valid == 0 || valid > total {
+            return Err(anyhow!("valid sample count {valid} not in 1..={total}"));
         }
-        let correct = parts[0].to_vec::<f32>()?[0] as f64;
-        let loss_sum = parts[1].to_vec::<f32>()?[0] as f64;
-        Ok(EvalOutput {
-            correct,
-            loss_sum,
-            denominator: (e.nbatches * self.meta.eval_denominator_per_batch) as f64,
-        })
+        if params.len() != p {
+            return Err(anyhow!("params len {} != {p}", params.len()));
+        }
+        if x.len() != total * e.feature_dim || y.len() != total {
+            return Err(anyhow!(
+                "eval batch shape mismatch: x {} (want {}), y {} (want {total})",
+                x.len(),
+                total * e.feature_dim,
+                y.len()
+            ));
+        }
+        // Predictions per sample (text models predict every position).
+        let per_sample = self.meta.eval_denominator_per_batch as f64 / e.batch as f64;
+        let denominator = valid as f64 * per_sample;
+        match &self.exec {
+            Exec::Native(exec) => {
+                let (correct, loss_sum) = exec.eval(e, params, x, y, valid);
+                Ok(EvalOutput { correct, loss_sum, denominator })
+            }
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(exec) => {
+                let args = [
+                    literal_f32(params, &[p])?,
+                    literal_f32(x, &[e.nbatches, e.batch, e.feature_dim])?,
+                    literal_f32(y, &[e.nbatches, e.batch])?,
+                ];
+                let exe = exec.eval_exe.lock().unwrap();
+                let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+                drop(exe);
+                let parts = result.to_tuple()?;
+                if parts.len() != 2 {
+                    return Err(anyhow!("eval artifact returned {} outputs, want 2", parts.len()));
+                }
+                let correct_v = parts[0].to_vec::<f32>()?;
+                let loss_v = parts[1].to_vec::<f32>()?;
+                if correct_v.len() == total && loss_v.len() == total {
+                    // Per-sample outputs (current aot.py contract): sum the
+                    // first `valid` entries.
+                    let correct: f64 = correct_v[..valid].iter().map(|&v| v as f64).sum();
+                    let loss_sum: f64 = loss_v[..valid].iter().map(|&v| v as f64).sum();
+                    Ok(EvalOutput { correct, loss_sum, denominator })
+                } else if correct_v.len() == 1 && loss_v.len() == 1 {
+                    // Legacy scalar-sum artifacts cannot mask a tail.
+                    if valid != total {
+                        return Err(anyhow!(
+                            "artifact '{}' returns scalar eval sums and cannot mask a \
+                             partial chunk ({valid}/{total}); rebuild artifacts with \
+                             `make artifacts` (per-sample eval outputs)",
+                            self.meta.name
+                        ));
+                    }
+                    Ok(EvalOutput {
+                        correct: correct_v[0] as f64,
+                        loss_sum: loss_v[0] as f64,
+                        denominator,
+                    })
+                } else {
+                    Err(anyhow!(
+                        "eval artifact output length {} (want 1 or {total})",
+                        correct_v.len()
+                    ))
+                }
+            }
+        }
     }
 }
 
-/// The PJRT engine: client + manifest + compile cache.
+/// The engine: manifest + compile cache (+ the PJRT client when enabled).
 pub struct Engine {
-    client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
+    client: Option<xla::PjRtClient>,
     pub manifest: Manifest,
     dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<ModelRuntime>>>,
+    cache: RefCell<HashMap<String, Arc<ModelRuntime>>>,
 }
 
 impl Engine {
     /// Create an engine over `artifacts_dir` (reads manifest.json).
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu()?;
-        crate::log_debug!(
-            "PJRT client up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
+        #[cfg(feature = "pjrt")]
+        let client = {
+            let c = xla::PjRtClient::cpu()?;
+            crate::log_debug!(
+                "PJRT client up: platform={} devices={}",
+                c.platform_name(),
+                c.device_count()
+            );
+            Some(c)
+        };
         Ok(Engine {
+            #[cfg(feature = "pjrt")]
             client,
             manifest,
             dir: artifacts_dir.to_path_buf(),
             cache: RefCell::new(HashMap::new()),
         })
+    }
+
+    /// An engine over the built-in native artifacts — no Python, no XLA, no
+    /// artifacts directory. This is what offline tests and benches use.
+    pub fn native() -> Engine {
+        Engine::with_artifacts(native::default_artifacts())
+    }
+
+    /// An engine over an explicit artifact list (native or mixed).
+    pub fn with_artifacts(artifacts: Vec<ArtifactMeta>) -> Engine {
+        Engine {
+            #[cfg(feature = "pjrt")]
+            client: None,
+            manifest: native::manifest(artifacts),
+            dir: PathBuf::new(),
+            cache: RefCell::new(HashMap::new()),
+        }
     }
 
     /// Default artifacts directory: `$FEDPARA_ARTIFACTS` or `./artifacts`.
@@ -192,43 +337,146 @@ impl Engine {
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
 
+    #[cfg(feature = "pjrt")]
     fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let client = self
+            .client
+            .as_ref()
+            .ok_or_else(|| anyhow!("engine has no PJRT client (native-only engine)"))?;
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
         )
         .with_context(|| format!("parsing HLO text {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self
-            .client
+        client
             .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?)
+            .with_context(|| format!("compiling {}", path.display()))
     }
 
     /// Load (compile-once) an artifact by manifest name.
-    pub fn load(&self, name: &str) -> Result<Rc<ModelRuntime>> {
+    pub fn load(&self, name: &str) -> Result<Arc<ModelRuntime>> {
         if let Some(rt) = self.cache.borrow().get(name) {
-            return Ok(Rc::clone(rt));
+            return Ok(Arc::clone(rt));
         }
         let meta = self.manifest.get(name).map_err(|e| anyhow!(e))?.clone();
         let t0 = Instant::now();
-        let train_exe = self.compile(&meta.train_hlo)?;
-        let eval_exe = self.compile(&meta.eval_hlo)?;
+        let exec = match &meta.backend {
+            Backend::Native(spec) => Exec::Native(native::NativeExec::new(*spec)),
+            Backend::Hlo => {
+                #[cfg(feature = "pjrt")]
+                {
+                    Exec::Pjrt(PjrtExec {
+                        train_exe: Mutex::new(self.compile(&meta.train_hlo)?),
+                        eval_exe: Mutex::new(self.compile(&meta.eval_hlo)?),
+                    })
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    return Err(anyhow!(
+                        "artifact '{name}' is an AOT HLO artifact but this build has no \
+                         PJRT backend; rebuild with `--features pjrt` (and real xla \
+                         bindings, see rust/vendor/README.md) or use the native_* \
+                         artifacts from Engine::native()"
+                    ));
+                }
+            }
+        };
         crate::log_info!(
-            "compiled artifact '{name}' ({} params) in {:.2}s",
+            "loaded artifact '{name}' ({} params) in {:.2}s",
             meta.param_count,
             t0.elapsed().as_secs_f64()
         );
-        let rt = Rc::new(ModelRuntime {
+        let rt = Arc::new(ModelRuntime {
             zeros: vec![0.0; meta.param_count],
             meta,
-            train_exe,
-            eval_exe,
+            exec,
         });
-        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&rt));
+        self.cache.borrow_mut().insert(name.to_string(), Arc::clone(&rt));
         Ok(rt)
     }
 
     pub fn artifacts_root(&self) -> &Path {
         &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_runtime_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ModelRuntime>();
+        assert_send_sync::<Arc<ModelRuntime>>();
+    }
+
+    #[test]
+    fn native_engine_loads_and_trains() {
+        let engine = Engine::native();
+        let rt = engine.load("native_mlp10_orig").unwrap();
+        assert_eq!(rt.meta.train.feature_dim, 784);
+        let mut rng = crate::util::rng::Rng::new(1);
+        let params = rt.meta.layout.init_params(&mut rng);
+        let t = rt.meta.train;
+        let n = t.samples_per_call();
+        let x: Vec<f32> = (0..n * t.feature_dim).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.below(10) as f32).collect();
+        let out = rt.train_epoch(&params, &x, &y, 0.05, None, None, 0.0).unwrap();
+        assert!(out.mean_loss.is_finite());
+        assert_eq!(out.params.len(), rt.meta.param_count);
+        // Cache: second load returns the same runtime.
+        let rt2 = engine.load("native_mlp10_orig").unwrap();
+        assert!(Arc::ptr_eq(&rt, &rt2));
+    }
+
+    #[test]
+    fn native_fedpara_transfers_fewer_global_params() {
+        let engine = Engine::native();
+        let orig = engine.load("native_mlp10_orig").unwrap();
+        let pfp = engine.load("native_mlp10_pfedpara").unwrap();
+        assert!(pfp.meta.global_len < pfp.meta.param_count);
+        assert!(pfp.meta.param_count < orig.meta.param_count);
+    }
+
+    #[test]
+    fn eval_call_partial_validates_range() {
+        let engine = Engine::native();
+        let rt = engine.load("native_mlp10_orig").unwrap();
+        let mut rng = crate::util::rng::Rng::new(2);
+        let params = rt.meta.layout.init_params(&mut rng);
+        let e = rt.meta.eval;
+        let n = e.samples_per_call();
+        let x = vec![0f32; n * e.feature_dim];
+        let y = vec![0f32; n];
+        assert!(rt.eval_call_partial(&params, &x, &y, 0).is_err());
+        assert!(rt.eval_call_partial(&params, &x, &y, n + 1).is_err());
+        let full = rt.eval_call(&params, &x, &y).unwrap();
+        assert_eq!(full.denominator, n as f64);
+        let half = rt.eval_call_partial(&params, &x, &y, n / 2).unwrap();
+        assert_eq!(half.denominator, (n / 2) as f64);
+    }
+
+    #[test]
+    fn hlo_artifact_without_pjrt_feature_errors_clearly() {
+        // Parse a manifest pointing at HLO files; loading must explain the
+        // missing backend rather than panic (default build has no PJRT).
+        let m = Manifest::parse(
+            r#"{"artifacts": {"demo": {
+                "train_hlo": "demo.train.hlo.txt", "eval_hlo": "demo.eval.hlo.txt",
+                "param_count": 5, "global_len": 5,
+                "layout": [{"name": "w", "len": 5, "kind": "global"}],
+                "train": {"nbatches": 1, "batch": 2, "feature_dim": 3},
+                "eval": {"nbatches": 1, "batch": 2, "feature_dim": 3}
+            }}}"#,
+            Path::new("/tmp/nonexistent"),
+        )
+        .unwrap();
+        let engine = Engine::with_artifacts(m.artifacts.into_values().collect());
+        let err = engine.load("demo").unwrap_err().to_string();
+        #[cfg(not(feature = "pjrt"))]
+        assert!(err.contains("pjrt"), "unhelpful error: {err}");
+        #[cfg(feature = "pjrt")]
+        assert!(!err.is_empty());
     }
 }

@@ -1,0 +1,768 @@
+//! Pure-rust execution backend: the offline mirror of the L2 JAX programs.
+//!
+//! The AOT/PJRT path (`--features pjrt`) needs the XLA C++ runtime, which
+//! this environment cannot provide. This module implements the same
+//! train/eval contract natively for the paper's 2-FC MLP family
+//! (`python/compile/models.py::build_mlp`) under the `original`,
+//! `fedpara` (`W = (X1·Y1ᵀ) ⊙ (X2·Y2ᵀ)`, Prop. 1) and `pfedpara`
+//! (`W = W1 ⊙ (W2 + 1)`, §2.3) parameterizations, so the whole coordinator
+//! — round loop, optimizers, sharing policies, accounting — runs and is
+//! tested end-to-end with zero Python and zero XLA:
+//!
+//! * `train_epoch` matches `python/compile/train.py`: per-batch SGD with
+//!   `g_total = ∇L(p) + correction + mu·(p − anchor)` and the mean batch
+//!   loss returned (one call = one local epoch).
+//! * `eval` computes **per-sample** correct/loss and masks a trailing pad,
+//!   which is what makes `coordinator::eval_on` exact for test-set sizes
+//!   that are not a multiple of the fixed eval shape.
+//!
+//! Everything is f32 (like the lowered artifacts) and deterministic: the
+//! same inputs produce bit-identical outputs on every host and pool size.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::path::PathBuf;
+
+use crate::parameterization::{gamma_rank, Layout, LayerShape, Segment, SegmentKind};
+use crate::runtime::manifest::Backend;
+use crate::runtime::{ArtifactMeta, BatchShape, Manifest};
+
+/// Parameterization of the native MLP's FC weights.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NativeScheme {
+    Original,
+    /// FedPara low-rank Hadamard factors on both FC weights.
+    FedPara { gamma: f64 },
+    /// pFedPara: (X1,Y1) global, (X2,Y2) local, `W = W1 ⊙ (W2 + 1)`.
+    PFedPara { gamma: f64 },
+}
+
+impl NativeScheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NativeScheme::Original => "original",
+            NativeScheme::FedPara { .. } => "fedpara",
+            NativeScheme::PFedPara { .. } => "pfedpara",
+        }
+    }
+
+    pub fn gamma(&self) -> f64 {
+        match *self {
+            NativeScheme::Original => 0.0,
+            NativeScheme::FedPara { gamma } | NativeScheme::PFedPara { gamma } => gamma,
+        }
+    }
+}
+
+/// A native model spec: `in_dim → hidden (relu) → classes`, both FC
+/// weights under `scheme` (mirrors `build_mlp`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NativeSpec {
+    pub in_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub scheme: NativeScheme,
+}
+
+impl NativeSpec {
+    pub fn mlp(classes: usize, hidden: usize, scheme: NativeScheme) -> NativeSpec {
+        NativeSpec { in_dim: 784, hidden, classes, scheme }
+    }
+}
+
+/// How one FC weight lives in the flat vector.
+#[derive(Clone, Debug)]
+enum FcParam {
+    Dense { w: Range<usize> },
+    Factored {
+        x1: Range<usize>, // m × r
+        y1: Range<usize>, // n × r
+        x2: Range<usize>, // m × r
+        y2: Range<usize>, // n × r
+        r: usize,
+        personalized: bool,
+    },
+}
+
+/// One FC layer: `W ∈ R^{m×n}` (m = out, n = in) plus bias.
+#[derive(Clone, Debug)]
+struct FcDesc {
+    m: usize,
+    n: usize,
+    param: FcParam,
+    bias: Range<usize>,
+}
+
+/// Compiled native executable: layout + layer descriptors.
+#[derive(Clone, Debug)]
+pub struct NativeExec {
+    spec: NativeSpec,
+    fc1: FcDesc,
+    fc2: FcDesc,
+    total: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Layout construction (mirrors fedpara.py's segments() + segment_stds())
+// ---------------------------------------------------------------------------
+
+struct SegBuilder {
+    segs: Vec<Segment>,
+    offset: usize,
+}
+
+impl SegBuilder {
+    fn new() -> SegBuilder {
+        SegBuilder { segs: Vec::new(), offset: 0 }
+    }
+
+    fn push(&mut self, name: &str, len: usize, kind: SegmentKind, init_std: f64) -> Range<usize> {
+        let r = self.offset..self.offset + len;
+        self.segs.push(Segment {
+            name: name.to_string(),
+            offset: self.offset,
+            len,
+            kind,
+            init_std,
+        });
+        self.offset += len;
+        r
+    }
+}
+
+/// Per-segment init std so the *composed* weight has He variance
+/// (fedpara.py::segment_stds).
+fn factor_std(fan_in: usize, r: usize, scheme: NativeScheme) -> f64 {
+    let target_var = 2.0 / fan_in.max(1) as f64;
+    match scheme {
+        NativeScheme::Original => target_var.sqrt(),
+        // var(W) = var(W1)·var(W2); aim var(W1) = var(W2) = √target.
+        NativeScheme::FedPara { .. } => (target_var.sqrt() / r as f64).powf(0.25),
+        // W ≈ W1 at init (local factors near zero).
+        NativeScheme::PFedPara { .. } => (target_var / r as f64).powf(0.25),
+    }
+}
+
+const PFEDPARA_LOCAL_STD: f64 = 0.01;
+
+fn build_fc(b: &mut SegBuilder, name: &str, m: usize, n: usize, scheme: NativeScheme) -> FcDesc {
+    let param = match scheme {
+        NativeScheme::Original => FcParam::Dense {
+            w: b.push(&format!("{name}.w"), m * n, SegmentKind::Global, factor_std(n, 1, scheme)),
+        },
+        NativeScheme::FedPara { gamma } | NativeScheme::PFedPara { gamma } => {
+            let r = gamma_rank(LayerShape::Fc { m, n }, gamma);
+            let personalized = matches!(scheme, NativeScheme::PFedPara { .. });
+            let local_kind = if personalized { SegmentKind::Local } else { SegmentKind::Global };
+            let g_std = factor_std(n, r, scheme);
+            let l_std = if personalized { PFEDPARA_LOCAL_STD } else { g_std };
+            FcParam::Factored {
+                x1: b.push(&format!("{name}.x1"), m * r, SegmentKind::Global, g_std),
+                y1: b.push(&format!("{name}.y1"), n * r, SegmentKind::Global, g_std),
+                x2: b.push(&format!("{name}.x2"), m * r, local_kind, l_std),
+                y2: b.push(&format!("{name}.y2"), n * r, local_kind, l_std),
+                r,
+                personalized,
+            }
+        }
+    };
+    let bias = b.push(&format!("{name}_b.w"), m, SegmentKind::Global, 0.0);
+    FcDesc { m, n, param, bias }
+}
+
+impl NativeExec {
+    pub fn new(spec: NativeSpec) -> NativeExec {
+        let mut b = SegBuilder::new();
+        let fc1 = build_fc(&mut b, "fc1", spec.hidden, spec.in_dim, spec.scheme);
+        let fc2 = build_fc(&mut b, "fc2", spec.classes, spec.hidden, spec.scheme);
+        NativeExec { spec, fc1, fc2, total: b.offset }
+    }
+
+    /// The flat-vector layout (same segment naming as the AOT manifest).
+    pub fn layout(spec: NativeSpec) -> Layout {
+        let mut b = SegBuilder::new();
+        build_fc(&mut b, "fc1", spec.hidden, spec.in_dim, spec.scheme);
+        build_fc(&mut b, "fc2", spec.classes, spec.hidden, spec.scheme);
+        Layout::new(b.segs).expect("native layout is contiguous by construction")
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.total
+    }
+
+    pub fn spec(&self) -> &NativeSpec {
+        &self.spec
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native artifact registry
+// ---------------------------------------------------------------------------
+
+/// Build an [`ArtifactMeta`] served by the native backend.
+pub fn artifact(name: &str, spec: NativeSpec, train: BatchShape, eval: BatchShape) -> ArtifactMeta {
+    assert_eq!(train.feature_dim, spec.in_dim);
+    assert_eq!(eval.feature_dim, spec.in_dim);
+    let layout = NativeExec::layout(spec);
+    ArtifactMeta {
+        name: name.to_string(),
+        backend: Backend::Native(spec),
+        train_hlo: PathBuf::new(),
+        eval_hlo: PathBuf::new(),
+        param_count: layout.total,
+        global_len: layout.global_len(),
+        layout,
+        train,
+        eval,
+        model: "mlp".to_string(),
+        scheme: spec.scheme.name().to_string(),
+        variant: "plain".to_string(),
+        gamma: spec.scheme.gamma(),
+        classes: spec.classes,
+        is_text: false,
+        eval_denominator_per_batch: eval.batch,
+    }
+}
+
+/// The built-in native artifact set (MNIST-like shapes, hidden 64). These
+/// are what tests, benches and offline runs use when the AOT artifacts
+/// have not been built.
+pub fn default_artifacts() -> Vec<ArtifactMeta> {
+    let train = BatchShape { nbatches: 4, batch: 32, feature_dim: 784 };
+    let eval = BatchShape { nbatches: 4, batch: 64, feature_dim: 784 };
+    vec![
+        artifact("native_mlp10_orig", NativeSpec::mlp(10, 64, NativeScheme::Original), train, eval),
+        artifact(
+            "native_mlp10_fedpara",
+            NativeSpec::mlp(10, 64, NativeScheme::FedPara { gamma: 0.5 }),
+            train,
+            eval,
+        ),
+        artifact(
+            "native_mlp10_pfedpara",
+            NativeSpec::mlp(10, 64, NativeScheme::PFedPara { gamma: 0.5 }),
+            train,
+            eval,
+        ),
+    ]
+}
+
+/// A [`Manifest`] over a native artifact list.
+pub fn manifest(artifacts: Vec<ArtifactMeta>) -> Manifest {
+    let artifacts: BTreeMap<String, ArtifactMeta> =
+        artifacts.into_iter().map(|a| (a.name.clone(), a)).collect();
+    Manifest { artifacts }
+}
+
+// ---------------------------------------------------------------------------
+// Dense kernels (row-major, f32)
+// ---------------------------------------------------------------------------
+
+/// `out[m,n] = a[m,k] · b[n,k]ᵀ` — the X·Yᵀ shape.
+fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let br = &b[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for t in 0..k {
+                acc += ar[t] * br[t];
+            }
+            or[j] = acc;
+        }
+    }
+}
+
+/// `out[m,n] = a[m,k] · b[k,n]`.
+fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let or = &mut out[i * n..(i + 1) * n];
+        for t in 0..k {
+            let av = a[i * k + t];
+            if av == 0.0 {
+                continue;
+            }
+            let br = &b[t * n..(t + 1) * n];
+            for j in 0..n {
+                or[j] += av * br[j];
+            }
+        }
+    }
+}
+
+/// `out[k,n] = a[m,k]ᵀ · b[m,n]` — gradient contractions over the batch.
+fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let br = &b[i * n..(i + 1) * n];
+        for t in 0..k {
+            let av = ar[t];
+            if av == 0.0 {
+                continue;
+            }
+            let or = &mut out[t * n..(t + 1) * n];
+            for j in 0..n {
+                or[j] += av * br[j];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Composition + factor gradients
+// ---------------------------------------------------------------------------
+
+/// A composed FC weight plus the inner products needed for backward.
+struct ComposedFc {
+    /// `W ∈ R^{m×n}` (row-major).
+    w: Vec<f32>,
+    /// `(W1 = X1·Y1ᵀ, W2 = X2·Y2ᵀ)` for factored layers.
+    parts: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+fn compose_fc(desc: &FcDesc, params: &[f32]) -> ComposedFc {
+    let (m, n) = (desc.m, desc.n);
+    match &desc.param {
+        FcParam::Dense { w } => ComposedFc { w: params[w.clone()].to_vec(), parts: None },
+        FcParam::Factored { x1, y1, x2, y2, r, personalized } => {
+            let mut w1 = vec![0f32; m * n];
+            let mut w2 = vec![0f32; m * n];
+            matmul_nt(&params[x1.clone()], &params[y1.clone()], m, *r, n, &mut w1);
+            matmul_nt(&params[x2.clone()], &params[y2.clone()], m, *r, n, &mut w2);
+            let w = if *personalized {
+                // W = W1 ⊙ (W2 + 1)
+                w1.iter().zip(&w2).map(|(&a, &b)| a * (b + 1.0)).collect()
+            } else {
+                w1.iter().zip(&w2).map(|(&a, &b)| a * b).collect()
+            };
+            ComposedFc { w, parts: Some((w1, w2)) }
+        }
+    }
+}
+
+/// Scatter `dW` into the flat gradient, applying the chain rule through the
+/// Hadamard factorization when the layer is factored (paper Eq. 6).
+fn scatter_weight_grad(desc: &FcDesc, composed: &ComposedFc, dw: &[f32], params: &[f32], grad: &mut [f32]) {
+    let (m, n) = (desc.m, desc.n);
+    match &desc.param {
+        FcParam::Dense { w } => grad[w.clone()].copy_from_slice(dw),
+        FcParam::Factored { x1, y1, x2, y2, r, personalized } => {
+            let (w1, w2) = composed.parts.as_ref().expect("factored layer has parts");
+            // dW1 = dW ⊙ (W2 [+ 1]); dW2 = dW ⊙ W1.
+            let dw1: Vec<f32> = if *personalized {
+                dw.iter().zip(w2).map(|(&g, &b)| g * (b + 1.0)).collect()
+            } else {
+                dw.iter().zip(w2).map(|(&g, &b)| g * b).collect()
+            };
+            let dw2: Vec<f32> = dw.iter().zip(w1).map(|(&g, &a)| g * a).collect();
+            // dX1 = dW1·Y1, dY1 = dW1ᵀ·X1 (and likewise for the 2nd factor).
+            matmul_nn(&dw1, &params[y1.clone()], m, n, *r, &mut grad[x1.clone()]);
+            matmul_tn(&dw1, &params[x1.clone()], m, n, *r, &mut grad[y1.clone()]);
+            matmul_nn(&dw2, &params[y2.clone()], m, n, *r, &mut grad[x2.clone()]);
+            matmul_tn(&dw2, &params[x2.clone()], m, n, *r, &mut grad[y2.clone()]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward / backward / entry points
+// ---------------------------------------------------------------------------
+
+impl NativeExec {
+    /// Mean cross-entropy loss and flat gradient for one batch of `bsz`
+    /// samples. `grad` is fully overwritten.
+    fn loss_and_grad(&self, params: &[f32], xb: &[f32], yb: &[f32], bsz: usize, grad: &mut [f32]) -> f32 {
+        let (n_in, m1, c) = (self.spec.in_dim, self.spec.hidden, self.spec.classes);
+        let fc1 = compose_fc(&self.fc1, params);
+        let fc2 = compose_fc(&self.fc2, params);
+        let b1 = &params[self.fc1.bias.clone()];
+        let b2 = &params[self.fc2.bias.clone()];
+
+        // Forward: h = relu(x·W1ᵀ + b1); z = h·W2ᵀ + b2.
+        let mut pre1 = vec![0f32; bsz * m1];
+        matmul_nt(xb, &fc1.w, bsz, n_in, m1, &mut pre1);
+        for b in 0..bsz {
+            for j in 0..m1 {
+                pre1[b * m1 + j] += b1[j];
+            }
+        }
+        let h: Vec<f32> = pre1.iter().map(|&v| v.max(0.0)).collect();
+        let mut z = vec![0f32; bsz * c];
+        matmul_nt(&h, &fc2.w, bsz, m1, c, &mut z);
+        for b in 0..bsz {
+            for k in 0..c {
+                z[b * c + k] += b2[k];
+            }
+        }
+
+        // Softmax cross-entropy: loss mean over the batch; dz = (p − 1_y)/B.
+        let inv_b = 1.0 / bsz as f32;
+        let mut dz = vec![0f32; bsz * c];
+        let mut loss = 0f32;
+        for b in 0..bsz {
+            let zb = &z[b * c..(b + 1) * c];
+            let label = yb[b] as usize;
+            let maxv = zb.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0f32;
+            for k in 0..c {
+                sum += (zb[k] - maxv).exp();
+            }
+            loss += sum.ln() + maxv - zb[label.min(c - 1)];
+            let dzb = &mut dz[b * c..(b + 1) * c];
+            for k in 0..c {
+                dzb[k] = (zb[k] - maxv).exp() / sum * inv_b;
+            }
+            dzb[label.min(c - 1)] -= inv_b;
+        }
+        loss *= inv_b;
+
+        // Backward.
+        grad.fill(0.0);
+        let mut dw2 = vec![0f32; c * m1];
+        matmul_tn(&dz, &h, bsz, c, m1, &mut dw2);
+        for k in 0..c {
+            let mut acc = 0f32;
+            for b in 0..bsz {
+                acc += dz[b * c + k];
+            }
+            grad[self.fc2.bias.start + k] = acc;
+        }
+        let mut dh = vec![0f32; bsz * m1];
+        matmul_nn(&dz, &fc2.w, bsz, c, m1, &mut dh);
+        // Through the relu.
+        for (d, &p) in dh.iter_mut().zip(pre1.iter()) {
+            if p <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        let mut dw1 = vec![0f32; m1 * n_in];
+        matmul_tn(&dh, xb, bsz, m1, n_in, &mut dw1);
+        for j in 0..m1 {
+            let mut acc = 0f32;
+            for b in 0..bsz {
+                acc += dh[b * m1 + j];
+            }
+            grad[self.fc1.bias.start + j] = acc;
+        }
+        scatter_weight_grad(&self.fc1, &fc1, &dw1, params, grad);
+        scatter_weight_grad(&self.fc2, &fc2, &dw2, params, grad);
+        loss
+    }
+
+    /// One local epoch: per-batch SGD with
+    /// `g_total = ∇L(p) + correction + mu·(p − anchor)`
+    /// (`python/compile/train.py::make_train_epoch`). Returns the updated
+    /// params and the mean batch loss.
+    pub fn train_epoch(
+        &self,
+        shape: BatchShape,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        correction: &[f32],
+        anchor: &[f32],
+        mu: f32,
+    ) -> (Vec<f32>, f32) {
+        assert_eq!(params.len(), self.total);
+        let bsz = shape.batch;
+        let stride = bsz * shape.feature_dim;
+        let mut p = params.to_vec();
+        let mut grad = vec![0f32; self.total];
+        let mut loss_sum = 0f32;
+        for b in 0..shape.nbatches {
+            let xb = &x[b * stride..(b + 1) * stride];
+            let yb = &y[b * bsz..(b + 1) * bsz];
+            loss_sum += self.loss_and_grad(&p, xb, yb, bsz, &mut grad);
+            for j in 0..self.total {
+                let g = grad[j] + correction[j] + mu * (p[j] - anchor[j]);
+                p[j] -= lr * g;
+            }
+        }
+        (p, loss_sum / shape.nbatches as f32)
+    }
+
+    /// Evaluate a stacked batch set, counting only the first `valid`
+    /// samples (exact tail masking). Returns `(correct, loss_sum)` summed
+    /// over the counted samples.
+    pub fn eval(
+        &self,
+        shape: BatchShape,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        valid: usize,
+    ) -> (f64, f64) {
+        assert_eq!(params.len(), self.total);
+        let (n_in, m1, c) = (self.spec.in_dim, self.spec.hidden, self.spec.classes);
+        let bsz = shape.batch;
+        // Compose once — parameters are constant during evaluation.
+        let fc1 = compose_fc(&self.fc1, params);
+        let fc2 = compose_fc(&self.fc2, params);
+        let b1 = &params[self.fc1.bias.clone()];
+        let b2 = &params[self.fc2.bias.clone()];
+
+        let mut correct = 0f64;
+        let mut loss_sum = 0f64;
+        let mut counted = 0usize;
+        let stride = bsz * n_in;
+        'outer: for bb in 0..shape.nbatches {
+            let xb = &x[bb * stride..(bb + 1) * stride];
+            let yb = &y[bb * bsz..(bb + 1) * bsz];
+            let mut pre1 = vec![0f32; bsz * m1];
+            matmul_nt(xb, &fc1.w, bsz, n_in, m1, &mut pre1);
+            for b in 0..bsz {
+                for j in 0..m1 {
+                    pre1[b * m1 + j] += b1[j];
+                }
+            }
+            let h: Vec<f32> = pre1.iter().map(|&v| v.max(0.0)).collect();
+            let mut z = vec![0f32; bsz * c];
+            matmul_nt(&h, &fc2.w, bsz, m1, c, &mut z);
+            for b in 0..bsz {
+                if counted >= valid {
+                    break 'outer;
+                }
+                let zb = &mut z[b * c..(b + 1) * c];
+                for k in 0..c {
+                    zb[k] += b2[k];
+                }
+                let label = (yb[b] as usize).min(c - 1);
+                // argmax with first-max tie-breaking (jnp.argmax semantics).
+                let mut best = 0usize;
+                for k in 1..c {
+                    if zb[k] > zb[best] {
+                        best = k;
+                    }
+                }
+                if best == label {
+                    correct += 1.0;
+                }
+                let maxv = zb.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0f32;
+                for k in 0..c {
+                    sum += (zb[k] - maxv).exp();
+                }
+                loss_sum += (sum.ln() + maxv - zb[label]) as f64;
+                counted += 1;
+            }
+        }
+        (correct, loss_sum)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spec(scheme: NativeScheme) -> NativeSpec {
+        NativeSpec { in_dim: 12, hidden: 9, classes: 4, scheme }
+    }
+
+    fn shape(nbatches: usize, batch: usize, d: usize) -> BatchShape {
+        BatchShape { nbatches, batch, feature_dim: d }
+    }
+
+    fn random_problem(s: NativeSpec, nb: usize, bs: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let params = NativeExec::layout(s).init_params(&mut rng);
+        let x: Vec<f32> = (0..nb * bs * s.in_dim).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..nb * bs).map(|_| rng.below(s.classes) as f32).collect();
+        (params, x, y)
+    }
+
+    #[test]
+    fn layout_sizes_match_table1() {
+        let orig = NativeExec::new(spec(NativeScheme::Original));
+        assert_eq!(orig.param_count(), 9 * 12 + 9 + 4 * 9 + 4);
+        let fp = NativeExec::new(spec(NativeScheme::FedPara { gamma: 0.0 }));
+        // 2r(m+n) per FC at the r_min ranks, plus biases.
+        let r1 = gamma_rank(LayerShape::Fc { m: 9, n: 12 }, 0.0);
+        let r2 = gamma_rank(LayerShape::Fc { m: 4, n: 9 }, 0.0);
+        assert_eq!(fp.param_count(), 2 * r1 * 21 + 9 + 2 * r2 * 13 + 4);
+        // pFedPara: same parameter count, but half the factors are local.
+        let ps = spec(NativeScheme::PFedPara { gamma: 0.0 });
+        let layout = NativeExec::layout(ps);
+        assert_eq!(layout.total, fp.param_count());
+        assert!(layout.global_len() < layout.total);
+        assert_eq!(layout.local_len(), r1 * 21 + r2 * 13);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        for scheme in [
+            NativeScheme::Original,
+            NativeScheme::FedPara { gamma: 0.5 },
+            NativeScheme::PFedPara { gamma: 0.5 },
+        ] {
+            let s = spec(scheme);
+            let exec = NativeExec::new(s);
+            let (params, x, y) = random_problem(s, 1, 6, 99);
+            let mut grad = vec![0f32; exec.param_count()];
+            let base = exec.loss_and_grad(&params, &x, &y, 6, &mut grad);
+            assert!(base.is_finite());
+            // Spot-check a spread of coordinates against central differences
+            // computed in f64-ish precision via a small step.
+            let eps = 1e-3f32;
+            let mut checked = 0;
+            let mut scratch = vec![0f32; exec.param_count()];
+            for j in (0..exec.param_count()).step_by(exec.param_count() / 17 + 1) {
+                let mut pp = params.clone();
+                pp[j] += eps;
+                let up = exec.loss_and_grad(&pp, &x, &y, 6, &mut scratch);
+                pp[j] -= 2.0 * eps;
+                let dn = exec.loss_and_grad(&pp, &x, &y, 6, &mut scratch);
+                let fd = (up - dn) / (2.0 * eps);
+                let tol = 2e-2 * (1.0 + fd.abs().max(grad[j].abs()));
+                assert!(
+                    (fd - grad[j]).abs() < tol,
+                    "{scheme:?} coord {j}: fd {fd} vs analytic {}",
+                    grad[j]
+                );
+                checked += 1;
+            }
+            assert!(checked > 10);
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_all_schemes() {
+        for scheme in [
+            NativeScheme::Original,
+            NativeScheme::FedPara { gamma: 0.5 },
+            NativeScheme::PFedPara { gamma: 0.5 },
+        ] {
+            let s = spec(scheme);
+            let exec = NativeExec::new(s);
+            let sh = shape(4, 8, s.in_dim);
+            let (mut params, x, y) = random_problem(s, 4, 8, 7);
+            let zeros = vec![0f32; exec.param_count()];
+            let mut first = None;
+            let mut last = 0f32;
+            for _ in 0..30 {
+                let (p, loss) = exec.train_epoch(sh, &params, &x, &y, 0.1, &zeros, &zeros, 0.0);
+                params = p;
+                first.get_or_insert(loss);
+                last = loss;
+            }
+            assert!(
+                last < first.unwrap() * 0.8,
+                "{scheme:?}: loss {:?} -> {last}",
+                first
+            );
+        }
+    }
+
+    #[test]
+    fn train_epoch_is_deterministic() {
+        let s = spec(NativeScheme::FedPara { gamma: 0.5 });
+        let exec = NativeExec::new(s);
+        let sh = shape(2, 8, s.in_dim);
+        let (params, x, y) = random_problem(s, 2, 8, 3);
+        let zeros = vec![0f32; exec.param_count()];
+        let a = exec.train_epoch(sh, &params, &x, &y, 0.05, &zeros, &zeros, 0.0);
+        let b = exec.train_epoch(sh, &params, &x, &y, 0.05, &zeros, &zeros, 0.0);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn correction_shifts_each_step_by_lr_c() {
+        // A constant correction c shifts every one of the N per-batch steps
+        // by −lr·c relative to the plain run (SCAFFOLD semantics; mirrors
+        // the PJRT integration test).
+        let s = spec(NativeScheme::Original);
+        let exec = NativeExec::new(s);
+        let sh = shape(3, 8, s.in_dim);
+        let (params, x, y) = random_problem(s, 3, 8, 5);
+        let zeros = vec![0f32; exec.param_count()];
+        let c = vec![0.01f32; exec.param_count()];
+        let plain = exec.train_epoch(sh, &params, &x, &y, 0.05, &zeros, &zeros, 0.0);
+        let corr = exec.train_epoch(sh, &params, &x, &y, 0.05, &c, &zeros, 0.0);
+        let expected = 0.05 * 0.01 * 3.0;
+        let mean_shift: f32 = plain
+            .0
+            .iter()
+            .zip(corr.0.iter())
+            .map(|(a, b)| a - b)
+            .sum::<f32>()
+            / exec.param_count() as f32;
+        assert!(
+            (mean_shift - expected).abs() < 0.15 * expected,
+            "shift {mean_shift} vs {expected}"
+        );
+    }
+
+    #[test]
+    fn prox_pulls_toward_anchor() {
+        let s = spec(NativeScheme::Original);
+        let exec = NativeExec::new(s);
+        let sh = shape(2, 8, s.in_dim);
+        let (params, x, y) = random_problem(s, 2, 8, 6);
+        let zeros = vec![0f32; exec.param_count()];
+        let anchor: Vec<f32> = params.iter().map(|p| p + 1.0).collect();
+        let (p, _) = exec.train_epoch(sh, &params, &x, &y, 0.01, &zeros, &anchor, 10.0);
+        let mean_move: f32 =
+            p.iter().zip(params.iter()).map(|(a, b)| a - b).sum::<f32>() / p.len() as f32;
+        assert!(mean_move > 0.05, "prox did not pull toward anchor: {mean_move}");
+    }
+
+    #[test]
+    fn eval_masks_tail_exactly() {
+        let s = spec(NativeScheme::Original);
+        let exec = NativeExec::new(s);
+        let sh = shape(2, 8, s.in_dim);
+        let (params, x, y) = random_problem(s, 2, 8, 8);
+        let (c_full, l_full) = exec.eval(sh, &params, &x, &y, 16);
+        let (c_head, l_head) = exec.eval(sh, &params, &x, &y, 10);
+        // Masked head plus the manually-evaluated tail equals the full sum.
+        let mut c_tail = 0f64;
+        let mut l_tail = 0f64;
+        for i in 10..16 {
+            let (ci, li) = exec.eval(
+                BatchShape { nbatches: 1, batch: 1, feature_dim: s.in_dim },
+                &params,
+                &x[i * s.in_dim..(i + 1) * s.in_dim],
+                &y[i..i + 1],
+                1,
+            );
+            c_tail += ci;
+            l_tail += li;
+        }
+        assert_eq!(c_head + c_tail, c_full);
+        assert!((l_head + l_tail - l_full).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pfedpara_zero_local_equals_global_only() {
+        // With X2 = Y2 = 0, W = W1 — the §2.3 "switch" interpretation.
+        let s = spec(NativeScheme::PFedPara { gamma: 0.5 });
+        let exec = NativeExec::new(s);
+        let layout = NativeExec::layout(s);
+        let mut rng = Rng::new(17);
+        let mut params = layout.init_params(&mut rng);
+        for seg in &layout.segments {
+            if seg.kind == SegmentKind::Local {
+                params[seg.offset..seg.offset + seg.len].fill(0.0);
+            }
+        }
+        let fc1 = compose_fc(&exec.fc1, &params);
+        let (w1, _) = fc1.parts.as_ref().unwrap();
+        for (a, b) in fc1.w.iter().zip(w1.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -4,8 +4,16 @@
 //! cores. On the single-core CI box the pool degenerates to sequential
 //! execution, but the structure (and its tests) keep the runtime ready for
 //! multi-core hosts. Jobs are `FnOnce` closures; `scope_map` provides the
-//! common "map a function over items in parallel, preserving order" shape.
+//! common "map a function over items in parallel, preserving order" shape,
+//! and `scope_fold` is its streaming form: results are folded **on the
+//! calling thread, in input order, as soon as they (and all earlier
+//! results) are available** — the round loop uses it to merge client
+//! uploads into the aggregation accumulator while keeping the fold order
+//! (and therefore all floating-point results) independent of the pool
+//! size. Out-of-order completions buffer until their turn, so the memory
+//! win over collect-then-fold is typical-case, not worst-case.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -42,11 +50,17 @@ impl ThreadPool {
         ThreadPool { workers, sender: Some(sender) }
     }
 
-    /// Pool sized to the machine (capped: PJRT CPU execution is itself
-    /// single-threaded per call and we avoid oversubscription).
+    /// Workers a host-sized pool uses: one per available core. The old cap
+    /// of 8 existed for the PJRT backend's per-call single-threading; with
+    /// PJRT calls now mutex-serialized and the native backend fully
+    /// parallel, the host size is the right default.
+    pub fn host_parallelism() -> usize {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Pool sized to the machine (one worker per available core).
     pub fn for_host() -> ThreadPool {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        ThreadPool::new(n.min(8))
+        ThreadPool::new(ThreadPool::host_parallelism())
     }
 
     pub fn size(&self) -> usize {
@@ -70,7 +84,28 @@ impl ThreadPool {
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
+        let mut out = Vec::with_capacity(items.len());
+        self.scope_fold(items, f, |_, r| out.push(r));
+        out
+    }
+
+    /// Map `f` over `items` on the pool and fold each result with
+    /// `fold(index, result)` **on the calling thread, in input order**, as
+    /// soon as the result (and all earlier ones) are available. Results
+    /// that finish out of order are buffered until their turn, so the fold
+    /// sequence — and any floating-point accumulation inside it — is
+    /// bit-identical for every pool size. Panics in jobs are propagated.
+    pub fn scope_fold<T, R, F, G>(&self, items: Vec<T>, f: F, mut fold: G)
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+        G: FnMut(usize, R),
+    {
         let n = items.len();
+        if n == 0 {
+            return;
+        }
         let f = Arc::new(f);
         let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
         for (i, item) in items.into_iter().enumerate() {
@@ -83,15 +118,22 @@ impl ThreadPool {
             });
         }
         drop(tx);
-        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut pending: BTreeMap<usize, R> = BTreeMap::new();
+        let mut next = 0usize;
         for _ in 0..n {
             let (i, res) = rx.recv().expect("all senders dropped early");
             match res {
-                Ok(r) => slots[i] = Some(r),
+                Ok(r) => {
+                    pending.insert(i, r);
+                }
                 Err(p) => std::panic::resume_unwind(p),
             }
+            while let Some(r) = pending.remove(&next) {
+                fold(next, r);
+                next += 1;
+            }
         }
-        slots.into_iter().map(|s| s.expect("missing result")).collect()
+        debug_assert_eq!(next, n, "scope_fold missed results");
     }
 }
 
@@ -160,6 +202,58 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn scope_fold_applies_in_input_order() {
+        // Jobs finish in scrambled order (later items sleep less), yet the
+        // fold must still observe indices 0, 1, 2, ... strictly in order.
+        let pool = ThreadPool::new(4);
+        let items: Vec<usize> = (0..32).collect();
+        let mut seen = Vec::new();
+        pool.scope_fold(
+            items,
+            |i| {
+                std::thread::sleep(std::time::Duration::from_millis(((32 - i) % 7) as u64));
+                i * 10
+            },
+            |idx, r| {
+                assert_eq!(r, idx * 10);
+                seen.push(idx);
+            },
+        );
+        assert_eq!(seen, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_fold_more_jobs_than_workers() {
+        // Oversubscription stress: far more jobs than workers, with enough
+        // work per job that the queue actually backs up.
+        let pool = ThreadPool::new(2);
+        let items: Vec<u64> = (0..200).collect();
+        let mut sum = 0u64;
+        pool.scope_fold(
+            items,
+            |x| {
+                // A little busy-work so jobs overlap in flight.
+                let mut acc = 0u64;
+                for k in 0..1000 {
+                    acc = acc.wrapping_add(x * k);
+                }
+                std::hint::black_box(acc);
+                x * x
+            },
+            |_, r| sum += r,
+        );
+        assert_eq!(sum, (0..200u64).map(|x| x * x).sum::<u64>());
+    }
+
+    #[test]
+    fn scope_fold_empty() {
+        let pool = ThreadPool::new(2);
+        let mut calls = 0;
+        pool.scope_fold(Vec::<usize>::new(), |x| x, |_, _| calls += 1);
+        assert_eq!(calls, 0);
     }
 
     #[test]

@@ -48,6 +48,7 @@ fn base_cfg(artifact: &str) -> RunConfig {
         sharing: Sharing::Full,
         eval_every: 3,
         seed: 1,
+        num_threads: 0,
     }
 }
 

@@ -1,0 +1,295 @@
+//! Parallel round-loop tests over the native backend (no artifacts, no
+//! Python, no XLA — these always run).
+//!
+//! The core guarantee of the fan-out/reduce refactor: `RoundReport`
+//! streams, the communication ledger, and the server parameters are
+//! **bit-identical** for every worker-pool size, across all five FL
+//! optimizers. Client RNG streams are keyed by `(round, cid)` and the
+//! reduce folds job outcomes in participant order, so scheduling cannot
+//! leak into results.
+
+use fedpara::config::{Optimizer, RunConfig, Sharing};
+use fedpara::coordinator::{eval_on, Federation};
+use fedpara::data::{partition, synth_vision, Dataset};
+use fedpara::runtime::native::{self, NativeScheme, NativeSpec};
+use fedpara::runtime::{BatchShape, Engine};
+use fedpara::util::rng::Rng;
+
+fn iid_locals(n_per: usize, clients: usize, seed: u64) -> (Vec<Dataset>, Dataset) {
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, clients * n_per, seed);
+    let test = synth_vision::generate(&spec, 256, seed ^ 0xE0E0);
+    let mut rng = Rng::new(seed);
+    let part = partition::iid(data.len(), clients, &mut rng);
+    let locals = part.clients.iter().map(|idx| data.subset(idx)).collect();
+    (locals, test)
+}
+
+/// A deliberately small native artifact set so the pool-size sweeps stay
+/// fast in debug builds (determinism does not depend on model size; the
+/// default hidden-64 artifacts are covered by the accounting/learning
+/// tests below).
+fn small_engine() -> Engine {
+    let train = BatchShape { nbatches: 2, batch: 16, feature_dim: 784 };
+    let eval = BatchShape { nbatches: 2, batch: 64, feature_dim: 784 };
+    let spec = |scheme| NativeSpec { in_dim: 784, hidden: 24, classes: 10, scheme };
+    Engine::with_artifacts(vec![
+        native::artifact("small_orig", spec(NativeScheme::Original), train, eval),
+        native::artifact("small_pfedpara", spec(NativeScheme::PFedPara { gamma: 0.5 }), train, eval),
+    ])
+}
+
+fn base_cfg(artifact: &str, num_threads: usize) -> RunConfig {
+    RunConfig {
+        artifact: artifact.into(),
+        sample_frac: 0.5,
+        rounds: 3,
+        local_epochs: 2,
+        lr: 0.1,
+        lr_decay: 0.992,
+        optimizer: Optimizer::FedAvg,
+        quantize_upload: false,
+        sharing: Sharing::Full,
+        eval_every: 2,
+        seed: 11,
+        num_threads,
+    }
+}
+
+/// Everything a round reports except wall-clock time, bit-exact.
+#[derive(Debug, PartialEq)]
+struct ReportKey {
+    round: usize,
+    lr: u32,
+    participants: usize,
+    mean_train_loss: u64,
+    up_bytes: u64,
+    down_bytes: u64,
+    cum_gbytes: u64,
+    test_acc: Option<u64>,
+    test_loss: Option<u64>,
+}
+
+fn run_stream(cfg: RunConfig, rounds: usize) -> (Vec<ReportKey>, Vec<u32>, Vec<(u64, u64)>) {
+    let engine = small_engine();
+    let (locals, test) = iid_locals(48, 8, 21);
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    fed.run(rounds).unwrap();
+    let keys = fed
+        .reports
+        .iter()
+        .map(|r| ReportKey {
+            round: r.round,
+            lr: r.lr.to_bits(),
+            participants: r.participants,
+            mean_train_loss: r.mean_train_loss.to_bits(),
+            up_bytes: r.up_bytes,
+            down_bytes: r.down_bytes,
+            cum_gbytes: r.cum_gbytes.to_bits(),
+            test_acc: r.test_acc.map(f64::to_bits),
+            test_loss: r.test_loss.map(f64::to_bits),
+        })
+        .collect();
+    let params = fed.server_global().iter().map(|p| p.to_bits()).collect();
+    let ledger = fed.comm.per_round.clone();
+    (keys, params, ledger)
+}
+
+#[test]
+fn bit_identical_across_pool_sizes_all_optimizers() {
+    for optimizer in [
+        Optimizer::FedAvg,
+        Optimizer::FedProx { mu: 0.1 },
+        Optimizer::Scaffold,
+        Optimizer::FedDyn { alpha: 0.1 },
+        Optimizer::FedAdam,
+    ] {
+        let mut cfg = base_cfg("small_orig", 1);
+        cfg.optimizer = optimizer;
+        cfg.local_epochs = 1;
+        let reference = run_stream(cfg.clone(), 3);
+        for threads in [2usize, 8] {
+            let mut c = cfg.clone();
+            c.num_threads = threads;
+            let got = run_stream(c, 3);
+            assert_eq!(
+                reference.0, got.0,
+                "{}: reports diverge at pool size {threads}",
+                optimizer.name()
+            );
+            assert_eq!(
+                reference.1, got.1,
+                "{}: server params diverge at pool size {threads}",
+                optimizer.name()
+            );
+            assert_eq!(
+                reference.2, got.2,
+                "{}: comm ledger diverges at pool size {threads}",
+                optimizer.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn bit_identical_for_pfedpara_sharing() {
+    // Partial sharing (pFedPara): local factors persist per client while
+    // only global segments travel — still pool-size independent.
+    let mut cfg = base_cfg("small_pfedpara", 1);
+    cfg.sharing = Sharing::GlobalSegments;
+    cfg.sample_frac = 1.0;
+    cfg.local_epochs = 1;
+    let reference = run_stream(cfg.clone(), 2);
+    for threads in [2usize, 8] {
+        let mut c = cfg.clone();
+        c.num_threads = threads;
+        assert_eq!(reference, run_stream(c, 2), "pool size {threads}");
+    }
+}
+
+#[test]
+fn more_clients_than_workers_stress() {
+    // 24 clients, all sampled, on a 3-worker pool: the queue backs up and
+    // completion order scrambles, but the round must still be deterministic
+    // and account every client exactly once.
+    let engine = small_engine();
+    let (locals, test) = iid_locals(32, 24, 33);
+    let mut cfg = base_cfg("small_orig", 3);
+    cfg.sample_frac = 1.0;
+    cfg.local_epochs = 1;
+    cfg.eval_every = 0;
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    let r = fed.run_round().unwrap();
+    assert_eq!(r.participants, 24);
+    let model_bytes = fed.meta().full_model_bytes() as u64;
+    assert_eq!(fed.comm.total_bytes(), 2 * 24 * model_bytes);
+    assert!(r.mean_train_loss.is_finite());
+}
+
+#[test]
+fn native_federation_learns() {
+    let engine = small_engine();
+    let (locals, test) = iid_locals(80, 8, 41);
+    let mut cfg = base_cfg("small_orig", 0);
+    cfg.rounds = 6;
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    let before = fed.evaluate_global().unwrap().accuracy();
+    fed.run(6).unwrap();
+    let after = fed.evaluate_global().unwrap().accuracy();
+    assert!(
+        after > before + 0.05,
+        "federated training failed to learn: {before:.3} -> {after:.3}"
+    );
+    let losses: Vec<f64> = fed.reports.iter().map(|r| r.mean_train_loss).collect();
+    assert!(losses.last().unwrap() < losses.first().unwrap());
+}
+
+#[test]
+fn native_pfedpara_transfers_only_global_half() {
+    let engine = Engine::native();
+    let (locals, test) = iid_locals(64, 4, 51);
+    let mut cfg = base_cfg("native_mlp10_pfedpara", 1);
+    cfg.sharing = Sharing::GlobalSegments;
+    cfg.sample_frac = 1.0;
+    cfg.local_epochs = 1;
+    cfg.eval_every = 0;
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    fed.run_round().unwrap();
+    let meta = fed.meta();
+    let expected = 2 * 4 * meta.global_bytes() as u64; // 4 clients, up+down.
+    assert_eq!(fed.comm.total_bytes(), expected);
+    assert!(meta.global_bytes() < meta.full_model_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// eval_on tail masking (regression: wrap-around used to double count)
+// ---------------------------------------------------------------------------
+
+/// With zero parameters every logit is 0, so the model always predicts
+/// class 0 (first-max tie-break). Adversarial labels make the old
+/// wrap-around double counting visible: the wrapped prefix was all-correct,
+/// the fresh tail all-wrong.
+#[test]
+fn eval_on_does_not_double_count_non_multiple_test_sets() {
+    let engine = Engine::native();
+    let rt = engine.load("native_mlp10_orig").unwrap();
+    let need = rt.meta.eval.samples_per_call();
+    assert_eq!(need, 256, "test assumes the default native eval shape");
+
+    // 300 samples: one full chunk of 256 + a 44-sample tail. The old code
+    // wrapped the tail chunk back to the start, re-counting samples
+    // 0..212 and reporting 424/512 ≈ 0.83 instead of the true 212/300.
+    let len = 300usize;
+    let correct_prefix = 212usize;
+    let data = Dataset {
+        features: vec![0.0; len * 784],
+        labels: (0..len).map(|i| if i < correct_prefix { 0 } else { 5 }).collect(),
+        feature_dim: 784,
+        num_classes: 10,
+    };
+    let params = vec![0.0f32; rt.meta.param_count];
+    let out = eval_on(&rt, &params, &data).unwrap();
+    assert_eq!(out.denominator, len as f64, "every sample counted exactly once");
+    assert_eq!(out.correct, correct_prefix as f64);
+    let expected_acc = correct_prefix as f64 / len as f64;
+    assert!(
+        (out.accuracy() - expected_acc).abs() < 1e-12,
+        "accuracy {} != {expected_acc}",
+        out.accuracy()
+    );
+    // Zero logits: per-sample CE is exactly ln(10).
+    assert!((out.mean_loss() - (10f32).ln() as f64).abs() < 1e-6);
+}
+
+#[test]
+fn eval_on_exact_multiple_unchanged() {
+    // 512 = 2 × 256: no tail, denominator is the full set.
+    let engine = Engine::native();
+    let rt = engine.load("native_mlp10_orig").unwrap();
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, 512, 61);
+    let mut rng = Rng::new(62);
+    let params = rt.meta.layout.init_params(&mut rng);
+    let out = eval_on(&rt, &params, &data).unwrap();
+    assert_eq!(out.denominator, 512.0);
+    assert!(out.correct >= 0.0 && out.correct <= 512.0);
+}
+
+// ---------------------------------------------------------------------------
+// SCAFFOLD comm accounting (regression: control variate billed at fp32
+// even under fp16 uplink quantization)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scaffold_quantized_uplink_bills_control_variate_at_fp16() {
+    let engine = small_engine();
+    let (locals, test) = iid_locals(48, 4, 71);
+    let mut cfg = base_cfg("small_orig", 2);
+    cfg.optimizer = Optimizer::Scaffold;
+    cfg.quantize_upload = true;
+    cfg.sample_frac = 1.0;
+    cfg.local_epochs = 1;
+    cfg.eval_every = 0;
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    fed.run_round().unwrap();
+    let p = fed.meta().param_count as u64;
+    // Down: model + control at fp32. Up: model + control at fp16.
+    assert_eq!(fed.comm.down_bytes, 4 * (4 * p + 4 * p));
+    assert_eq!(fed.comm.up_bytes, 4 * (2 * p + 2 * p));
+}
+
+#[test]
+fn scaffold_unquantized_accounting_unchanged() {
+    let engine = small_engine();
+    let (locals, test) = iid_locals(48, 4, 81);
+    let mut cfg = base_cfg("small_orig", 2);
+    cfg.optimizer = Optimizer::Scaffold;
+    cfg.sample_frac = 1.0;
+    cfg.local_epochs = 1;
+    cfg.eval_every = 0;
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    fed.run_round().unwrap();
+    let model_bytes = fed.meta().full_model_bytes() as u64;
+    // Model + control variate in both directions (the paper's 2× formula).
+    assert_eq!(fed.comm.total_bytes(), 2 * 2 * 4 * model_bytes);
+}

@@ -1,0 +1,135 @@
+//! Offline **stub** of the `xla` PJRT bindings.
+//!
+//! Compiled only under the `pjrt` cargo feature of the `fedpara` crate.
+//! It mirrors the API surface `runtime/mod.rs` uses so the PJRT code path
+//! keeps compiling offline, but every runtime entry point returns
+//! [`Error::Unavailable`]: executing AOT HLO artifacts needs the real XLA
+//! C++ runtime. Patch in real bindings to use the PJRT backend
+//! (instructions in `vendor/README.md`).
+
+use std::fmt;
+
+/// Error type matching the real bindings' `Result<_, xla::Error>` shape.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The stub cannot perform runtime work.
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real XLA runtime (offline build; \
+                 see rust/vendor/README.md)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the runtime passes to literal constructors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+/// Host literal (stub: holds nothing).
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module proto (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle (stub).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
