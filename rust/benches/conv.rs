@@ -1,0 +1,109 @@
+//! Bench: the native conv path — im2col forward/backward kernels, the
+//! Prop-3 Tucker-Hadamard composition, and a full CNN local epoch through
+//! the native backend (the hot loop behind the Figure-3 CNN scenario).
+//!
+//! No criterion offline — the same harness=false timing loop as
+//! `benches/compose.rs` (warmup + mean ± std via util::stats::Welford).
+//! Run via `cargo bench --bench conv`.
+
+use std::time::Instant;
+
+use fedpara::data::{assemble_batches, synth_vision};
+use fedpara::linalg::kernels::{col2im, im2col, im2col_row, matmul_nn, matmul_nt, matmul_tn};
+use fedpara::parameterization::compose::ConvFactors;
+use fedpara::runtime::Engine;
+use fedpara::util::rng::Rng;
+use fedpara::util::stats::Welford;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    for _ in 0..3 {
+        f();
+    }
+    let mut w = Welford::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        w.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "{name:<44} {:>9.3} ms ± {:>7.3} (n={iters}, min {:.3})",
+        w.mean(),
+        w.std_dev(),
+        w.min()
+    );
+}
+
+fn conv_kernels() {
+    println!("== im2col conv2d: forward + backward kernels (f32) ==");
+    let mut rng = Rng::new(7);
+    for &(bsz, h, w, ci, o) in &[(16usize, 16usize, 16usize, 8usize, 8usize), (16, 8, 8, 16, 16)] {
+        let k = 3;
+        let ikk = im2col_row(ci, k);
+        let rows = bsz * h * w;
+        let x: Vec<f32> = (0..bsz * h * w * ci).map(|_| rng.gaussian() as f32).collect();
+        let wmat: Vec<f32> = (0..o * ikk).map(|_| rng.gaussian() as f32).collect();
+        let mut cols = vec![0f32; rows * ikk];
+        let mut out = vec![0f32; rows * o];
+        bench(&format!("im2col+matmul {bsz}x{h}x{w}x{ci} -> {o}"), 20, || {
+            im2col(&x, bsz, h, w, ci, k, &mut cols);
+            matmul_nt(&cols, &wmat, rows, ikk, o, &mut out);
+            std::hint::black_box(&out);
+        });
+        let dout: Vec<f32> = (0..rows * o).map(|_| rng.gaussian() as f32).collect();
+        let mut dw = vec![0f32; o * ikk];
+        let mut dcols = vec![0f32; rows * ikk];
+        let mut dx = vec![0f32; x.len()];
+        bench(&format!("conv backward {bsz}x{h}x{w}x{ci} -> {o}"), 20, || {
+            matmul_tn(&dout, &cols, rows, o, ikk, &mut dw);
+            matmul_nn(&dout, &wmat, rows, o, ikk, &mut dcols);
+            col2im(&dcols, bsz, h, w, ci, k, &mut dx);
+            std::hint::black_box(&dx);
+        });
+    }
+}
+
+fn prop3_compose() {
+    println!("\n== Prop-3 composition (f64 reference, VGG-sized layers) ==");
+    let mut rng = Rng::new(8);
+    for &(o, i, r) in &[(64usize, 64usize, 8usize), (128, 128, 12)] {
+        let f = ConvFactors::randn(o, i, 3, 3, r, &mut rng);
+        bench(&format!("ConvFactors::compose {o}x{i}x3x3 R={r}"), 10, || {
+            std::hint::black_box(f.compose());
+        });
+    }
+}
+
+fn cnn_epoch() -> anyhow::Result<()> {
+    println!("\n== native CNN local epoch (built-in CIFAR-like artifacts) ==");
+    let engine = Engine::native();
+    let spec = synth_vision::cifar10_like();
+    let data = synth_vision::generate(&spec, 256, 3);
+    let idx: Vec<usize> = (0..data.len()).collect();
+    for name in ["native_cnn10_orig", "native_cnn10_fedpara"] {
+        let rt = engine.load(name)?;
+        let t = rt.meta.train;
+        let mut rng = Rng::new(4);
+        let params = rt.meta.layout.init_params(&mut rng);
+        let stack = assemble_batches(&data, &idx, t.nbatches, t.batch, &mut rng);
+        bench(
+            &format!("train_epoch {name} ({} params)", rt.meta.param_count),
+            10,
+            || {
+                let out = rt
+                    .train_epoch(&params, &stack.x, &stack.y, 0.05, None, None, 0.0)
+                    .expect("train_epoch");
+                std::hint::black_box(out.mean_loss);
+            },
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    conv_kernels();
+    prop3_compose();
+    if let Err(e) = cnn_epoch() {
+        eprintln!("cnn epoch bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

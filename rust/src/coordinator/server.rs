@@ -590,14 +590,17 @@ impl Federation {
         if client_tests.len() != self.clients.len() {
             return Err(anyhow!("need one test set per client"));
         }
+        // The download is client-invariant: gather the server's global view
+        // once, not once per client.
+        let global = (!matches!(self.cfg.sharing, Sharing::LocalOnly))
+            .then(|| self.layout.gather_global(&self.server_params));
         let mut accs = Vec::with_capacity(self.clients.len());
         for (c, t) in self.clients.iter().zip(client_tests) {
             // A client that never trained evaluates its init — fine.
             let mut params = c.params.clone();
-            if !matches!(self.cfg.sharing, Sharing::LocalOnly) {
+            if let Some(g) = &global {
                 // Personalized model = latest global + own local segments.
-                let g = self.layout.gather_global(&self.server_params);
-                self.layout.scatter_global(&mut params, &g);
+                self.layout.scatter_global(&mut params, g);
             }
             accs.push(eval_on(&self.rt, &params, t)?.accuracy());
         }
@@ -642,4 +645,50 @@ pub fn eval_on(rt: &ModelRuntime, params: &[f32], data: &Dataset) -> Result<Eval
         start += need;
     }
     merged.ok_or_else(|| anyhow!("empty test set"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_vision;
+
+    /// The gather-hoist in `evaluate_personalized` must not change any
+    /// per-client accuracy: recompute with the pre-hoist formulation (one
+    /// gather per client) and require identical results.
+    #[test]
+    fn personalized_eval_unchanged_by_gather_hoist() {
+        let engine = Engine::native();
+        let spec = synth_vision::mnist_like();
+        let clients = 4usize;
+        let locals: Vec<Dataset> =
+            (0..clients).map(|i| synth_vision::generate(&spec, 48, 100 + i as u64)).collect();
+        let tests: Vec<Dataset> =
+            (0..clients).map(|i| synth_vision::generate(&spec, 32, 200 + i as u64)).collect();
+        let cfg = RunConfig {
+            artifact: "native_mlp10_pfedpara".into(),
+            sample_frac: 1.0,
+            rounds: 2,
+            local_epochs: 1,
+            lr: 0.05,
+            lr_decay: 1.0,
+            optimizer: Optimizer::FedAvg,
+            quantize_upload: false,
+            sharing: Sharing::GlobalSegments,
+            eval_every: 0,
+            seed: 9,
+            num_threads: 1,
+        };
+        let mut fed = Federation::new(&engine, cfg, locals, tests[0].clone()).unwrap();
+        fed.run(2).unwrap();
+        let hoisted = fed.evaluate_personalized(&tests).unwrap();
+        let mut reference = Vec::new();
+        for (c, t) in fed.clients.iter().zip(&tests) {
+            let mut params = c.params.clone();
+            let g = fed.layout.gather_global(&fed.server_params);
+            fed.layout.scatter_global(&mut params, &g);
+            reference.push(eval_on(&fed.rt, &params, t).unwrap().accuracy());
+        }
+        assert_eq!(hoisted, reference);
+        assert_eq!(hoisted.len(), clients);
+    }
 }

@@ -56,6 +56,13 @@ pub fn cinic10_like() -> VisionSpec {
     VisionSpec { h: 16, w: 16, c: 3, classes: 10, noise: 0.8, components: 3, family_seed: 0xC141C }
 }
 
+/// CIFAR-like spec at a custom resolution/class count — the CNN-backend
+/// tests and benches use reduced sizes (e.g. 8×8×3) to stay fast while
+/// keeping the 3-channel texture statistics.
+pub fn cifar_like_sized(h: usize, w: usize, classes: usize) -> VisionSpec {
+    VisionSpec { h, w, c: 3, classes, noise: 0.55, components: 3, family_seed: 0xC1FA }
+}
+
 /// MNIST stand-in: 28×28×1, 10 classes, relatively easy.
 pub fn mnist_like() -> VisionSpec {
     VisionSpec { h: 28, w: 28, c: 1, classes: 10, noise: 0.35, components: 3, family_seed: 0x3A15 }

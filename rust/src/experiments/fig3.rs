@@ -30,13 +30,38 @@ fn orig_artifact(kind: VisionKind) -> &'static str {
     }
 }
 
+/// Resolve the (original, fedpara) artifact pair for one panel: the AOT VGG
+/// artifacts when the manifest has them, otherwise the built-in native
+/// Prop-3 CNN artifacts (same 16×16×3 shapes as the synthetic CIFAR/CINIC
+/// specs), so the paper's main scenario runs end-to-end with no Python and
+/// no XLA.
+pub fn artifact_pair(ctx: &ExpCtx, kind: VisionKind) -> (String, String) {
+    let have = |name: &str| ctx.engine.manifest.artifacts.contains_key(name);
+    let (o, f) = (orig_artifact(kind), fedpara_artifact(kind));
+    let (no, nf) = match kind {
+        VisionKind::Cifar100 => ("native_cnn100_orig", "native_cnn100_fedpara"),
+        _ => ("native_cnn10_orig", "native_cnn10_fedpara"),
+    };
+    if have(o) && have(f) {
+        (o.to_string(), f.to_string())
+    } else if have(no) && have(nf) {
+        (no.to_string(), nf.to_string())
+    } else {
+        // Neither pair is complete (e.g. a partially-built AOT manifest):
+        // keep the AOT names so the load error points at the missing vgg
+        // artifact instead of a native name that manifest can't contain.
+        (o.to_string(), f.to_string())
+    }
+}
+
 pub fn panels(ctx: &ExpCtx) -> Result<Vec<(String, RunResult, RunResult)>> {
     let mut out = Vec::new();
     for kind in [VisionKind::Cifar10, VisionKind::Cifar100, VisionKind::Cinic10] {
         for non_iid in [false, true] {
             let (locals, test) = vision_federation(kind, non_iid, ctx.scale, ctx.seed);
-            let cfg_o = preset(ctx, orig_artifact(kind), kind.paper_rounds(), non_iid);
-            let cfg_f = preset(ctx, fedpara_artifact(kind), kind.paper_rounds(), non_iid);
+            let (art_o, art_f) = artifact_pair(ctx, kind);
+            let cfg_o = preset(ctx, &art_o, kind.paper_rounds(), non_iid);
+            let cfg_f = preset(ctx, &art_f, kind.paper_rounds(), non_iid);
             let res_o = run_federation(ctx, cfg_o, locals.clone(), test.clone())?;
             let res_f = run_federation(ctx, cfg_f, locals, test)?;
             let label = format!(

@@ -35,8 +35,12 @@ fn femnist_clients(seed: u64, clients: usize, frac: f64) -> (Vec<Dataset>, Vec<D
     let mut rng = Rng::new(seed ^ 0xF15);
     for d in locals {
         let (train, test) = d.train_test_split(0.25, &mut rng);
-        let keep = ((train.len() as f64) * frac).round().max(8.0) as usize;
-        let idx: Vec<usize> = (0..keep).collect();
+        // Keep a floor of 8 samples but never more than the client has
+        // (the unclamped round-up used to index out of bounds for tiny
+        // clients), and draw the kept subset with the rng instead of the
+        // order-biased prefix 0..keep.
+        let keep = ((((train.len() as f64) * frac).round().max(8.0)) as usize).min(train.len());
+        let idx = rng.sample_indices(train.len(), keep);
         trains.push(train.subset(&idx));
         tests.push(test);
     }

@@ -12,9 +12,9 @@
 //!   table and figure of the paper.
 //! * **L2** — JAX model + local-training step, AOT-lowered to HLO text by
 //!   `python/compile/aot.py` (build time only; Python never runs on the
-//!   request path). A pure-rust mirror of the MLP family
-//!   (`runtime::native`) serves the same contract offline, so the whole
-//!   coordinator runs and is tested without XLA.
+//!   request path). A pure-rust layer-list executable (`runtime::native`,
+//!   MLPs + a Prop-3 conv CNN) serves the same contract offline, so the
+//!   whole coordinator runs and is tested without XLA.
 //! * **L1** — Pallas kernels for the FedPara weight composition
 //!   `W = (X1·Y1ᵀ) ⊙ (X2·Y2ᵀ)`, validated against a pure-jnp oracle.
 //!

@@ -5,8 +5,157 @@
 //! Hadamard and outer products, numerical rank via row echelon with partial
 //! pivoting, and 4th-order tensor mode-unfoldings / mode products for the
 //! Proposition-3 convolution parameterization.
+//!
+//! The [`kernels`] submodule holds the f32 execution kernels the native
+//! backend runs on: the three matmul contraction shapes and the
+//! im2col/col2im pair behind the conv2d forward/backward.
 
 use crate::util::rng::Rng;
+
+/// f32 execution kernels (row-major) shared by `runtime::native` and the
+/// benches: matmuls in the three contraction shapes a dense net needs, and
+/// im2col/col2im for stride-1 same-padding conv2d.
+pub mod kernels {
+    /// `out[m,n] = a[m,k] · b[n,k]ᵀ` — the X·Yᵀ / forward-pass shape.
+    pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(out.len(), m * n);
+        for i in 0..m {
+            let ar = &a[i * k..(i + 1) * k];
+            let or = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                let br = &b[j * k..(j + 1) * k];
+                let mut acc = 0f32;
+                for t in 0..k {
+                    acc += ar[t] * br[t];
+                }
+                or[j] = acc;
+            }
+        }
+    }
+
+    /// `out[m,n] = a[m,k] · b[k,n]`.
+    pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        out.fill(0.0);
+        for i in 0..m {
+            let or = &mut out[i * n..(i + 1) * n];
+            for t in 0..k {
+                let av = a[i * k + t];
+                if av == 0.0 {
+                    continue;
+                }
+                let br = &b[t * n..(t + 1) * n];
+                for j in 0..n {
+                    or[j] += av * br[j];
+                }
+            }
+        }
+    }
+
+    /// `out[k,n] = a[m,k]ᵀ · b[m,n]` — gradient contractions over the batch.
+    pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert_eq!(out.len(), k * n);
+        out.fill(0.0);
+        for i in 0..m {
+            let ar = &a[i * k..(i + 1) * k];
+            let br = &b[i * n..(i + 1) * n];
+            for t in 0..k {
+                let av = ar[t];
+                if av == 0.0 {
+                    continue;
+                }
+                let or = &mut out[t * n..(t + 1) * n];
+                for j in 0..n {
+                    or[j] += av * br[j];
+                }
+            }
+        }
+    }
+
+    /// Column count of one im2col row: the conv's fan-in `c·k·k`.
+    pub fn im2col_row(c: usize, k: usize) -> usize {
+        c * k * k
+    }
+
+    /// Unroll `x ∈ [bsz, h, w, c]` (channel-minor) into
+    /// `cols ∈ [bsz·h·w, c·k·k]` for a stride-1, same-padding k×k conv:
+    /// row `(b,y,x)` holds the receptive field of output pixel `(y,x)`,
+    /// column-ordered `(c, ky, kx)` to match an `(O, I, K1, K2)` row-major
+    /// kernel flattened to `[O, I·K1·K2]`. Out-of-image taps are zero.
+    pub fn im2col(x: &[f32], bsz: usize, h: usize, w: usize, c: usize, k: usize, cols: &mut [f32]) {
+        let kk = k * k;
+        let row_len = c * kk;
+        debug_assert_eq!(x.len(), bsz * h * w * c);
+        debug_assert_eq!(cols.len(), bsz * h * w * row_len);
+        let pad = (k / 2) as isize;
+        for b in 0..bsz {
+            for oy in 0..h {
+                for ox in 0..w {
+                    let row = ((b * h + oy) * w + ox) * row_len;
+                    for ky in 0..k {
+                        let iy = oy as isize + ky as isize - pad;
+                        for kx in 0..k {
+                            let ix = ox as isize + kx as isize - pad;
+                            let inside =
+                                iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize;
+                            let src = if inside {
+                                Some((((b * h + iy as usize) * w) + ix as usize) * c)
+                            } else {
+                                None
+                            };
+                            for ci in 0..c {
+                                cols[row + ci * kk + ky * k + kx] = match src {
+                                    Some(s) => x[s + ci],
+                                    None => 0.0,
+                                };
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Adjoint of [`im2col`]: scatter-add `cols` gradients back onto the
+    /// input image gradient `dx ∈ [bsz, h, w, c]` (fully overwritten).
+    pub fn col2im(cols: &[f32], bsz: usize, h: usize, w: usize, c: usize, k: usize, dx: &mut [f32]) {
+        let kk = k * k;
+        let row_len = c * kk;
+        debug_assert_eq!(dx.len(), bsz * h * w * c);
+        debug_assert_eq!(cols.len(), bsz * h * w * row_len);
+        let pad = (k / 2) as isize;
+        dx.fill(0.0);
+        for b in 0..bsz {
+            for oy in 0..h {
+                for ox in 0..w {
+                    let row = ((b * h + oy) * w + ox) * row_len;
+                    for ky in 0..k {
+                        let iy = oy as isize + ky as isize - pad;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = ox as isize + kx as isize - pad;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let dst = (((b * h + iy as usize) * w) + ix as usize) * c;
+                            for ci in 0..c {
+                                dx[dst + ci] += cols[row + ci * kk + ky * k + kx];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
 
 /// Row-major dense f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -432,6 +581,101 @@ mod tests {
         let h = a.hadamard(&b);
         for i in 0..16 {
             assert!((h.data[i] - a.data[i] * b.data[i]).abs() < 1e-15);
+        }
+    }
+
+    fn randn32(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn f32_matmuls_match_f64_reference() {
+        let mut rng = Rng::new(19);
+        let (m, k, n) = (5, 7, 4);
+        let a = randn32(m * k, &mut rng);
+        let b_nt = randn32(n * k, &mut rng);
+        let b_nn = randn32(k * n, &mut rng);
+        let b_tn = randn32(m * n, &mut rng);
+
+        let am = Mat::from_f32(m, k, &a);
+        let mut out = vec![0f32; m * n];
+
+        kernels::matmul_nt(&a, &b_nt, m, k, n, &mut out);
+        let r = am.matmul_t(&Mat::from_f32(n, k, &b_nt));
+        for (x, y) in out.iter().zip(r.data.iter()) {
+            assert!((*x as f64 - y).abs() < 1e-4);
+        }
+
+        kernels::matmul_nn(&a, &b_nn, m, k, n, &mut out);
+        let r = am.matmul(&Mat::from_f32(k, n, &b_nn));
+        for (x, y) in out.iter().zip(r.data.iter()) {
+            assert!((*x as f64 - y).abs() < 1e-4);
+        }
+
+        let mut out_kn = vec![0f32; k * n];
+        kernels::matmul_tn(&a, &b_tn, m, k, n, &mut out_kn);
+        let r = am.transpose().matmul(&Mat::from_f32(m, n, &b_tn));
+        for (x, y) in out_kn.iter().zip(r.data.iter()) {
+            assert!((*x as f64 - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn im2col_center_tap_is_identity() {
+        // The (ky,kx) = (1,1) tap of a 3×3 im2col is the pixel itself.
+        let mut rng = Rng::new(20);
+        let (b, h, w, c, k) = (2usize, 4usize, 3usize, 2usize, 3usize);
+        let x = randn32(b * h * w * c, &mut rng);
+        let mut cols = vec![0f32; b * h * w * kernels::im2col_row(c, k)];
+        kernels::im2col(&x, b, h, w, c, k, &mut cols);
+        let kk = k * k;
+        for bi in 0..b {
+            for y in 0..h {
+                for xi in 0..w {
+                    let row = ((bi * h + y) * w + xi) * c * kk;
+                    for ci in 0..c {
+                        let center = cols[row + ci * kk + k + 1]; // ky=1,kx=1
+                        let pix = x[(((bi * h + y) * w) + xi) * c + ci];
+                        assert_eq!(center, pix);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_edges_are_zero_padded() {
+        let (b, h, w, c, k) = (1usize, 3usize, 3usize, 1usize, 3usize);
+        let x = vec![1f32; h * w];
+        let mut cols = vec![0f32; h * w * kernels::im2col_row(c, k)];
+        kernels::im2col(&x, b, h, w, c, k, &mut cols);
+        // Top-left output pixel: taps above/left of the image are zero.
+        assert_eq!(cols[0], 0.0); // (ky=0, kx=0)
+        assert_eq!(cols[4], 1.0); // center
+        // Sum over all cols counts each pixel once per in-bounds tap:
+        // interior pixel of a 3×3 image is touched 9 times, corners 4.
+        let total: f32 = cols.iter().sum();
+        assert_eq!(total, 4.0 * 4.0 + 4.0 * 6.0 + 9.0);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // ⟨im2col(x), c⟩ = ⟨x, col2im(c)⟩ for random x, c — the property
+        // the conv backward pass relies on.
+        let mut rng = Rng::new(21);
+        for &(b, h, w, c, k) in &[(1usize, 4usize, 4usize, 3usize, 3usize), (2, 3, 5, 2, 3), (1, 2, 2, 1, 1)] {
+            let x = randn32(b * h * w * c, &mut rng);
+            let cvec = randn32(b * h * w * kernels::im2col_row(c, k), &mut rng);
+            let mut cols = vec![0f32; cvec.len()];
+            kernels::im2col(&x, b, h, w, c, k, &mut cols);
+            let mut dx = vec![0f32; x.len()];
+            kernels::col2im(&cvec, b, h, w, c, k, &mut dx);
+            let lhs: f64 = cols.iter().zip(&cvec).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let rhs: f64 = x.iter().zip(&dx).map(|(&a, &b)| a as f64 * b as f64).sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()),
+                "({b},{h},{w},{c},{k}): {lhs} vs {rhs}"
+            );
         }
     }
 }

@@ -73,7 +73,8 @@ fn engine_from(args: &Args) -> Result<Engine> {
     } else {
         eprintln!(
             "note: {} has no manifest.json — using the built-in native backend \
-             (artifacts: native_mlp10_orig / native_mlp10_fedpara / native_mlp10_pfedpara)",
+             (artifacts: native_mlp10_{{orig,fedpara,pfedpara}} and the Prop-3 \
+             CNNs native_cnn10_{{orig,fedpara}} / native_cnn100_{{orig,fedpara}})",
             dir.display()
         );
         Ok(Engine::native())

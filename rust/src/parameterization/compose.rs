@@ -74,6 +74,41 @@ impl ConvFactors {
         let w2 = self.t2.mode_product(0, &self.x2).mode_product(1, &self.y2);
         w1.hadamard(&w2)
     }
+
+    /// Build the reference factor set from flat f32 buffers laid out the way
+    /// the native runtime stores them (`x: O×R`, `y: I×R`, `t: R×R×K1×K2`,
+    /// all row-major) — used to cross-check `runtime::native`'s f32 conv
+    /// composition against this f64 reference.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_f32_parts(
+        o: usize,
+        i: usize,
+        k1: usize,
+        k2: usize,
+        r: usize,
+        x1: &[f32],
+        y1: &[f32],
+        t1: &[f32],
+        x2: &[f32],
+        y2: &[f32],
+        t2: &[f32],
+    ) -> ConvFactors {
+        let tensor = |d: &[f32]| -> Tensor4 {
+            assert_eq!(d.len(), r * r * k1 * k2);
+            Tensor4 {
+                dims: [r, r, k1, k2],
+                data: d.iter().map(|&v| v as f64).collect(),
+            }
+        };
+        ConvFactors {
+            t1: tensor(t1),
+            x1: Mat::from_f32(o, r, x1),
+            y1: Mat::from_f32(i, r, y1),
+            t2: tensor(t2),
+            x2: Mat::from_f32(o, r, x2),
+            y2: Mat::from_f32(i, r, y2),
+        }
+    }
 }
 
 /// One Figure-6 style trial: sample gaussian factors for an m×n weight with

@@ -52,6 +52,15 @@ impl LayerShape {
         m * n
     }
 
+    /// Fan-in (incoming connections per output unit): `n` for FC,
+    /// `I·K1·K2` for conv — the He-init variance denominator.
+    pub fn fan_in(&self) -> usize {
+        match *self {
+            LayerShape::Fc { n, .. } => n,
+            LayerShape::Conv { i, k1, k2, .. } => i * k1 * k2,
+        }
+    }
+
     /// Maximal achievable rank of the (unfolded) weight.
     pub fn max_possible_rank(&self) -> usize {
         let (m, n) = self.unfolded();
@@ -206,6 +215,12 @@ mod tests {
         // Prop 3 is ~3.9x smaller than Prop 1 here (paper: "3.8 times").
         let ratio = p1.params(conv) as f64 / p3.params(conv) as f64;
         assert!((3.5..4.2).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn fan_in_matches_unfolding() {
+        assert_eq!(LayerShape::Fc { m: 10, n: 256 }.fan_in(), 256);
+        assert_eq!(LayerShape::Conv { o: 8, i: 3, k1: 3, k2: 3 }.fan_in(), 27);
     }
 
     #[test]

@@ -26,10 +26,9 @@
 pub mod manifest;
 pub mod native;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 #[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 use std::time::Instant;
@@ -282,13 +281,32 @@ impl ModelRuntime {
 }
 
 /// The engine: manifest + compile cache (+ the PJRT client when enabled).
+///
+/// The artifact cache is behind an `RwLock` (it used to be a `RefCell`,
+/// which made `Engine` non-`Sync`), so worker-pool threads can load
+/// artifacts concurrently through a shared `&Engine`.
 pub struct Engine {
     #[cfg(feature = "pjrt")]
-    client: Option<xla::PjRtClient>,
+    client: Option<ClientCell>,
     pub manifest: Manifest,
     dir: PathBuf,
-    cache: RefCell<HashMap<String, Arc<ModelRuntime>>>,
+    cache: RwLock<HashMap<String, Arc<ModelRuntime>>>,
 }
+
+/// PJRT client behind a `Mutex` for the same reason as [`PjrtExec`]: the
+/// bindings don't assert thread-safety, so compile calls are serialized.
+/// The unsafe impls live on this newtype (not on `Engine`) so the compiler
+/// keeps auto-checking `Send`/`Sync` for every other `Engine` field.
+#[cfg(feature = "pjrt")]
+struct ClientCell(Mutex<xla::PjRtClient>);
+
+// SAFETY: PJRT CPU clients are not thread-affine (any thread may call into
+// them), the bindings just don't assert `Send`/`Sync`. Every client call
+// goes through the `Mutex`, so no handle is ever used concurrently.
+#[cfg(feature = "pjrt")]
+unsafe impl Send for ClientCell {}
+#[cfg(feature = "pjrt")]
+unsafe impl Sync for ClientCell {}
 
 impl Engine {
     /// Create an engine over `artifacts_dir` (reads manifest.json).
@@ -302,14 +320,14 @@ impl Engine {
                 c.platform_name(),
                 c.device_count()
             );
-            Some(c)
+            Some(ClientCell(Mutex::new(c)))
         };
         Ok(Engine {
             #[cfg(feature = "pjrt")]
             client,
             manifest,
             dir: artifacts_dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
+            cache: RwLock::new(HashMap::new()),
         })
     }
 
@@ -326,7 +344,7 @@ impl Engine {
             client: None,
             manifest: native::manifest(artifacts),
             dir: PathBuf::new(),
-            cache: RefCell::new(HashMap::new()),
+            cache: RwLock::new(HashMap::new()),
         }
     }
 
@@ -342,7 +360,10 @@ impl Engine {
         let client = self
             .client
             .as_ref()
-            .ok_or_else(|| anyhow!("engine has no PJRT client (native-only engine)"))?;
+            .ok_or_else(|| anyhow!("engine has no PJRT client (native-only engine)"))?
+            .0
+            .lock()
+            .expect("pjrt client lock poisoned");
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
         )
@@ -353,9 +374,11 @@ impl Engine {
             .with_context(|| format!("compiling {}", path.display()))
     }
 
-    /// Load (compile-once) an artifact by manifest name.
+    /// Load (compile-once) an artifact by manifest name. Safe to call from
+    /// multiple threads: the first completed build wins and every caller
+    /// gets the same shared runtime.
     pub fn load(&self, name: &str) -> Result<Arc<ModelRuntime>> {
-        if let Some(rt) = self.cache.borrow().get(name) {
+        if let Some(rt) = self.cache.read().expect("engine cache poisoned").get(name) {
             return Ok(Arc::clone(rt));
         }
         let meta = self.manifest.get(name).map_err(|e| anyhow!(e))?.clone();
@@ -391,8 +414,11 @@ impl Engine {
             meta,
             exec,
         });
-        self.cache.borrow_mut().insert(name.to_string(), Arc::clone(&rt));
-        Ok(rt)
+        // Two racing loaders may both build; the first insert wins so all
+        // callers share one runtime (a duplicate build is dropped here).
+        let mut cache = self.cache.write().expect("engine cache poisoned");
+        let entry = cache.entry(name.to_string()).or_insert(rt);
+        Ok(Arc::clone(entry))
     }
 
     pub fn artifacts_root(&self) -> &Path {
@@ -409,6 +435,53 @@ mod tests {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<ModelRuntime>();
         assert_send_sync::<Arc<ModelRuntime>>();
+    }
+
+    #[test]
+    fn engine_is_send_sync_and_loads_concurrently() {
+        // The artifact cache is a lock, not a RefCell: worker threads may
+        // load through a shared &Engine, and racing loads of the same name
+        // all resolve to one shared runtime.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+        let engine = Engine::native();
+        let rts: Vec<Arc<ModelRuntime>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| s.spawn(|| engine.load("native_mlp10_fedpara").unwrap()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for pair in rts.windows(2) {
+            assert!(Arc::ptr_eq(&pair[0], &pair[1]), "racing loads must share one runtime");
+        }
+    }
+
+    #[test]
+    fn native_cnn_artifact_trains_and_evals() {
+        let engine = Engine::native();
+        let orig = engine.load("native_cnn10_orig").unwrap();
+        let rt = engine.load("native_cnn10_fedpara").unwrap();
+        // The Figure-3 precondition: the Prop-3 CNN transfers strictly
+        // fewer parameters than the dense CNN.
+        assert!(rt.meta.global_len < orig.meta.param_count);
+        assert_eq!(rt.meta.model, "cnn");
+        assert_eq!(rt.meta.train.feature_dim, 16 * 16 * 3);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let params = rt.meta.layout.init_params(&mut rng);
+        let t = rt.meta.train;
+        let n = t.samples_per_call();
+        let x: Vec<f32> = (0..n * t.feature_dim).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.below(10) as f32).collect();
+        let out = rt.train_epoch(&params, &x, &y, 0.05, None, None, 0.0).unwrap();
+        assert!(out.mean_loss.is_finite());
+        assert_eq!(out.params.len(), rt.meta.param_count);
+        let e = rt.meta.eval;
+        let ne = e.samples_per_call();
+        let ex: Vec<f32> = (0..ne * e.feature_dim).map(|_| rng.gaussian() as f32).collect();
+        let ey: Vec<f32> = (0..ne).map(|_| rng.below(10) as f32).collect();
+        let ev = rt.eval_call(&out.params, &ex, &ey).unwrap();
+        assert_eq!(ev.denominator, ne as f64);
+        assert!(ev.loss_sum.is_finite());
     }
 
     #[test]

@@ -32,7 +32,7 @@ fn iid_locals(n_per: usize, clients: usize, seed: u64) -> (Vec<Dataset>, Dataset
 fn small_engine() -> Engine {
     let train = BatchShape { nbatches: 2, batch: 16, feature_dim: 784 };
     let eval = BatchShape { nbatches: 2, batch: 64, feature_dim: 784 };
-    let spec = |scheme| NativeSpec { in_dim: 784, hidden: 24, classes: 10, scheme };
+    let spec = |scheme| NativeSpec::mlp_dims(784, 24, 10, scheme);
     Engine::with_artifacts(vec![
         native::artifact("small_orig", spec(NativeScheme::Original), train, eval),
         native::artifact("small_pfedpara", spec(NativeScheme::PFedPara { gamma: 0.5 }), train, eval),
