@@ -9,7 +9,14 @@ use fedpara::util::rng::Rng;
 use fedpara::util::stats::Welford;
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+fn bench<F: FnMut()>(name: &str, iters: usize, f: F) {
+    bench_bytes(name, iters, 0.0, f);
+}
+
+/// Aggregation is memory-bound, so report GB/s (bytes touched per
+/// iteration over mean wall time) next to wall time when the caller knows
+/// its traffic; `bytes == 0` prints plain timings.
+fn bench_bytes<F: FnMut()>(name: &str, iters: usize, bytes: f64, mut f: F) {
     for _ in 0..3 {
         f();
     }
@@ -19,11 +26,20 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
         f();
         w.push(t0.elapsed().as_secs_f64() * 1e3);
     }
-    println!(
-        "{name:<44} {:>9.3} ms ± {:>7.3} (n={iters})",
-        w.mean(),
-        w.std_dev()
-    );
+    if bytes > 0.0 {
+        println!(
+            "{name:<44} {:>9.3} ms ± {:>7.3}  {:>6.2} GB/s (n={iters})",
+            w.mean(),
+            w.std_dev(),
+            bytes / (w.mean() * 1e-3) / 1e9,
+        );
+    } else {
+        println!(
+            "{name:<44} {:>9.3} ms ± {:>7.3} (n={iters})",
+            w.mean(),
+            w.std_dev()
+        );
+    }
 }
 
 fn main() {
@@ -34,7 +50,8 @@ fn main() {
             .map(|_| (0..dim).map(|_| rng.gaussian() as f32).collect())
             .collect();
         let weights: Vec<f64> = (0..clients).map(|_| 1.0 + rng.f64()).collect();
-        bench(&format!("weighted_mean {clients}cl × {dim}"), 10, || {
+        let bytes = ((clients + 1) * dim * 4) as f64; // Read every upload, write the mean.
+        bench_bytes(&format!("weighted_mean {clients}cl × {dim}"), 10, bytes, || {
             std::hint::black_box(weighted_mean(&uploads, &weights));
         });
     }
@@ -81,10 +98,16 @@ fn main() {
         std::hint::black_box(&target);
     });
 
-    bench("fp16 quantize roundtrip 1M", 10, || {
+    let qbytes = (dim * (4 + 4)) as f64; // Read f32, write f32 back.
+    bench_bytes("fp16 quantize roundtrip 1M", 10, qbytes, || {
         std::hint::black_box(f16::quantize_roundtrip(&params));
     });
-    bench("fp16 pack 1M", 10, || {
+    let mut inplace = params.clone();
+    bench_bytes("fp16 quantize in-place 1M (uplink path)", 10, qbytes, || {
+        f16::quantize_roundtrip_in_place(&mut inplace);
+        std::hint::black_box(&inplace);
+    });
+    bench_bytes("fp16 pack 1M", 10, (dim * (4 + 2)) as f64, || {
         std::hint::black_box(f16::pack(&params));
     });
 }

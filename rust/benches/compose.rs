@@ -48,12 +48,44 @@ fn main() {
         });
     }
 
-    println!("\n== matmul_t (A·Bᵀ) baseline ==");
+    println!("\n== matmul_t (A·Bᵀ) baseline (f64 reference path) ==");
     for &(m, n, k) in &[(256usize, 256usize, 16usize), (512, 512, 32)] {
         let a = Mat::randn(m, k, &mut rng);
         let b = Mat::randn(n, k, &mut rng);
         bench(&format!("matmul_t {m}x{k} · ({n}x{k})ᵀ"), 20, || {
             std::hint::black_box(a.matmul_t(&b));
         });
+    }
+
+    // The f32 execution kernels behind runtime::native, at the same
+    // composition shape, with arithmetic/memory rates — the blocked GEMM
+    // core this crate actually trains through (see benches/conv.rs and
+    // `cargo run --release --bin bench_report` for the full comparison).
+    println!("\n== f32 blocked GEMM at the compose shape ==");
+    for &(m, n, r) in &[(256usize, 256usize, 16usize), (512, 512, 23)] {
+        let x: Vec<f32> = (0..m * r).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..n * r).map(|_| rng.gaussian() as f32).collect();
+        let mut w = vec![0f32; m * n];
+        let flops = 2.0 * (m * n * r) as f64;
+        let bytes = ((m * r + n * r + m * n) * 4) as f64;
+        let timer = {
+            let mut wf = Welford::new();
+            for it in 0..23 {
+                let t0 = Instant::now();
+                fedpara::linalg::kernels::matmul_nt(&x, &y, m, r, n, &mut w);
+                std::hint::black_box(&w);
+                if it >= 3 {
+                    wf.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+            }
+            wf
+        };
+        let secs = timer.mean() * 1e-3;
+        println!(
+            "kernels::matmul_nt {m}x{r} · ({n}x{r})ᵀ          {:>9.3} ms  {:>7.2} GFLOP/s  {:>6.2} GB/s",
+            timer.mean(),
+            flops / secs / 1e9,
+            bytes / secs / 1e9,
+        );
     }
 }

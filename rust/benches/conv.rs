@@ -9,13 +9,15 @@
 use std::time::Instant;
 
 use fedpara::data::{assemble_batches, synth_vision};
-use fedpara::linalg::kernels::{col2im, im2col, im2col_row, matmul_nn, matmul_nt, matmul_tn};
+use fedpara::linalg::kernels::{
+    self, col2im, im2col, im2col_row, matmul_nn, matmul_nt, matmul_tn,
+};
 use fedpara::parameterization::compose::ConvFactors;
 use fedpara::runtime::Engine;
 use fedpara::util::rng::Rng;
 use fedpara::util::stats::Welford;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+fn run_timed<F: FnMut()>(iters: usize, mut f: F) -> Welford {
     for _ in 0..3 {
         f();
     }
@@ -25,11 +27,32 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
         f();
         w.push(t0.elapsed().as_secs_f64() * 1e3);
     }
+    w
+}
+
+fn bench<F: FnMut()>(name: &str, iters: usize, f: F) {
+    let w = run_timed(iters, f);
     println!(
         "{name:<44} {:>9.3} ms ± {:>7.3} (n={iters}, min {:.3})",
         w.mean(),
         w.std_dev(),
         w.min()
+    );
+}
+
+/// Like [`bench`] but also reports arithmetic throughput (GFLOP/s from the
+/// caller's FLOP count) and memory traffic (GB/s from bytes touched per
+/// iteration) so kernel changes are judged against roofline numbers, not
+/// just wall time.
+fn bench_rate<F: FnMut()>(name: &str, iters: usize, flops: f64, bytes: f64, f: F) {
+    let w = run_timed(iters, f);
+    let secs = w.mean() * 1e-3;
+    println!(
+        "{name:<44} {:>9.3} ms ± {:>7.3}  {:>7.2} GFLOP/s  {:>6.2} GB/s (n={iters})",
+        w.mean(),
+        w.std_dev(),
+        flops / secs / 1e9,
+        bytes / secs / 1e9,
     );
 }
 
@@ -44,21 +67,58 @@ fn conv_kernels() {
         let wmat: Vec<f32> = (0..o * ikk).map(|_| rng.gaussian() as f32).collect();
         let mut cols = vec![0f32; rows * ikk];
         let mut out = vec![0f32; rows * o];
-        bench(&format!("im2col+matmul {bsz}x{h}x{w}x{ci} -> {o}"), 20, || {
-            im2col(&x, bsz, h, w, ci, k, &mut cols);
-            matmul_nt(&cols, &wmat, rows, ikk, o, &mut out);
-            std::hint::black_box(&out);
-        });
+        // Forward: the im2col expansion writes rows·ikk, the GEMM reads it
+        // back plus the kernel and writes rows·o.
+        let fwd_flops = 2.0 * (rows * ikk * o) as f64;
+        let fwd_bytes = ((x.len() + 2 * cols.len() + wmat.len() + out.len()) * 4) as f64;
+        bench_rate(
+            &format!("im2col+matmul {bsz}x{h}x{w}x{ci} -> {o}"),
+            20,
+            fwd_flops,
+            fwd_bytes,
+            || {
+                im2col(&x, bsz, h, w, ci, k, &mut cols);
+                matmul_nt(&cols, &wmat, rows, ikk, o, &mut out);
+                std::hint::black_box(&out);
+            },
+        );
         let dout: Vec<f32> = (0..rows * o).map(|_| rng.gaussian() as f32).collect();
         let mut dw = vec![0f32; o * ikk];
         let mut dcols = vec![0f32; rows * ikk];
         let mut dx = vec![0f32; x.len()];
-        bench(&format!("conv backward {bsz}x{h}x{w}x{ci} -> {o}"), 20, || {
-            matmul_tn(&dout, &cols, rows, o, ikk, &mut dw);
-            matmul_nn(&dout, &wmat, rows, o, ikk, &mut dcols);
-            col2im(&dcols, bsz, h, w, ci, k, &mut dx);
-            std::hint::black_box(&dx);
-        });
+        // Backward: two GEMMs over the same volume + the col2im scatter.
+        let bwd_flops = 4.0 * (rows * ikk * o) as f64;
+        let bwd_bytes =
+            ((2 * dout.len() + cols.len() + wmat.len() + dw.len() + 2 * dcols.len() + dx.len()) * 4)
+                as f64;
+        bench_rate(
+            &format!("conv backward {bsz}x{h}x{w}x{ci} -> {o}"),
+            20,
+            bwd_flops,
+            bwd_bytes,
+            || {
+                matmul_tn(&dout, &cols, rows, o, ikk, &mut dw);
+                matmul_nn(&dout, &wmat, rows, o, ikk, &mut dcols);
+                col2im(&dcols, bsz, h, w, ci, k, &mut dx);
+                std::hint::black_box(&dx);
+            },
+        );
+        // The same forward GEMM through the pre-blocking naive loops — the
+        // "before" row of DESIGN.md's native-kernel-performance table
+        // (regenerate via `cargo run --release --bin bench_report`).
+        kernels::force_naive(true);
+        bench_rate(
+            &format!("  ^ naive kernels {bsz}x{h}x{w}x{ci} -> {o}"),
+            10,
+            fwd_flops,
+            fwd_bytes,
+            || {
+                im2col(&x, bsz, h, w, ci, k, &mut cols);
+                matmul_nt(&cols, &wmat, rows, ikk, o, &mut out);
+                std::hint::black_box(&out);
+            },
+        );
+        kernels::force_naive(false);
     }
 }
 
@@ -85,14 +145,23 @@ fn cnn_epoch() -> anyhow::Result<()> {
         let mut rng = Rng::new(4);
         let params = rt.meta.layout.init_params(&mut rng);
         let stack = assemble_batches(&data, &idx, t.nbatches, t.batch, &mut rng);
-        bench(
+        let flops = rt.train_flops_estimate().unwrap_or(0.0);
+        // One reused workspace + param buffer: the steady-state
+        // (zero-allocation) path the round loop runs, with no alloc inside
+        // the timed region.
+        let mut ws = rt.workspace();
+        let mut p = params.clone();
+        bench_rate(
             &format!("train_epoch {name} ({} params)", rt.meta.param_count),
             10,
+            flops,
+            ((stack.x.len() + params.len() * 2) * 4) as f64,
             || {
-                let out = rt
-                    .train_epoch(&params, &stack.x, &stack.y, 0.05, None, None, 0.0)
+                p.copy_from_slice(&params);
+                let loss = rt
+                    .train_epoch_ws(&mut ws, &mut p, &stack.x, &stack.y, 0.05, None, None, 0.0)
                     .expect("train_epoch");
-                std::hint::black_box(out.mean_loss);
+                std::hint::black_box(loss);
             },
         );
     }

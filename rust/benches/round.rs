@@ -1,14 +1,18 @@
 //! Bench: end-to-end federated rounds — the numbers behind Supp. Table 7's
 //! t_comp and the §Perf log.
 //!
-//! Two sections:
+//! Three sections:
 //!
 //! 1. **Pool-size sweep** (always runs, native backend): the same
 //!    federation at worker pool sizes 1/2/4/8, reporting per-round wall
-//!    time and speedup vs. sequential. Results are bit-identical across
-//!    pool sizes (asserted by `tests/parallel_round.rs`); this bench
-//!    measures only wall clock.
-//! 2. **AOT artifacts** (requires `make artifacts` + `--features pjrt`):
+//!    time, speedup vs. sequential, aggregate GFLOP/s and the round's
+//!    ledger bytes. Results are bit-identical across pool sizes (asserted
+//!    by `tests/parallel_round.rs`); this bench measures only wall clock.
+//! 2. **Kernel speedup** (always runs): a round on the Prop-3 CNN
+//!    artifact under the blocked GEMM core vs the retained naive loops —
+//!    the ISSUE-3 acceptance comparison (`bench_report` records it to
+//!    BENCH_native.json).
+//! 3. **AOT artifacts** (requires `make artifacts` + `--features pjrt`):
 //!    one row per paper model family, as before. Skipped gracefully so
 //!    `cargo bench` stays green on fresh checkouts.
 
@@ -18,6 +22,7 @@ use std::time::Instant;
 use fedpara::config::{Optimizer, RunConfig, Sharing};
 use fedpara::coordinator::Federation;
 use fedpara::data::{partition, synth_text, synth_vision};
+use fedpara::linalg::kernels;
 use fedpara::runtime::Engine;
 use fedpara::util::rng::Rng;
 use fedpara::util::stats::Welford;
@@ -53,6 +58,11 @@ fn pool_sweep() -> anyhow::Result<()> {
     println!(
         "== pool-size sweep (native backend, {clients} clients, E=2, host has {host} cores) =="
     );
+    // Round arithmetic: every client runs E epochs of the model's epoch
+    // FLOPs; bytes = the round's up+down ledger traffic.
+    let rt = engine.load("native_mlp10_fedpara")?;
+    let round_flops =
+        rt.train_flops_estimate().unwrap_or(0.0) * (clients * 2) as f64;
     let mut baseline = 0.0f64;
     for threads in [1usize, 2, 4, 8] {
         let mut fed = Federation::new(
@@ -71,13 +81,61 @@ fn pool_sweep() -> anyhow::Result<()> {
         if threads == 1 {
             baseline = w.mean();
         }
+        let (up, down) = *fed.comm.per_round.last().unwrap();
         println!(
-            "pool={threads:<2} round {:>8.1} ms ± {:>6.1}   speedup {:>5.2}x",
+            "pool={threads:<2} round {:>8.1} ms ± {:>6.1}   speedup {:>5.2}x   {:>6.2} GFLOP/s   {:>7} B moved",
             w.mean(),
             w.std_dev(),
-            baseline / w.mean()
+            baseline / w.mean(),
+            round_flops / (w.mean() * 1e-3) / 1e9,
+            up + down,
         );
     }
+    Ok(())
+}
+
+/// The ISSUE-3 acceptance scenario: one federated round on the Prop-3 CNN
+/// artifact, blocked kernels vs the retained naive loops. `bench_report`
+/// writes the same comparison to BENCH_native.json.
+fn kernel_speedup_round() -> anyhow::Result<()> {
+    let engine = Engine::native();
+    let clients = 4;
+    let spec = synth_vision::cifar10_like();
+    let data = synth_vision::generate(&spec, clients * 64, 1);
+    let test = synth_vision::generate(&spec, 64, 2);
+    let mut rng = Rng::new(3);
+    let part = partition::iid(data.len(), clients, &mut rng);
+    let locals: Vec<_> = part.clients.iter().map(|i| data.subset(i)).collect();
+    println!("\n== kernel speedup: federated round on native_cnn10_fedpara ==");
+    let mut naive_ms = 0.0f64;
+    for use_naive in [true, false] {
+        kernels::force_naive(use_naive);
+        let mut fed = Federation::new(
+            &engine,
+            native_cfg("native_cnn10_fedpara", 0),
+            locals.clone(),
+            test.clone(),
+        )?;
+        fed.run_round()?; // Warmup.
+        let mut w = Welford::new();
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            fed.run_round()?;
+            w.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        if use_naive {
+            naive_ms = w.mean();
+            println!("naive   round {:>8.1} ms ± {:>6.1}", w.mean(), w.std_dev());
+        } else {
+            println!(
+                "blocked round {:>8.1} ms ± {:>6.1}   speedup {:.2}x",
+                w.mean(),
+                w.std_dev(),
+                naive_ms / w.mean()
+            );
+        }
+    }
+    kernels::force_naive(false);
     Ok(())
 }
 
@@ -158,6 +216,7 @@ fn artifact_rows(engine: &Engine) -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     pool_sweep()?;
+    kernel_speedup_round()?;
 
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {

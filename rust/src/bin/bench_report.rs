@@ -1,0 +1,272 @@
+//! `bench_report` — the native-backend performance harness.
+//!
+//! Times the blocked/packed GEMM core against the retained naive kernels
+//! (`linalg::kernels::naive`, toggled at runtime via `force_naive`) at
+//! three granularities — raw kernels, one CNN `train_epoch`, and a full
+//! federated round on the `native_cnn10_fedpara` artifact — and writes the
+//! numbers to `BENCH_native.json` so the repo's perf trajectory is tracked
+//! run over run (CI uploads the file as an artifact on every push).
+//!
+//! ```text
+//! cargo run --release --bin bench_report            # full shapes
+//! cargo run --release --bin bench_report -- --smoke # tiny shapes (CI)
+//! cargo run --release --bin bench_report -- --out path/to.json
+//! ```
+
+use std::time::Instant;
+
+use fedpara::config::{Optimizer, RunConfig, Sharing};
+use fedpara::coordinator::Federation;
+use fedpara::data::{partition, synth_vision};
+use fedpara::linalg::kernels;
+use fedpara::runtime::Engine;
+use fedpara::util::json::Json;
+use fedpara::util::rng::Rng;
+use fedpara::util::stats::Welford;
+
+/// Mean wall-clock over `iters` timed runs after 2 warmups.
+fn time_ms<F: FnMut()>(iters: usize, mut f: F) -> Welford {
+    for _ in 0..2 {
+        f();
+    }
+    let mut w = Welford::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        w.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    w
+}
+
+fn gflops(flops: f64, ms: f64) -> f64 {
+    if ms <= 0.0 {
+        0.0
+    } else {
+        flops / (ms * 1e-3) / 1e9
+    }
+}
+
+fn randn(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() as f32).collect()
+}
+
+/// Kernel section: each contraction shape, naive vs blocked.
+fn bench_gemm(smoke: bool, iters: usize) -> Json {
+    // Shapes drawn from the hot paths: the CNN im2col GEMM
+    // (rows = bsz·h·w), the MLP forward, and a square reference.
+    let shapes: &[(usize, usize, usize)] = if smoke {
+        &[(24, 18, 20)]
+    } else {
+        &[(256, 256, 256), (4096, 72, 8), (128, 784, 64)]
+    };
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(17);
+    println!("== GEMM core: naive vs blocked (ms, GFLOP/s) ==");
+    for &(m, k, n) in shapes {
+        let a = randn(m * k, &mut rng);
+        let flops = 2.0 * (m * k * n) as f64;
+        let bytes = ((m * k + k * n + m * n) * 4) as f64;
+        for op in ["nn", "nt", "tn"] {
+            let (b, mut out) = match op {
+                "nn" => (randn(k * n, &mut rng), vec![0f32; m * n]),
+                "nt" => (randn(n * k, &mut rng), vec![0f32; m * n]),
+                _ => (randn(m * n, &mut rng), vec![0f32; k * n]),
+            };
+            let run = |use_naive: bool, out: &mut [f32]| {
+                kernels::force_naive(use_naive);
+                match op {
+                    "nn" => kernels::matmul_nn(&a, &b, m, k, n, out),
+                    "nt" => kernels::matmul_nt(&a, &b, m, k, n, out),
+                    _ => kernels::matmul_tn(&a, &b, m, k, n, out),
+                }
+                kernels::force_naive(false);
+            };
+            let naive = time_ms(iters, || run(true, &mut out));
+            let blocked = time_ms(iters, || run(false, &mut out));
+            std::hint::black_box(&out);
+            let (ng, bg) = (gflops(flops, naive.mean()), gflops(flops, blocked.mean()));
+            println!(
+                "matmul_{op} {m}x{k}x{n}: naive {:>8.3} ms ({ng:>6.2} GF/s)  blocked {:>8.3} ms ({bg:>6.2} GF/s)  {:.2}x",
+                naive.mean(),
+                blocked.mean(),
+                naive.mean() / blocked.mean()
+            );
+            rows.push(Json::obj(vec![
+                ("op", Json::Str(op.to_string())),
+                ("m", Json::Num(m as f64)),
+                ("k", Json::Num(k as f64)),
+                ("n", Json::Num(n as f64)),
+                ("flops", Json::Num(flops)),
+                ("bytes_moved", Json::Num(bytes)),
+                ("naive_ms", Json::Num(naive.mean())),
+                ("blocked_ms", Json::Num(blocked.mean())),
+                ("naive_gflops", Json::Num(ng)),
+                ("blocked_gflops", Json::Num(bg)),
+                ("speedup", Json::Num(naive.mean() / blocked.mean())),
+            ]));
+        }
+    }
+    Json::Arr(rows)
+}
+
+/// One CNN local epoch through the native backend, naive vs blocked.
+fn bench_train_epoch(smoke: bool, iters: usize) -> anyhow::Result<Json> {
+    let artifact = "native_cnn10_fedpara";
+    let engine = Engine::native();
+    let rt = engine.load(artifact)?;
+    let t = rt.meta.train;
+    let mut rng = Rng::new(4);
+    let params = rt.meta.layout.init_params(&mut rng);
+    let n = t.samples_per_call();
+    let x = randn(n * t.feature_dim, &mut rng);
+    let y: Vec<f32> = (0..n).map(|_| rng.below(10) as f32).collect();
+    let flops = rt.train_flops_estimate().unwrap_or(0.0);
+    let iters = if smoke { 1 } else { iters };
+
+    let mut ws = rt.workspace();
+    // `p` is reset (not re-allocated) per iteration so the timed region is
+    // exactly the zero-alloc hot path being measured.
+    let mut p = params.clone();
+    let mut run = |use_naive: bool| {
+        kernels::force_naive(use_naive);
+        let w = time_ms(iters, || {
+            p.copy_from_slice(&params);
+            let loss = rt
+                .train_epoch_ws(&mut ws, &mut p, &x, &y, 0.05, None, None, 0.0)
+                .expect("train_epoch");
+            std::hint::black_box(loss);
+        });
+        kernels::force_naive(false);
+        w
+    };
+    let naive = run(true);
+    let blocked = run(false);
+    let (ng, bg) = (gflops(flops, naive.mean()), gflops(flops, blocked.mean()));
+    println!("\n== CNN train_epoch ({artifact}, {} params) ==", rt.meta.param_count);
+    println!(
+        "naive {:>8.2} ms ({ng:>6.2} GF/s)  blocked {:>8.2} ms ({bg:>6.2} GF/s)  {:.2}x",
+        naive.mean(),
+        blocked.mean(),
+        naive.mean() / blocked.mean()
+    );
+    Ok(Json::obj(vec![
+        ("artifact", Json::Str(artifact.to_string())),
+        ("flops", Json::Num(flops)),
+        ("naive_ms", Json::Num(naive.mean())),
+        ("blocked_ms", Json::Num(blocked.mean())),
+        ("naive_gflops", Json::Num(ng)),
+        ("blocked_gflops", Json::Num(bg)),
+        ("speedup", Json::Num(naive.mean() / blocked.mean())),
+    ]))
+}
+
+/// A full federated round on the acceptance artifact, naive vs blocked —
+/// the ISSUE-3 acceptance numbers (≥3× on a multicore release build).
+fn bench_round(smoke: bool, iters: usize) -> anyhow::Result<Json> {
+    let artifact = "native_cnn10_fedpara";
+    let clients = if smoke { 2 } else { 4 };
+    let engine = Engine::native();
+    let spec = synth_vision::cifar10_like();
+    let data = synth_vision::generate(&spec, clients * 64, 1);
+    let test = synth_vision::generate(&spec, 64, 2);
+    let mut rng = Rng::new(3);
+    let part = partition::iid(data.len(), clients, &mut rng);
+    let locals: Vec<_> = part.clients.iter().map(|i| data.subset(i)).collect();
+    let cfg = RunConfig {
+        artifact: artifact.into(),
+        sample_frac: 1.0,
+        rounds: 4,
+        local_epochs: 2,
+        lr: 0.05,
+        lr_decay: 1.0,
+        optimizer: Optimizer::FedAvg,
+        quantize_upload: false,
+        sharing: Sharing::Full,
+        eval_every: 0,
+        seed: 4,
+        num_threads: 0,
+    };
+    let iters = if smoke { 1 } else { iters };
+
+    let mut up_bytes = 0u64;
+    let mut down_bytes = 0u64;
+    let mut run = |use_naive: bool| -> anyhow::Result<Welford> {
+        kernels::force_naive(use_naive);
+        let mut fed = Federation::new(&engine, cfg.clone(), locals.clone(), test.clone())?;
+        fed.run_round()?; // Warmup (fills the per-job scratch pool).
+        let mut w = Welford::new();
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let r = fed.run_round()?;
+            w.push(t0.elapsed().as_secs_f64() * 1e3);
+            up_bytes = r.up_bytes;
+            down_bytes = r.down_bytes;
+        }
+        kernels::force_naive(false);
+        Ok(w)
+    };
+    let naive = run(true)?;
+    let blocked = run(false)?;
+    let speedup = naive.mean() / blocked.mean();
+    println!("\n== federated round ({artifact}, {clients} clients, E=2) ==");
+    println!(
+        "naive {:>8.2} ms  blocked {:>8.2} ms  speedup {speedup:.2}x  ({} up / {} down bytes per round)",
+        naive.mean(),
+        blocked.mean(),
+        up_bytes,
+        down_bytes
+    );
+    Ok(Json::obj(vec![
+        ("artifact", Json::Str(artifact.to_string())),
+        ("clients", Json::Num(clients as f64)),
+        ("local_epochs", Json::Num(2.0)),
+        ("naive_ms", Json::Num(naive.mean())),
+        ("blocked_ms", Json::Num(blocked.mean())),
+        ("speedup", Json::Num(speedup)),
+        ("up_bytes", Json::Num(up_bytes as f64)),
+        ("down_bytes", Json::Num(down_bytes as f64)),
+    ]))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_native.json".to_string());
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--smoke" => i += 1,
+            "--out" if i + 1 < args.len() => i += 2,
+            "--out" => anyhow::bail!("--out requires a path argument"),
+            other => {
+                anyhow::bail!("unknown argument '{other}' (usage: bench_report [--smoke] [--out path])")
+            }
+        }
+    }
+    let iters = if smoke { 2 } else { 10 };
+
+    let gemm = bench_gemm(smoke, iters);
+    let epoch = bench_train_epoch(smoke, iters)?;
+    let round = bench_round(smoke, iters)?;
+
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let doc = Json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("mode", Json::Str(if smoke { "smoke" } else { "full" }.to_string())),
+        ("host_threads", Json::Num(host as f64)),
+        ("gemm", gemm),
+        ("train_epoch", epoch),
+        ("round", round),
+    ]);
+    std::fs::write(&out_path, doc.to_string_pretty())?;
+    println!("\nwrote {out_path}");
+    if smoke {
+        println!("(smoke mode: tiny shapes — harness health check, not a perf claim)");
+    }
+    Ok(())
+}

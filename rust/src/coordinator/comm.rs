@@ -124,6 +124,15 @@ pub fn quantize_fp16(values: &[f32]) -> (Vec<f32>, u64) {
     (deq, (values.len() * 2) as u64)
 }
 
+/// In-place [`quantize_fp16`]: overwrites `values` with what the server
+/// will see after the fp16 wire roundtrip and returns the bytes on the
+/// wire. The round loop's upload path uses this form so quantization adds
+/// no allocation per client per round.
+pub fn quantize_fp16_in_place(values: &mut [f32]) -> u64 {
+    crate::util::f16::quantize_roundtrip_in_place(values);
+    (values.len() * 2) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,5 +221,10 @@ mod tests {
         for (a, b) in vals.iter().zip(deq.iter()) {
             assert!((a - b).abs() <= a.abs() / 1024.0 + 1e-4);
         }
+        // The allocation-free form sees the same wire values and bytes.
+        let mut inplace = vals.clone();
+        let bytes2 = quantize_fp16_in_place(&mut inplace);
+        assert_eq!(bytes2, bytes);
+        assert_eq!(inplace, deq);
     }
 }

@@ -8,4 +8,4 @@ pub mod sampler;
 pub mod server;
 
 pub use comm::{CommLedger, Network};
-pub use server::{eval_on, Federation, RoundReport};
+pub use server::{eval_on, eval_on_ws, EvalScratch, Federation, RoundReport};

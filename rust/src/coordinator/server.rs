@@ -18,19 +18,19 @@
 //! across pool sizes (client RNG streams are keyed by `(round, cid)`,
 //! never by worker).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use super::aggregate::{self, AdamState, FedDynState, ScaffoldState, WeightedAccumulator};
 use super::client::ClientState;
-use super::comm::{quantize_fp16, CommDelta, CommLedger};
+use super::comm::{quantize_fp16_in_place, CommDelta, CommLedger};
 use super::sampler::Sampler;
 use crate::config::{Optimizer, RunConfig, Sharing};
-use crate::data::{assemble_batches, Dataset};
+use crate::data::{assemble_batches_into, BatchStack, Dataset};
 use crate::parameterization::{Layout, SegmentKind};
-use crate::runtime::{Engine, EvalOutput, ModelRuntime};
+use crate::runtime::{Engine, EvalOutput, ModelRuntime, Workspace};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
@@ -75,9 +75,37 @@ pub struct Federation {
     pub comm: CommLedger,
     sampler: Sampler,
     root_rng: Rng,
-    pool: ThreadPool,
+    /// Shared (`Arc` so eval workspaces can borrow it for intra-op
+    /// row-blocked GEMMs while the fan-out is idle).
+    pool: Arc<ThreadPool>,
+    /// Reusable per-job scratch, one entry per in-flight client job,
+    /// returned to the pool at fold time — so steady-state rounds run the
+    /// whole local-training hot path without heap allocation.
+    scratch_pool: Vec<JobScratch>,
+    /// Cached evaluation scratch (pool attached for row-blocked forward
+    /// GEMMs), shared by `evaluate_global`/`evaluate_personalized` so
+    /// per-round evaluation stays off the allocator too. Behind a `Mutex`
+    /// only because evaluation takes `&self`; it is used exclusively from
+    /// the coordinator thread while the fan-out pool is idle.
+    eval_scratch: Mutex<EvalScratch>,
     pub round: usize,
     pub reports: Vec<RoundReport>,
+}
+
+/// Per-job reusable scratch: the runtime workspace (activations, composed
+/// weights, gradients, …) plus the assembled batch stack.
+struct JobScratch {
+    ws: Workspace,
+    stack: BatchStack,
+}
+
+impl JobScratch {
+    fn new(rt: &ModelRuntime) -> JobScratch {
+        JobScratch {
+            ws: rt.workspace(),
+            stack: BatchStack { x: Vec::new(), y: Vec::new(), nbatches: 0, batch: 0, feature_dim: 0 },
+        }
+    }
 }
 
 /// Apply a `Sharing` policy to the manifest layout.
@@ -142,6 +170,9 @@ struct LocalTrainJob {
     comm: CommDelta,
     /// Aggregation weight (client sample count).
     weight: f64,
+    /// Pooled scratch (workspace + batch stack), owned for the duration of
+    /// the job and handed back through the outcome for reuse next round.
+    scratch: JobScratch,
 }
 
 /// What a job hands back to the reduce.
@@ -161,6 +192,8 @@ struct LocalTrainOutcome {
     delta_control: Option<Vec<f32>>,
     /// FedDyn: updated client λ state.
     new_lambda: Option<Vec<f32>>,
+    /// The job's scratch, returned to the federation's pool.
+    scratch: JobScratch,
 }
 
 impl LocalTrainJob {
@@ -180,6 +213,7 @@ impl LocalTrainJob {
             local_only,
             mut comm,
             weight,
+            mut scratch,
         } = self;
         let t = rt.meta.train;
         // ---- download -----------------------------------------------------
@@ -203,14 +237,24 @@ impl LocalTrainJob {
         let anchor = if use_anchor { Some(start.as_slice()) } else { None };
 
         // ---- local training -----------------------------------------------
+        // In-place epochs through the pooled workspace + batch stack: the
+        // steady-state loop (same client sizes round over round) performs
+        // no heap allocation beyond the small per-epoch index shuffles.
         let mut loss_sum = 0.0f64;
         let idx: Vec<usize> = (0..data.len()).collect();
         for _epoch in 0..local_epochs {
-            let stack = assemble_batches(&data, &idx, t.nbatches, t.batch, &mut rng);
-            let out =
-                rt.train_epoch(&p, &stack.x, &stack.y, lr, correction.as_deref(), anchor, mu)?;
-            p = out.params;
-            loss_sum += out.mean_loss as f64;
+            assemble_batches_into(&mut scratch.stack, &data, &idx, t.nbatches, t.batch, &mut rng);
+            let mean_loss = rt.train_epoch_ws(
+                &mut scratch.ws,
+                &mut p,
+                &scratch.stack.x,
+                &scratch.stack.y,
+                lr,
+                correction.as_deref(),
+                anchor,
+                mu,
+            )?;
+            loss_sum += mean_loss as f64;
         }
 
         // ---- optimizer side-state -----------------------------------------
@@ -240,25 +284,21 @@ impl LocalTrainJob {
         if !local_only {
             let mut up = layout.gather_global(&p);
             let bytes = if quantize_upload {
-                let (deq, b) = quantize_fp16(&up);
-                up = deq;
-                b
+                quantize_fp16_in_place(&mut up)
             } else {
                 (up.len() * 4) as u64
             };
             comm.record_upload(bytes);
-            if let Some(dc) = delta_control.take() {
+            if let Some(mut dc) = delta_control.take() {
                 // The SCAFFOLD control variate rides the same (quantized)
                 // uplink as the model — account and transform it the same
                 // way, so fp16 uploads don't get billed at fp32.
-                let dc = if quantize_upload {
-                    let (deq, b) = quantize_fp16(&dc);
+                if quantize_upload {
+                    let b = quantize_fp16_in_place(&mut dc);
                     comm.record_upload(b);
-                    deq
                 } else {
                     comm.record_upload((dc.len() * 4) as u64);
-                    dc
-                };
+                }
                 delta_control = Some(dc);
             }
             upload = up;
@@ -274,6 +314,7 @@ impl LocalTrainJob {
             new_control,
             delta_control,
             new_lambda,
+            scratch,
         })
     }
 }
@@ -324,7 +365,12 @@ impl Federation {
             0 => ThreadPool::host_parallelism(),
             n => n,
         };
-        let pool = ThreadPool::new(requested.min(clients.len()));
+        let pool = Arc::new(ThreadPool::new(requested.min(clients.len())));
+        // Evaluation runs on the coordinator thread while the fan-out is
+        // idle, so its workspace can safely borrow the pool for intra-op
+        // row-blocked GEMMs.
+        let mut eval_ws = EvalScratch::new(&rt);
+        eval_ws.set_pool(Some(Arc::clone(&pool)));
         Ok(Federation {
             cfg,
             rt,
@@ -337,6 +383,8 @@ impl Federation {
             sampler,
             root_rng,
             pool,
+            scratch_pool: Vec::new(),
+            eval_scratch: Mutex::new(eval_ws),
             round: 0,
             reports: Vec::new(),
         })
@@ -427,6 +475,13 @@ impl Federation {
                 local_only,
                 comm,
                 weight: self.clients[cid].num_samples() as f64,
+                // Reuse last round's scratch where available; the pool
+                // grows to the steady-state participant count and then
+                // stops allocating.
+                scratch: self
+                    .scratch_pool
+                    .pop()
+                    .unwrap_or_else(|| JobScratch::new(&self.rt)),
             });
         }
 
@@ -449,6 +504,7 @@ impl Federation {
             let comm = &mut self.comm;
             let server_params = &self.server_params;
             let optimizer = self.cfg.optimizer;
+            let scratch_pool = &mut self.scratch_pool;
             self.pool.scope_fold(
                 jobs,
                 LocalTrainJob::run,
@@ -468,6 +524,7 @@ impl Federation {
                             return;
                         }
                     };
+                    scratch_pool.push(out.scratch);
                     comm.apply(out.comm);
                     loss_acc += out.loss_sum;
                     let c = &mut clients[out.cid];
@@ -578,9 +635,13 @@ impl Federation {
         Ok(&self.reports)
     }
 
-    /// Evaluate the current global model on the shared test set.
+    /// Evaluate the current global model on the shared test set. Runs on
+    /// the coordinator thread while the fan-out pool is idle; the cached
+    /// workspace (pool attached) makes repeated per-round evaluation
+    /// allocation-free and row-parallel.
     pub fn evaluate_global(&self) -> Result<EvalOutput> {
-        eval_on(&self.rt, &self.server_params, &self.test)
+        let mut ws = self.eval_scratch.lock().expect("eval workspace lock poisoned");
+        eval_on_ws(&self.rt, &mut ws, &self.server_params, &self.test)
     }
 
     /// Evaluate each client's *personalized* model (its full parameter
@@ -591,9 +652,11 @@ impl Federation {
             return Err(anyhow!("need one test set per client"));
         }
         // The download is client-invariant: gather the server's global view
-        // once, not once per client.
+        // once, not once per client. The cached eval workspace serves the
+        // whole sweep.
         let global = (!matches!(self.cfg.sharing, Sharing::LocalOnly))
             .then(|| self.layout.gather_global(&self.server_params));
+        let mut ws = self.eval_scratch.lock().expect("eval workspace lock poisoned");
         let mut accs = Vec::with_capacity(self.clients.len());
         for (c, t) in self.clients.iter().zip(client_tests) {
             // A client that never trained evaluates its init — fine.
@@ -602,7 +665,7 @@ impl Federation {
                 // Personalized model = latest global + own local segments.
                 self.layout.scatter_global(&mut params, g);
             }
-            accs.push(eval_on(&self.rt, &params, t)?.accuracy());
+            accs.push(eval_on_ws(&self.rt, &mut ws, &params, t)?.accuracy());
         }
         Ok(accs)
     }
@@ -619,25 +682,59 @@ impl Federation {
 /// (`eval_call_partial` masks the pad), so the merged output covers every
 /// sample exactly once for **any** test-set size.
 pub fn eval_on(rt: &ModelRuntime, params: &[f32], data: &Dataset) -> Result<EvalOutput> {
+    eval_on_ws(rt, &mut EvalScratch::new(rt), params, data)
+}
+
+/// Pooled evaluation scratch: the runtime [`Workspace`] plus the stacked
+/// x/y chunk-staging buffers [`eval_on_ws`] fills per eval call — so a
+/// reused scratch keeps whole-dataset (and per-client personalized)
+/// evaluation entirely off the allocator.
+pub struct EvalScratch {
+    ws: Workspace,
+    x: Vec<f32>,
+    y: Vec<f32>,
+}
+
+impl EvalScratch {
+    pub fn new(rt: &ModelRuntime) -> EvalScratch {
+        EvalScratch { ws: rt.workspace(), x: Vec::new(), y: Vec::new() }
+    }
+
+    /// See [`Workspace::set_pool`] (same safety caveat).
+    pub fn set_pool(&mut self, pool: Option<Arc<ThreadPool>>) {
+        self.ws.set_pool(pool);
+    }
+}
+
+/// [`eval_on`] with caller-owned scratch: weights compose into the scratch
+/// workspace once per call and the stacked x/y chunk buffers are reused
+/// across chunks and calls.
+pub fn eval_on_ws(
+    rt: &ModelRuntime,
+    scratch: &mut EvalScratch,
+    params: &[f32],
+    data: &Dataset,
+) -> Result<EvalOutput> {
     if data.is_empty() {
         return Err(anyhow!("empty test set"));
     }
     let e = rt.meta.eval;
     let need = e.samples_per_call();
     let mut merged: Option<EvalOutput> = None;
+    let EvalScratch { ws, x, y } = scratch;
     let mut start = 0usize;
     while start < data.len() {
         let valid = (data.len() - start).min(need);
-        let idx: Vec<usize> = (0..need).map(|i| (start + i) % data.len()).collect();
-        let sub = data.subset(&idx);
-        let mut x = Vec::with_capacity(need * data.feature_dim);
-        let mut y = Vec::with_capacity(need);
+        x.clear();
+        x.reserve(need * data.feature_dim);
+        y.clear();
+        y.reserve(need);
         for i in 0..need {
-            let (f, l) = sub.sample(i);
+            let (f, l) = data.sample((start + i) % data.len());
             x.extend_from_slice(f);
             y.push(l as f32);
         }
-        let out = rt.eval_call_partial(params, &x, &y, valid)?;
+        let out = rt.eval_call_partial_ws(ws, params, x, y, valid)?;
         match merged.as_mut() {
             Some(m) => m.merge(&out),
             None => merged = Some(out),

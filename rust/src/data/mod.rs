@@ -109,6 +109,30 @@ pub fn assemble_batches(
     batch: usize,
     rng: &mut Rng,
 ) -> BatchStack {
+    let mut stack = BatchStack {
+        x: Vec::new(),
+        y: Vec::new(),
+        nbatches,
+        batch,
+        feature_dim: data.feature_dim,
+    };
+    assemble_batches_into(&mut stack, data, indices, nbatches, batch, rng);
+    stack
+}
+
+/// [`assemble_batches`] into a caller-owned stack: the big `x`/`y` buffers
+/// are cleared and refilled, so a multi-epoch training job reuses one
+/// allocation per epoch instead of re-allocating the whole sample stack.
+/// (The small per-call index vectors still allocate; they are O(samples),
+/// not O(samples × features).)
+pub fn assemble_batches_into(
+    stack: &mut BatchStack,
+    data: &Dataset,
+    indices: &[usize],
+    nbatches: usize,
+    batch: usize,
+    rng: &mut Rng,
+) {
     assert!(!indices.is_empty(), "client has no data");
     let need = nbatches * batch;
     let mut order: Vec<usize> = Vec::with_capacity(need);
@@ -125,14 +149,18 @@ pub fn assemble_batches(
             order.extend_from_slice(&shuffled[..take]);
         }
     }
-    let mut x = Vec::with_capacity(need * data.feature_dim);
-    let mut y = Vec::with_capacity(need);
+    stack.nbatches = nbatches;
+    stack.batch = batch;
+    stack.feature_dim = data.feature_dim;
+    stack.x.clear();
+    stack.x.reserve(need * data.feature_dim);
+    stack.y.clear();
+    stack.y.reserve(need);
     for &i in &order {
         let (f, l) = data.sample(i);
-        x.extend_from_slice(f);
-        y.push(l as f32);
+        stack.x.extend_from_slice(f);
+        stack.y.push(l as f32);
     }
-    BatchStack { x, y, nbatches, batch, feature_dim: data.feature_dim }
 }
 
 #[cfg(test)]

@@ -15,67 +15,389 @@ use crate::util::rng::Rng;
 /// f32 execution kernels (row-major) shared by `runtime::native` and the
 /// benches: matmuls in the three contraction shapes a dense net needs, and
 /// im2col/col2im for stride-1 same-padding conv2d.
+///
+/// All three matmul entry points are thin transpose-flag wrappers over one
+/// cache-blocked, register-tiled GEMM core ([`gemm`]): A/B panels are
+/// packed into contiguous MC×KC / KC×NC buffers and consumed by a branch-
+/// free MR×NR microkernel whose inner loops autovectorize. The pre-blocking
+/// scalar triple loops survive as [`naive`] — the property-test oracle and
+/// the "before" side of `bench_report`'s speedup measurement, selectable at
+/// runtime via [`force_naive`].
+///
+/// Unlike the old loops, the core has **no** `if av == 0.0 { continue }`
+/// skip: every k term is accumulated, so IEEE non-finite propagation is
+/// exact (`0 · Inf = NaN` reaches the output) and the inner loop carries no
+/// data-dependent branch.
+///
+/// Determinism: each output element accumulates its k terms in a fixed
+/// order that depends only on `k`, never on the tile sizes, the position of
+/// the row in a pack panel, or the number of rows in the call — so
+/// per-row results are bit-identical across batch sizes and across the
+/// row-blocked parallel variant ([`matmul_nt_on`]).
 pub mod kernels {
+    use std::cell::RefCell;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    use crate::util::threadpool::ThreadPool;
+
+    /// Microkernel rows: C is updated MR rows at a time.
+    const MR: usize = 4;
+    /// Microkernel columns: one cache line of f32 (two AVX2 lanes).
+    const NR: usize = 16;
+    /// Row-block of A kept hot in L2 while a B panel streams through.
+    const MC: usize = 64;
+    /// Depth of one packed panel pair (k-blocking).
+    const KC: usize = 256;
+    /// Column-block of B packed per (KC, NC) panel.
+    const NC: usize = 512;
+
+    /// Benchmark hook: route the three matmul entry points through the
+    /// pre-blocking [`naive`] loops instead of the packed core, so
+    /// `bench_report` can measure before/after on the same build. Not for
+    /// production use — the naive `nn`/`tn` loops skip zero A terms and
+    /// therefore do not propagate `0 · Inf` to the output (`nt` never had
+    /// the skip and propagates like the core).
+    pub fn force_naive(on: bool) {
+        FORCE_NAIVE.store(on, Ordering::Relaxed);
+    }
+
+    static FORCE_NAIVE: AtomicBool = AtomicBool::new(false);
+
+    #[inline]
+    fn naive_enabled() -> bool {
+        FORCE_NAIVE.load(Ordering::Relaxed)
+    }
+
+    /// The pre-blocking scalar kernels, kept verbatim (zero-skip branches
+    /// included) as the reference oracle and the `bench_report` baseline.
+    pub mod naive {
+        /// `out[m,n] = a[m,k] · b[n,k]ᵀ`.
+        pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+            debug_assert_eq!(a.len(), m * k);
+            debug_assert_eq!(b.len(), n * k);
+            debug_assert_eq!(out.len(), m * n);
+            for i in 0..m {
+                let ar = &a[i * k..(i + 1) * k];
+                let or = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    let br = &b[j * k..(j + 1) * k];
+                    let mut acc = 0f32;
+                    for t in 0..k {
+                        acc += ar[t] * br[t];
+                    }
+                    or[j] = acc;
+                }
+            }
+        }
+
+        /// `out[m,n] = a[m,k] · b[k,n]`.
+        pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+            debug_assert_eq!(a.len(), m * k);
+            debug_assert_eq!(b.len(), k * n);
+            debug_assert_eq!(out.len(), m * n);
+            out.fill(0.0);
+            for i in 0..m {
+                let or = &mut out[i * n..(i + 1) * n];
+                for t in 0..k {
+                    let av = a[i * k + t];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let br = &b[t * n..(t + 1) * n];
+                    for j in 0..n {
+                        or[j] += av * br[j];
+                    }
+                }
+            }
+        }
+
+        /// `out[k,n] = a[m,k]ᵀ · b[m,n]`.
+        pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+            debug_assert_eq!(a.len(), m * k);
+            debug_assert_eq!(b.len(), m * n);
+            debug_assert_eq!(out.len(), k * n);
+            out.fill(0.0);
+            for i in 0..m {
+                let ar = &a[i * k..(i + 1) * k];
+                let br = &b[i * n..(i + 1) * n];
+                for t in 0..k {
+                    let av = ar[t];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let or = &mut out[t * n..(t + 1) * n];
+                    for j in 0..n {
+                        or[j] += av * br[j];
+                    }
+                }
+            }
+        }
+    }
+
+    thread_local! {
+        /// Per-thread pack buffers (A panel, B panel). Sized once to the
+        /// fixed MC×KC / KC×NC blocks, so the steady-state GEMM performs no
+        /// heap allocation on any thread.
+        static PACK: RefCell<(Vec<f32>, Vec<f32>)> = RefCell::new((Vec::new(), Vec::new()));
+    }
+
+    /// Pack the `mc × kc` block of op(A) at (i0, p0) into MR-row panels:
+    /// `buf[(panel·kc + p)·MR + i] = op(A)[i0 + panel·MR + i, p0 + p]`,
+    /// zero-padding rows past `mc`. op(A) is `a` (stored m×k) or `aᵀ`
+    /// (stored k×m) when `ta`.
+    #[allow(clippy::too_many_arguments)]
+    fn pack_a(
+        a: &[f32],
+        ta: bool,
+        m: usize,
+        k: usize,
+        i0: usize,
+        p0: usize,
+        mc: usize,
+        kc: usize,
+        buf: &mut [f32],
+    ) {
+        for pi in 0..mc.div_ceil(MR) {
+            let ib = i0 + pi * MR;
+            let live = MR.min(mc - pi * MR);
+            let dst = &mut buf[pi * kc * MR..(pi * kc + kc) * MR];
+            if ta {
+                // op(A)[i,p] = a[p·m + i]: rows are contiguous per p.
+                for p in 0..kc {
+                    let src = (p0 + p) * m + ib;
+                    let d = &mut dst[p * MR..(p + 1) * MR];
+                    d[..live].copy_from_slice(&a[src..src + live]);
+                    d[live..].fill(0.0);
+                }
+            } else {
+                // op(A)[i,p] = a[i·k + p]: walk each source row once.
+                for i in 0..live {
+                    let src = (ib + i) * k + p0;
+                    for p in 0..kc {
+                        dst[p * MR + i] = a[src + p];
+                    }
+                }
+                if live < MR {
+                    for p in 0..kc {
+                        dst[p * MR + live..(p + 1) * MR].fill(0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pack the `kc × nc` block of op(B) at (p0, j0) into NR-column panels:
+    /// `buf[(panel·kc + p)·NR + j] = op(B)[p0 + p, j0 + panel·NR + j]`,
+    /// zero-padding columns past `nc`. op(B) is `b` (stored k×n) or `bᵀ`
+    /// (stored n×k) when `tb`.
+    #[allow(clippy::too_many_arguments)]
+    fn pack_b(
+        b: &[f32],
+        tb: bool,
+        k: usize,
+        n: usize,
+        p0: usize,
+        j0: usize,
+        kc: usize,
+        nc: usize,
+        buf: &mut [f32],
+    ) {
+        for pj in 0..nc.div_ceil(NR) {
+            let jb = j0 + pj * NR;
+            let live = NR.min(nc - pj * NR);
+            let dst = &mut buf[pj * kc * NR..(pj * kc + kc) * NR];
+            if tb {
+                // op(B)[p,j] = b[j·k + p]: depth is contiguous per column.
+                for j in 0..live {
+                    let src = (jb + j) * k + p0;
+                    for p in 0..kc {
+                        dst[p * NR + j] = b[src + p];
+                    }
+                }
+                if live < NR {
+                    for p in 0..kc {
+                        dst[p * NR + live..(p + 1) * NR].fill(0.0);
+                    }
+                }
+            } else {
+                // op(B)[p,j] = b[p·n + j]: columns are contiguous per p.
+                for p in 0..kc {
+                    let src = (p0 + p) * n + jb;
+                    let d = &mut dst[p * NR..(p + 1) * NR];
+                    d[..live].copy_from_slice(&b[src..src + live]);
+                    d[live..].fill(0.0);
+                }
+            }
+        }
+    }
+
+    /// MR×NR register tile: accumulate `kc` outer products from the packed
+    /// panels, then add the live `mr × nr` corner into C. The p-loop body
+    /// is branch-free and fully unrollable — each `acc[i][j]` is an
+    /// independent chain over p, so results never depend on tiling.
+    /// Padded panel lanes can hold garbage (0 · Inf); they are masked off
+    /// by the `mr`/`nr` bounds at writeback.
+    fn micro(kc: usize, apan: &[f32], bpan: &[f32], c: &mut [f32], ldc: usize, mr: usize, nr: usize) {
+        let mut acc = [[0f32; NR]; MR];
+        for p in 0..kc {
+            let av = &apan[p * MR..(p + 1) * MR];
+            let bv = &bpan[p * NR..(p + 1) * NR];
+            for (row, &ai) in acc.iter_mut().zip(av) {
+                for (cell, &bj) in row.iter_mut().zip(bv) {
+                    *cell += ai * bj;
+                }
+            }
+        }
+        for (i, row) in acc.iter().enumerate().take(mr) {
+            let cr = &mut c[i * ldc..i * ldc + nr];
+            for (cv, &av) in cr.iter_mut().zip(row.iter()) {
+                *cv += av;
+            }
+        }
+    }
+
+    /// The one packed GEMM core: `out[m,n] = op(A)[m,k] · op(B)[k,n]`,
+    /// fully overwriting `out`. `a` stores A row-major as m×k (k×m when
+    /// `ta`); `b` stores B as k×n (n×k when `tb`).
+    #[allow(clippy::too_many_arguments)]
+    fn gemm(ta: bool, tb: bool, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        out.fill(0.0);
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        PACK.with(|cell| {
+            let (pa, pb) = &mut *cell.borrow_mut();
+            pa.resize(MC * KC, 0.0);
+            pb.resize(KC * NC, 0.0);
+            for j0 in (0..n).step_by(NC) {
+                let nc = NC.min(n - j0);
+                for p0 in (0..k).step_by(KC) {
+                    let kc = KC.min(k - p0);
+                    pack_b(b, tb, k, n, p0, j0, kc, nc, pb);
+                    for i0 in (0..m).step_by(MC) {
+                        let mc = MC.min(m - i0);
+                        pack_a(a, ta, m, k, i0, p0, mc, kc, pa);
+                        for bp in 0..nc.div_ceil(NR) {
+                            let jb = bp * NR;
+                            let nr = NR.min(nc - jb);
+                            let bpan = &pb[bp * kc * NR..(bp * kc + kc) * NR];
+                            for ap in 0..mc.div_ceil(MR) {
+                                let ib = ap * MR;
+                                let mr = MR.min(mc - ib);
+                                let apan = &pa[ap * kc * MR..(ap * kc + kc) * MR];
+                                micro(
+                                    kc,
+                                    apan,
+                                    bpan,
+                                    &mut out[(i0 + ib) * n + j0 + jb..],
+                                    n,
+                                    mr,
+                                    nr,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
+
     /// `out[m,n] = a[m,k] · b[n,k]ᵀ` — the X·Yᵀ / forward-pass shape.
     pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-        debug_assert_eq!(a.len(), m * k);
-        debug_assert_eq!(b.len(), n * k);
-        debug_assert_eq!(out.len(), m * n);
-        for i in 0..m {
-            let ar = &a[i * k..(i + 1) * k];
-            let or = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                let br = &b[j * k..(j + 1) * k];
-                let mut acc = 0f32;
-                for t in 0..k {
-                    acc += ar[t] * br[t];
-                }
-                or[j] = acc;
-            }
+        if naive_enabled() {
+            naive::matmul_nt(a, b, m, k, n, out);
+        } else {
+            gemm(false, true, m, k, n, a, b, out);
         }
     }
 
     /// `out[m,n] = a[m,k] · b[k,n]`.
     pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-        debug_assert_eq!(a.len(), m * k);
-        debug_assert_eq!(b.len(), k * n);
-        debug_assert_eq!(out.len(), m * n);
-        out.fill(0.0);
-        for i in 0..m {
-            let or = &mut out[i * n..(i + 1) * n];
-            for t in 0..k {
-                let av = a[i * k + t];
-                if av == 0.0 {
-                    continue;
-                }
-                let br = &b[t * n..(t + 1) * n];
-                for j in 0..n {
-                    or[j] += av * br[j];
-                }
-            }
+        if naive_enabled() {
+            naive::matmul_nn(a, b, m, k, n, out);
+        } else {
+            gemm(false, false, m, k, n, a, b, out);
         }
     }
 
     /// `out[k,n] = a[m,k]ᵀ · b[m,n]` — gradient contractions over the batch.
     pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-        debug_assert_eq!(a.len(), m * k);
-        debug_assert_eq!(b.len(), m * n);
-        debug_assert_eq!(out.len(), k * n);
-        out.fill(0.0);
-        for i in 0..m {
-            let ar = &a[i * k..(i + 1) * k];
-            let br = &b[i * n..(i + 1) * n];
-            for t in 0..k {
-                let av = ar[t];
-                if av == 0.0 {
-                    continue;
-                }
-                let or = &mut out[t * n..(t + 1) * n];
-                for j in 0..n {
-                    or[j] += av * br[j];
-                }
-            }
+        if naive_enabled() {
+            naive::matmul_tn(a, b, m, k, n, out);
+        } else {
+            gemm(true, false, k, m, n, a, b, out);
         }
+    }
+
+    /// Minimum multiply count before the row-parallel variants fan out;
+    /// below this the task hand-off costs more than it saves.
+    const PAR_MIN_MULS: usize = 1 << 21;
+
+    /// Row-blocked parallel `A·Bᵀ` over `pool`: splits the `m` output rows
+    /// into one contiguous block per worker, each running the serial core
+    /// on its slice of A and C. Per-row results are bit-identical to the
+    /// serial kernels (the k-accumulation order is row-independent).
+    ///
+    /// Runs serially when `pool` is `None`, the pool has one worker, or
+    /// the problem is too small to amortize the fan-out. **Must not be
+    /// called from inside a job running on the same pool** — the blocked
+    /// wait would deadlock against the occupied workers.
+    #[allow(clippy::too_many_arguments)]
+    fn rows_par(
+        pool: Option<&ThreadPool>,
+        tb: bool,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+    ) {
+        let serial = |a: &[f32], m: usize, out: &mut [f32]| {
+            if naive_enabled() {
+                if tb {
+                    naive::matmul_nt(a, b, m, k, n, out);
+                } else {
+                    naive::matmul_nn(a, b, m, k, n, out);
+                }
+            } else {
+                gemm(false, tb, m, k, n, a, b, out);
+            }
+        };
+        let pool = match pool {
+            Some(p) if p.size() > 1 && m >= 2 * MR && m * k * n >= PAR_MIN_MULS => p,
+            _ => return serial(a, m, out),
+        };
+        debug_assert!(n > 0, "parallel threshold guarantees a non-empty row");
+        let chunk = m.div_ceil(pool.size()).max(MR);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(pool.size());
+        for (ci, oc) in out.chunks_mut(chunk * n).enumerate() {
+            let rows = oc.len() / n;
+            let ac = &a[ci * chunk * k..(ci * chunk + rows) * k];
+            tasks.push(Box::new(move || serial(ac, rows, oc)));
+        }
+        pool.run_borrowed(tasks);
+    }
+
+    /// [`matmul_nt`] with optional row-blocked parallelism over `pool` —
+    /// the forward-pass shape is the only one the eval/bench hot paths
+    /// parallelize (an `nn`/`tn` variant would be dead API today; add one
+    /// alongside a consumer when backward needs it).
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_nt_on(
+        pool: Option<&ThreadPool>,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(b.len(), n * k);
+        rows_par(pool, true, m, k, n, a, b, out);
     }
 
     /// Column count of one im2col row: the conv's fan-in `c·k·k`.
@@ -618,6 +940,140 @@ mod tests {
         for (x, y) in out_kn.iter().zip(r.data.iter()) {
             assert!((*x as f64 - y).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn matmuls_propagate_zero_times_inf() {
+        // Removing the naive nn/tn kernels' `av == 0.0` skip changes
+        // semantics when the other operand is non-finite: IEEE says
+        // 0·Inf = NaN, and the blocked core must deliver that NaN to the
+        // output for every shape. (The retained naive nn/tn reference
+        // would silently produce 0 here; naive nt never had the skip.)
+        let (m, k, n) = (3usize, 4usize, 2usize);
+        let mut a = vec![0f32; m * k]; // Row 1 is all zeros.
+        for (j, v) in a.iter_mut().enumerate() {
+            if j / k != 1 {
+                *v = 1.0;
+            }
+        }
+        let b_nn = vec![f32::INFINITY; k * n];
+        let mut out = vec![0f32; m * n];
+        kernels::matmul_nn(&a, &b_nn, m, k, n, &mut out);
+        assert!(out[n].is_nan(), "0·Inf must reach matmul_nn output");
+
+        let b_nt = vec![f32::INFINITY; n * k];
+        kernels::matmul_nt(&a, &b_nt, m, k, n, &mut out);
+        assert!(out[n].is_nan(), "0·Inf must reach matmul_nt output");
+
+        // tn: zero *column* of A (row of Aᵀ) hits an Inf B.
+        let mut a_tn = vec![1f32; m * k];
+        for i in 0..m {
+            a_tn[i * k + 2] = 0.0;
+        }
+        let b_tn = vec![f32::INFINITY; m * n];
+        let mut out_kn = vec![0f32; k * n];
+        kernels::matmul_tn(&a_tn, &b_tn, m, k, n, &mut out_kn);
+        assert!(out_kn[2 * n].is_nan(), "0·Inf must reach matmul_tn output");
+        // NaN in an input always lands in the affected outputs.
+        let mut a_nan = vec![1f32; m * k];
+        a_nan[0] = f32::NAN;
+        let b_one = vec![1f32; k * n];
+        kernels::matmul_nn(&a_nan, &b_one, m, k, n, &mut out);
+        assert!(out[0].is_nan());
+        assert!(!out[m * n - 1].is_nan());
+    }
+
+    /// All three contraction shapes against the f64 `Mat` reference on
+    /// non-tile-multiple sizes — every edge case of the MR/NR/MC/KC/NC
+    /// blocking (partial panels, single rows/cols, k spanning one panel).
+    #[test]
+    fn blocked_matmuls_match_reference_on_ragged_sizes() {
+        let mut rng = Rng::new(2024);
+        for &m in &[1usize, 3, 7, 17, 33] {
+            for &k in &[1usize, 3, 7, 17, 33] {
+                for &n in &[1usize, 3, 7, 17, 33] {
+                    let a = randn32(m * k, &mut rng);
+                    let am = Mat::from_f32(m, k, &a);
+                    let mut out = vec![0f32; m * n];
+
+                    let b = randn32(n * k, &mut rng);
+                    kernels::matmul_nt(&a, &b, m, k, n, &mut out);
+                    let r = am.matmul_t(&Mat::from_f32(n, k, &b));
+                    for (j, (x, y)) in out.iter().zip(r.data.iter()).enumerate() {
+                        assert!(
+                            (*x as f64 - y).abs() < 1e-4 * (1.0 + y.abs()),
+                            "nt ({m},{k},{n}) elem {j}: {x} vs {y}"
+                        );
+                    }
+
+                    let b = randn32(k * n, &mut rng);
+                    kernels::matmul_nn(&a, &b, m, k, n, &mut out);
+                    let r = am.matmul(&Mat::from_f32(k, n, &b));
+                    for (j, (x, y)) in out.iter().zip(r.data.iter()).enumerate() {
+                        assert!(
+                            (*x as f64 - y).abs() < 1e-4 * (1.0 + y.abs()),
+                            "nn ({m},{k},{n}) elem {j}: {x} vs {y}"
+                        );
+                    }
+
+                    let b = randn32(m * n, &mut rng);
+                    let mut out_kn = vec![0f32; k * n];
+                    kernels::matmul_tn(&a, &b, m, k, n, &mut out_kn);
+                    let r = am.transpose().matmul(&Mat::from_f32(m, n, &b));
+                    for (j, (x, y)) in out_kn.iter().zip(r.data.iter()).enumerate() {
+                        assert!(
+                            (*x as f64 - y).abs() < 1e-4 * (1.0 + y.abs()),
+                            "tn ({m},{k},{n}) elem {j}: {x} vs {y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_blocking_boundaries() {
+        // Sizes straddling the KC/NC/MC block edges, checked against the
+        // retained naive loops (f32 tolerance: summation order differs).
+        let mut rng = Rng::new(77);
+        for &(m, k, n) in &[(65usize, 257usize, 30usize), (130, 300, 513), (5, 512, 17)] {
+            let a = randn32(m * k, &mut rng);
+            let b = randn32(k * n, &mut rng);
+            let mut fast = vec![0f32; m * n];
+            let mut slow = vec![0f32; m * n];
+            kernels::matmul_nn(&a, &b, m, k, n, &mut fast);
+            kernels::naive::matmul_nn(&a, &b, m, k, n, &mut slow);
+            for (j, (x, y)) in fast.iter().zip(&slow).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-3 * (1.0 + y.abs()),
+                    "nn ({m},{k},{n}) elem {j}: {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn row_parallel_matmuls_are_bit_identical_to_serial() {
+        use crate::util::threadpool::ThreadPool;
+        // Big enough to clear the parallel threshold; per-row accumulation
+        // order is row-independent, so equality must be exact.
+        let (m, k, n) = (256usize, 48usize, 192usize);
+        let mut rng = Rng::new(78);
+        let a = randn32(m * k, &mut rng);
+        let b_nt = randn32(n * k, &mut rng);
+        let mut serial = vec![0f32; m * n];
+        let mut par = vec![0f32; m * n];
+        let pool = ThreadPool::new(4);
+        kernels::matmul_nt(&a, &b_nt, m, k, n, &mut serial);
+        kernels::matmul_nt_on(Some(&pool), &a, &b_nt, m, k, n, &mut par);
+        assert_eq!(serial, par, "matmul_nt_on must be bit-identical");
+        // And the serial fallback path (no pool) matches too.
+        kernels::matmul_nt_on(None, &a, &b_nt, m, k, n, &mut par);
+        assert_eq!(serial, par);
+        // A 3-worker pool gives ragged row chunks; still bit-identical.
+        let pool3 = ThreadPool::new(3);
+        kernels::matmul_nt_on(Some(&pool3), &a, &b_nt, m, k, n, &mut par);
+        assert_eq!(serial, par);
     }
 
     #[test]

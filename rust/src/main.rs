@@ -228,6 +228,9 @@ fn dispatch(mut args: Args) -> Result<()> {
                  \x20 fedpara list                        experiments + artifacts\n\
                  \x20 fedpara exp <id>|all [options]      regenerate a table/figure\n\
                  \x20 fedpara run [options]               ad-hoc federated run\n\n\
+                 perf: `cargo run --release --bin bench_report` times the native\n\
+                 kernels / train_epoch / federated round (naive vs blocked GEMM)\n\
+                 and writes BENCH_native.json (see rust/EXPERIMENTS.md).\n\n\
                  common options:\n{}",
                 {
                     let mut a = Args::default();

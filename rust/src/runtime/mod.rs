@@ -75,6 +75,28 @@ pub struct TrainOutput {
     pub mean_loss: f32,
 }
 
+/// Opaque per-caller scratch arena for the runtime hot path. For native
+/// runtimes this wraps [`native::Workspace`] — every buffer the train/eval
+/// loop needs, reused across calls so the steady state allocates nothing.
+/// PJRT runtimes keep their scratch device-side; their workspace is empty.
+///
+/// Not `Clone`: one workspace serves one caller at a time (the coordinator
+/// pools them, one per in-flight client job).
+pub struct Workspace {
+    native: Option<native::Workspace>,
+}
+
+impl Workspace {
+    /// Attach a pool for row-blocked intra-op parallelism on large forward
+    /// GEMMs. Only safe when the caller does not itself run as a job on
+    /// that pool (see `ThreadPool::run_borrowed`). No-op for PJRT.
+    pub fn set_pool(&mut self, pool: Option<Arc<crate::util::threadpool::ThreadPool>>) {
+        if let Some(ws) = &mut self.native {
+            ws.set_pool(pool);
+        }
+    }
+}
+
 /// Output of one eval call.
 #[derive(Clone, Copy, Debug)]
 pub struct EvalOutput {
@@ -128,6 +150,26 @@ fn literal_scalar(v: f32) -> Result<xla::Literal> {
 }
 
 impl ModelRuntime {
+    /// A scratch arena sized for this runtime — see [`Workspace`].
+    pub fn workspace(&self) -> Workspace {
+        match &self.exec {
+            Exec::Native(exec) => Workspace { native: Some(exec.workspace()) },
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => Workspace { native: None },
+        }
+    }
+
+    /// Approximate FLOPs of one `train_epoch` call (benches report
+    /// GFLOP/s from this). `None` for PJRT artifacts — XLA's fusion makes
+    /// a layer-list estimate meaningless there.
+    pub fn train_flops_estimate(&self) -> Option<f64> {
+        match &self.exec {
+            Exec::Native(exec) => Some(exec.train_epoch_flops(self.meta.train)),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => None,
+        }
+    }
+
     /// Run one local epoch. `correction`/`anchor` default to zeros and `mu`
     /// to 0 (plain FedAvg SGD); see python/compile/train.py for the
     /// optimizer mapping.
@@ -141,6 +183,29 @@ impl ModelRuntime {
         anchor: Option<&[f32]>,
         mu: f32,
     ) -> Result<TrainOutput> {
+        let mut ws = self.workspace();
+        let mut p = params.to_vec();
+        let mean_loss = self.train_epoch_ws(&mut ws, &mut p, x, y, lr, correction, anchor, mu)?;
+        Ok(TrainOutput { params: p, mean_loss })
+    }
+
+    /// [`train_epoch`] updating `params` **in place** with all scratch
+    /// drawn from `ws` — the round loop's allocation-free form. Returns
+    /// the mean batch loss. Bit-identical to [`train_epoch`].
+    ///
+    /// [`train_epoch`]: ModelRuntime::train_epoch
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_epoch_ws(
+        &self,
+        ws: &mut Workspace,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        correction: Option<&[f32]>,
+        anchor: Option<&[f32]>,
+        mu: f32,
+    ) -> Result<f32> {
         let p = self.meta.param_count;
         if params.len() != p {
             return Err(anyhow!("params len {} != {p}", params.len()));
@@ -162,9 +227,8 @@ impl ModelRuntime {
         }
         match &self.exec {
             Exec::Native(exec) => {
-                let (new_params, mean_loss) =
-                    exec.train_epoch(self.meta.train, params, x, y, lr, corr, anch, mu);
-                Ok(TrainOutput { params: new_params, mean_loss })
+                let nws = ws.native.get_or_insert_with(|| exec.workspace());
+                Ok(exec.train_epoch_ws(nws, self.meta.train, params, x, y, lr, corr, anch, mu))
             }
             #[cfg(feature = "pjrt")]
             Exec::Pjrt(exec) => {
@@ -185,8 +249,11 @@ impl ModelRuntime {
                     return Err(anyhow!("train artifact returned {} outputs, want 2", parts.len()));
                 }
                 let new_params = parts[0].to_vec::<f32>()?;
-                let mean_loss = parts[1].to_vec::<f32>()?[0];
-                Ok(TrainOutput { params: new_params, mean_loss })
+                if new_params.len() != p {
+                    return Err(anyhow!("train artifact returned {} params, want {p}", new_params.len()));
+                }
+                params.copy_from_slice(&new_params);
+                Ok(parts[1].to_vec::<f32>()?[0])
             }
         }
     }
@@ -202,6 +269,24 @@ impl ModelRuntime {
     /// the test-set size is not a multiple of the eval call size.
     pub fn eval_call_partial(
         &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        valid: usize,
+    ) -> Result<EvalOutput> {
+        let mut ws = self.workspace();
+        self.eval_call_partial_ws(&mut ws, params, x, y, valid)
+    }
+
+    /// [`eval_call_partial`] with caller-owned scratch: the native backend
+    /// composes weights into `ws` and reuses its activation buffers, so a
+    /// dataset-sized eval loop (`coordinator::eval_on`) allocates once,
+    /// not once per chunk.
+    ///
+    /// [`eval_call_partial`]: ModelRuntime::eval_call_partial
+    pub fn eval_call_partial_ws(
+        &self,
+        ws: &mut Workspace,
         params: &[f32],
         x: &[f32],
         y: &[f32],
@@ -229,7 +314,8 @@ impl ModelRuntime {
         let denominator = valid as f64 * per_sample;
         match &self.exec {
             Exec::Native(exec) => {
-                let (correct, loss_sum) = exec.eval(e, params, x, y, valid);
+                let nws = ws.native.get_or_insert_with(|| exec.workspace());
+                let (correct, loss_sum) = exec.eval_ws(nws, e, params, x, y, valid);
                 Ok(EvalOutput { correct, loss_sum, denominator })
             }
             #[cfg(feature = "pjrt")]
@@ -482,6 +568,44 @@ mod tests {
         let ev = rt.eval_call(&out.params, &ex, &ey).unwrap();
         assert_eq!(ev.denominator, ne as f64);
         assert!(ev.loss_sum.is_finite());
+    }
+
+    #[test]
+    fn workspace_paths_match_allocating_paths() {
+        // The in-place/zero-alloc entry points must be bit-identical to
+        // the allocating wrappers, including across workspace reuse.
+        let engine = Engine::native();
+        let rt = engine.load("native_cnn10_fedpara").unwrap();
+        let mut rng = crate::util::rng::Rng::new(11);
+        let params = rt.meta.layout.init_params(&mut rng);
+        let t = rt.meta.train;
+        let n = t.samples_per_call();
+        let x: Vec<f32> = (0..n * t.feature_dim).map(|_| rng.gaussian() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.below(10) as f32).collect();
+        let out = rt.train_epoch(&params, &x, &y, 0.05, None, None, 0.0).unwrap();
+
+        let mut ws = rt.workspace();
+        let mut p1 = params.clone();
+        let l1 = rt.train_epoch_ws(&mut ws, &mut p1, &x, &y, 0.05, None, None, 0.0).unwrap();
+        assert_eq!(out.params, p1);
+        assert_eq!(out.mean_loss.to_bits(), l1.to_bits());
+        // Reuse the (now dirty) workspace: still identical.
+        let mut p2 = params.clone();
+        let l2 = rt.train_epoch_ws(&mut ws, &mut p2, &x, &y, 0.05, None, None, 0.0).unwrap();
+        assert_eq!(out.params, p2);
+        assert_eq!(out.mean_loss.to_bits(), l2.to_bits());
+
+        let e = rt.meta.eval;
+        let ne = e.samples_per_call();
+        let ex: Vec<f32> = (0..ne * e.feature_dim).map(|_| rng.gaussian() as f32).collect();
+        let ey: Vec<f32> = (0..ne).map(|_| rng.below(10) as f32).collect();
+        for valid in [1usize, ne / 2, ne] {
+            let a = rt.eval_call_partial(&p1, &ex, &ey, valid).unwrap();
+            let b = rt.eval_call_partial_ws(&mut ws, &p1, &ex, &ey, valid).unwrap();
+            assert_eq!(a.correct, b.correct, "valid={valid}");
+            assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits(), "valid={valid}");
+            assert_eq!(a.denominator, b.denominator);
+        }
     }
 
     #[test]

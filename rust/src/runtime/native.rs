@@ -38,11 +38,13 @@
 use std::collections::BTreeMap;
 use std::ops::Range;
 use std::path::PathBuf;
+use std::sync::Arc;
 
-use crate::linalg::kernels::{col2im, im2col, matmul_nn, matmul_nt, matmul_tn};
+use crate::linalg::kernels::{col2im, im2col, matmul_nn, matmul_nt, matmul_nt_on, matmul_tn};
 use crate::parameterization::{gamma_rank, Layout, LayerShape, Segment, SegmentKind};
 use crate::runtime::manifest::Backend;
 use crate::runtime::{ArtifactMeta, BatchShape, Manifest};
+use crate::util::threadpool::ThreadPool;
 
 /// Parameterization of the native model's weights.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -501,119 +503,255 @@ pub fn manifest(artifacts: Vec<ArtifactMeta>) -> Manifest {
 }
 
 // ---------------------------------------------------------------------------
+// Workspace: the zero-allocation train/eval arena
+// ---------------------------------------------------------------------------
+
+/// Resize `v` to exactly `n` elements. A steady-state no-op (same model,
+/// same batch size ⇒ same sizes); contents are unspecified afterwards —
+/// every consumer fully overwrites its buffer before reading it.
+fn ensure<T: Copy + Default>(v: &mut Vec<T>, n: usize) {
+    v.resize(n, T::default());
+}
+
+/// Per-layer scratch: the composed weight (plus the Hadamard halves and
+/// Tucker caches backward needs) and the forward tape (conv im2col matrix,
+/// pool argmax indices).
+#[derive(Clone, Default)]
+struct LayerBufs {
+    /// Composed weight (`[m,n]` FC / `[O, I·K²]` conv) for factored
+    /// layers. Dense layers alias the parameter vector via `dense`.
+    w: Vec<f32>,
+    dense: Option<Range<usize>>,
+    /// Hadamard halves `W1`/`W2` (factored layers only).
+    w1: Vec<f32>,
+    w2: Vec<f32>,
+    /// Tucker caches `U_j = 𝒯_j ×₂ Y_j` in `[R, I·K²]` layout.
+    u1: Vec<f32>,
+    u2: Vec<f32>,
+    /// Conv tape: im2col matrix of the layer input.
+    cols: Vec<f32>,
+    /// Pool tape: flat input index of each output element's argmax.
+    idx: Vec<u32>,
+}
+
+impl LayerBufs {
+    /// The composed weight: the arena buffer, or the parameter slice
+    /// itself for dense layers (no copy).
+    fn weight<'a>(&'a self, params: &'a [f32]) -> &'a [f32] {
+        match &self.dense {
+            Some(r) => &params[r.clone()],
+            None => &self.w,
+        }
+    }
+}
+
+/// Reusable scratch arena for the native hot path. One `Workspace` holds
+/// every buffer `train_epoch_ws`/`eval_ws` touch — the activation chain,
+/// backward deltas, composed weights (with their Hadamard halves and
+/// Tucker caches), weight/factor gradient temporaries and the flat
+/// gradient — so the steady-state training loop performs **zero heap
+/// allocations**: buffers are sized on first use and reused across
+/// batches, epochs and (via the coordinator's per-job workspace pool)
+/// federated rounds.
+pub struct Workspace {
+    /// `acts[0]` = batch input copy; `acts[l+1]` = layer `l` output.
+    acts: Vec<Vec<f32>>,
+    layer: Vec<LayerBufs>,
+    /// Ping-pong backward deltas (`d_a` = current layer's output delta).
+    d_a: Vec<f32>,
+    d_b: Vec<f32>,
+    /// Composed-weight gradient `dW` and its Hadamard-split halves.
+    dw: Vec<f32>,
+    dw1: Vec<f32>,
+    dw2: Vec<f32>,
+    /// Conv input-gradient staging (`dcols` before the col2im scatter).
+    dcols: Vec<f32>,
+    /// Tucker factor-gradient temporaries.
+    v: Vec<f32>,
+    gx: Vec<f32>,
+    gy: Vec<f32>,
+    gt: Vec<f32>,
+    tmp: Vec<f32>,
+    /// Flat parameter gradient of the last backward pass.
+    grad: Vec<f32>,
+    /// Optional intra-op pool for row-blocked forward GEMMs on large
+    /// batches (eval / bench paths).
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl Workspace {
+    /// Attach (or detach) a pool for row-blocked intra-op parallelism on
+    /// the large forward GEMMs. Only safe when the caller does not itself
+    /// run as a job on that pool — see [`ThreadPool::run_borrowed`]; the
+    /// coordinator attaches its pool for global/personalized evaluation
+    /// (which runs on the coordinator thread while the pool is idle) and
+    /// never for client training jobs (which run *on* the pool).
+    pub fn set_pool(&mut self, pool: Option<Arc<ThreadPool>>) {
+        self.pool = pool;
+    }
+}
+
+/// Backward-pass temporaries split out of the workspace so the layer
+/// helpers can borrow them alongside `grad`, the activations and the tape.
+struct GradScratch<'a> {
+    dw: &'a mut Vec<f32>,
+    dw1: &'a mut Vec<f32>,
+    dw2: &'a mut Vec<f32>,
+    dcols: &'a mut Vec<f32>,
+    v: &'a mut Vec<f32>,
+    gx: &'a mut Vec<f32>,
+    gy: &'a mut Vec<f32>,
+    gt: &'a mut Vec<f32>,
+    tmp: &'a mut Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
 // Composition + factor gradients
 // ---------------------------------------------------------------------------
 
-/// A composed FC weight plus the inner products needed for backward.
-struct ComposedFc {
-    /// `W ∈ R^{m×n}` (row-major).
-    w: Vec<f32>,
-    /// `(W1 = X1·Y1ᵀ, W2 = X2·Y2ᵀ)` for factored layers.
-    parts: Option<(Vec<f32>, Vec<f32>)>,
+/// Fused Hadamard composition `w = w1 ⊙ w2` (`w1 ⊙ (w2 + 1)` for
+/// pFedPara), written straight into the arena buffer.
+fn hadamard_into(w1: &[f32], w2: &[f32], personalized: bool, w: &mut [f32]) {
+    if personalized {
+        for ((wv, &a), &b) in w.iter_mut().zip(w1).zip(w2) {
+            *wv = a * (b + 1.0);
+        }
+    } else {
+        for ((wv, &a), &b) in w.iter_mut().zip(w1).zip(w2) {
+            *wv = a * b;
+        }
+    }
 }
 
-/// A composed conv kernel (flattened `[O, I·K²]`) plus backward caches.
-struct ConvParts {
-    w1: Vec<f32>,
-    w2: Vec<f32>,
-    /// `U_j = 𝒯_j ×₂ Y_j` in `[R, I·K²]` layout (reused for dX_j).
-    u1: Vec<f32>,
-    u2: Vec<f32>,
-}
-
-struct ComposedConv {
-    w: Vec<f32>,
-    parts: Option<ConvParts>,
-}
-
-enum Composed {
-    Fc(ComposedFc),
-    Conv(ComposedConv),
-    Pool,
-}
-
-fn compose_fc(desc: &FcDesc, params: &[f32]) -> ComposedFc {
+fn compose_fc_ws(desc: &FcDesc, params: &[f32], lb: &mut LayerBufs) {
     let (m, n) = (desc.m, desc.n);
     match &desc.param {
-        FcParam::Dense { w } => ComposedFc { w: params[w.clone()].to_vec(), parts: None },
+        FcParam::Dense { w } => lb.dense = Some(w.clone()),
         FcParam::Factored { x1, y1, x2, y2, r, personalized } => {
-            let mut w1 = vec![0f32; m * n];
-            let mut w2 = vec![0f32; m * n];
-            matmul_nt(&params[x1.clone()], &params[y1.clone()], m, *r, n, &mut w1);
-            matmul_nt(&params[x2.clone()], &params[y2.clone()], m, *r, n, &mut w2);
-            let w = if *personalized {
-                // W = W1 ⊙ (W2 + 1)
-                w1.iter().zip(&w2).map(|(&a, &b)| a * (b + 1.0)).collect()
-            } else {
-                w1.iter().zip(&w2).map(|(&a, &b)| a * b).collect()
-            };
-            ComposedFc { w, parts: Some((w1, w2)) }
+            lb.dense = None;
+            ensure(&mut lb.w1, m * n);
+            ensure(&mut lb.w2, m * n);
+            ensure(&mut lb.w, m * n);
+            matmul_nt(&params[x1.clone()], &params[y1.clone()], m, *r, n, &mut lb.w1);
+            matmul_nt(&params[x2.clone()], &params[y2.clone()], m, *r, n, &mut lb.w2);
+            hadamard_into(&lb.w1, &lb.w2, *personalized, &mut lb.w);
         }
     }
 }
 
 /// One Tucker-2 half of the Prop-3 composition: `W = 𝒯 ×₁ X ×₂ Y`
 /// flattened to `[O, I·K²]`, computed as `U[a,(i,κ)] = Σ_b Y[i,b]·𝒯[a,b,κ]`
-/// then `W[o,(i,κ)] = Σ_a X[o,a]·U[a,(i,κ)]`. Returns `(W, U)`.
-fn tucker2(x: &[f32], y: &[f32], t: &[f32], o: usize, i: usize, r: usize, kk: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut u = vec![0f32; r * i * kk];
+/// then `W[o,(i,κ)] = Σ_a X[o,a]·U[a,(i,κ)]`, written into `w` and `u`.
+#[allow(clippy::too_many_arguments)]
+fn tucker2_into(
+    x: &[f32],
+    y: &[f32],
+    t: &[f32],
+    o: usize,
+    i: usize,
+    r: usize,
+    kk: usize,
+    w: &mut [f32],
+    u: &mut [f32],
+) {
     for a in 0..r {
         matmul_nn(y, &t[a * r * kk..(a + 1) * r * kk], i, r, kk, &mut u[a * i * kk..(a + 1) * i * kk]);
     }
-    let mut w = vec![0f32; o * i * kk];
-    matmul_nn(x, &u, o, r, i * kk, &mut w);
-    (w, u)
+    matmul_nn(x, u, o, r, i * kk, w);
 }
 
-fn compose_conv(desc: &ConvDesc, params: &[f32]) -> ComposedConv {
+fn compose_conv_ws(desc: &ConvDesc, params: &[f32], lb: &mut LayerBufs) {
     let (o, i, kk) = (desc.o, desc.i, desc.k * desc.k);
     match &desc.param {
-        ConvParam::Dense { w } => ComposedConv { w: params[w.clone()].to_vec(), parts: None },
+        ConvParam::Dense { w } => lb.dense = Some(w.clone()),
         ConvParam::Factored { x1, y1, t1, x2, y2, t2, r, personalized } => {
-            let (w1, u1) =
-                tucker2(&params[x1.clone()], &params[y1.clone()], &params[t1.clone()], o, i, *r, kk);
-            let (w2, u2) =
-                tucker2(&params[x2.clone()], &params[y2.clone()], &params[t2.clone()], o, i, *r, kk);
-            let w = if *personalized {
-                // W = W1 ⊙ (W2 + 1)
-                w1.iter().zip(&w2).map(|(&a, &b)| a * (b + 1.0)).collect()
-            } else {
-                w1.iter().zip(&w2).map(|(&a, &b)| a * b).collect()
-            };
-            ComposedConv { w, parts: Some(ConvParts { w1, w2, u1, u2 }) }
+            lb.dense = None;
+            ensure(&mut lb.w1, o * i * kk);
+            ensure(&mut lb.w2, o * i * kk);
+            ensure(&mut lb.w, o * i * kk);
+            ensure(&mut lb.u1, r * i * kk);
+            ensure(&mut lb.u2, r * i * kk);
+            tucker2_into(
+                &params[x1.clone()],
+                &params[y1.clone()],
+                &params[t1.clone()],
+                o,
+                i,
+                *r,
+                kk,
+                &mut lb.w1,
+                &mut lb.u1,
+            );
+            tucker2_into(
+                &params[x2.clone()],
+                &params[y2.clone()],
+                &params[t2.clone()],
+                o,
+                i,
+                *r,
+                kk,
+                &mut lb.w2,
+                &mut lb.u2,
+            );
+            hadamard_into(&lb.w1, &lb.w2, *personalized, &mut lb.w);
         }
     }
 }
 
-/// Scatter `dW` into the flat gradient, applying the chain rule through the
-/// Hadamard factorization when the layer is factored (paper Eq. 6).
-fn scatter_fc_grad(desc: &FcDesc, composed: &ComposedFc, dw: &[f32], params: &[f32], grad: &mut [f32]) {
+/// Split the composed-weight gradient through the Hadamard product:
+/// `dW1 = dW ⊙ (W2 [+ 1])`, `dW2 = dW ⊙ W1` (paper Eq. 6), into scratch.
+fn hadamard_grad_split(
+    dw: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    personalized: bool,
+    dw1: &mut Vec<f32>,
+    dw2: &mut Vec<f32>,
+) {
+    ensure(dw1, dw.len());
+    ensure(dw2, dw.len());
+    if personalized {
+        for ((d, &g), &b) in dw1.iter_mut().zip(dw).zip(w2) {
+            *d = g * (b + 1.0);
+        }
+    } else {
+        for ((d, &g), &b) in dw1.iter_mut().zip(dw).zip(w2) {
+            *d = g * b;
+        }
+    }
+    for ((d, &g), &a) in dw2.iter_mut().zip(dw).zip(w1) {
+        *d = g * a;
+    }
+}
+
+/// Scatter `s.dw` into the flat gradient, applying the chain rule through
+/// the Hadamard factorization when the layer is factored (paper Eq. 6).
+fn scatter_fc_grad_ws(
+    desc: &FcDesc,
+    lb: &LayerBufs,
+    params: &[f32],
+    grad: &mut [f32],
+    s: &mut GradScratch,
+) {
     let (m, n) = (desc.m, desc.n);
     match &desc.param {
-        FcParam::Dense { w } => grad[w.clone()].copy_from_slice(dw),
+        FcParam::Dense { w } => grad[w.clone()].copy_from_slice(s.dw),
         FcParam::Factored { x1, y1, x2, y2, r, personalized } => {
-            let (w1, w2) = composed.parts.as_ref().expect("factored layer has parts");
-            // dW1 = dW ⊙ (W2 [+ 1]); dW2 = dW ⊙ W1.
-            let dw1: Vec<f32> = if *personalized {
-                dw.iter().zip(w2).map(|(&g, &b)| g * (b + 1.0)).collect()
-            } else {
-                dw.iter().zip(w2).map(|(&g, &b)| g * b).collect()
-            };
-            let dw2: Vec<f32> = dw.iter().zip(w1).map(|(&g, &a)| g * a).collect();
+            hadamard_grad_split(s.dw, &lb.w1, &lb.w2, *personalized, s.dw1, s.dw2);
             // dX1 = dW1·Y1, dY1 = dW1ᵀ·X1 (and likewise for the 2nd factor).
-            matmul_nn(&dw1, &params[y1.clone()], m, n, *r, &mut grad[x1.clone()]);
-            matmul_tn(&dw1, &params[x1.clone()], m, n, *r, &mut grad[y1.clone()]);
-            matmul_nn(&dw2, &params[y2.clone()], m, n, *r, &mut grad[x2.clone()]);
-            matmul_tn(&dw2, &params[x2.clone()], m, n, *r, &mut grad[y2.clone()]);
+            matmul_nn(s.dw1, &params[y1.clone()], m, n, *r, &mut grad[x1.clone()]);
+            matmul_tn(s.dw1, &params[x1.clone()], m, n, *r, &mut grad[y1.clone()]);
+            matmul_nn(s.dw2, &params[y2.clone()], m, n, *r, &mut grad[x2.clone()]);
+            matmul_tn(s.dw2, &params[x2.clone()], m, n, *r, &mut grad[y2.clone()]);
         }
     }
 }
 
-/// Factor gradients of one Tucker-2 half. Given `dW ∈ [O, I·K²]`:
-/// `dX = dW·Uᵀ`; with `V[a,(i,κ)] = Σ_o X[o,a]·dW[o,(i,κ)]`,
+/// Factor gradients of one Tucker-2 half into `gx`/`gy`/`gt`. Given
+/// `dW ∈ [O, I·K²]`: `dX = dW·Uᵀ`; with `V[a,(i,κ)] = Σ_o X[o,a]·dW[o,(i,κ)]`,
 /// `d𝒯[a,b,κ] = Σ_i Y[i,b]·V[a,i,κ]` and `dY[i,b] = Σ_{a,κ} V[a,i,κ]·𝒯[a,b,κ]`.
 #[allow(clippy::too_many_arguments)]
-fn tucker2_grad(
+fn tucker2_grad_ws(
     x: &[f32],
     y: &[f32],
     t: &[f32],
@@ -623,77 +761,85 @@ fn tucker2_grad(
     i: usize,
     r: usize,
     kk: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    gx: &mut Vec<f32>,
+    gy: &mut Vec<f32>,
+    gt: &mut Vec<f32>,
+    v: &mut Vec<f32>,
+    tmp: &mut Vec<f32>,
+) {
     let ikk = i * kk;
-    let mut gx = vec![0f32; o * r];
-    matmul_nt(dwh, u, o, ikk, r, &mut gx);
-    let mut v = vec![0f32; r * ikk];
-    matmul_tn(x, dwh, o, r, ikk, &mut v);
-    let mut gt = vec![0f32; r * r * kk];
+    ensure(gx, o * r);
+    matmul_nt(dwh, u, o, ikk, r, gx);
+    ensure(v, r * ikk);
+    matmul_tn(x, dwh, o, r, ikk, v);
+    ensure(gt, r * r * kk);
     for a in 0..r {
         matmul_tn(y, &v[a * ikk..(a + 1) * ikk], i, r, kk, &mut gt[a * r * kk..(a + 1) * r * kk]);
     }
-    let mut gy = vec![0f32; i * r];
-    let mut tmp = vec![0f32; i * r];
+    ensure(gy, i * r);
+    gy.fill(0.0);
+    ensure(tmp, i * r);
     for a in 0..r {
-        matmul_nt(&v[a * ikk..(a + 1) * ikk], &t[a * r * kk..(a + 1) * r * kk], i, kk, r, &mut tmp);
-        for (g, &tv) in gy.iter_mut().zip(&tmp) {
+        matmul_nt(&v[a * ikk..(a + 1) * ikk], &t[a * r * kk..(a + 1) * r * kk], i, kk, r, tmp);
+        for (g, &tv) in gy.iter_mut().zip(tmp.iter()) {
             *g += tv;
         }
     }
-    (gx, gy, gt)
 }
 
-/// Scatter a conv kernel gradient `dW ∈ [O, I·K²]` into the flat gradient,
-/// backpropagating through the Prop-3 Tucker-Hadamard composition when the
-/// kernel is factored.
-fn scatter_conv_grad(
+/// Scatter the conv kernel gradient `s.dw ∈ [O, I·K²]` into the flat
+/// gradient, backpropagating through the Prop-3 Tucker-Hadamard
+/// composition when the kernel is factored.
+fn scatter_conv_grad_ws(
     desc: &ConvDesc,
-    composed: &ComposedConv,
-    dw: &[f32],
+    lb: &LayerBufs,
     params: &[f32],
     grad: &mut [f32],
+    s: &mut GradScratch,
 ) {
     let (o, i, kk) = (desc.o, desc.i, desc.k * desc.k);
     match &desc.param {
-        ConvParam::Dense { w } => grad[w.clone()].copy_from_slice(dw),
+        ConvParam::Dense { w } => grad[w.clone()].copy_from_slice(s.dw),
         ConvParam::Factored { x1, y1, t1, x2, y2, t2, r, personalized } => {
-            let p = composed.parts.as_ref().expect("factored conv has parts");
-            // dW1 = dW ⊙ (W2 [+ 1]); dW2 = dW ⊙ W1.
-            let dw1: Vec<f32> = if *personalized {
-                dw.iter().zip(&p.w2).map(|(&g, &b)| g * (b + 1.0)).collect()
-            } else {
-                dw.iter().zip(&p.w2).map(|(&g, &b)| g * b).collect()
-            };
-            let dw2: Vec<f32> = dw.iter().zip(&p.w1).map(|(&g, &a)| g * a).collect();
-            let (gx, gy, gt) = tucker2_grad(
+            hadamard_grad_split(s.dw, &lb.w1, &lb.w2, *personalized, s.dw1, s.dw2);
+            tucker2_grad_ws(
                 &params[x1.clone()],
                 &params[y1.clone()],
                 &params[t1.clone()],
-                &p.u1,
-                &dw1,
+                &lb.u1,
+                s.dw1,
                 o,
                 i,
                 *r,
                 kk,
+                s.gx,
+                s.gy,
+                s.gt,
+                s.v,
+                s.tmp,
             );
-            grad[x1.clone()].copy_from_slice(&gx);
-            grad[y1.clone()].copy_from_slice(&gy);
-            grad[t1.clone()].copy_from_slice(&gt);
-            let (gx, gy, gt) = tucker2_grad(
+            grad[x1.clone()].copy_from_slice(s.gx);
+            grad[y1.clone()].copy_from_slice(s.gy);
+            grad[t1.clone()].copy_from_slice(s.gt);
+            tucker2_grad_ws(
                 &params[x2.clone()],
                 &params[y2.clone()],
                 &params[t2.clone()],
-                &p.u2,
-                &dw2,
+                &lb.u2,
+                s.dw2,
                 o,
                 i,
                 *r,
                 kk,
+                s.gx,
+                s.gy,
+                s.gt,
+                s.v,
+                s.tmp,
             );
-            grad[x2.clone()].copy_from_slice(&gx);
-            grad[y2.clone()].copy_from_slice(&gy);
-            grad[t2.clone()].copy_from_slice(&gt);
+            grad[x2.clone()].copy_from_slice(s.gx);
+            grad[y2.clone()].copy_from_slice(s.gy);
+            grad[t2.clone()].copy_from_slice(s.gt);
         }
     }
 }
@@ -702,19 +848,19 @@ fn scatter_conv_grad(
 // Forward / backward / entry points
 // ---------------------------------------------------------------------------
 
-/// Per-layer backward-pass cache.
-enum Aux {
-    None,
-    /// Conv: the im2col matrix of the layer input.
-    Cols(Vec<f32>),
-    /// Pool: flat input index of each output element's argmax.
-    Pool(Vec<u32>),
-}
-
-fn forward_fc(desc: &FcDesc, cf: &ComposedFc, params: &[f32], input: &[f32], bsz: usize) -> Vec<f32> {
+#[allow(clippy::too_many_arguments)]
+fn forward_fc_ws(
+    desc: &FcDesc,
+    lb: &LayerBufs,
+    params: &[f32],
+    input: &[f32],
+    out: &mut Vec<f32>,
+    bsz: usize,
+    pool: Option<&ThreadPool>,
+) {
     let (m, n) = (desc.m, desc.n);
-    let mut out = vec![0f32; bsz * m];
-    matmul_nt(input, &cf.w, bsz, n, m, &mut out);
+    ensure(out, bsz * m);
+    matmul_nt_on(pool, input, lb.weight(params), bsz, n, m, out);
     let bias = &params[desc.bias.clone()];
     for b in 0..bsz {
         let or = &mut out[b * m..(b + 1) * m];
@@ -729,24 +875,25 @@ fn forward_fc(desc: &FcDesc, cf: &ComposedFc, params: &[f32], input: &[f32], bsz
             }
         }
     }
-    out
 }
 
-fn forward_conv(
+#[allow(clippy::too_many_arguments)]
+fn forward_conv_ws(
     desc: &ConvDesc,
-    cc: &ComposedConv,
+    lb: &mut LayerBufs,
     params: &[f32],
     input: &[f32],
+    out: &mut Vec<f32>,
     bsz: usize,
-    keep_cols: bool,
-) -> (Vec<f32>, Option<Vec<f32>>) {
+    pool: Option<&ThreadPool>,
+) {
     let (o, i, k, h, w) = (desc.o, desc.i, desc.k, desc.h, desc.w);
     let ikk = i * k * k;
     let rows = bsz * h * w;
-    let mut cols = vec![0f32; rows * ikk];
-    im2col(input, bsz, h, w, i, k, &mut cols);
-    let mut out = vec![0f32; rows * o];
-    matmul_nt(&cols, &cc.w, rows, ikk, o, &mut out);
+    ensure(&mut lb.cols, rows * ikk);
+    im2col(input, bsz, h, w, i, k, &mut lb.cols);
+    ensure(out, rows * o);
+    matmul_nt_on(pool, &lb.cols, lb.weight(params), rows, ikk, o, out);
     let bias = &params[desc.bias.clone()];
     for row in 0..rows {
         let or = &mut out[row * o..(row + 1) * o];
@@ -757,14 +904,19 @@ fn forward_conv(
             }
         }
     }
-    (out, keep_cols.then_some(cols))
 }
 
-fn forward_pool(desc: &PoolDesc, input: &[f32], bsz: usize, keep_idx: bool) -> (Vec<f32>, Option<Vec<u32>>) {
+fn forward_pool_ws(
+    desc: &PoolDesc,
+    input: &[f32],
+    out: &mut Vec<f32>,
+    idx: &mut Vec<u32>,
+    bsz: usize,
+) {
     let (c, h, w) = (desc.c, desc.h, desc.w);
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = vec![0f32; bsz * oh * ow * c];
-    let mut idx = if keep_idx { Some(vec![0u32; out.len()]) } else { None };
+    ensure(out, bsz * oh * ow * c);
+    ensure(idx, bsz * oh * ow * c);
     for b in 0..bsz {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -790,28 +942,27 @@ fn forward_pool(desc: &PoolDesc, input: &[f32], bsz: usize, keep_idx: bool) -> (
                         }
                     }
                     out[dst_base + ci] = best_v;
-                    if let Some(ix) = idx.as_mut() {
-                        ix[dst_base + ci] = best_i as u32;
-                    }
+                    idx[dst_base + ci] = best_i as u32;
                 }
             }
         }
     }
-    (out, idx)
 }
 
 #[allow(clippy::too_many_arguments)]
-fn backward_fc(
+fn backward_fc_ws(
     desc: &FcDesc,
-    cf: &ComposedFc,
+    lb: &LayerBufs,
     params: &[f32],
     input: &[f32],
     output: &[f32],
-    mut d: Vec<f32>,
+    d: &mut [f32],
+    d_next: &mut Vec<f32>,
     bsz: usize,
     grad: &mut [f32],
+    s: &mut GradScratch,
     need_dx: bool,
-) -> Vec<f32> {
+) {
     let (m, n) = (desc.m, desc.n);
     if desc.relu {
         // Relu mask from the stored output: out > 0 ⟺ pre > 0.
@@ -828,30 +979,29 @@ fn backward_fc(
         }
         grad[desc.bias.start + j] = acc;
     }
-    let mut dw = vec![0f32; m * n];
-    matmul_tn(&d, input, bsz, m, n, &mut dw);
-    scatter_fc_grad(desc, cf, &dw, params, grad);
-    if !need_dx {
-        // First layer: nothing upstream consumes the input gradient.
-        return Vec::new();
+    ensure(s.dw, m * n);
+    matmul_tn(d, input, bsz, m, n, s.dw);
+    scatter_fc_grad_ws(desc, lb, params, grad, s);
+    if need_dx {
+        ensure(d_next, bsz * n);
+        matmul_nn(d, lb.weight(params), bsz, m, n, d_next);
     }
-    let mut dx = vec![0f32; bsz * n];
-    matmul_nn(&d, &cf.w, bsz, m, n, &mut dx);
-    dx
+    // Else: first layer — nothing upstream consumes the input gradient.
 }
 
 #[allow(clippy::too_many_arguments)]
-fn backward_conv(
+fn backward_conv_ws(
     desc: &ConvDesc,
-    cc: &ComposedConv,
+    lb: &LayerBufs,
     params: &[f32],
-    cols: &[f32],
     output: &[f32],
-    mut d: Vec<f32>,
+    d: &mut [f32],
+    d_next: &mut Vec<f32>,
     bsz: usize,
     grad: &mut [f32],
+    s: &mut GradScratch,
     need_dx: bool,
-) -> Vec<f32> {
+) {
     let (o, i, k, h, w) = (desc.o, desc.i, desc.k, desc.h, desc.w);
     let ikk = i * k * k;
     let rows = bsz * h * w;
@@ -867,88 +1017,111 @@ fn backward_conv(
         }
         grad[desc.bias.start + oc] = acc;
     }
-    let mut dw = vec![0f32; o * ikk];
-    matmul_tn(&d, cols, rows, o, ikk, &mut dw);
-    scatter_conv_grad(desc, cc, &dw, params, grad);
-    if !need_dx {
-        // First layer: skip the dcols matmul + col2im scatter (the most
-        // expensive part of the largest spatial layer's backward).
-        return Vec::new();
+    ensure(s.dw, o * ikk);
+    matmul_tn(d, &lb.cols, rows, o, ikk, s.dw);
+    scatter_conv_grad_ws(desc, lb, params, grad, s);
+    if need_dx {
+        ensure(s.dcols, rows * ikk);
+        matmul_nn(d, lb.weight(params), rows, o, ikk, s.dcols);
+        ensure(d_next, bsz * h * w * i);
+        col2im(s.dcols, bsz, h, w, i, k, d_next);
     }
-    let mut dcols = vec![0f32; rows * ikk];
-    matmul_nn(&d, &cc.w, rows, o, ikk, &mut dcols);
-    let mut dx = vec![0f32; bsz * h * w * i];
-    col2im(&dcols, bsz, h, w, i, k, &mut dx);
-    dx
+    // Else: first layer — skip the dcols matmul + col2im scatter (the
+    // most expensive part of the largest spatial layer's backward).
 }
 
-fn backward_pool(desc: &PoolDesc, idx: &[u32], d: &[f32], bsz: usize) -> Vec<f32> {
-    let mut dx = vec![0f32; bsz * desc.h * desc.w * desc.c];
+fn backward_pool_ws(desc: &PoolDesc, idx: &[u32], d: &[f32], bsz: usize, d_next: &mut Vec<f32>) {
+    ensure(d_next, bsz * desc.h * desc.w * desc.c);
+    d_next.fill(0.0);
     for (j, &src) in idx.iter().enumerate() {
-        dx[src as usize] += d[j];
+        d_next[src as usize] += d[j];
     }
-    dx
 }
 
 impl NativeExec {
-    fn compose_all(&self, params: &[f32]) -> Vec<Composed> {
-        self.layers
-            .iter()
-            .map(|l| match l {
-                LayerDesc::Fc(d) => Composed::Fc(compose_fc(d, params)),
-                LayerDesc::Conv(d) => Composed::Conv(compose_conv(d, params)),
-                LayerDesc::Pool2(_) => Composed::Pool,
-            })
-            .collect()
+    /// Allocate an (empty) scratch arena for this executable. Buffers are
+    /// sized lazily on first use and adapt to the train and eval batch
+    /// shapes; after the first batch of each shape the hot path is
+    /// allocation-free.
+    pub fn workspace(&self) -> Workspace {
+        Workspace {
+            acts: vec![Vec::new(); self.layers.len() + 1],
+            layer: vec![LayerBufs::default(); self.layers.len()],
+            d_a: Vec::new(),
+            d_b: Vec::new(),
+            dw: Vec::new(),
+            dw1: Vec::new(),
+            dw2: Vec::new(),
+            dcols: Vec::new(),
+            v: Vec::new(),
+            gx: Vec::new(),
+            gy: Vec::new(),
+            gt: Vec::new(),
+            tmp: Vec::new(),
+            grad: Vec::new(),
+            pool: None,
+        }
     }
 
-    /// Run the layer list. Returns the activation chain (`acts[0]` = input,
-    /// `acts[L]` = logits) and, when `tape` is set, the per-layer backward
-    /// caches.
-    fn forward_all(
+    /// Compose every layer's weight into the arena (factored layers run
+    /// the low-rank Hadamard/Tucker composition; dense layers just record
+    /// their parameter range).
+    fn compose_ws(&self, ws: &mut Workspace, params: &[f32]) {
+        for (l, desc) in self.layers.iter().enumerate() {
+            match desc {
+                LayerDesc::Fc(d) => compose_fc_ws(d, params, &mut ws.layer[l]),
+                LayerDesc::Conv(d) => compose_conv_ws(d, params, &mut ws.layer[l]),
+                LayerDesc::Pool2(_) => {}
+            }
+        }
+    }
+
+    /// Run the layer list forward over `bsz` samples, leaving the
+    /// activation chain (`ws.acts[0]` = input, last = logits) and the
+    /// conv/pool tape in the arena. Weights must already be composed.
+    fn forward_ws(&self, ws: &mut Workspace, params: &[f32], xb: &[f32], bsz: usize) {
+        let Workspace { acts, layer, pool, .. } = ws;
+        let pool = pool.as_deref();
+        ensure(&mut acts[0], xb.len());
+        acts[0].copy_from_slice(xb);
+        for (l, desc) in self.layers.iter().enumerate() {
+            let (head, tail) = acts.split_at_mut(l + 1);
+            let input = head[l].as_slice();
+            let out = &mut tail[0];
+            match desc {
+                LayerDesc::Fc(d) => forward_fc_ws(d, &layer[l], params, input, out, bsz, pool),
+                LayerDesc::Conv(d) => {
+                    forward_conv_ws(d, &mut layer[l], params, input, out, bsz, pool)
+                }
+                LayerDesc::Pool2(d) => {
+                    let lb = &mut layer[l];
+                    forward_pool_ws(d, input, out, &mut lb.idx, bsz)
+                }
+            }
+        }
+    }
+
+    /// Mean cross-entropy loss for one batch of `bsz` samples; the flat
+    /// gradient is left in `ws.grad` (fully overwritten).
+    fn loss_and_grad_ws(
         &self,
-        composed: &[Composed],
+        ws: &mut Workspace,
         params: &[f32],
         xb: &[f32],
+        yb: &[f32],
         bsz: usize,
-        tape: bool,
-    ) -> (Vec<Vec<f32>>, Vec<Aux>) {
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len() + 1);
-        acts.push(xb.to_vec());
-        let mut auxs = Vec::with_capacity(self.layers.len());
-        for (l, desc) in self.layers.iter().enumerate() {
-            let input = acts.last().expect("non-empty activation chain");
-            let (out, aux) = match (desc, &composed[l]) {
-                (LayerDesc::Fc(d), Composed::Fc(cf)) => {
-                    (forward_fc(d, cf, params, input, bsz), Aux::None)
-                }
-                (LayerDesc::Conv(d), Composed::Conv(cc)) => {
-                    let (out, cols) = forward_conv(d, cc, params, input, bsz, tape);
-                    (out, cols.map(Aux::Cols).unwrap_or(Aux::None))
-                }
-                (LayerDesc::Pool2(d), Composed::Pool) => {
-                    let (out, idx) = forward_pool(d, input, bsz, tape);
-                    (out, idx.map(Aux::Pool).unwrap_or(Aux::None))
-                }
-                _ => unreachable!("layer/composed kind mismatch"),
-            };
-            acts.push(out);
-            auxs.push(aux);
-        }
-        (acts, auxs)
-    }
-
-    /// Mean cross-entropy loss and flat gradient for one batch of `bsz`
-    /// samples. `grad` is fully overwritten.
-    fn loss_and_grad(&self, params: &[f32], xb: &[f32], yb: &[f32], bsz: usize, grad: &mut [f32]) -> f32 {
-        let composed = self.compose_all(params);
-        let (acts, auxs) = self.forward_all(&composed, params, xb, bsz, true);
+    ) -> f32 {
+        self.compose_ws(ws, params);
+        self.forward_ws(ws, params, xb, bsz);
         let c = self.classes;
-        let z = acts.last().expect("logits");
+        let Workspace {
+            acts, layer, d_a, d_b, dw, dw1, dw2, dcols, v, gx, gy, gt, tmp, grad, ..
+        } = ws;
+        let z = acts.last().expect("logits").as_slice();
 
         // Softmax cross-entropy: loss mean over the batch; dz = (p − 1_y)/B.
         let inv_b = 1.0 / bsz as f32;
-        let mut dz = vec![0f32; bsz * c];
+        ensure(d_a, bsz * c);
         let mut loss = 0f32;
         for b in 0..bsz {
             let zb = &z[b * c..(b + 1) * c];
@@ -959,7 +1132,7 @@ impl NativeExec {
                 sum += (zb[k] - maxv).exp();
             }
             loss += sum.ln() + maxv - zb[label];
-            let dzb = &mut dz[b * c..(b + 1) * c];
+            let dzb = &mut d_a[b * c..(b + 1) * c];
             for k in 0..c {
                 dzb[k] = (zb[k] - maxv).exp() / sum * inv_b;
             }
@@ -969,30 +1142,103 @@ impl NativeExec {
 
         // Backward through the layer list. The first layer's input
         // gradient has no consumer, so its dx computation is skipped.
+        ensure(grad, self.total);
         grad.fill(0.0);
-        let mut d = dz;
+        let mut s = GradScratch { dw, dw1, dw2, dcols, v, gx, gy, gt, tmp };
         for l in (0..self.layers.len()).rev() {
             let need_dx = l > 0;
-            d = match (&self.layers[l], &composed[l], &auxs[l]) {
-                (LayerDesc::Fc(desc), Composed::Fc(cf), _) => {
-                    backward_fc(desc, cf, params, &acts[l], &acts[l + 1], d, bsz, grad, need_dx)
-                }
-                (LayerDesc::Conv(desc), Composed::Conv(cc), Aux::Cols(cols)) => {
-                    backward_conv(desc, cc, params, cols, &acts[l + 1], d, bsz, grad, need_dx)
-                }
-                (LayerDesc::Pool2(desc), Composed::Pool, Aux::Pool(idx)) => {
-                    backward_pool(desc, idx, &d, bsz)
-                }
-                _ => unreachable!("layer/aux kind mismatch"),
-            };
+            let lb = &layer[l];
+            match &self.layers[l] {
+                LayerDesc::Fc(desc) => backward_fc_ws(
+                    desc,
+                    lb,
+                    params,
+                    &acts[l],
+                    &acts[l + 1],
+                    d_a,
+                    d_b,
+                    bsz,
+                    grad,
+                    &mut s,
+                    need_dx,
+                ),
+                LayerDesc::Conv(desc) => backward_conv_ws(
+                    desc,
+                    lb,
+                    params,
+                    &acts[l + 1],
+                    d_a,
+                    d_b,
+                    bsz,
+                    grad,
+                    &mut s,
+                    need_dx,
+                ),
+                LayerDesc::Pool2(desc) => backward_pool_ws(desc, &lb.idx, d_a, bsz, d_b),
+            }
+            if need_dx {
+                std::mem::swap(d_a, d_b);
+            }
         }
         loss
     }
 
-    /// One local epoch: per-batch SGD with
+    /// Allocating wrapper around [`loss_and_grad_ws`] (finite-difference
+    /// tests use this). `grad` is fully overwritten.
+    ///
+    /// [`loss_and_grad_ws`]: NativeExec::loss_and_grad_ws
+    #[cfg(test)]
+    fn loss_and_grad(&self, params: &[f32], xb: &[f32], yb: &[f32], bsz: usize, grad: &mut [f32]) -> f32 {
+        let mut ws = self.workspace();
+        let loss = self.loss_and_grad_ws(&mut ws, params, xb, yb, bsz);
+        grad.copy_from_slice(&ws.grad);
+        loss
+    }
+
+    /// One local epoch **in place**: per-batch SGD with
     /// `g_total = ∇L(p) + correction + mu·(p − anchor)`
-    /// (`python/compile/train.py::make_train_epoch`). Returns the updated
-    /// params and the mean batch loss.
+    /// (`python/compile/train.py::make_train_epoch`), updating `params`
+    /// directly with every scratch buffer drawn from `ws` — the
+    /// steady-state loop performs zero heap allocations. Returns the mean
+    /// batch loss. Bit-identical to [`train_epoch`] for the same inputs,
+    /// however dirty the reused workspace is.
+    ///
+    /// [`train_epoch`]: NativeExec::train_epoch
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_epoch_ws(
+        &self,
+        ws: &mut Workspace,
+        shape: BatchShape,
+        params: &mut [f32],
+        x: &[f32],
+        y: &[f32],
+        lr: f32,
+        correction: &[f32],
+        anchor: &[f32],
+        mu: f32,
+    ) -> f32 {
+        assert_eq!(params.len(), self.total);
+        let bsz = shape.batch;
+        let stride = bsz * shape.feature_dim;
+        let mut loss_sum = 0f32;
+        for b in 0..shape.nbatches {
+            let xb = &x[b * stride..(b + 1) * stride];
+            let yb = &y[b * bsz..(b + 1) * bsz];
+            loss_sum += self.loss_and_grad_ws(ws, params, xb, yb, bsz);
+            let grad = &ws.grad;
+            for j in 0..self.total {
+                let g = grad[j] + correction[j] + mu * (params[j] - anchor[j]);
+                params[j] -= lr * g;
+            }
+        }
+        loss_sum / shape.nbatches as f32
+    }
+
+    /// One local epoch: allocating wrapper over [`train_epoch_ws`] (fresh
+    /// workspace, copied params). Single-shot callers use this; the round
+    /// loop reuses pooled workspaces and trains in place instead.
+    ///
+    /// [`train_epoch_ws`]: NativeExec::train_epoch_ws
     #[allow(clippy::too_many_arguments)]
     pub fn train_epoch(
         &self,
@@ -1005,29 +1251,23 @@ impl NativeExec {
         anchor: &[f32],
         mu: f32,
     ) -> (Vec<f32>, f32) {
-        assert_eq!(params.len(), self.total);
-        let bsz = shape.batch;
-        let stride = bsz * shape.feature_dim;
+        let mut ws = self.workspace();
         let mut p = params.to_vec();
-        let mut grad = vec![0f32; self.total];
-        let mut loss_sum = 0f32;
-        for b in 0..shape.nbatches {
-            let xb = &x[b * stride..(b + 1) * stride];
-            let yb = &y[b * bsz..(b + 1) * bsz];
-            loss_sum += self.loss_and_grad(&p, xb, yb, bsz, &mut grad);
-            for j in 0..self.total {
-                let g = grad[j] + correction[j] + mu * (p[j] - anchor[j]);
-                p[j] -= lr * g;
-            }
-        }
-        (p, loss_sum / shape.nbatches as f32)
+        let loss = self.train_epoch_ws(&mut ws, shape, &mut p, x, y, lr, correction, anchor, mu);
+        (p, loss)
     }
 
-    /// Evaluate a stacked batch set, counting only the first `valid`
-    /// samples (exact tail masking). Returns `(correct, loss_sum)` summed
-    /// over the counted samples.
-    pub fn eval(
+    /// Evaluate a stacked batch set counting only the first `valid`
+    /// samples, reusing `ws`. Parameters are composed **once**, and the
+    /// final partial batch forwards only its `valid` rows — masked tail
+    /// samples are skipped inside the batch (kernels included), not just
+    /// whole masked batches. Per-sample results are bit-identical to a
+    /// full-batch forward because every kernel's per-row accumulation
+    /// order is independent of the row count. Returns `(correct,
+    /// loss_sum)` summed over the counted samples.
+    pub fn eval_ws(
         &self,
+        ws: &mut Workspace,
         shape: BatchShape,
         params: &[f32],
         x: &[f32],
@@ -1038,26 +1278,24 @@ impl NativeExec {
         let c = self.classes;
         let bsz = shape.batch;
         // Compose once — parameters are constant during evaluation.
-        let composed = self.compose_all(params);
+        self.compose_ws(ws, params);
 
         let mut correct = 0f64;
         let mut loss_sum = 0f64;
         let mut counted = 0usize;
         let stride = bsz * shape.feature_dim;
-        'outer: for bb in 0..shape.nbatches {
+        for bb in 0..shape.nbatches {
             if counted >= valid {
-                // Don't pay a forward pass for a batch that would be
-                // entirely masked (valid on an exact batch boundary).
+                // Fully-masked trailing batches cost nothing at all.
                 break;
             }
-            let xb = &x[bb * stride..(bb + 1) * stride];
-            let yb = &y[bb * bsz..(bb + 1) * bsz];
-            let (acts, _auxs) = self.forward_all(&composed, params, xb, bsz, false);
-            let z = acts.last().expect("logits");
-            for b in 0..bsz {
-                if counted >= valid {
-                    break 'outer;
-                }
+            // Forward only the rows that will be counted.
+            let take = bsz.min(valid - counted);
+            let xb = &x[bb * stride..bb * stride + take * shape.feature_dim];
+            let yb = &y[bb * bsz..bb * bsz + take];
+            self.forward_ws(ws, params, xb, take);
+            let z = ws.acts.last().expect("logits");
+            for b in 0..take {
                 let zb = &z[b * c..(b + 1) * c];
                 let label = (yb[b] as usize).min(c - 1);
                 // argmax with first-max tie-breaking (jnp.argmax semantics).
@@ -1076,10 +1314,63 @@ impl NativeExec {
                     sum += (zb[k] - maxv).exp();
                 }
                 loss_sum += (sum.ln() + maxv - zb[label]) as f64;
-                counted += 1;
             }
+            counted += take;
         }
         (correct, loss_sum)
+    }
+
+    /// Evaluate with a fresh workspace — see [`eval_ws`].
+    ///
+    /// [`eval_ws`]: NativeExec::eval_ws
+    pub fn eval(
+        &self,
+        shape: BatchShape,
+        params: &[f32],
+        x: &[f32],
+        y: &[f32],
+        valid: usize,
+    ) -> (f64, f64) {
+        let mut ws = self.workspace();
+        self.eval_ws(&mut ws, shape, params, x, y, valid)
+    }
+
+    /// Approximate FLOP count (2 per multiply-add) of one `train_epoch`
+    /// call — forward, backward and the per-batch low-rank composition.
+    /// Bias, activation and pooling work is ignored (≪1%). The benches use
+    /// this to report GFLOP/s alongside wall time.
+    pub fn train_epoch_flops(&self, shape: BatchShape) -> f64 {
+        let bsz = shape.batch as f64;
+        let mut per_batch = 0f64;
+        for (l, desc) in self.layers.iter().enumerate() {
+            // Layer 0 skips its input-gradient contraction.
+            let passes = if l == 0 { 2.0 } else { 3.0 };
+            match desc {
+                LayerDesc::Fc(d) => {
+                    let (m, n) = (d.m as f64, d.n as f64);
+                    per_batch += 2.0 * bsz * m * n * passes;
+                    if let FcParam::Factored { r, .. } = &d.param {
+                        // Compose both halves + 4 factor-grad contractions.
+                        per_batch += 6.0 * 2.0 * m * n * *r as f64;
+                    }
+                }
+                LayerDesc::Conv(d) => {
+                    let (o, i, kk) = (d.o as f64, d.i as f64, (d.k * d.k) as f64);
+                    let rows = bsz * (d.h * d.w) as f64;
+                    per_batch += 2.0 * rows * i * kk * o * passes;
+                    if let ConvParam::Factored { r, .. } = &d.param {
+                        let r = *r as f64;
+                        // One Tucker-2 half costs ≈ 2(i·r²·kk + o·r·i·kk)
+                        // FLOPs; compose runs 2 halves, the factor
+                        // gradients ≈ 3 half-equivalents each.
+                        let half = 2.0 * (i * r * r * kk + o * r * i * kk);
+                        per_batch += (2.0 + 6.0) * half;
+                    }
+                }
+                LayerDesc::Pool2(_) => {}
+            }
+        }
+        per_batch * shape.nbatches as f64
     }
 }
 
@@ -1220,7 +1511,8 @@ mod tests {
                     },
                     bias: 0..0,
                 };
-                let cc = compose_conv(&desc, vals);
+                let mut lb = LayerBufs::default();
+                compose_conv_ws(&desc, vals, &mut lb);
                 let reference = ConvFactors::from_f32_parts(
                     o, i, k, k, r,
                     &vals[x1], &vals[y1], &vals[t1],
@@ -1229,7 +1521,7 @@ mod tests {
                 .compose();
                 assert_eq!(reference.dims, [o, i, k, k]);
                 // Both are (O, I, K1, K2) row-major — compare directly.
-                for (j, (&a, &b)) in cc.w.iter().zip(reference.data.iter()).enumerate() {
+                for (j, (&a, &b)) in lb.w.iter().zip(reference.data.iter()).enumerate() {
                     let tol = 1e-5 * (1.0 + b.abs());
                     if (a as f64 - b).abs() > tol {
                         return Err(format!(
@@ -1340,8 +1632,9 @@ mod tests {
         let desc = PoolDesc { c: 2, h: 4, w: 4 };
         let mut rng = Rng::new(17);
         let input: Vec<f32> = (0..2 * 4 * 4 * 2).map(|_| rng.gaussian() as f32).collect();
-        let (out, idx) = forward_pool(&desc, &input, 2, true);
-        let idx = idx.unwrap();
+        let mut out = Vec::new();
+        let mut idx = Vec::new();
+        forward_pool_ws(&desc, &input, &mut out, &mut idx, 2);
         assert_eq!(out.len(), 2 * 2 * 2 * 2);
         // Every output equals the input at its recorded argmax, and the
         // argmax lies inside the right 2×2 window.
@@ -1352,7 +1645,8 @@ mod tests {
         }
         // Backward scatters exactly onto the argmax positions.
         let d: Vec<f32> = (0..out.len()).map(|j| (j + 1) as f32).collect();
-        let dx = backward_pool(&desc, &idx, &d, 2);
+        let mut dx = vec![1e9f32; 3]; // Dirty + wrong-sized: must be reset.
+        backward_pool_ws(&desc, &idx, &d, 2, &mut dx);
         assert_eq!(dx.len(), input.len());
         let routed: f32 = dx.iter().sum();
         assert_eq!(routed, d.iter().sum::<f32>());
@@ -1443,6 +1737,83 @@ mod tests {
         let b = exec.train_epoch(sh, &params, &x, &y, 0.05, &zeros, &zeros, 0.0);
         assert_eq!(a.0, b.0);
         assert_eq!(a.1, b.1);
+    }
+
+    /// The acceptance gate for the workspace refactor: `train_epoch_ws`
+    /// over a **dirty, reused** workspace must be bit-identical to the
+    /// one-shot `train_epoch` wrapper (fresh buffers) for a fixed seed —
+    /// i.e. no stale workspace state can leak into any result.
+    #[test]
+    fn workspace_reuse_is_bit_identical() {
+        for s in [
+            spec(NativeScheme::Original),
+            spec(NativeScheme::FedPara { gamma: 0.5 }),
+            cnn_spec(NativeScheme::FedPara { gamma: 0.5 }),
+            cnn_spec(NativeScheme::PFedPara { gamma: 0.5 }),
+        ] {
+            let exec = NativeExec::new(s);
+            let sh = shape(2, 4, s.in_dim());
+            let (params, x, y) = random_problem(s, 2, 4, 77);
+            let zeros = vec![0f32; exec.param_count()];
+            let (p_fresh, loss_fresh) =
+                exec.train_epoch(sh, &params, &x, &y, 0.05, &zeros, &zeros, 0.0);
+
+            // Dirty one workspace with a different problem (other data,
+            // other batch size), then run the real one through it.
+            let mut ws = exec.workspace();
+            let (dirty_params, dx, dy) = random_problem(s, 1, 7, 5151);
+            let mut junk = dirty_params;
+            exec.train_epoch_ws(
+                &mut ws,
+                shape(1, 7, s.in_dim()),
+                &mut junk,
+                &dx,
+                &dy,
+                0.1,
+                &zeros,
+                &zeros,
+                0.0,
+            );
+            let mut p_reused = params.clone();
+            let loss_reused =
+                exec.train_epoch_ws(&mut ws, sh, &mut p_reused, &x, &y, 0.05, &zeros, &zeros, 0.0);
+            assert_eq!(p_fresh, p_reused, "{s:?}: params diverged under workspace reuse");
+            assert_eq!(loss_fresh.to_bits(), loss_reused.to_bits(), "{s:?}: loss diverged");
+
+            // And a second run through the same workspace stays identical.
+            let mut p_again = params.clone();
+            let loss_again =
+                exec.train_epoch_ws(&mut ws, sh, &mut p_again, &x, &y, 0.05, &zeros, &zeros, 0.0);
+            assert_eq!(p_fresh, p_again);
+            assert_eq!(loss_fresh.to_bits(), loss_again.to_bits());
+        }
+    }
+
+    #[test]
+    fn eval_ws_reuse_and_partial_forward_are_exact() {
+        // eval through a dirty reused workspace — including the new
+        // partial-batch forward that skips masked tail rows — must match
+        // the fresh-workspace eval bit for bit.
+        let s = cnn_spec(NativeScheme::FedPara { gamma: 0.5 });
+        let exec = NativeExec::new(s);
+        let sh = shape(2, 4, s.in_dim());
+        let (params, x, y) = random_problem(s, 2, 4, 88);
+        let mut ws = exec.workspace();
+        // Dirty the arena with a training pass and a full eval first.
+        let (tp, tx, ty) = random_problem(s, 2, 4, 99);
+        let mut tp = tp;
+        let zeros = vec![0f32; exec.param_count()];
+        exec.train_epoch_ws(&mut ws, sh, &mut tp, &tx, &ty, 0.1, &zeros, &zeros, 0.0);
+        for valid in [1usize, 3, 4, 5, 7, 8] {
+            let fresh = exec.eval(sh, &params, &x, &y, valid);
+            let reused = exec.eval_ws(&mut ws, sh, &params, &x, &y, valid);
+            assert_eq!(fresh.0, reused.0, "valid={valid}: correct-count diverged");
+            assert_eq!(
+                fresh.1.to_bits(),
+                reused.1.to_bits(),
+                "valid={valid}: loss diverged"
+            );
+        }
     }
 
     #[test]
@@ -1552,9 +1923,9 @@ mod tests {
             }
         }
         let LayerDesc::Fc(fc1) = &exec.layers[0] else { panic!("mlp layer 0 is FC") };
-        let composed = compose_fc(fc1, &params);
-        let (w1, _) = composed.parts.as_ref().unwrap();
-        for (a, b) in composed.w.iter().zip(w1.iter()) {
+        let mut lb = LayerBufs::default();
+        compose_fc_ws(fc1, &params, &mut lb);
+        for (a, b) in lb.w.iter().zip(lb.w1.iter()) {
             assert_eq!(a, b);
         }
 
@@ -1568,9 +1939,9 @@ mod tests {
             }
         }
         let LayerDesc::Conv(conv1) = &cexec.layers[0] else { panic!("cnn layer 0 is conv") };
-        let composed = compose_conv(conv1, &cparams);
-        let parts = composed.parts.as_ref().unwrap();
-        for (a, b) in composed.w.iter().zip(parts.w1.iter()) {
+        let mut lb = LayerBufs::default();
+        compose_conv_ws(conv1, &cparams, &mut lb);
+        for (a, b) in lb.w.iter().zip(lb.w1.iter()) {
             assert_eq!(a, b);
         }
     }

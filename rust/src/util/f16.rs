@@ -67,14 +67,11 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
         } else {
             // Subnormal: value = mant * 2^-24. Normalize so the leading 1
             // sits at bit 10; after s left-shifts the unbiased exponent is
-            // -14 - s, i.e. an f32 exponent field of 113 - s.
-            let mut s = 0i32;
-            let mut m = mant;
-            while m & 0x0400 == 0 {
-                m <<= 1;
-                s += 1;
-            }
-            let m = m & 0x03FF;
+            // -14 - s, i.e. an f32 exponent field of 113 - s. The shift
+            // count comes straight from the bit position of the leading 1
+            // (mant has 1..=10 significant bits, so `s` is 1..=10).
+            let s = mant.leading_zeros() as i32 - 21;
+            let m = (mant << s) & 0x03FF;
             let exp32 = (113 - s) as u32;
             sign | (exp32 << 23) | (m << 13)
         }
@@ -94,6 +91,33 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
 /// Quantize a slice through fp16 and back (the FedPAQ uplink transform).
 pub fn quantize_roundtrip(xs: &[f32]) -> Vec<f32> {
     xs.iter().map(|&x| f16_bits_to_f32(f32_to_f16_bits(x))).collect()
+}
+
+/// In-place [`quantize_roundtrip`] — the uplink path uses this so the
+/// steady-state round loop quantizes without allocating a second vector.
+pub fn quantize_roundtrip_in_place(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = f16_bits_to_f32(f32_to_f16_bits(*x));
+    }
+}
+
+/// Quantize a slice into fp16 bit patterns, reusing `bits` (cleared,
+/// reserved and refilled) — the reusable-buffer bit-level counterpart of
+/// [`pack`] for transports that carry `u16`s directly. The coordinator's
+/// *simulated* uplink only needs the dequantized values and uses
+/// [`quantize_roundtrip_in_place`] instead.
+pub fn quantize(xs: &[f32], bits: &mut Vec<u16>) {
+    bits.clear();
+    bits.reserve(xs.len());
+    bits.extend(xs.iter().map(|&x| f32_to_f16_bits(x)));
+}
+
+/// Decode fp16 bit patterns into `out` (cleared, reserved and refilled) —
+/// the inverse of [`quantize`], mirroring [`unpack`] at the `u16` level.
+pub fn dequantize(bits: &[u16], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(bits.len());
+    out.extend(bits.iter().map(|&h| f16_bits_to_f32(h)));
 }
 
 /// Pack a slice of f32 into fp16 bytes (what actually goes on the wire).
@@ -204,5 +228,49 @@ mod tests {
             let f = f16_bits_to_f32(bits);
             assert_eq!(f32_to_f16_bits(f), bits, "bits={bits:#06x} f={f}");
         }
+    }
+
+    #[test]
+    fn exhaustive_bit_pattern_roundtrip() {
+        // Every one of the 65,536 half patterns: decode to f32 and
+        // re-encode. Non-NaN patterns (zeros, subnormals, normals,
+        // infinities — signs included) must come back bit-exactly; NaN
+        // payloads are canonicalized by the encoder but must stay NaN with
+        // the sign preserved.
+        for bits in 0u16..=u16::MAX {
+            let f = f16_bits_to_f32(bits);
+            let back = f32_to_f16_bits(f);
+            let exp = (bits >> 10) & 0x1F;
+            let mant = bits & 0x03FF;
+            if exp == 0x1F && mant != 0 {
+                assert!(f.is_nan(), "bits={bits:#06x} decoded to non-NaN {f}");
+                assert_eq!(back & 0x8000, bits & 0x8000, "NaN sign lost: {bits:#06x}");
+                assert_eq!(back & 0x7C00, 0x7C00, "NaN exponent lost: {bits:#06x}");
+                assert_ne!(back & 0x03FF, 0, "NaN collapsed to Inf: {bits:#06x}");
+            } else {
+                assert_eq!(back, bits, "bits={bits:#06x} f={f} back={back:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn slice_quantize_dequantize_match_scalar_path() {
+        let xs: Vec<f32> = (0..300)
+            .map(|i| ((i as f32) - 150.0) * 0.421)
+            .chain([0.0, -0.0, 1e-7, -1e-7, f32::INFINITY, 65504.0])
+            .collect();
+        let mut bits = Vec::new();
+        quantize(&xs, &mut bits);
+        assert_eq!(bits.len(), xs.len());
+        let mut back = Vec::new();
+        dequantize(&bits, &mut back);
+        assert_eq!(back, quantize_roundtrip(&xs));
+        // Reuse: a second call with different content fully replaces it.
+        quantize(&xs[..5], &mut bits);
+        assert_eq!(bits.len(), 5);
+        // In-place roundtrip equals the allocating one.
+        let mut inplace = xs.clone();
+        quantize_roundtrip_in_place(&mut inplace);
+        assert_eq!(inplace, quantize_roundtrip(&xs));
     }
 }

@@ -76,6 +76,55 @@ impl ThreadPool {
             .expect("worker channel closed");
     }
 
+    /// Run borrowed closures on the pool, blocking until every one has
+    /// completed. This is the scoped counterpart of [`execute`]: tasks may
+    /// capture non-`'static` references (slices of a caller-owned buffer,
+    /// typically disjoint `chunks_mut` of one output), which the kernel
+    /// row-parallelism in `linalg::kernels` uses to split a GEMM without
+    /// copying its operands.
+    ///
+    /// Panics in tasks are re-raised here after **all** tasks have
+    /// finished, so no task can outlive the borrows it captured.
+    ///
+    /// Must not be called from inside a job running on this same pool:
+    /// with every worker occupied by blocked callers the inner tasks would
+    /// never be scheduled.
+    ///
+    /// [`execute`]: ThreadPool::execute
+    pub fn run_borrowed<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let (tx, rx) = mpsc::channel::<thread::Result<()>>();
+        for task in tasks {
+            // SAFETY: the loop below blocks until every task has sent its
+            // completion (or panic) before this function returns, so the
+            // `'a` borrows captured by the task strictly outlive its
+            // execution; extending the closure's lifetime to `'static` for
+            // the queue hand-off is therefore sound. Workers never drop a
+            // received job without running it, and the channel send cannot
+            // fail while `rx` is held here.
+            let task: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(task) };
+            let tx = tx.clone();
+            self.execute(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+                let _ = tx.send(out);
+            });
+        }
+        drop(tx);
+        let mut panicked = None;
+        for _ in 0..n {
+            match rx.recv().expect("worker dropped a borrowed task") {
+                Ok(()) => {}
+                Err(p) => panicked = Some(p),
+            }
+        }
+        if let Some(p) = panicked {
+            std::panic::resume_unwind(p);
+        }
+    }
+
     /// Map `f` over `items` on the pool, blocking until all complete, and
     /// return outputs in input order. Panics in jobs are propagated.
     pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
@@ -254,6 +303,54 @@ mod tests {
         let mut calls = 0;
         pool.scope_fold(Vec::<usize>::new(), |x| x, |_, _| calls += 1);
         assert_eq!(calls, 0);
+    }
+
+    #[test]
+    fn run_borrowed_fills_disjoint_chunks() {
+        // Tasks borrow disjoint chunks of a stack-local buffer — the shape
+        // the row-blocked GEMM uses. All writes must land before return.
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0u64; 64];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(7)
+            .enumerate()
+            .map(|(ci, chunk)| {
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (ci * 7 + j) as u64 + 1;
+                    }
+                });
+                f
+            })
+            .collect();
+        pool.run_borrowed(tasks);
+        assert_eq!(out, (1..=64u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "borrowed boom")]
+    fn run_borrowed_propagates_panics_after_completion() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|i| {
+                let done = Arc::clone(&done);
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    if i == 3 {
+                        panic!("borrowed boom");
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                });
+                f
+            })
+            .collect();
+        pool.run_borrowed(tasks); // Panics, but only after all 8 ran.
+    }
+
+    #[test]
+    fn run_borrowed_empty_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.run_borrowed(Vec::new());
     }
 
     #[test]
