@@ -1,0 +1,145 @@
+//! Bench: the native recurrent path — the LSTM cell's GEMM shapes (input
+//! projection, per-step recurrence, BPTT contractions) naive-vs-blocked,
+//! and a full character-LSTM local epoch through the native backend (the
+//! hot loop behind the Table 2(b)/Table 11 Shakespeare* scenario).
+//!
+//! No criterion offline — the same harness=false timing loop as
+//! `benches/conv.rs` (warmup + mean ± std via util::stats::Welford).
+//! Run via `cargo bench --bench lstm`.
+
+use fedpara::data::{assemble_batches, synth_text};
+use fedpara::linalg::kernels::{self, matmul_nn, matmul_nt, matmul_tn};
+use fedpara::runtime::Engine;
+use fedpara::util::rng::Rng;
+use fedpara::util::stats::time_ms;
+
+/// Report wall time plus arithmetic throughput (GFLOP/s) so cell-kernel
+/// changes are judged against roofline numbers, not just wall time.
+fn bench_rate<F: FnMut()>(name: &str, iters: usize, flops: f64, f: F) {
+    let w = time_ms(3, iters, f);
+    let secs = w.mean() * 1e-3;
+    println!(
+        "{name:<52} {:>9.3} ms ± {:>7.3}  {:>7.2} GFLOP/s (n={iters}, min {:.3})",
+        w.mean(),
+        w.std_dev(),
+        flops / secs / 1e9,
+        w.min()
+    );
+}
+
+fn randn(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.gaussian() as f32).collect()
+}
+
+/// The three GEMM shapes one LSTM training step runs, at the built-in
+/// artifact dims (L=48, bsz=16, e=16, h=32): the one-shot input projection
+/// `X·W_ihᵀ`, the L sequential recurrent projections `h_{t-1}·W_hhᵀ`, and
+/// the batched BPTT contraction `dZᵀ·H_prev`.
+fn cell_kernels() {
+    println!("== LSTM cell GEMMs (L=48, bsz=16, e=16, h=32), naive vs blocked ==");
+    let (l, bsz, e, h) = (48usize, 16usize, 16usize, 32usize);
+    let g4 = 4 * h;
+    let rows = l * bsz;
+    let mut rng = Rng::new(11);
+    let x = randn(rows * e, &mut rng);
+    let w_ih = randn(g4 * e, &mut rng);
+    let w_hh = randn(g4 * h, &mut rng);
+    let hprev = randn(rows * h, &mut rng);
+    let dz = randn(rows * g4, &mut rng);
+    let mut z = vec![0f32; rows * g4];
+    let mut rec = vec![0f32; bsz * g4];
+    let mut dw = vec![0f32; g4 * h];
+    let mut dh = vec![0f32; bsz * h];
+
+    for naive in [false, true] {
+        kernels::force_naive(naive);
+        let tag = if naive { " (naive)" } else { "" };
+        bench_rate(
+            &format!("input projection X·W_ihᵀ [{rows}x{e}]→[{rows}x{g4}]{tag}"),
+            20,
+            2.0 * (rows * e * g4) as f64,
+            || {
+                matmul_nt(&x, &w_ih, rows, e, g4, &mut z);
+                std::hint::black_box(&z);
+            },
+        );
+        bench_rate(
+            &format!("recurrent steps ×{l} h·W_hhᵀ [{bsz}x{h}]→[{bsz}x{g4}]{tag}"),
+            20,
+            2.0 * (l * bsz * h * g4) as f64,
+            || {
+                for t in 0..l {
+                    matmul_nt(&hprev[t * bsz * h..(t + 1) * bsz * h], &w_hh, bsz, h, g4, &mut rec);
+                }
+                std::hint::black_box(&rec);
+            },
+        );
+        bench_rate(
+            &format!("BPTT dW_hh = dZᵀ·H [{rows}x{g4}]ᵀ·[{rows}x{h}]{tag}"),
+            20,
+            2.0 * (rows * g4 * h) as f64,
+            || {
+                matmul_tn(&dz, &hprev, rows, g4, h, &mut dw);
+                std::hint::black_box(&dw);
+            },
+        );
+        bench_rate(
+            &format!("BPTT dh carry ×{l} dz·W_hh [{bsz}x{g4}]→[{bsz}x{h}]{tag}"),
+            20,
+            2.0 * (l * bsz * g4 * h) as f64,
+            || {
+                for t in 0..l {
+                    matmul_nn(&dz[t * bsz * g4..(t + 1) * bsz * g4], &w_hh, bsz, g4, h, &mut dh);
+                }
+                std::hint::black_box(&dh);
+            },
+        );
+    }
+    kernels::force_naive(false);
+}
+
+/// One character-LSTM local epoch per built-in artifact (the zero-alloc
+/// `train_epoch_ws` path the round loop runs), naive vs blocked.
+fn lstm_epoch() -> anyhow::Result<()> {
+    println!("\n== native LSTM local epoch (built-in Shakespeare-like artifacts) ==");
+    let engine = Engine::native();
+    let tspec = synth_text::shakespeare_like();
+    let data = synth_text::generate(&tspec, 128, 3);
+    let idx: Vec<usize> = (0..data.len()).collect();
+    for name in ["native_lstm_orig", "native_lstm_low", "native_lstm_fedpara"] {
+        let rt = engine.load(name)?;
+        let t = rt.meta.train;
+        let mut rng = Rng::new(4);
+        let params = rt.meta.layout.init_params(&mut rng);
+        let stack = assemble_batches(&data, &idx, t.nbatches, t.batch, &mut rng);
+        let flops = rt.train_flops_estimate().unwrap_or(0.0);
+        let mut ws = rt.workspace();
+        let mut p = params.clone();
+        for naive in [false, true] {
+            kernels::force_naive(naive);
+            let tag = if naive { " (naive)" } else { "" };
+            bench_rate(
+                &format!("train_epoch {name} ({} params){tag}", rt.meta.param_count),
+                10,
+                flops,
+                || {
+                    p.copy_from_slice(&params);
+                    let loss = rt
+                        .train_epoch_ws(&mut ws, &mut p, &stack.x, &stack.y, 0.5, None, None, 0.0)
+                        .expect("train_epoch");
+                    std::hint::black_box(loss);
+                },
+            );
+        }
+        kernels::force_naive(false);
+    }
+    Ok(())
+}
+
+fn main() {
+    cell_kernels();
+    if let Err(e) = lstm_epoch() {
+        eprintln!("lstm epoch bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -11,6 +11,13 @@
 //! cargo run --release --bin bench_report            # full shapes
 //! cargo run --release --bin bench_report -- --smoke # tiny shapes (CI)
 //! cargo run --release --bin bench_report -- --out path/to.json
+//! # Regression gate: exit non-zero when the blocked-GEMM or train_epoch
+//! # naive/blocked speedup drops more than <pct>% below the committed
+//! # baseline (wall time is only a 3x catastrophic backstop).
+//! cargo run --release --bin bench_report -- --smoke \
+//!     --compare BENCH_baseline.json --tolerance 50
+//! # Baseline refresh (one command):
+//! cargo run --release --bin bench_report -- --smoke --out BENCH_baseline.json
 //! ```
 
 use std::time::Instant;
@@ -24,18 +31,10 @@ use fedpara::util::json::Json;
 use fedpara::util::rng::Rng;
 use fedpara::util::stats::Welford;
 
-/// Mean wall-clock over `iters` timed runs after 2 warmups.
-fn time_ms<F: FnMut()>(iters: usize, mut f: F) -> Welford {
-    for _ in 0..2 {
-        f();
-    }
-    let mut w = Welford::new();
-    for _ in 0..iters.max(1) {
-        let t0 = Instant::now();
-        f();
-        w.push(t0.elapsed().as_secs_f64() * 1e3);
-    }
-    w
+/// Mean wall-clock over `iters` timed runs after 2 warmups (the shared
+/// `util::stats::time_ms` loop — the gate compares its means).
+fn time_ms<F: FnMut()>(iters: usize, f: F) -> Welford {
+    fedpara::util::stats::time_ms(2, iters, f)
 }
 
 fn gflops(flops: f64, ms: f64) -> f64 {
@@ -54,10 +53,12 @@ fn randn(n: usize, rng: &mut Rng) -> Vec<f32> {
 fn bench_gemm(smoke: bool, iters: usize) -> Json {
     // Shapes drawn from the hot paths: the CNN im2col GEMM
     // (rows = bsz·h·w), the MLP forward, and a square reference.
+    // The 128³ shape is in both modes: big enough (~4 MFLOP) to sit above
+    // the regression gate's noise floor, small enough for CI smoke runs.
     let shapes: &[(usize, usize, usize)] = if smoke {
-        &[(24, 18, 20)]
+        &[(24, 18, 20), (128, 128, 128)]
     } else {
-        &[(256, 256, 256), (4096, 72, 8), (128, 784, 64)]
+        &[(256, 256, 256), (4096, 72, 8), (128, 784, 64), (128, 128, 128)]
     };
     let mut rows = Vec::new();
     let mut rng = Rng::new(17);
@@ -121,7 +122,9 @@ fn bench_train_epoch(smoke: bool, iters: usize) -> anyhow::Result<Json> {
     let x = randn(n * t.feature_dim, &mut rng);
     let y: Vec<f32> = (0..n).map(|_| rng.below(10) as f32).collect();
     let flops = rt.train_flops_estimate().unwrap_or(0.0);
-    let iters = if smoke { 1 } else { iters };
+    // ≥3 timed iterations even in smoke: the mean feeds the regression
+    // gate, and a single sample is too noisy to compare against.
+    let iters = if smoke { 3 } else { iters };
 
     let mut ws = rt.workspace();
     // `p` is reset (not re-allocated) per iteration so the timed region is
@@ -228,27 +231,230 @@ fn bench_round(smoke: bool, iters: usize) -> anyhow::Result<Json> {
     ]))
 }
 
+/// Baseline entries whose reference time sits below this are pure timer
+/// noise at smoke shapes; the gate reports them as skipped rather than
+/// flagging a µs-level wobble as a regression.
+const GATE_NOISE_FLOOR_MS: f64 = 0.05;
+
+/// Absolute-wall-time backstop: even across host classes (a CI runner vs
+/// the box the baseline was refreshed on), a blocked-path time this many
+/// times the baseline means something is catastrophically wrong (e.g. the
+/// naive loops accidentally became the default path).
+const GATE_CATASTROPHIC_FACTOR: f64 = 3.0;
+
+/// One gate check of a baseline row against the matching current row.
+///
+/// The **primary** metric is the naive/blocked `speedup` ratio — both
+/// sides of the ratio are measured in the same process on the same host,
+/// so it transfers across hardware classes where raw wall time does not
+/// (a baseline refreshed on a fast dev box would otherwise bake in limits
+/// a shared CI runner can never meet). The absolute blocked wall time is
+/// only a loose catastrophic-slowdown backstop. Returns `true` only when
+/// the **primary** (speedup) comparison actually happened — a row whose
+/// speedup field is missing on either side does not count as compared, so
+/// a field rename degrades to the zero-metrics-compared bail instead of a
+/// vacuously green backstop-only gate.
+fn gate_check(
+    label: &str,
+    base: &Json,
+    current: Option<&Json>,
+    tol_pct: f64,
+    regressions: &mut usize,
+) -> bool {
+    let Some(cur) = current else {
+        println!("  {label:<44} SKIP (entry missing from current run)");
+        return false;
+    };
+    let (Some(bb), Some(cb)) = (base.get("blocked_ms").as_f64(), cur.get("blocked_ms").as_f64())
+    else {
+        println!("  {label:<44} SKIP (blocked_ms missing)");
+        return false;
+    };
+    // Noise-floor test on the *slow* side of the baseline ratio: blocked
+    // alone can dip under the floor on fast hardware, which must not
+    // un-gate the shape — only a row whose whole measurement is at timer
+    // resolution is meaningless to compare.
+    let b_slow = bb.max(base.get("naive_ms").as_f64().unwrap_or(bb));
+    if b_slow < GATE_NOISE_FLOOR_MS {
+        println!("  {label:<44} SKIP (baseline {b_slow:.4} ms below noise floor)");
+        return false;
+    }
+    let mut ok = true;
+    let primary = match (base.get("speedup").as_f64(), cur.get("speedup").as_f64()) {
+        (Some(bs), Some(cs)) => {
+            let floor = bs * (1.0 - tol_pct / 100.0);
+            if cs < floor {
+                *regressions += 1;
+                ok = false;
+                println!(
+                    "  {label:<44} REGRESSION: naive/blocked speedup {cs:.2}x < {bs:.2}x \
+                     −{tol_pct}% (floor {floor:.2}x)"
+                );
+            }
+            true
+        }
+        _ => {
+            println!("  {label:<44} note: speedup field missing — backstop check only");
+            false
+        }
+    };
+    let limit = bb * GATE_CATASTROPHIC_FACTOR;
+    if cb > limit {
+        *regressions += 1;
+        ok = false;
+        println!(
+            "  {label:<44} REGRESSION: blocked {cb:.3} ms > {GATE_CATASTROPHIC_FACTOR}x baseline \
+             {bb:.3} ms"
+        );
+    }
+    if ok {
+        println!("  {label:<44} ok: {cb:.3} ms (baseline {bb:.3} ms)");
+    }
+    primary
+}
+
+/// Find the gemm row matching `(op, m, k, n)`.
+fn gemm_row<'a>(doc: &'a Json, op: &str, m: f64, k: f64, n: f64) -> Option<&'a Json> {
+    doc.get("gemm").as_arr()?.iter().find(|row| {
+        row.get("op").as_str() == Some(op)
+            && row.get("m").as_f64() == Some(m)
+            && row.get("k").as_f64() == Some(k)
+            && row.get("n").as_f64() == Some(n)
+    })
+}
+
+/// The bench-regression gate: compare this run's blocked-GEMM and
+/// train_epoch metrics (speedup ratio primary, wall-time backstop — see
+/// [`gate_check`]) against the committed baseline; return the number of
+/// regressions (CI fails on any).
+fn compare_against_baseline(
+    doc: &Json,
+    baseline_path: &str,
+    tol_pct: f64,
+) -> anyhow::Result<usize> {
+    let text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| anyhow::anyhow!("cannot read baseline '{baseline_path}': {e}"))?;
+    let base = Json::parse(&text).map_err(|e| anyhow::anyhow!("baseline parse: {e}"))?;
+    println!("\n== bench-regression gate (tolerance {tol_pct}%, vs {baseline_path}) ==");
+    if base.get("mode").as_str() != doc.get("mode").as_str() {
+        println!(
+            "  note: baseline mode {:?} != current mode {:?} — only matching shapes compare",
+            base.get("mode").as_str(),
+            doc.get("mode").as_str()
+        );
+    }
+    let mut regressions = 0usize;
+    let mut compared = 0usize;
+    // Blocked GEMM: every shape present in the *baseline* is checked.
+    if let Some(rows) = base.get("gemm").as_arr() {
+        for row in rows {
+            let (Some(op), Some(m), Some(k), Some(n)) = (
+                row.get("op").as_str(),
+                row.get("m").as_f64(),
+                row.get("k").as_f64(),
+                row.get("n").as_f64(),
+            ) else {
+                continue;
+            };
+            compared += gate_check(
+                &format!("matmul_{op} {m}x{k}x{n}"),
+                row,
+                gemm_row(doc, op, m, k, n),
+                tol_pct,
+                &mut regressions,
+            ) as usize;
+        }
+    }
+    // train_epoch throughput — only meaningful when both runs measured
+    // the *same* artifact; a harness-side artifact swap must read as
+    // drift (skip → possibly the zero-compared bail), never as an
+    // apples-to-oranges time comparison.
+    let base_art = base.get("train_epoch").get("artifact").as_str().unwrap_or("?");
+    let cur_art = doc.get("train_epoch").get("artifact").as_str();
+    if cur_art == Some(base_art) {
+        compared += gate_check(
+            &format!("train_epoch {base_art}"),
+            base.get("train_epoch"),
+            Some(doc.get("train_epoch")),
+            tol_pct,
+            &mut regressions,
+        ) as usize;
+    } else {
+        println!(
+            "  train_epoch: SKIP (baseline artifact '{base_art}' != current {cur_art:?} — \
+             refresh the baseline)"
+        );
+    }
+    if compared == 0 {
+        // Every row skipped ⇒ the baseline no longer matches the harness
+        // (renamed shapes/fields/artifact). A vacuously-green gate is
+        // worse than a failing one — demand a refresh instead.
+        anyhow::bail!(
+            "bench-regression gate compared zero metrics against '{baseline_path}' — \
+             the baseline is out of sync with the harness; refresh it:\n  \
+             cargo run --release --bin bench_report -- --smoke --out BENCH_baseline.json"
+        );
+    }
+    if regressions == 0 {
+        println!("  gate passed ({compared} metric(s) compared)");
+    } else {
+        println!(
+            "  gate FAILED ({regressions} regression(s)); if intentional, refresh the baseline:\n  \
+             cargo run --release --bin bench_report -- --smoke --out BENCH_baseline.json"
+        );
+    }
+    Ok(regressions)
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let smoke = args.iter().any(|a| a == "--smoke");
-    let out_path = args
-        .iter()
-        .position(|a| a == "--out")
-        .and_then(|i| args.get(i + 1))
-        .cloned()
-        .unwrap_or_else(|| "BENCH_native.json".to_string());
+    // Single-pass parse — one flag list, and another `--flag` is never
+    // swallowed as a value.
+    let mut smoke = false;
+    let mut out_path: Option<String> = None;
+    let mut compare: Option<String> = None;
+    let mut tolerance = 25.0f64;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
-            "--smoke" => i += 1,
-            "--out" if i + 1 < args.len() => i += 2,
-            "--out" => anyhow::bail!("--out requires a path argument"),
+            "--smoke" => {
+                smoke = true;
+                i += 1;
+            }
+            flag @ ("--out" | "--compare" | "--tolerance") => {
+                let value = match args.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => v.clone(),
+                    _ => anyhow::bail!("{flag} requires a value argument"),
+                };
+                match flag {
+                    "--out" => out_path = Some(value),
+                    "--compare" => compare = Some(value),
+                    _ => {
+                        tolerance = value.parse().map_err(|_| {
+                            anyhow::anyhow!("--tolerance wants a percentage, got '{value}'")
+                        })?;
+                        // ≥100 would make the speedup floor non-positive
+                        // (gate silently off); negative would gate harder
+                        // than the baseline itself.
+                        if !(0.0..100.0).contains(&tolerance) {
+                            anyhow::bail!("--tolerance must be in [0, 100), got {tolerance}");
+                        }
+                    }
+                }
+                i += 2;
+            }
             other => {
-                anyhow::bail!("unknown argument '{other}' (usage: bench_report [--smoke] [--out path])")
+                anyhow::bail!(
+                    "unknown argument '{other}' (usage: bench_report [--smoke] [--out path] \
+                     [--compare baseline.json] [--tolerance pct])"
+                )
             }
         }
     }
-    let iters = if smoke { 2 } else { 10 };
+    let out_path = out_path.unwrap_or_else(|| "BENCH_native.json".to_string());
+    // Smoke still uses several timed iterations: the gemm/train_epoch
+    // means feed the regression gate, so n=1 noise is not acceptable.
+    let iters = if smoke { 5 } else { 10 };
 
     let gemm = bench_gemm(smoke, iters);
     let epoch = bench_train_epoch(smoke, iters)?;
@@ -267,6 +473,15 @@ fn main() -> anyhow::Result<()> {
     println!("\nwrote {out_path}");
     if smoke {
         println!("(smoke mode: tiny shapes — harness health check, not a perf claim)");
+    }
+    if let Some(baseline) = compare {
+        let regressions = compare_against_baseline(&doc, &baseline, tolerance)?;
+        if regressions > 0 {
+            anyhow::bail!(
+                "bench-regression gate: {regressions} metric(s) slower than \
+                 {baseline} by more than {tolerance}%"
+            );
+        }
     }
     Ok(())
 }

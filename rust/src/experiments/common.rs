@@ -99,16 +99,81 @@ pub fn vision_federation(
     (locals, test)
 }
 
+/// The paper's text dataset (synthetic stand-in; DESIGN.md §3) — the text
+/// counterpart of [`VisionKind`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TextKind {
+    Shakespeare,
+}
+
+impl TextKind {
+    pub fn spec(&self) -> synth_text::TextSpec {
+        match self {
+            TextKind::Shakespeare => synth_text::shakespeare_like(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TextKind::Shakespeare => "Shakespeare*",
+        }
+    }
+
+    /// Paper target rounds T (Table 2b / Supp. Table 6: 500).
+    pub fn paper_rounds(&self) -> usize {
+        500
+    }
+
+    /// Build a partitioned text federation: per-role client datasets
+    /// (dialect strength 0.6 when non-IID) plus a base-chain test set.
+    pub fn federation(&self, non_iid: bool, scale: Scale, seed: u64) -> (Vec<Dataset>, Dataset) {
+        let spec = self.spec();
+        let (clients, per_client, test_n) = match scale {
+            Scale::Tiny => (8, 48, 256),
+            Scale::Small => (16, 96, 256),
+            Scale::Paper => (100, 500, 2000),
+        };
+        let h = if non_iid { 0.6 } else { 0.0 };
+        synth_text::generate_federation(&spec, clients, per_client, h, test_n, seed)
+    }
+}
+
 /// Build a text federation (Shakespeare*): per-role datasets + test set.
 pub fn text_federation(non_iid: bool, scale: Scale, seed: u64) -> (Vec<Dataset>, Dataset) {
-    let spec = synth_text::shakespeare_like();
-    let (clients, per_client, test_n) = match scale {
-        Scale::Tiny => (8, 48, 256),
-        Scale::Small => (16, 96, 256),
-        Scale::Paper => (100, 500, 2000),
-    };
-    let h = if non_iid { 0.6 } else { 0.0 };
-    synth_text::generate_federation(&spec, clients, per_client, h, test_n, seed)
+    TextKind::Shakespeare.federation(non_iid, scale, seed)
+}
+
+/// The one artifact-fallback policy shared by every experiment: the AOT
+/// names when the manifest has the *complete* set, otherwise the built-in
+/// native set when complete, otherwise the AOT names again — so a load
+/// error points at the missing AOT artifact instead of a native name the
+/// manifest could never contain (e.g. a partially-built AOT manifest).
+pub fn resolve_artifact_set<'a>(ctx: &ExpCtx, aot: &[&'a str], native: &[&'a str]) -> Vec<&'a str> {
+    let have_all =
+        |names: &[&str]| names.iter().all(|n| ctx.engine.manifest.artifacts.contains_key(*n));
+    if have_all(aot) {
+        aot.to_vec()
+    } else if have_all(native) {
+        native.to_vec()
+    } else {
+        aot.to_vec()
+    }
+}
+
+/// Resolve the (original, low-rank, FedPara) LSTM artifact triple for the
+/// text experiments: the AOT `lstm_*` artifacts when the manifest has all
+/// of them, otherwise the built-in `native_lstm_*` recurrent backend —
+/// exactly as [`fig3::artifact_pair`] does for the CNN (both call
+/// [`resolve_artifact_set`]).
+///
+/// [`fig3::artifact_pair`]: crate::experiments::fig3::artifact_pair
+pub fn lstm_artifacts(ctx: &ExpCtx) -> (String, String, String) {
+    let picked = resolve_artifact_set(
+        ctx,
+        &["lstm_orig", "lstm_low", "lstm_fedpara"],
+        &["native_lstm_orig", "native_lstm_low", "native_lstm_fedpara"],
+    );
+    (picked[0].to_string(), picked[1].to_string(), picked[2].to_string())
 }
 
 /// Config preset mirroring Supp. Table 6 at the given scale.

@@ -34,24 +34,18 @@ fn orig_artifact(kind: VisionKind) -> &'static str {
 /// artifacts when the manifest has them, otherwise the built-in native
 /// Prop-3 CNN artifacts (same 16×16×3 shapes as the synthetic CIFAR/CINIC
 /// specs), so the paper's main scenario runs end-to-end with no Python and
-/// no XLA.
+/// no XLA. The prefer-AOT-else-native policy (including keeping the AOT
+/// names when neither set is complete, so load errors stay informative)
+/// lives in [`super::common::resolve_artifact_set`], shared with the text
+/// experiments' `lstm_artifacts`.
 pub fn artifact_pair(ctx: &ExpCtx, kind: VisionKind) -> (String, String) {
-    let have = |name: &str| ctx.engine.manifest.artifacts.contains_key(name);
     let (o, f) = (orig_artifact(kind), fedpara_artifact(kind));
     let (no, nf) = match kind {
         VisionKind::Cifar100 => ("native_cnn100_orig", "native_cnn100_fedpara"),
         _ => ("native_cnn10_orig", "native_cnn10_fedpara"),
     };
-    if have(o) && have(f) {
-        (o.to_string(), f.to_string())
-    } else if have(no) && have(nf) {
-        (no.to_string(), nf.to_string())
-    } else {
-        // Neither pair is complete (e.g. a partially-built AOT manifest):
-        // keep the AOT names so the load error points at the missing vgg
-        // artifact instead of a native name that manifest can't contain.
-        (o.to_string(), f.to_string())
-    }
+    let picked = super::common::resolve_artifact_set(ctx, &[o, f], &[no, nf]);
+    (picked[0].to_string(), picked[1].to_string())
 }
 
 pub fn panels(ctx: &ExpCtx) -> Result<Vec<(String, RunResult, RunResult)>> {

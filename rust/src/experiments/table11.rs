@@ -1,48 +1,71 @@
 //! Supp. Table 11: LSTM on Shakespeare* — original vs low-rank vs FedPara
 //! under IID and non-IID, with parameter ratios.
+//!
+//! Artifacts resolve through `common::lstm_artifacts`: the AOT `lstm_*`
+//! set when built, else the native recurrent backend's `native_lstm_*`
+//! built-ins. Rows whose artifact is missing from the manifest are skipped
+//! with an explicit warning (the seed silently used `unwrap_or(1)` for a
+//! missing original parameter count and printed nonsense ratios).
 
 use anyhow::Result;
 
-use super::common::{banner, preset, run_federation, text_federation, ExpCtx};
+use super::common::{
+    banner, lstm_artifacts, preset, run_federation, text_federation, ExpCtx, TextKind,
+};
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
     banner("table11", "Supp. Table 11", "LSTM ori/low/FedPara", ctx.scale);
-    let orig_params = ctx.engine.manifest.get("lstm_orig").map(|m| m.param_count).unwrap_or(1);
+    let (art_orig, art_low, art_fp) = lstm_artifacts(ctx);
     let rows = [
-        ("LSTM_ori", "lstm_orig"),
-        ("LSTM_low", "lstm_low"),
-        ("LSTM_FedPara (γ=0)", "lstm_fedpara"),
+        ("LSTM_ori", art_orig.clone()),
+        ("LSTM_low", art_low),
+        ("LSTM_FedPara (γ=0)", art_fp),
     ];
+    // Ratio denominator: the *actual* original parameter count. When the
+    // original artifact is unavailable, ratios are reported as "-" instead
+    // of being computed against a fabricated 1.
+    let orig_params = ctx.engine.manifest.get(&art_orig).ok().map(|m| m.param_count);
+    if orig_params.is_none() {
+        crate::log_warn!(
+            "table11: artifact '{art_orig}' not in manifest; parameter ratios will be skipped"
+        );
+    }
     let mut accs = std::collections::BTreeMap::new();
     for non_iid in [false, true] {
         let (locals, test) = text_federation(non_iid, ctx.scale, ctx.seed);
-        for (label, artifact) in rows {
-            let mut cfg = preset(ctx, artifact, 500, non_iid);
+        for (label, artifact) in &rows {
+            if !ctx.engine.manifest.artifacts.contains_key(artifact.as_str()) {
+                println!(
+                    "  WARNING: skipping {label}: artifact '{artifact}' is not in the \
+                     manifest (build the AOT lstm artifacts or use the native engine)"
+                );
+                continue;
+            }
+            let mut cfg = preset(ctx, artifact, TextKind::Shakespeare.paper_rounds(), non_iid);
             cfg.lr = 1.0;
             cfg.local_epochs = 1;
             let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
-            accs.insert((label, non_iid), (res.final_acc, res.param_count));
+            accs.insert((*label, non_iid), (res.final_acc, res.param_count));
         }
     }
     println!("{:<22} {:>10} {:>10} {:>14}", "model", "IID", "non-IID", "#params ratio");
     let mut doc = Vec::new();
-    for (label, _) in rows {
-        let (iid, pc) = accs[&(label, false)];
-        let (non, _) = accs[&(label, true)];
-        let ratio = pc as f64 / orig_params as f64;
-        println!(
-            "{:<22} {:>9.2}% {:>9.2}% {:>14.2}",
-            label,
-            iid * 100.0,
-            non * 100.0,
-            ratio
-        );
+    for (label, _) in &rows {
+        let (Some(&(iid, pc)), Some(&(non, _))) =
+            (accs.get(&(*label, false)), accs.get(&(*label, true)))
+        else {
+            continue; // Skipped above.
+        };
+        let ratio = orig_params.map(|op| pc as f64 / op as f64);
+        let ratio_str =
+            ratio.map(|r| format!("{r:>14.2}")).unwrap_or_else(|| format!("{:>14}", "-"));
+        println!("{:<22} {:>9.2}% {:>9.2}% {ratio_str}", label, iid * 100.0, non * 100.0);
         doc.push(Json::obj(vec![
-            ("model", Json::Str(label.into())),
+            ("model", Json::Str((*label).into())),
             ("acc_iid", Json::Num(iid)),
             ("acc_noniid", Json::Num(non)),
-            ("param_ratio", Json::Num(ratio)),
+            ("param_ratio", ratio.map(Json::Num).unwrap_or(Json::Null)),
         ]));
     }
     println!("(paper: FedPara > low at equal budget; ≈ original at ~19% params)");

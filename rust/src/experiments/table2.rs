@@ -6,8 +6,8 @@
 use anyhow::Result;
 
 use super::common::{
-    banner, preset, print_row, run_federation, text_federation, vision_federation, ExpCtx,
-    VisionKind,
+    banner, lstm_artifacts, preset, print_row, run_federation, text_federation, vision_federation,
+    ExpCtx, TextKind, VisionKind,
 };
 use crate::util::json::Json;
 
@@ -64,24 +64,26 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     let cnn_wins = fp_cols.iter().zip(low_cols.iter()).filter(|(f, l)| f > l).count();
     println!("  FedPara wins {cnn_wins}/{} CNN settings (paper: 6/6)", fp_cols.len());
 
-    // (b) LSTM.
-    println!("\n(b) RNN (CharLSTM) on Shakespeare*:");
+    // (b) LSTM — AOT artifacts when built, else the native recurrent
+    // backend (same fallback shape as fig3::artifact_pair for the CNN).
+    println!("\n(b) RNN (CharLSTM) on {}:", TextKind::Shakespeare.name());
+    let (_, art_low, art_fp) = lstm_artifacts(ctx);
     let mut lstm_rows = Vec::new();
     for non_iid in [false, true] {
         let (locals, test) = text_federation(non_iid, ctx.scale, ctx.seed);
-        for artifact in ["lstm_low", "lstm_fedpara"] {
-            let mut cfg = preset(ctx, artifact, 500, non_iid);
+        for artifact in [art_low.as_str(), art_fp.as_str()] {
+            let mut cfg = preset(ctx, artifact, TextKind::Shakespeare.paper_rounds(), non_iid);
             cfg.lr = 1.0; // Supp. Table 6: LSTM lr = 1.0, E = 1.
             cfg.local_epochs = 1;
             let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
-            lstm_rows.push((artifact, non_iid, res.final_acc));
+            lstm_rows.push((artifact.to_string(), non_iid, res.final_acc));
             results.push((format!("{artifact}_{}", if non_iid { "noniid" } else { "iid" }), res));
         }
     }
     println!("  {:<28} {:>8} {:>8}", "", "IID", "non-IID");
-    for name in ["lstm_low", "lstm_fedpara"] {
-        let iid = lstm_rows.iter().find(|(a, n, _)| *a == name && !n).unwrap().2;
-        let non = lstm_rows.iter().find(|(a, n, _)| *a == name && *n).unwrap().2;
+    for name in [art_low.as_str(), art_fp.as_str()] {
+        let iid = lstm_rows.iter().find(|(a, n, _)| a.as_str() == name && !n).unwrap().2;
+        let non = lstm_rows.iter().find(|(a, n, _)| a.as_str() == name && *n).unwrap().2;
         print_row(name, &[format!("{:>7.2}%", iid * 100.0), format!("{:>7.2}%", non * 100.0)]);
     }
 

@@ -17,4 +17,4 @@ pub mod layout;
 pub mod shapes;
 
 pub use layout::{Layout, Segment, SegmentKind};
-pub use shapes::{gamma_rank, r_max, r_min, LayerShape, Scheme};
+pub use shapes::{gamma_rank, lowrank_rank_for_budget, r_max, r_min, LayerShape, Scheme};

@@ -609,6 +609,46 @@ mod tests {
     }
 
     #[test]
+    fn native_lstm_artifact_trains_and_evals_per_position() {
+        let engine = Engine::native();
+        let orig = engine.load("native_lstm_orig").unwrap();
+        let low = engine.load("native_lstm_low").unwrap();
+        let rt = engine.load("native_lstm_fedpara").unwrap();
+        // Table 11 preconditions: FedPara transfers strictly fewer bytes
+        // than dense, and the low-rank baseline matches its budget.
+        assert!(rt.meta.global_len < orig.meta.param_count);
+        assert!(low.meta.param_count <= rt.meta.param_count);
+        assert_eq!(rt.meta.model, "lstm");
+        assert!(rt.meta.is_text);
+        let seq_len = rt.meta.train.feature_dim - 1;
+        assert_eq!(rt.meta.eval_denominator_per_batch, rt.meta.eval.batch * seq_len);
+
+        let mut rng = crate::util::rng::Rng::new(6);
+        let params = rt.meta.layout.init_params(&mut rng);
+        let t = rt.meta.train;
+        let n = t.samples_per_call();
+        let vocab = rt.meta.classes;
+        let x: Vec<f32> = (0..n * t.feature_dim).map(|_| rng.below(vocab) as f32).collect();
+        let y = vec![0f32; n];
+        let out = rt.train_epoch(&params, &x, &y, 0.5, None, None, 0.0).unwrap();
+        assert!(out.mean_loss.is_finite());
+        // Random symbols: initial per-position loss sits near ln(vocab).
+        assert!(out.mean_loss < 2.0 * (vocab as f32).ln());
+
+        let e = rt.meta.eval;
+        let ne = e.samples_per_call();
+        let ex: Vec<f32> = (0..ne * e.feature_dim).map(|_| rng.below(vocab) as f32).collect();
+        let ey = vec![0f32; ne];
+        let ev = rt.eval_call(&out.params, &ex, &ey).unwrap();
+        // Per-position denominator: every sample scores seq_len predictions.
+        assert_eq!(ev.denominator, (ne * seq_len) as f64);
+        assert!(ev.loss_sum.is_finite());
+        // Partial masking keeps the per-position denominator scaling.
+        let half = rt.eval_call_partial(&out.params, &ex, &ey, ne / 2).unwrap();
+        assert_eq!(half.denominator, (ne / 2 * seq_len) as f64);
+    }
+
+    #[test]
     fn native_engine_loads_and_trains() {
         let engine = Engine::native();
         let rt = engine.load("native_mlp10_orig").unwrap();

@@ -4,16 +4,23 @@
 //! this environment cannot provide. This module implements the same
 //! train/eval contract natively as a **layer-list executable**: a model is
 //! compiled to a sequence of [`LayerDesc`]s (fully-connected, 3×3
-//! same-padding conv2d, 2×2 max-pool) over one flat parameter vector, and
-//! forward/backward walk that list generically. Two model families are
-//! built on it:
+//! same-padding conv2d, 2×2 max-pool, symbol embedding, single-layer
+//! fused-gate LSTM) over one flat parameter vector, and forward/backward
+//! walk that list generically. Three model families are built on it:
 //!
-//! * the 2-FC MLP family (`python/compile/models.py::build_mlp`), and
+//! * the 2-FC MLP family (`python/compile/models.py::build_mlp`),
 //! * a VGG-style CNN (conv-conv-pool ×2 → FC head) for the CIFAR-like
 //!   vision specs — the paper's main communication-cost scenario
-//!   (Figure 3) at native-backend speed.
+//!   (Figure 3) at native-backend speed, and
+//! * a next-character LSTM (embed → LSTM over L steps → per-position FC
+//!   head) for the Shakespeare-like text specs — Table 2(b)/Table 11's
+//!   low-rank-vs-FedPara capacity comparison on recurrent weights.
 //!
-//! Each weight supports the `original`, `fedpara` and `pfedpara` schemes.
+//! Each weight supports the `original`, `fedpara` and `pfedpara` schemes;
+//! FC-shaped weights (the MLP/head layers and both LSTM gate matrices)
+//! additionally support the conventional `low`-rank baseline `W = X·Yᵀ`
+//! at a rank matched to the FedPara parameter budget (Table 2's
+//! equal-parameter comparison).
 //! FC weights factor as `W = (X1·Y1ᵀ) ⊙ (X2·Y2ᵀ)` (Prop. 1); conv kernels
 //! use the Proposition-3 low-rank Hadamard form **without reshape**:
 //!
@@ -41,7 +48,9 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::linalg::kernels::{col2im, im2col, matmul_nn, matmul_nt, matmul_nt_on, matmul_tn};
-use crate::parameterization::{gamma_rank, Layout, LayerShape, Segment, SegmentKind};
+use crate::parameterization::{
+    gamma_rank, lowrank_rank_for_budget, Layout, LayerShape, Segment, SegmentKind,
+};
 use crate::runtime::manifest::Backend;
 use crate::runtime::{ArtifactMeta, BatchShape, Manifest};
 use crate::util::threadpool::ThreadPool;
@@ -50,6 +59,15 @@ use crate::util::threadpool::ThreadPool;
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum NativeScheme {
     Original,
+    /// Conventional low-rank `W = X·Yᵀ` (Konečný et al. 2016-style), with
+    /// the rank chosen per layer to match the FedPara parameter budget at
+    /// the same γ as closely as possible without exceeding it — the
+    /// Table-2 "equal parameter count" baseline. The composed weight's
+    /// rank is capped at `r` (vs FedPara's `r²`, Prop. 2), which is the
+    /// capacity gap the text experiments exist to show. Implemented for FC
+    /// and LSTM gate weights; conv layers reject it (the AOT path serves
+    /// the conv low-rank baseline).
+    LowRank { gamma: f64 },
     /// FedPara low-rank Hadamard factors on every weight (Prop. 1 for FC,
     /// Prop. 3 for conv kernels).
     FedPara { gamma: f64 },
@@ -61,6 +79,7 @@ impl NativeScheme {
     pub fn name(&self) -> &'static str {
         match self {
             NativeScheme::Original => "original",
+            NativeScheme::LowRank { .. } => "low",
             NativeScheme::FedPara { .. } => "fedpara",
             NativeScheme::PFedPara { .. } => "pfedpara",
         }
@@ -69,7 +88,9 @@ impl NativeScheme {
     pub fn gamma(&self) -> f64 {
         match *self {
             NativeScheme::Original => 0.0,
-            NativeScheme::FedPara { gamma } | NativeScheme::PFedPara { gamma } => gamma,
+            NativeScheme::LowRank { gamma }
+            | NativeScheme::FedPara { gamma }
+            | NativeScheme::PFedPara { gamma } => gamma,
         }
     }
 }
@@ -83,6 +104,12 @@ pub enum NativeModel {
     /// `[conv3×3(c→f1), conv3×3(f1→f1), pool2] → [conv3×3(f1→f2),
     /// conv3×3(f2→f2), pool2] → FC head`. Requires `h, w ≡ 0 (mod 4)`.
     Cnn { h: usize, w: usize, c: usize, f1: usize, f2: usize, classes: usize },
+    /// Next-character LSTM on `seq_len + 1`-symbol samples (the LEAF
+    /// Shakespeare layout): `embed(vocab→embed) → single-layer LSTM
+    /// (hidden) over seq_len steps → per-position FC head (hidden→vocab)`.
+    /// Positions `0..L` are inputs, `1..L+1` the next-char targets; the
+    /// label column of the dataset is unused.
+    CharLstm { vocab: usize, seq_len: usize, embed: usize, hidden: usize },
 }
 
 /// A native model spec: architecture × parameterization scheme.
@@ -120,17 +147,32 @@ impl NativeSpec {
         NativeSpec { model: NativeModel::Cnn { h, w, c, f1, f2, classes }, scheme }
     }
 
+    /// The character-LSTM over `seq_len + 1`-symbol samples.
+    pub fn char_lstm(
+        vocab: usize,
+        seq_len: usize,
+        embed: usize,
+        hidden: usize,
+        scheme: NativeScheme,
+    ) -> NativeSpec {
+        assert!(vocab >= 2 && seq_len >= 1 && embed >= 1 && hidden >= 1);
+        NativeSpec { model: NativeModel::CharLstm { vocab, seq_len, embed, hidden }, scheme }
+    }
+
     /// Flat input feature count.
     pub fn in_dim(&self) -> usize {
         match self.model {
             NativeModel::Mlp { in_dim, .. } => in_dim,
             NativeModel::Cnn { h, w, c, .. } => h * w * c,
+            // One sample stores L inputs plus the trailing target symbol.
+            NativeModel::CharLstm { seq_len, .. } => seq_len + 1,
         }
     }
 
     pub fn classes(&self) -> usize {
         match self.model {
             NativeModel::Mlp { classes, .. } | NativeModel::Cnn { classes, .. } => classes,
+            NativeModel::CharLstm { vocab, .. } => vocab,
         }
     }
 
@@ -138,6 +180,21 @@ impl NativeSpec {
         match self.model {
             NativeModel::Mlp { .. } => "mlp",
             NativeModel::Cnn { .. } => "cnn",
+            NativeModel::CharLstm { .. } => "lstm",
+        }
+    }
+
+    /// Text models predict every sequence position, not one label.
+    pub fn is_text(&self) -> bool {
+        matches!(self.model, NativeModel::CharLstm { .. })
+    }
+
+    /// Predictions per sample (seq_len for text, 1 otherwise) — the eval
+    /// denominator scaling the manifest records.
+    pub fn preds_per_sample(&self) -> usize {
+        match self.model {
+            NativeModel::CharLstm { seq_len, .. } => seq_len,
+            _ => 1,
         }
     }
 }
@@ -146,10 +203,17 @@ impl NativeSpec {
 // Layer descriptors
 // ---------------------------------------------------------------------------
 
-/// How one FC weight lives in the flat vector.
+/// How one FC-shaped weight (`W ∈ R^{m×n}`; also the fused LSTM gate
+/// matrices) lives in the flat vector.
 #[derive(Clone, Debug)]
 enum FcParam {
     Dense { w: Range<usize> },
+    /// Conventional low-rank `W = X·Yᵀ`, rank-capped at `r`.
+    LowRank {
+        x: Range<usize>, // m × r
+        y: Range<usize>, // n × r
+        r: usize,
+    },
     Factored {
         x1: Range<usize>, // m × r
         y1: Range<usize>, // n × r
@@ -186,6 +250,9 @@ struct FcDesc {
     bias: Range<usize>,
     /// Relu after the affine map (false on the logits layer).
     relu: bool,
+    /// Input rows per sample: 1 for vision heads, `seq_len` for the
+    /// per-position text head (the affine map runs over `bsz · this` rows).
+    rows_per_sample: usize,
 }
 
 /// One 3×3 (generally k×k) same-padding, stride-1 conv layer over `h×w×i`
@@ -209,11 +276,43 @@ struct PoolDesc {
     w: usize,
 }
 
+/// Symbol-embedding lookup: positions `0..seq_len` of each `seq_len + 1`-
+/// symbol sample map through a dense `vocab × dim` table to a
+/// **time-major** `[seq_len·bsz, dim]` output (per-step slices of every
+/// downstream recurrent buffer stay contiguous that way). The table is
+/// dense under every scheme — it is tiny next to the gate matrices, and
+/// keeping it common across original/low/fedpara isolates the comparison
+/// to the recurrent weights.
+#[derive(Clone, Debug)]
+struct EmbedDesc {
+    vocab: usize,
+    dim: usize,
+    seq_len: usize,
+    table: Range<usize>,
+}
+
+/// Single-layer LSTM, truncated BPTT over `seq_len` steps, fused 4-gate
+/// weights in `[i|f|g|o]` row blocks: `W_ih ∈ R^{4h×e}`, `W_hh ∈ R^{4h×h}`,
+/// one fused bias `∈ R^{4h}`. Each gate matrix is independently
+/// parameterized (`FcParam`): dense, conventional low-rank, or the Prop-2
+/// FedPara form `W = (X1·Y1ᵀ) ⊙ (X2·Y2ᵀ)`.
+#[derive(Clone, Debug)]
+struct LstmDesc {
+    e: usize,
+    h: usize,
+    seq_len: usize,
+    w_ih: FcParam,
+    w_hh: FcParam,
+    bias: Range<usize>,
+}
+
 #[derive(Clone, Debug)]
 enum LayerDesc {
     Fc(FcDesc),
     Conv(ConvDesc),
     Pool2(PoolDesc),
+    Embed(EmbedDesc),
+    Lstm(LstmDesc),
 }
 
 /// Compiled native executable: layer list over one flat parameter vector.
@@ -255,11 +354,15 @@ impl SegBuilder {
 
 /// Per-segment init std so the *composed* FC weight has He variance
 /// (fedpara.py::segment_stds): each Hadamard half `W_j = X_j·Y_jᵀ` has
-/// element variance `r·s⁴` for iid factors of std `s`.
+/// element variance `r·s⁴` for iid factors of std `s`; a single low-rank
+/// product `W = X·Yᵀ` has variance `r·s⁴` too, but no second factor, so
+/// its `s` aims at the full target directly.
 fn factor_std(fan_in: usize, r: usize, scheme: NativeScheme) -> f64 {
     let target_var = 2.0 / fan_in.max(1) as f64;
     match scheme {
         NativeScheme::Original => target_var.sqrt(),
+        // var(W) = r·s⁴ = target.
+        NativeScheme::LowRank { .. } => (target_var / r as f64).powf(0.25),
         // var(W) = var(W1)·var(W2); aim var(W1) = var(W2) = √target.
         NativeScheme::FedPara { .. } => (target_var.sqrt() / r as f64).powf(0.25),
         // W ≈ W1 at init (local factors near zero).
@@ -283,18 +386,32 @@ fn conv_factor_std(fan_in: usize, r: usize, scheme: NativeScheme) -> f64 {
 
 const PFEDPARA_LOCAL_STD: f64 = 0.01;
 
-fn build_fc(
+/// Lay out one FC-shaped weight `W ∈ R^{m×n}` under `scheme` (shared by FC
+/// layers and the fused LSTM gate matrices). The low-rank baseline matches
+/// the FedPara parameter budget at the same γ as closely as possible
+/// without exceeding it (Table 2's equal-parameter comparison).
+fn build_fc_param(
     b: &mut SegBuilder,
     name: &str,
     m: usize,
     n: usize,
     scheme: NativeScheme,
-    relu: bool,
-) -> FcDesc {
-    let param = match scheme {
+) -> FcParam {
+    match scheme {
         NativeScheme::Original => FcParam::Dense {
             w: b.push(&format!("{name}.w"), m * n, SegmentKind::Global, factor_std(n, 1, scheme)),
         },
+        NativeScheme::LowRank { gamma } => {
+            let shape = LayerShape::Fc { m, n };
+            let budget = 2 * gamma_rank(shape, gamma) * (m + n); // FedPara count at this γ.
+            let r = lowrank_rank_for_budget(shape, budget).clamp(1, m.min(n));
+            let std = factor_std(n, r, scheme);
+            FcParam::LowRank {
+                x: b.push(&format!("{name}.x"), m * r, SegmentKind::Global, std),
+                y: b.push(&format!("{name}.y"), n * r, SegmentKind::Global, std),
+                r,
+            }
+        }
         NativeScheme::FedPara { gamma } | NativeScheme::PFedPara { gamma } => {
             let r = gamma_rank(LayerShape::Fc { m, n }, gamma);
             if 2 * r * (m + n) > m * n {
@@ -319,9 +436,20 @@ fn build_fc(
                 personalized,
             }
         }
-    };
+    }
+}
+
+fn build_fc(
+    b: &mut SegBuilder,
+    name: &str,
+    m: usize,
+    n: usize,
+    scheme: NativeScheme,
+    relu: bool,
+) -> FcDesc {
+    let param = build_fc_param(b, name, m, n, scheme);
     let bias = b.push(&format!("{name}_b.w"), m, SegmentKind::Global, 0.0);
-    FcDesc { m, n, param, bias, relu }
+    FcDesc { m, n, param, bias, relu, rows_per_sample: 1 }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -338,6 +466,11 @@ fn build_conv(
     let kk = k * k;
     let shape = LayerShape::Conv { o, i, k1: k, k2: k };
     let param = match scheme {
+        NativeScheme::LowRank { .. } => panic!(
+            "conv '{name}': NativeScheme::LowRank is implemented for FC/LSTM weights \
+             (the Table-2 text scenario); conv layers support original/fedpara/pfedpara \
+             (the AOT vgg*_low_* artifacts serve the conv low-rank baseline)"
+        ),
         NativeScheme::Original => ConvParam::Dense {
             w: b.push(
                 &format!("{name}.w"),
@@ -400,6 +533,22 @@ fn build_layers(spec: NativeSpec) -> (Vec<LayerDesc>, Vec<Segment>, usize) {
             let head_in = f2 * (h / 4) * (w / 4);
             layers.push(LayerDesc::Fc(build_fc(&mut b, "head", classes, head_in, spec.scheme, false)));
         }
+        NativeModel::CharLstm { vocab, seq_len, embed, hidden } => {
+            // Dense embedding table under every scheme; std 0.5 keeps the
+            // He-initialized gate pre-activations near unit variance
+            // (var(z) ≈ e·(2/e)·var(x) = 0.5 from the input path).
+            let table = b.push("embed.w", vocab * embed, SegmentKind::Global, 0.5);
+            layers.push(LayerDesc::Embed(EmbedDesc { vocab, dim: embed, seq_len, table }));
+            let g4 = 4 * hidden;
+            let w_ih = build_fc_param(&mut b, "lstm_ih", g4, embed, spec.scheme);
+            let w_hh = build_fc_param(&mut b, "lstm_hh", g4, hidden, spec.scheme);
+            let bias = b.push("lstm_b.w", g4, SegmentKind::Global, 0.0);
+            let lstm = LstmDesc { e: embed, h: hidden, seq_len, w_ih, w_hh, bias };
+            layers.push(LayerDesc::Lstm(lstm));
+            let mut head = build_fc(&mut b, "head", vocab, hidden, spec.scheme, false);
+            head.rows_per_sample = seq_len; // One prediction per position.
+            layers.push(LayerDesc::Fc(head));
+        }
     }
     (layers, b.segs, b.offset)
 }
@@ -449,21 +598,30 @@ pub fn artifact(name: &str, spec: NativeSpec, train: BatchShape, eval: BatchShap
         variant: "plain".to_string(),
         gamma: spec.scheme.gamma(),
         classes: spec.classes(),
-        is_text: false,
-        eval_denominator_per_batch: eval.batch,
+        is_text: spec.is_text(),
+        // Text models predict every position of every sample.
+        eval_denominator_per_batch: eval.batch * spec.preds_per_sample(),
     }
 }
 
-/// The built-in native artifact set: MNIST-like MLPs (hidden 64) plus the
+/// The built-in native artifact set: MNIST-like MLPs (hidden 64), the
 /// CIFAR-like VGG-mini CNNs (16×16×3, f1=8, f2=16) under original and
-/// Prop-3 FedPara parameterizations. These are what tests, benches and
-/// offline runs use when the AOT artifacts have not been built.
+/// Prop-3 FedPara parameterizations, and the Shakespeare-like character
+/// LSTMs (vocab 80, L=48, embed 16, hidden 32) under original /
+/// budget-matched low-rank / Prop-2 FedPara (γ=0, the Supp. Table 11
+/// setting). These are what tests, benches and offline runs use when the
+/// AOT artifacts have not been built.
 pub fn default_artifacts() -> Vec<ArtifactMeta> {
     let train = BatchShape { nbatches: 4, batch: 32, feature_dim: 784 };
     let eval = BatchShape { nbatches: 4, batch: 64, feature_dim: 784 };
     let ctrain = BatchShape { nbatches: 2, batch: 16, feature_dim: 768 };
     let ceval = BatchShape { nbatches: 2, batch: 32, feature_dim: 768 };
+    let tspec = crate::data::synth_text::shakespeare_like();
+    let tdim = tspec.seq_len + 1;
+    let ttrain = BatchShape { nbatches: 2, batch: 16, feature_dim: tdim };
+    let teval = BatchShape { nbatches: 2, batch: 32, feature_dim: tdim };
     let cnn = |classes, scheme| NativeSpec::cnn(16, 16, 3, 8, 16, classes, scheme);
+    let lstm = |scheme| NativeSpec::char_lstm(tspec.vocab, tspec.seq_len, 16, 32, scheme);
     vec![
         artifact("native_mlp10_orig", NativeSpec::mlp(10, 64, NativeScheme::Original), train, eval),
         artifact(
@@ -492,6 +650,14 @@ pub fn default_artifacts() -> Vec<ArtifactMeta> {
             ctrain,
             ceval,
         ),
+        artifact("native_lstm_orig", lstm(NativeScheme::Original), ttrain, teval),
+        artifact("native_lstm_low", lstm(NativeScheme::LowRank { gamma: 0.0 }), ttrain, teval),
+        artifact(
+            "native_lstm_fedpara",
+            lstm(NativeScheme::FedPara { gamma: 0.0 }),
+            ttrain,
+            teval,
+        ),
     ]
 }
 
@@ -515,11 +681,12 @@ fn ensure<T: Copy + Default>(v: &mut Vec<T>, n: usize) {
 
 /// Per-layer scratch: the composed weight (plus the Hadamard halves and
 /// Tucker caches backward needs) and the forward tape (conv im2col matrix,
-/// pool argmax indices).
+/// pool argmax indices, LSTM step caches).
 #[derive(Clone, Default)]
 struct LayerBufs {
-    /// Composed weight (`[m,n]` FC / `[O, I·K²]` conv) for factored
-    /// layers. Dense layers alias the parameter vector via `dense`.
+    /// Composed weight (`[m,n]` FC / `[O, I·K²]` conv / `[4h,e]` LSTM
+    /// `W_ih`) for factored layers. Dense layers alias the parameter
+    /// vector via `dense`.
     w: Vec<f32>,
     dense: Option<Range<usize>>,
     /// Hadamard halves `W1`/`W2` (factored layers only).
@@ -532,16 +699,34 @@ struct LayerBufs {
     cols: Vec<f32>,
     /// Pool tape: flat input index of each output element's argmax.
     idx: Vec<u32>,
+    /// Second composed weight (LSTM `W_hh ∈ [4h,h]`) and its halves.
+    wh: Vec<f32>,
+    dense_h: Option<Range<usize>>,
+    w1h: Vec<f32>,
+    w2h: Vec<f32>,
+    /// LSTM tape (all time-major): activated gates `[L·bsz, 4h]` in
+    /// `[i|f|g|o]` blocks, cell/hidden chains `[(L+1)·bsz, h]`
+    /// (slot 0 = the zero initial state), `tanh(c_t)` `[L·bsz, h]`, and
+    /// the per-step recurrent projection staging `[bsz, 4h]`.
+    gates: Vec<f32>,
+    cells: Vec<f32>,
+    hs: Vec<f32>,
+    tanhc: Vec<f32>,
+    rec: Vec<f32>,
+}
+
+/// The composed weight for one `(dense, w)` pair: the arena buffer, or the
+/// parameter slice itself for dense weights (no copy).
+fn weight_of<'a>(dense: &Option<Range<usize>>, w: &'a [f32], params: &'a [f32]) -> &'a [f32] {
+    match dense {
+        Some(r) => &params[r.clone()],
+        None => w,
+    }
 }
 
 impl LayerBufs {
-    /// The composed weight: the arena buffer, or the parameter slice
-    /// itself for dense layers (no copy).
     fn weight<'a>(&'a self, params: &'a [f32]) -> &'a [f32] {
-        match &self.dense {
-            Some(r) => &params[r.clone()],
-            None => &self.w,
-        }
+        weight_of(&self.dense, &self.w, params)
     }
 }
 
@@ -572,6 +757,11 @@ pub struct Workspace {
     gy: Vec<f32>,
     gt: Vec<f32>,
     tmp: Vec<f32>,
+    /// BPTT temporaries: pre-activation gate gradients `[L·bsz, 4h]` and
+    /// the carried hidden/cell gradients `[bsz, h]`.
+    dz: Vec<f32>,
+    dh: Vec<f32>,
+    dc: Vec<f32>,
     /// Flat parameter gradient of the last backward pass.
     grad: Vec<f32>,
     /// Optional intra-op pool for row-blocked forward GEMMs on large
@@ -603,6 +793,9 @@ struct GradScratch<'a> {
     gy: &'a mut Vec<f32>,
     gt: &'a mut Vec<f32>,
     tmp: &'a mut Vec<f32>,
+    dz: &'a mut Vec<f32>,
+    dh: &'a mut Vec<f32>,
+    dc: &'a mut Vec<f32>,
 }
 
 // ---------------------------------------------------------------------------
@@ -623,20 +816,48 @@ fn hadamard_into(w1: &[f32], w2: &[f32], personalized: bool, w: &mut [f32]) {
     }
 }
 
-fn compose_fc_ws(desc: &FcDesc, params: &[f32], lb: &mut LayerBufs) {
-    let (m, n) = (desc.m, desc.n);
-    match &desc.param {
-        FcParam::Dense { w } => lb.dense = Some(w.clone()),
+/// Compose one FC-shaped weight into its `(dense, w, w1, w2)` arena slots
+/// (shared by FC layers and both LSTM gate matrices).
+#[allow(clippy::too_many_arguments)]
+fn compose_fcparam(
+    param: &FcParam,
+    m: usize,
+    n: usize,
+    params: &[f32],
+    w: &mut Vec<f32>,
+    w1: &mut Vec<f32>,
+    w2: &mut Vec<f32>,
+    dense: &mut Option<Range<usize>>,
+) {
+    match param {
+        FcParam::Dense { w: range } => *dense = Some(range.clone()),
+        FcParam::LowRank { x, y, r } => {
+            *dense = None;
+            ensure(w, m * n);
+            matmul_nt(&params[x.clone()], &params[y.clone()], m, *r, n, w);
+        }
         FcParam::Factored { x1, y1, x2, y2, r, personalized } => {
-            lb.dense = None;
-            ensure(&mut lb.w1, m * n);
-            ensure(&mut lb.w2, m * n);
-            ensure(&mut lb.w, m * n);
-            matmul_nt(&params[x1.clone()], &params[y1.clone()], m, *r, n, &mut lb.w1);
-            matmul_nt(&params[x2.clone()], &params[y2.clone()], m, *r, n, &mut lb.w2);
-            hadamard_into(&lb.w1, &lb.w2, *personalized, &mut lb.w);
+            *dense = None;
+            ensure(w1, m * n);
+            ensure(w2, m * n);
+            ensure(w, m * n);
+            matmul_nt(&params[x1.clone()], &params[y1.clone()], m, *r, n, w1);
+            matmul_nt(&params[x2.clone()], &params[y2.clone()], m, *r, n, w2);
+            hadamard_into(w1, w2, *personalized, w);
         }
     }
+}
+
+fn compose_fc_ws(desc: &FcDesc, params: &[f32], lb: &mut LayerBufs) {
+    let LayerBufs { w, w1, w2, dense, .. } = lb;
+    compose_fcparam(&desc.param, desc.m, desc.n, params, w, w1, w2, dense);
+}
+
+fn compose_lstm_ws(desc: &LstmDesc, params: &[f32], lb: &mut LayerBufs) {
+    let g4 = 4 * desc.h;
+    let LayerBufs { w, w1, w2, dense, wh, w1h, w2h, dense_h, .. } = lb;
+    compose_fcparam(&desc.w_ih, g4, desc.e, params, w, w1, w2, dense);
+    compose_fcparam(&desc.w_hh, g4, desc.h, params, wh, w1h, w2h, dense_h);
 }
 
 /// One Tucker-2 half of the Prop-3 composition: `W = 𝒯 ×₁ X ×₂ Y`
@@ -724,20 +945,30 @@ fn hadamard_grad_split(
     }
 }
 
-/// Scatter `s.dw` into the flat gradient, applying the chain rule through
-/// the Hadamard factorization when the layer is factored (paper Eq. 6).
-fn scatter_fc_grad_ws(
-    desc: &FcDesc,
-    lb: &LayerBufs,
+/// Scatter the composed-weight gradient `s.dw` of one FC-shaped weight
+/// into the flat gradient, applying the chain rule through the low-rank
+/// product or the Hadamard factorization (paper Eq. 6). `w1`/`w2` are the
+/// weight's composed Hadamard halves (unused for dense/low-rank).
+#[allow(clippy::too_many_arguments)]
+fn scatter_fcparam_grad(
+    param: &FcParam,
+    m: usize,
+    n: usize,
+    w1: &[f32],
+    w2: &[f32],
     params: &[f32],
     grad: &mut [f32],
     s: &mut GradScratch,
 ) {
-    let (m, n) = (desc.m, desc.n);
-    match &desc.param {
+    match param {
         FcParam::Dense { w } => grad[w.clone()].copy_from_slice(s.dw),
+        FcParam::LowRank { x, y, r } => {
+            // dX = dW·Y, dY = dWᵀ·X.
+            matmul_nn(s.dw, &params[y.clone()], m, n, *r, &mut grad[x.clone()]);
+            matmul_tn(s.dw, &params[x.clone()], m, n, *r, &mut grad[y.clone()]);
+        }
         FcParam::Factored { x1, y1, x2, y2, r, personalized } => {
-            hadamard_grad_split(s.dw, &lb.w1, &lb.w2, *personalized, s.dw1, s.dw2);
+            hadamard_grad_split(s.dw, w1, w2, *personalized, s.dw1, s.dw2);
             // dX1 = dW1·Y1, dY1 = dW1ᵀ·X1 (and likewise for the 2nd factor).
             matmul_nn(s.dw1, &params[y1.clone()], m, n, *r, &mut grad[x1.clone()]);
             matmul_tn(s.dw1, &params[x1.clone()], m, n, *r, &mut grad[y1.clone()]);
@@ -745,6 +976,16 @@ fn scatter_fc_grad_ws(
             matmul_tn(s.dw2, &params[x2.clone()], m, n, *r, &mut grad[y2.clone()]);
         }
     }
+}
+
+fn scatter_fc_grad_ws(
+    desc: &FcDesc,
+    lb: &LayerBufs,
+    params: &[f32],
+    grad: &mut [f32],
+    s: &mut GradScratch,
+) {
+    scatter_fcparam_grad(&desc.param, desc.m, desc.n, &lb.w1, &lb.w2, params, grad, s);
 }
 
 /// Factor gradients of one Tucker-2 half into `gx`/`gy`/`gt`. Given
@@ -859,10 +1100,11 @@ fn forward_fc_ws(
     pool: Option<&ThreadPool>,
 ) {
     let (m, n) = (desc.m, desc.n);
-    ensure(out, bsz * m);
-    matmul_nt_on(pool, input, lb.weight(params), bsz, n, m, out);
+    let rows = bsz * desc.rows_per_sample;
+    ensure(out, rows * m);
+    matmul_nt_on(pool, input, lb.weight(params), rows, n, m, out);
     let bias = &params[desc.bias.clone()];
-    for b in 0..bsz {
+    for b in 0..rows {
         let or = &mut out[b * m..(b + 1) * m];
         for (v, &bv) in or.iter_mut().zip(bias) {
             *v += bv;
@@ -875,6 +1117,103 @@ fn forward_fc_ws(
             }
         }
     }
+}
+
+/// Embedding lookup: `input = [bsz, L+1]` symbol ids (positions `0..L`
+/// consumed), `out = [L·bsz, dim]` time-major.
+fn forward_embed_ws(
+    desc: &EmbedDesc,
+    params: &[f32],
+    input: &[f32],
+    out: &mut Vec<f32>,
+    bsz: usize,
+) {
+    let (e, l) = (desc.dim, desc.seq_len);
+    ensure(out, l * bsz * e);
+    let table = &params[desc.table.clone()];
+    for t in 0..l {
+        for b in 0..bsz {
+            let sym = (input[b * (l + 1) + t] as usize).min(desc.vocab - 1);
+            out[(t * bsz + b) * e..(t * bsz + b + 1) * e]
+                .copy_from_slice(&table[sym * e..(sym + 1) * e]);
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// LSTM forward over `seq_len` steps. The input projection
+/// `X·W_ihᵀ ∈ [L·bsz, 4h]` runs as one big GEMM (time-major rows make each
+/// step's slice contiguous); each step then adds the recurrent projection
+/// `h_{t-1}·W_hhᵀ` plus bias and applies the gates
+/// `c_t = σ(f)⊙c_{t-1} + σ(i)⊙tanh(g)`, `h_t = σ(o)⊙tanh(c_t)`. The tape
+/// keeps the **activated** gates (their derivatives are recovered from the
+/// activations in backward), the cell/hidden chains and `tanh(c_t)`.
+/// Output: `[L·bsz, h]` — every step's hidden state, feeding the
+/// per-position head.
+fn forward_lstm_ws(
+    desc: &LstmDesc,
+    lb: &mut LayerBufs,
+    params: &[f32],
+    input: &[f32],
+    out: &mut Vec<f32>,
+    bsz: usize,
+    pool: Option<&ThreadPool>,
+) {
+    let (e, h, l) = (desc.e, desc.h, desc.seq_len);
+    let g4 = 4 * h;
+    let rows = l * bsz;
+    let LayerBufs { w, dense, wh, dense_h, gates, cells, hs, tanhc, rec, .. } = lb;
+    let w_ih = weight_of(dense, w, params);
+    let w_hh = weight_of(dense_h, wh, params);
+    ensure(gates, rows * g4);
+    matmul_nt_on(pool, input, w_ih, rows, e, g4, gates);
+    ensure(hs, (l + 1) * bsz * h);
+    ensure(cells, (l + 1) * bsz * h);
+    ensure(tanhc, rows * h);
+    ensure(rec, bsz * g4);
+    hs[..bsz * h].fill(0.0);
+    cells[..bsz * h].fill(0.0);
+    let bias = &params[desc.bias.clone()];
+    for t in 0..l {
+        let (h_past, h_future) = hs.split_at_mut((t + 1) * bsz * h);
+        let h_prev = &h_past[t * bsz * h..];
+        let h_next = &mut h_future[..bsz * h];
+        let (c_past, c_future) = cells.split_at_mut((t + 1) * bsz * h);
+        let c_prev = &c_past[t * bsz * h..];
+        let c_next = &mut c_future[..bsz * h];
+        let tc_t = &mut tanhc[t * bsz * h..(t + 1) * bsz * h];
+        // rec = h_{t-1} · W_hhᵀ — serial: per-step GEMMs are small.
+        matmul_nt(h_prev, w_hh, bsz, h, g4, rec);
+        let zt = &mut gates[t * bsz * g4..(t + 1) * bsz * g4];
+        for b in 0..bsz {
+            let zr = &mut zt[b * g4..(b + 1) * g4];
+            let rr = &rec[b * g4..(b + 1) * g4];
+            for ((zv, &rv), &bv) in zr.iter_mut().zip(rr).zip(bias) {
+                *zv += rv + bv;
+            }
+            for j in 0..h {
+                let i = sigmoid(zr[j]);
+                let f = sigmoid(zr[h + j]);
+                let g = zr[2 * h + j].tanh();
+                let o = sigmoid(zr[3 * h + j]);
+                zr[j] = i;
+                zr[h + j] = f;
+                zr[2 * h + j] = g;
+                zr[3 * h + j] = o;
+                let c = f * c_prev[b * h + j] + i * g;
+                let tc = c.tanh();
+                c_next[b * h + j] = c;
+                tc_t[b * h + j] = tc;
+                h_next[b * h + j] = o * tc;
+            }
+        }
+    }
+    ensure(out, rows * h);
+    out.copy_from_slice(&hs[bsz * h..]);
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -964,6 +1303,7 @@ fn backward_fc_ws(
     need_dx: bool,
 ) {
     let (m, n) = (desc.m, desc.n);
+    let rows = bsz * desc.rows_per_sample;
     if desc.relu {
         // Relu mask from the stored output: out > 0 ⟺ pre > 0.
         for (dv, &ov) in d.iter_mut().zip(output) {
@@ -974,19 +1314,114 @@ fn backward_fc_ws(
     }
     for j in 0..m {
         let mut acc = 0f32;
-        for b in 0..bsz {
+        for b in 0..rows {
             acc += d[b * m + j];
         }
         grad[desc.bias.start + j] = acc;
     }
     ensure(s.dw, m * n);
-    matmul_tn(d, input, bsz, m, n, s.dw);
+    matmul_tn(d, input, rows, m, n, s.dw);
     scatter_fc_grad_ws(desc, lb, params, grad, s);
     if need_dx {
-        ensure(d_next, bsz * n);
-        matmul_nn(d, lb.weight(params), bsz, m, n, d_next);
+        ensure(d_next, rows * n);
+        matmul_nn(d, lb.weight(params), rows, m, n, d_next);
     }
     // Else: first layer — nothing upstream consumes the input gradient.
+}
+
+/// Embedding backward: scatter-add each position's `[dim]` gradient row
+/// onto its symbol's table row. `grad` was zero-filled by the caller, and
+/// the `(t, b)` iteration order is fixed, so results are deterministic.
+fn backward_embed_ws(desc: &EmbedDesc, input: &[f32], d: &[f32], bsz: usize, grad: &mut [f32]) {
+    let (e, l) = (desc.dim, desc.seq_len);
+    for t in 0..l {
+        for b in 0..bsz {
+            let sym = (input[b * (l + 1) + t] as usize).min(desc.vocab - 1);
+            let drow = &d[(t * bsz + b) * e..(t * bsz + b + 1) * e];
+            let dst = &mut grad[desc.table.start + sym * e..desc.table.start + (sym + 1) * e];
+            for (gv, &dv) in dst.iter_mut().zip(drow) {
+                *gv += dv;
+            }
+        }
+    }
+}
+
+/// Truncated BPTT over the forward tape. The per-step loop only computes
+/// the pre-activation gate gradients (from the stored *activated* gates:
+/// `σ' = s(1−s)`, `tanh' = 1−t²`) and carries `dh`/`dc` backwards through
+/// `W_hh`; the big weight/input contractions then run as single GEMMs over
+/// all `L·bsz` rows:
+///
+/// ```text
+/// dW_ih = dZᵀ·X,  dW_hh = dZᵀ·H_prev,  db = colsum(dZ),  dX = dZ·W_ih
+/// ```
+///
+/// where `H_prev = hs[0..L]` is exactly the time-major stack of each row's
+/// previous hidden state.
+#[allow(clippy::too_many_arguments)]
+fn backward_lstm_ws(
+    desc: &LstmDesc,
+    lb: &LayerBufs,
+    params: &[f32],
+    input: &[f32],
+    d: &[f32],
+    d_next: &mut Vec<f32>,
+    bsz: usize,
+    grad: &mut [f32],
+    s: &mut GradScratch,
+    need_dx: bool,
+) {
+    let (e, h, l) = (desc.e, desc.h, desc.seq_len);
+    let g4 = 4 * h;
+    let rows = l * bsz;
+    let w_hh = weight_of(&lb.dense_h, &lb.wh, params);
+    ensure(s.dz, rows * g4);
+    ensure(s.dh, bsz * h);
+    s.dh.fill(0.0);
+    ensure(s.dc, bsz * h);
+    s.dc.fill(0.0);
+    for t in (0..l).rev() {
+        let gt = &lb.gates[t * bsz * g4..(t + 1) * bsz * g4];
+        let tct = &lb.tanhc[t * bsz * h..(t + 1) * bsz * h];
+        let c_prev = &lb.cells[t * bsz * h..(t + 1) * bsz * h];
+        let dzt = &mut s.dz[t * bsz * g4..(t + 1) * bsz * g4];
+        for b in 0..bsz {
+            let zr = &gt[b * g4..(b + 1) * g4];
+            let dzr = &mut dzt[b * g4..(b + 1) * g4];
+            for j in 0..h {
+                let (i, f, g, o) = (zr[j], zr[h + j], zr[2 * h + j], zr[3 * h + j]);
+                let tc = tct[b * h + j];
+                // Head gradient for this position + the carry from t+1.
+                let dht = d[(t * bsz + b) * h + j] + s.dh[b * h + j];
+                let dcv = dht * o * (1.0 - tc * tc) + s.dc[b * h + j];
+                dzr[j] = dcv * g * i * (1.0 - i);
+                dzr[h + j] = dcv * c_prev[b * h + j] * f * (1.0 - f);
+                dzr[2 * h + j] = dcv * i * (1.0 - g * g);
+                dzr[3 * h + j] = dht * tc * o * (1.0 - o);
+                s.dc[b * h + j] = dcv * f;
+            }
+        }
+        // dh_{t-1} = dz_t · W_hh (fully overwrites the carry).
+        matmul_nn(dzt, w_hh, bsz, g4, h, s.dh);
+    }
+    for q in 0..g4 {
+        let mut acc = 0f32;
+        for row in 0..rows {
+            acc += s.dz[row * g4 + q];
+        }
+        grad[desc.bias.start + q] = acc;
+    }
+    ensure(s.dw, g4 * e);
+    matmul_tn(s.dz, input, rows, g4, e, s.dw);
+    scatter_fcparam_grad(&desc.w_ih, g4, e, &lb.w1, &lb.w2, params, grad, s);
+    ensure(s.dw, g4 * h);
+    matmul_tn(s.dz, &lb.hs[..rows * h], rows, g4, h, s.dw);
+    scatter_fcparam_grad(&desc.w_hh, g4, h, &lb.w1h, &lb.w2h, params, grad, s);
+    if need_dx {
+        let w_ih = weight_of(&lb.dense, &lb.w, params);
+        ensure(d_next, rows * e);
+        matmul_nn(s.dz, w_ih, rows, g4, e, d_next);
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1058,8 +1493,19 @@ impl NativeExec {
             gy: Vec::new(),
             gt: Vec::new(),
             tmp: Vec::new(),
+            dz: Vec::new(),
+            dh: Vec::new(),
+            dc: Vec::new(),
             grad: Vec::new(),
             pool: None,
+        }
+    }
+
+    /// Sequence length when this executable is a text model.
+    fn text_len(&self) -> Option<usize> {
+        match self.spec.model {
+            NativeModel::CharLstm { seq_len, .. } => Some(seq_len),
+            _ => None,
         }
     }
 
@@ -1071,7 +1517,8 @@ impl NativeExec {
             match desc {
                 LayerDesc::Fc(d) => compose_fc_ws(d, params, &mut ws.layer[l]),
                 LayerDesc::Conv(d) => compose_conv_ws(d, params, &mut ws.layer[l]),
-                LayerDesc::Pool2(_) => {}
+                LayerDesc::Lstm(d) => compose_lstm_ws(d, params, &mut ws.layer[l]),
+                LayerDesc::Pool2(_) | LayerDesc::Embed(_) => {}
             }
         }
     }
@@ -1097,6 +1544,10 @@ impl NativeExec {
                     let lb = &mut layer[l];
                     forward_pool_ws(d, input, out, &mut lb.idx, bsz)
                 }
+                LayerDesc::Embed(d) => forward_embed_ws(d, params, input, out, bsz),
+                LayerDesc::Lstm(d) => {
+                    forward_lstm_ws(d, &mut layer[l], params, input, out, bsz, pool)
+                }
             }
         }
     }
@@ -1114,37 +1565,48 @@ impl NativeExec {
         self.compose_ws(ws, params);
         self.forward_ws(ws, params, xb, bsz);
         let c = self.classes;
+        let text_l = self.text_len();
         let Workspace {
-            acts, layer, d_a, d_b, dw, dw1, dw2, dcols, v, gx, gy, gt, tmp, grad, ..
+            acts, layer, d_a, d_b, dw, dw1, dw2, dcols, v, gx, gy, gt, tmp, dz, dh, dc, grad, ..
         } = ws;
         let z = acts.last().expect("logits").as_slice();
 
-        // Softmax cross-entropy: loss mean over the batch; dz = (p − 1_y)/B.
-        let inv_b = 1.0 / bsz as f32;
-        ensure(d_a, bsz * c);
+        // Softmax cross-entropy, mean over every prediction — one per
+        // sample for vision (labels from `yb`), one per position for text
+        // (next-char targets read from `xb` itself; `yb` is unused there).
+        // Text logits are time-major: row `t·bsz + b` is sample b, step t.
+        let rows = bsz * text_l.unwrap_or(1);
+        let inv = 1.0 / rows as f32;
+        ensure(d_a, rows * c);
         let mut loss = 0f32;
-        for b in 0..bsz {
-            let zb = &z[b * c..(b + 1) * c];
-            let label = (yb[b] as usize).min(c - 1);
+        for row in 0..rows {
+            let label = match text_l {
+                Some(l) => {
+                    let (t, b) = (row / bsz, row % bsz);
+                    (xb[b * (l + 1) + t + 1] as usize).min(c - 1)
+                }
+                None => (yb[row] as usize).min(c - 1),
+            };
+            let zb = &z[row * c..(row + 1) * c];
             let maxv = zb.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let mut sum = 0f32;
             for k in 0..c {
                 sum += (zb[k] - maxv).exp();
             }
             loss += sum.ln() + maxv - zb[label];
-            let dzb = &mut d_a[b * c..(b + 1) * c];
+            let dzb = &mut d_a[row * c..(row + 1) * c];
             for k in 0..c {
-                dzb[k] = (zb[k] - maxv).exp() / sum * inv_b;
+                dzb[k] = (zb[k] - maxv).exp() / sum * inv;
             }
-            dzb[label] -= inv_b;
+            dzb[label] -= inv;
         }
-        loss *= inv_b;
+        loss *= inv;
 
         // Backward through the layer list. The first layer's input
         // gradient has no consumer, so its dx computation is skipped.
         ensure(grad, self.total);
         grad.fill(0.0);
-        let mut s = GradScratch { dw, dw1, dw2, dcols, v, gx, gy, gt, tmp };
+        let mut s = GradScratch { dw, dw1, dw2, dcols, v, gx, gy, gt, tmp, dz, dh, dc };
         for l in (0..self.layers.len()).rev() {
             let need_dx = l > 0;
             let lb = &layer[l];
@@ -1175,6 +1637,19 @@ impl NativeExec {
                     need_dx,
                 ),
                 LayerDesc::Pool2(desc) => backward_pool_ws(desc, &lb.idx, d_a, bsz, d_b),
+                LayerDesc::Embed(desc) => backward_embed_ws(desc, &acts[l], d_a, bsz, grad),
+                LayerDesc::Lstm(desc) => backward_lstm_ws(
+                    desc,
+                    lb,
+                    params,
+                    &acts[l],
+                    d_a,
+                    d_b,
+                    bsz,
+                    grad,
+                    &mut s,
+                    need_dx,
+                ),
             }
             if need_dx {
                 std::mem::swap(d_a, d_b);
@@ -1295,9 +1770,19 @@ impl NativeExec {
             let yb = &y[bb * bsz..bb * bsz + take];
             self.forward_ws(ws, params, xb, take);
             let z = ws.acts.last().expect("logits");
-            for b in 0..take {
-                let zb = &z[b * c..(b + 1) * c];
-                let label = (yb[b] as usize).min(c - 1);
+            // Text models score every position (rows are time-major);
+            // vision models score one row per sample.
+            let text_l = self.text_len();
+            let rows = take * text_l.unwrap_or(1);
+            for row in 0..rows {
+                let label = match text_l {
+                    Some(l) => {
+                        let (t, b) = (row / take, row % take);
+                        (xb[b * (l + 1) + t + 1] as usize).min(c - 1)
+                    }
+                    None => (yb[row] as usize).min(c - 1),
+                };
+                let zb = &z[row * c..(row + 1) * c];
                 // argmax with first-max tie-breaking (jnp.argmax semantics).
                 let mut best = 0usize;
                 for k in 1..c {
@@ -1348,11 +1833,9 @@ impl NativeExec {
             match desc {
                 LayerDesc::Fc(d) => {
                     let (m, n) = (d.m as f64, d.n as f64);
-                    per_batch += 2.0 * bsz * m * n * passes;
-                    if let FcParam::Factored { r, .. } = &d.param {
-                        // Compose both halves + 4 factor-grad contractions.
-                        per_batch += 6.0 * 2.0 * m * n * *r as f64;
-                    }
+                    let rows = bsz * d.rows_per_sample as f64;
+                    per_batch += 2.0 * rows * m * n * passes;
+                    per_batch += fcparam_flops(&d.param, m, n);
                 }
                 LayerDesc::Conv(d) => {
                     let (o, i, kk) = (d.o as f64, d.i as f64, (d.k * d.k) as f64);
@@ -1367,10 +1850,37 @@ impl NativeExec {
                         per_batch += (2.0 + 6.0) * half;
                     }
                 }
-                LayerDesc::Pool2(_) => {}
+                LayerDesc::Pool2(_) | LayerDesc::Embed(_) => {} // Lookup/scatter: ≪1%.
+                LayerDesc::Lstm(d) => {
+                    let (e, h, l) = (d.e as f64, d.h as f64, d.seq_len as f64);
+                    let g4 = 4.0 * h;
+                    let rows = bsz * l;
+                    // Forward: input projection (one GEMM) + L recurrent
+                    // step GEMMs; backward: dW_ih, dW_hh, dX (one GEMM
+                    // each) + L per-step dh contractions.
+                    per_batch += 2.0 * rows * e * g4 // X·W_ihᵀ
+                        + 2.0 * rows * h * g4 // h_{t-1}·W_hhᵀ (L steps)
+                        + 2.0 * rows * g4 * e // dW_ih
+                        + 2.0 * rows * g4 * h // dW_hh
+                        + 2.0 * rows * g4 * h // dh carry (L steps)
+                        + 2.0 * rows * g4 * e; // dX
+                    per_batch += fcparam_flops(&d.w_ih, g4, e);
+                    per_batch += fcparam_flops(&d.w_hh, g4, h);
+                }
             }
         }
         per_batch * shape.nbatches as f64
+    }
+}
+
+/// Per-batch compose + factor-gradient FLOPs of one FC-shaped weight.
+fn fcparam_flops(param: &FcParam, m: f64, n: f64) -> f64 {
+    match param {
+        FcParam::Dense { .. } => 0.0,
+        // One compose + two factor-grad contractions.
+        FcParam::LowRank { r, .. } => 3.0 * 2.0 * m * n * *r as f64,
+        // Compose both halves + 4 factor-grad contractions.
+        FcParam::Factored { r, .. } => 6.0 * 2.0 * m * n * *r as f64,
     }
 }
 
@@ -1953,5 +2463,307 @@ mod tests {
         let shape = LayerShape::Conv { o: 64, i: 32, k1: 3, k2: 3 };
         assert_eq!(gamma_rank(shape, 0.0), r_min(shape));
         assert_eq!(gamma_rank(shape, 1.0), r_max(shape).clamp(1, 64));
+    }
+
+    // -----------------------------------------------------------------------
+    // Recurrent backend (Embed + Lstm + per-position head)
+    // -----------------------------------------------------------------------
+
+    /// Tiny character LSTM: vocab 12, L=6, embed 5, hidden 7.
+    fn lstm_spec(scheme: NativeScheme) -> NativeSpec {
+        NativeSpec::char_lstm(12, 6, 5, 7, scheme)
+    }
+
+    /// Random symbol batches for a text spec: `x` holds `nb·bs` samples of
+    /// `seq_len + 1` symbol ids; `y` is the unused all-zero label column.
+    fn random_text_problem(
+        s: NativeSpec,
+        nb: usize,
+        bs: usize,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let params = NativeExec::layout(s).init_params(&mut rng);
+        let vocab = s.classes();
+        let x: Vec<f32> = (0..nb * bs * s.in_dim()).map(|_| rng.below(vocab) as f32).collect();
+        let y = vec![0f32; nb * bs];
+        (params, x, y)
+    }
+
+    #[test]
+    fn lstm_layout_counts_and_budget_matching() {
+        // Original: dense embed + fused gates + bias + dense head (+bias).
+        let (v, e, h) = (12usize, 5usize, 7usize);
+        let g4 = 4 * h;
+        let orig = NativeExec::new(lstm_spec(NativeScheme::Original));
+        assert_eq!(orig.param_count(), v * e + g4 * e + g4 * h + g4 + v * h + v);
+
+        // FedPara γ=0: each FC-shaped weight at its Corollary-1 rank floor.
+        let fp = NativeExec::new(lstm_spec(NativeScheme::FedPara { gamma: 0.0 }));
+        let fp_fc = |m: usize, n: usize| 2 * gamma_rank(LayerShape::Fc { m, n }, 0.0) * (m + n);
+        assert_eq!(
+            fp.param_count(),
+            v * e + fp_fc(g4, e) + fp_fc(g4, h) + g4 + fp_fc(v, h) + v
+        );
+
+        // Low-rank at the matched budget: never more parameters than
+        // FedPara, and within one rank-step of it on every weight.
+        let low = NativeExec::new(lstm_spec(NativeScheme::LowRank { gamma: 0.0 }));
+        assert!(low.param_count() <= fp.param_count());
+        let max_step = (g4 + e) + (g4 + h) + (v + h); // one rank on each weight
+        assert!(
+            fp.param_count() - low.param_count() < max_step,
+            "budget mismatch: low {} vs fedpara {}",
+            low.param_count(),
+            fp.param_count()
+        );
+        // (No compression assertion here: at these tiny dims the
+        // Corollary-1 rank floor exceeds the dense budget — the documented
+        // tiny-layer case. The Shakespeare-sized `native_lstm_*` artifacts
+        // compress; asserted in `lstm_artifacts_compress_at_scale`.)
+    }
+
+    #[test]
+    fn lstm_artifacts_compress_at_scale() {
+        // The built-in Shakespeare-sized triple: FedPara γ=0 transfers
+        // strictly fewer parameters than dense (Table 11's ratio column),
+        // and the low-rank baseline matches FedPara's budget from below.
+        let lstm = |scheme| NativeSpec::char_lstm(80, 48, 16, 32, scheme);
+        let orig = NativeExec::new(lstm(NativeScheme::Original)).param_count();
+        let fp = NativeExec::new(lstm(NativeScheme::FedPara { gamma: 0.0 })).param_count();
+        let low = NativeExec::new(lstm(NativeScheme::LowRank { gamma: 0.0 })).param_count();
+        assert!(fp < orig, "fedpara {fp} >= original {orig}");
+        assert!(low <= fp, "low {low} > fedpara budget {fp}");
+        assert!(fp - low < fp / 10, "budgets should be near-equal: {low} vs {fp}");
+    }
+
+    #[test]
+    fn lstm_lowrank_rank_is_capped_below_fedpara() {
+        // The Prop-2 capacity contrast on the recurrent weight: at the
+        // same parameter budget, low-rank caps rank(W_hh) at r while
+        // FedPara's r² clears min(4h, h) — full expressiveness.
+        let fp = NativeExec::new(lstm_spec(NativeScheme::FedPara { gamma: 0.0 }));
+        let low = NativeExec::new(lstm_spec(NativeScheme::LowRank { gamma: 0.0 }));
+        let rank_of = |exec: &NativeExec, which: fn(&LstmDesc) -> &FcParam| {
+            let LayerDesc::Lstm(d) = &exec.layers[1] else { panic!("layer 1 is the LSTM") };
+            match which(d) {
+                FcParam::LowRank { r, .. } | FcParam::Factored { r, .. } => *r,
+                FcParam::Dense { .. } => usize::MAX,
+            }
+        };
+        let h = 7usize;
+        let r_low = rank_of(&low, |d| &d.w_hh);
+        let r_fp = rank_of(&fp, |d| &d.w_hh);
+        assert!(r_low < h, "low-rank W_hh must be rank-deficient (r={r_low}, h={h})");
+        assert!(r_fp * r_fp >= h, "FedPara W_hh clears full rank (r²={} ≥ {h})", r_fp * r_fp);
+    }
+
+    #[test]
+    fn lstm_gradient_matches_finite_differences() {
+        // Central differences across a spread of coordinates — the stride
+        // walks through the embedding table, both gate matrices (all four
+        // gate row blocks), the fused bias and the head, under all three
+        // text parameterizations.
+        for scheme in [
+            NativeScheme::Original,
+            NativeScheme::LowRank { gamma: 0.5 },
+            NativeScheme::FedPara { gamma: 0.5 },
+        ] {
+            let s = lstm_spec(scheme);
+            let exec = NativeExec::new(s);
+            let (params, x, y) = random_text_problem(s, 1, 4, 321);
+            let mut grad = vec![0f32; exec.param_count()];
+            let base = exec.loss_and_grad(&params, &x, &y, 4, &mut grad);
+            assert!(base.is_finite());
+            let eps = 1e-3f32;
+            let mut checked = 0;
+            let mut scratch = vec![0f32; exec.param_count()];
+            for j in (0..exec.param_count()).step_by(exec.param_count() / 29 + 1) {
+                let mut pp = params.clone();
+                pp[j] += eps;
+                let up = exec.loss_and_grad(&pp, &x, &y, 4, &mut scratch);
+                pp[j] -= 2.0 * eps;
+                let dn = exec.loss_and_grad(&pp, &x, &y, 4, &mut scratch);
+                let fd = (up - dn) / (2.0 * eps);
+                let tol = 2e-2 * (1.0 + fd.abs().max(grad[j].abs()));
+                assert!(
+                    (fd - grad[j]).abs() < tol,
+                    "{scheme:?} coord {j}: fd {fd} vs analytic {}",
+                    grad[j]
+                );
+                checked += 1;
+            }
+            assert!(checked > 10);
+        }
+    }
+
+    #[test]
+    fn lstm_fused_bias_gradient_covers_all_four_gates() {
+        // Explicitly finite-difference every coordinate of the fused 4-gate
+        // bias — one block per gate (i, f, g, o) — so a broken gate
+        // derivative cannot hide between strided spot checks.
+        let s = lstm_spec(NativeScheme::FedPara { gamma: 0.5 });
+        let exec = NativeExec::new(s);
+        let layout = NativeExec::layout(s);
+        let bias = layout.segment("lstm_b.w").expect("fused bias segment").clone();
+        assert_eq!(bias.len, 4 * 7);
+        let (params, x, y) = random_text_problem(s, 1, 3, 654);
+        let mut grad = vec![0f32; exec.param_count()];
+        exec.loss_and_grad(&params, &x, &y, 3, &mut grad);
+        let eps = 1e-3f32;
+        let mut scratch = vec![0f32; exec.param_count()];
+        for j in bias.offset..bias.offset + bias.len {
+            let mut pp = params.clone();
+            pp[j] += eps;
+            let up = exec.loss_and_grad(&pp, &x, &y, 3, &mut scratch);
+            pp[j] -= 2.0 * eps;
+            let dn = exec.loss_and_grad(&pp, &x, &y, 3, &mut scratch);
+            let fd = (up - dn) / (2.0 * eps);
+            let gate = ["i", "f", "g", "o"][(j - bias.offset) / 7];
+            let tol = 2e-2 * (1.0 + fd.abs().max(grad[j].abs()));
+            assert!(
+                (fd - grad[j]).abs() < tol,
+                "gate {gate} bias coord {j}: fd {fd} vs analytic {}",
+                grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn lstm_training_reduces_loss_all_schemes() {
+        for scheme in [
+            NativeScheme::Original,
+            NativeScheme::LowRank { gamma: 0.0 },
+            NativeScheme::FedPara { gamma: 0.0 },
+        ] {
+            let s = lstm_spec(scheme);
+            let exec = NativeExec::new(s);
+            let sh = shape(2, 8, s.in_dim());
+            let (mut params, x, y) = random_text_problem(s, 2, 8, 42);
+            let zeros = vec![0f32; exec.param_count()];
+            let mut first = None;
+            let mut last = 0f32;
+            for _ in 0..60 {
+                let (p, loss) = exec.train_epoch(sh, &params, &x, &y, 0.5, &zeros, &zeros, 0.0);
+                params = p;
+                first.get_or_insert(loss);
+                last = loss;
+            }
+            assert!(last.is_finite());
+            assert!(
+                last < first.unwrap() * 0.9,
+                "{scheme:?}: loss {:?} -> {last}",
+                first
+            );
+        }
+    }
+
+    /// The recurrent analogue of `workspace_reuse_is_bit_identical`: a
+    /// dirty, reused workspace (stale tape, different batch size) must
+    /// leave `train_epoch_ws` bit-identical to the fresh-buffer wrapper.
+    #[test]
+    fn lstm_workspace_reuse_is_bit_identical() {
+        for s in [
+            lstm_spec(NativeScheme::Original),
+            lstm_spec(NativeScheme::LowRank { gamma: 0.5 }),
+            lstm_spec(NativeScheme::FedPara { gamma: 0.5 }),
+        ] {
+            let exec = NativeExec::new(s);
+            let sh = shape(2, 4, s.in_dim());
+            let (params, x, y) = random_text_problem(s, 2, 4, 77);
+            let zeros = vec![0f32; exec.param_count()];
+            let (p_fresh, loss_fresh) =
+                exec.train_epoch(sh, &params, &x, &y, 0.1, &zeros, &zeros, 0.0);
+
+            // Dirty the arena with a different-shaped problem first.
+            let mut ws = exec.workspace();
+            let (dirty_params, dx, dy) = random_text_problem(s, 1, 7, 5151);
+            let mut junk = dirty_params;
+            exec.train_epoch_ws(
+                &mut ws,
+                shape(1, 7, s.in_dim()),
+                &mut junk,
+                &dx,
+                &dy,
+                0.2,
+                &zeros,
+                &zeros,
+                0.0,
+            );
+            let mut p_reused = params.clone();
+            let loss_reused =
+                exec.train_epoch_ws(&mut ws, sh, &mut p_reused, &x, &y, 0.1, &zeros, &zeros, 0.0);
+            assert_eq!(p_fresh, p_reused, "{s:?}: params diverged under workspace reuse");
+            assert_eq!(loss_fresh.to_bits(), loss_reused.to_bits(), "{s:?}: loss diverged");
+        }
+    }
+
+    #[test]
+    fn lstm_eval_masks_tail_exactly_per_position() {
+        // Masked-head + manually-evaluated-tail must equal the full sums —
+        // with per-position counting (each sample contributes seq_len
+        // predictions).
+        let s = lstm_spec(NativeScheme::FedPara { gamma: 0.5 });
+        let exec = NativeExec::new(s);
+        let sh = shape(2, 4, s.in_dim());
+        let (params, x, y) = random_text_problem(s, 2, 4, 9);
+        let (c_full, l_full) = exec.eval(sh, &params, &x, &y, 8);
+        let (c_head, l_head) = exec.eval(sh, &params, &x, &y, 5);
+        let mut c_tail = 0f64;
+        let mut l_tail = 0f64;
+        for i in 5..8 {
+            let (ci, li) = exec.eval(
+                BatchShape { nbatches: 1, batch: 1, feature_dim: s.in_dim() },
+                &params,
+                &x[i * s.in_dim()..(i + 1) * s.in_dim()],
+                &y[i..i + 1],
+                1,
+            );
+            c_tail += ci;
+            l_tail += li;
+        }
+        assert_eq!(c_head + c_tail, c_full);
+        assert!((l_head + l_tail - l_full).abs() < 1e-9);
+        // Sanity: a full eval scores seq_len predictions per sample, so
+        // the correct count can exceed the sample count.
+        assert!(c_full <= (8 * 6) as f64);
+    }
+
+    #[test]
+    fn lstm_eval_counts_positions_of_a_constant_stream() {
+        // A degenerate 2-symbol stream of all-1s: after enough training the
+        // model must predict "1" everywhere, making per-position accuracy
+        // exactly 1.0 — pinning the position-counting semantics.
+        let s = NativeSpec::char_lstm(2, 4, 3, 4, NativeScheme::Original);
+        let exec = NativeExec::new(s);
+        let sh = shape(1, 4, s.in_dim());
+        let x = vec![1f32; 4 * s.in_dim()];
+        let y = vec![0f32; 4];
+        let mut rng = Rng::new(3);
+        let mut params = NativeExec::layout(s).init_params(&mut rng);
+        let zeros = vec![0f32; exec.param_count()];
+        for _ in 0..60 {
+            let (p, _) = exec.train_epoch(sh, &params, &x, &y, 0.5, &zeros, &zeros, 0.0);
+            params = p;
+        }
+        let (correct, loss) = exec.eval(sh, &params, &x, &y, 4);
+        assert_eq!(correct, (4 * 4) as f64, "every position of every sample counts");
+        assert!(loss / 16.0 < 0.2, "per-position loss should be near zero: {loss}");
+    }
+
+    #[test]
+    fn embed_backward_routes_gradient_to_used_rows_only() {
+        let desc = EmbedDesc { vocab: 5, dim: 3, seq_len: 2, table: 0..15 };
+        // Two samples of (L+1)=3 symbols; symbol 4 never appears at an
+        // *input* position (only as a target).
+        let input = [0f32, 1.0, 4.0, 2.0, 0.0, 1.0];
+        let d = [1f32; 2 * 2 * 3]; // [L·bsz, dim] of ones
+        let mut grad = vec![0f32; 15];
+        backward_embed_ws(&desc, &input, &d, 2, &mut grad);
+        // Inputs consumed: sample 0 -> {0, 1}, sample 1 -> {2, 0}.
+        assert_eq!(&grad[0..3], &[2.0, 2.0, 2.0]); // symbol 0 twice
+        assert_eq!(&grad[3..6], &[1.0, 1.0, 1.0]); // symbol 1 once
+        assert_eq!(&grad[6..9], &[1.0, 1.0, 1.0]); // symbol 2 once
+        assert_eq!(&grad[9..15], &[0.0; 6]); // symbols 3, 4 untouched
     }
 }

@@ -117,6 +117,24 @@ impl Welford {
     }
 }
 
+/// The one bench timing loop: run `warmups` untimed calls, then `iters`
+/// timed calls, returning the per-call wall times in **milliseconds** as
+/// a [`Welford`]. Shared by the harness-free benches and `bench_report`
+/// so a methodology change (warmup count, mean-vs-min reporting — the
+/// regression gate compares these numbers) happens in one place.
+pub fn time_ms<F: FnMut()>(warmups: usize, iters: usize, mut f: F) -> Welford {
+    for _ in 0..warmups {
+        f();
+    }
+    let mut w = Welford::new();
+    for _ in 0..iters.max(1) {
+        let t0 = std::time::Instant::now();
+        f();
+        w.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    w
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
