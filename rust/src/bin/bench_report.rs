@@ -3,9 +3,12 @@
 //! Times the blocked/packed GEMM core against the retained naive kernels
 //! (`linalg::kernels::naive`, toggled at runtime via `force_naive`) at
 //! three granularities — raw kernels, one CNN `train_epoch`, and a full
-//! federated round on the `native_cnn10_fedpara` artifact — and writes the
-//! numbers to `BENCH_native.json` so the repo's perf trajectory is tracked
-//! run over run (CI uploads the file as an artifact on every push).
+//! federated round on the `native_cnn10_fedpara` artifact — plus the
+//! cross-device **scale** section (a round over 10⁴- vs 10⁶-client
+//! virtual populations at equal participants: round time and live store
+//! state must be population-independent), and writes the numbers to
+//! `BENCH_native.json` so the repo's perf trajectory is tracked run over
+//! run (CI uploads the file as an artifact on every push).
 //!
 //! ```text
 //! cargo run --release --bin bench_report            # full shapes
@@ -23,10 +26,11 @@
 use std::time::Instant;
 
 use fedpara::config::{Optimizer, RunConfig, Sharing};
-use fedpara::coordinator::Federation;
+use fedpara::coordinator::{ClientDataSource, Federation};
 use fedpara::data::{partition, synth_vision};
 use fedpara::linalg::kernels;
-use fedpara::runtime::Engine;
+use fedpara::runtime::native::{self, NativeScheme, NativeSpec};
+use fedpara::runtime::{BatchShape, Engine};
 use fedpara::util::json::Json;
 use fedpara::util::rng::Rng;
 use fedpara::util::stats::Welford;
@@ -231,6 +235,98 @@ fn bench_round(smoke: bool, iters: usize) -> anyhow::Result<Json> {
     ]))
 }
 
+/// Cross-device scale section: one federated round over virtual
+/// populations 100× apart at the **same participant count** — the round
+/// time and the store's live-state bytes must both be population-
+/// independent (the ISSUE-5 acceptance invariant), which makes their
+/// large/small ratios host-invariant gate metrics.
+fn bench_scale(smoke: bool, iters: usize) -> anyhow::Result<Json> {
+    const SMALL_POP: usize = 10_000;
+    const LARGE_POP: usize = 1_000_000;
+    let participants = if smoke { 64 } else { 256 };
+    // ≥3 timed rounds even in smoke: the ms ratio feeds the regression
+    // gate and a 2-sample mean is too noisy to compare against.
+    let iters = if smoke { 3 } else { iters };
+
+    // Tiny 4×4×3 MLP: the section measures store/coordinator overhead,
+    // not GEMM throughput (the kernel sections own that).
+    let feat = 4 * 4 * 3;
+    let train = BatchShape { nbatches: 1, batch: 8, feature_dim: feat };
+    let eval = BatchShape { nbatches: 1, batch: 16, feature_dim: feat };
+    let engine = Engine::with_artifacts(vec![native::artifact(
+        "scale_mlp",
+        NativeSpec::mlp_dims(feat, 8, 4, NativeScheme::Original),
+        train,
+        eval,
+    )]);
+    let spec = synth_vision::cifar_like_sized(4, 4, 4);
+
+    let measure = |population: usize| -> anyhow::Result<(Welford, usize, u64)> {
+        let source = ClientDataSource::lazy(population, move |cid| {
+            synth_vision::client_dataset(&spec, cid, 8, 0.5, 21)
+        });
+        let test = synth_vision::generate(&spec, 32, 22);
+        let cfg = RunConfig {
+            artifact: "scale_mlp".into(),
+            sample_frac: participants as f64 / population as f64,
+            rounds: 1 + iters,
+            local_epochs: 1,
+            lr: 0.05,
+            lr_decay: 1.0,
+            optimizer: Optimizer::FedAvg,
+            quantize_upload: false,
+            sharing: Sharing::Full,
+            eval_every: 0,
+            seed: 23,
+            num_threads: 0,
+        };
+        let mut fed = Federation::new_virtual(&engine, cfg, source, test)?;
+        fed.run_round()?; // Warmup (fills the per-job scratch pool).
+        let mut w = Welford::new();
+        let mut up = 0u64;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let r = fed.run_round()?;
+            w.push(t0.elapsed().as_secs_f64() * 1e3);
+            up = r.up_bytes;
+        }
+        Ok((w, fed.live_state_bytes(), up))
+    };
+
+    let (small_ms, small_live, small_up) = measure(SMALL_POP)?;
+    let (large_ms, large_live, large_up) = measure(LARGE_POP)?;
+    let ms_ratio = large_ms.mean() / small_ms.mean().max(1e-9);
+    let live_ratio = large_live as f64 / small_live.max(1) as f64;
+    println!("\n== cross-device scale ({participants} participants/round, virtual clients) ==");
+    println!(
+        "population {SMALL_POP:>9}: round {:>8.2} ms  live {:>9} B",
+        small_ms.mean(),
+        small_live
+    );
+    println!(
+        "population {LARGE_POP:>9}: round {:>8.2} ms  live {:>9} B",
+        large_ms.mean(),
+        large_live
+    );
+    println!(
+        "100x population -> round time {ms_ratio:.2}x, live state {live_ratio:.3}x \
+         (target ~1x: O(participants), not O(population))"
+    );
+    assert_eq!(small_up, large_up, "comm must depend on participants only");
+    Ok(Json::obj(vec![
+        ("small_population", Json::Num(SMALL_POP as f64)),
+        ("large_population", Json::Num(LARGE_POP as f64)),
+        ("participants", Json::Num(participants as f64)),
+        ("small_round_ms", Json::Num(small_ms.mean())),
+        ("large_round_ms", Json::Num(large_ms.mean())),
+        ("round_ms_ratio", Json::Num(ms_ratio)),
+        ("small_live_bytes", Json::Num(small_live as f64)),
+        ("large_live_bytes", Json::Num(large_live as f64)),
+        ("live_bytes_ratio", Json::Num(live_ratio)),
+        ("up_bytes_per_round", Json::Num(large_up as f64)),
+    ]))
+}
+
 /// Baseline entries whose reference time sits below this are pure timer
 /// noise at smoke shapes; the gate reports them as skipped rather than
 /// flagging a µs-level wobble as a regression.
@@ -313,6 +409,89 @@ fn gate_check(
     primary
 }
 
+/// Gate check of the cross-device scale section. The **primary** metric
+/// is `live_bytes_ratio` (live store state at 10⁶ vs 10⁴ clients, equal
+/// participants): it is a deterministic byte count, so it transfers
+/// across hosts exactly — any growth toward O(population) trips it.
+/// `round_ms_ratio` is checked the same way (both sides measured on the
+/// same host, so the ratio is host-invariant), and the large-population
+/// absolute round time keeps the usual catastrophic backstop. Returns
+/// `true` when the primary comparison happened.
+fn gate_check_scale(base: &Json, cur: &Json, tol_pct: f64, regressions: &mut usize) -> bool {
+    let label = "scale: 1M-client virtual round";
+    // Only comparable when the harness shape matches.
+    for key in ["small_population", "large_population", "participants"] {
+        if base.get(key).as_f64() != cur.get(key).as_f64() {
+            println!("  {label:<44} SKIP ({key} differs — refresh the baseline)");
+            return false;
+        }
+    }
+    let mut ok = true;
+    let primary = match (base.get("live_bytes_ratio").as_f64(), cur.get("live_bytes_ratio").as_f64())
+    {
+        (Some(bl), Some(cl)) => {
+            let ceil = bl * (1.0 + tol_pct / 100.0);
+            if cl > ceil {
+                *regressions += 1;
+                ok = false;
+                println!(
+                    "  {label:<44} REGRESSION: live-state ratio {cl:.3}x > {bl:.3}x \
+                     +{tol_pct}% (ceiling {ceil:.3}x) — store state is growing with population"
+                );
+            }
+            true
+        }
+        _ => {
+            println!("  {label:<44} note: live_bytes_ratio missing — backstop check only");
+            false
+        }
+    };
+    // The ms ratio is only meaningful when the rounds are measurable at
+    // all — same noise-floor rule as gate_check, on the slower side of
+    // the baseline ratio.
+    let base_slow = base
+        .get("large_round_ms")
+        .as_f64()
+        .unwrap_or(0.0)
+        .max(base.get("small_round_ms").as_f64().unwrap_or(0.0));
+    if base_slow >= GATE_NOISE_FLOOR_MS {
+        if let (Some(br), Some(cr)) =
+            (base.get("round_ms_ratio").as_f64(), cur.get("round_ms_ratio").as_f64())
+        {
+            let ceil = br * (1.0 + tol_pct / 100.0);
+            if cr > ceil {
+                *regressions += 1;
+                ok = false;
+                println!(
+                    "  {label:<44} REGRESSION: round-time ratio {cr:.2}x > {br:.2}x +{tol_pct}% \
+                     (ceiling {ceil:.2}x) — round cost is growing with population"
+                );
+            }
+        }
+    }
+    if let (Some(bm), Some(cm)) =
+        (base.get("large_round_ms").as_f64(), cur.get("large_round_ms").as_f64())
+    {
+        let limit = bm * GATE_CATASTROPHIC_FACTOR;
+        if cm > limit {
+            *regressions += 1;
+            ok = false;
+            println!(
+                "  {label:<44} REGRESSION: round {cm:.2} ms > \
+                 {GATE_CATASTROPHIC_FACTOR}x baseline {bm:.2} ms"
+            );
+        }
+    }
+    if ok {
+        println!(
+            "  {label:<44} ok: live ratio {:.3}x, time ratio {:.2}x",
+            cur.get("live_bytes_ratio").as_f64().unwrap_or(f64::NAN),
+            cur.get("round_ms_ratio").as_f64().unwrap_or(f64::NAN)
+        );
+    }
+    primary
+}
+
 /// Find the gemm row matching `(op, m, k, n)`.
 fn gemm_row<'a>(doc: &'a Json, op: &str, m: f64, k: f64, n: f64) -> Option<&'a Json> {
     doc.get("gemm").as_arr()?.iter().find(|row| {
@@ -384,6 +563,16 @@ fn compare_against_baseline(
             "  train_epoch: SKIP (baseline artifact '{base_art}' != current {cur_art:?} — \
              refresh the baseline)"
         );
+    }
+    // Cross-device scale: population-independence of round cost and
+    // live store state (only when the baseline has the section — older
+    // baselines predate it).
+    if base.get("scale") != &Json::Null {
+        compared +=
+            gate_check_scale(base.get("scale"), doc.get("scale"), tol_pct, &mut regressions)
+                as usize;
+    } else {
+        println!("  scale: SKIP (baseline has no scale section — refresh the baseline)");
     }
     if compared == 0 {
         // Every row skipped ⇒ the baseline no longer matches the harness
@@ -459,6 +648,7 @@ fn main() -> anyhow::Result<()> {
     let gemm = bench_gemm(smoke, iters);
     let epoch = bench_train_epoch(smoke, iters)?;
     let round = bench_round(smoke, iters)?;
+    let scale = bench_scale(smoke, iters)?;
 
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let doc = Json::obj(vec![
@@ -468,6 +658,7 @@ fn main() -> anyhow::Result<()> {
         ("gemm", gemm),
         ("train_epoch", epoch),
         ("round", round),
+        ("scale", scale),
     ]);
     std::fs::write(&out_path, doc.to_string_pretty())?;
     println!("\nwrote {out_path}");

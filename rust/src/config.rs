@@ -157,6 +157,21 @@ impl Scale {
             Scale::Paper => 10,
         }
     }
+
+    /// Cross-device population presets for the virtual-federation scale
+    /// scenario (`fedpara exp scale`): `(population, sample_frac,
+    /// samples_per_client)`. `paper` is the classic cross-device regime
+    /// (Konečný et al. 2016) FedPara targets: 10⁶ virtual clients at 0.1%
+    /// participation. Clients are *virtual* — datasets are synthesized on
+    /// demand per round and per-client state is sparse, so even the 10⁶
+    /// preset runs in O(participants) memory.
+    pub fn cross_device_population(&self) -> (usize, f64, usize) {
+        match self {
+            Scale::Tiny => (50_000, 0.001, 8),
+            Scale::Small => (200_000, 0.0005, 8),
+            Scale::Paper => (1_000_000, 0.001, 8),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -182,6 +197,22 @@ mod tests {
         assert!(k > 0 && per > 0 && test > 0);
         assert!(Scale::Paper.rounds(200) == 200);
         assert!(Scale::Tiny.rounds(200) < 20);
+    }
+
+    #[test]
+    fn cross_device_presets_are_cross_device_shaped() {
+        // Population ≫ participants at every scale, and the paper preset
+        // is the headline 10⁶-clients-at-0.1% regime.
+        for s in [Scale::Tiny, Scale::Small, Scale::Paper] {
+            let (population, frac, per_client) = s.cross_device_population();
+            let participants = (population as f64 * frac).round() as usize;
+            assert!(participants >= 1);
+            assert!(population >= 1000 * participants, "{s:?} is not cross-device");
+            assert!(per_client > 0);
+        }
+        let (population, frac, _) = Scale::Paper.cross_device_population();
+        assert_eq!(population, 1_000_000);
+        assert!((frac - 0.001).abs() < 1e-12);
     }
 
     #[test]

@@ -86,6 +86,16 @@ pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
     a.iter().zip(b).map(|(&x, &y)| x - y).collect()
 }
 
+/// In-place `a -= b` — the allocation-free form of [`sub`]. The round
+/// loop's SCAFFOLD fold turns each upload into a delta with this instead
+/// of allocating a fresh O(dim) vector per participant.
+pub fn sub_from(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x -= y;
+    }
+}
+
 /// FedAdam server state (Adam over the aggregated pseudo-gradient).
 #[derive(Clone, Debug)]
 pub struct AdamState {
@@ -367,5 +377,9 @@ mod tests {
         let mut c = a.clone();
         axpy(&mut c, 2.0, &b);
         assert_eq!(c, vec![5.0, 7.0]);
+        // In-place form is bit-identical to the allocating one.
+        let mut d = a.clone();
+        sub_from(&mut d, &b);
+        assert_eq!(d, sub(&a, &b));
     }
 }

@@ -1,38 +1,66 @@
-//! Per-client state held by the (simulated) federation.
+//! Per-client persistent state, stored **sparsely** by the
+//! [`ClientStore`](super::store::ClientStore).
+//!
+//! In the cross-device setting the server coordinates orders of magnitude
+//! more clients than ever participate in one round, so per-client state
+//! must only exist for clients that have actually been touched. A
+//! `ClientRecord` holds exactly what must survive between two
+//! participations of one client — everything else (the dataset, the full
+//! parameter vector under full sharing) is either rematerialized on demand
+//! or implied by the shared server init.
 
-use std::sync::Arc;
-
-use crate::data::Dataset;
-
-/// One client: its private data and whatever state persists across rounds.
-#[derive(Clone, Debug)]
-pub struct ClientState {
-    /// Private local dataset (never leaves the client). Shared by `Arc` so
-    /// local-training jobs on the worker pool borrow it without copying.
-    pub data: Arc<Dataset>,
-    /// Full-length parameter vector. Global segments are overwritten on
-    /// download; local segments (pFedPara/FedPer) persist here.
-    pub params: Vec<f32>,
-    /// SCAFFOLD client control variate c_i.
+/// What persists for one *touched* client across rounds.
+///
+/// Which fields are populated depends on the federation's
+/// [`ParamPolicy`](super::store::ParamPolicy):
+///
+/// * full sharing with downloads — `params` stays `None` (the next
+///   download overwrites every segment, so nothing is worth keeping);
+/// * partial sharing (pFedPara/FedPer) — `params` holds the dense
+///   **local-segment** vector ([`Layout::gather_local`] order);
+/// * local-only training — `params` holds the full parameter vector
+///   (nothing is ever transferred, so everything persists on-device).
+///
+/// [`Layout::gather_local`]: crate::parameterization::Layout::gather_local
+#[derive(Clone, Debug, Default)]
+pub struct ClientRecord {
+    /// Persisted parameters (policy-dependent encoding; see above).
+    pub params: Option<Vec<f32>>,
+    /// SCAFFOLD client control variate c_i (zeros until first update).
     pub control: Option<Vec<f32>>,
-    /// FedDyn client gradient state λ_i.
+    /// FedDyn client gradient state λ_i (zeros until first update).
     pub lambda: Option<Vec<f32>>,
     /// Rounds this client has participated in (diagnostics).
-    pub participations: usize,
+    pub participations: u32,
 }
 
-impl ClientState {
-    pub fn new(data: Dataset, init_params: Vec<f32>) -> ClientState {
-        ClientState {
-            data: Arc::new(data),
-            params: init_params,
-            control: None,
-            lambda: None,
-            participations: 0,
-        }
+impl ClientRecord {
+    /// Heap bytes held by this record (the store's `live_state_bytes`
+    /// accounting unit).
+    pub fn heap_bytes(&self) -> usize {
+        let vec_bytes =
+            |v: &Option<Vec<f32>>| v.as_ref().map(|v| v.capacity() * 4).unwrap_or(0);
+        vec_bytes(&self.params) + vec_bytes(&self.control) + vec_bytes(&self.lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_record_holds_no_heap() {
+        assert_eq!(ClientRecord::default().heap_bytes(), 0);
     }
 
-    pub fn num_samples(&self) -> usize {
-        self.data.len()
+    #[test]
+    fn heap_bytes_counts_all_vectors() {
+        let r = ClientRecord {
+            params: Some(vec![0.0; 10]),
+            control: Some(vec![0.0; 4]),
+            lambda: None,
+            participations: 3,
+        };
+        assert!(r.heap_bytes() >= (10 + 4) * 4);
     }
 }

@@ -27,11 +27,11 @@ pub struct CommDelta {
 
 impl CommDelta {
     pub fn record_upload(&mut self, bytes: u64) {
-        self.up_bytes += bytes;
+        self.up_bytes = self.up_bytes.saturating_add(bytes);
     }
 
     pub fn record_download(&mut self, bytes: u64) {
-        self.down_bytes += bytes;
+        self.down_bytes = self.down_bytes.saturating_add(bytes);
     }
 }
 
@@ -52,13 +52,13 @@ impl CommLedger {
     }
 
     pub fn record_upload(&mut self, bytes: u64) {
-        self.up_bytes += bytes;
-        self.round_up += bytes;
+        self.up_bytes = self.up_bytes.saturating_add(bytes);
+        self.round_up = self.round_up.saturating_add(bytes);
     }
 
     pub fn record_download(&mut self, bytes: u64) {
-        self.down_bytes += bytes;
-        self.round_down += bytes;
+        self.down_bytes = self.down_bytes.saturating_add(bytes);
+        self.round_down = self.round_down.saturating_add(bytes);
     }
 
     /// Merge one client job's traffic into the current round.
@@ -74,8 +74,13 @@ impl CommLedger {
         self.round_down = 0;
     }
 
+    /// Total transferred bytes. Saturating like the recorders: at
+    /// cross-device scale (10⁶ clients × GB-class models × 10⁵ rounds) a
+    /// mis-specified scenario can legitimately approach u64::MAX, and a
+    /// pinned ceiling beats a silent wrap (release) or panic (debug) in
+    /// the middle of a long simulation.
     pub fn total_bytes(&self) -> u64 {
-        self.up_bytes + self.down_bytes
+        self.up_bytes.saturating_add(self.down_bytes)
     }
 
     pub fn total_gbytes(&self) -> f64 {
@@ -209,6 +214,84 @@ mod tests {
         let mut l = CommLedger::new();
         l.record_upload(1_000_000_000);
         assert!((l.total_energy_j() - 2500.0).abs() < 1e-6);
+    }
+
+    // -- population-scale coverage -------------------------------------
+
+    #[test]
+    fn ledger_saturates_instead_of_wrapping_near_u64_max() {
+        let mut l = CommLedger::new();
+        l.record_upload(u64::MAX - 10);
+        l.record_upload(100); // Would wrap; must pin at MAX.
+        assert_eq!(l.up_bytes, u64::MAX);
+        l.record_download(u64::MAX / 2 + 10);
+        l.record_download(u64::MAX / 2 + 10);
+        assert_eq!(l.down_bytes, u64::MAX);
+        // total = up + down would overflow twice over; stays pinned.
+        assert_eq!(l.total_bytes(), u64::MAX);
+        l.end_round();
+        assert_eq!(l.per_round, vec![(u64::MAX, u64::MAX)]);
+
+        // Deltas saturate the same way before they ever reach the ledger.
+        let mut d = CommDelta::default();
+        d.record_upload(u64::MAX);
+        d.record_upload(1);
+        assert_eq!(d.up_bytes, u64::MAX);
+        let mut merged = CommLedger::new();
+        merged.apply(d);
+        merged.apply(CommDelta { up_bytes: 5, down_bytes: 0 });
+        assert_eq!(merged.up_bytes, u64::MAX);
+    }
+
+    #[test]
+    fn fp16_billing_on_odd_length_uploads() {
+        // fp16 is exactly 2 bytes/value with no padding assumption: odd
+        // (and prime) lengths must bill exactly 2·len both in the
+        // allocating and the in-place form.
+        for len in [1usize, 3, 7, 101, 999, 65_537] {
+            let vals: Vec<f32> = (0..len).map(|i| (i as f32) * 0.25 - 2.0).collect();
+            let (deq, bytes) = quantize_fp16(&vals);
+            assert_eq!(bytes, 2 * len as u64, "len {len}");
+            assert_eq!(deq.len(), len);
+            let mut inplace = vals.clone();
+            assert_eq!(quantize_fp16_in_place(&mut inplace), bytes);
+            assert_eq!(inplace, deq);
+        }
+    }
+
+    #[test]
+    fn accounting_is_exact_over_1e5_rounds() {
+        // 10⁵ simulated rounds of a 1000-participant federation: the u64
+        // byte ledger is exact (integer), and the f64 energy /
+        // transfer-time aggregates stay within float accumulation error
+        // of the closed form.
+        let rounds: u64 = 100_000;
+        let per_round_up: u64 = 1000 * 25_000; // 1000 clients × 25 kB up
+        let per_round_down: u64 = 1000 * 50_000;
+        let mut l = CommLedger::new();
+        let net = Network::new(10.0);
+        let mut t_secs = 0.0f64;
+        for _ in 0..rounds {
+            l.record_upload(per_round_up);
+            l.record_download(per_round_down);
+            l.end_round();
+            t_secs += net.transfer_secs(per_round_up + per_round_down);
+        }
+        assert_eq!(l.up_bytes, rounds * per_round_up);
+        assert_eq!(l.down_bytes, rounds * per_round_down);
+        assert_eq!(l.per_round.len(), rounds as usize);
+        assert_eq!(l.per_round[77_777], (per_round_up, per_round_down));
+        let expected_t = rounds as f64 * net.transfer_secs(per_round_up + per_round_down);
+        assert!(
+            (t_secs - expected_t).abs() / expected_t < 1e-9,
+            "transfer-time accumulation drifted: {t_secs} vs {expected_t}"
+        );
+        let expected_j = (rounds * (per_round_up + per_round_down)) as f64 * ENERGY_J_PER_BYTE;
+        assert!(
+            (l.total_energy_j() - expected_j).abs() / expected_j < 1e-12,
+            "energy drifted: {} vs {expected_j}",
+            l.total_energy_j()
+        );
     }
 
     #[test]

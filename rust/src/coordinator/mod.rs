@@ -6,6 +6,8 @@ pub mod client;
 pub mod comm;
 pub mod sampler;
 pub mod server;
+pub mod store;
 
 pub use comm::{CommLedger, Network};
 pub use server::{eval_on, eval_on_ws, EvalScratch, Federation, RoundReport};
+pub use store::{ClientDataSource, ClientStore, ParamPolicy, RoundData};

@@ -1,6 +1,11 @@
 //! Client sampling: each round the server samples a fraction of clients
 //! uniformly without replacement (FedAvg; the paper samples 16% of 100
 //! clients). Deterministic given (seed, round).
+//!
+//! Cost is O(per_round), not O(population): `Rng::sample_indices` is the
+//! sparse partial Fisher-Yates, so sampling 1000 of 10⁶ virtual clients
+//! allocates kilobytes, not megabytes — the sampler is safe to sit in the
+//! cross-device hot loop.
 
 use crate::util::rng::Rng;
 
@@ -33,6 +38,12 @@ impl Sampler {
     /// Sample the participant set for `round` (sorted for determinism of
     /// downstream iteration order).
     pub fn sample(&self, round: usize) -> Vec<usize> {
+        // Full participation sorts to exactly 0..n whatever the draw —
+        // skip the n rng draws (the per-round child rng is discarded, so
+        // the output is identical).
+        if self.per_round == self.num_clients {
+            return (0..self.num_clients).collect();
+        }
         let mut rng = self.root.child(round as u64);
         let mut ids = rng.sample_indices(self.num_clients, self.per_round);
         ids.sort_unstable();
@@ -96,5 +107,32 @@ mod tests {
     fn full_sampler() {
         let s = Sampler::full(7);
         assert_eq!(s.sample(3), (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn full_fast_path_matches_generic_draw() {
+        // The per_round == num_clients shortcut must equal the sorted
+        // full Fisher-Yates draw (a permutation sorts to 0..n).
+        let s = Sampler::new(40, 1.0, 9);
+        let mut rng = s.root.child(5);
+        let mut generic = rng.sample_indices(40, 40);
+        generic.sort_unstable();
+        assert_eq!(s.sample(5), generic);
+    }
+
+    #[test]
+    fn population_scale_sampling_is_cheap_and_valid() {
+        // 1000 of 1M virtual clients: distinct, in-range, sorted,
+        // deterministic — and O(per_round), so this test is instant.
+        let s = Sampler::new(1_000_000, 0.001, 42);
+        assert_eq!(s.per_round(), 1000);
+        for round in [0usize, 1, 999] {
+            let ids = s.sample(round);
+            assert_eq!(ids.len(), 1000);
+            assert!(ids.windows(2).all(|w| w[0] < w[1]), "sorted + distinct");
+            assert!(*ids.last().unwrap() < 1_000_000);
+            assert_eq!(ids, s.sample(round));
+        }
+        assert_ne!(s.sample(0), s.sample(1));
     }
 }

@@ -1,22 +1,31 @@
 //! The federated round loop — the L3 counterpart of paper Algorithms 1–2.
 //!
-//! A [`Federation`] owns the client population, the server model, the
-//! optimizer state, and the communication ledger. Every round it samples
-//! clients and fans one pure [`LocalTrainJob`] per participant out over a
-//! [`ThreadPool`]: each job downloads a parameter snapshot, runs its local
-//! epochs through the (Arc-shared, `Send + Sync`) [`ModelRuntime`], and
-//! returns its upload, its optimizer side-state, and a [`CommDelta`]. The
-//! reduce side folds outcomes **in participant order** on the coordinator
-//! thread — uploads stream into a [`WeightedAccumulator`] and are dropped
-//! as soon as they are folded, so aggregation typically holds `O(dim)`
-//! state rather than materializing every upload. (Peak memory is still
-//! `O(participants × dim)`: job parameter snapshots are materialized at
-//! fan-out, and out-of-order outcomes buffer until their fold turn — the
-//! win over collect-then-aggregate is the streaming drop of uploads, not
-//! an asymptotic bound.) The fixed fold
-//! order makes every ledger byte, loss, and server parameter bit-identical
-//! across pool sizes (client RNG streams are keyed by `(round, cid)`,
-//! never by worker).
+//! A [`Federation`] owns the client population (through a sparse, lazy
+//! [`ClientStore`]), the server model, the optimizer state, and the
+//! communication ledger. Every round it samples clients and fans one pure
+//! [`LocalTrainJob`] per participant out over a [`ThreadPool`]: each job
+//! downloads a parameter snapshot, runs its local epochs through the
+//! (Arc-shared, `Send + Sync`) [`ModelRuntime`], and returns its upload,
+//! its optimizer side-state, and a [`CommDelta`]. The reduce side folds
+//! outcomes **in participant order** on the coordinator thread — uploads
+//! stream into a [`WeightedAccumulator`] and are dropped as soon as they
+//! are folded, so aggregation typically holds `O(dim)` state rather than
+//! materializing every upload. (Peak memory is still `O(participants ×
+//! dim)`: job parameter snapshots are materialized at fan-out, and
+//! out-of-order outcomes buffer until their fold turn — the win over
+//! collect-then-aggregate is the streaming drop of uploads, not an
+//! asymptotic bound.) The fixed fold order makes every ledger byte, loss,
+//! and server parameter bit-identical across pool sizes (client RNG
+//! streams are keyed by `(round, cid)`, never by worker).
+//!
+//! **Cross-device scale.** Round cost is O(participants), never
+//! O(population): participant datasets and parameter snapshots are
+//! materialized per round from the store and dropped at fold time, and
+//! per-client persistent state is instantiated sparsely on first
+//! participation (see [`ClientStore`]). [`Federation::new_virtual`] runs a
+//! population of millions of virtual clients in constant memory per
+//! round; `tests/store_equivalence.rs` pins it bit-identical to the eager
+//! construction at the paper's 100-client configs.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -24,9 +33,9 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::aggregate::{self, AdamState, FedDynState, ScaffoldState, WeightedAccumulator};
-use super::client::ClientState;
 use super::comm::{quantize_fp16_in_place, CommDelta, CommLedger};
 use super::sampler::Sampler;
+use super::store::{ClientDataSource, ClientStore, RoundData};
 use crate::config::{Optimizer, RunConfig, Sharing};
 use crate::data::{assemble_batches_into, BatchStack, Dataset};
 use crate::parameterization::{Layout, SegmentKind};
@@ -66,7 +75,8 @@ pub struct Federation {
     rt: Arc<ModelRuntime>,
     /// Effective transfer layout (manifest layout with `Sharing` applied).
     layout: Arc<Layout>,
-    clients: Vec<ClientState>,
+    /// Sparse, lazy client population (datasets + persistent state).
+    store: ClientStore,
     test: Dataset,
     /// Full-length server parameter vector (local segments hold the common
     /// init, matching Algorithm 2's "transmit everything at start").
@@ -151,7 +161,9 @@ struct LocalTrainJob {
     cid: usize,
     rt: Arc<ModelRuntime>,
     layout: Arc<Layout>,
-    data: Arc<Dataset>,
+    /// Dataset handle — deferred for virtual populations, so the
+    /// O(per_client) synthesis runs on the worker, not the coordinator.
+    data: RoundData,
     /// The client's full parameter vector as of the previous round; the
     /// job applies the download itself so a failed round leaves client
     /// state untouched.
@@ -168,8 +180,6 @@ struct LocalTrainJob {
     local_only: bool,
     /// Download bytes recorded at job construction.
     comm: CommDelta,
-    /// Aggregation weight (client sample count).
-    weight: f64,
     /// Pooled scratch (workspace + batch stack), owned for the duration of
     /// the job and handed back through the outcome for reuse next round.
     scratch: JobScratch,
@@ -212,9 +222,12 @@ impl LocalTrainJob {
             quantize_upload,
             local_only,
             mut comm,
-            weight,
             mut scratch,
         } = self;
+        // Deferred (virtual) datasets synthesize here, on the worker; the
+        // aggregation weight is the materialized sample count either way.
+        let data = data.materialize();
+        let weight = data.len() as f64;
         let t = rt.meta.train;
         // ---- download -----------------------------------------------------
         let mut p = params;
@@ -320,14 +333,30 @@ impl LocalTrainJob {
 }
 
 impl Federation {
-    /// Build a federation over per-client datasets and a shared test set.
+    /// Build a federation over per-client datasets and a shared test set
+    /// (the classic eager/cross-silo construction).
     pub fn new(
         engine: &Engine,
         cfg: RunConfig,
         locals: Vec<Dataset>,
         test: Dataset,
     ) -> Result<Federation> {
-        if locals.is_empty() {
+        Federation::new_virtual(engine, cfg, ClientDataSource::eager(locals), test)
+    }
+
+    /// Build a federation over any [`ClientDataSource`] — including a
+    /// *virtual* population of millions of clients whose datasets are
+    /// synthesized deterministically on demand. Construction cost is
+    /// O(param_count), independent of population; an eager source makes
+    /// this identical to [`Federation::new`].
+    pub fn new_virtual(
+        engine: &Engine,
+        cfg: RunConfig,
+        source: ClientDataSource,
+        test: Dataset,
+    ) -> Result<Federation> {
+        let population = source.population();
+        if population == 0 {
             return Err(anyhow!("no clients"));
         }
         let rt = engine.load(&cfg.artifact)?;
@@ -342,22 +371,25 @@ impl Federation {
         }
         let mut root_rng = Rng::new(cfg.seed);
         let server_params = meta.layout.init_params(&mut root_rng);
-        let clients: Vec<ClientState> = locals
-            .into_iter()
-            .map(|d| ClientState::new(d, server_params.clone()))
-            .collect();
+        let local_only = matches!(cfg.sharing, Sharing::LocalOnly);
+        let store = ClientStore::new(
+            source,
+            Arc::clone(&layout),
+            Arc::new(server_params.clone()),
+            local_only,
+        );
         let dim = meta.param_count;
         let opt = match cfg.optimizer {
             Optimizer::FedAvg | Optimizer::FedProx { .. } => ServerOpt::Plain,
             Optimizer::FedAdam => ServerOpt::Adam(AdamState::new(layout.global_len())),
-            Optimizer::Scaffold => ServerOpt::Scaffold(ScaffoldState::new(dim, clients.len())),
+            Optimizer::Scaffold => ServerOpt::Scaffold(ScaffoldState::new(dim, population)),
             Optimizer::FedDyn { alpha } => {
-                ServerOpt::FedDyn(FedDynState::new(dim, alpha as f64, clients.len()))
+                ServerOpt::FedDyn(FedDynState::new(dim, alpha as f64, population))
             }
         };
         let sampler = match cfg.sharing {
-            Sharing::LocalOnly => Sampler::full(clients.len()),
-            _ => Sampler::new(clients.len(), cfg.sample_frac, cfg.seed),
+            Sharing::LocalOnly => Sampler::full(population),
+            _ => Sampler::new(population, cfg.sample_frac, cfg.seed),
         };
         // A round never has more jobs in flight than clients, so don't
         // spawn (and later join) workers that could never be used.
@@ -365,7 +397,7 @@ impl Federation {
             0 => ThreadPool::host_parallelism(),
             n => n,
         };
-        let pool = Arc::new(ThreadPool::new(requested.min(clients.len())));
+        let pool = Arc::new(ThreadPool::new(requested.min(population)));
         // Evaluation runs on the coordinator thread while the fan-out is
         // idle, so its workspace can safely borrow the pool for intra-op
         // row-blocked GEMMs.
@@ -375,7 +407,7 @@ impl Federation {
             cfg,
             rt,
             layout,
-            clients,
+            store,
             test,
             server_params,
             opt,
@@ -395,7 +427,20 @@ impl Federation {
     }
 
     pub fn num_clients(&self) -> usize {
-        self.clients.len()
+        self.store.population()
+    }
+
+    /// The sparse client store (population, touched set, live-state
+    /// accounting).
+    pub fn store(&self) -> &ClientStore {
+        &self.store
+    }
+
+    /// Bytes of live per-client state held by the store right now — the
+    /// cross-device memory invariant: O(participants + touched), never
+    /// O(population). See [`ClientStore::live_state_bytes`].
+    pub fn live_state_bytes(&self) -> usize {
+        self.store.live_state_bytes()
     }
 
     /// Worker threads serving the per-round client fan-out.
@@ -429,6 +474,11 @@ impl Federation {
         };
 
         // ---- fan-out: one pure job per participant ------------------------
+        // Everything per-client is materialized *here*, for participants
+        // only: the dataset (lazily synthesized for virtual populations,
+        // dropped when the job folds) and the parameter snapshot
+        // (reconstructed from the shared init + the client's sparse
+        // record). Round cost is O(participants), never O(population).
         let mut jobs: Vec<LocalTrainJob> = Vec::with_capacity(participants.len());
         for &cid in &participants {
             let mut comm = CommDelta::default();
@@ -444,17 +494,11 @@ impl Federation {
                 Optimizer::FedProx { mu } => JobOpt::Prox { mu: *mu },
                 Optimizer::Scaffold => {
                     let c_global = Arc::clone(c_global.as_ref().expect("scaffold state"));
-                    let c_i = self.clients[cid]
-                        .control
-                        .get_or_insert_with(|| vec![0.0; c_global.len()])
-                        .clone();
+                    let c_i = self.store.control(cid, c_global.len());
                     JobOpt::Scaffold { c_global, c_i, inv_k_eta: 1.0 / (steps_per_round * lr) }
                 }
                 Optimizer::FedDyn { alpha } => {
-                    let lambda = self.clients[cid]
-                        .lambda
-                        .get_or_insert_with(|| vec![0.0; param_count])
-                        .clone();
+                    let lambda = self.store.lambda(cid, param_count);
                     JobOpt::FedDyn { alpha: *alpha, lambda }
                 }
             };
@@ -462,8 +506,8 @@ impl Federation {
                 cid,
                 rt: Arc::clone(&self.rt),
                 layout: Arc::clone(&self.layout),
-                data: Arc::clone(&self.clients[cid].data),
-                params: self.clients[cid].params.clone(),
+                data: self.store.round_data(cid),
+                params: self.store.round_params(cid),
                 download: (!local_only).then(|| Arc::clone(&server_global)),
                 // 32-bit split keeps (round, cid) tags collision-free well
                 // past the million-client scale the roadmap targets.
@@ -474,7 +518,6 @@ impl Federation {
                 quantize_upload: self.cfg.quantize_upload,
                 local_only,
                 comm,
-                weight: self.clients[cid].num_samples() as f64,
                 // Reuse last round's scratch where available; the pool
                 // grows to the steady-state participant count and then
                 // stops allocating.
@@ -500,7 +543,7 @@ impl Federation {
         let mut first_err: Option<anyhow::Error> = None;
         let t_comp_start = Instant::now();
         {
-            let clients = &mut self.clients;
+            let store = &mut self.store;
             let comm = &mut self.comm;
             let server_params = &self.server_params;
             let optimizer = self.cfg.optimizer;
@@ -527,22 +570,21 @@ impl Federation {
                     scratch_pool.push(out.scratch);
                     comm.apply(out.comm);
                     loss_acc += out.loss_sum;
-                    let c = &mut clients[out.cid];
-                    c.params = out.params;
-                    c.participations += 1;
-                    if let Some(nc) = out.new_control {
-                        c.control = Some(nc);
-                    }
-                    if let Some(nl) = out.new_lambda {
-                        c.lambda = Some(nl);
-                    }
+                    // Persist the client's sparse record (policy decides
+                    // how much of `params` survives); the job's dataset
+                    // Arc dropped with the job — for virtual populations
+                    // nothing data-shaped outlives the fold.
+                    store.commit(out.cid, out.params, out.new_control, out.new_lambda);
                     if local_only {
                         return;
                     }
                     match optimizer {
                         Optimizer::Scaffold => {
-                            // Stream Δθ = (wire model) − θ and Δc.
-                            acc_a.push(&aggregate::sub(&out.upload, server_params), 1.0);
+                            // Stream Δθ = (wire model) − θ and Δc, reusing
+                            // the upload buffer for the subtraction.
+                            let mut delta = out.upload;
+                            aggregate::sub_from(&mut delta, server_params);
+                            acc_a.push(&delta, 1.0);
                             acc_b.push(&out.delta_control.expect("scaffold delta"), 1.0);
                         }
                         Optimizer::FedDyn { .. } => {
@@ -550,7 +592,7 @@ impl Federation {
                         }
                         _ => acc_upload.push(&out.upload, out.weight),
                     }
-                    // `out.upload` drops here — aggregation stays O(dim).
+                    // The upload drops here — aggregation stays O(dim).
                 },
             );
         }
@@ -648,7 +690,7 @@ impl Federation {
     /// vector, local segments included) on its own test set — the Figure-5
     /// protocol. Returns per-client accuracies.
     pub fn evaluate_personalized(&self, client_tests: &[Dataset]) -> Result<Vec<f64>> {
-        if client_tests.len() != self.clients.len() {
+        if client_tests.len() != self.store.population() {
             return Err(anyhow!("need one test set per client"));
         }
         // The download is client-invariant: gather the server's global view
@@ -657,10 +699,12 @@ impl Federation {
         let global = (!matches!(self.cfg.sharing, Sharing::LocalOnly))
             .then(|| self.layout.gather_global(&self.server_params));
         let mut ws = self.eval_scratch.lock().expect("eval workspace lock poisoned");
-        let mut accs = Vec::with_capacity(self.clients.len());
-        for (c, t) in self.clients.iter().zip(client_tests) {
-            // A client that never trained evaluates its init — fine.
-            let mut params = c.params.clone();
+        let mut accs = Vec::with_capacity(client_tests.len());
+        for (cid, t) in client_tests.iter().enumerate() {
+            // A client that never trained evaluates its (implicit) init —
+            // fine; the store reconstructs a touched client's persisted
+            // segments.
+            let mut params = self.store.round_params(cid);
             if let Some(g) = &global {
                 // Personalized model = latest global + own local segments.
                 self.layout.scatter_global(&mut params, g);
@@ -779,8 +823,8 @@ mod tests {
         fed.run(2).unwrap();
         let hoisted = fed.evaluate_personalized(&tests).unwrap();
         let mut reference = Vec::new();
-        for (c, t) in fed.clients.iter().zip(&tests) {
-            let mut params = c.params.clone();
+        for (cid, t) in tests.iter().enumerate() {
+            let mut params = fed.store.round_params(cid);
             let g = fed.layout.gather_global(&fed.server_params);
             fed.layout.scatter_global(&mut params, &g);
             reference.push(eval_on(&fed.rt, &params, t).unwrap().accuracy());

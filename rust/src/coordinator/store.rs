@@ -1,0 +1,465 @@
+//! The client store — sparse, lazy state for cross-device populations.
+//!
+//! FedPara's setting is cross-device federated learning: the server
+//! coordinates a population orders of magnitude larger than any round's
+//! participant set (Konečný et al. 2016). The seed coordinator
+//! materialized a full `ClientState` (dataset + parameter clone) for every
+//! client up front, making federation *construction* O(population ×
+//! param_count) — tens of GB at 10⁶ clients even for a toy MLP. The
+//! `ClientStore` replaces that with two invariants:
+//!
+//! 1. **Datasets are round-scoped.** A participant's dataset is
+//!    materialized deterministically on demand ([`ClientStore::dataset`])
+//!    and dropped when its job folds; nothing data-shaped survives the
+//!    round. The eager path (caller-provided datasets) still works for
+//!    cross-silo runs and is byte-identical.
+//! 2. **Persistent state is sparse.** Per-client state (local parameter
+//!    segments, SCAFFOLD `c_i`, FedDyn `λ_i`, participation counts) lives
+//!    in a sharded hash map keyed by client id, instantiated only for
+//!    clients that have participated. A client never touched is
+//!    represented *implicitly*: its parameters are exactly the shared
+//!    server init (one `Arc`, not a per-client clone), its control/λ are
+//!    zeros, its participation count is 0.
+//!
+//! Together these make round cost O(participants) and live state
+//! O(participants + historically-touched) — never O(population). The
+//! eager-vs-lazy equivalence suite (`tests/store_equivalence.rs`) pins the
+//! store to the eager semantics bit-for-bit; `live_state_bytes` backs the
+//! memory-bound assertions in `tests/scale_federation.rs` and the
+//! `bench_report` scale section.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::data::{partition::Partition, Dataset};
+use crate::parameterization::Layout;
+
+use super::client::ClientRecord;
+
+/// Where client datasets come from.
+pub enum ClientDataSource {
+    /// Pre-materialized per-client datasets (the classic cross-silo path;
+    /// population = the vector length).
+    Eager(Vec<Arc<Dataset>>),
+    /// Virtual population: `provider(cid)` synthesizes client `cid`'s
+    /// dataset on demand. The provider must be **deterministic in `cid`**
+    /// (same cid → bit-identical dataset, every call) — that is what makes
+    /// lazy rounds reproducible and eager/lazy runs equivalent.
+    Lazy {
+        population: usize,
+        provider: Arc<dyn Fn(usize) -> Dataset + Send + Sync>,
+    },
+}
+
+impl ClientDataSource {
+    /// Wrap caller-owned datasets (the classic [`Federation::new`] path).
+    ///
+    /// [`Federation::new`]: super::server::Federation::new
+    pub fn eager(locals: Vec<Dataset>) -> ClientDataSource {
+        ClientDataSource::Eager(locals.into_iter().map(Arc::new).collect())
+    }
+
+    /// A virtual population served by a deterministic per-client
+    /// generator.
+    pub fn lazy<F>(population: usize, provider: F) -> ClientDataSource
+    where
+        F: Fn(usize) -> Dataset + Send + Sync + 'static,
+    {
+        ClientDataSource::Lazy { population, provider: Arc::new(provider) }
+    }
+
+    /// Lazy view over a shared pool + [`Partition`]: client `cid`
+    /// materializes `data.subset(partition.client(cid))` on demand. The
+    /// pool itself is shared (one `Arc`), so this trades the eager path's
+    /// per-client *copies* for one shared pool plus per-round subsets.
+    /// Note the provider pins the pool + partition (O(total samples),
+    /// caller-shared — not counted by `live_state_bytes`); for true
+    /// cross-device populations prefer a synthesizing provider
+    /// ([`ClientDataSource::lazy`]), which holds O(1) state.
+    pub fn from_partition(data: Arc<Dataset>, part: Arc<Partition>) -> ClientDataSource {
+        let population = part.num_clients();
+        ClientDataSource::Lazy {
+            population,
+            provider: Arc::new(move |cid| data.subset(part.client(cid))),
+        }
+    }
+
+    pub fn population(&self) -> usize {
+        match self {
+            ClientDataSource::Eager(v) => v.len(),
+            ClientDataSource::Lazy { population, .. } => *population,
+        }
+    }
+
+    /// Heap bytes pinned by the source itself: eager datasets count;
+    /// lazy providers count as zero (a synthesizing provider holds O(1)
+    /// state, and `from_partition`'s pool is caller-shared).
+    fn heap_bytes(&self) -> usize {
+        match self {
+            ClientDataSource::Eager(v) => v.iter().map(|d| d.heap_bytes()).sum(),
+            ClientDataSource::Lazy { .. } => 0,
+        }
+    }
+}
+
+/// One participant's dataset handle for one round: either an eager
+/// shared dataset, or a deferred synthesis token the worker materializes
+/// itself (see [`ClientStore::round_data`]).
+pub enum RoundData {
+    Shared(Arc<Dataset>),
+    Deferred {
+        cid: usize,
+        provider: Arc<dyn Fn(usize) -> Dataset + Send + Sync>,
+    },
+}
+
+impl RoundData {
+    /// Resolve to a concrete dataset (synthesizing on the calling thread
+    /// when deferred).
+    pub fn materialize(self) -> Arc<Dataset> {
+        match self {
+            RoundData::Shared(d) => d,
+            RoundData::Deferred { cid, provider } => Arc::new(provider(cid)),
+        }
+    }
+}
+
+/// How a touched client's parameters persist between participations —
+/// derived from the effective layout + sharing, never configured directly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamPolicy {
+    /// Every segment is overwritten by the next download (full sharing):
+    /// nothing persists; a client's round parameters are always
+    /// `scatter_global(init, current_global)`.
+    Dropped,
+    /// Partial sharing: only the dense local-segment vector persists
+    /// (`Layout::gather_local` encoding).
+    LocalSegments,
+    /// Local-only training: the full parameter vector persists (nothing is
+    /// ever transferred).
+    FullVector,
+}
+
+/// Shard count for the sparse map: bounds any single rehash and keeps the
+/// per-shard maps small enough that iteration in `live_state_bytes` stays
+/// cache-friendly. Power of two so the index is a mask.
+const STORE_SHARDS: usize = 64;
+
+/// Sparse, lazy client state for one federation. See the module docs.
+pub struct ClientStore {
+    source: ClientDataSource,
+    /// Effective transfer layout (sharing policy applied).
+    layout: Arc<Layout>,
+    policy: ParamPolicy,
+    /// The common init every client starts from (Algorithm 2's "transmit
+    /// everything at start") — shared, not cloned per client.
+    init_params: Arc<Vec<f32>>,
+    shards: Vec<HashMap<usize, ClientRecord>>,
+    touched: usize,
+}
+
+impl ClientStore {
+    /// `local_only` marks the no-transfer sharing mode (downloads never
+    /// happen, so the full vector must persist regardless of layout).
+    pub fn new(
+        source: ClientDataSource,
+        layout: Arc<Layout>,
+        init_params: Arc<Vec<f32>>,
+        local_only: bool,
+    ) -> ClientStore {
+        assert_eq!(init_params.len(), layout.total, "init/layout mismatch");
+        let policy = if local_only {
+            ParamPolicy::FullVector
+        } else if layout.local_len() == 0 {
+            ParamPolicy::Dropped
+        } else {
+            ParamPolicy::LocalSegments
+        };
+        ClientStore {
+            source,
+            layout,
+            policy,
+            init_params,
+            shards: (0..STORE_SHARDS).map(|_| HashMap::new()).collect(),
+            touched: 0,
+        }
+    }
+
+    pub fn population(&self) -> usize {
+        self.source.population()
+    }
+
+    pub fn policy(&self) -> ParamPolicy {
+        self.policy
+    }
+
+    /// Is this a virtual (lazily synthesized) population?
+    pub fn is_virtual(&self) -> bool {
+        matches!(self.source, ClientDataSource::Lazy { .. })
+    }
+
+    /// Clients with any instantiated state (the "historically touched"
+    /// set the memory bound is phrased in).
+    pub fn touched(&self) -> usize {
+        self.touched
+    }
+
+    /// Client `cid`'s dataset for this round, materialized immediately.
+    /// Eager: a shared handle. Lazy: synthesized now, owned by the
+    /// caller, dropped when the caller is done — the store keeps nothing.
+    pub fn dataset(&self, cid: usize) -> Arc<Dataset> {
+        self.round_data(cid).materialize()
+    }
+
+    /// Client `cid`'s dataset handle for one round. For lazy sources the
+    /// synthesis is **deferred**: the handle carries the provider, and
+    /// the worker thread running the job materializes it — keeping the
+    /// O(per_client) generation work off the coordinator thread (the
+    /// provider is deterministic in `cid`, so where it runs cannot change
+    /// results).
+    pub fn round_data(&self, cid: usize) -> RoundData {
+        assert!(cid < self.population(), "client {cid} out of population");
+        match &self.source {
+            ClientDataSource::Eager(v) => RoundData::Shared(Arc::clone(&v[cid])),
+            ClientDataSource::Lazy { provider, .. } => {
+                RoundData::Deferred { cid, provider: Arc::clone(provider) }
+            }
+        }
+    }
+
+    #[inline]
+    fn shard_of(cid: usize) -> usize {
+        cid & (STORE_SHARDS - 1)
+    }
+
+    fn record(&self, cid: usize) -> Option<&ClientRecord> {
+        self.shards[Self::shard_of(cid)].get(&cid)
+    }
+
+    fn record_mut(&mut self, cid: usize) -> &mut ClientRecord {
+        assert!(cid < self.population(), "client {cid} out of population");
+        let touched = &mut self.touched;
+        self.shards[Self::shard_of(cid)].entry(cid).or_insert_with(|| {
+            *touched += 1;
+            ClientRecord::default()
+        })
+    }
+
+    /// The full parameter vector client `cid` enters a round with (before
+    /// any download) — exactly what the eager path stored per client:
+    /// the shared init overlaid with whatever this client persisted.
+    pub fn round_params(&self, cid: usize) -> Vec<f32> {
+        assert!(cid < self.population(), "client {cid} out of population");
+        let stored = self.record(cid).and_then(|r| r.params.as_ref());
+        match (self.policy, stored) {
+            (ParamPolicy::FullVector, Some(full)) => full.clone(),
+            (ParamPolicy::LocalSegments, Some(local)) => {
+                let mut p = self.init_params.as_ref().clone();
+                self.layout.scatter_local(&mut p, local);
+                p
+            }
+            // Untouched (or Dropped-policy) clients are implicitly the
+            // shared init — the "round-trips as exactly the server
+            // global" invariant.
+            _ => self.init_params.as_ref().clone(),
+        }
+    }
+
+    /// SCAFFOLD control variate c_i (zeros until the client first
+    /// uploads one). Does not instantiate a record.
+    pub fn control(&self, cid: usize, dim: usize) -> Vec<f32> {
+        match self.record(cid).and_then(|r| r.control.as_ref()) {
+            Some(c) => c.clone(),
+            None => vec![0.0; dim],
+        }
+    }
+
+    /// FedDyn λ_i (zeros until first update). Does not instantiate a
+    /// record.
+    pub fn lambda(&self, cid: usize, dim: usize) -> Vec<f32> {
+        match self.record(cid).and_then(|r| r.lambda.as_ref()) {
+            Some(l) => l.clone(),
+            None => vec![0.0; dim],
+        }
+    }
+
+    pub fn participations(&self, cid: usize) -> u32 {
+        self.record(cid).map(|r| r.participations).unwrap_or(0)
+    }
+
+    /// Commit one participant's post-round state. `params` is the
+    /// client's full post-training vector; the policy decides what (if
+    /// anything) of it persists.
+    pub fn commit(
+        &mut self,
+        cid: usize,
+        params: Vec<f32>,
+        control: Option<Vec<f32>>,
+        lambda: Option<Vec<f32>>,
+    ) {
+        let policy = self.policy;
+        let layout = Arc::clone(&self.layout);
+        let rec = self.record_mut(cid);
+        rec.participations += 1;
+        match policy {
+            ParamPolicy::Dropped => {}
+            ParamPolicy::LocalSegments => rec.params = Some(layout.gather_local(&params)),
+            ParamPolicy::FullVector => rec.params = Some(params),
+        }
+        if let Some(c) = control {
+            rec.control = Some(c);
+        }
+        if let Some(l) = lambda {
+            rec.lambda = Some(l);
+        }
+    }
+
+    /// Bytes of live per-client state held right now: the shared init, the
+    /// sparse records (+ a conservative per-entry map overhead), and — in
+    /// eager mode — the caller's datasets. The scale suite asserts this is
+    /// O(participants + touched), independent of population.
+    pub fn live_state_bytes(&self) -> usize {
+        // Map entry ≈ key + record struct + bucket slot; 2× the payload
+        // size is a deliberate overestimate so the asserted bound is
+        // honest about allocator slack.
+        const ENTRY_OVERHEAD: usize =
+            2 * (std::mem::size_of::<usize>() + std::mem::size_of::<ClientRecord>());
+        let records: usize = self
+            .shards
+            .iter()
+            .flat_map(|s| s.values())
+            .map(|r| r.heap_bytes() + ENTRY_OVERHEAD)
+            .sum();
+        self.init_params.len() * 4 + records + self.source.heap_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parameterization::{Segment, SegmentKind};
+
+    fn split_layout() -> Arc<Layout> {
+        Arc::new(
+            Layout::new(vec![
+                Segment { name: "g".into(), offset: 0, len: 4, kind: SegmentKind::Global, init_std: 0.0 },
+                Segment { name: "l".into(), offset: 4, len: 3, kind: SegmentKind::Local, init_std: 0.0 },
+            ])
+            .unwrap(),
+        )
+    }
+
+    fn lazy_store(population: usize, layout: Arc<Layout>, local_only: bool) -> ClientStore {
+        let init = Arc::new((0..layout.total).map(|i| i as f32).collect::<Vec<_>>());
+        let source = ClientDataSource::lazy(population, |cid| Dataset {
+            features: vec![cid as f32; 2],
+            labels: vec![0, 1],
+            feature_dim: 1,
+            num_classes: 2,
+        });
+        ClientStore::new(source, layout, init, local_only)
+    }
+
+    #[test]
+    fn untouched_clients_are_implicit_init() {
+        let store = lazy_store(1_000_000, split_layout(), false);
+        assert_eq!(store.population(), 1_000_000);
+        assert_eq!(store.touched(), 0);
+        assert_eq!(store.round_params(999_999), (0..7).map(|i| i as f32).collect::<Vec<_>>());
+        assert_eq!(store.control(5, 7), vec![0.0; 7]);
+        assert_eq!(store.lambda(5, 7), vec![0.0; 7]);
+        assert_eq!(store.participations(5), 0);
+        // Reads never instantiate state.
+        assert_eq!(store.touched(), 0);
+    }
+
+    #[test]
+    fn lazy_datasets_are_deterministic_and_round_scoped() {
+        let store = lazy_store(100, split_layout(), false);
+        let a = store.dataset(7);
+        let b = store.dataset(7);
+        assert_eq!(a.features, b.features);
+        assert_eq!(Arc::strong_count(&a), 1, "lazy datasets are caller-owned");
+        assert_ne!(store.dataset(8).features, a.features);
+    }
+
+    #[test]
+    fn commit_persists_only_local_segments_under_partial_sharing() {
+        let mut store = lazy_store(100, split_layout(), false);
+        assert_eq!(store.policy(), ParamPolicy::LocalSegments);
+        let trained: Vec<f32> = (0..7).map(|i| 100.0 + i as f32).collect();
+        store.commit(3, trained, None, None);
+        assert_eq!(store.touched(), 1);
+        assert_eq!(store.participations(3), 1);
+        // Round params = init overlaid with the persisted local segment.
+        let p = store.round_params(3);
+        assert_eq!(&p[..4], &[0.0, 1.0, 2.0, 3.0], "global half stays at init");
+        assert_eq!(&p[4..], &[104.0, 105.0, 106.0], "local half persisted");
+    }
+
+    #[test]
+    fn full_sharing_drops_params_but_counts_participation() {
+        let all_global = Arc::new(Layout::single(7));
+        let init = Arc::new(vec![1.5f32; 7]);
+        let mut store = ClientStore::new(
+            ClientDataSource::lazy(1000, |_| Dataset {
+                features: vec![0.0],
+                labels: vec![0],
+                feature_dim: 1,
+                num_classes: 2,
+            }),
+            all_global,
+            init,
+            false,
+        );
+        assert_eq!(store.policy(), ParamPolicy::Dropped);
+        let before = store.live_state_bytes();
+        store.commit(9, vec![9.0; 7], None, None);
+        assert_eq!(store.participations(9), 1);
+        assert_eq!(store.round_params(9), vec![1.5; 7], "params dropped under full sharing");
+        // A dropped-policy commit adds only the map entry, no vectors.
+        assert!(store.live_state_bytes() - before < 256);
+    }
+
+    #[test]
+    fn local_only_persists_full_vector() {
+        let mut store = lazy_store(100, split_layout(), true);
+        assert_eq!(store.policy(), ParamPolicy::FullVector);
+        store.commit(2, vec![7.0; 7], None, None);
+        assert_eq!(store.round_params(2), vec![7.0; 7]);
+    }
+
+    #[test]
+    fn live_state_is_population_independent() {
+        let small = lazy_store(1_000, split_layout(), false);
+        let huge = lazy_store(1_000_000, split_layout(), false);
+        assert_eq!(small.live_state_bytes(), huge.live_state_bytes());
+        let mut huge = huge;
+        for cid in 0..10 {
+            huge.commit(cid * 31, vec![0.0; 7], Some(vec![0.0; 7]), None);
+        }
+        assert_eq!(huge.touched(), 10);
+        // 10 records of a 7-dim model: comfortably under a kilobyte each.
+        assert!(huge.live_state_bytes() < small.live_state_bytes() + 10 * 1024);
+    }
+
+    #[test]
+    fn from_partition_matches_eager_subsets() {
+        let data = Arc::new(Dataset {
+            features: (0..20).map(|i| i as f32).collect(),
+            labels: (0..10).map(|i| (i % 2) as u32).collect(),
+            feature_dim: 2,
+            num_classes: 2,
+        });
+        let part = Arc::new(Partition { clients: vec![vec![0, 2, 4], vec![1, 3], vec![5, 6, 7, 8, 9]] });
+        let src = ClientDataSource::from_partition(Arc::clone(&data), Arc::clone(&part));
+        assert_eq!(src.population(), 3);
+        let store = ClientStore::new(src, Arc::new(Layout::single(1)), Arc::new(vec![0.0]), false);
+        for cid in 0..3 {
+            let lazy = store.dataset(cid);
+            let eager = data.subset(part.client(cid));
+            assert_eq!(lazy.features, eager.features);
+            assert_eq!(lazy.labels, eager.labels);
+        }
+    }
+}

@@ -76,6 +76,12 @@ impl Dataset {
         }
     }
 
+    /// Heap bytes held by this dataset (live-state accounting for the
+    /// coordinator's `ClientStore`).
+    pub fn heap_bytes(&self) -> usize {
+        self.features.capacity() * 4 + self.labels.capacity() * 4
+    }
+
     /// Per-class sample counts (for partition diagnostics / tests).
     pub fn class_counts(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.num_classes];

@@ -25,6 +25,12 @@ impl Partition {
         self.clients.iter().map(|c| c.len()).sum()
     }
 
+    /// Client `cid`'s sample indices — the per-client view the lazy
+    /// `ClientDataSource::from_partition` materializes subsets from.
+    pub fn client(&self, cid: usize) -> &[usize] {
+        &self.clients[cid]
+    }
+
     /// Validate: every index in [0, n) appears exactly once.
     pub fn validate(&self, n: usize) -> Result<(), String> {
         let mut seen = vec![false; n];

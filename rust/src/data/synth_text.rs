@@ -126,6 +126,24 @@ pub fn generate(spec: &TextSpec, n: usize, seed: u64) -> Dataset {
     d
 }
 
+/// Generate role `role`'s corpus **on demand** — O(per_client) work,
+/// independent of federation size. The per-client unit of
+/// [`generate_federation`] (defined in terms of it, so eager and lazy
+/// constructions are bit-identical) and the provider behind cross-device
+/// virtual text populations.
+pub fn client_dataset(
+    spec: &TextSpec,
+    role: usize,
+    per_client: usize,
+    h: f64,
+    seed: u64,
+) -> Dataset {
+    let chain = Chain::for_role(spec, role, h);
+    let mut rng = Rng::new(seed ^ (0xD1A1 + role as u64 * 0x7_0000_000B));
+    let stream = chain.stream(per_client * spec.seq_len + 1, &mut rng);
+    chop(&stream, spec.seq_len, spec.vocab)
+}
+
 /// Generate a per-role federation: each client has its own dialect of
 /// strength `h`, plus a base-chain test set.
 pub fn generate_federation(
@@ -136,14 +154,7 @@ pub fn generate_federation(
     test_n: usize,
     seed: u64,
 ) -> (Vec<Dataset>, Dataset) {
-    let locals = (0..clients)
-        .map(|c| {
-            let chain = Chain::for_role(spec, c, h);
-            let mut rng = Rng::new(seed ^ (0xD1A1 + c as u64 * 0x7_0000_000B));
-            let stream = chain.stream(per_client * spec.seq_len + 1, &mut rng);
-            chop(&stream, spec.seq_len, spec.vocab)
-        })
-        .collect();
+    let locals = (0..clients).map(|c| client_dataset(spec, c, per_client, h, seed)).collect();
     let test = generate(spec, test_n, seed ^ 0x7E57_7E57);
     (locals, test)
 }
@@ -219,6 +230,16 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .sum();
         assert!(dist > 1.0, "role chains should differ, L1={dist}");
+    }
+
+    #[test]
+    fn client_dataset_is_on_demand_slice_of_federation() {
+        let spec = shakespeare_like();
+        let (locals, _test) = generate_federation(&spec, 4, 20, 0.5, 32, 77);
+        for (c, eager) in locals.iter().enumerate() {
+            let lazy = client_dataset(&spec, c, 20, 0.5, 77);
+            assert_eq!(lazy.features, eager.features, "role {c}");
+        }
     }
 
     #[test]

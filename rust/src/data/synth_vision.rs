@@ -191,6 +191,24 @@ pub fn generate_with_style(spec: &VisionSpec, n: usize, seed: u64, style: &Write
     Dataset { features, labels, feature_dim: fdim, num_classes: spec.classes }
 }
 
+/// Generate writer `w`'s dataset **on demand** — O(per_writer) work and
+/// memory, independent of how many writers the federation has. This is
+/// the per-client unit of [`generate_federation`] (which is defined in
+/// terms of it, so eager and lazy constructions are bit-identical) and
+/// the provider behind the cross-device virtual populations: a
+/// `ClientDataSource::lazy` over this function simulates millions of
+/// writers without ever materializing them all.
+pub fn client_dataset(
+    spec: &VisionSpec,
+    writer: usize,
+    per_writer: usize,
+    h: f64,
+    seed: u64,
+) -> Dataset {
+    let style = WriterStyle::for_writer(writer, h, spec.family_seed);
+    generate_with_style(spec, per_writer, seed ^ (writer as u64 * 0x51_7E), &style)
+}
+
 /// Generate a per-writer federation: `writers` datasets of `per_writer`
 /// samples each, with writer heterogeneity `h` (0 = IID writers), plus a
 /// style-neutral pooled test set of `test_n` samples.
@@ -202,12 +220,7 @@ pub fn generate_federation(
     test_n: usize,
     seed: u64,
 ) -> (Vec<Dataset>, Dataset) {
-    let locals = (0..writers)
-        .map(|w| {
-            let style = WriterStyle::for_writer(w, h, spec.family_seed);
-            generate_with_style(spec, per_writer, seed ^ (w as u64 * 0x51_7E), &style)
-        })
-        .collect();
+    let locals = (0..writers).map(|w| client_dataset(spec, w, per_writer, h, seed)).collect();
     let test = generate(spec, test_n, seed ^ 0x7E57);
     (locals, test)
 }
@@ -305,6 +318,25 @@ mod tests {
         assert!(
             between > within,
             "between-writer distance {between:.3} should exceed within-writer {within:.3}"
+        );
+    }
+
+    #[test]
+    fn client_dataset_is_on_demand_slice_of_federation() {
+        // The lazy per-writer generator must reproduce exactly what the
+        // eager federation hands out — this is what makes eager and
+        // virtual federations bit-identical.
+        let spec = femnist_like();
+        let (locals, _test) = generate_federation(&spec, 5, 32, 0.7, 16, 99);
+        for (w, eager) in locals.iter().enumerate() {
+            let lazy = client_dataset(&spec, w, 32, 0.7, 99);
+            assert_eq!(lazy.features, eager.features, "writer {w}");
+            assert_eq!(lazy.labels, eager.labels);
+        }
+        // And it is deterministic call-over-call.
+        assert_eq!(
+            client_dataset(&spec, 3, 32, 0.7, 99).features,
+            client_dataset(&spec, 3, 32, 0.7, 99).features
         );
     }
 

@@ -7,6 +7,7 @@
 
 pub mod common;
 pub mod fig3;
+pub mod scale;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
@@ -135,6 +136,12 @@ pub fn registry() -> Vec<(&'static str, &'static str, &'static str, ExpFn)> {
             "Figure 8 (supp)",
             "ResNet: accuracy vs communication + GB to target",
             fig8::run,
+        ),
+        (
+            "scale",
+            "cross-device",
+            "million-client virtual federation: round cost O(participants)",
+            scale::run,
         ),
     ]
 }

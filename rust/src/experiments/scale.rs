@@ -1,0 +1,167 @@
+//! Cross-device scale scenario: a federated round over a **virtual
+//! population** of up to 10⁶ clients (the classic cross-device regime of
+//! Konečný et al. 2016 that motivates FedPara's communication argument).
+//!
+//! Clients are never materialized up front: each participant's dataset is
+//! synthesized deterministically on demand and dropped at the end of its
+//! round, and per-client persistent state is instantiated sparsely on
+//! first participation (`coordinator::ClientStore`). The scenario runs the
+//! same round twice — once over a small control population and once over
+//! the headline population, with the **same participant count** — and
+//! reports:
+//!
+//! * per-round wall time (O(participants): the ratio should be ≈1);
+//! * `live_state_bytes` (O(participants + touched): the ratio should be
+//!   ≈1, *not* the 100× the populations differ by);
+//! * `CommLedger` totals (bytes scale with participants, not population).
+//!
+//! `--scale paper` is the acceptance configuration: 10⁶ virtual clients at
+//! 0.1% participation. The same measurement runs continuously in CI via
+//! the `bench_report` scale section.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::common::{banner, print_row, resolve_artifact_set, ExpCtx};
+use crate::config::{Optimizer, RunConfig, Sharing};
+use crate::coordinator::{ClientDataSource, Federation};
+use crate::data::synth_vision;
+use crate::util::json::Json;
+
+struct ScaleRun {
+    population: usize,
+    participants: usize,
+    rounds: usize,
+    mean_round_secs: f64,
+    live_state_bytes: usize,
+    touched: usize,
+    up_bytes: u64,
+    down_bytes: u64,
+    final_loss: f64,
+}
+
+impl ScaleRun {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("population", Json::Num(self.population as f64)),
+            ("participants", Json::Num(self.participants as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("mean_round_secs", Json::Num(self.mean_round_secs)),
+            ("live_state_bytes", Json::Num(self.live_state_bytes as f64)),
+            ("touched_clients", Json::Num(self.touched as f64)),
+            ("up_bytes", Json::Num(self.up_bytes as f64)),
+            ("down_bytes", Json::Num(self.down_bytes as f64)),
+            ("final_train_loss", Json::Num(self.final_loss)),
+        ])
+    }
+}
+
+/// Run `rounds` federated rounds over a virtual writer-heterogeneous
+/// population, timing each round and measuring live store state after.
+fn run_population(
+    ctx: &ExpCtx,
+    artifact: &str,
+    population: usize,
+    sample_frac: f64,
+    per_client: usize,
+    rounds: usize,
+) -> Result<ScaleRun> {
+    let spec = synth_vision::mnist_like();
+    let seed = ctx.seed;
+    let source = ClientDataSource::lazy(population, move |cid| {
+        synth_vision::client_dataset(&spec, cid, per_client, 0.5, seed)
+    });
+    let test = synth_vision::generate(&spec, 256, ctx.seed ^ 0x5CA1E);
+    let cfg = RunConfig {
+        artifact: artifact.to_string(),
+        sample_frac,
+        rounds,
+        local_epochs: 1,
+        lr: 0.05,
+        lr_decay: 1.0,
+        optimizer: Optimizer::FedAvg,
+        quantize_upload: false,
+        sharing: Sharing::Full,
+        eval_every: 0,
+        seed: ctx.seed,
+        num_threads: 0,
+    };
+    let mut fed = Federation::new_virtual(ctx.engine, cfg, source, test)?;
+    let mut secs = 0.0f64;
+    let mut final_loss = f64::NAN;
+    for _ in 0..rounds {
+        let t0 = Instant::now();
+        let r = fed.run_round()?;
+        secs += t0.elapsed().as_secs_f64();
+        final_loss = r.mean_train_loss;
+    }
+    Ok(ScaleRun {
+        population,
+        participants: fed.reports.last().map(|r| r.participants).unwrap_or(0),
+        rounds,
+        mean_round_secs: secs / rounds.max(1) as f64,
+        live_state_bytes: fed.live_state_bytes(),
+        touched: fed.store().touched(),
+        up_bytes: fed.comm.up_bytes,
+        down_bytes: fed.comm.down_bytes,
+        final_loss,
+    })
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<Json> {
+    banner(
+        "scale",
+        "cross-device",
+        "million-client virtual federation (lazy store, sparse state)",
+        ctx.scale,
+    );
+    let (population, sample_frac, per_client) = ctx.scale.cross_device_population();
+    let participants = ((population as f64 * sample_frac).round() as usize).max(1);
+    let rounds = ctx.rounds.unwrap_or(3);
+    let artifact = resolve_artifact_set(ctx, &["mlp10_orig"], &["native_mlp10_orig"])[0];
+
+    // Control: a 100×-smaller population at the *same* participant count.
+    // Everything that matters per round should be identical.
+    let control_pop = (population / 100).max(participants.max(1000));
+    let control_frac = participants as f64 / control_pop as f64;
+
+    let control = run_population(ctx, artifact, control_pop, control_frac, per_client, rounds)?;
+    let headline = run_population(ctx, artifact, population, sample_frac, per_client, rounds)?;
+
+    let fmt = |r: &ScaleRun| {
+        vec![
+            format!("{:>9}", r.participants),
+            format!("{:>10.1} ms/round", r.mean_round_secs * 1e3),
+            format!("{:>12} B live", r.live_state_bytes),
+            format!("{:>7} touched", r.touched),
+            format!("{:>10.3} MB up", r.up_bytes as f64 / 1e6),
+            format!("{:>10.3} MB down", r.down_bytes as f64 / 1e6),
+        ]
+    };
+    println!("population    participants  round time     live state   touched   comm");
+    print_row(&format!("{:>10}", control.population), &fmt(&control));
+    print_row(&format!("{:>10}", headline.population), &fmt(&headline));
+
+    let live_ratio = headline.live_state_bytes as f64 / control.live_state_bytes.max(1) as f64;
+    let time_ratio = headline.mean_round_secs / control.mean_round_secs.max(1e-12);
+    let pop_ratio = headline.population as f64 / control.population as f64;
+    println!(
+        "\npopulation grew {pop_ratio:.0}x; live state {live_ratio:.3}x, round time {time_ratio:.2}x \
+         (both should stay ~1x: round cost is O(participants), not O(population))"
+    );
+    println!(
+        "comm per participant-round: {:.1} kB up / {:.1} kB down (population-independent)",
+        headline.up_bytes as f64 / (headline.participants * headline.rounds).max(1) as f64 / 1e3,
+        headline.down_bytes as f64 / (headline.participants * headline.rounds).max(1) as f64 / 1e3,
+    );
+
+    Ok(Json::obj(vec![
+        ("artifact", Json::Str(artifact.to_string())),
+        ("control", control.to_json()),
+        ("headline", headline.to_json()),
+        ("live_bytes_ratio", Json::Num(live_ratio)),
+        ("round_time_ratio", Json::Num(time_ratio)),
+        ("population_ratio", Json::Num(pop_ratio)),
+    ]))
+}

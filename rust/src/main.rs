@@ -12,7 +12,8 @@ use std::path::PathBuf;
 use anyhow::{anyhow, Result};
 
 use fedpara::config::{Optimizer, RunConfig, Scale, Sharing};
-use fedpara::coordinator::Federation;
+use fedpara::coordinator::{ClientDataSource, Federation};
+use fedpara::data::{synth_text, synth_vision};
 use fedpara::experiments::{self, common, ExpCtx};
 use fedpara::runtime::Engine;
 use fedpara::util::cli::Args;
@@ -60,6 +61,17 @@ fn make_ctx<'a>(engine: &'a Engine, args: &Args) -> Result<ExpCtx<'a>> {
             .map(|v| v.parse())
             .transpose()
             .map_err(|_| anyhow!("--repeats expects an integer"))?,
+    })
+}
+
+fn vision_kind(dataset: &str) -> Result<common::VisionKind> {
+    Ok(match dataset {
+        "cifar10" => common::VisionKind::Cifar10,
+        "cifar100" => common::VisionKind::Cifar100,
+        "cinic10" => common::VisionKind::Cinic10,
+        "mnist" => common::VisionKind::Mnist,
+        "femnist" => common::VisionKind::Femnist,
+        other => return Err(anyhow!("unknown dataset '{other}'")),
     })
 }
 
@@ -146,26 +158,24 @@ fn dispatch(mut args: Args) -> Result<()> {
                 .declare("frac", "client sample fraction per round")
                 .declare("quantize", "fp16 uplink quantization (FedPAQ)")
                 .declare("pfedpara", "share only global segments (pFedPara)")
-                .declare("threads", "worker threads for the client fan-out (0 = host)");
+                .declare("threads", "worker threads for the client fan-out (0 = host)")
+                .declare(
+                    "population",
+                    "cross-device: virtual client population (per-client data synthesized \
+                     lazily per round; state stays O(participants), so millions work)",
+                )
+                .declare("per-client", "samples per virtual client (with --population; default 16)");
             args.validate().map_err(|e| anyhow!(e))?;
             let engine = engine_from(&args)?;
             let ctx = make_ctx(&engine, &args)?;
             let artifact = args.get_or("artifact", "mlp10_orig").to_string();
             let dataset = args.get_or("dataset", "mnist").to_string();
             let non_iid = args.flag("non-iid");
-            let (locals, test) = if dataset == "shakespeare" {
-                common::text_federation(non_iid, ctx.scale, ctx.seed)
-            } else {
-                let kind = match dataset.as_str() {
-                    "cifar10" => common::VisionKind::Cifar10,
-                    "cifar100" => common::VisionKind::Cifar100,
-                    "cinic10" => common::VisionKind::Cinic10,
-                    "mnist" => common::VisionKind::Mnist,
-                    "femnist" => common::VisionKind::Femnist,
-                    other => return Err(anyhow!("unknown dataset '{other}'")),
-                };
-                common::vision_federation(kind, non_iid, ctx.scale, ctx.seed)
-            };
+            let population = args
+                .get("population")
+                .map(|v| v.parse::<usize>())
+                .transpose()
+                .map_err(|_| anyhow!("--population expects an integer"))?;
             let cfg = RunConfig {
                 artifact,
                 sample_frac: args
@@ -191,14 +201,50 @@ fn dispatch(mut args: Args) -> Result<()> {
             };
             let rounds = cfg.rounds;
             println!(
-                "run: artifact={} dataset={} non_iid={} optimizer={} rounds={}",
+                "run: artifact={} dataset={} non_iid={} optimizer={} rounds={}{}",
                 cfg.artifact,
                 dataset,
                 non_iid,
                 cfg.optimizer.name(),
-                rounds
+                rounds,
+                population
+                    .map(|p| format!(" population={p} (virtual)"))
+                    .unwrap_or_default()
             );
-            let mut fed = Federation::new(&engine, cfg, locals, test)?;
+            let mut fed = if let Some(population) = population {
+                // Cross-device mode: a lazy virtual population; per-client
+                // heterogeneity mirrors the eager federation builders
+                // (writer styles / role dialects).
+                let per_client = args.get_usize("per-client", 16).map_err(|e| anyhow!(e))?;
+                let h = if non_iid { 0.8 } else { 0.0 };
+                let seed = ctx.seed;
+                let (source, test) = if dataset == "shakespeare" {
+                    let spec = synth_text::shakespeare_like();
+                    (
+                        ClientDataSource::lazy(population, move |cid| {
+                            synth_text::client_dataset(&spec, cid, per_client, h, seed)
+                        }),
+                        synth_text::generate(&spec, 256, seed ^ 0x7E57_7E57),
+                    )
+                } else {
+                    let kind = vision_kind(&dataset)?;
+                    let spec = kind.spec();
+                    (
+                        ClientDataSource::lazy(population, move |cid| {
+                            synth_vision::client_dataset(&spec, cid, per_client, h, seed)
+                        }),
+                        synth_vision::generate(&spec, 512, seed ^ 0x7E57_0001),
+                    )
+                };
+                Federation::new_virtual(&engine, cfg, source, test)?
+            } else {
+                let (locals, test) = if dataset == "shakespeare" {
+                    common::text_federation(non_iid, ctx.scale, ctx.seed)
+                } else {
+                    common::vision_federation(vision_kind(&dataset)?, non_iid, ctx.scale, ctx.seed)
+                };
+                Federation::new(&engine, cfg, locals, test)?
+            };
             for _ in 0..rounds {
                 let r = fed.run_round()?;
                 println!(
@@ -219,6 +265,15 @@ fn dispatch(mut args: Args) -> Result<()> {
                 fed.comm.total_gbytes(),
                 fed.comm.total_energy_mj()
             );
+            if fed.store().is_virtual() {
+                println!(
+                    "store: {} virtual clients, {} touched, {} B live state \
+                     (O(participants), not O(population))",
+                    fed.num_clients(),
+                    fed.store().touched(),
+                    fed.live_state_bytes()
+                );
+            }
             Ok(())
         }
         Some("help") | None => {

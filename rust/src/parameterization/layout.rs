@@ -167,6 +167,38 @@ impl Layout {
         }
     }
 
+    /// Gather the **local** segments of `params` into a dense vector — the
+    /// mirror of [`Layout::gather_global`]. This is what the sparse
+    /// [`ClientStore`] persists per touched client under partial sharing
+    /// (pFedPara/FedPer): global segments are overwritten by the next
+    /// download anyway, so only the local half needs to live on.
+    ///
+    /// [`ClientStore`]: crate::coordinator::ClientStore
+    pub fn gather_local(&self, params: &[f32]) -> Vec<f32> {
+        assert_eq!(params.len(), self.total, "param length mismatch");
+        let mut out = Vec::with_capacity(self.local_len());
+        for s in &self.segments {
+            if s.kind == SegmentKind::Local {
+                out.extend_from_slice(&params[s.offset..s.offset + s.len]);
+            }
+        }
+        out
+    }
+
+    /// Scatter a dense local vector back into `params`, leaving global
+    /// segments untouched — the mirror of [`Layout::scatter_global`].
+    pub fn scatter_local(&self, params: &mut [f32], local: &[f32]) {
+        assert_eq!(params.len(), self.total, "param length mismatch");
+        assert_eq!(local.len(), self.local_len(), "local length mismatch");
+        let mut pos = 0usize;
+        for s in &self.segments {
+            if s.kind == SegmentKind::Local {
+                params[s.offset..s.offset + s.len].copy_from_slice(&local[pos..pos + s.len]);
+                pos += s.len;
+            }
+        }
+    }
+
     /// Find a segment by name.
     pub fn segment(&self, name: &str) -> Option<&Segment> {
         self.segments.iter().find(|s| s.name == name)
@@ -251,6 +283,32 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn local_gather_scatter_mirrors_global() {
+        let l = demo_layout();
+        let params: Vec<f32> = (0..25).map(|i| i as f32).collect();
+        let local = l.gather_local(&params);
+        // Local segments: l1.x2 (10..16), l1.y2 (16..20).
+        let expected: Vec<f32> = (10..20).map(|i| i as f32).collect();
+        assert_eq!(local, expected);
+
+        let mut target = vec![-1.0f32; 25];
+        l.scatter_local(&mut target, &local);
+        for s in &l.segments {
+            for i in s.offset..s.offset + s.len {
+                match s.kind {
+                    SegmentKind::Local => assert_eq!(target[i], params[i]),
+                    SegmentKind::Global => assert_eq!(target[i], -1.0),
+                }
+            }
+        }
+        // global + local scatters together reconstruct the full vector.
+        let mut full = vec![0f32; 25];
+        l.scatter_global(&mut full, &l.gather_global(&params));
+        l.scatter_local(&mut full, &local);
+        assert_eq!(full, params);
     }
 
     #[test]

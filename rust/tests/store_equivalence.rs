@@ -1,0 +1,219 @@
+//! Eager-vs-lazy equivalence golden suite (ISSUE 5).
+//!
+//! The `ClientStore` refactor must change **nothing** at paper scale: a
+//! federation built the classic way (`Federation::new` over materialized
+//! per-client datasets) and the same federation built over a lazy
+//! [`ClientDataSource`] (per-round on-demand datasets + sparse per-client
+//! state) must produce bit-identical `RoundReport` streams, communication
+//! ledgers, and final `server_global()` vectors — for all 5 optimizers at
+//! the paper's 100-client / 16% participation config, and across every
+//! `Sharing` mode (full, pFedPara global-segments, FedPer, local-only).
+//!
+//! This is the contract that makes the cross-device scale path trustworthy:
+//! anything it computes is exactly what the eager reference would have.
+
+use std::sync::Arc;
+
+use fedpara::config::{Optimizer, RunConfig, Sharing};
+use fedpara::coordinator::{ClientDataSource, Federation};
+use fedpara::data::{partition, synth_vision, Dataset};
+use fedpara::runtime::native::{self, NativeScheme, NativeSpec};
+use fedpara::runtime::{BatchShape, Engine};
+use fedpara::util::rng::Rng;
+
+const CLIENTS: usize = 100; // The paper's population.
+const PER_CLIENT: usize = 20;
+
+/// Small-hidden artifacts so the 100-client sweeps stay fast in debug
+/// builds (equivalence cannot depend on model size).
+fn engine() -> Engine {
+    let train = BatchShape { nbatches: 2, batch: 16, feature_dim: 784 };
+    let eval = BatchShape { nbatches: 2, batch: 64, feature_dim: 784 };
+    let spec = |scheme| NativeSpec::mlp_dims(784, 24, 10, scheme);
+    Engine::with_artifacts(vec![
+        native::artifact("eq_orig", spec(NativeScheme::Original), train, eval),
+        native::artifact("eq_pfedpara", spec(NativeScheme::PFedPara { gamma: 0.5 }), train, eval),
+    ])
+}
+
+/// The shared pool + IID partition both constructions draw from.
+fn pool_and_partition(seed: u64) -> (Arc<Dataset>, Arc<partition::Partition>, Dataset) {
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, CLIENTS * PER_CLIENT, seed);
+    let test = synth_vision::generate(&spec, 256, seed ^ 0xE0E0);
+    let mut rng = Rng::new(seed);
+    let part = partition::iid(data.len(), CLIENTS, &mut rng);
+    (Arc::new(data), Arc::new(part), test)
+}
+
+fn paper_cfg(artifact: &str, optimizer: Optimizer, sharing: Sharing) -> RunConfig {
+    RunConfig {
+        artifact: artifact.into(),
+        sample_frac: 0.16, // Paper: 16 of 100 clients per round.
+        rounds: 2,
+        local_epochs: 1,
+        lr: 0.1,
+        lr_decay: 0.992,
+        optimizer,
+        quantize_upload: false,
+        sharing,
+        eval_every: 1,
+        seed: 23,
+        num_threads: 2,
+    }
+}
+
+/// Everything a run produces, bit-exact (wall-clock excluded).
+#[derive(Debug, PartialEq)]
+struct RunKey {
+    reports: Vec<(usize, u32, usize, u64, u64, u64, u64, Option<u64>, Option<u64>)>,
+    server_global: Vec<u32>,
+    ledger: Vec<(u64, u64)>,
+}
+
+fn run_key(mut fed: Federation, rounds: usize) -> RunKey {
+    fed.run(rounds).unwrap();
+    RunKey {
+        reports: fed
+            .reports
+            .iter()
+            .map(|r| {
+                (
+                    r.round,
+                    r.lr.to_bits(),
+                    r.participants,
+                    r.mean_train_loss.to_bits(),
+                    r.up_bytes,
+                    r.down_bytes,
+                    r.cum_gbytes.to_bits(),
+                    r.test_acc.map(f64::to_bits),
+                    r.test_loss.map(f64::to_bits),
+                )
+            })
+            .collect(),
+        server_global: fed.server_global().iter().map(|p| p.to_bits()).collect(),
+        ledger: fed.comm.per_round.clone(),
+    }
+}
+
+fn eager_fed(cfg: RunConfig) -> Federation {
+    let (data, part, test) = pool_and_partition(5);
+    let locals: Vec<Dataset> = part.clients.iter().map(|idx| data.subset(idx)).collect();
+    Federation::new(&engine(), cfg, locals, test).unwrap()
+}
+
+fn lazy_fed(cfg: RunConfig) -> Federation {
+    let (data, part, test) = pool_and_partition(5);
+    let source = ClientDataSource::from_partition(data, part);
+    Federation::new_virtual(&engine(), cfg, source, test).unwrap()
+}
+
+#[test]
+fn eager_vs_lazy_bit_identical_all_optimizers() {
+    for optimizer in [
+        Optimizer::FedAvg,
+        Optimizer::FedProx { mu: 0.1 },
+        Optimizer::Scaffold,
+        Optimizer::FedDyn { alpha: 0.1 },
+        Optimizer::FedAdam,
+    ] {
+        let cfg = paper_cfg("eq_orig", optimizer, Sharing::Full);
+        let eager = run_key(eager_fed(cfg.clone()), cfg.rounds);
+        let lazy = run_key(lazy_fed(cfg.clone()), cfg.rounds);
+        assert_eq!(eager, lazy, "{}: eager vs lazy diverged", optimizer.name());
+    }
+}
+
+/// Every *legal* optimizer × sharing cell beyond the Full-sharing sweep
+/// above (SCAFFOLD/FedDyn are rejected under partial sharing by
+/// `Federation::new*`, so Full is their whole row). The partial-sharing
+/// cells exercise the sparse store's `LocalSegments` persistence under
+/// every optimizer that can reach it.
+#[test]
+fn eager_vs_lazy_bit_identical_all_sharing_modes() {
+    let fedper = || Sharing::FedPer { local_prefixes: vec!["fc2".into()] };
+    let modes: [(&str, Optimizer, Sharing); 6] = [
+        ("eq_pfedpara", Optimizer::FedAvg, Sharing::GlobalSegments),
+        ("eq_pfedpara", Optimizer::FedProx { mu: 0.1 }, Sharing::GlobalSegments),
+        ("eq_pfedpara", Optimizer::FedAdam, Sharing::GlobalSegments),
+        ("eq_orig", Optimizer::FedAvg, fedper()),
+        ("eq_orig", Optimizer::FedAdam, fedper()),
+        ("eq_orig", Optimizer::FedAvg, Sharing::LocalOnly),
+    ];
+    for (artifact, optimizer, sharing) in modes {
+        let mut cfg = paper_cfg(artifact, optimizer, sharing.clone());
+        if matches!(sharing, Sharing::LocalOnly) {
+            // Local-only runs every client every round; one round keeps
+            // the 100-job sweep cheap (eval is per-client, not global).
+            cfg.rounds = 1;
+            cfg.eval_every = 0;
+        }
+        let rounds = cfg.rounds;
+        let eager = run_key(eager_fed(cfg.clone()), rounds);
+        let lazy = run_key(lazy_fed(cfg.clone()), rounds);
+        assert_eq!(
+            eager,
+            lazy,
+            "{} × {sharing:?}: eager vs lazy diverged",
+            optimizer.name()
+        );
+    }
+}
+
+/// Persisted per-client state (pFedPara local factors) must survive the
+/// sparse store exactly: personalized evaluation — which reconstructs
+/// every client's full vector, touched or not — agrees bit-for-bit.
+#[test]
+fn eager_vs_lazy_personalized_eval_identical() {
+    let cfg = paper_cfg("eq_pfedpara", Optimizer::FedAvg, Sharing::GlobalSegments);
+    let spec = synth_vision::mnist_like();
+    let tests: Vec<Dataset> =
+        (0..CLIENTS).map(|i| synth_vision::generate(&spec, 24, 900 + i as u64)).collect();
+
+    let mut eager = eager_fed(cfg.clone());
+    eager.run(cfg.rounds).unwrap();
+    let mut lazy = lazy_fed(cfg.clone());
+    lazy.run(cfg.rounds).unwrap();
+
+    let e = eager.evaluate_personalized(&tests).unwrap();
+    let l = lazy.evaluate_personalized(&tests).unwrap();
+    assert_eq!(e, l, "personalized accuracies diverged");
+
+    // The lazy store only ever instantiated state for actual participants.
+    let max_touched = cfg.rounds * 16;
+    assert!(
+        lazy.store().touched() <= max_touched,
+        "store touched {} clients, at most {max_touched} participated",
+        lazy.store().touched()
+    );
+}
+
+/// The writer-heterogeneous generator path: an eager
+/// `generate_federation` and a lazy per-writer `client_dataset` provider
+/// are the same federation.
+#[test]
+fn eager_vs_lazy_writer_federation_identical() {
+    let spec = synth_vision::femnist_like();
+    let seed = 71u64;
+    let per_writer = 24usize;
+    let h = 0.8f64;
+    let (locals, test) = synth_vision::generate_federation(&spec, CLIENTS, per_writer, h, 128, seed);
+    let source = ClientDataSource::lazy(CLIENTS, move |cid| {
+        synth_vision::client_dataset(&spec, cid, per_writer, h, seed)
+    });
+
+    // 62-class artifact for the FEMNIST-like shape.
+    let train = BatchShape { nbatches: 2, batch: 16, feature_dim: 784 };
+    let eval = BatchShape { nbatches: 2, batch: 64, feature_dim: 784 };
+    let eng = Engine::with_artifacts(vec![native::artifact(
+        "eq62_orig",
+        NativeSpec::mlp_dims(784, 24, 62, NativeScheme::Original),
+        train,
+        eval,
+    )]);
+    let cfg = paper_cfg("eq62_orig", Optimizer::FedAvg, Sharing::Full);
+    let rounds = cfg.rounds;
+    let eager = run_key(Federation::new(&eng, cfg.clone(), locals, test.clone()).unwrap(), rounds);
+    let lazy = run_key(Federation::new_virtual(&eng, cfg, source, test).unwrap(), rounds);
+    assert_eq!(eager, lazy, "writer federation eager vs lazy diverged");
+}
