@@ -17,15 +17,55 @@ pub enum Optimizer {
 }
 
 impl Optimizer {
+    /// Parse an optimizer spec. Hyperparameterized optimizers accept an
+    /// explicit value — `fedprox:<mu>` / `feddyn:<alpha>` — and fall back
+    /// to the paper's μ = α = 0.1 when given just the bare name.
     pub fn parse(s: &str) -> Result<Optimizer, String> {
-        Ok(match s {
-            "fedavg" => Optimizer::FedAvg,
-            "fedprox" => Optimizer::FedProx { mu: 0.1 },
-            "scaffold" => Optimizer::Scaffold,
-            "feddyn" => Optimizer::FedDyn { alpha: 0.1 },
-            "fedadam" => Optimizer::FedAdam,
-            other => return Err(format!("unknown optimizer '{other}'")),
-        })
+        let (kind, arg) = match s.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (s, None),
+        };
+        let parse_param = |what: &str, default: f32| -> Result<f32, String> {
+            match arg {
+                None => Ok(default),
+                Some(a) => {
+                    let v: f32 = a
+                        .parse()
+                        .map_err(|_| format!("optimizer '{kind}': {what} '{a}' is not a number"))?;
+                    if !v.is_finite() || v < 0.0 {
+                        return Err(format!(
+                            "optimizer '{kind}': {what} must be finite and >= 0, got '{a}'"
+                        ));
+                    }
+                    Ok(v)
+                }
+            }
+        };
+        let no_param = |opt: Optimizer| -> Result<Optimizer, String> {
+            match arg {
+                None => Ok(opt),
+                Some(a) => Err(format!("optimizer '{kind}' takes no parameter (got ':{a}')")),
+            }
+        };
+        match kind {
+            "fedavg" => no_param(Optimizer::FedAvg),
+            "fedprox" => Ok(Optimizer::FedProx { mu: parse_param("mu", 0.1)? }),
+            "scaffold" => no_param(Optimizer::Scaffold),
+            "feddyn" => Ok(Optimizer::FedDyn { alpha: parse_param("alpha", 0.1)? }),
+            "fedadam" => no_param(Optimizer::FedAdam),
+            other => Err(format!("unknown optimizer '{other}'")),
+        }
+    }
+
+    /// Canonical spec string; `parse(spec_string())` round-trips exactly.
+    pub fn spec_string(&self) -> String {
+        match self {
+            Optimizer::FedAvg => "fedavg".into(),
+            Optimizer::FedProx { mu } => format!("fedprox:{mu}"),
+            Optimizer::Scaffold => "scaffold".into(),
+            Optimizer::FedDyn { alpha } => format!("feddyn:{alpha}"),
+            Optimizer::FedAdam => "fedadam".into(),
+        }
     }
 
     pub fn name(&self) -> &'static str {
@@ -52,6 +92,46 @@ pub enum Sharing {
     /// No communication after init — the Figure-5 "FedPAQ/local-only"
     /// baseline (each client trains alone).
     LocalOnly,
+}
+
+impl Sharing {
+    /// Parse a sharing spec: `full`, `pfedpara` (alias `global-segments`),
+    /// `local-only`, or `fedper:<prefix,...>` with comma-separated segment
+    /// name prefixes that stay local (e.g. `fedper:fc2`).
+    pub fn parse(s: &str) -> Result<Sharing, String> {
+        match s {
+            "full" => Ok(Sharing::Full),
+            "pfedpara" | "global-segments" => Ok(Sharing::GlobalSegments),
+            "local-only" => Ok(Sharing::LocalOnly),
+            "fedper" => Err("fedper needs local prefixes: fedper:<prefix,...>".into()),
+            _ => match s.strip_prefix("fedper:") {
+                Some(rest) => {
+                    let prefixes: Vec<String> = rest
+                        .split(',')
+                        .map(|p| p.trim().to_string())
+                        .filter(|p| !p.is_empty())
+                        .collect();
+                    if prefixes.is_empty() {
+                        return Err("fedper needs at least one non-empty prefix".into());
+                    }
+                    Ok(Sharing::FedPer { local_prefixes: prefixes })
+                }
+                None => Err(format!(
+                    "unknown sharing '{s}' (full|pfedpara|local-only|fedper:<prefix,...>)"
+                )),
+            },
+        }
+    }
+
+    /// Canonical spec string; `parse(spec_string())` round-trips exactly.
+    pub fn spec_string(&self) -> String {
+        match self {
+            Sharing::Full => "full".into(),
+            Sharing::GlobalSegments => "pfedpara".into(),
+            Sharing::FedPer { local_prefixes } => format!("fedper:{}", local_prefixes.join(",")),
+            Sharing::LocalOnly => "local-only".into(),
+        }
+    }
 }
 
 /// One federated run.
@@ -187,6 +267,62 @@ mod tests {
             Optimizer::FedProx { .. }
         ));
         assert!(Optimizer::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn optimizer_hyperparameter_syntax() {
+        // Bare names keep the paper defaults...
+        assert_eq!(Optimizer::parse("fedprox").unwrap(), Optimizer::FedProx { mu: 0.1 });
+        assert_eq!(Optimizer::parse("feddyn").unwrap(), Optimizer::FedDyn { alpha: 0.1 });
+        // ...and the colon syntax overrides them.
+        assert_eq!(Optimizer::parse("fedprox:0.01").unwrap(), Optimizer::FedProx { mu: 0.01 });
+        assert_eq!(Optimizer::parse("feddyn:0.5").unwrap(), Optimizer::FedDyn { alpha: 0.5 });
+        assert_eq!(Optimizer::parse("fedprox:0").unwrap(), Optimizer::FedProx { mu: 0.0 });
+        // Malformed or misplaced parameters are rejected with context.
+        assert!(Optimizer::parse("fedprox:abc").is_err());
+        assert!(Optimizer::parse("fedprox:-1").is_err());
+        assert!(Optimizer::parse("fedavg:0.1").is_err());
+        assert!(Optimizer::parse("scaffold:2").is_err());
+    }
+
+    #[test]
+    fn optimizer_spec_string_round_trips() {
+        for opt in [
+            Optimizer::FedAvg,
+            Optimizer::FedProx { mu: 0.25 },
+            Optimizer::Scaffold,
+            Optimizer::FedDyn { alpha: 0.015 },
+            Optimizer::FedAdam,
+        ] {
+            assert_eq!(Optimizer::parse(&opt.spec_string()).unwrap(), opt);
+        }
+    }
+
+    #[test]
+    fn sharing_parsing_round_trips() {
+        assert_eq!(Sharing::parse("full").unwrap(), Sharing::Full);
+        assert_eq!(Sharing::parse("pfedpara").unwrap(), Sharing::GlobalSegments);
+        assert_eq!(Sharing::parse("global-segments").unwrap(), Sharing::GlobalSegments);
+        assert_eq!(Sharing::parse("local-only").unwrap(), Sharing::LocalOnly);
+        assert_eq!(
+            Sharing::parse("fedper:fc2").unwrap(),
+            Sharing::FedPer { local_prefixes: vec!["fc2".into()] }
+        );
+        assert_eq!(
+            Sharing::parse("fedper:fc2,conv3").unwrap(),
+            Sharing::FedPer { local_prefixes: vec!["fc2".into(), "conv3".into()] }
+        );
+        assert!(Sharing::parse("fedper").is_err());
+        assert!(Sharing::parse("fedper:").is_err());
+        assert!(Sharing::parse("bogus").is_err());
+        for sh in [
+            Sharing::Full,
+            Sharing::GlobalSegments,
+            Sharing::FedPer { local_prefixes: vec!["fc2".into(), "rnn".into()] },
+            Sharing::LocalOnly,
+        ] {
+            assert_eq!(Sharing::parse(&sh.spec_string()).unwrap(), sh);
+        }
     }
 
     #[test]

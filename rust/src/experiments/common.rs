@@ -1,17 +1,19 @@
-//! Shared experiment machinery: dataset federations per paper dataset,
-//! config presets (Supp. Table 6 scaled per `Scale`), run loops, and
-//! result formatting.
+//! Shared experiment machinery: scenario-manifest presets per paper
+//! dataset (Supp. Table 6 scaled per `Scale`), the run loop, and result
+//! formatting. Every built-in experiment expresses its runs as
+//! [`ScenarioManifest`]s and executes them through [`ScenarioBuilder`] —
+//! the same path `fedpara run --manifest` and the golden registry use.
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::config::{Optimizer, RunConfig, Scale, Sharing};
-use crate::coordinator::{Federation, RoundReport};
-use crate::data::{partition, synth_text, synth_vision, Dataset};
+use crate::config::{Optimizer, Scale, Sharing};
+use crate::coordinator::RoundReport;
+use crate::data::{synth_text, synth_vision};
 use crate::runtime::Engine;
+use crate::scenario::{DataSource, DatasetSpec, PartitionSpec, ScenarioBuilder, ScenarioManifest};
 use crate::util::json::Json;
-use crate::util::rng::Rng;
 
 /// Context handed to every experiment.
 pub struct ExpCtx<'a> {
@@ -74,29 +76,17 @@ impl VisionKind {
             VisionKind::Mnist | VisionKind::Femnist => 100,
         }
     }
-}
 
-/// Build a partitioned vision federation: (per-client datasets, test set).
-pub fn vision_federation(
-    kind: VisionKind,
-    non_iid: bool,
-    scale: Scale,
-    seed: u64,
-) -> (Vec<Dataset>, Dataset) {
-    let spec = kind.spec();
-    let (clients, per_client, test_n) = scale.vision_population();
-    let n = clients * per_client;
-    let data = synth_vision::generate(&spec, n, seed);
-    let test = synth_vision::generate(&spec, test_n, seed ^ 0x7E57_0001);
-    let mut rng = Rng::new(seed ^ 0x9A57);
-    let part = if non_iid {
-        // Dirichlet(0.5), the paper's non-IID setting (He et al. 2020b).
-        partition::dirichlet(&data.labels, spec.classes, clients, 0.5, &mut rng)
-    } else {
-        partition::iid(data.len(), clients, &mut rng)
-    };
-    let locals = part.clients.iter().map(|idx| data.subset(idx)).collect();
-    (locals, test)
+    /// The manifest-schema source this kind maps to.
+    pub fn source(&self) -> DataSource {
+        match self {
+            VisionKind::Cifar10 => DataSource::Cifar10,
+            VisionKind::Cifar100 => DataSource::Cifar100,
+            VisionKind::Cinic10 => DataSource::Cinic10,
+            VisionKind::Mnist => DataSource::Mnist,
+            VisionKind::Femnist => DataSource::Femnist,
+        }
+    }
 }
 
 /// The paper's text dataset (synthetic stand-in; DESIGN.md §3) — the text
@@ -124,23 +114,21 @@ impl TextKind {
         500
     }
 
-    /// Build a partitioned text federation: per-role client datasets
-    /// (dialect strength 0.6 when non-IID) plus a base-chain test set.
-    pub fn federation(&self, non_iid: bool, scale: Scale, seed: u64) -> (Vec<Dataset>, Dataset) {
-        let spec = self.spec();
-        let (clients, per_client, test_n) = match scale {
+    /// The manifest-schema source this kind maps to.
+    pub fn source(&self) -> DataSource {
+        match self {
+            TextKind::Shakespeare => DataSource::Shakespeare,
+        }
+    }
+
+    /// (clients, samples per client, test samples) at the given scale.
+    pub fn population(&self, scale: Scale) -> (usize, usize, usize) {
+        match scale {
             Scale::Tiny => (8, 48, 256),
             Scale::Small => (16, 96, 256),
             Scale::Paper => (100, 500, 2000),
-        };
-        let h = if non_iid { 0.6 } else { 0.0 };
-        synth_text::generate_federation(&spec, clients, per_client, h, test_n, seed)
+        }
     }
-}
-
-/// Build a text federation (Shakespeare*): per-role datasets + test set.
-pub fn text_federation(non_iid: bool, scale: Scale, seed: u64) -> (Vec<Dataset>, Dataset) {
-    TextKind::Shakespeare.federation(non_iid, scale, seed)
 }
 
 /// The one artifact-fallback policy shared by every experiment: the AOT
@@ -176,10 +164,27 @@ pub fn lstm_artifacts(ctx: &ExpCtx) -> (String, String, String) {
     (picked[0].to_string(), picked[1].to_string(), picked[2].to_string())
 }
 
-/// Config preset mirroring Supp. Table 6 at the given scale.
-pub fn preset(ctx: &ExpCtx, artifact: &str, paper_rounds: usize, non_iid: bool) -> RunConfig {
-    RunConfig {
+/// Manifest preset mirroring Supp. Table 6 at the given scale: the
+/// training-config tail shared by every built-in vision/text scenario.
+fn preset_manifest(
+    ctx: &ExpCtx,
+    artifact: &str,
+    dataset: DatasetSpec,
+    paper_rounds: usize,
+    non_iid: bool,
+) -> ScenarioManifest {
+    ScenarioManifest {
+        name: format!(
+            "{}_{}_{}",
+            dataset.source.name(),
+            artifact,
+            if non_iid { "noniid" } else { "iid" }
+        ),
         artifact: artifact.to_string(),
+        dataset,
+        optimizer: Optimizer::FedAvg,
+        sharing: Sharing::Full,
+        quantize_upload: false,
         sample_frac: ctx.scale.sample_frac(),
         rounds: ctx.rounds_for(paper_rounds),
         local_epochs: if non_iid {
@@ -189,13 +194,56 @@ pub fn preset(ctx: &ExpCtx, artifact: &str, paper_rounds: usize, non_iid: bool) 
         },
         lr: 0.1,
         lr_decay: 0.992,
-        optimizer: Optimizer::FedAvg,
-        quantize_upload: false,
-        sharing: Sharing::Full,
         eval_every: 1,
         seed: ctx.seed,
         num_threads: 0,
     }
+}
+
+/// Scenario manifest for a partitioned vision federation: IID or
+/// Dirichlet(0.5) — the paper's non-IID setting (He et al. 2020b) — at the
+/// `Scale` population, with the Supp. Table 6 config preset. Mutate the
+/// returned manifest's public fields for per-experiment tweaks.
+pub fn vision_scenario(
+    ctx: &ExpCtx,
+    kind: VisionKind,
+    non_iid: bool,
+    artifact: &str,
+    paper_rounds: usize,
+) -> ScenarioManifest {
+    let (clients, per_client, test_n) = ctx.scale.vision_population();
+    let dataset = DatasetSpec {
+        source: kind.source(),
+        partition: if non_iid {
+            PartitionSpec::Dirichlet { alpha: 0.5 }
+        } else {
+            PartitionSpec::Iid
+        },
+        clients: Some(clients),
+        population: None,
+        samples_per_client: per_client,
+        test_samples: test_n,
+        holdout: None,
+    };
+    preset_manifest(ctx, artifact, dataset, paper_rounds, non_iid)
+}
+
+/// Scenario manifest for the text federation (Shakespeare*): per-role
+/// writer partition (dialect strength 0.6 when non-IID) at the `Scale`
+/// population, with the Supp. Table 6 config preset.
+pub fn text_scenario(ctx: &ExpCtx, non_iid: bool, artifact: &str) -> ScenarioManifest {
+    let kind = TextKind::Shakespeare;
+    let (clients, per_client, test_n) = kind.population(ctx.scale);
+    let dataset = DatasetSpec {
+        source: kind.source(),
+        partition: PartitionSpec::Writer { heterogeneity: if non_iid { 0.6 } else { 0.0 } },
+        clients: Some(clients),
+        population: None,
+        samples_per_client: per_client,
+        test_samples: test_n,
+        holdout: None,
+    };
+    preset_manifest(ctx, artifact, dataset, kind.paper_rounds(), non_iid)
 }
 
 /// Outcome of one federated run.
@@ -248,17 +296,12 @@ impl RunResult {
     }
 }
 
-/// Run one federated training to completion.
-pub fn run_federation(
-    ctx: &ExpCtx,
-    cfg: RunConfig,
-    locals: Vec<Dataset>,
-    test: Dataset,
-) -> Result<RunResult> {
-    let rounds = cfg.rounds;
-    let artifact = cfg.artifact.clone();
-    let mut fed = Federation::new(ctx.engine, cfg, locals, test)?;
-    fed.run(rounds)?;
+/// Run one scenario manifest to completion — build through
+/// [`ScenarioBuilder`], train, and evaluate.
+pub fn run_scenario(ctx: &ExpCtx, m: &ScenarioManifest) -> Result<RunResult> {
+    let artifact = m.artifact.clone();
+    let mut fed = ScenarioBuilder::new(ctx.engine).build(m)?.federation;
+    fed.run(m.rounds)?;
     let final_acc = fed.evaluate_global()?.accuracy();
     let best_acc = fed
         .reports

@@ -7,9 +7,7 @@
 
 use anyhow::Result;
 
-use super::common::{
-    banner, preset, run_federation, vision_federation, ExpCtx, RunResult, VisionKind,
-};
+use super::common::{banner, run_scenario, vision_scenario, ExpCtx, RunResult, VisionKind};
 use crate::util::json::Json;
 
 /// FedPara artifact per dataset, matching the paper's per-dataset model
@@ -52,12 +50,11 @@ pub fn panels(ctx: &ExpCtx) -> Result<Vec<(String, RunResult, RunResult)>> {
     let mut out = Vec::new();
     for kind in [VisionKind::Cifar10, VisionKind::Cifar100, VisionKind::Cinic10] {
         for non_iid in [false, true] {
-            let (locals, test) = vision_federation(kind, non_iid, ctx.scale, ctx.seed);
             let (art_o, art_f) = artifact_pair(ctx, kind);
-            let cfg_o = preset(ctx, &art_o, kind.paper_rounds(), non_iid);
-            let cfg_f = preset(ctx, &art_f, kind.paper_rounds(), non_iid);
-            let res_o = run_federation(ctx, cfg_o, locals.clone(), test.clone())?;
-            let res_f = run_federation(ctx, cfg_f, locals, test)?;
+            let m_o = vision_scenario(ctx, kind, non_iid, &art_o, kind.paper_rounds());
+            let m_f = vision_scenario(ctx, kind, non_iid, &art_f, kind.paper_rounds());
+            let res_o = run_scenario(ctx, &m_o)?;
+            let res_f = run_scenario(ctx, &m_f)?;
             let label = format!(
                 "{} {}",
                 kind.name(),

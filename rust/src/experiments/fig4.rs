@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use super::common::{banner, run_scenario, vision_scenario, ExpCtx, VisionKind};
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
@@ -31,13 +31,8 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     ];
     for (kind, orig_name, sweep) in sweeps {
         let non_iid = false;
-        let (locals, test) = vision_federation(kind, non_iid, ctx.scale, ctx.seed);
-        let orig = run_federation(
-            ctx,
-            preset(ctx, orig_name, kind.paper_rounds(), non_iid),
-            locals.clone(),
-            test.clone(),
-        )?;
+        let m_orig = vision_scenario(ctx, kind, non_iid, orig_name, kind.paper_rounds());
+        let orig = run_scenario(ctx, &m_orig)?;
         println!(
             "\n[{}] original: {:.2}% ({} params — the dotted line)",
             kind.name(),
@@ -47,12 +42,8 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
         println!("  {:>6} {:>12} {:>9}", "gamma", "param ratio", "acc");
         let mut series = Vec::new();
         for artifact in sweep {
-            let res = run_federation(
-                ctx,
-                preset(ctx, artifact, kind.paper_rounds(), non_iid),
-                locals.clone(),
-                test.clone(),
-            )?;
+            let m = vision_scenario(ctx, kind, non_iid, artifact, kind.paper_rounds());
+            let res = run_scenario(ctx, &m)?;
             let gamma = ctx.engine.manifest.get(artifact).map(|m| m.gamma).unwrap_or(0.0);
             let ratio = res.param_count as f64 / orig.param_count as f64;
             println!(

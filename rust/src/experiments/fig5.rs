@@ -7,69 +7,61 @@
 //!   (c) MNIST*, highly-skewed non-IID (≤2 classes per client).
 //!
 //! 95% CIs over repeated runs. No client sub-sampling (paper protocol).
+//!
+//! Each (scenario, algorithm, repeat) cell is a [`ScenarioManifest`] with a
+//! `dataset.holdout` block: the builder splits every client's data into a
+//! train part and a personal test set (the paper evaluates on own data),
+//! and the per-client test sets come back via [`Built::client_tests`].
+//!
+//! [`Built::client_tests`]: crate::scenario::Built
 
 use anyhow::Result;
 
 use super::common::{banner, ci_string, ExpCtx};
-use crate::config::{Optimizer, RunConfig, Sharing};
-use crate::coordinator::Federation;
-use crate::data::{partition, synth_vision, Dataset};
+use crate::config::{Optimizer, Sharing};
+use crate::scenario::{
+    DataSource, DatasetSpec, HoldoutSpec, PartitionSpec, ScenarioBuilder, ScenarioManifest,
+};
 use crate::util::json::Json;
-use crate::util::rng::Rng;
 
 struct Scenario {
     name: &'static str,
-    /// (per-client train sets, per-client test sets)
-    make: fn(seed: u64, clients: usize) -> (Vec<Dataset>, Vec<Dataset>),
+    dataset: fn(clients: usize) -> DatasetSpec,
 }
 
-fn femnist_clients(seed: u64, clients: usize, frac: f64) -> (Vec<Dataset>, Vec<Dataset>) {
-    let spec = synth_vision::femnist_like();
-    // Writer-heterogeneous federation; each client's test set comes from
-    // its own writer distribution (the paper evaluates on own data).
-    let per_writer = 160;
-    let (locals, _pooled) =
-        synth_vision::generate_federation(&spec, clients, per_writer, 0.8, 16, seed);
-    let mut trains = Vec::new();
-    let mut tests = Vec::new();
-    let mut rng = Rng::new(seed ^ 0xF15);
-    for d in locals {
-        let (train, test) = d.train_test_split(0.25, &mut rng);
-        // Keep a floor of 8 samples but never more than the client has
-        // (the unclamped round-up used to index out of bounds for tiny
-        // clients), and draw the kept subset with the rng instead of the
-        // order-biased prefix 0..keep.
-        let keep = ((((train.len() as f64) * frac).round().max(8.0)) as usize).min(train.len());
-        let idx = rng.sample_indices(train.len(), keep);
-        trains.push(train.subset(&idx));
-        tests.push(test);
+/// FEMNIST* writer-heterogeneous clients, keeping `keep_frac` of each
+/// client's train split (floor 8 samples).
+fn femnist_dataset(clients: usize, keep_frac: f64) -> DatasetSpec {
+    DatasetSpec {
+        source: DataSource::Femnist,
+        partition: PartitionSpec::Writer { heterogeneity: 0.8 },
+        clients: Some(clients),
+        population: None,
+        samples_per_client: 160,
+        test_samples: 16,
+        holdout: Some(HoldoutSpec { test_frac: 0.25, keep_frac }),
     }
-    (trains, tests)
 }
 
-fn scenario_a(seed: u64, clients: usize) -> (Vec<Dataset>, Vec<Dataset>) {
-    femnist_clients(seed, clients, 1.0)
+fn scenario_a(clients: usize) -> DatasetSpec {
+    femnist_dataset(clients, 1.0)
 }
 
-fn scenario_b(seed: u64, clients: usize) -> (Vec<Dataset>, Vec<Dataset>) {
-    femnist_clients(seed, clients, 0.2)
+fn scenario_b(clients: usize) -> DatasetSpec {
+    femnist_dataset(clients, 0.2)
 }
 
-fn scenario_c(seed: u64, clients: usize) -> (Vec<Dataset>, Vec<Dataset>) {
-    // MNIST* with the McMahan 2-class pathological split.
-    let spec = synth_vision::mnist_like();
-    let data = synth_vision::generate(&spec, clients * 140, seed);
-    let mut rng = Rng::new(seed ^ 0x3C);
-    let part = partition::pathological(&data.labels, clients, 2, &mut rng);
-    let mut trains = Vec::new();
-    let mut tests = Vec::new();
-    for idx in &part.clients {
-        let local = data.subset(idx);
-        let (train, test) = local.train_test_split(0.25, &mut rng);
-        trains.push(train);
-        tests.push(test);
+/// MNIST* with the McMahan 2-class pathological split.
+fn scenario_c(clients: usize) -> DatasetSpec {
+    DatasetSpec {
+        source: DataSource::Mnist,
+        partition: PartitionSpec::Pathological { classes_per_client: 2 },
+        clients: Some(clients),
+        population: None,
+        samples_per_client: 140,
+        test_samples: 16,
+        holdout: Some(HoldoutSpec { test_frac: 0.25, keep_frac: 1.0 }),
     }
-    (trains, tests)
 }
 
 /// The four algorithms of Figure 5 as (label, artifact-kind, config tweak).
@@ -101,9 +93,9 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     let rounds = ctx.rounds_for(100);
 
     let scenarios = [
-        Scenario { name: "(a) FEMNIST* 100% local data", make: scenario_a },
-        Scenario { name: "(b) FEMNIST* 20% local data", make: scenario_b },
-        Scenario { name: "(c) MNIST* 2-class skew", make: scenario_c },
+        Scenario { name: "(a) FEMNIST* 100% local data", dataset: scenario_a },
+        Scenario { name: "(b) FEMNIST* 20% local data", dataset: scenario_b },
+        Scenario { name: "(c) MNIST* 2-class skew", dataset: scenario_c },
     ];
 
     let mut doc = Vec::new();
@@ -116,23 +108,25 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
             let mut accs = Vec::new();
             for rep in 0..repeats {
                 let seed = ctx.seed ^ (rep as u64 * 0x9E37) ^ 0xF5;
-                let (trains, tests) = (sc.make)(seed, clients);
-                let cfg = RunConfig {
+                let m = ScenarioManifest {
+                    name: format!("fig5_{label}_rep{rep}"),
                     artifact: artifact.clone(),
+                    dataset: (sc.dataset)(clients),
+                    optimizer: Optimizer::FedAvg,
+                    sharing: sharing.clone(),
+                    quantize_upload: false,
                     sample_frac: 1.0,
                     rounds,
                     local_epochs: 2,
                     lr: 0.05,
                     lr_decay: 0.999,
-                    optimizer: Optimizer::FedAvg,
-                    quantize_upload: false,
-                    sharing: sharing.clone(),
                     eval_every: 0,
                     seed,
                     num_threads: 0,
                 };
-                // Global test set unused for personalization; pass client 0's.
-                let mut fed = Federation::new(ctx.engine, cfg, trains, tests[0].clone())?;
+                let built = ScenarioBuilder::new(ctx.engine).build(&m)?;
+                let tests = built.client_tests.expect("fig5 manifests carry holdouts");
+                let mut fed = built.federation;
                 fed.run(rounds)?;
                 let per_client = fed.evaluate_personalized(&tests)?;
                 accs.push(per_client.iter().sum::<f64>() / per_client.len() as f64);

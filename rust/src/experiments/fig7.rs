@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use super::common::{banner, run_scenario, vision_scenario, ExpCtx, VisionKind};
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
@@ -23,13 +23,12 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
         ),
     ] {
         for non_iid in [false, true] {
-            let (locals, test) = vision_federation(kind, non_iid, ctx.scale, ctx.seed);
             let label = format!("{} {}", kind.name(), if non_iid { "non-IID" } else { "IID" });
             println!("\n[{label}]");
             let mut panel = Vec::new();
             for artifact in std::iter::once(orig).chain(sweep) {
-                let cfg = preset(ctx, artifact, kind.paper_rounds(), non_iid);
-                let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+                let m = vision_scenario(ctx, kind, non_iid, artifact, kind.paper_rounds());
+                let res = run_scenario(ctx, &m)?;
                 println!(
                     "  {:<22} final {:>6.2}%  total {:>8.4} GB",
                     artifact,

@@ -3,13 +3,12 @@
 
 use anyhow::Result;
 
-use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use super::common::{banner, run_scenario, vision_scenario, ExpCtx, VisionKind};
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
     banner("fig8", "Supp. Figure 8", "ResMini comm curves + GB-to-target", ctx.scale);
     let kind = VisionKind::Cifar10;
-    let (locals, test) = vision_federation(kind, false, ctx.scale, ctx.seed);
     let artifacts = [
         ("ResMini_orig", "res10_orig"),
         ("ResMini_FedPara γ=0.1", "res10_fedpara_g01"),
@@ -19,8 +18,8 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     let mut results = Vec::new();
     println!("(a) final accuracy vs total GB:");
     for (label, artifact) in artifacts {
-        let cfg = preset(ctx, artifact, 200, false);
-        let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+        let m = vision_scenario(ctx, kind, false, artifact, 200);
+        let res = run_scenario(ctx, &m)?;
         println!(
             "  {:<24} {:>6.2}%  {:>8.4} GB  ({} params)",
             label,

@@ -24,9 +24,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::common::{banner, print_row, resolve_artifact_set, ExpCtx};
-use crate::config::{Optimizer, RunConfig, Sharing};
-use crate::coordinator::{ClientDataSource, Federation};
-use crate::data::synth_vision;
+use crate::config::{Optimizer, Sharing};
+use crate::scenario::{DataSource, DatasetSpec, PartitionSpec, ScenarioBuilder, ScenarioManifest};
 use crate::util::json::Json;
 
 struct ScaleRun {
@@ -67,27 +66,31 @@ fn run_population(
     per_client: usize,
     rounds: usize,
 ) -> Result<ScaleRun> {
-    let spec = synth_vision::mnist_like();
-    let seed = ctx.seed;
-    let source = ClientDataSource::lazy(population, move |cid| {
-        synth_vision::client_dataset(&spec, cid, per_client, 0.5, seed)
-    });
-    let test = synth_vision::generate(&spec, 256, ctx.seed ^ 0x5CA1E);
-    let cfg = RunConfig {
+    let m = ScenarioManifest {
+        name: format!("scale_virtual_{population}"),
         artifact: artifact.to_string(),
+        dataset: DatasetSpec {
+            source: DataSource::Mnist,
+            partition: PartitionSpec::Writer { heterogeneity: 0.5 },
+            clients: None,
+            population: Some(population),
+            samples_per_client: per_client,
+            test_samples: 256,
+            holdout: None,
+        },
+        optimizer: Optimizer::FedAvg,
+        sharing: Sharing::Full,
+        quantize_upload: false,
         sample_frac,
         rounds,
         local_epochs: 1,
         lr: 0.05,
         lr_decay: 1.0,
-        optimizer: Optimizer::FedAvg,
-        quantize_upload: false,
-        sharing: Sharing::Full,
         eval_every: 0,
         seed: ctx.seed,
         num_threads: 0,
     };
-    let mut fed = Federation::new_virtual(ctx.engine, cfg, source, test)?;
+    let mut fed = ScenarioBuilder::new(ctx.engine).build(&m)?.federation;
     let mut secs = 0.0f64;
     let mut final_loss = f64::NAN;
     for _ in 0..rounds {

@@ -4,13 +4,12 @@
 
 use anyhow::Result;
 
-use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use super::common::{banner, run_scenario, vision_scenario, ExpCtx, VisionKind};
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
     banner("table10", "Supp. Table 10", "Pufferfish hybrid vs FedPara", ctx.scale);
     let kind = VisionKind::Cifar10;
-    let (locals, test) = vision_federation(kind, false, ctx.scale, ctx.seed);
     let orig_params = ctx.engine.manifest.get("vgg10_orig").map(|m| m.param_count).unwrap_or(1);
 
     let rows = [
@@ -22,8 +21,8 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     println!("{:<28} {:>9} {:>14}", "model", "acc", "#params ratio");
     let mut doc = Vec::new();
     for (label, artifact) in rows {
-        let cfg = preset(ctx, artifact, 200, false);
-        let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+        let m = vision_scenario(ctx, kind, false, artifact, 200);
+        let res = run_scenario(ctx, &m)?;
         let ratio = res.param_count as f64 / orig_params as f64;
         println!("{:<28} {:>8.2}% {:>13.2}", label, res.final_acc * 100.0, ratio);
         doc.push(Json::obj(vec![

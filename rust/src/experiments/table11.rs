@@ -9,9 +9,7 @@
 
 use anyhow::Result;
 
-use super::common::{
-    banner, lstm_artifacts, preset, run_federation, text_federation, ExpCtx, TextKind,
-};
+use super::common::{banner, lstm_artifacts, run_scenario, text_scenario, ExpCtx};
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
@@ -33,7 +31,6 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     }
     let mut accs = std::collections::BTreeMap::new();
     for non_iid in [false, true] {
-        let (locals, test) = text_federation(non_iid, ctx.scale, ctx.seed);
         for (label, artifact) in &rows {
             if !ctx.engine.manifest.artifacts.contains_key(artifact.as_str()) {
                 println!(
@@ -42,10 +39,10 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
                 );
                 continue;
             }
-            let mut cfg = preset(ctx, artifact, TextKind::Shakespeare.paper_rounds(), non_iid);
-            cfg.lr = 1.0;
-            cfg.local_epochs = 1;
-            let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+            let mut m = text_scenario(ctx, non_iid, artifact);
+            m.lr = 1.0;
+            m.local_epochs = 1;
+            let res = run_scenario(ctx, &m)?;
             accs.insert((*label, non_iid), (res.final_acc, res.param_count));
         }
     }

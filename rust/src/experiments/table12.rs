@@ -4,13 +4,12 @@
 
 use anyhow::Result;
 
-use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use super::common::{banner, run_scenario, vision_scenario, ExpCtx, VisionKind};
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
     banner("table12", "Supp. Table 12", "quantization vs FedPara", ctx.scale);
     let kind = VisionKind::Cifar10;
-    let (locals, test) = vision_federation(kind, false, ctx.scale, ctx.seed);
 
     let rows: [(&str, &str, bool); 4] = [
         ("FedAvg (fp32)", "vgg10_orig", false),
@@ -21,9 +20,9 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     println!("{:<20} {:>9} {:>22}", "model", "acc", "transfer/round (MB)");
     let mut doc = Vec::new();
     for (label, artifact, quant) in rows {
-        let mut cfg = preset(ctx, artifact, 200, false);
-        cfg.quantize_upload = quant;
-        let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+        let mut m = vision_scenario(ctx, kind, false, artifact, 200);
+        m.quantize_upload = quant;
+        let res = run_scenario(ctx, &m)?;
         // Per-round MB (uplink+downlink across participants).
         let mb_per_round = res.total_gbytes * 1000.0 / res.reports.len() as f64;
         println!(

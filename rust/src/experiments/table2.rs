@@ -6,8 +6,8 @@
 use anyhow::Result;
 
 use super::common::{
-    banner, lstm_artifacts, preset, print_row, run_federation, text_federation, vision_federation,
-    ExpCtx, TextKind, VisionKind,
+    banner, lstm_artifacts, print_row, run_scenario, text_scenario, vision_scenario, ExpCtx,
+    TextKind, VisionKind,
 };
 use crate::util::json::Json;
 
@@ -27,13 +27,12 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     for kind in datasets {
         let classes_tag = if kind == VisionKind::Cifar100 { "vgg100" } else { "vgg10" };
         for non_iid in [false, true] {
-            let (locals, test) = vision_federation(kind, non_iid, ctx.scale, ctx.seed);
             for (which, artifact) in [
                 ("low", format!("{classes_tag}_low_g01")),
                 ("fedpara", format!("{classes_tag}_fedpara_g01")),
             ] {
-                let cfg = preset(ctx, &artifact, kind.paper_rounds(), non_iid);
-                let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+                let m = vision_scenario(ctx, kind, non_iid, &artifact, kind.paper_rounds());
+                let res = run_scenario(ctx, &m)?;
                 crate::log_info!(
                     "table2: {} {} non_iid={} -> {:.2}%",
                     kind.name(),
@@ -70,12 +69,11 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     let (_, art_low, art_fp) = lstm_artifacts(ctx);
     let mut lstm_rows = Vec::new();
     for non_iid in [false, true] {
-        let (locals, test) = text_federation(non_iid, ctx.scale, ctx.seed);
         for artifact in [art_low.as_str(), art_fp.as_str()] {
-            let mut cfg = preset(ctx, artifact, TextKind::Shakespeare.paper_rounds(), non_iid);
-            cfg.lr = 1.0; // Supp. Table 6: LSTM lr = 1.0, E = 1.
-            cfg.local_epochs = 1;
-            let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+            let mut m = text_scenario(ctx, non_iid, artifact);
+            m.lr = 1.0; // Supp. Table 6: LSTM lr = 1.0, E = 1.
+            m.local_epochs = 1;
+            let res = run_scenario(ctx, &m)?;
             lstm_rows.push((artifact.to_string(), non_iid, res.final_acc));
             results.push((format!("{artifact}_{}", if non_iid { "noniid" } else { "iid" }), res));
         }

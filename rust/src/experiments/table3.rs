@@ -4,14 +4,13 @@
 
 use anyhow::Result;
 
-use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use super::common::{banner, run_scenario, vision_scenario, ExpCtx, VisionKind};
 use crate::config::Optimizer;
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
     banner("table3", "Table 3", "FedPara × FL optimizers", ctx.scale);
     let kind = VisionKind::Cifar10;
-    let (locals, test) = vision_federation(kind, false, ctx.scale, ctx.seed);
 
     let optimizers = [
         Optimizer::FedAvg,
@@ -22,9 +21,9 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     ];
     let mut results = Vec::new();
     for opt in optimizers {
-        let mut cfg = preset(ctx, "vgg10_fedpara_g01", kind.paper_rounds(), false);
-        cfg.optimizer = opt;
-        let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+        let mut m = vision_scenario(ctx, kind, false, "vgg10_fedpara_g01", kind.paper_rounds());
+        m.optimizer = opt;
+        let res = run_scenario(ctx, &m)?;
         crate::log_info!("table3: {} -> {:.2}%", opt.name(), res.final_acc * 100.0);
         results.push((opt.name(), res));
     }

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use super::common::{banner, ci_string, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use super::common::{banner, ci_string, run_scenario, vision_scenario, ExpCtx, VisionKind};
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
@@ -26,11 +26,9 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
         let mut accs = Vec::new();
         for rep in 0..repeats {
             let seed = ctx.seed ^ (0xAB1E + rep as u64 * 0x1111);
-            let (locals, test) =
-                vision_federation(VisionKind::Cifar10, false, ctx.scale, seed);
-            let mut cfg = preset(ctx, artifact, 200, false);
-            cfg.seed = seed;
-            let res = run_federation(ctx, cfg, locals, test)?;
+            let mut m = vision_scenario(ctx, VisionKind::Cifar10, false, artifact, 200);
+            m.seed = seed; // Drives both the dataset and the run.
+            let res = run_scenario(ctx, &m)?;
             accs.push(res.final_acc);
         }
         println!("{:<22} {:>16}", label, ci_string(&accs));

@@ -10,14 +10,13 @@
 
 use anyhow::Result;
 
-use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use super::common::{banner, run_scenario, vision_scenario, ExpCtx, VisionKind};
 use crate::coordinator::Network;
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
     banner("table7", "Supp. Tables 7+8", "wall-clock at 2/10/50 Mbps", ctx.scale);
     let kind = VisionKind::Cifar10;
-    let (locals, test) = vision_federation(kind, false, ctx.scale, ctx.seed);
 
     // Train both models, measuring t_comp per round and rounds-to-target.
     let mut runs = Vec::new();
@@ -25,8 +24,8 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
         ("VggMini_orig", "vgg10_orig"),
         ("VggMini_FedPara (γ=0.1)", "vgg10_fedpara_g01"),
     ] {
-        let cfg = preset(ctx, artifact, 200, false);
-        let res = run_federation(ctx, cfg, locals.clone(), test.clone())?;
+        let m = vision_scenario(ctx, kind, false, artifact, 200);
+        let res = run_scenario(ctx, &m)?;
         let mean_t_comp = res.reports.iter().map(|r| r.t_comp_secs).sum::<f64>()
             / res.reports.len() as f64
             / res.reports[0].participants.max(1) as f64; // Per-client.

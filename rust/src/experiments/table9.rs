@@ -4,13 +4,12 @@
 
 use anyhow::Result;
 
-use super::common::{banner, preset, run_federation, vision_federation, ExpCtx, VisionKind};
+use super::common::{banner, run_scenario, vision_scenario, ExpCtx, VisionKind};
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
     banner("table9", "Supp. Table 9", "short vs long rounds across γ", ctx.scale);
     let kind = VisionKind::Cifar10;
-    let (locals, test) = vision_federation(kind, false, ctx.scale, ctx.seed);
     let short = ctx.rounds_for(200);
     let long = short * 3; // Paper ratio 200 -> 1000 is 5x; 3x keeps CI sane.
 
@@ -30,12 +29,12 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     );
     let mut doc = Vec::new();
     for (label, artifact) in artifacts {
-        let mut cfg_s = preset(ctx, artifact, 200, false);
-        cfg_s.rounds = short;
-        let res_s = run_federation(ctx, cfg_s, locals.clone(), test.clone())?;
-        let mut cfg_l = preset(ctx, artifact, 200, false);
-        cfg_l.rounds = long;
-        let res_l = run_federation(ctx, cfg_l, locals.clone(), test.clone())?;
+        let mut m_s = vision_scenario(ctx, kind, false, artifact, 200);
+        m_s.rounds = short;
+        let res_s = run_scenario(ctx, &m_s)?;
+        let mut m_l = vision_scenario(ctx, kind, false, artifact, 200);
+        m_l.rounds = long;
+        let res_l = run_scenario(ctx, &m_l)?;
         println!(
             "{:<18} {:>13.2}% {:>13.2}% (+{:.2})",
             label,

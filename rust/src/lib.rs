@@ -33,4 +33,5 @@ pub mod experiments;
 pub mod linalg;
 pub mod parameterization;
 pub mod runtime;
+pub mod scenario;
 pub mod util;

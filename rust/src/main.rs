@@ -1,21 +1,25 @@
 //! `fedpara` — the coordinator CLI.
 //!
 //! Subcommands:
-//!   list                      list experiments and artifacts
-//!   exp <id> [--scale s]      regenerate a paper table/figure
-//!   exp all [--scale s]       run every experiment
-//!   run [--artifact a ...]    one ad-hoc federated training run
+//!   list                        list experiments and artifacts
+//!   exp <id> [--scale s]        regenerate a paper table/figure
+//!   exp all [--scale s]         run every experiment
+//!   run [--manifest f | flags]  one federated training run
+//!   manifest list|show|hash     inspect scenario manifests
+//!   golden [--check|--record]   golden-run registry maintenance
 //!   help
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
-use fedpara::config::{Optimizer, RunConfig, Scale, Sharing};
-use fedpara::coordinator::{ClientDataSource, Federation};
-use fedpara::data::{synth_text, synth_vision};
+use fedpara::config::{Optimizer, Scale, Sharing};
 use fedpara::experiments::{self, common, ExpCtx};
 use fedpara::runtime::Engine;
+use fedpara::scenario::{
+    golden, DataSource, DatasetSpec, GoldenRegistry, PartitionSpec, ScenarioBuilder,
+    ScenarioManifest,
+};
 use fedpara::util::cli::Args;
 
 fn main() {
@@ -64,17 +68,6 @@ fn make_ctx<'a>(engine: &'a Engine, args: &Args) -> Result<ExpCtx<'a>> {
     })
 }
 
-fn vision_kind(dataset: &str) -> Result<common::VisionKind> {
-    Ok(match dataset {
-        "cifar10" => common::VisionKind::Cifar10,
-        "cifar100" => common::VisionKind::Cifar100,
-        "cinic10" => common::VisionKind::Cinic10,
-        "mnist" => common::VisionKind::Mnist,
-        "femnist" => common::VisionKind::Femnist,
-        other => return Err(anyhow!("unknown dataset '{other}'")),
-    })
-}
-
 fn engine_from(args: &Args) -> Result<Engine> {
     let dir = args
         .get("artifacts")
@@ -90,6 +83,231 @@ fn engine_from(args: &Args) -> Result<Engine> {
             dir.display()
         );
         Ok(Engine::native())
+    }
+}
+
+/// Build a [`ScenarioManifest`] from `run` subcommand flags, reproducing the
+/// historical flag-driven behavior exactly (populations, seeds, schedules).
+fn manifest_from_flags(args: &Args, ctx: &ExpCtx) -> Result<ScenarioManifest> {
+    let artifact = args.get_or("artifact", "mlp10_orig").to_string();
+    let source = DataSource::parse(args.get_or("dataset", "mnist")).map_err(|e| anyhow!(e))?;
+    let non_iid = args.flag("non-iid");
+    let population = args
+        .get("population")
+        .map(|v| v.parse::<usize>())
+        .transpose()
+        .map_err(|_| anyhow!("--population expects an integer"))?;
+    let sharing = match args.get("sharing") {
+        Some(s) => Sharing::parse(s).map_err(|e| anyhow!(e))?,
+        None if args.flag("pfedpara") => Sharing::GlobalSegments,
+        None => Sharing::Full,
+    };
+    let dataset = if let Some(population) = population {
+        // Cross-device mode: a lazy virtual population; per-client
+        // heterogeneity mirrors the eager writer federations.
+        DatasetSpec {
+            source,
+            partition: PartitionSpec::Writer { heterogeneity: if non_iid { 0.8 } else { 0.0 } },
+            clients: None,
+            population: Some(population),
+            samples_per_client: args.get_usize("per-client", 16).map_err(|e| anyhow!(e))?,
+            test_samples: source.default_test_samples(),
+            holdout: None,
+        }
+    } else if source.is_text() {
+        let (clients, per_client, test_samples) =
+            common::TextKind::Shakespeare.population(ctx.scale);
+        DatasetSpec {
+            source,
+            partition: PartitionSpec::Writer { heterogeneity: if non_iid { 0.6 } else { 0.0 } },
+            clients: Some(clients),
+            population: None,
+            samples_per_client: per_client,
+            test_samples,
+            holdout: None,
+        }
+    } else {
+        let (clients, per_client, test_samples) = ctx.scale.vision_population();
+        DatasetSpec {
+            source,
+            partition: if non_iid {
+                PartitionSpec::Dirichlet { alpha: 0.5 }
+            } else {
+                PartitionSpec::Iid
+            },
+            clients: Some(clients),
+            population: None,
+            samples_per_client: per_client,
+            test_samples,
+            holdout: None,
+        }
+    };
+    Ok(ScenarioManifest {
+        name: format!("cli_{}_{artifact}", source.name()),
+        artifact,
+        dataset,
+        optimizer: Optimizer::parse(args.get_or("optimizer", "fedavg")).map_err(|e| anyhow!(e))?,
+        sharing,
+        quantize_upload: args.flag("quantize"),
+        sample_frac: args.get_f64("frac", ctx.scale.sample_frac()).map_err(|e| anyhow!(e))?,
+        rounds: ctx.rounds_for(100),
+        local_epochs: args.get_usize("epochs", ctx.scale.local_epochs()).map_err(|e| anyhow!(e))?,
+        lr: args.get_f64("lr", 0.1).map_err(|e| anyhow!(e))? as f32,
+        lr_decay: 0.992,
+        eval_every: 1,
+        seed: ctx.seed,
+        num_threads: args.get_usize("threads", 0).map_err(|e| anyhow!(e))?,
+    })
+}
+
+fn run_cmd(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let ctx = make_ctx(&engine, args)?;
+    let m = if let Some(path) = args.get("manifest") {
+        let mut m = ScenarioManifest::load(Path::new(path)).map_err(|e| anyhow!(e))?;
+        // Explicit CLI flags override the manifest's schedule knobs.
+        if args.get("rounds").is_some() {
+            m.rounds = ctx.rounds.expect("--rounds parsed by make_ctx");
+        }
+        if args.get("seed").is_some() {
+            m.seed = ctx.seed;
+        }
+        if args.get("threads").is_some() {
+            m.num_threads = args.get_usize("threads", 0).map_err(|e| anyhow!(e))?;
+        }
+        m
+    } else {
+        manifest_from_flags(args, &ctx)?
+    };
+    println!(
+        "run: manifest '{}' ({}) artifact={} dataset={}/{} optimizer={} rounds={}{}",
+        m.name,
+        &m.content_hash()[..12],
+        m.artifact,
+        m.dataset.source.name(),
+        m.dataset.partition.name(),
+        m.optimizer.name(),
+        m.rounds,
+        m.dataset
+            .population
+            .map(|p| format!(" population={p} (virtual)"))
+            .unwrap_or_default()
+    );
+    let mut fed = ScenarioBuilder::new(&engine).build(&m)?.federation;
+    for _ in 0..m.rounds {
+        let r = fed.run_round()?;
+        println!(
+            "round {:>4}  loss {:.4}  acc {}  cum {:.4} GB  ({} clients, {:.2}s compute)",
+            r.round,
+            r.mean_train_loss,
+            r.test_acc.map(|a| format!("{:.2}%", a * 100.0)).unwrap_or("-".into()),
+            r.cum_gbytes,
+            r.participants,
+            r.t_comp_secs,
+        );
+    }
+    let final_eval = fed.evaluate_global()?;
+    println!(
+        "final: acc {:.2}%  loss {:.4}  total {:.4} GB  energy {:.4} MJ",
+        final_eval.accuracy() * 100.0,
+        final_eval.mean_loss(),
+        fed.comm.total_gbytes(),
+        fed.comm.total_energy_mj()
+    );
+    if fed.store().is_virtual() {
+        println!(
+            "store: {} virtual clients, {} touched, {} B live state \
+             (O(participants), not O(population))",
+            fed.num_clients(),
+            fed.store().touched(),
+            fed.live_state_bytes()
+        );
+    }
+    Ok(())
+}
+
+fn manifest_cmd(args: &Args) -> Result<()> {
+    let action = args.positionals.first().map(String::as_str).unwrap_or("list");
+    match action {
+        "list" => {
+            let root = PathBuf::from(args.get_or("dir", "manifests"));
+            let files = golden::collect_manifests(&root)?;
+            if files.is_empty() {
+                println!("no manifests under {}", root.display());
+                return Ok(());
+            }
+            println!("{:<44} {:<12} {:<28} name", "path", "hash", "artifact");
+            for p in files {
+                match ScenarioManifest::load(&p) {
+                    Ok(m) => println!(
+                        "{:<44} {:<12} {:<28} {}",
+                        p.display(),
+                        &m.content_hash()[..12],
+                        m.artifact,
+                        m.name
+                    ),
+                    Err(e) => println!("{:<44} INVALID: {e}", p.display()),
+                }
+            }
+            Ok(())
+        }
+        "show" | "hash" => {
+            let path = args
+                .positionals
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: fedpara manifest {action} <file>"))?;
+            let m = ScenarioManifest::load(Path::new(path)).map_err(|e| anyhow!(e))?;
+            if action == "hash" {
+                println!("{}", m.content_hash());
+            } else {
+                print!("{}", m.canonical().to_string_pretty());
+                println!("content hash: {}", m.content_hash());
+            }
+            Ok(())
+        }
+        other => Err(anyhow!("unknown manifest action '{other}' (list|show|hash)")),
+    }
+}
+
+fn golden_cmd(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let root = PathBuf::from(args.get_or("manifests", "manifests"));
+    if args.flag("record") {
+        let registry = golden::record(&engine, &root)?;
+        let out = PathBuf::from(args.get_or("out", "GOLDEN.json"));
+        registry.save(&out)?;
+        println!("recorded {} golden run(s) -> {}", registry.entries.len(), out.display());
+        return Ok(());
+    }
+    let reg_path = PathBuf::from(args.get_or("golden", "GOLDEN.json"));
+    let registry = GoldenRegistry::load(&reg_path)?;
+    let strict = args.flag("strict");
+    let report = golden::check(&engine, &root, &registry)?;
+    println!(
+        "golden check: {} manifest(s) parsed, {} golden run(s) replayed",
+        report.parsed, report.replayed
+    );
+    for w in &report.unrecorded {
+        println!("  unrecorded: {w} (no digest in {}; run `fedpara golden --record`)",
+            reg_path.display());
+    }
+    for w in &report.stale {
+        println!("  stale registry entry: {w} (manifest file not found)");
+    }
+    for f in &report.failures {
+        println!("  FAIL: {f}");
+    }
+    if report.passed(strict) {
+        println!("golden check passed{}", if strict { " (strict)" } else { "" });
+        Ok(())
+    } else {
+        Err(anyhow!(
+            "golden check failed: {} failure(s), {} unrecorded, {} stale{}",
+            report.failures.len(),
+            report.unrecorded.len(),
+            report.stale.len(),
+            if strict { " (strict)" } else { "" }
+        ))
     }
 }
 
@@ -149,15 +367,17 @@ fn dispatch(mut args: Args) -> Result<()> {
             Ok(())
         }
         Some("run") => {
-            args.declare("artifact", "manifest artifact name (e.g. vgg10_fedpara_g01)")
+            args.declare("manifest", "scenario manifest file (--rounds/--seed/--threads override)")
+                .declare("artifact", "manifest artifact name (e.g. vgg10_fedpara_g01)")
                 .declare("dataset", "cifar10|cifar100|cinic10|mnist|femnist|shakespeare")
-                .declare("non-iid", "Dirichlet(0.5) non-IID partition")
-                .declare("optimizer", "fedavg|fedprox|scaffold|feddyn|fedadam")
+                .declare("non-iid", "Dirichlet(0.5) non-IID partition (writer h for text/virtual)")
+                .declare("optimizer", "fedavg|fedprox[:mu]|scaffold|feddyn[:alpha]|fedadam")
                 .declare("epochs", "local epochs per round")
                 .declare("lr", "initial learning rate")
                 .declare("frac", "client sample fraction per round")
                 .declare("quantize", "fp16 uplink quantization (FedPAQ)")
-                .declare("pfedpara", "share only global segments (pFedPara)")
+                .declare("sharing", "full|local-only|pfedpara|fedper:<prefix,...>")
+                .declare("pfedpara", "share only global segments (alias for --sharing pfedpara)")
                 .declare("threads", "worker threads for the client fan-out (0 = host)")
                 .declare(
                     "population",
@@ -166,115 +386,22 @@ fn dispatch(mut args: Args) -> Result<()> {
                 )
                 .declare("per-client", "samples per virtual client (with --population; default 16)");
             args.validate().map_err(|e| anyhow!(e))?;
-            let engine = engine_from(&args)?;
-            let ctx = make_ctx(&engine, &args)?;
-            let artifact = args.get_or("artifact", "mlp10_orig").to_string();
-            let dataset = args.get_or("dataset", "mnist").to_string();
-            let non_iid = args.flag("non-iid");
-            let population = args
-                .get("population")
-                .map(|v| v.parse::<usize>())
-                .transpose()
-                .map_err(|_| anyhow!("--population expects an integer"))?;
-            let cfg = RunConfig {
-                artifact,
-                sample_frac: args
-                    .get_f64("frac", ctx.scale.sample_frac())
-                    .map_err(|e| anyhow!(e))?,
-                rounds: ctx.rounds_for(100),
-                local_epochs: args
-                    .get_usize("epochs", ctx.scale.local_epochs())
-                    .map_err(|e| anyhow!(e))?,
-                lr: args.get_f64("lr", 0.1).map_err(|e| anyhow!(e))? as f32,
-                lr_decay: 0.992,
-                optimizer: Optimizer::parse(args.get_or("optimizer", "fedavg"))
-                    .map_err(|e| anyhow!(e))?,
-                quantize_upload: args.flag("quantize"),
-                sharing: if args.flag("pfedpara") {
-                    Sharing::GlobalSegments
-                } else {
-                    Sharing::Full
-                },
-                eval_every: 1,
-                seed: ctx.seed,
-                num_threads: args.get_usize("threads", 0).map_err(|e| anyhow!(e))?,
-            };
-            let rounds = cfg.rounds;
-            println!(
-                "run: artifact={} dataset={} non_iid={} optimizer={} rounds={}{}",
-                cfg.artifact,
-                dataset,
-                non_iid,
-                cfg.optimizer.name(),
-                rounds,
-                population
-                    .map(|p| format!(" population={p} (virtual)"))
-                    .unwrap_or_default()
-            );
-            let mut fed = if let Some(population) = population {
-                // Cross-device mode: a lazy virtual population; per-client
-                // heterogeneity mirrors the eager federation builders
-                // (writer styles / role dialects).
-                let per_client = args.get_usize("per-client", 16).map_err(|e| anyhow!(e))?;
-                let h = if non_iid { 0.8 } else { 0.0 };
-                let seed = ctx.seed;
-                let (source, test) = if dataset == "shakespeare" {
-                    let spec = synth_text::shakespeare_like();
-                    (
-                        ClientDataSource::lazy(population, move |cid| {
-                            synth_text::client_dataset(&spec, cid, per_client, h, seed)
-                        }),
-                        synth_text::generate(&spec, 256, seed ^ 0x7E57_7E57),
-                    )
-                } else {
-                    let kind = vision_kind(&dataset)?;
-                    let spec = kind.spec();
-                    (
-                        ClientDataSource::lazy(population, move |cid| {
-                            synth_vision::client_dataset(&spec, cid, per_client, h, seed)
-                        }),
-                        synth_vision::generate(&spec, 512, seed ^ 0x7E57_0001),
-                    )
-                };
-                Federation::new_virtual(&engine, cfg, source, test)?
-            } else {
-                let (locals, test) = if dataset == "shakespeare" {
-                    common::text_federation(non_iid, ctx.scale, ctx.seed)
-                } else {
-                    common::vision_federation(vision_kind(&dataset)?, non_iid, ctx.scale, ctx.seed)
-                };
-                Federation::new(&engine, cfg, locals, test)?
-            };
-            for _ in 0..rounds {
-                let r = fed.run_round()?;
-                println!(
-                    "round {:>4}  loss {:.4}  acc {}  cum {:.4} GB  ({} clients, {:.2}s compute)",
-                    r.round,
-                    r.mean_train_loss,
-                    r.test_acc.map(|a| format!("{:.2}%", a * 100.0)).unwrap_or("-".into()),
-                    r.cum_gbytes,
-                    r.participants,
-                    r.t_comp_secs,
-                );
-            }
-            let final_eval = fed.evaluate_global()?;
-            println!(
-                "final: acc {:.2}%  loss {:.4}  total {:.4} GB  energy {:.4} MJ",
-                final_eval.accuracy() * 100.0,
-                final_eval.mean_loss(),
-                fed.comm.total_gbytes(),
-                fed.comm.total_energy_mj()
-            );
-            if fed.store().is_virtual() {
-                println!(
-                    "store: {} virtual clients, {} touched, {} B live state \
-                     (O(participants), not O(population))",
-                    fed.num_clients(),
-                    fed.store().touched(),
-                    fed.live_state_bytes()
-                );
-            }
-            Ok(())
+            run_cmd(&args)
+        }
+        Some("manifest") => {
+            args.declare("dir", "manifests directory for `manifest list` (default manifests)");
+            args.validate().map_err(|e| anyhow!(e))?;
+            manifest_cmd(&args)
+        }
+        Some("golden") => {
+            args.declare("check", "validate all manifests + replay the golden set (default)")
+                .declare("record", "replay the golden set and write a fresh registry")
+                .declare("strict", "with --check: also fail on unrecorded/stale entries")
+                .declare("manifests", "manifests directory (default manifests)")
+                .declare("golden", "registry to check against (default GOLDEN.json)")
+                .declare("out", "output path for --record (default GOLDEN.json)");
+            args.validate().map_err(|e| anyhow!(e))?;
+            golden_cmd(&args)
         }
         Some("help") | None => {
             println!(
@@ -282,7 +409,9 @@ fn dispatch(mut args: Args) -> Result<()> {
                  usage:\n\
                  \x20 fedpara list                        experiments + artifacts\n\
                  \x20 fedpara exp <id>|all [options]      regenerate a table/figure\n\
-                 \x20 fedpara run [options]               ad-hoc federated run\n\n\
+                 \x20 fedpara run [options]               federated run (flags or --manifest)\n\
+                 \x20 fedpara manifest list|show|hash     inspect scenario manifests\n\
+                 \x20 fedpara golden [--check|--record]   golden-run registry (GOLDEN.json)\n\n\
                  perf: `cargo run --release --bin bench_report` times the native\n\
                  kernels / train_epoch / federated round (naive vs blocked GEMM)\n\
                  and writes BENCH_native.json (see rust/EXPERIMENTS.md).\n\n\

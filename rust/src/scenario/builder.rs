@@ -1,0 +1,294 @@
+//! The *single* path from a [`ScenarioManifest`] to a running
+//! [`Federation`]: dataset synthesis (eager or lazy), partitioning,
+//! optional per-client holdouts, and coordinator construction.
+//!
+//! Every seed-derivation constant here is pinned by
+//! `tests/manifest_equivalence.rs` to the pre-manifest experiment wiring,
+//! so manifest-driven runs are bit-identical to the historical ones:
+//!
+//! * pooled vision corpus: `seed`; pooled vision test: `seed ^ 0x7E57_0001`
+//!   (writer federations use `generate_federation`'s `seed ^ 0x7E57`);
+//! * iid/dirichlet partition rng: `seed ^ 0x9A57`;
+//! * pathological partition rng: `seed ^ 0x3C`, *continued* into the
+//!   per-client holdout splits (Figure-5 scenario (c) protocol);
+//! * writer holdout rng: `seed ^ 0xF15` (Figure-5 scenarios (a)/(b));
+//! * text test set: `seed ^ 0x7E57_7E57`.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{ClientDataSource, Federation};
+use crate::data::{partition, synth_text, synth_vision, Dataset};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+use super::manifest::{HoldoutSpec, PartitionSpec, ScenarioManifest};
+
+/// A built scenario: the federation plus, for holdout manifests, the
+/// per-client test sets that personalization experiments evaluate on.
+pub struct Built {
+    pub federation: Federation,
+    /// `Some` iff the manifest has `dataset.holdout`; index = client id.
+    /// The federation's global test set is then `client_tests[0]` (the
+    /// Figure-5 convention — global eval is meaningless under holdouts).
+    pub client_tests: Option<Vec<Dataset>>,
+}
+
+/// Builds federations from manifests against one runtime engine.
+pub struct ScenarioBuilder<'a> {
+    engine: &'a Engine,
+}
+
+impl<'a> ScenarioBuilder<'a> {
+    pub fn new(engine: &'a Engine) -> ScenarioBuilder<'a> {
+        ScenarioBuilder { engine }
+    }
+
+    /// Validate the manifest, synthesize its datasets, and construct the
+    /// federation. This is the only place datasets meet the coordinator.
+    pub fn build(&self, m: &ScenarioManifest) -> Result<Built> {
+        m.validate().map_err(|e| anyhow!("manifest '{}': {e}", m.name))?;
+        let (source, test, client_tests) =
+            build_datasets(m).map_err(|e| anyhow!("manifest '{}': {e}", m.name))?;
+        let federation = Federation::new_virtual(self.engine, m.to_run_config(), source, test)?;
+        Ok(Built { federation, client_tests })
+    }
+}
+
+/// Manifest → (client data source, global test set, per-client tests).
+fn build_datasets(
+    m: &ScenarioManifest,
+) -> Result<(ClientDataSource, Dataset, Option<Vec<Dataset>>), String> {
+    let d = &m.dataset;
+    let seed = m.seed;
+    let per = d.samples_per_client;
+
+    // ---- virtual population: lazy per-writer synthesis ------------------
+    if let Some(population) = d.population {
+        let h = match d.partition {
+            PartitionSpec::Writer { heterogeneity } => heterogeneity,
+            _ => unreachable!("validate() requires a writer partition for virtual populations"),
+        };
+        return Ok(if let Some(spec) = d.source.vision_spec() {
+            let test = synth_vision::generate(&spec, d.test_samples, seed ^ 0x7E57_0001);
+            let src = ClientDataSource::lazy(population, move |cid| {
+                synth_vision::client_dataset(&spec, cid, per, h, seed)
+            });
+            (src, test, None)
+        } else {
+            let spec = d.source.text_spec().expect("source is vision or text");
+            let test = synth_text::generate(&spec, d.test_samples, seed ^ 0x7E57_7E57);
+            let src = ClientDataSource::lazy(population, move |cid| {
+                synth_text::client_dataset(&spec, cid, per, h, seed)
+            });
+            (src, test, None)
+        });
+    }
+
+    // ---- eager constructions --------------------------------------------
+    let clients = d.clients.expect("validate() requires clients when population is unset");
+    let (locals, test, client_tests) = match d.partition {
+        PartitionSpec::Iid | PartitionSpec::Dirichlet { .. } => {
+            let spec = d
+                .source
+                .vision_spec()
+                .ok_or("iid/dirichlet partitions need a vision source")?;
+            let data = synth_vision::generate(&spec, clients * per, seed);
+            let test = synth_vision::generate(&spec, d.test_samples, seed ^ 0x7E57_0001);
+            let mut rng = Rng::new(seed ^ 0x9A57);
+            let part = match d.partition {
+                PartitionSpec::Dirichlet { alpha } => {
+                    partition::dirichlet(&data.labels, spec.classes, clients, alpha, &mut rng)
+                }
+                _ => partition::iid(data.len(), clients, &mut rng),
+            };
+            let locals: Vec<Dataset> = part.clients.iter().map(|idx| data.subset(idx)).collect();
+            (locals, test, None)
+        }
+        PartitionSpec::Writer { heterogeneity } => {
+            let (locals, pooled) = if let Some(spec) = d.source.vision_spec() {
+                synth_vision::generate_federation(
+                    &spec,
+                    clients,
+                    per,
+                    heterogeneity,
+                    d.test_samples,
+                    seed,
+                )
+            } else {
+                let spec = d.source.text_spec().expect("source is vision or text");
+                synth_text::generate_federation(
+                    &spec,
+                    clients,
+                    per,
+                    heterogeneity,
+                    d.test_samples,
+                    seed,
+                )
+            };
+            match &d.holdout {
+                None => (locals, pooled, None),
+                Some(h) => {
+                    // Fresh holdout rng; the pooled test set is discarded
+                    // (per-client evaluation replaces it).
+                    let (trains, tests) = split_holdout(locals, h, Rng::new(seed ^ 0xF15));
+                    let global = tests[0].clone();
+                    (trains, global, Some(tests))
+                }
+            }
+        }
+        PartitionSpec::Pathological { classes_per_client } => {
+            let spec = d
+                .source
+                .vision_spec()
+                .ok_or("pathological partitions need a vision source")?;
+            let data = synth_vision::generate(&spec, clients * per, seed);
+            let mut rng = Rng::new(seed ^ 0x3C);
+            let part = partition::pathological(&data.labels, clients, classes_per_client, &mut rng);
+            match &d.holdout {
+                None => {
+                    let locals: Vec<Dataset> =
+                        part.clients.iter().map(|idx| data.subset(idx)).collect();
+                    let test = synth_vision::generate(&spec, d.test_samples, seed ^ 0x7E57_0001);
+                    (locals, test, None)
+                }
+                Some(h) => {
+                    // The per-client splits *continue* the partition rng
+                    // (no keep-subsampling: validate() pins keep_frac = 1).
+                    let mut trains = Vec::new();
+                    let mut tests = Vec::new();
+                    for idx in &part.clients {
+                        let local = data.subset(idx);
+                        let (train, test) = local.train_test_split(h.test_frac, &mut rng);
+                        trains.push(train);
+                        tests.push(test);
+                    }
+                    let global = tests[0].clone();
+                    (trains, global, Some(tests))
+                }
+            }
+        }
+    };
+    Ok((ClientDataSource::eager(locals), test, client_tests))
+}
+
+/// Per-client train/test holdout with keep-subsampling (Figure-5 (a)/(b)):
+/// split off `test_frac`, then keep a floor-8 `keep_frac` subsample of the
+/// train side, drawn with the same rng. The subsample draw runs even at
+/// `keep_frac = 1.0` — that is what the historical protocol did, and the
+/// equivalence suite pins it.
+fn split_holdout(
+    locals: Vec<Dataset>,
+    h: &HoldoutSpec,
+    mut rng: Rng,
+) -> (Vec<Dataset>, Vec<Dataset>) {
+    let mut trains = Vec::new();
+    let mut tests = Vec::new();
+    for d in locals {
+        let (train, test) = d.train_test_split(h.test_frac, &mut rng);
+        let keep =
+            ((((train.len() as f64) * h.keep_frac).round().max(8.0)) as usize).min(train.len());
+        let idx = rng.sample_indices(train.len(), keep);
+        trains.push(train.subset(&idx));
+        tests.push(test);
+    }
+    (trains, tests)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Optimizer, Sharing};
+    use crate::scenario::manifest::{DataSource, DatasetSpec};
+
+    fn tiny(dataset: DatasetSpec) -> ScenarioManifest {
+        ScenarioManifest {
+            name: "builder_test".into(),
+            artifact: "native_mlp10_orig".into(),
+            dataset,
+            optimizer: Optimizer::FedAvg,
+            sharing: Sharing::Full,
+            quantize_upload: false,
+            sample_frac: 0.5,
+            rounds: 1,
+            local_epochs: 1,
+            lr: 0.05,
+            lr_decay: 1.0,
+            eval_every: 0,
+            seed: 7,
+            num_threads: 1,
+        }
+    }
+
+    #[test]
+    fn eager_iid_builds_and_runs() {
+        let engine = Engine::native();
+        let m = tiny(DatasetSpec {
+            source: DataSource::Mnist,
+            partition: PartitionSpec::Iid,
+            clients: Some(4),
+            population: None,
+            samples_per_client: 24,
+            test_samples: 32,
+            holdout: None,
+        });
+        let mut built = ScenarioBuilder::new(&engine).build(&m).unwrap();
+        assert!(built.client_tests.is_none());
+        built.federation.run(1).unwrap();
+        assert_eq!(built.federation.reports.len(), 1);
+    }
+
+    #[test]
+    fn holdout_yields_per_client_tests() {
+        let engine = Engine::native();
+        let m = tiny(DatasetSpec {
+            source: DataSource::Mnist,
+            partition: PartitionSpec::Writer { heterogeneity: 0.8 },
+            clients: Some(4),
+            population: None,
+            samples_per_client: 40,
+            test_samples: 16,
+            holdout: Some(HoldoutSpec { test_frac: 0.25, keep_frac: 1.0 }),
+        });
+        let built = ScenarioBuilder::new(&engine).build(&m).unwrap();
+        let tests = built.client_tests.expect("holdout manifests carry per-client tests");
+        assert_eq!(tests.len(), 4);
+        assert!(tests.iter().all(|t| !t.is_empty()));
+    }
+
+    #[test]
+    fn virtual_population_is_lazy() {
+        let engine = Engine::native();
+        let m = tiny(DatasetSpec {
+            source: DataSource::Mnist,
+            partition: PartitionSpec::Writer { heterogeneity: 0.5 },
+            clients: None,
+            population: Some(10_000),
+            samples_per_client: 8,
+            test_samples: 16,
+            holdout: None,
+        });
+        let mut m = m;
+        m.sample_frac = 0.001; // 10 participants out of 10k virtual clients.
+        let mut built = ScenarioBuilder::new(&engine).build(&m).unwrap();
+        built.federation.run(1).unwrap();
+        assert_eq!(built.federation.reports[0].participants, 10);
+    }
+
+    #[test]
+    fn invalid_manifest_is_rejected_with_name() {
+        let engine = Engine::native();
+        let mut m = tiny(DatasetSpec {
+            source: DataSource::Mnist,
+            partition: PartitionSpec::Iid,
+            clients: Some(4),
+            population: None,
+            samples_per_client: 24,
+            test_samples: 32,
+            holdout: None,
+        });
+        m.sample_frac = 0.0;
+        let err = ScenarioBuilder::new(&engine).build(&m).unwrap_err().to_string();
+        assert!(err.contains("builder_test"), "{err}");
+        assert!(err.contains("sample_frac"), "{err}");
+    }
+}

@@ -1,0 +1,499 @@
+//! Golden-run registry: `GOLDEN.json` maps each golden-set manifest (the
+//! files under `manifests/tiny/`) to a seeded result digest. Replaying a
+//! manifest on any machine must reproduce its digest bit-for-bit; CI fails
+//! on drift, which turns every accidental change to training numerics,
+//! dataset synthesis, or client sampling into a loud test failure.
+//!
+//! A digest deliberately covers only deterministic outputs: the final
+//! `server_global` parameter vector (as f32 bit patterns), the eval-curve
+//! fields of every [`RoundReport`], and the communication-ledger totals.
+//! Wall-time telemetry (`t_comp_secs`) is excluded.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::Federation;
+use crate::runtime::Engine;
+use crate::util::hash::Sha256;
+use crate::util::json::{Json, JsonPath};
+
+use super::builder::ScenarioBuilder;
+use super::manifest::ScenarioManifest;
+
+/// Deterministic digest of one completed federated run.
+///
+/// Byte counts are stored as JSON numbers, which is exact below 2^53 —
+/// far beyond any golden-set (tiny-scale) run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RunDigest {
+    pub rounds: usize,
+    pub server_global_sha256: String,
+    pub reports_sha256: String,
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+}
+
+impl RunDigest {
+    /// First field that differs from `other`, described for a CI log.
+    pub fn diff(&self, other: &RunDigest) -> Option<String> {
+        if self.rounds != other.rounds {
+            return Some(format!(
+                "round count drift: recorded {}, got {}",
+                self.rounds, other.rounds
+            ));
+        }
+        if self.up_bytes != other.up_bytes || self.down_bytes != other.down_bytes {
+            return Some(format!(
+                "comm-ledger drift: recorded up/down {}/{}, got {}/{}",
+                self.up_bytes, self.down_bytes, other.up_bytes, other.down_bytes
+            ));
+        }
+        if self.server_global_sha256 != other.server_global_sha256 {
+            return Some(format!(
+                "server_global drift: recorded {}, got {}",
+                self.server_global_sha256, other.server_global_sha256
+            ));
+        }
+        if self.reports_sha256 != other.reports_sha256 {
+            return Some(format!(
+                "round-report drift: recorded {}, got {}",
+                self.reports_sha256, other.reports_sha256
+            ));
+        }
+        None
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("server_global_sha256", Json::Str(self.server_global_sha256.clone())),
+            ("reports_sha256", Json::Str(self.reports_sha256.clone())),
+            ("up_bytes", Json::Num(self.up_bytes as f64)),
+            ("down_bytes", Json::Num(self.down_bytes as f64)),
+        ])
+    }
+
+    pub fn from_path(p: &JsonPath) -> Result<RunDigest, String> {
+        p.expect_keys(&[
+            "rounds",
+            "server_global_sha256",
+            "reports_sha256",
+            "up_bytes",
+            "down_bytes",
+        ])?;
+        Ok(RunDigest {
+            rounds: p.key("rounds")?.usize()?,
+            server_global_sha256: p.key("server_global_sha256")?.str()?.to_string(),
+            reports_sha256: p.key("reports_sha256")?.str()?.to_string(),
+            up_bytes: p.key("up_bytes")?.u64()?,
+            down_bytes: p.key("down_bytes")?.u64()?,
+        })
+    }
+}
+
+/// Digest a completed federation (after `run`): final global parameters,
+/// deterministic round-report fields, and ledger totals.
+pub fn digest_federation(fed: &Federation) -> RunDigest {
+    let mut h = Sha256::new();
+    for w in fed.server_global() {
+        h.update(&w.to_bits().to_le_bytes());
+    }
+    let server_global_sha256 = h.hex();
+
+    let mut h = Sha256::new();
+    for r in &fed.reports {
+        h.update(&(r.round as u64).to_le_bytes());
+        h.update(&r.lr.to_bits().to_le_bytes());
+        h.update(&(r.participants as u64).to_le_bytes());
+        h.update(&r.mean_train_loss.to_bits().to_le_bytes());
+        h.update(&r.up_bytes.to_le_bytes());
+        h.update(&r.down_bytes.to_le_bytes());
+        for opt in [r.test_acc, r.test_loss] {
+            match opt {
+                Some(v) => {
+                    h.update(&[1]);
+                    h.update(&v.to_bits().to_le_bytes());
+                }
+                None => h.update(&[0]),
+            }
+        }
+        // t_comp_secs and the cumulative-telemetry fields are wall-time /
+        // derived values and stay out of the digest.
+    }
+    RunDigest {
+        rounds: fed.reports.len(),
+        server_global_sha256,
+        reports_sha256: h.hex(),
+        up_bytes: fed.comm.up_bytes,
+        down_bytes: fed.comm.down_bytes,
+    }
+}
+
+/// Build the manifest's federation, run it to completion, digest it.
+pub fn replay(engine: &Engine, m: &ScenarioManifest) -> Result<RunDigest> {
+    let mut built = ScenarioBuilder::new(engine).build(m)?;
+    built.federation.run(m.rounds)?;
+    Ok(digest_federation(&built.federation))
+}
+
+/// One registry row. `manifest_hash`/`digest` are `None` for placeholder
+/// entries that list a manifest in the golden set before anyone records it
+/// (`fedpara golden --record` fills them in).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GoldenEntry {
+    /// Manifest path as written in the registry (forward slashes).
+    pub manifest: String,
+    pub name: String,
+    pub manifest_hash: Option<String>,
+    pub digest: Option<RunDigest>,
+}
+
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GoldenRegistry {
+    pub entries: Vec<GoldenEntry>,
+}
+
+impl GoldenRegistry {
+    pub fn find(&self, manifest: &str) -> Option<&GoldenEntry> {
+        self.entries.iter().find(|e| e.manifest == manifest)
+    }
+
+    pub fn load(path: &Path) -> Result<GoldenRegistry> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading golden registry {}", path.display()))?;
+        GoldenRegistry::from_json_str(&text)
+            .map_err(|e| anyhow!("golden registry {}: {e}", path.display()))
+    }
+
+    pub fn from_json_str(text: &str) -> Result<GoldenRegistry, String> {
+        let json = Json::parse(text).map_err(|e| e.to_string())?;
+        let root = JsonPath::root(&json);
+        root.expect_keys(&["version", "entries"])?;
+        let version = root.key("version")?.usize()?;
+        if version != 1 {
+            return Err(format!("unsupported golden registry version {version} (expected 1)"));
+        }
+        let mut entries = Vec::new();
+        for e in root.key("entries")?.arr()? {
+            e.expect_keys(&["manifest", "name", "manifest_hash", "digest"])?;
+            let nullable = |key: &str| -> Result<Option<JsonPath>, String> {
+                Ok(e.key_opt(key)?.filter(|p| p.json() != &Json::Null))
+            };
+            let manifest_hash = match nullable("manifest_hash")? {
+                Some(p) => Some(p.str()?.to_string()),
+                None => None,
+            };
+            let digest = match nullable("digest")? {
+                Some(p) => Some(RunDigest::from_path(&p)?),
+                None => None,
+            };
+            entries.push(GoldenEntry {
+                manifest: e.key("manifest")?.str()?.to_string(),
+                name: e.key("name")?.str()?.to_string(),
+                manifest_hash,
+                digest,
+            });
+        }
+        Ok(GoldenRegistry { entries })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut entries = self.entries.clone();
+        entries.sort_by(|a, b| a.manifest.cmp(&b.manifest));
+        let rows = entries
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("manifest", Json::Str(e.manifest.clone())),
+                    ("name", Json::Str(e.name.clone())),
+                    (
+                        "manifest_hash",
+                        e.manifest_hash.clone().map_or(Json::Null, Json::Str),
+                    ),
+                    ("digest", e.digest.as_ref().map_or(Json::Null, RunDigest::to_json)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("version", Json::Num(1.0)), ("entries", Json::Arr(rows))])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing golden registry {}", path.display()))
+    }
+}
+
+/// Every `*.json` under `root`, recursively, in sorted order.
+pub fn collect_manifests(root: &Path) -> Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+        let rd = fs::read_dir(dir)
+            .with_context(|| format!("reading manifest dir {}", dir.display()))?;
+        for entry in rd {
+            let p = entry?.path();
+            if p.is_dir() {
+                walk(&p, out)?;
+            } else if p.extension().is_some_and(|x| x == "json") {
+                out.push(p);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(root, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+/// Registry key for a manifest path: forward slashes, as-walked.
+fn path_key(path: &Path) -> String {
+    path.to_string_lossy().replace('\\', "/")
+}
+
+/// The golden set is the `tiny/` subtree — small enough to replay in CI.
+fn in_golden_set(root: &Path, path: &Path) -> bool {
+    path.strip_prefix(root).is_ok_and(|rel| rel.starts_with("tiny"))
+}
+
+/// Outcome of a `golden --check` pass.
+#[derive(Debug, Default)]
+pub struct CheckReport {
+    /// Manifests that parsed + validated.
+    pub parsed: usize,
+    /// Golden-set manifests replayed against a recorded digest.
+    pub replayed: usize,
+    /// Hard failures: parse errors, hash drift, digest drift, replay errors,
+    /// golden-set manifests missing from the registry.
+    pub failures: Vec<String>,
+    /// Golden-set manifests with a placeholder (unrecorded) registry entry.
+    pub unrecorded: Vec<String>,
+    /// Registry entries whose manifest file no longer exists.
+    pub stale: Vec<String>,
+}
+
+impl CheckReport {
+    /// Strict mode additionally fails on unrecorded and stale entries —
+    /// CI uses it after a fresh `--record` to prove determinism.
+    pub fn passed(&self, strict: bool) -> bool {
+        self.failures.is_empty()
+            && (!strict || (self.unrecorded.is_empty() && self.stale.is_empty()))
+    }
+}
+
+/// Validate every manifest under `root` and replay the golden set against
+/// `registry`. Replay/compare failures are collected, not short-circuited,
+/// so one drifted manifest does not hide another.
+pub fn check(engine: &Engine, root: &Path, registry: &GoldenRegistry) -> Result<CheckReport> {
+    let mut report = CheckReport::default();
+    let mut seen = BTreeSet::new();
+    for path in collect_manifests(root)? {
+        let key = path_key(&path);
+        seen.insert(key.clone());
+        let m = match ScenarioManifest::load(&path) {
+            Ok(m) => m,
+            Err(e) => {
+                report.failures.push(e);
+                continue;
+            }
+        };
+        report.parsed += 1;
+        if !in_golden_set(root, &path) {
+            continue;
+        }
+        let Some(entry) = registry.find(&key) else {
+            report.failures.push(format!(
+                "{key}: golden-set manifest is not in the registry (run `fedpara golden --record`)"
+            ));
+            continue;
+        };
+        if let Some(recorded) = &entry.manifest_hash {
+            let current = m.content_hash();
+            if *recorded != current {
+                report.failures.push(format!(
+                    "{key}: manifest content drift (recorded hash {recorded}, current {current}) \
+                     — re-record goldens if the change is intentional"
+                ));
+                continue;
+            }
+        }
+        match &entry.digest {
+            None => report.unrecorded.push(key),
+            Some(recorded) => match replay(engine, &m) {
+                Ok(got) => {
+                    report.replayed += 1;
+                    if let Some(diff) = recorded.diff(&got) {
+                        report.failures.push(format!("{key}: {diff}"));
+                    }
+                }
+                Err(e) => report.failures.push(format!("{key}: replay failed: {e}")),
+            },
+        }
+    }
+    for e in &registry.entries {
+        if !seen.contains(&e.manifest) {
+            report.stale.push(e.manifest.clone());
+        }
+    }
+    Ok(report)
+}
+
+/// Replay every golden-set manifest and build a fully-recorded registry.
+pub fn record(engine: &Engine, root: &Path) -> Result<GoldenRegistry> {
+    let mut entries = Vec::new();
+    for path in collect_manifests(root)? {
+        if !in_golden_set(root, &path) {
+            continue;
+        }
+        let m = ScenarioManifest::load(&path).map_err(|e| anyhow!(e))?;
+        let digest = replay(engine, &m)?;
+        entries.push(GoldenEntry {
+            manifest: path_key(&path),
+            name: m.name.clone(),
+            manifest_hash: Some(m.content_hash()),
+            digest: Some(digest),
+        });
+    }
+    Ok(GoldenRegistry { entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json(seed: u64) -> String {
+        format!(
+            r#"{{
+                "name": "golden_unit_tiny",
+                "artifact": "native_mlp10_orig",
+                "dataset": {{
+                    "source": "mnist",
+                    "partition": "iid",
+                    "clients": 4,
+                    "samples_per_client": 24,
+                    "test_samples": 32
+                }},
+                "sample_frac": 0.5,
+                "rounds": 2,
+                "local_epochs": 1,
+                "lr": 0.05,
+                "eval_every": 0,
+                "seed": {seed},
+                "num_threads": 1
+            }}"#
+        )
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let engine = Engine::native();
+        let m = ScenarioManifest::from_json_str(&tiny_manifest_json(11)).unwrap();
+        let a = replay(&engine, &m).unwrap();
+        let b = replay(&engine, &m).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.rounds, 2);
+        assert!(a.up_bytes > 0 && a.down_bytes > 0);
+    }
+
+    #[test]
+    fn digest_distinguishes_seeds() {
+        let engine = Engine::native();
+        let a = replay(
+            &engine,
+            &ScenarioManifest::from_json_str(&tiny_manifest_json(1)).unwrap(),
+        )
+        .unwrap();
+        let b = replay(
+            &engine,
+            &ScenarioManifest::from_json_str(&tiny_manifest_json(2)).unwrap(),
+        )
+        .unwrap();
+        assert_ne!(a.server_global_sha256, b.server_global_sha256);
+        assert_ne!(a.reports_sha256, b.reports_sha256);
+    }
+
+    #[test]
+    fn registry_round_trips_through_json() {
+        let reg = GoldenRegistry {
+            entries: vec![
+                GoldenEntry {
+                    manifest: "manifests/tiny/b.json".into(),
+                    name: "b".into(),
+                    manifest_hash: Some("aa".repeat(32)),
+                    digest: Some(RunDigest {
+                        rounds: 3,
+                        server_global_sha256: "bb".repeat(32),
+                        reports_sha256: "cc".repeat(32),
+                        up_bytes: 1024,
+                        down_bytes: 2048,
+                    }),
+                },
+                GoldenEntry {
+                    manifest: "manifests/tiny/a.json".into(),
+                    name: "a".into(),
+                    manifest_hash: None,
+                    digest: None,
+                },
+            ],
+        };
+        let text = reg.to_json().to_string_pretty();
+        let back = GoldenRegistry::from_json_str(&text).unwrap();
+        // to_json sorts by manifest path.
+        assert_eq!(back.entries[0].manifest, "manifests/tiny/a.json");
+        assert_eq!(back.entries[0].digest, None);
+        assert_eq!(back.entries[1], reg.entries[0]);
+    }
+
+    #[test]
+    fn registry_rejects_unknown_keys_and_versions() {
+        let err = GoldenRegistry::from_json_str(r#"{"version": 2, "entries": []}"#).unwrap_err();
+        assert!(err.contains("version 2"), "{err}");
+        let err = GoldenRegistry::from_json_str(
+            r#"{"version": 1, "entries": [{"manifest": "m", "name": "n",
+                "manifest_hash": null, "digest": null, "extra": 1}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown key"), "{err}");
+    }
+
+    #[test]
+    fn record_then_check_round_trips_and_detects_drift() {
+        let engine = Engine::native();
+        let root =
+            std::env::temp_dir().join(format!("fedpara_golden_test_{}", std::process::id()));
+        let tiny = root.join("tiny");
+        fs::create_dir_all(&tiny).unwrap();
+        fs::write(tiny.join("t.json"), tiny_manifest_json(11)).unwrap();
+
+        let reg = record(&engine, &root).unwrap();
+        assert_eq!(reg.entries.len(), 1);
+        let report = check(&engine, &root, &reg).unwrap();
+        assert!(report.passed(true), "{:?}", report.failures);
+        assert_eq!(report.replayed, 1);
+
+        // Perturb the recorded digest: check must fail.
+        let mut bad = reg.clone();
+        bad.entries[0].digest.as_mut().unwrap().up_bytes += 1;
+        let report = check(&engine, &root, &bad).unwrap();
+        assert!(!report.passed(false));
+        assert!(report.failures[0].contains("comm-ledger drift"), "{:?}", report.failures);
+
+        // Edit the manifest (seed change): hash drift must fail first.
+        fs::write(tiny.join("t.json"), tiny_manifest_json(12)).unwrap();
+        let report = check(&engine, &root, &reg).unwrap();
+        assert!(!report.passed(false));
+        assert!(report.failures[0].contains("content drift"), "{:?}", report.failures);
+
+        // Placeholder entries are tolerated unless strict.
+        fs::write(tiny.join("t.json"), tiny_manifest_json(11)).unwrap();
+        let mut placeholder = reg.clone();
+        placeholder.entries[0].manifest_hash = None;
+        placeholder.entries[0].digest = None;
+        let report = check(&engine, &root, &placeholder).unwrap();
+        assert!(report.passed(false) && !report.passed(true));
+        assert_eq!(report.unrecorded.len(), 1);
+
+        fs::remove_dir_all(&root).ok();
+    }
+}

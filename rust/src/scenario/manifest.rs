@@ -1,0 +1,1032 @@
+//! The declarative scenario schema: everything that defines one federated
+//! run — model artifact, dataset + partition, (virtual) population,
+//! optimizer with explicit hyperparameters, sharing, quantization, schedule,
+//! seed, threads — as a JSON document with strict parsing (required-field /
+//! unknown-key / typed errors carrying full key paths via
+//! [`JsonPath`](crate::util::json::JsonPath)), a canonical serialization,
+//! and a stable content hash that keys the golden-run registry.
+//!
+//! Schema sketch (string shorthands accepted where noted; canonical form
+//! always spells the object out):
+//!
+//! ```json
+//! {
+//!   "name": "tiny_vision_fedavg",
+//!   "artifact": "native_mlp10_fedpara",
+//!   "dataset": {
+//!     "source": "mnist",                  // cifar10|cifar100|cinic10|mnist|femnist|shakespeare
+//!     "partition": {"kind": "iid"},       // or "dirichlet:0.5" | "writer:0.8" | "pathological:2"
+//!     "clients": 8,                       // eager population; XOR with "population"
+//!     "population": null,                 // virtual population (requires writer partition)
+//!     "samples_per_client": 96,
+//!     "test_samples": 512,
+//!     "holdout": null                     // {"test_frac": 0.25, "keep_frac": 1.0} → per-client tests
+//!   },
+//!   "optimizer": {"kind": "fedprox", "mu": 0.05},   // or "fedprox:0.05"
+//!   "sharing": {"kind": "full"},                    // or "fedper:fc2,..." etc.
+//!   "quantize_upload": false,
+//!   "sample_frac": 0.5, "rounds": 3, "local_epochs": 1,
+//!   "lr": 0.1, "lr_decay": 0.992, "eval_every": 1,
+//!   "seed": 42, "num_threads": 0
+//! }
+//! ```
+//!
+//! Required: `name`, `artifact`, `rounds`, `dataset.source`,
+//! `dataset.samples_per_client`, and exactly one of `dataset.clients` /
+//! `dataset.population`. Everything else defaults (mirroring
+//! `RunConfig::default` and the source's natural test-set size). For the
+//! *nullable* fields (`clients`, `population`, `holdout`) an explicit
+//! `null` means "absent"; for every other field `null` is a type error
+//! naming the offending path.
+
+use std::path::Path;
+
+use crate::config::{Optimizer, RunConfig, Sharing};
+use crate::data::{synth_text, synth_vision};
+use crate::util::hash::sha256_hex;
+use crate::util::json::{Json, JsonPath};
+
+/// Which synthetic corpus backs the run (paper dataset stand-ins).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataSource {
+    Cifar10,
+    Cifar100,
+    Cinic10,
+    Mnist,
+    Femnist,
+    Shakespeare,
+}
+
+impl DataSource {
+    pub fn parse(s: &str) -> Result<DataSource, String> {
+        Ok(match s {
+            "cifar10" => DataSource::Cifar10,
+            "cifar100" => DataSource::Cifar100,
+            "cinic10" => DataSource::Cinic10,
+            "mnist" => DataSource::Mnist,
+            "femnist" => DataSource::Femnist,
+            "shakespeare" => DataSource::Shakespeare,
+            other => {
+                return Err(format!(
+                    "unknown source '{other}' (cifar10|cifar100|cinic10|mnist|femnist|shakespeare)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataSource::Cifar10 => "cifar10",
+            DataSource::Cifar100 => "cifar100",
+            DataSource::Cinic10 => "cinic10",
+            DataSource::Mnist => "mnist",
+            DataSource::Femnist => "femnist",
+            DataSource::Shakespeare => "shakespeare",
+        }
+    }
+
+    pub fn is_text(&self) -> bool {
+        matches!(self, DataSource::Shakespeare)
+    }
+
+    /// The vision generator spec (None for text sources).
+    pub fn vision_spec(&self) -> Option<synth_vision::VisionSpec> {
+        Some(match self {
+            DataSource::Cifar10 => synth_vision::cifar10_like(),
+            DataSource::Cifar100 => synth_vision::cifar100_like(),
+            DataSource::Cinic10 => synth_vision::cinic10_like(),
+            DataSource::Mnist => synth_vision::mnist_like(),
+            DataSource::Femnist => synth_vision::femnist_like(),
+            DataSource::Shakespeare => return None,
+        })
+    }
+
+    /// The text generator spec (None for vision sources).
+    pub fn text_spec(&self) -> Option<synth_text::TextSpec> {
+        match self {
+            DataSource::Shakespeare => Some(synth_text::shakespeare_like()),
+            _ => None,
+        }
+    }
+
+    /// Natural test-set size when the manifest does not say.
+    pub fn default_test_samples(&self) -> usize {
+        if self.is_text() {
+            256
+        } else {
+            512
+        }
+    }
+}
+
+/// How samples are assigned to clients.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PartitionSpec {
+    /// Uniform random split of a pooled corpus.
+    Iid,
+    /// Label-skew: Dirichlet(α) over a pooled corpus (paper: α = 0.5).
+    Dirichlet { alpha: f64 },
+    /// Per-writer/per-role generation with heterogeneity `h` in [0, 1]
+    /// (FEMNIST writers, Shakespeare dialects). The only partition that
+    /// works lazily, hence the one virtual populations require.
+    Writer { heterogeneity: f64 },
+    /// McMahan shard split: at most `classes_per_client` classes each.
+    Pathological { classes_per_client: usize },
+}
+
+impl PartitionSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionSpec::Iid => "iid",
+            PartitionSpec::Dirichlet { .. } => "dirichlet",
+            PartitionSpec::Writer { .. } => "writer",
+            PartitionSpec::Pathological { .. } => "pathological",
+        }
+    }
+
+    /// Parse the string shorthand: `iid`, `dirichlet[:alpha]`,
+    /// `writer[:h]`, `pathological[:classes]`.
+    pub fn parse(s: &str) -> Result<PartitionSpec, String> {
+        let (kind, arg) = match s.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (s, None),
+        };
+        let num = |what: &str, default: f64| -> Result<f64, String> {
+            match arg {
+                None => Ok(default),
+                Some(a) => a
+                    .parse()
+                    .map_err(|_| format!("partition '{kind}': {what} '{a}' is not a number")),
+            }
+        };
+        Ok(match kind {
+            "iid" => {
+                if let Some(a) = arg {
+                    return Err(format!("partition 'iid' takes no parameter (got ':{a}')"));
+                }
+                PartitionSpec::Iid
+            }
+            "dirichlet" => PartitionSpec::Dirichlet { alpha: num("alpha", 0.5)? },
+            "writer" => PartitionSpec::Writer { heterogeneity: num("heterogeneity", 0.0)? },
+            "pathological" => {
+                let k = num("classes_per_client", 2.0)?;
+                if k.fract() != 0.0 || k < 1.0 {
+                    return Err(format!(
+                        "partition '{kind}': classes_per_client must be an integer >= 1"
+                    ));
+                }
+                PartitionSpec::Pathological { classes_per_client: k as usize }
+            }
+            other => {
+                return Err(format!(
+                    "unknown partition '{other}' (iid|dirichlet:<a>|writer:<h>|pathological:<k>)"
+                ))
+            }
+        })
+    }
+
+    fn from_path(p: &JsonPath) -> Result<PartitionSpec, String> {
+        if let Some(s) = p.json().as_str() {
+            return PartitionSpec::parse(s).map_err(|e| format!("`{}`: {e}", p.path()));
+        }
+        let kind = p.key("kind")?.str()?;
+        match kind {
+            "iid" => {
+                p.expect_keys(&["kind"])?;
+                Ok(PartitionSpec::Iid)
+            }
+            "dirichlet" => {
+                p.expect_keys(&["kind", "alpha"])?;
+                let alpha = match p.key_opt("alpha")? {
+                    None => 0.5,
+                    Some(a) => a.f64()?,
+                };
+                Ok(PartitionSpec::Dirichlet { alpha })
+            }
+            "writer" => {
+                p.expect_keys(&["kind", "heterogeneity"])?;
+                let h = match p.key_opt("heterogeneity")? {
+                    None => 0.0,
+                    Some(a) => a.f64()?,
+                };
+                Ok(PartitionSpec::Writer { heterogeneity: h })
+            }
+            "pathological" => {
+                p.expect_keys(&["kind", "classes_per_client"])?;
+                let k = match p.key_opt("classes_per_client")? {
+                    None => 2,
+                    Some(a) => a.usize()?,
+                };
+                Ok(PartitionSpec::Pathological { classes_per_client: k })
+            }
+            other => Err(format!(
+                "`{}`: unknown partition kind '{other}' (iid|dirichlet|writer|pathological)",
+                p.path()
+            )),
+        }
+    }
+
+    fn canonical(&self) -> Json {
+        match self {
+            PartitionSpec::Iid => Json::obj(vec![("kind", Json::Str("iid".into()))]),
+            PartitionSpec::Dirichlet { alpha } => Json::obj(vec![
+                ("kind", Json::Str("dirichlet".into())),
+                ("alpha", Json::Num(*alpha)),
+            ]),
+            PartitionSpec::Writer { heterogeneity } => Json::obj(vec![
+                ("kind", Json::Str("writer".into())),
+                ("heterogeneity", Json::Num(*heterogeneity)),
+            ]),
+            PartitionSpec::Pathological { classes_per_client } => Json::obj(vec![
+                ("kind", Json::Str("pathological".into())),
+                ("classes_per_client", Json::Num(*classes_per_client as f64)),
+            ]),
+        }
+    }
+}
+
+/// Per-client train/test holdout (Figure-5 personalization protocol): each
+/// client reserves `test_frac` of its data for its own test set, then keeps
+/// a `keep_frac` subsample of the remaining training data (floor of 8,
+/// drawn with the split rng — scarce-local-data scenarios).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HoldoutSpec {
+    pub test_frac: f64,
+    pub keep_frac: f64,
+}
+
+impl HoldoutSpec {
+    fn from_path(p: &JsonPath) -> Result<HoldoutSpec, String> {
+        p.expect_keys(&["test_frac", "keep_frac"])?;
+        let test_frac = p.key("test_frac")?.f64()?;
+        let keep_frac = match p.key_opt("keep_frac")? {
+            None => 1.0,
+            Some(a) => a.f64()?,
+        };
+        Ok(HoldoutSpec { test_frac, keep_frac })
+    }
+
+    fn canonical(&self) -> Json {
+        Json::obj(vec![
+            ("test_frac", Json::Num(self.test_frac)),
+            ("keep_frac", Json::Num(self.keep_frac)),
+        ])
+    }
+}
+
+/// The dataset half of a scenario: source corpus, partition, population.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetSpec {
+    pub source: DataSource,
+    pub partition: PartitionSpec,
+    /// Eager client count — exactly one of `clients`/`population` is set.
+    pub clients: Option<usize>,
+    /// Virtual population (lazy `ClientDataSource`; requires a writer
+    /// partition, the only generator that works per-client on demand).
+    pub population: Option<usize>,
+    pub samples_per_client: usize,
+    pub test_samples: usize,
+    pub holdout: Option<HoldoutSpec>,
+}
+
+impl DatasetSpec {
+    fn from_path(p: &JsonPath) -> Result<DatasetSpec, String> {
+        p.expect_keys(&[
+            "source",
+            "partition",
+            "clients",
+            "population",
+            "samples_per_client",
+            "test_samples",
+            "holdout",
+        ])?;
+        let src = p.key("source")?;
+        let source = DataSource::parse(src.str()?).map_err(|e| format!("`{}`: {e}", src.path()))?;
+        let partition = match p.key_opt("partition")? {
+            None => {
+                if source.is_text() {
+                    PartitionSpec::Writer { heterogeneity: 0.0 }
+                } else {
+                    PartitionSpec::Iid
+                }
+            }
+            Some(q) => PartitionSpec::from_path(&q)?,
+        };
+        let clients = nullable_usize(p, "clients")?;
+        let population = nullable_usize(p, "population")?;
+        let samples_per_client = p.key("samples_per_client")?.usize()?;
+        let test_samples = match p.key_opt("test_samples")? {
+            None => source.default_test_samples(),
+            Some(q) => q.usize()?,
+        };
+        let holdout = match p.key_opt("holdout")? {
+            None => None,
+            Some(q) if q.json() == &Json::Null => None,
+            Some(q) => Some(HoldoutSpec::from_path(&q)?),
+        };
+        Ok(DatasetSpec {
+            source,
+            partition,
+            clients,
+            population,
+            samples_per_client,
+            test_samples,
+            holdout,
+        })
+    }
+
+    fn canonical(&self) -> Json {
+        Json::obj(vec![
+            ("source", Json::Str(self.source.name().into())),
+            ("partition", self.partition.canonical()),
+            ("clients", opt_num(self.clients)),
+            ("population", opt_num(self.population)),
+            ("samples_per_client", Json::Num(self.samples_per_client as f64)),
+            ("test_samples", Json::Num(self.test_samples as f64)),
+            (
+                "holdout",
+                self.holdout.as_ref().map(|h| h.canonical()).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// One fully-specified federated run. The *single* source of truth every
+/// experiment and CLI path builds from (see
+/// [`ScenarioBuilder`](super::ScenarioBuilder)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioManifest {
+    pub name: String,
+    pub artifact: String,
+    pub dataset: DatasetSpec,
+    pub optimizer: Optimizer,
+    pub sharing: Sharing,
+    pub quantize_upload: bool,
+    pub sample_frac: f64,
+    pub rounds: usize,
+    pub local_epochs: usize,
+    pub lr: f32,
+    pub lr_decay: f64,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub num_threads: usize,
+}
+
+impl ScenarioManifest {
+    /// Parse from a JSON document (strict: unknown keys, missing required
+    /// fields, and type mismatches all error with the offending key path).
+    pub fn from_json(json: &Json) -> Result<ScenarioManifest, String> {
+        let root = JsonPath::root(json);
+        root.expect_keys(&[
+            "name",
+            "artifact",
+            "dataset",
+            "optimizer",
+            "sharing",
+            "quantize_upload",
+            "sample_frac",
+            "rounds",
+            "local_epochs",
+            "lr",
+            "lr_decay",
+            "eval_every",
+            "seed",
+            "num_threads",
+        ])?;
+        let name = root.key("name")?.str()?.to_string();
+        let artifact = root.key("artifact")?.str()?.to_string();
+        let dataset = DatasetSpec::from_path(&root.key("dataset")?)?;
+        let optimizer = match root.key_opt("optimizer")? {
+            None => Optimizer::FedAvg,
+            Some(p) => optimizer_from_path(&p)?,
+        };
+        let sharing = match root.key_opt("sharing")? {
+            None => Sharing::Full,
+            Some(p) => sharing_from_path(&p)?,
+        };
+        let m = ScenarioManifest {
+            name,
+            artifact,
+            dataset,
+            optimizer,
+            sharing,
+            quantize_upload: bool_or(&root, "quantize_upload", false)?,
+            sample_frac: f64_or(&root, "sample_frac", 0.25)?,
+            rounds: root.key("rounds")?.usize()?,
+            local_epochs: usize_or(&root, "local_epochs", 2)?,
+            lr: f64_or(&root, "lr", 0.1)? as f32,
+            lr_decay: f64_or(&root, "lr_decay", 0.992)?,
+            eval_every: usize_or(&root, "eval_every", 1)?,
+            seed: match root.key_opt("seed")? {
+                None => 42,
+                Some(p) => p.u64()?,
+            },
+            num_threads: usize_or(&root, "num_threads", 0)?,
+        };
+        Ok(m)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<ScenarioManifest, String> {
+        let json = Json::parse(text).map_err(|e| e.to_string())?;
+        ScenarioManifest::from_json(&json)
+    }
+
+    /// Load + parse + validate a manifest file.
+    pub fn load(path: &Path) -> Result<ScenarioManifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: cannot read ({e})", path.display()))?;
+        let m = ScenarioManifest::from_json_str(&text)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        m.validate().map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(m)
+    }
+
+    /// Semantic validation beyond shape/type checks.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.is_empty() {
+            return Err("`name` must be non-empty".into());
+        }
+        if self.artifact.is_empty() {
+            return Err("`artifact` must be non-empty".into());
+        }
+        if self.rounds == 0 {
+            return Err("`rounds` must be >= 1".into());
+        }
+        if self.local_epochs == 0 {
+            return Err("`local_epochs` must be >= 1".into());
+        }
+        if !(self.sample_frac > 0.0 && self.sample_frac <= 1.0) {
+            return Err("`sample_frac` must be in (0, 1]".into());
+        }
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            return Err("`lr` must be finite and > 0".into());
+        }
+        if !(self.lr_decay > 0.0 && self.lr_decay.is_finite()) {
+            return Err("`lr_decay` must be finite and > 0".into());
+        }
+        let d = &self.dataset;
+        match (d.clients, d.population) {
+            (None, None) => {
+                return Err("`dataset`: one of `clients` (eager) or `population` (virtual) is required".into())
+            }
+            (Some(_), Some(_)) => {
+                return Err("`dataset`: `clients` and `population` are mutually exclusive".into())
+            }
+            (Some(0), None) | (None, Some(0)) => {
+                return Err("`dataset`: client population must be >= 1".into())
+            }
+            _ => {}
+        }
+        if d.samples_per_client == 0 {
+            return Err("`dataset.samples_per_client` must be >= 1".into());
+        }
+        match d.partition {
+            PartitionSpec::Dirichlet { alpha } => {
+                if !(alpha > 0.0 && alpha.is_finite()) {
+                    return Err("`dataset.partition.alpha` must be finite and > 0".into());
+                }
+            }
+            PartitionSpec::Writer { heterogeneity } => {
+                if !(0.0..=1.0).contains(&heterogeneity) {
+                    return Err("`dataset.partition.heterogeneity` must be in [0, 1]".into());
+                }
+            }
+            PartitionSpec::Pathological { classes_per_client } => {
+                if classes_per_client == 0 {
+                    return Err("`dataset.partition.classes_per_client` must be >= 1".into());
+                }
+            }
+            PartitionSpec::Iid => {}
+        }
+        if d.population.is_some() {
+            if !matches!(d.partition, PartitionSpec::Writer { .. }) {
+                return Err(
+                    "`dataset.population` (virtual) requires a `writer` partition — the only \
+                     generator that synthesizes a single client on demand"
+                        .into(),
+                );
+            }
+            if d.holdout.is_some() {
+                return Err("`dataset.holdout` is not supported for virtual populations".into());
+            }
+        }
+        if d.source.is_text() && !matches!(d.partition, PartitionSpec::Writer { .. }) {
+            return Err(
+                "`dataset.partition`: text sources support only the `writer` (per-role) partition"
+                    .into(),
+            );
+        }
+        if let Some(h) = &d.holdout {
+            if !(h.test_frac > 0.0 && h.test_frac < 1.0) {
+                return Err("`dataset.holdout.test_frac` must be in (0, 1)".into());
+            }
+            if !(h.keep_frac > 0.0 && h.keep_frac <= 1.0) {
+                return Err("`dataset.holdout.keep_frac` must be in (0, 1]".into());
+            }
+            if matches!(d.partition, PartitionSpec::Iid | PartitionSpec::Dirichlet { .. }) {
+                return Err(
+                    "`dataset.holdout` requires a `writer` or `pathological` partition \
+                     (per-client test sets only make sense for per-client distributions)"
+                        .into(),
+                );
+            }
+            if matches!(d.partition, PartitionSpec::Pathological { .. }) && h.keep_frac != 1.0 {
+                return Err(
+                    "`dataset.holdout.keep_frac` must be 1.0 with a pathological partition".into(),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical JSON: every field explicit, keys sorted (BTreeMap), string
+    /// shorthands expanded to their object forms, f32 fields emitted via
+    /// their shortest round-trip decimal. Parsing the canonical form yields
+    /// an identical manifest.
+    pub fn canonical(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("artifact", Json::Str(self.artifact.clone())),
+            ("dataset", self.dataset.canonical()),
+            ("optimizer", optimizer_canonical(&self.optimizer)),
+            ("sharing", sharing_canonical(&self.sharing)),
+            ("quantize_upload", Json::Bool(self.quantize_upload)),
+            ("sample_frac", Json::Num(self.sample_frac)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("local_epochs", Json::Num(self.local_epochs as f64)),
+            ("lr", Json::Num(f32_canon(self.lr))),
+            ("lr_decay", Json::Num(self.lr_decay)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("num_threads", Json::Num(self.num_threads as f64)),
+        ])
+    }
+
+    /// Compact canonical serialization (the hash input, plus `name`).
+    pub fn canonical_string(&self) -> String {
+        self.canonical().to_string()
+    }
+
+    /// Stable content hash: SHA-256 over the compact canonical form
+    /// *minus* `name` — the hash identifies the run semantics, so renaming
+    /// a manifest (or writing defaults explicitly, reordering keys,
+    /// reformatting whitespace, using string shorthands) never changes it.
+    pub fn content_hash(&self) -> String {
+        let mut j = self.canonical();
+        if let Json::Obj(o) = &mut j {
+            o.remove("name");
+        }
+        sha256_hex(j.to_string().as_bytes())
+    }
+
+    /// The coordinator-facing knobs of this scenario.
+    pub fn to_run_config(&self) -> RunConfig {
+        RunConfig {
+            artifact: self.artifact.clone(),
+            sample_frac: self.sample_frac,
+            rounds: self.rounds,
+            local_epochs: self.local_epochs,
+            lr: self.lr,
+            lr_decay: self.lr_decay,
+            optimizer: self.optimizer,
+            quantize_upload: self.quantize_upload,
+            sharing: self.sharing.clone(),
+            eval_every: self.eval_every,
+            seed: self.seed,
+            num_threads: self.num_threads,
+        }
+    }
+}
+
+// ---- field helpers -------------------------------------------------------
+
+/// Shortest round-trip decimal of an f32, as f64 — so `lr: 0.1` emits as
+/// `0.1` (not `0.10000000149...`) and reparses to the same f32.
+fn f32_canon(x: f32) -> f64 {
+    format!("{x}").parse().expect("f32 display is a valid f64")
+}
+
+fn opt_num(v: Option<usize>) -> Json {
+    v.map(|n| Json::Num(n as f64)).unwrap_or(Json::Null)
+}
+
+/// Optional-with-default scalar: missing → default, explicit null → error.
+fn f64_or(p: &JsonPath, key: &str, default: f64) -> Result<f64, String> {
+    match p.key_opt(key)? {
+        None => Ok(default),
+        Some(q) => q.f64(),
+    }
+}
+
+fn usize_or(p: &JsonPath, key: &str, default: usize) -> Result<usize, String> {
+    match p.key_opt(key)? {
+        None => Ok(default),
+        Some(q) => q.usize(),
+    }
+}
+
+fn bool_or(p: &JsonPath, key: &str, default: bool) -> Result<bool, String> {
+    match p.key_opt(key)? {
+        None => Ok(default),
+        Some(q) => q.bool(),
+    }
+}
+
+/// Nullable field: missing or explicit null → None (documented exception to
+/// the strict null handling; `clients`/`population`/`holdout` only).
+fn nullable_usize(p: &JsonPath, key: &str) -> Result<Option<usize>, String> {
+    match p.key_opt(key)? {
+        None => Ok(None),
+        Some(q) if q.json() == &Json::Null => Ok(None),
+        Some(q) => Ok(Some(q.usize()?)),
+    }
+}
+
+// ---- optimizer / sharing JSON forms --------------------------------------
+
+fn optimizer_from_path(p: &JsonPath) -> Result<Optimizer, String> {
+    if let Some(s) = p.json().as_str() {
+        return Optimizer::parse(s).map_err(|e| format!("`{}`: {e}", p.path()));
+    }
+    let kind = p.key("kind")?.str()?;
+    match kind {
+        "fedavg" | "scaffold" | "fedadam" => {
+            p.expect_keys(&["kind"])?;
+            Optimizer::parse(kind).map_err(|e| format!("`{}`: {e}", p.path()))
+        }
+        "fedprox" => {
+            p.expect_keys(&["kind", "mu"])?;
+            let mu = match p.key_opt("mu")? {
+                None => 0.1,
+                Some(q) => q.f64()? as f32,
+            };
+            if !(mu.is_finite() && mu >= 0.0) {
+                return Err(format!("`{}`: mu must be finite and >= 0", p.path()));
+            }
+            Ok(Optimizer::FedProx { mu })
+        }
+        "feddyn" => {
+            p.expect_keys(&["kind", "alpha"])?;
+            let alpha = match p.key_opt("alpha")? {
+                None => 0.1,
+                Some(q) => q.f64()? as f32,
+            };
+            if !(alpha.is_finite() && alpha >= 0.0) {
+                return Err(format!("`{}`: alpha must be finite and >= 0", p.path()));
+            }
+            Ok(Optimizer::FedDyn { alpha })
+        }
+        other => Err(format!(
+            "`{}`: unknown optimizer kind '{other}' (fedavg|fedprox|scaffold|feddyn|fedadam)",
+            p.path()
+        )),
+    }
+}
+
+fn optimizer_canonical(o: &Optimizer) -> Json {
+    match o {
+        Optimizer::FedAvg => Json::obj(vec![("kind", Json::Str("fedavg".into()))]),
+        Optimizer::FedProx { mu } => Json::obj(vec![
+            ("kind", Json::Str("fedprox".into())),
+            ("mu", Json::Num(f32_canon(*mu))),
+        ]),
+        Optimizer::Scaffold => Json::obj(vec![("kind", Json::Str("scaffold".into()))]),
+        Optimizer::FedDyn { alpha } => Json::obj(vec![
+            ("kind", Json::Str("feddyn".into())),
+            ("alpha", Json::Num(f32_canon(*alpha))),
+        ]),
+        Optimizer::FedAdam => Json::obj(vec![("kind", Json::Str("fedadam".into()))]),
+    }
+}
+
+fn sharing_from_path(p: &JsonPath) -> Result<Sharing, String> {
+    if let Some(s) = p.json().as_str() {
+        return Sharing::parse(s).map_err(|e| format!("`{}`: {e}", p.path()));
+    }
+    let kind = p.key("kind")?.str()?;
+    match kind {
+        "full" | "pfedpara" | "global-segments" | "local-only" => {
+            p.expect_keys(&["kind"])?;
+            Sharing::parse(kind).map_err(|e| format!("`{}`: {e}", p.path()))
+        }
+        "fedper" => {
+            p.expect_keys(&["kind", "local_prefixes"])?;
+            let items = p.key("local_prefixes")?.arr()?;
+            let mut prefixes = Vec::with_capacity(items.len());
+            for item in &items {
+                let s = item.str()?;
+                if s.is_empty() {
+                    return Err(format!("`{}`: empty prefix", item.path()));
+                }
+                prefixes.push(s.to_string());
+            }
+            if prefixes.is_empty() {
+                return Err(format!(
+                    "`{}`: fedper needs at least one local prefix",
+                    p.path()
+                ));
+            }
+            Ok(Sharing::FedPer { local_prefixes: prefixes })
+        }
+        other => Err(format!(
+            "`{}`: unknown sharing kind '{other}' (full|pfedpara|local-only|fedper)",
+            p.path()
+        )),
+    }
+}
+
+fn sharing_canonical(s: &Sharing) -> Json {
+    match s {
+        Sharing::Full => Json::obj(vec![("kind", Json::Str("full".into()))]),
+        Sharing::GlobalSegments => Json::obj(vec![("kind", Json::Str("pfedpara".into()))]),
+        Sharing::FedPer { local_prefixes } => Json::obj(vec![
+            ("kind", Json::Str("fedper".into())),
+            (
+                "local_prefixes",
+                Json::Arr(local_prefixes.iter().map(|p| Json::Str(p.clone())).collect()),
+            ),
+        ]),
+        Sharing::LocalOnly => Json::obj(vec![("kind", Json::Str("local-only".into()))]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_manifest_text() -> &'static str {
+        r#"{
+            "name": "t",
+            "artifact": "native_mlp10_orig",
+            "rounds": 3,
+            "dataset": {"source": "mnist", "clients": 8, "samples_per_client": 96}
+        }"#
+    }
+
+    #[test]
+    fn sparse_manifest_fills_defaults() {
+        let m = ScenarioManifest::from_json_str(tiny_manifest_text()).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.optimizer, Optimizer::FedAvg);
+        assert_eq!(m.sharing, Sharing::Full);
+        assert_eq!(m.dataset.partition, PartitionSpec::Iid);
+        assert_eq!(m.dataset.test_samples, 512);
+        assert_eq!(m.sample_frac, 0.25);
+        assert_eq!(m.local_epochs, 2);
+        assert_eq!(m.lr, 0.1);
+        assert_eq!(m.lr_decay, 0.992);
+        assert_eq!(m.eval_every, 1);
+        assert_eq!(m.seed, 42);
+        assert_eq!(m.num_threads, 0);
+        // Text sources default to the writer partition + a text-sized test.
+        let t = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"native_lstm_orig","rounds":2,
+                "dataset":{"source":"shakespeare","clients":4,"samples_per_client":24}}"#,
+        )
+        .unwrap();
+        assert_eq!(t.dataset.partition, PartitionSpec::Writer { heterogeneity: 0.0 });
+        assert_eq!(t.dataset.test_samples, 256);
+    }
+
+    #[test]
+    fn strict_errors_carry_key_paths() {
+        // Missing required field.
+        let e = ScenarioManifest::from_json_str(r#"{"name":"t","artifact":"a","rounds":1}"#)
+            .unwrap_err();
+        assert!(e.contains("missing required key `dataset`"), "{e}");
+        // Unknown key, nested.
+        let e = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8,"foo":1}}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("unknown key `dataset.foo`"), "{e}");
+        // Explicit null on a non-nullable field is a typed error with path.
+        let e = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,"lr":null,
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e, "`lr`: expected a number, got null");
+        // Typed error inside the optimizer object.
+        let e = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "optimizer":{"kind":"fedprox","mu":"big"},
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e, "`optimizer.mu`: expected a number, got a string");
+    }
+
+    #[test]
+    fn nullable_fields_accept_null() {
+        let m = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "dataset":{"source":"mnist","clients":4,"population":null,
+                           "samples_per_client":8,"holdout":null}}"#,
+        )
+        .unwrap();
+        assert_eq!(m.dataset.clients, Some(4));
+        assert_eq!(m.dataset.population, None);
+        assert_eq!(m.dataset.holdout, None);
+    }
+
+    #[test]
+    fn semantic_validation() {
+        let parse = |s: &str| ScenarioManifest::from_json_str(s).unwrap();
+        // clients XOR population.
+        let m = parse(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "dataset":{"source":"mnist","samples_per_client":8}}"#,
+        );
+        assert!(m.validate().unwrap_err().contains("one of `clients`"));
+        // Virtual requires writer.
+        let m = parse(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "dataset":{"source":"mnist","population":1000,"samples_per_client":8}}"#,
+        );
+        assert!(m.validate().unwrap_err().contains("requires a `writer` partition"));
+        // Text requires writer.
+        let m = parse(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "dataset":{"source":"shakespeare","partition":"iid","clients":4,
+                           "samples_per_client":8}}"#,
+        );
+        assert!(m.validate().unwrap_err().contains("only the `writer`"));
+        // Holdout needs a per-client partition.
+        let m = parse(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "dataset":{"source":"mnist","clients":4,"samples_per_client":8,
+                           "holdout":{"test_frac":0.25}}}"#,
+        );
+        assert!(m.validate().unwrap_err().contains("holdout"));
+        // Valid writer + holdout passes.
+        let m = parse(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "dataset":{"source":"femnist","partition":"writer:0.8","clients":4,
+                           "samples_per_client":8,"holdout":{"test_frac":0.25,"keep_frac":0.2}}}"#,
+        );
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn optimizer_and_sharing_forms_agree() {
+        // String shorthand and object form parse to the same manifest and
+        // therefore the same hash.
+        let a = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,"optimizer":"fedprox:0.05",
+                "sharing":"fedper:fc2",
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        let b = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "optimizer":{"kind":"fedprox","mu":0.05},
+                "sharing":{"kind":"fedper","local_prefixes":["fc2"]},
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_eq!(a.optimizer, Optimizer::FedProx { mu: 0.05 });
+        assert_eq!(a.sharing, Sharing::FedPer { local_prefixes: vec!["fc2".into()] });
+    }
+
+    #[test]
+    fn hash_is_default_whitespace_and_name_insensitive() {
+        let sparse = ScenarioManifest::from_json_str(tiny_manifest_text()).unwrap();
+        // Everything spelled out explicitly, different formatting and name.
+        let explicit = ScenarioManifest::from_json_str(
+            r#"{"name":"другое","artifact":"native_mlp10_orig","rounds":3,
+    "dataset":{"source":"mnist","partition":{"kind":"iid"},"clients":8,"population":null,
+               "samples_per_client":96,"test_samples":512,"holdout":null},
+    "optimizer":{"kind":"fedavg"},"sharing":{"kind":"full"},"quantize_upload":false,
+    "sample_frac":0.25,"local_epochs":2,"lr":0.1,"lr_decay":0.992,"eval_every":1,
+    "seed":42,"num_threads":0}"#,
+        )
+        .unwrap();
+        assert_eq!(sparse.content_hash(), explicit.content_hash());
+        // Hash is hex sha256.
+        let h = sparse.content_hash();
+        assert_eq!(h.len(), 64);
+        assert!(h.chars().all(|c| c.is_ascii_hexdigit()));
+        // Any semantic change moves the hash.
+        let mut changed = sparse.clone();
+        changed.seed = 43;
+        assert_ne!(changed.content_hash(), sparse.content_hash());
+    }
+
+    #[test]
+    fn f32_canonical_emission_is_short_and_round_trips() {
+        assert_eq!(f32_canon(0.1f32), 0.1f64);
+        let m = ScenarioManifest::from_json_str(tiny_manifest_text()).unwrap();
+        let s = m.canonical_string();
+        assert!(s.contains("\"lr\":0.1,"), "{s}");
+        let re = ScenarioManifest::from_json_str(&s).unwrap();
+        assert_eq!(re.lr, m.lr);
+    }
+
+    // ---- randomized round-trip property ---------------------------------
+
+    fn random_manifest(rng: &mut Rng) -> ScenarioManifest {
+        let sources = [
+            DataSource::Cifar10,
+            DataSource::Cifar100,
+            DataSource::Cinic10,
+            DataSource::Mnist,
+            DataSource::Femnist,
+            DataSource::Shakespeare,
+        ];
+        let source = sources[rng.below(sources.len())];
+        let virt = !source.is_text() && rng.below(4) == 0;
+        let partition = if source.is_text() || virt || rng.below(3) == 0 {
+            PartitionSpec::Writer { heterogeneity: (rng.below(11) as f64) / 10.0 }
+        } else {
+            match rng.below(3) {
+                0 => PartitionSpec::Iid,
+                1 => PartitionSpec::Dirichlet { alpha: 0.1 + (rng.below(20) as f64) / 10.0 },
+                _ => PartitionSpec::Pathological { classes_per_client: 1 + rng.below(3) },
+            }
+        };
+        let holdout = if !virt
+            && matches!(
+                partition,
+                PartitionSpec::Writer { .. } | PartitionSpec::Pathological { .. }
+            )
+            && rng.below(2) == 0
+        {
+            Some(HoldoutSpec {
+                test_frac: 0.1 + (rng.below(8) as f64) / 10.0,
+                keep_frac: if matches!(partition, PartitionSpec::Pathological { .. }) {
+                    1.0
+                } else {
+                    0.1 + (rng.below(10) as f64) / 10.0
+                },
+            })
+        } else {
+            None
+        };
+        let optimizer = match rng.below(5) {
+            0 => Optimizer::FedAvg,
+            1 => Optimizer::FedProx { mu: rng.below(100) as f32 / 100.0 },
+            2 => Optimizer::Scaffold,
+            3 => Optimizer::FedDyn { alpha: rng.below(100) as f32 / 100.0 },
+            _ => Optimizer::FedAdam,
+        };
+        let sharing = match rng.below(4) {
+            0 => Sharing::Full,
+            1 => Sharing::GlobalSegments,
+            2 => Sharing::FedPer {
+                local_prefixes: (0..1 + rng.below(2)).map(|i| format!("fc{i}")).collect(),
+            },
+            _ => Sharing::LocalOnly,
+        };
+        ScenarioManifest {
+            name: format!("rand_{}", rng.below(1 << 30)),
+            artifact: "native_mlp10_orig".into(),
+            dataset: DatasetSpec {
+                source,
+                partition,
+                clients: if virt { None } else { Some(1 + rng.below(32)) },
+                population: if virt { Some(1000 + rng.below(100_000)) } else { None },
+                samples_per_client: 1 + rng.below(200),
+                test_samples: 1 + rng.below(600),
+                holdout,
+            },
+            optimizer,
+            sharing,
+            quantize_upload: rng.below(2) == 0,
+            sample_frac: (1 + rng.below(100)) as f64 / 100.0,
+            rounds: 1 + rng.below(50),
+            local_epochs: 1 + rng.below(8),
+            lr: (1 + rng.below(1000)) as f32 / 500.0,
+            lr_decay: 0.9 + (rng.below(100) as f64) / 1000.0,
+            eval_every: rng.below(4),
+            seed: rng.below(1 << 31) as u64,
+            num_threads: rng.below(8),
+        }
+    }
+
+    #[test]
+    fn property_parse_canonicalize_reparse_round_trip() {
+        let cases: usize = std::env::var("FEDPARA_PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(200);
+        let mut rng = Rng::new(0x5CEA_A210);
+        for i in 0..cases {
+            let m = random_manifest(&mut rng);
+            m.validate().unwrap_or_else(|e| panic!("case {i}: generator invalid: {e}\n{m:?}"));
+            let compact = m.canonical_string();
+            let re = ScenarioManifest::from_json_str(&compact)
+                .unwrap_or_else(|e| panic!("case {i}: reparse failed: {e}\n{compact}"));
+            assert_eq!(re, m, "case {i}: canonical round-trip changed the manifest");
+            assert_eq!(re.canonical_string(), compact, "case {i}: canonical not a fixpoint");
+            // Whitespace insensitivity: the pretty form hashes identically.
+            let pretty = m.canonical().to_string_pretty();
+            let re2 = ScenarioManifest::from_json_str(&pretty).unwrap();
+            assert_eq!(re2.content_hash(), m.content_hash(), "case {i}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Declarative scenario manifests: a JSON schema ([`ScenarioManifest`])
+//! describing a complete federated experiment, the single builder that
+//! turns one into a running [`Federation`](crate::coordinator::Federation)
+//! ([`ScenarioBuilder`]), and the golden-run registry that pins seeded
+//! results for CI drift detection ([`golden`]).
+
+pub mod builder;
+pub mod golden;
+pub mod manifest;
+
+pub use builder::{Built, ScenarioBuilder};
+pub use golden::{CheckReport, GoldenEntry, GoldenRegistry, RunDigest};
+pub use manifest::{DataSource, DatasetSpec, HoldoutSpec, PartitionSpec, ScenarioManifest};

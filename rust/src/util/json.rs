@@ -92,11 +92,25 @@ impl Json {
     }
 
     /// `obj["key"]`-style access; returns Null for missing keys or non-objects.
+    ///
+    /// Convenient for results files where absent and null coincide, but it
+    /// cannot distinguish a *missing* key from an *explicit* `null` — strict
+    /// loaders (the scenario-manifest parser) should go through [`JsonPath`]
+    /// instead, which keeps that distinction and reports full key paths.
     pub fn get(&self, key: &str) -> &Json {
         const NULL: Json = Json::Null;
         match self {
             Json::Obj(o) => o.get(key).unwrap_or(&NULL),
             _ => &NULL,
+        }
+    }
+
+    /// Like [`Json::get`] but preserves the missing-vs-null distinction:
+    /// `None` only when the key is absent (or `self` is not an object).
+    pub fn get_opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(o) => o.get(key),
+            _ => None,
         }
     }
 
@@ -212,6 +226,175 @@ fn write_escaped(out: &mut String, s: &str) {
         }
     }
     out.push('"');
+}
+
+/// Human-readable type name for error messages.
+fn type_name(j: &Json) -> &'static str {
+    match j {
+        Json::Null => "null",
+        Json::Bool(_) => "a boolean",
+        Json::Num(_) => "a number",
+        Json::Str(_) => "a string",
+        Json::Arr(_) => "an array",
+        Json::Obj(_) => "an object",
+    }
+}
+
+/// Path-aware accessor over a parsed [`Json`] tree for strict loaders.
+///
+/// Every error carries the dotted path of the offending node (e.g.
+/// `` `optimizer.mu`: expected a number, got null ``), and — unlike
+/// [`Json::get`] — a *missing* key is distinguishable from an *explicit*
+/// `null`: [`JsonPath::key`] fails on absence, [`JsonPath::key_opt`] returns
+/// `Some` for a present-but-null value so the typed getter can then report
+/// the null with its path.
+#[derive(Clone)]
+pub struct JsonPath<'a> {
+    json: &'a Json,
+    path: String,
+}
+
+impl<'a> JsonPath<'a> {
+    pub fn root(json: &'a Json) -> JsonPath<'a> {
+        JsonPath { json, path: String::new() }
+    }
+
+    pub fn json(&self) -> &'a Json {
+        self.json
+    }
+
+    /// The dotted path of this node (`(root)` at the top level).
+    pub fn path(&self) -> &str {
+        if self.path.is_empty() {
+            "(root)"
+        } else {
+            &self.path
+        }
+    }
+
+    fn child_path(&self, key: &str) -> String {
+        if self.path.is_empty() {
+            key.to_string()
+        } else {
+            format!("{}.{key}", self.path)
+        }
+    }
+
+    /// Descend into a required object key; errors name the missing path.
+    pub fn key(&self, key: &str) -> Result<JsonPath<'a>, String> {
+        match self.json {
+            Json::Obj(o) => match o.get(key) {
+                Some(v) => Ok(JsonPath { json: v, path: self.child_path(key) }),
+                None => Err(format!("missing required key `{}`", self.child_path(key))),
+            },
+            other => Err(format!(
+                "`{}`: expected an object, got {}",
+                self.path(),
+                type_name(other)
+            )),
+        }
+    }
+
+    /// Descend into an optional key: `Ok(None)` when absent, `Ok(Some(..))`
+    /// when present — including an explicit `null`, which a subsequent typed
+    /// getter rejects with the full path.
+    pub fn key_opt(&self, key: &str) -> Result<Option<JsonPath<'a>>, String> {
+        match self.json {
+            Json::Obj(o) => Ok(o
+                .get(key)
+                .map(|v| JsonPath { json: v, path: self.child_path(key) })),
+            other => Err(format!(
+                "`{}`: expected an object, got {}",
+                self.path(),
+                type_name(other)
+            )),
+        }
+    }
+
+    /// Index into an array element; the path gains an `[i]` segment.
+    pub fn index(&self, i: usize) -> Result<JsonPath<'a>, String> {
+        match self.json {
+            Json::Arr(items) => match items.get(i) {
+                Some(v) => Ok(JsonPath { json: v, path: format!("{}[{i}]", self.path) }),
+                None => Err(format!(
+                    "`{}`: index {i} out of bounds (len {})",
+                    self.path(),
+                    items.len()
+                )),
+            },
+            other => Err(format!(
+                "`{}`: expected an array, got {}",
+                self.path(),
+                type_name(other)
+            )),
+        }
+    }
+
+    fn type_err(&self, want: &str) -> String {
+        format!("`{}`: expected {}, got {}", self.path(), want, type_name(self.json))
+    }
+
+    pub fn str(&self) -> Result<&'a str, String> {
+        self.json.as_str().ok_or_else(|| self.type_err("a string"))
+    }
+
+    pub fn f64(&self) -> Result<f64, String> {
+        self.json.as_f64().ok_or_else(|| self.type_err("a number"))
+    }
+
+    pub fn usize(&self) -> Result<usize, String> {
+        self.json
+            .as_usize()
+            .ok_or_else(|| self.type_err("a non-negative integer"))
+    }
+
+    /// JSON numbers are f64, so integers are exact only up to 2^53.
+    pub fn u64(&self) -> Result<u64, String> {
+        match self.json {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9_007_199_254_740_992.0 => {
+                Ok(*n as u64)
+            }
+            _ => Err(self.type_err("a non-negative integer (< 2^53)")),
+        }
+    }
+
+    pub fn bool(&self) -> Result<bool, String> {
+        self.json.as_bool().ok_or_else(|| self.type_err("a boolean"))
+    }
+
+    pub fn arr(&self) -> Result<Vec<JsonPath<'a>>, String> {
+        match self.json {
+            Json::Arr(items) => Ok(items
+                .iter()
+                .enumerate()
+                .map(|(i, v)| JsonPath { json: v, path: format!("{}[{i}]", self.path) })
+                .collect()),
+            _ => Err(self.type_err("an array")),
+        }
+    }
+
+    /// Reject keys outside `allowed` — typo detection for strict schemas.
+    pub fn expect_keys(&self, allowed: &[&str]) -> Result<(), String> {
+        match self.json {
+            Json::Obj(o) => {
+                for k in o.keys() {
+                    if !allowed.contains(&k.as_str()) {
+                        return Err(format!(
+                            "unknown key `{}` (allowed: {})",
+                            self.child_path(k),
+                            allowed.join(", ")
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            other => Err(format!(
+                "`{}`: expected an object, got {}",
+                self.path(),
+                type_name(other)
+            )),
+        }
+    }
 }
 
 struct Parser<'a> {
@@ -505,5 +688,66 @@ mod tests {
         assert_eq!(Json::parse("7").unwrap().as_usize(), Some(7));
         assert_eq!(Json::parse("7.5").unwrap().as_usize(), None);
         assert_eq!(Json::parse("-7").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn get_opt_distinguishes_missing_from_null() {
+        let j = Json::parse(r#"{"a": null, "b": 1}"#).unwrap();
+        assert_eq!(j.get_opt("a"), Some(&Json::Null));
+        assert_eq!(j.get_opt("missing"), None);
+        // `get` conflates the two — that is exactly what JsonPath fixes.
+        assert_eq!(j.get("a"), j.get("missing"));
+    }
+
+    #[test]
+    fn jsonpath_reports_full_key_path() {
+        let j = Json::parse(r#"{"optimizer": {"kind": "fedprox", "mu": null}}"#).unwrap();
+        let root = JsonPath::root(&j);
+        let opt = root.key("optimizer").unwrap();
+        // Explicit null is *present* (key_opt → Some) but fails typed access
+        // with the dotted path in the message.
+        let mu = opt.key_opt("mu").unwrap().expect("null is present");
+        let err = mu.f64().unwrap_err();
+        assert_eq!(err, "`optimizer.mu`: expected a number, got null");
+        // Missing key names the would-be path.
+        let err = opt.key("alpha").unwrap_err();
+        assert_eq!(err, "missing required key `optimizer.alpha`");
+        assert_eq!(opt.key_opt("alpha").unwrap().map(|p| p.path().to_string()), None);
+    }
+
+    #[test]
+    fn jsonpath_typed_getters() {
+        let j = Json::parse(r#"{"s":"x","n":2.5,"i":7,"b":true,"a":[1,"two"]}"#).unwrap();
+        let root = JsonPath::root(&j);
+        assert_eq!(root.key("s").unwrap().str().unwrap(), "x");
+        assert_eq!(root.key("n").unwrap().f64().unwrap(), 2.5);
+        assert_eq!(root.key("i").unwrap().usize().unwrap(), 7);
+        assert_eq!(root.key("i").unwrap().u64().unwrap(), 7);
+        assert!(root.key("b").unwrap().bool().unwrap());
+        assert!(root.key("n").unwrap().usize().is_err());
+        let items = root.key("a").unwrap().arr().unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[1].path(), "a[1]");
+        let err = items[1].f64().unwrap_err();
+        assert_eq!(err, "`a[1]`: expected a number, got a string");
+        assert_eq!(root.key("a").unwrap().index(5).unwrap_err(),
+            "`a`: index 5 out of bounds (len 2)");
+    }
+
+    #[test]
+    fn jsonpath_unknown_key_detection() {
+        let j = Json::parse(r#"{"dataset": {"source": "mnist", "foo": 1}}"#).unwrap();
+        let root = JsonPath::root(&j);
+        assert!(root.expect_keys(&["dataset"]).is_ok());
+        let ds = root.key("dataset").unwrap();
+        let err = ds.expect_keys(&["source", "clients"]).unwrap_err();
+        assert!(err.starts_with("unknown key `dataset.foo`"), "{err}");
+    }
+
+    #[test]
+    fn jsonpath_non_object_descent() {
+        let j = Json::parse("[1,2]").unwrap();
+        let root = JsonPath::root(&j);
+        assert_eq!(root.key("x").unwrap_err(), "`(root)`: expected an object, got an array");
     }
 }

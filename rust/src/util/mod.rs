@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod f16;
+pub mod hash;
 pub mod json;
 pub mod logging;
 pub mod proptest;

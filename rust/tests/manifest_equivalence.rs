@@ -1,0 +1,242 @@
+//! Pins the `ScenarioBuilder` refactor to the pre-manifest experiment
+//! wiring: for each historical scenario shape (eager vision IID /
+//! Dirichlet, eager text, virtual cross-device population), the federation
+//! built from a JSON manifest must be **bit-identical** — same
+//! `RoundReport`s, same `CommLedger` totals, same final `server_global`
+//! vector — to one assembled by hand exactly the way the experiments used
+//! to do it (same seed-derivation constants, same partition rng order).
+//!
+//! If a seed constant or dataset-construction step in
+//! `scenario::builder` drifts, these tests fail before any golden-run
+//! digest does, and point at the exact scenario shape that changed.
+
+use fedpara::config::{Optimizer, RunConfig, Sharing};
+use fedpara::coordinator::{ClientDataSource, Federation};
+use fedpara::data::{partition, synth_text, synth_vision, Dataset};
+use fedpara::runtime::Engine;
+use fedpara::scenario::{ScenarioBuilder, ScenarioManifest};
+use fedpara::util::rng::Rng;
+
+const ROUNDS: usize = 2;
+
+/// The pre-refactor Supp.-Table-6-style config tail shared by the legacy
+/// scenarios below (mirrors the old `experiments::common::preset`).
+fn legacy_config(artifact: &str, lr: f32, local_epochs: usize, sample_frac: f64) -> RunConfig {
+    RunConfig {
+        artifact: artifact.to_string(),
+        sample_frac,
+        rounds: ROUNDS,
+        local_epochs,
+        lr,
+        lr_decay: 0.992,
+        optimizer: Optimizer::FedAvg,
+        quantize_upload: false,
+        sharing: Sharing::Full,
+        eval_every: 1,
+        seed: 42,
+        num_threads: 0,
+    }
+}
+
+/// Run both federations `ROUNDS` rounds and require bit-identity.
+fn assert_bit_identical(mut legacy: Federation, mut manifest: Federation, what: &str) {
+    legacy.run(ROUNDS).unwrap();
+    manifest.run(ROUNDS).unwrap();
+
+    assert_eq!(legacy.reports.len(), manifest.reports.len(), "{what}: round count");
+    for (l, m) in legacy.reports.iter().zip(manifest.reports.iter()) {
+        assert_eq!(l.round, m.round, "{what}: round index");
+        assert_eq!(l.lr.to_bits(), m.lr.to_bits(), "{what}: lr, round {}", l.round);
+        assert_eq!(l.participants, m.participants, "{what}: participants, round {}", l.round);
+        assert_eq!(
+            l.mean_train_loss.to_bits(),
+            m.mean_train_loss.to_bits(),
+            "{what}: train loss, round {}",
+            l.round
+        );
+        assert_eq!(l.up_bytes, m.up_bytes, "{what}: up bytes, round {}", l.round);
+        assert_eq!(l.down_bytes, m.down_bytes, "{what}: down bytes, round {}", l.round);
+        assert_eq!(
+            l.cum_gbytes.to_bits(),
+            m.cum_gbytes.to_bits(),
+            "{what}: cum GB, round {}",
+            l.round
+        );
+        assert_eq!(
+            l.test_acc.map(f64::to_bits),
+            m.test_acc.map(f64::to_bits),
+            "{what}: test acc, round {}",
+            l.round
+        );
+        assert_eq!(
+            l.test_loss.map(f64::to_bits),
+            m.test_loss.map(f64::to_bits),
+            "{what}: test loss, round {}",
+            l.round
+        );
+        // t_comp_secs is wall time — the one field allowed to differ.
+    }
+
+    assert_eq!(legacy.comm.up_bytes, manifest.comm.up_bytes, "{what}: ledger up");
+    assert_eq!(legacy.comm.down_bytes, manifest.comm.down_bytes, "{what}: ledger down");
+
+    let (lg, mg) = (legacy.server_global(), manifest.server_global());
+    assert_eq!(lg.len(), mg.len(), "{what}: server_global length");
+    for (i, (a, b)) in lg.iter().zip(mg.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: server_global[{i}]");
+    }
+}
+
+/// Pre-refactor eager vision wiring (the old `common::vision_federation`).
+fn legacy_vision(
+    non_iid: bool,
+    clients: usize,
+    per: usize,
+    test_n: usize,
+) -> (Vec<Dataset>, Dataset) {
+    let spec = synth_vision::mnist_like();
+    let seed = 42u64;
+    let data = synth_vision::generate(&spec, clients * per, seed);
+    let test = synth_vision::generate(&spec, test_n, seed ^ 0x7E57_0001);
+    let mut rng = Rng::new(seed ^ 0x9A57);
+    let part = if non_iid {
+        partition::dirichlet(&data.labels, spec.classes, clients, 0.5, &mut rng)
+    } else {
+        partition::iid(data.len(), clients, &mut rng)
+    };
+    let locals = part.clients.iter().map(|idx| data.subset(idx)).collect();
+    (locals, test)
+}
+
+fn vision_manifest_json(non_iid: bool) -> String {
+    let partition = if non_iid { r#"{ "kind": "dirichlet", "alpha": 0.5 }"# } else { r#""iid""# };
+    format!(
+        r#"{{
+            "name": "equiv_vision",
+            "artifact": "native_mlp10_orig",
+            "dataset": {{
+                "source": "mnist",
+                "partition": {partition},
+                "clients": 4,
+                "samples_per_client": 24,
+                "test_samples": 32
+            }},
+            "sample_frac": 0.5,
+            "rounds": {ROUNDS},
+            "local_epochs": 2,
+            "lr": 0.1,
+            "lr_decay": 0.992,
+            "eval_every": 1,
+            "seed": 42
+        }}"#
+    )
+}
+
+#[test]
+fn vision_iid_matches_legacy_wiring() {
+    let engine = Engine::native();
+    let (locals, test) = legacy_vision(false, 4, 24, 32);
+    let legacy =
+        Federation::new(&engine, legacy_config("native_mlp10_orig", 0.1, 2, 0.5), locals, test)
+            .unwrap();
+
+    let m = ScenarioManifest::from_json_str(&vision_manifest_json(false)).unwrap();
+    let manifest = ScenarioBuilder::new(&engine).build(&m).unwrap().federation;
+
+    assert_bit_identical(legacy, manifest, "vision iid");
+}
+
+#[test]
+fn vision_dirichlet_matches_legacy_wiring() {
+    let engine = Engine::native();
+    let (locals, test) = legacy_vision(true, 4, 24, 32);
+    let legacy =
+        Federation::new(&engine, legacy_config("native_mlp10_orig", 0.1, 2, 0.5), locals, test)
+            .unwrap();
+
+    let m = ScenarioManifest::from_json_str(&vision_manifest_json(true)).unwrap();
+    let manifest = ScenarioBuilder::new(&engine).build(&m).unwrap().federation;
+
+    assert_bit_identical(legacy, manifest, "vision dirichlet");
+}
+
+#[test]
+fn text_writer_matches_legacy_wiring() {
+    let engine = Engine::native();
+    // Pre-refactor wiring: `common::text_federation` → `generate_federation`
+    // with the LSTM table-2 schedule (lr 1.0, one local epoch).
+    let spec = synth_text::shakespeare_like();
+    let (locals, test) = synth_text::generate_federation(&spec, 3, 16, 0.6, 32, 42);
+    let legacy =
+        Federation::new(&engine, legacy_config("native_lstm_fedpara", 1.0, 1, 0.5), locals, test)
+            .unwrap();
+
+    let m = ScenarioManifest::from_json_str(&format!(
+        r#"{{
+            "name": "equiv_text",
+            "artifact": "native_lstm_fedpara",
+            "dataset": {{
+                "source": "shakespeare",
+                "partition": "writer:0.6",
+                "clients": 3,
+                "samples_per_client": 16,
+                "test_samples": 32
+            }},
+            "sample_frac": 0.5,
+            "rounds": {ROUNDS},
+            "local_epochs": 1,
+            "lr": 1.0,
+            "lr_decay": 0.992,
+            "eval_every": 1,
+            "seed": 42
+        }}"#
+    ))
+    .unwrap();
+    let manifest = ScenarioBuilder::new(&engine).build(&m).unwrap().federation;
+
+    assert_bit_identical(legacy, manifest, "text writer");
+}
+
+#[test]
+fn virtual_population_matches_legacy_wiring() {
+    let engine = Engine::native();
+    // Pre-refactor wiring: the old `run --population` / scale-experiment
+    // path — a lazy per-writer source plus a pooled test set.
+    let spec = synth_vision::mnist_like();
+    let seed = 42u64;
+    let (per, h) = (6usize, 0.5f64);
+    let source = ClientDataSource::lazy(5000, move |cid| {
+        synth_vision::client_dataset(&spec, cid, per, h, seed)
+    });
+    let test = synth_vision::generate(&synth_vision::mnist_like(), 32, seed ^ 0x7E57_0001);
+    let mut cfg = legacy_config("native_mlp10_orig", 0.05, 1, 0.002);
+    cfg.lr_decay = 1.0;
+    cfg.eval_every = 0;
+    let legacy = Federation::new_virtual(&engine, cfg, source, test).unwrap();
+
+    let m = ScenarioManifest::from_json_str(&format!(
+        r#"{{
+            "name": "equiv_virtual",
+            "artifact": "native_mlp10_orig",
+            "dataset": {{
+                "source": "mnist",
+                "partition": "writer:0.5",
+                "clients": null,
+                "population": 5000,
+                "samples_per_client": 6,
+                "test_samples": 32
+            }},
+            "sample_frac": 0.002,
+            "rounds": {ROUNDS},
+            "local_epochs": 1,
+            "lr": 0.05,
+            "lr_decay": 1.0,
+            "eval_every": 0,
+            "seed": 42
+        }}"#
+    ))
+    .unwrap();
+    let manifest = ScenarioBuilder::new(&engine).build(&m).unwrap().federation;
+
+    assert_bit_identical(legacy, manifest, "virtual population");
+}
