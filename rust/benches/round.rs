@@ -36,7 +36,7 @@ fn native_cfg(artifact: &str, num_threads: usize) -> RunConfig {
         lr: 0.05,
         lr_decay: 1.0,
         optimizer: Optimizer::FedAvg,
-        quantize_upload: false,
+        wire: Default::default(),
         sharing: Sharing::Full,
         eval_every: 0,
         seed: 4,

@@ -6,7 +6,9 @@
 //! federated round on the `native_cnn10_fedpara` artifact — plus the
 //! cross-device **scale** section (a round over 10⁴- vs 10⁶-client
 //! virtual populations at equal participants: round time and live store
-//! state must be population-independent), and writes the numbers to
+//! state must be population-independent) and the **wire** section
+//! (per-codec uplink transmit throughput and the deterministic
+//! billed-bytes ratio vs raw fp32), and writes the numbers to
 //! `BENCH_native.json` so the repo's perf trajectory is tracked run over
 //! run (CI uploads the file as an artifact on every push).
 //!
@@ -25,8 +27,8 @@
 
 use std::time::Instant;
 
-use fedpara::config::{Optimizer, RunConfig, Sharing};
-use fedpara::coordinator::{ClientDataSource, Federation};
+use fedpara::config::{CodecSpec, Optimizer, RunConfig, Sharing};
+use fedpara::coordinator::{wire, ClientDataSource, Federation};
 use fedpara::data::{partition, synth_vision};
 use fedpara::linalg::kernels;
 use fedpara::runtime::native::{self, NativeScheme, NativeSpec};
@@ -187,7 +189,7 @@ fn bench_round(smoke: bool, iters: usize) -> anyhow::Result<Json> {
         lr: 0.05,
         lr_decay: 1.0,
         optimizer: Optimizer::FedAvg,
-        quantize_upload: false,
+        wire: Default::default(),
         sharing: Sharing::Full,
         eval_every: 0,
         seed: 4,
@@ -274,7 +276,7 @@ fn bench_scale(smoke: bool, iters: usize) -> anyhow::Result<Json> {
             lr: 0.05,
             lr_decay: 1.0,
             optimizer: Optimizer::FedAvg,
-            quantize_upload: false,
+            wire: Default::default(),
             sharing: Sharing::Full,
             eval_every: 0,
             seed: 23,
@@ -325,6 +327,59 @@ fn bench_scale(smoke: bool, iters: usize) -> anyhow::Result<Json> {
         ("live_bytes_ratio", Json::Num(live_ratio)),
         ("up_bytes_per_round", Json::Num(large_up as f64)),
     ]))
+}
+
+/// Wire-codec section: per-codec uplink `transmit` wall time (GB/s over
+/// the fp32 payload it consumes) plus the **deterministic** billed-bytes
+/// ratio vs raw fp32 — identity 1.0, fp16 0.5, the rate-0.1 sketch
+/// (8 + 5k)/4n. The ratio is exact arithmetic, so the gate compares it
+/// bit-for-bit; wall time only gets the catastrophic backstop.
+fn bench_wire(smoke: bool, iters: usize) -> Json {
+    let n: usize = if smoke { 1 << 16 } else { 1 << 22 };
+    let payload_gb = (n * 4) as f64 / 1e9;
+    let mut rng = Rng::new(29);
+    let reference = randn(n, &mut rng);
+    let upload = randn(n, &mut rng);
+    let specs = [
+        CodecSpec::Identity,
+        CodecSpec::Fp16,
+        CodecSpec::SubsampleQuant { rate: 0.1, levels: 16, feedback: true },
+    ];
+    println!("\n== wire codecs: uplink transmit throughput + bytes ratio (n = {n}) ==");
+    let mut rows = Vec::new();
+    for spec in specs {
+        let codec = wire::codec_for(&spec);
+        let mut feedback = codec.uses_feedback().then(Vec::new);
+        let mut values = upload.clone();
+        let mut billed = 0u64;
+        let w = time_ms(iters, || {
+            values.copy_from_slice(&upload);
+            // Fresh rng + cleared feedback per iteration: every timed
+            // transmit does identical work.
+            if let Some(fb) = feedback.as_mut() {
+                fb.clear();
+            }
+            let mut crng = Rng::new(31);
+            billed = codec.transmit(&mut values, Some(&reference), feedback.as_mut(), &mut crng);
+            std::hint::black_box(&values);
+        });
+        let gbs = if w.mean() <= 0.0 { 0.0 } else { payload_gb / (w.mean() * 1e-3) };
+        let ratio = billed as f64 / (n * 4) as f64;
+        println!(
+            "{:<24} transmit {:>8.3} ms ({gbs:>6.2} GB/s)   bytes ratio {ratio:.4}",
+            codec.name(),
+            w.mean(),
+        );
+        rows.push(Json::obj(vec![
+            ("codec", Json::Str(spec.spec_string())),
+            ("n", Json::Num(n as f64)),
+            ("transmit_ms", Json::Num(w.mean())),
+            ("gb_per_sec", Json::Num(gbs)),
+            ("billed_bytes", Json::Num(billed as f64)),
+            ("bytes_ratio", Json::Num(ratio)),
+        ]));
+    }
+    Json::Arr(rows)
 }
 
 /// Baseline entries whose reference time sits below this are pure timer
@@ -492,6 +547,76 @@ fn gate_check_scale(base: &Json, cur: &Json, tol_pct: f64, regressions: &mut usi
     primary
 }
 
+/// Gate check of one wire-codec row. The **primary** metric is
+/// `bytes_ratio`: it is exact arithmetic over the codec's billing formula
+/// (identity 4n/4n, fp16 2n/4n, sketch (8+5k)/4n), so any drift —
+/// however small — means the billing contract changed and the gate must
+/// fail loudly rather than tolerate it. Transmit wall time gets only the
+/// catastrophic backstop. Returns `true` when the primary comparison
+/// happened.
+fn gate_check_wire(base: &Json, cur: Option<&Json>, tol_pct: f64, regressions: &mut usize) -> bool {
+    let codec = base.get("codec").as_str().unwrap_or("?");
+    let label = format!("wire: {codec}");
+    let Some(cur) = cur else {
+        println!("  {label:<44} SKIP (codec missing from current run)");
+        return false;
+    };
+    if base.get("n").as_f64() != cur.get("n").as_f64() {
+        println!("  {label:<44} SKIP (payload length differs — refresh the baseline)");
+        return false;
+    }
+    let mut ok = true;
+    let primary = match (base.get("bytes_ratio").as_f64(), cur.get("bytes_ratio").as_f64()) {
+        (Some(br), Some(cr)) => {
+            if (br - cr).abs() > 1e-12 {
+                *regressions += 1;
+                ok = false;
+                println!(
+                    "  {label:<44} REGRESSION: bytes ratio {cr:.6} != baseline {br:.6} — \
+                     the codec's billing changed"
+                );
+            }
+            true
+        }
+        _ => {
+            println!("  {label:<44} note: bytes_ratio missing — backstop check only");
+            false
+        }
+    };
+    if let (Some(bm), Some(cm)) =
+        (base.get("transmit_ms").as_f64(), cur.get("transmit_ms").as_f64())
+    {
+        if bm >= GATE_NOISE_FLOOR_MS {
+            let limit = bm * GATE_CATASTROPHIC_FACTOR;
+            if cm > limit {
+                *regressions += 1;
+                ok = false;
+                println!(
+                    "  {label:<44} REGRESSION: transmit {cm:.3} ms > \
+                     {GATE_CATASTROPHIC_FACTOR}x baseline {bm:.3} ms"
+                );
+            }
+        }
+    }
+    let _ = tol_pct; // ratio is exact and time is backstop-only.
+    if ok {
+        println!(
+            "  {label:<44} ok: ratio {:.4}, transmit {:.3} ms",
+            cur.get("bytes_ratio").as_f64().unwrap_or(f64::NAN),
+            cur.get("transmit_ms").as_f64().unwrap_or(f64::NAN)
+        );
+    }
+    primary
+}
+
+/// Find the wire row matching `codec`.
+fn wire_row<'a>(doc: &'a Json, codec: &str) -> Option<&'a Json> {
+    doc.get("wire")
+        .as_arr()?
+        .iter()
+        .find(|row| row.get("codec").as_str() == Some(codec))
+}
+
 /// Find the gemm row matching `(op, m, k, n)`.
 fn gemm_row<'a>(doc: &'a Json, op: &str, m: f64, k: f64, n: f64) -> Option<&'a Json> {
     doc.get("gemm").as_arr()?.iter().find(|row| {
@@ -574,6 +699,17 @@ fn compare_against_baseline(
     } else {
         println!("  scale: SKIP (baseline has no scale section — refresh the baseline)");
     }
+    // Wire codecs: deterministic billed-bytes ratios (+ throughput
+    // backstop) for every codec present in the baseline.
+    if let Some(rows) = base.get("wire").as_arr() {
+        for row in rows {
+            let Some(codec) = row.get("codec").as_str() else { continue };
+            compared +=
+                gate_check_wire(row, wire_row(doc, codec), tol_pct, &mut regressions) as usize;
+        }
+    } else {
+        println!("  wire: SKIP (baseline has no wire section — refresh the baseline)");
+    }
     if compared == 0 {
         // Every row skipped ⇒ the baseline no longer matches the harness
         // (renamed shapes/fields/artifact). A vacuously-green gate is
@@ -649,6 +785,7 @@ fn main() -> anyhow::Result<()> {
     let epoch = bench_train_epoch(smoke, iters)?;
     let round = bench_round(smoke, iters)?;
     let scale = bench_scale(smoke, iters)?;
+    let wire = bench_wire(smoke, iters);
 
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let doc = Json::obj(vec![
@@ -659,6 +796,7 @@ fn main() -> anyhow::Result<()> {
         ("train_epoch", epoch),
         ("round", round),
         ("scale", scale),
+        ("wire", wire),
     ]);
     std::fs::write(&out_path, doc.to_string_pretty())?;
     println!("\nwrote {out_path}");

@@ -134,6 +134,167 @@ impl Sharing {
     }
 }
 
+/// One wire codec: how a dense f32 vector is represented on the simulated
+/// network. Specs are declarative (parse/spec_string round-trip, manifest
+/// serializable); the actual encoders live in [`crate::coordinator::wire`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum CodecSpec {
+    /// Raw fp32 — 4 bytes/value, bit-exact.
+    Identity,
+    /// FedPAQ-style fp16 round-to-nearest-even (Supp. D.3) — 2 bytes/value.
+    Fp16,
+    /// Konečný et al. (2016) sketched update: transmit a random `rate`
+    /// subset of coordinates, each probabilistically quantized to one of
+    /// `levels` levels over the subset's [min, max] range. Uplink-only:
+    /// the sketch delta-codes against the global the client received, and
+    /// (when `feedback` is on — the default) an error-feedback accumulator
+    /// persisted per client in the `ClientStore` carries the untransmitted
+    /// mass so aggressive rates don't diverge. `feedback: false` is the
+    /// ablation arm kept for the divergence comparison.
+    SubsampleQuant { rate: f64, levels: u32, feedback: bool },
+}
+
+impl CodecSpec {
+    /// Parse a codec spec: `identity`, `fp16`, or
+    /// `subsample_quant:<rate>[:<levels>][:nofb]` (levels default 16;
+    /// `nofb` disables the error-feedback accumulator — the ablation arm).
+    pub fn parse(s: &str) -> Result<CodecSpec, String> {
+        match s {
+            "identity" => return Ok(CodecSpec::Identity),
+            "fp16" => return Ok(CodecSpec::Fp16),
+            "subsample_quant" => {
+                return Err(
+                    "subsample_quant needs a rate: subsample_quant:<rate>[:<levels>][:nofb]".into()
+                )
+            }
+            _ => {}
+        }
+        let Some(rest) = s.strip_prefix("subsample_quant:") else {
+            return Err(format!(
+                "unknown codec '{s}' (identity|fp16|subsample_quant:<rate>[:<levels>][:nofb])"
+            ));
+        };
+        let mut parts = rest.split(':');
+        let rate_s = parts.next().unwrap_or("");
+        let rate: f64 = rate_s
+            .parse()
+            .map_err(|_| format!("subsample_quant: rate '{rate_s}' is not a number"))?;
+        let mut levels = 16u32;
+        let mut feedback = true;
+        match parts.next() {
+            None => {}
+            Some("nofb") => feedback = false,
+            Some(l) => {
+                levels = l
+                    .parse()
+                    .map_err(|_| format!("subsample_quant: levels '{l}' is not an integer"))?;
+                match parts.next() {
+                    None => {}
+                    Some("nofb") => feedback = false,
+                    Some(x) => {
+                        return Err(format!("subsample_quant: unexpected trailing ':{x}'"))
+                    }
+                }
+            }
+        }
+        if parts.next().is_some() {
+            return Err(format!("subsample_quant: too many ':'-separated fields in '{s}'"));
+        }
+        let spec = CodecSpec::SubsampleQuant { rate, levels, feedback };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Canonical spec string; `parse(spec_string())` round-trips exactly.
+    pub fn spec_string(&self) -> String {
+        match self {
+            CodecSpec::Identity => "identity".into(),
+            CodecSpec::Fp16 => "fp16".into(),
+            CodecSpec::SubsampleQuant { rate, levels, feedback: true } => {
+                format!("subsample_quant:{rate}:{levels}")
+            }
+            CodecSpec::SubsampleQuant { rate, levels, feedback: false } => {
+                format!("subsample_quant:{rate}:{levels}:nofb")
+            }
+        }
+    }
+
+    /// Range checks shared by `parse` and the manifest validator.
+    pub fn validate(&self) -> Result<(), String> {
+        if let CodecSpec::SubsampleQuant { rate, levels, .. } = self {
+            if !rate.is_finite() || *rate <= 0.0 || *rate > 1.0 {
+                return Err(format!("subsample_quant: rate must be in (0, 1], got {rate}"));
+            }
+            if !(2..=256).contains(levels) {
+                return Err(format!(
+                    "subsample_quant: levels must be in [2, 256] (one wire byte), got {levels}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// True when the codec consults a per-client error-feedback accumulator.
+    pub fn uses_feedback(&self) -> bool {
+        matches!(self, CodecSpec::SubsampleQuant { feedback: true, .. })
+    }
+}
+
+/// The wire model of one run: what each direction of the simulated network
+/// does to the bytes crossing it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireConfig {
+    /// Client→server codec applied to every upload (model and SCAFFOLD
+    /// side-state alike).
+    pub up: CodecSpec,
+    /// Server→client codec applied to the per-round broadcast global.
+    /// `subsample_quant` is rejected here: the sketch delta-codes against
+    /// receiver state a broadcast cannot assume.
+    pub down: CodecSpec,
+    /// Content-fingerprinted downloads: the store tracks the hash of the
+    /// last global each client received, and a client that already holds
+    /// the current global is billed only the 32-byte hash check instead of
+    /// a full redelivery. Changes billing only — never training bits.
+    pub fingerprint_downloads: bool,
+}
+
+impl WireConfig {
+    /// The identity wire: raw fp32 both ways, every download redelivered.
+    pub fn identity() -> WireConfig {
+        WireConfig {
+            up: CodecSpec::Identity,
+            down: CodecSpec::Identity,
+            fingerprint_downloads: false,
+        }
+    }
+
+    /// The legacy `quantize_upload` rung: fp16 uploads, raw downloads.
+    pub fn fp16_up() -> WireConfig {
+        WireConfig { up: CodecSpec::Fp16, ..WireConfig::identity() }
+    }
+
+    /// Joint validity: per-codec ranges plus direction constraints.
+    pub fn validate(&self) -> Result<(), String> {
+        self.up.validate()?;
+        self.down.validate()?;
+        if matches!(self.down, CodecSpec::SubsampleQuant { .. }) {
+            return Err(
+                "wire.down: subsample_quant is an uplink codec (the sketch delta-codes \
+                 against per-client receiver state, which a broadcast downlink cannot \
+                 assume); use identity or fp16"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+impl Default for WireConfig {
+    fn default() -> WireConfig {
+        WireConfig::identity()
+    }
+}
+
 /// One federated run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -150,8 +311,9 @@ pub struct RunConfig {
     /// Multiplicative per-round lr decay τ (paper: 0.992).
     pub lr_decay: f64,
     pub optimizer: Optimizer,
-    /// FedPAQ-style fp16 uplink quantization (Supp. D.3).
-    pub quantize_upload: bool,
+    /// The wire model: up/down codecs + fingerprint-cached downloads.
+    /// (The old `quantize_upload: true` is exactly `WireConfig::fp16_up()`.)
+    pub wire: WireConfig,
     pub sharing: Sharing,
     /// Evaluate the global model every `eval_every` rounds (0 = only final).
     pub eval_every: usize,
@@ -173,7 +335,7 @@ impl Default for RunConfig {
             lr: 0.1,
             lr_decay: 0.992,
             optimizer: Optimizer::FedAvg,
-            quantize_upload: false,
+            wire: WireConfig::default(),
             sharing: Sharing::Full,
             eval_every: 1,
             seed: 42,
@@ -358,5 +520,67 @@ mod tests {
         assert!(c.lr > 0.0);
         assert_eq!(c.sharing, Sharing::Full);
         assert_eq!(c.num_threads, 0, "default pool auto-sizes to the host");
+        assert_eq!(c.wire, WireConfig::identity(), "default wire is the raw fp32 path");
+    }
+
+    #[test]
+    fn codec_parsing_round_trips() {
+        assert_eq!(CodecSpec::parse("identity").unwrap(), CodecSpec::Identity);
+        assert_eq!(CodecSpec::parse("fp16").unwrap(), CodecSpec::Fp16);
+        assert_eq!(
+            CodecSpec::parse("subsample_quant:0.25").unwrap(),
+            CodecSpec::SubsampleQuant { rate: 0.25, levels: 16, feedback: true }
+        );
+        assert_eq!(
+            CodecSpec::parse("subsample_quant:0.1:4").unwrap(),
+            CodecSpec::SubsampleQuant { rate: 0.1, levels: 4, feedback: true }
+        );
+        assert_eq!(
+            CodecSpec::parse("subsample_quant:0.1:nofb").unwrap(),
+            CodecSpec::SubsampleQuant { rate: 0.1, levels: 16, feedback: false }
+        );
+        assert_eq!(
+            CodecSpec::parse("subsample_quant:0.1:4:nofb").unwrap(),
+            CodecSpec::SubsampleQuant { rate: 0.1, levels: 4, feedback: false }
+        );
+        for spec in [
+            CodecSpec::Identity,
+            CodecSpec::Fp16,
+            CodecSpec::SubsampleQuant { rate: 0.5, levels: 64, feedback: true },
+            CodecSpec::SubsampleQuant { rate: 0.5, levels: 64, feedback: false },
+        ] {
+            assert_eq!(CodecSpec::parse(&spec.spec_string()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn codec_parsing_rejects_bad_specs() {
+        assert!(CodecSpec::parse("fp8").is_err());
+        assert!(CodecSpec::parse("subsample_quant").is_err());
+        assert!(CodecSpec::parse("subsample_quant:abc").is_err());
+        assert!(CodecSpec::parse("subsample_quant:0").is_err());
+        assert!(CodecSpec::parse("subsample_quant:1.5").is_err());
+        assert!(CodecSpec::parse("subsample_quant:0.5:1").is_err());
+        assert!(CodecSpec::parse("subsample_quant:0.5:300").is_err());
+        assert!(CodecSpec::parse("subsample_quant:0.5:16:bogus").is_err());
+        assert!(CodecSpec::parse("subsample_quant:0.5:16:nofb:extra").is_err());
+    }
+
+    #[test]
+    fn wire_config_direction_constraints() {
+        assert!(WireConfig::identity().validate().is_ok());
+        assert!(WireConfig::fp16_up().validate().is_ok());
+        let both_fp16 = WireConfig {
+            up: CodecSpec::Fp16,
+            down: CodecSpec::Fp16,
+            fingerprint_downloads: true,
+        };
+        assert!(both_fp16.validate().is_ok());
+        let sketch_down = WireConfig {
+            up: CodecSpec::Identity,
+            down: CodecSpec::SubsampleQuant { rate: 0.5, levels: 16, feedback: true },
+            fingerprint_downloads: false,
+        };
+        assert!(sketch_down.validate().is_err(), "sketch downlink must be rejected");
     }
 }

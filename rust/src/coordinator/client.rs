@@ -30,6 +30,13 @@ pub struct ClientRecord {
     pub control: Option<Vec<f32>>,
     /// FedDyn client gradient state λ_i (zeros until first update).
     pub lambda: Option<Vec<f32>>,
+    /// Uplink wire error-feedback accumulator (present only when the
+    /// run's up codec uses feedback and this client has transmitted).
+    pub feedback: Option<Vec<f32>>,
+    /// SHA-256 of the last wire global this client received, for
+    /// fingerprint-cached redelivery (`None` ⇒ the client has only ever
+    /// held the shared init; the store's init hash covers that case).
+    pub last_global: Option<[u8; 32]>,
     /// Rounds this client has participated in (diagnostics).
     pub participations: u32,
 }
@@ -40,7 +47,12 @@ impl ClientRecord {
     pub fn heap_bytes(&self) -> usize {
         let vec_bytes =
             |v: &Option<Vec<f32>>| v.as_ref().map(|v| v.capacity() * 4).unwrap_or(0);
-        vec_bytes(&self.params) + vec_bytes(&self.control) + vec_bytes(&self.lambda)
+        // `last_global` is inline (no heap) and covered by the store's
+        // per-entry overhead term.
+        vec_bytes(&self.params)
+            + vec_bytes(&self.control)
+            + vec_bytes(&self.lambda)
+            + vec_bytes(&self.feedback)
     }
 }
 
@@ -59,8 +71,10 @@ mod tests {
             params: Some(vec![0.0; 10]),
             control: Some(vec![0.0; 4]),
             lambda: None,
+            feedback: Some(vec![0.0; 6]),
+            last_global: Some([0u8; 32]),
             participations: 3,
         };
-        assert!(r.heap_bytes() >= (10 + 4) * 4);
+        assert!(r.heap_bytes() >= (10 + 4 + 6) * 4);
     }
 }

@@ -74,6 +74,14 @@ impl CommLedger {
         self.round_down = 0;
     }
 
+    /// Per-direction byte split for one finished round: `(up, down)`.
+    /// This is what makes a compression claim auditable per rung — a
+    /// downlink codec must move `down` and leave `up` alone, and vice
+    /// versa.
+    pub fn round_split(&self, round: usize) -> Option<(u64, u64)> {
+        self.per_round.get(round).copied()
+    }
+
     /// Total transferred bytes. Saturating like the recorders: at
     /// cross-device scale (10⁶ clients × GB-class models × 10⁵ rounds) a
     /// mis-specified scenario can legitimately approach u64::MAX, and a
@@ -98,32 +106,66 @@ impl CommLedger {
 }
 
 /// Simulated network for the Supp. D.1 wall-clock tables.
+///
+/// Real cross-device links are asymmetric (uplink is typically the scarce
+/// direction), so the two directions carry independent rates. The paper's
+/// tables use symmetric 2/10/50 Mbps links — [`Network::new`] keeps that
+/// form and is exactly `asymmetric(mbps, mbps)`.
 #[derive(Clone, Copy, Debug)]
 pub struct Network {
-    /// Link speed in megabits per second (the paper uses 2/10/50 Mbps).
-    pub mbps: f64,
+    /// Client→server link speed in megabits per second.
+    pub up_mbps: f64,
+    /// Server→client link speed in megabits per second.
+    pub down_mbps: f64,
 }
 
 impl Network {
+    /// Symmetric link (the paper's 2/10/50 Mbps settings).
     pub fn new(mbps: f64) -> Network {
-        assert!(mbps > 0.0);
-        Network { mbps }
+        Network::asymmetric(mbps, mbps)
     }
 
-    /// Seconds to transfer `bytes` one way.
+    pub fn asymmetric(up_mbps: f64, down_mbps: f64) -> Network {
+        assert!(up_mbps > 0.0 && down_mbps > 0.0);
+        Network { up_mbps, down_mbps }
+    }
+
+    /// Seconds to upload `bytes` (client→server).
+    pub fn up_secs(&self, bytes: u64) -> f64 {
+        (bytes as f64 * 8.0) / (self.up_mbps * 1e6)
+    }
+
+    /// Seconds to download `bytes` (server→client).
+    pub fn down_secs(&self, bytes: u64) -> f64 {
+        (bytes as f64 * 8.0) / (self.down_mbps * 1e6)
+    }
+
+    /// Seconds to transfer `bytes` one way at the uplink rate. Retained
+    /// for the symmetric tables; asymmetric callers should say which
+    /// direction they mean via [`Network::up_secs`]/[`Network::down_secs`].
     pub fn transfer_secs(&self, bytes: u64) -> f64 {
-        (bytes as f64 * 8.0) / (self.mbps * 1e6)
+        self.up_secs(bytes)
     }
 
     /// Per-round communication time for one client: download + upload of
-    /// `model_bytes` (the paper's `2·size/speed`).
+    /// `model_bytes` (the paper's `2·size/speed` on symmetric links).
     pub fn round_comm_secs(&self, model_bytes: u64) -> f64 {
-        self.transfer_secs(2 * model_bytes)
+        self.round_comm_secs_split(model_bytes, model_bytes)
+    }
+
+    /// Per-round communication time with direction-specific byte counts —
+    /// the form wire codecs need, since up/down payloads differ per rung.
+    pub fn round_comm_secs_split(&self, up_bytes: u64, down_bytes: u64) -> f64 {
+        self.up_secs(up_bytes) + self.down_secs(down_bytes)
     }
 }
 
 /// Quantize an upload through fp16 (FedPAQ-style, Supp. D.3): returns the
 /// dequantized values the server will see and the bytes on the wire.
+///
+/// The round loop now routes through `coordinator::wire::Fp16`, which is
+/// pinned bit-identical to this pair; these helpers remain the reference
+/// implementation that pin holds against.
 pub fn quantize_fp16(values: &[f32]) -> (Vec<f32>, u64) {
     let deq = crate::util::f16::quantize_roundtrip(values);
     (deq, (values.len() * 2) as u64)
@@ -207,6 +249,35 @@ mod tests {
         // 50 Mbps → ≈18.6 s.
         let t50 = Network::new(50.0).round_comm_secs(vgg16_bytes);
         assert!((t50 - 18.61).abs() < 1.5, "50 Mbps time {t50:.2}");
+    }
+
+    #[test]
+    fn asymmetric_network_splits_directions() {
+        // A 5 Mbps up / 20 Mbps down link: 1 MB takes 1.6 s up, 0.4 s down.
+        let net = Network::asymmetric(5.0, 20.0);
+        assert!((net.up_secs(1_000_000) - 1.6).abs() < 1e-12);
+        assert!((net.down_secs(1_000_000) - 0.4).abs() < 1e-12);
+        assert!((net.round_comm_secs(1_000_000) - 2.0).abs() < 1e-12);
+        // Direction-specific byte counts (fp16 downlink halves only down).
+        let t = net.round_comm_secs_split(1_000_000, 500_000);
+        assert!((t - (1.6 + 0.2)).abs() < 1e-12);
+        // The symmetric constructor is exactly the asymmetric one folded.
+        let sym = Network::new(10.0);
+        assert_eq!(sym.up_mbps, sym.down_mbps);
+        assert!((sym.round_comm_secs(1_000_000) - Network::asymmetric(10.0, 10.0).round_comm_secs(1_000_000)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ledger_round_split_is_per_direction() {
+        let mut l = CommLedger::new();
+        l.record_upload(11);
+        l.record_download(22);
+        l.end_round();
+        l.record_download(5);
+        l.end_round();
+        assert_eq!(l.round_split(0), Some((11, 22)));
+        assert_eq!(l.round_split(1), Some((0, 5)));
+        assert_eq!(l.round_split(2), None);
     }
 
     #[test]

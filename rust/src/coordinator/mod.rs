@@ -7,7 +7,9 @@ pub mod comm;
 pub mod sampler;
 pub mod server;
 pub mod store;
+pub mod wire;
 
 pub use comm::{CommLedger, Network};
+pub use wire::{WireCodec, WirePayload, FINGERPRINT_BYTES};
 pub use server::{eval_on, eval_on_ws, EvalScratch, Federation, RoundReport};
 pub use store::{ClientDataSource, ClientStore, ParamPolicy, RoundData};

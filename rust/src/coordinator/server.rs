@@ -33,9 +33,10 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::aggregate::{self, AdamState, FedDynState, ScaffoldState, WeightedAccumulator};
-use super::comm::{quantize_fp16_in_place, CommDelta, CommLedger};
+use super::comm::{CommDelta, CommLedger};
 use super::sampler::Sampler;
 use super::store::{ClientDataSource, ClientStore, RoundData};
+use super::wire::{self, Downlink, WireCodec, FINGERPRINT_BYTES};
 use crate::config::{Optimizer, RunConfig, Sharing};
 use crate::data::{assemble_batches_into, BatchStack, Dataset};
 use crate::parameterization::{Layout, SegmentKind};
@@ -85,6 +86,11 @@ pub struct Federation {
     pub comm: CommLedger,
     sampler: Sampler,
     root_rng: Rng,
+    /// Uplink wire codec (shared by every job; stateless — per-client
+    /// error-feedback accumulators live in the store).
+    up_codec: Arc<dyn WireCodec>,
+    /// Server→client wire state: down codec + fingerprint cache.
+    downlink: Downlink,
     /// Shared (`Arc` so eval workspaces can borrow it for intra-op
     /// row-blocked GEMMs while the fan-out is idle).
     pool: Arc<ThreadPool>,
@@ -176,7 +182,14 @@ struct LocalTrainJob {
     lr: f32,
     local_epochs: usize,
     opt: JobOpt,
-    quantize_upload: bool,
+    /// Uplink wire codec: the upload (and any side-state riding it) is
+    /// transformed and billed through this seam.
+    up: Arc<dyn WireCodec>,
+    /// Per-client error-feedback accumulator, present iff the up codec
+    /// uses feedback; carried by the job (not shared) so parallel
+    /// scheduling cannot reorder its updates, and persisted back through
+    /// the outcome.
+    feedback: Option<Vec<f32>>,
     local_only: bool,
     /// Download bytes recorded at job construction.
     comm: CommDelta,
@@ -202,6 +215,8 @@ struct LocalTrainOutcome {
     delta_control: Option<Vec<f32>>,
     /// FedDyn: updated client λ state.
     new_lambda: Option<Vec<f32>>,
+    /// Updated error-feedback accumulator (returned to the store).
+    feedback: Option<Vec<f32>>,
     /// The job's scratch, returned to the federation's pool.
     scratch: JobScratch,
 }
@@ -219,7 +234,8 @@ impl LocalTrainJob {
             lr,
             local_epochs,
             opt,
-            quantize_upload,
+            up,
+            mut feedback,
             local_only,
             mut comm,
             mut scratch,
@@ -295,26 +311,25 @@ impl LocalTrainJob {
         // ---- upload -------------------------------------------------------
         let mut upload = Vec::new();
         if !local_only {
-            let mut up = layout.gather_global(&p);
-            let bytes = if quantize_upload {
-                quantize_fp16_in_place(&mut up)
-            } else {
-                (up.len() * 4) as u64
-            };
+            let mut gathered = layout.gather_global(&p);
+            // Sketch codecs delta-code against the wire global this client
+            // just received; dense codecs ignore the reference. The codec
+            // draws from the job's own rng *after* training consumed its
+            // fixed-length stream, so wire randomness is keyed by
+            // (round, cid) and pool-size invariant like everything else.
+            let reference = download.as_ref().map(|g| g.as_slice());
+            let bytes = up.transmit(&mut gathered, reference, feedback.as_mut(), &mut rng);
             comm.record_upload(bytes);
             if let Some(mut dc) = delta_control.take() {
-                // The SCAFFOLD control variate rides the same (quantized)
-                // uplink as the model — account and transform it the same
-                // way, so fp16 uploads don't get billed at fp32.
-                if quantize_upload {
-                    let b = quantize_fp16_in_place(&mut dc);
-                    comm.record_upload(b);
-                } else {
-                    comm.record_upload((dc.len() * 4) as u64);
-                }
+                // The SCAFFOLD control variate rides the same uplink codec
+                // as the model (it is already a delta, with no feedback
+                // state of its own), so compressed uploads don't get
+                // billed at fp32.
+                let b = up.transmit(&mut dc, None, None, &mut rng);
+                comm.record_upload(b);
                 delta_control = Some(dc);
             }
-            upload = up;
+            upload = gathered;
         }
 
         Ok(LocalTrainOutcome {
@@ -327,6 +342,7 @@ impl LocalTrainJob {
             new_control,
             delta_control,
             new_lambda,
+            feedback,
             scratch,
         })
     }
@@ -369,15 +385,28 @@ impl Federation {
                 "SCAFFOLD/FedDyn require full sharing (control state spans all params)"
             ));
         }
+        cfg.wire.validate().map_err(|e| anyhow!("invalid wire config: {e}"))?;
+        let up_codec = wire::codec_for(&cfg.wire.up);
+        let downlink = Downlink::new(&cfg.wire.down, cfg.wire.fingerprint_downloads, cfg.seed);
         let mut root_rng = Rng::new(cfg.seed);
         let server_params = meta.layout.init_params(&mut root_rng);
         let local_only = matches!(cfg.sharing, Sharing::LocalOnly);
-        let store = ClientStore::new(
+        let mut store = ClientStore::new(
             source,
             Arc::clone(&layout),
             Arc::new(server_params.clone()),
             local_only,
         );
+        if cfg.wire.fingerprint_downloads {
+            // Every virtual client implicitly holds the shared init
+            // (Algorithm 2's "transmit everything at start"), so the
+            // fingerprint cache starts primed with the init global's hash:
+            // an untouched client asked to download a global that is still
+            // bit-identical to the init pays only the hash check.
+            store.set_init_global_hash(wire::global_fingerprint(
+                &layout.gather_global(&server_params),
+            ));
+        }
         let dim = meta.param_count;
         let opt = match cfg.optimizer {
             Optimizer::FedAvg | Optimizer::FedProx { .. } => ServerOpt::Plain,
@@ -414,6 +443,8 @@ impl Federation {
             comm: CommLedger::new(),
             sampler,
             root_rng,
+            up_codec,
+            downlink,
             pool,
             scratch_pool: Vec::new(),
             eval_scratch: Mutex::new(eval_ws),
@@ -448,11 +479,6 @@ impl Federation {
         self.pool.size()
     }
 
-    /// Transferred bytes for one model download at this sharing policy.
-    fn down_bytes(&self) -> u64 {
-        (self.layout.global_len() * 4) as u64
-    }
-
     /// Current learning rate (η·τ^round, Supp. C.4).
     pub fn current_lr(&self) -> f32 {
         (self.cfg.lr as f64 * self.cfg.lr_decay.powi(self.round as i32)) as f32
@@ -463,14 +489,31 @@ impl Federation {
         let lr = self.current_lr();
         let participants = self.sampler.sample(self.round);
         let local_only = matches!(self.cfg.sharing, Sharing::LocalOnly);
-        // Shared by every job's download (and by the FedAdam step below).
+        // The raw global feeds the FedAdam server step below; what clients
+        // download is the *wire* global — encoded once per round by the
+        // downlink codec (every participant receives the same broadcast)
+        // and fingerprinted for the redelivery cache. Under the identity
+        // codec the broadcast is the raw Arc itself: zero copies, zero rng
+        // draws, bit-identical to the pre-codec path.
         let server_global = Arc::new(self.layout.gather_global(&self.server_params));
+        let (wire_global, down_model_bytes, wire_hash) = if local_only {
+            (Arc::clone(&server_global), 0, None)
+        } else {
+            self.downlink.broadcast(&server_global)
+        };
         let t = self.rt.meta.train;
         let steps_per_round = (self.cfg.local_epochs * t.nbatches) as f32;
         let param_count = self.rt.meta.param_count;
-        let c_global: Option<Arc<Vec<f32>>> = match &self.opt {
-            ServerOpt::Scaffold(s) => Some(Arc::new(s.c.clone())),
-            _ => None,
+        let (c_global, c_global_bytes): (Option<Arc<Vec<f32>>>, u64) = match &self.opt {
+            ServerOpt::Scaffold(s) => {
+                // The server control variate rides the same downlink codec
+                // as the model broadcast: transformed once, billed per
+                // participant.
+                let mut c = s.c.clone();
+                let bytes = self.downlink.side_transmit(&mut c);
+                (Some(Arc::new(c)), bytes)
+            }
+            _ => (None, 0),
         };
 
         // ---- fan-out: one pure job per participant ------------------------
@@ -483,10 +526,17 @@ impl Federation {
         for &cid in &participants {
             let mut comm = CommDelta::default();
             if !local_only {
-                comm.record_download(self.down_bytes());
+                // Fingerprint-cached redelivery: a client whose last
+                // received wire global is bit-identical to this round's
+                // broadcast is billed only the hash check. Billing only —
+                // the job still carries the broadcast, so training bits
+                // are invariant under fingerprinting.
+                let cached = wire_hash.is_some()
+                    && self.store.last_global_hash(cid) == wire_hash;
+                comm.record_download(if cached { FINGERPRINT_BYTES } else { down_model_bytes });
                 if matches!(self.cfg.optimizer, Optimizer::Scaffold) {
                     // Server control variate rides along with the model.
-                    comm.record_download((param_count * 4) as u64);
+                    comm.record_download(c_global_bytes);
                 }
             }
             let opt = match &self.cfg.optimizer {
@@ -508,14 +558,18 @@ impl Federation {
                 layout: Arc::clone(&self.layout),
                 data: self.store.round_data(cid),
                 params: self.store.round_params(cid),
-                download: (!local_only).then(|| Arc::clone(&server_global)),
+                download: (!local_only).then(|| Arc::clone(&wire_global)),
                 // 32-bit split keeps (round, cid) tags collision-free well
                 // past the million-client scale the roadmap targets.
                 rng: self.root_rng.child((self.round as u64) << 32 | cid as u64),
                 lr,
                 local_epochs: self.cfg.local_epochs,
                 opt,
-                quantize_upload: self.cfg.quantize_upload,
+                up: Arc::clone(&self.up_codec),
+                feedback: self
+                    .up_codec
+                    .uses_feedback()
+                    .then(|| self.store.feedback(cid)),
                 local_only,
                 comm,
                 // Reuse last round's scratch where available; the pool
@@ -574,7 +628,14 @@ impl Federation {
                     // how much of `params` survives); the job's dataset
                     // Arc dropped with the job — for virtual populations
                     // nothing data-shaped outlives the fold.
-                    store.commit(out.cid, out.params, out.new_control, out.new_lambda);
+                    store.commit(
+                        out.cid,
+                        out.params,
+                        out.new_control,
+                        out.new_lambda,
+                        out.feedback,
+                        wire_hash,
+                    );
                     if local_only {
                         return;
                     }
@@ -813,7 +874,7 @@ mod tests {
             lr: 0.05,
             lr_decay: 1.0,
             optimizer: Optimizer::FedAvg,
-            quantize_upload: false,
+            wire: Default::default(),
             sharing: Sharing::GlobalSegments,
             eval_every: 0,
             seed: 9,

@@ -154,6 +154,11 @@ pub struct ClientStore {
     /// The common init every client starts from (Algorithm 2's "transmit
     /// everything at start") — shared, not cloned per client.
     init_params: Arc<Vec<f32>>,
+    /// Fingerprint of the init *global* broadcast (set only when the run
+    /// fingerprints downloads): the hash every untouched client's holdings
+    /// implicitly carry, since untouched clients are exactly the shared
+    /// init.
+    init_global_hash: Option<[u8; 32]>,
     shards: Vec<HashMap<usize, ClientRecord>>,
     touched: usize,
 }
@@ -180,9 +185,18 @@ impl ClientStore {
             layout,
             policy,
             init_params,
+            init_global_hash: None,
             shards: (0..STORE_SHARDS).map(|_| HashMap::new()).collect(),
             touched: 0,
         }
+    }
+
+    /// Prime the fingerprint cache with the init broadcast's hash — the
+    /// wire global every client implicitly holds before its first
+    /// download. Set once at federation construction when the run
+    /// fingerprints downloads.
+    pub fn set_init_global_hash(&mut self, hash: [u8; 32]) {
+        self.init_global_hash = Some(hash);
     }
 
     pub fn population(&self) -> usize {
@@ -287,15 +301,40 @@ impl ClientStore {
         self.record(cid).map(|r| r.participations).unwrap_or(0)
     }
 
+    /// Uplink error-feedback accumulator for client `cid` (empty until the
+    /// client first transmits through a feedback codec — the codec treats
+    /// an empty accumulator as zeros). Does not instantiate a record.
+    pub fn feedback(&self, cid: usize) -> Vec<f32> {
+        self.record(cid)
+            .and_then(|r| r.feedback.as_ref())
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Hash of the last wire global client `cid` received — falling back
+    /// to the init broadcast's hash for clients never explicitly
+    /// delivered to (they hold the shared init by construction). `None`
+    /// when the run doesn't fingerprint downloads.
+    pub fn last_global_hash(&self, cid: usize) -> Option<[u8; 32]> {
+        self.record(cid)
+            .and_then(|r| r.last_global)
+            .or(self.init_global_hash)
+    }
+
     /// Commit one participant's post-round state. `params` is the
     /// client's full post-training vector; the policy decides what (if
-    /// anything) of it persists.
+    /// anything) of it persists. `received` is the fingerprint of the
+    /// wire global this round delivered (recorded whether or not the
+    /// delivery was billed — a cache hit means the client already held
+    /// those exact bits).
     pub fn commit(
         &mut self,
         cid: usize,
         params: Vec<f32>,
         control: Option<Vec<f32>>,
         lambda: Option<Vec<f32>>,
+        feedback: Option<Vec<f32>>,
+        received: Option<[u8; 32]>,
     ) {
         let policy = self.policy;
         let layout = Arc::clone(&self.layout);
@@ -311,6 +350,12 @@ impl ClientStore {
         }
         if let Some(l) = lambda {
             rec.lambda = Some(l);
+        }
+        if let Some(f) = feedback {
+            rec.feedback = Some(f);
+        }
+        if let Some(h) = received {
+            rec.last_global = Some(h);
         }
     }
 
@@ -388,7 +433,7 @@ mod tests {
         let mut store = lazy_store(100, split_layout(), false);
         assert_eq!(store.policy(), ParamPolicy::LocalSegments);
         let trained: Vec<f32> = (0..7).map(|i| 100.0 + i as f32).collect();
-        store.commit(3, trained, None, None);
+        store.commit(3, trained, None, None, None, None);
         assert_eq!(store.touched(), 1);
         assert_eq!(store.participations(3), 1);
         // Round params = init overlaid with the persisted local segment.
@@ -414,18 +459,21 @@ mod tests {
         );
         assert_eq!(store.policy(), ParamPolicy::Dropped);
         let before = store.live_state_bytes();
-        store.commit(9, vec![9.0; 7], None, None);
+        store.commit(9, vec![9.0; 7], None, None, None, None);
         assert_eq!(store.participations(9), 1);
         assert_eq!(store.round_params(9), vec![1.5; 7], "params dropped under full sharing");
         // A dropped-policy commit adds only the map entry, no vectors.
-        assert!(store.live_state_bytes() - before < 256);
+        // (The bound is 2× the entry struct + key; the record carries a
+        // handful of inline Options — wire feedback, last-global hash —
+        // but still no heap.)
+        assert!(store.live_state_bytes() - before < 512);
     }
 
     #[test]
     fn local_only_persists_full_vector() {
         let mut store = lazy_store(100, split_layout(), true);
         assert_eq!(store.policy(), ParamPolicy::FullVector);
-        store.commit(2, vec![7.0; 7], None, None);
+        store.commit(2, vec![7.0; 7], None, None, None, None);
         assert_eq!(store.round_params(2), vec![7.0; 7]);
     }
 
@@ -436,11 +484,40 @@ mod tests {
         assert_eq!(small.live_state_bytes(), huge.live_state_bytes());
         let mut huge = huge;
         for cid in 0..10 {
-            huge.commit(cid * 31, vec![0.0; 7], Some(vec![0.0; 7]), None);
+            huge.commit(cid * 31, vec![0.0; 7], Some(vec![0.0; 7]), None, None, None);
         }
         assert_eq!(huge.touched(), 10);
         // 10 records of a 7-dim model: comfortably under a kilobyte each.
         assert!(huge.live_state_bytes() < small.live_state_bytes() + 10 * 1024);
+    }
+
+    #[test]
+    fn feedback_defaults_empty_and_persists_on_commit() {
+        let mut store = lazy_store(100, split_layout(), false);
+        assert!(store.feedback(42).is_empty(), "no accumulator before first transmit");
+        assert_eq!(store.touched(), 0, "feedback reads never instantiate state");
+        store.commit(42, vec![0.0; 7], None, None, Some(vec![0.5, -0.5, 0.25]), None);
+        assert_eq!(store.feedback(42), vec![0.5, -0.5, 0.25]);
+        // A later commit without feedback (e.g. after switching codecs in
+        // a resumed run) leaves the accumulator as-is.
+        store.commit(42, vec![0.0; 7], None, None, None, None);
+        assert_eq!(store.feedback(42), vec![0.5, -0.5, 0.25]);
+    }
+
+    #[test]
+    fn last_global_hash_falls_back_to_init_broadcast() {
+        let mut store = lazy_store(100, split_layout(), false);
+        // No fingerprinting configured: nothing to compare against.
+        assert_eq!(store.last_global_hash(7), None);
+        let init_h = [1u8; 32];
+        store.set_init_global_hash(init_h);
+        // Untouched clients implicitly hold the init broadcast.
+        assert_eq!(store.last_global_hash(7), Some(init_h));
+        let round_h = [2u8; 32];
+        store.commit(7, vec![0.0; 7], None, None, None, Some(round_h));
+        assert_eq!(store.last_global_hash(7), Some(round_h));
+        // Other clients still fall back to the init hash.
+        assert_eq!(store.last_global_hash(8), Some(init_h));
     }
 
     #[test]

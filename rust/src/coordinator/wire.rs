@@ -1,0 +1,648 @@
+//! Wire codecs: every byte crossing the simulated network flows through
+//! one [`WireCodec`] seam.
+//!
+//! The repo's original wire model was a single hardcoded rung — fp16
+//! quantization on uploads (`quantize_fp16_in_place` calls sprinkled
+//! through the round loop). This module turns the wire into a composable
+//! layer with three rungs from the paper's communication-efficiency
+//! lineage:
+//!
+//! * [`Identity`] — raw fp32, 4 bytes/value, bit-exact (the default; every
+//!   pre-codec seeded run reproduces exactly under it);
+//! * [`Fp16`] — FedPAQ-style round-to-nearest-even half precision
+//!   (Supp. D.3), 2 bytes/value, bit-identical to the old
+//!   `quantize_upload` path;
+//! * [`SubsampleQuant`] — Konečný et al. (2016) sketched updates: a random
+//!   `rate`-subset of coordinates, each probabilistically quantized to one
+//!   of `levels` levels over the subset's range, delta-coded against the
+//!   global the client received. An **error-feedback** accumulator
+//!   (persisted per client in the sparse `ClientStore`) carries the
+//!   untransmitted mass into the next round so aggressive rates don't
+//!   diverge (Seide et al. 2014; Karimireddy et al. 2019).
+//!
+//! Two codec *slots* exist per run (`WireConfig { up, down }`): uploads are
+//! encoded inside each `LocalTrainJob` with the job's own `(round, cid)`
+//! rng stream (bit-deterministic and pool-size invariant), while the
+//! downlink codec is applied **once per round** to the broadcast global —
+//! every participant receives the same wire vector, billed per client.
+//!
+//! On top of the seam sits content-fingerprinted redelivery ([`Downlink`] +
+//! [`global_fingerprint`]): the store remembers the SHA-256 of the last
+//! wire global each client received, and a client that provably already
+//! holds the current one (e.g. round 0, where every virtual client holds
+//! the shared init by construction) is billed only the 32-byte hash check.
+//! Fingerprinting changes billing only — never training bits.
+
+use std::sync::Arc;
+
+use crate::config::CodecSpec;
+use crate::util::f16;
+use crate::util::hash::Sha256;
+use crate::util::rng::Rng;
+
+/// Bytes billed for a fingerprint hit: the hash check itself.
+pub const FINGERPRINT_BYTES: u64 = 32;
+
+/// What actually travels: the bit-level wire representation of one dense
+/// f32 vector under some codec, plus enough header to reconstruct it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WirePayload {
+    /// Raw fp32 values (identity).
+    Dense(Vec<f32>),
+    /// fp16 bit patterns, one `u16` per value.
+    F16(Vec<u16>),
+    /// Sparse sketch: `indices[i]` carries quantization level `levels[i]`
+    /// over the `[lo, hi]` range; all other coordinates are zero. `len` is
+    /// the dense length the payload decodes back to.
+    Sketch { len: usize, lo: f32, hi: f32, indices: Vec<u32>, levels: Vec<u8> },
+}
+
+/// One wire codec: how a dense f32 vector is represented on the simulated
+/// network, what that representation is billed at, and what the receiver
+/// reconstructs.
+///
+/// The contract ties three views of the same transformation together:
+///
+/// * `encode`/`decode` — the explicit payload form (what the property
+///   tests and the `bench_report` wire section exercise);
+/// * `transmit` — the in-place hot path the round loop runs: overwrite
+///   `values` with exactly `decode(encode(...))` and return billed bytes,
+///   without materializing a payload where avoidable;
+/// * `billed_bytes` — the wire cost of a dense vector of a given length
+///   (equals the bytes `encode`/`transmit` return).
+///
+/// `transmit` takes the receiver's `reference` (the wire global the client
+/// downloaded — the delta base for sketch codecs; ignored by dense codecs)
+/// and an optional per-client error-`feedback` accumulator. Codecs that
+/// report `uses_feedback()` add the accumulator into the delta before
+/// encoding and store the residual back; the accumulator itself lives in
+/// the `ClientStore` and travels with the job, so parallel scheduling
+/// cannot reorder its updates.
+pub trait WireCodec: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Wire bytes for a dense vector of `len` values.
+    fn billed_bytes(&self, len: usize) -> u64;
+
+    /// Does `transmit` consult the per-client error-feedback accumulator?
+    fn uses_feedback(&self) -> bool {
+        false
+    }
+
+    /// True only for the raw-fp32 codec (lets broadcast paths skip copies).
+    fn is_identity(&self) -> bool {
+        false
+    }
+
+    /// Serialize `values` into a wire payload; returns `(payload, bytes)`.
+    /// For sketch codecs `values` is the delta being sketched.
+    fn encode(&self, values: &[f32], rng: &mut Rng) -> (WirePayload, u64);
+
+    /// Reconstruct the receiver-side dense vector from a payload.
+    fn decode(&self, payload: &WirePayload) -> Vec<f32>;
+
+    /// In-place wire round-trip: overwrite `values` with what the receiver
+    /// will see and return billed bytes.
+    fn transmit(
+        &self,
+        values: &mut [f32],
+        reference: Option<&[f32]>,
+        feedback: Option<&mut Vec<f32>>,
+        rng: &mut Rng,
+    ) -> u64;
+}
+
+/// Raw fp32: the wire is a window, 4 bytes/value.
+pub struct Identity;
+
+impl WireCodec for Identity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn billed_bytes(&self, len: usize) -> u64 {
+        (len * 4) as u64
+    }
+
+    fn is_identity(&self) -> bool {
+        true
+    }
+
+    fn encode(&self, values: &[f32], _rng: &mut Rng) -> (WirePayload, u64) {
+        (WirePayload::Dense(values.to_vec()), self.billed_bytes(values.len()))
+    }
+
+    fn decode(&self, payload: &WirePayload) -> Vec<f32> {
+        match payload {
+            WirePayload::Dense(v) => v.clone(),
+            other => panic!("identity cannot decode {other:?}"),
+        }
+    }
+
+    fn transmit(
+        &self,
+        values: &mut [f32],
+        _reference: Option<&[f32]>,
+        _feedback: Option<&mut Vec<f32>>,
+        _rng: &mut Rng,
+    ) -> u64 {
+        self.billed_bytes(values.len())
+    }
+}
+
+/// IEEE fp16 with round-to-nearest-even, 2 bytes/value — the FedPAQ rung.
+/// `transmit` is exactly the old `comm::quantize_fp16_in_place` path.
+pub struct Fp16;
+
+impl WireCodec for Fp16 {
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+
+    fn billed_bytes(&self, len: usize) -> u64 {
+        (len * 2) as u64
+    }
+
+    fn encode(&self, values: &[f32], _rng: &mut Rng) -> (WirePayload, u64) {
+        let mut bits = Vec::new();
+        f16::quantize(values, &mut bits);
+        (WirePayload::F16(bits), self.billed_bytes(values.len()))
+    }
+
+    fn decode(&self, payload: &WirePayload) -> Vec<f32> {
+        match payload {
+            WirePayload::F16(bits) => {
+                let mut out = Vec::new();
+                f16::dequantize(bits, &mut out);
+                out
+            }
+            other => panic!("fp16 cannot decode {other:?}"),
+        }
+    }
+
+    fn transmit(
+        &self,
+        values: &mut [f32],
+        _reference: Option<&[f32]>,
+        _feedback: Option<&mut Vec<f32>>,
+        _rng: &mut Rng,
+    ) -> u64 {
+        f16::quantize_roundtrip_in_place(values);
+        self.billed_bytes(values.len())
+    }
+}
+
+/// Konečný-style sketched update: `rate`-subsampling + probabilistic
+/// `levels`-level quantization over the sampled range, with optional
+/// error feedback.
+///
+/// Wire format (and the billing formula): an 8-byte `[lo, hi]` header plus
+/// 5 bytes per sampled coordinate (4-byte index + 1-byte level; `levels`
+/// ≤ 256 is enforced at parse/validate time so a level always fits one
+/// byte).
+pub struct SubsampleQuant {
+    pub rate: f64,
+    pub levels: u32,
+    pub feedback: bool,
+}
+
+impl SubsampleQuant {
+    /// Sampled coordinate count for a dense length `n`.
+    fn k(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        ((n as f64 * self.rate).ceil() as usize).clamp(1, n)
+    }
+}
+
+impl WireCodec for SubsampleQuant {
+    fn name(&self) -> &'static str {
+        "subsample_quant"
+    }
+
+    fn billed_bytes(&self, len: usize) -> u64 {
+        let k = self.k(len) as u64;
+        if k == 0 {
+            return 0;
+        }
+        8 + k * 5
+    }
+
+    fn uses_feedback(&self) -> bool {
+        self.feedback
+    }
+
+    fn encode(&self, values: &[f32], rng: &mut Rng) -> (WirePayload, u64) {
+        let n = values.len();
+        let k = self.k(n);
+        let idx = rng.sample_indices(n, k);
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &j in &idx {
+            lo = lo.min(values[j]);
+            hi = hi.max(values[j]);
+        }
+        if k == 0 {
+            (lo, hi) = (0.0, 0.0);
+        }
+        let unit = (hi - lo) as f64 / (self.levels - 1).max(1) as f64;
+        let top = (self.levels - 1) as f64;
+        let mut lvls = Vec::with_capacity(k);
+        for &j in &idx {
+            // One draw per sampled coordinate regardless of the rounding
+            // outcome: the rng stream length is fixed by (n, k) alone.
+            let draw = rng.f64();
+            let level = if unit <= 0.0 {
+                0u32
+            } else {
+                // Probabilistic (unbiased) rounding: value v between levels
+                // b and b+1 rounds up with probability equal to its
+                // fractional position — E[decoded] = v.
+                let pos = ((values[j] - lo) as f64 / unit).clamp(0.0, top);
+                let base = pos.floor();
+                let up = (draw < pos - base) as u32;
+                (base as u32 + up).min(self.levels - 1)
+            };
+            lvls.push(level as u8);
+        }
+        let indices = idx.into_iter().map(|j| j as u32).collect();
+        (
+            WirePayload::Sketch { len: n, lo, hi, indices, levels: lvls },
+            self.billed_bytes(n),
+        )
+    }
+
+    fn decode(&self, payload: &WirePayload) -> Vec<f32> {
+        let WirePayload::Sketch { len, lo, hi, indices, levels } = payload else {
+            panic!("subsample_quant cannot decode {payload:?}");
+        };
+        let unit = (hi - lo) as f64 / (self.levels - 1).max(1) as f64;
+        let mut out = vec![0f32; *len];
+        for (&j, &l) in indices.iter().zip(levels.iter()) {
+            out[j as usize] = (*lo as f64 + l as f64 * unit) as f32;
+        }
+        out
+    }
+
+    fn transmit(
+        &self,
+        values: &mut [f32],
+        reference: Option<&[f32]>,
+        feedback: Option<&mut Vec<f32>>,
+        rng: &mut Rng,
+    ) -> u64 {
+        let n = values.len();
+        if let Some(r) = reference {
+            assert_eq!(r.len(), n, "wire reference length mismatch");
+        }
+        // The sketch input: d = (values − reference) + feedback.
+        let fb = if self.feedback { feedback } else { None };
+        let mut d = vec![0f32; n];
+        for j in 0..n {
+            d[j] = values[j] - reference.map_or(0.0, |r| r[j]);
+        }
+        if let Some(fb) = fb.as_deref() {
+            if !fb.is_empty() {
+                assert_eq!(fb.len(), n, "error-feedback accumulator length mismatch");
+                for j in 0..n {
+                    d[j] += fb[j];
+                }
+            }
+        }
+        let (payload, bytes) = self.encode(&d, rng);
+        let t = self.decode(&payload);
+        for j in 0..n {
+            values[j] = reference.map_or(0.0, |r| r[j]) + t[j];
+        }
+        if let Some(fb) = fb {
+            // The residual — everything the wire didn't carry — rides into
+            // the next round's delta.
+            fb.clear();
+            fb.extend(d.iter().zip(t.iter()).map(|(dj, tj)| dj - tj));
+        }
+        bytes
+    }
+}
+
+/// Instantiate the codec a [`CodecSpec`] describes.
+pub fn codec_for(spec: &CodecSpec) -> Arc<dyn WireCodec> {
+    match spec {
+        CodecSpec::Identity => Arc::new(Identity),
+        CodecSpec::Fp16 => Arc::new(Fp16),
+        CodecSpec::SubsampleQuant { rate, levels, feedback } => {
+            Arc::new(SubsampleQuant { rate: *rate, levels: *levels, feedback: *feedback })
+        }
+    }
+}
+
+/// Content fingerprint of a wire global: SHA-256 over the exact f32 bit
+/// patterns (little-endian), so two globals match iff they are
+/// bit-identical — the determinism the redelivery cache rests on.
+pub fn global_fingerprint(values: &[f32]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    let mut buf = [0u8; 4 * 1024];
+    for chunk in values.chunks(1024) {
+        let mut used = 0;
+        for &v in chunk {
+            buf[used..used + 4].copy_from_slice(&v.to_bits().to_le_bytes());
+            used += 4;
+        }
+        h.update(&buf[..used]);
+    }
+    h.finalize()
+}
+
+/// Server-side downlink state: applies the down codec **once per round**
+/// to the broadcast global (every participant receives the same wire
+/// vector) and fingerprints the result for redelivery caching.
+pub struct Downlink {
+    codec: Arc<dyn WireCodec>,
+    fingerprint: bool,
+    rng: Rng,
+}
+
+/// Seed tag for the downlink's codec rng: one stream per federation,
+/// separate from the root/sampler/client streams.
+const DOWNLINK_RNG_TAG: u64 = 0xD01C_0DEC;
+
+impl Downlink {
+    pub fn new(spec: &CodecSpec, fingerprint: bool, seed: u64) -> Downlink {
+        Downlink { codec: codec_for(spec), fingerprint, rng: Rng::new(seed ^ DOWNLINK_RNG_TAG) }
+    }
+
+    /// Encode this round's broadcast: returns the wire global (shared by
+    /// all participants), the per-client billed bytes for it, and — when
+    /// fingerprinting is on — its content hash. Identity broadcasts are
+    /// zero-copy and consume no rng, preserving the pre-codec bit path.
+    pub fn broadcast(&mut self, raw: &Arc<Vec<f32>>) -> (Arc<Vec<f32>>, u64, Option<[u8; 32]>) {
+        let (wire, bytes) = if self.codec.is_identity() {
+            (Arc::clone(raw), self.codec.billed_bytes(raw.len()))
+        } else {
+            let mut v = raw.as_ref().clone();
+            let bytes = self.codec.transmit(&mut v, None, None, &mut self.rng);
+            (Arc::new(v), bytes)
+        };
+        let hash = self.fingerprint.then(|| global_fingerprint(&wire));
+        (wire, bytes, hash)
+    }
+
+    /// Billed bytes for a dense side-channel broadcast of `len` values
+    /// (SCAFFOLD's server control variate rides the same downlink codec).
+    pub fn side_bytes(&self, len: usize) -> u64 {
+        self.codec.billed_bytes(len)
+    }
+
+    /// Apply the downlink codec to a dense side-channel vector (no delta
+    /// reference, no feedback) and return billed bytes.
+    pub fn side_transmit(&mut self, values: &mut [f32]) -> u64 {
+        if self.codec.is_identity() {
+            return self.codec.billed_bytes(values.len());
+        }
+        self.codec.transmit(values, None, None, &mut self.rng)
+    }
+
+    pub fn fingerprinting(&self) -> bool {
+        self.fingerprint
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WireConfig;
+
+    fn sketch(rate: f64, levels: u32, feedback: bool) -> SubsampleQuant {
+        SubsampleQuant { rate, levels, feedback }
+    }
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 / n as f32) * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn identity_transmit_is_noop_and_bills_fp32() {
+        let mut v = ramp(37);
+        let orig = v.clone();
+        let mut rng = Rng::new(1);
+        let bytes = Identity.transmit(&mut v, None, None, &mut rng);
+        assert_eq!(v, orig, "identity must not alter values");
+        assert_eq!(bytes, 37 * 4);
+        // And the rng is untouched (bit path preserved).
+        assert_eq!(rng.next_u64(), Rng::new(1).next_u64());
+    }
+
+    #[test]
+    fn fp16_transmit_matches_legacy_quantizer() {
+        let vals: Vec<f32> = vec![0.1, -2.5, 65504.0, 1e-8, -0.0, 3.14159, 1e5];
+        let mut wire = vals.clone();
+        let mut rng = Rng::new(2);
+        let bytes = Fp16.transmit(&mut wire, None, None, &mut rng);
+        let (legacy, legacy_bytes) = super::super::comm::quantize_fp16(&vals);
+        assert_eq!(bytes, legacy_bytes);
+        for (a, b) in wire.iter().zip(legacy.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "fp16 codec diverged from legacy path");
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_dense_codecs() {
+        let vals = ramp(101); // Odd length on purpose.
+        let mut rng = Rng::new(3);
+        let (p, bytes) = Identity.encode(&vals, &mut rng);
+        assert_eq!(bytes, 101 * 4);
+        assert_eq!(Identity.decode(&p), vals);
+
+        let (p, bytes) = Fp16.encode(&vals, &mut rng);
+        assert_eq!(bytes, 101 * 2);
+        let dec = Fp16.decode(&p);
+        let direct = f16::quantize_roundtrip(&vals);
+        assert_eq!(dec.len(), vals.len());
+        for (a, b) in dec.iter().zip(direct.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn sketch_roundtrip_hits_sampled_coords_within_one_level() {
+        let c = sketch(0.25, 16, true);
+        let vals = ramp(200);
+        let mut rng = Rng::new(4);
+        let (p, bytes) = c.encode(&vals, &mut rng);
+        assert_eq!(bytes, c.billed_bytes(200));
+        assert_eq!(bytes, 8 + 50 * 5, "k = ceil(0.25·200) = 50 at 5 B/coord + 8 B header");
+        let dec = c.decode(&p);
+        assert_eq!(dec.len(), 200);
+        let WirePayload::Sketch { lo, hi, indices, .. } = &p else { unreachable!() };
+        assert_eq!(indices.len(), 50);
+        let unit = (hi - lo) / 15.0;
+        let sampled: std::collections::HashSet<u32> = indices.iter().copied().collect();
+        for j in 0..200u32 {
+            if sampled.contains(&j) {
+                // Probabilistic rounding lands on an adjacent level.
+                assert!(
+                    (dec[j as usize] - vals[j as usize]).abs() <= unit + 1e-6,
+                    "sampled coord {j} off by more than one level"
+                );
+            } else {
+                assert_eq!(dec[j as usize], 0.0, "unsampled coord {j} must decode to zero");
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_transmit_composes_encode_decode() {
+        let c = sketch(0.5, 8, true);
+        let reference = ramp(64);
+        let upload: Vec<f32> = ramp(64).iter().map(|x| x * 0.9 + 0.05).collect();
+        let mut fb = vec![0f32; 64];
+
+        // By hand: d = upload − reference (fb is zero), then encode/decode.
+        let d: Vec<f32> = upload.iter().zip(reference.iter()).map(|(u, r)| u - r).collect();
+        let (p, want_bytes) = c.encode(&d, &mut Rng::new(9));
+        let t = c.decode(&p);
+        let want: Vec<f32> = reference.iter().zip(t.iter()).map(|(r, t)| r + t).collect();
+
+        let mut got = upload.clone();
+        let bytes = c.transmit(&mut got, Some(&reference), Some(&mut fb), &mut Rng::new(9));
+        assert_eq!(bytes, want_bytes);
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "transmit != ref + decode(encode(d))");
+        }
+        // Residual bookkeeping: fb = d − t.
+        for ((fbj, dj), tj) in fb.iter().zip(d.iter()).zip(t.iter()) {
+            assert_eq!(fbj.to_bits(), (dj - tj).to_bits());
+        }
+    }
+
+    /// The error-feedback property the convergence story rests on: when
+    /// the same vector is transmitted T times with a persistent
+    /// accumulator, the mean received update approaches the true vector
+    /// (cumulative error = fb_T, which stays bounded), while without
+    /// feedback the mean is biased by the sampling rate — the sketch
+    /// only ever delivers `rate` of the mass.
+    #[test]
+    fn error_feedback_preserves_transmitted_mass() {
+        let n = 32;
+        let target = ramp(n);
+        let rounds = 200;
+
+        let mean_received = |feedback: bool| -> Vec<f64> {
+            let c = sketch(0.5, 16, feedback);
+            let mut fb = vec![0f32; n];
+            let mut rng = Rng::new(12);
+            let mut sum = vec![0f64; n];
+            for _ in 0..rounds {
+                let mut v = target.clone();
+                c.transmit(&mut v, None, Some(&mut fb), &mut rng);
+                for j in 0..n {
+                    sum[j] += v[j] as f64;
+                }
+            }
+            sum.iter().map(|s| s / rounds as f64).collect()
+        };
+
+        let with_fb = mean_received(true);
+        let without_fb = mean_received(false);
+        let max_err = |m: &[f64]| {
+            m.iter()
+                .zip(target.iter())
+                .map(|(a, b)| (a - *b as f64).abs())
+                .fold(0.0f64, f64::max)
+        };
+        let err_fb = max_err(&with_fb);
+        let err_nofb = max_err(&without_fb);
+        assert!(err_fb < 0.1, "with feedback the mean update must approach the target: {err_fb}");
+        assert!(
+            err_nofb > 0.25,
+            "without feedback the rate-0.5 sketch should be visibly biased: {err_nofb}"
+        );
+    }
+
+    #[test]
+    fn sketch_feedback_off_leaves_accumulator_untouched() {
+        let c = sketch(0.5, 16, false);
+        assert!(!c.uses_feedback());
+        let mut v = ramp(16);
+        let mut fb = vec![7.0f32; 16];
+        c.transmit(&mut v, None, Some(&mut fb), &mut Rng::new(5));
+        assert_eq!(fb, vec![7.0f32; 16], "nofb codec must ignore the accumulator");
+    }
+
+    #[test]
+    fn billed_bytes_formulas() {
+        assert_eq!(Identity.billed_bytes(0), 0);
+        assert_eq!(Identity.billed_bytes(7), 28);
+        assert_eq!(Fp16.billed_bytes(7), 14, "odd lengths bill exactly 2·len");
+        let c = sketch(0.1, 16, true);
+        assert_eq!(c.billed_bytes(0), 0);
+        // k = ceil(0.1·7) = 1.
+        assert_eq!(c.billed_bytes(7), 8 + 5);
+        // rate 1.0 samples everything: 8 + 5n > 4n — the codec is honest
+        // about being a poor choice at full rate.
+        assert_eq!(sketch(1.0, 16, true).billed_bytes(100), 8 + 500);
+    }
+
+    #[test]
+    fn codec_for_matches_spec() {
+        assert!(codec_for(&CodecSpec::Identity).is_identity());
+        assert_eq!(codec_for(&CodecSpec::Fp16).name(), "fp16");
+        let c = codec_for(&CodecSpec::SubsampleQuant { rate: 0.2, levels: 4, feedback: true });
+        assert_eq!(c.name(), "subsample_quant");
+        assert!(c.uses_feedback());
+        assert!(!codec_for(&CodecSpec::SubsampleQuant {
+            rate: 0.2,
+            levels: 4,
+            feedback: false
+        })
+        .uses_feedback());
+    }
+
+    #[test]
+    fn fingerprint_is_content_addressed() {
+        let a = ramp(100);
+        let mut b = ramp(100);
+        assert_eq!(global_fingerprint(&a), global_fingerprint(&b));
+        b[99] = f32::from_bits(b[99].to_bits() ^ 1); // One bit flip.
+        assert_ne!(global_fingerprint(&a), global_fingerprint(&b));
+        // Chunked hashing matches a one-shot hash (chunk boundary at 1024).
+        let long = ramp(3000);
+        let mut h = Sha256::new();
+        for v in &long {
+            h.update(&v.to_bits().to_le_bytes());
+        }
+        assert_eq!(global_fingerprint(&long), h.finalize());
+    }
+
+    #[test]
+    fn identity_downlink_is_zero_copy() {
+        let raw = Arc::new(ramp(50));
+        let mut dl = Downlink::new(&CodecSpec::Identity, false, 42);
+        let (wire, bytes, hash) = dl.broadcast(&raw);
+        assert!(Arc::ptr_eq(&raw, &wire), "identity broadcast must not copy");
+        assert_eq!(bytes, 200);
+        assert!(hash.is_none());
+    }
+
+    #[test]
+    fn fp16_downlink_compresses_the_broadcast() {
+        let raw = Arc::new(ramp(50));
+        let mut dl = Downlink::new(&CodecSpec::Fp16, true, 42);
+        let (wire, bytes, hash) = dl.broadcast(&raw);
+        assert_eq!(bytes, 100, "fp16 downlink bills 2 B/value");
+        let want = f16::quantize_roundtrip(&raw);
+        for (a, b) in wire.iter().zip(want.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(hash, Some(global_fingerprint(&wire)));
+    }
+
+    #[test]
+    fn wire_config_default_is_bitpath() {
+        // The whole refactor rests on this: a default WireConfig is the
+        // identity wire, so every pre-codec RunConfig behaves unchanged.
+        let w = WireConfig::default();
+        assert_eq!(w.up, CodecSpec::Identity);
+        assert_eq!(w.down, CodecSpec::Identity);
+        assert!(!w.fingerprint_downloads);
+    }
+}

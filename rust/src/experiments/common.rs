@@ -184,7 +184,7 @@ fn preset_manifest(
         dataset,
         optimizer: Optimizer::FedAvg,
         sharing: Sharing::Full,
-        quantize_upload: false,
+        wire: Default::default(),
         sample_frac: ctx.scale.sample_frac(),
         rounds: ctx.rounds_for(paper_rounds),
         local_epochs: if non_iid {

@@ -114,7 +114,7 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
                     dataset: (sc.dataset)(clients),
                     optimizer: Optimizer::FedAvg,
                     sharing: sharing.clone(),
-                    quantize_upload: false,
+                    wire: Default::default(),
                     sample_frac: 1.0,
                     rounds,
                     local_epochs: 2,

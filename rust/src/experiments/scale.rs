@@ -24,7 +24,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::common::{banner, print_row, resolve_artifact_set, ExpCtx};
-use crate::config::{Optimizer, Sharing};
+use crate::config::{Optimizer, Sharing, WireConfig};
 use crate::scenario::{DataSource, DatasetSpec, PartitionSpec, ScenarioBuilder, ScenarioManifest};
 use crate::util::json::Json;
 
@@ -65,6 +65,7 @@ fn run_population(
     sample_frac: f64,
     per_client: usize,
     rounds: usize,
+    wire: WireConfig,
 ) -> Result<ScaleRun> {
     let m = ScenarioManifest {
         name: format!("scale_virtual_{population}"),
@@ -80,7 +81,7 @@ fn run_population(
         },
         optimizer: Optimizer::FedAvg,
         sharing: Sharing::Full,
-        quantize_upload: false,
+        wire,
         sample_frac,
         rounds,
         local_epochs: 1,
@@ -129,8 +130,38 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     let control_pop = (population / 100).max(participants.max(1000));
     let control_frac = participants as f64 / control_pop as f64;
 
-    let control = run_population(ctx, artifact, control_pop, control_frac, per_client, rounds)?;
-    let headline = run_population(ctx, artifact, population, sample_frac, per_client, rounds)?;
+    let control = run_population(
+        ctx,
+        artifact,
+        control_pop,
+        control_frac,
+        per_client,
+        rounds,
+        WireConfig::identity(),
+    )?;
+    let headline = run_population(
+        ctx,
+        artifact,
+        population,
+        sample_frac,
+        per_client,
+        rounds,
+        WireConfig::identity(),
+    )?;
+    // Same headline federation with fingerprint-cached downloads: clients
+    // that already hold the current global (everyone at round 0 — the init
+    // broadcast primed the store) are billed the 32-byte hash check instead
+    // of a full redelivery, so download bytes drop strictly below the
+    // always-redeliver baseline while the training bits stay identical.
+    let fingerprinted = run_population(
+        ctx,
+        artifact,
+        population,
+        sample_frac,
+        per_client,
+        rounds,
+        WireConfig { fingerprint_downloads: true, ..WireConfig::identity() },
+    )?;
 
     let fmt = |r: &ScaleRun| {
         vec![
@@ -159,12 +190,32 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
         headline.down_bytes as f64 / (headline.participants * headline.rounds).max(1) as f64 / 1e3,
     );
 
+    let down_ratio = fingerprinted.down_bytes as f64 / headline.down_bytes.max(1) as f64;
+    println!(
+        "fingerprint-cached downloads: {:.3} MB vs {:.3} MB always-redeliver ({:.1}% saved; \
+         training bits unchanged, loss {:.6} vs {:.6})",
+        fingerprinted.down_bytes as f64 / 1e6,
+        headline.down_bytes as f64 / 1e6,
+        (1.0 - down_ratio) * 100.0,
+        fingerprinted.final_loss,
+        headline.final_loss,
+    );
+    assert!(
+        fingerprinted.down_bytes < headline.down_bytes,
+        "fingerprinting must bill strictly fewer download bytes \
+         ({} vs {})",
+        fingerprinted.down_bytes,
+        headline.down_bytes
+    );
+
     Ok(Json::obj(vec![
         ("artifact", Json::Str(artifact.to_string())),
         ("control", control.to_json()),
         ("headline", headline.to_json()),
+        ("fingerprinted", fingerprinted.to_json()),
         ("live_bytes_ratio", Json::Num(live_ratio)),
         ("round_time_ratio", Json::Num(time_ratio)),
         ("population_ratio", Json::Num(pop_ratio)),
+        ("fingerprint_down_ratio", Json::Num(down_ratio)),
     ]))
 }

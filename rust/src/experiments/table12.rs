@@ -5,6 +5,7 @@
 use anyhow::Result;
 
 use super::common::{banner, run_scenario, vision_scenario, ExpCtx, VisionKind};
+use crate::config::WireConfig;
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<Json> {
@@ -21,7 +22,9 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
     let mut doc = Vec::new();
     for (label, artifact, quant) in rows {
         let mut m = vision_scenario(ctx, kind, false, artifact, 200);
-        m.quantize_upload = quant;
+        if quant {
+            m.wire = WireConfig::fp16_up();
+        }
         let res = run_scenario(ctx, &m)?;
         // Per-round MB (uplink+downlink across participants).
         let mb_per_round = res.total_gbytes * 1000.0 / res.reports.len() as f64;

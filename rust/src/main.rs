@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
-use fedpara::config::{Optimizer, Scale, Sharing};
+use fedpara::config::{CodecSpec, Optimizer, Scale, Sharing, WireConfig};
 use fedpara::experiments::{self, common, ExpCtx};
 use fedpara::runtime::Engine;
 use fedpara::scenario::{
@@ -86,6 +86,29 @@ fn engine_from(args: &Args) -> Result<Engine> {
     }
 }
 
+/// Wire config from `run` flags: `--wire-up`/`--wire-down` take codec spec
+/// strings, `--fingerprint` enables hash-cached downloads, and the legacy
+/// `--quantize` stays as an alias for `--wire-up fp16`.
+fn wire_from_flags(args: &Args) -> Result<WireConfig> {
+    let mut wire = if args.flag("quantize") {
+        if args.get("wire-up").is_some() {
+            return Err(anyhow!("--quantize (legacy alias for --wire-up fp16) and --wire-up are mutually exclusive"));
+        }
+        WireConfig::fp16_up()
+    } else {
+        WireConfig::identity()
+    };
+    if let Some(spec) = args.get("wire-up") {
+        wire.up = CodecSpec::parse(spec).map_err(|e| anyhow!("--wire-up: {e}"))?;
+    }
+    if let Some(spec) = args.get("wire-down") {
+        wire.down = CodecSpec::parse(spec).map_err(|e| anyhow!("--wire-down: {e}"))?;
+    }
+    wire.fingerprint_downloads = args.flag("fingerprint");
+    wire.validate().map_err(|e| anyhow!(e))?;
+    Ok(wire)
+}
+
 /// Build a [`ScenarioManifest`] from `run` subcommand flags, reproducing the
 /// historical flag-driven behavior exactly (populations, seeds, schedules).
 fn manifest_from_flags(args: &Args, ctx: &ExpCtx) -> Result<ScenarioManifest> {
@@ -148,7 +171,7 @@ fn manifest_from_flags(args: &Args, ctx: &ExpCtx) -> Result<ScenarioManifest> {
         dataset,
         optimizer: Optimizer::parse(args.get_or("optimizer", "fedavg")).map_err(|e| anyhow!(e))?,
         sharing,
-        quantize_upload: args.flag("quantize"),
+        wire: wire_from_flags(args)?,
         sample_frac: args.get_f64("frac", ctx.scale.sample_frac()).map_err(|e| anyhow!(e))?,
         rounds: ctx.rounds_for(100),
         local_epochs: args.get_usize("epochs", ctx.scale.local_epochs()).map_err(|e| anyhow!(e))?,
@@ -375,7 +398,17 @@ fn dispatch(mut args: Args) -> Result<()> {
                 .declare("epochs", "local epochs per round")
                 .declare("lr", "initial learning rate")
                 .declare("frac", "client sample fraction per round")
-                .declare("quantize", "fp16 uplink quantization (FedPAQ)")
+                .declare("quantize", "fp16 uplink quantization (alias for --wire-up fp16)")
+                .declare(
+                    "wire-up",
+                    "uplink codec: identity|fp16|subsample_quant:<rate>[:<levels>][:nofb]",
+                )
+                .declare("wire-down", "downlink codec for the broadcast global: identity|fp16")
+                .declare(
+                    "fingerprint",
+                    "hash-cached downloads: clients holding the current global are \
+                     billed only the 32-byte fingerprint check",
+                )
                 .declare("sharing", "full|local-only|pfedpara|fedper:<prefix,...>")
                 .declare("pfedpara", "share only global segments (alias for --sharing pfedpara)")
                 .declare("threads", "worker threads for the client fan-out (0 = host)")

@@ -207,7 +207,7 @@ mod tests {
             dataset,
             optimizer: Optimizer::FedAvg,
             sharing: Sharing::Full,
-            quantize_upload: false,
+            wire: Default::default(),
             sample_frac: 0.5,
             rounds: 1,
             local_epochs: 1,

@@ -24,7 +24,11 @@
 //!   },
 //!   "optimizer": {"kind": "fedprox", "mu": 0.05},   // or "fedprox:0.05"
 //!   "sharing": {"kind": "full"},                    // or "fedper:fc2,..." etc.
-//!   "quantize_upload": false,
+//!   "wire": {                                       // wire codecs (all optional)
+//!     "up": "subsample_quant:0.1:16",               // identity|fp16|subsample_quant:<rate>[:<levels>][:nofb]
+//!     "down": "fp16",                               // identity|fp16 (broadcast-safe codecs only)
+//!     "fingerprint_downloads": true                 // bill cached redeliveries at hash size
+//!   },
 //!   "sample_frac": 0.5, "rounds": 3, "local_epochs": 1,
 //!   "lr": 0.1, "lr_decay": 0.992, "eval_every": 1,
 //!   "seed": 42, "num_threads": 0
@@ -38,10 +42,14 @@
 //! *nullable* fields (`clients`, `population`, `holdout`) an explicit
 //! `null` means "absent"; for every other field `null` is a type error
 //! naming the offending path.
+//!
+//! The legacy boolean `quantize_upload` is still accepted as an alias:
+//! `true` ⇔ `{"wire": {"up": "fp16"}}` (same content hash), and a manifest
+//! may not spell both forms at once.
 
 use std::path::Path;
 
-use crate::config::{Optimizer, RunConfig, Sharing};
+use crate::config::{CodecSpec, Optimizer, RunConfig, Sharing, WireConfig};
 use crate::data::{synth_text, synth_vision};
 use crate::util::hash::sha256_hex;
 use crate::util::json::{Json, JsonPath};
@@ -361,7 +369,7 @@ pub struct ScenarioManifest {
     pub dataset: DatasetSpec,
     pub optimizer: Optimizer,
     pub sharing: Sharing,
-    pub quantize_upload: bool,
+    pub wire: WireConfig,
     pub sample_frac: f64,
     pub rounds: usize,
     pub local_epochs: usize,
@@ -383,6 +391,7 @@ impl ScenarioManifest {
             "dataset",
             "optimizer",
             "sharing",
+            "wire",
             "quantize_upload",
             "sample_frac",
             "rounds",
@@ -404,13 +413,32 @@ impl ScenarioManifest {
             None => Sharing::Full,
             Some(p) => sharing_from_path(&p)?,
         };
+        let wire = match (root.key_opt("wire")?, root.key_opt("quantize_upload")?) {
+            (Some(_), Some(_)) => {
+                return Err(
+                    "`wire` and the legacy `quantize_upload` alias are mutually exclusive"
+                        .into(),
+                )
+            }
+            (Some(p), None) => wire_from_path(&p)?,
+            // Legacy alias: `quantize_upload: true` is exactly the fp16-up
+            // wire (and hashes identically to spelling it out).
+            (None, Some(q)) => {
+                if q.bool()? {
+                    WireConfig::fp16_up()
+                } else {
+                    WireConfig::identity()
+                }
+            }
+            (None, None) => WireConfig::identity(),
+        };
         let m = ScenarioManifest {
             name,
             artifact,
             dataset,
             optimizer,
             sharing,
-            quantize_upload: bool_or(&root, "quantize_upload", false)?,
+            wire,
             sample_frac: f64_or(&root, "sample_frac", 0.25)?,
             rounds: root.key("rounds")?.usize()?,
             local_epochs: usize_or(&root, "local_epochs", 2)?,
@@ -464,6 +492,7 @@ impl ScenarioManifest {
         if !(self.lr_decay > 0.0 && self.lr_decay.is_finite()) {
             return Err("`lr_decay` must be finite and > 0".into());
         }
+        self.wire.validate().map_err(|e| format!("`wire`: {e}"))?;
         let d = &self.dataset;
         match (d.clients, d.population) {
             (None, None) => {
@@ -550,7 +579,7 @@ impl ScenarioManifest {
             ("dataset", self.dataset.canonical()),
             ("optimizer", optimizer_canonical(&self.optimizer)),
             ("sharing", sharing_canonical(&self.sharing)),
-            ("quantize_upload", Json::Bool(self.quantize_upload)),
+            ("wire", wire_canonical(&self.wire)),
             ("sample_frac", Json::Num(self.sample_frac)),
             ("rounds", Json::Num(self.rounds as f64)),
             ("local_epochs", Json::Num(self.local_epochs as f64)),
@@ -589,7 +618,7 @@ impl ScenarioManifest {
             lr: self.lr,
             lr_decay: self.lr_decay,
             optimizer: self.optimizer,
-            quantize_upload: self.quantize_upload,
+            wire: self.wire.clone(),
             sharing: self.sharing.clone(),
             eval_every: self.eval_every,
             seed: self.seed,
@@ -733,6 +762,76 @@ fn sharing_from_path(p: &JsonPath) -> Result<Sharing, String> {
             p.path()
         )),
     }
+}
+
+// ---- wire JSON forms -----------------------------------------------------
+
+fn codec_from_path(p: &JsonPath) -> Result<CodecSpec, String> {
+    if let Some(s) = p.json().as_str() {
+        return CodecSpec::parse(s).map_err(|e| format!("`{}`: {e}", p.path()));
+    }
+    let kind = p.key("kind")?.str()?;
+    match kind {
+        "identity" | "fp16" => {
+            p.expect_keys(&["kind"])?;
+            CodecSpec::parse(kind).map_err(|e| format!("`{}`: {e}", p.path()))
+        }
+        "subsample_quant" => {
+            p.expect_keys(&["kind", "rate", "levels", "feedback"])?;
+            let rate = p.key("rate")?.f64()?;
+            let levels = match p.key_opt("levels")? {
+                None => 16,
+                Some(q) => {
+                    let l = q.usize()?;
+                    u32::try_from(l)
+                        .map_err(|_| format!("`{}`: levels {l} out of range", q.path()))?
+                }
+            };
+            let feedback = bool_or(p, "feedback", true)?;
+            let spec = CodecSpec::SubsampleQuant { rate, levels, feedback };
+            spec.validate().map_err(|e| format!("`{}`: {e}", p.path()))?;
+            Ok(spec)
+        }
+        other => Err(format!(
+            "`{}`: unknown codec kind '{other}' (identity|fp16|subsample_quant)",
+            p.path()
+        )),
+    }
+}
+
+fn wire_from_path(p: &JsonPath) -> Result<WireConfig, String> {
+    p.expect_keys(&["up", "down", "fingerprint_downloads"])?;
+    let up = match p.key_opt("up")? {
+        None => CodecSpec::Identity,
+        Some(q) => codec_from_path(&q)?,
+    };
+    let down = match p.key_opt("down")? {
+        None => CodecSpec::Identity,
+        Some(q) => codec_from_path(&q)?,
+    };
+    let fingerprint_downloads = bool_or(p, "fingerprint_downloads", false)?;
+    Ok(WireConfig { up, down, fingerprint_downloads })
+}
+
+fn codec_canonical(c: &CodecSpec) -> Json {
+    match c {
+        CodecSpec::Identity => Json::obj(vec![("kind", Json::Str("identity".into()))]),
+        CodecSpec::Fp16 => Json::obj(vec![("kind", Json::Str("fp16".into()))]),
+        CodecSpec::SubsampleQuant { rate, levels, feedback } => Json::obj(vec![
+            ("kind", Json::Str("subsample_quant".into())),
+            ("rate", Json::Num(*rate)),
+            ("levels", Json::Num(*levels as f64)),
+            ("feedback", Json::Bool(*feedback)),
+        ]),
+    }
+}
+
+fn wire_canonical(w: &WireConfig) -> Json {
+    Json::obj(vec![
+        ("up", codec_canonical(&w.up)),
+        ("down", codec_canonical(&w.down)),
+        ("fingerprint_downloads", Json::Bool(w.fingerprint_downloads)),
+    ])
 }
 
 fn sharing_canonical(s: &Sharing) -> Json {
@@ -894,6 +993,76 @@ mod tests {
     }
 
     #[test]
+    fn wire_forms_agree_and_legacy_alias_hashes_identically() {
+        // String shorthand and object form parse to the same wire config.
+        let a = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "wire":{"up":"subsample_quant:0.1:8:nofb","down":"fp16",
+                        "fingerprint_downloads":true},
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        let b = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "wire":{"up":{"kind":"subsample_quant","rate":0.1,"levels":8,
+                              "feedback":false},
+                        "down":{"kind":"fp16"},"fingerprint_downloads":true},
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_eq!(
+            a.wire.up,
+            CodecSpec::SubsampleQuant { rate: 0.1, levels: 8, feedback: false }
+        );
+        assert_eq!(a.wire.down, CodecSpec::Fp16);
+        assert!(a.wire.fingerprint_downloads);
+
+        // Legacy alias: quantize_upload:true ⇔ wire.up = fp16, same hash.
+        let legacy = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,"quantize_upload":true,
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        let spelled = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,"wire":{"up":"fp16"},
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        assert_eq!(legacy.wire, WireConfig::fp16_up());
+        assert_eq!(legacy, spelled);
+        assert_eq!(legacy.content_hash(), spelled.content_hash());
+
+        // Spelling both forms at once is an error.
+        let e = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,"quantize_upload":false,
+                "wire":{"up":"fp16"},
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("mutually exclusive"), "{e}");
+
+        // Downlink sketch is rejected at validation with the wire prefix.
+        let m = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "wire":{"down":"subsample_quant:0.5"},
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        let e = m.validate().unwrap_err();
+        assert!(e.contains("`wire`") && e.contains("uplink codec"), "{e}");
+
+        // Bad codec spec strings carry the key path.
+        let e = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,"wire":{"up":"fp8"},
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("`wire.up`"), "{e}");
+    }
+
+    #[test]
     fn hash_is_default_whitespace_and_name_insensitive() {
         let sparse = ScenarioManifest::from_json_str(tiny_manifest_text()).unwrap();
         // Everything spelled out explicitly, different formatting and name.
@@ -996,7 +1165,19 @@ mod tests {
             },
             optimizer,
             sharing,
-            quantize_upload: rng.below(2) == 0,
+            wire: {
+                let up = match rng.below(3) {
+                    0 => CodecSpec::Identity,
+                    1 => CodecSpec::Fp16,
+                    _ => CodecSpec::SubsampleQuant {
+                        rate: (1 + rng.below(100)) as f64 / 100.0,
+                        levels: (2 + rng.below(255)) as u32,
+                        feedback: rng.below(2) == 0,
+                    },
+                };
+                let down = if rng.below(2) == 0 { CodecSpec::Identity } else { CodecSpec::Fp16 };
+                WireConfig { up, down, fingerprint_downloads: rng.below(2) == 0 }
+            },
             sample_frac: (1 + rng.below(100)) as f64 / 100.0,
             rounds: 1 + rng.below(50),
             local_epochs: 1 + rng.below(8),

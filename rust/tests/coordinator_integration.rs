@@ -4,7 +4,7 @@
 
 use std::path::PathBuf;
 
-use fedpara::config::{Optimizer, RunConfig, Sharing};
+use fedpara::config::{Optimizer, RunConfig, Sharing, WireConfig};
 use fedpara::coordinator::Federation;
 use fedpara::data::{partition, synth_vision};
 use fedpara::runtime::Engine;
@@ -44,7 +44,7 @@ fn base_cfg(artifact: &str) -> RunConfig {
         lr: 0.1,
         lr_decay: 0.992,
         optimizer: Optimizer::FedAvg,
-        quantize_upload: false,
+        wire: WireConfig::identity(),
         sharing: Sharing::Full,
         eval_every: 3,
         seed: 1,
@@ -138,7 +138,7 @@ fn quantized_upload_halves_uplink() {
     let spec = synth_vision::mnist_like();
     let (locals, test) = iid_locals(&spec, 4 * 64, 4, 15);
     let mut cfg = base_cfg("mlp10_orig");
-    cfg.quantize_upload = true;
+    cfg.wire = WireConfig::fp16_up();
     cfg.sample_frac = 1.0;
     let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
     fed.run_round().unwrap();

@@ -30,7 +30,7 @@ fn legacy_config(artifact: &str, lr: f32, local_epochs: usize, sample_frac: f64)
         lr,
         lr_decay: 0.992,
         optimizer: Optimizer::FedAvg,
-        quantize_upload: false,
+        wire: Default::default(),
         sharing: Sharing::Full,
         eval_every: 1,
         seed: 42,

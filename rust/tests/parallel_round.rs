@@ -8,7 +8,7 @@
 //! reduce folds job outcomes in participant order, so scheduling cannot
 //! leak into results.
 
-use fedpara::config::{Optimizer, RunConfig, Sharing};
+use fedpara::config::{Optimizer, RunConfig, Sharing, WireConfig};
 use fedpara::coordinator::{eval_on, Federation};
 use fedpara::data::{partition, synth_vision, Dataset};
 use fedpara::runtime::native::{self, NativeScheme, NativeSpec};
@@ -48,7 +48,7 @@ fn base_cfg(artifact: &str, num_threads: usize) -> RunConfig {
         lr: 0.1,
         lr_decay: 0.992,
         optimizer: Optimizer::FedAvg,
-        quantize_upload: false,
+        wire: WireConfig::identity(),
         sharing: Sharing::Full,
         eval_every: 2,
         seed: 11,
@@ -266,7 +266,7 @@ fn scaffold_quantized_uplink_bills_control_variate_at_fp16() {
     let (locals, test) = iid_locals(48, 4, 71);
     let mut cfg = base_cfg("small_orig", 2);
     cfg.optimizer = Optimizer::Scaffold;
-    cfg.quantize_upload = true;
+    cfg.wire = WireConfig::fp16_up();
     cfg.sample_frac = 1.0;
     cfg.local_epochs = 1;
     cfg.eval_every = 0;

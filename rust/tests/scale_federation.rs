@@ -51,7 +51,7 @@ fn virtual_fed(
         lr: 0.1,
         lr_decay: 1.0,
         optimizer,
-        quantize_upload: false,
+        wire: Default::default(),
         sharing,
         eval_every: 0,
         seed: 77,

@@ -55,7 +55,7 @@ fn paper_cfg(artifact: &str, optimizer: Optimizer, sharing: Sharing) -> RunConfi
         lr: 0.1,
         lr_decay: 0.992,
         optimizer,
-        quantize_upload: false,
+        wire: Default::default(),
         sharing,
         eval_every: 1,
         seed: 23,

@@ -1,0 +1,299 @@
+//! Wire-codec federation suite (ISSUE 7).
+//!
+//! The `WireCodec` refactor's contracts, pinned end-to-end through
+//! `Federation` on the native backend (always runs):
+//!
+//! * the **identity** wire (the `RunConfig` default) is the historical
+//!   bit path — explicit `WireConfig::identity()` and `Default::default()`
+//!   are indistinguishable, and the ledger bills raw fp32 both ways;
+//! * **fingerprint-cached downloads** change billing only: reports,
+//!   server parameters, and uplink bytes are bit-identical to the
+//!   always-redeliver run, while round-0 download bytes collapse to the
+//!   32-byte hash check (every client implicitly holds the init);
+//! * **fp16** on either direction bills exactly 2 bytes/value over the
+//!   *scattered segment length* — the FedPer/partial-sharing cells pin
+//!   the downlink bill to the actual global segment bytes, not the full
+//!   parameter count (the historical `down_bytes()` audit);
+//! * **subsample_quant** is deterministic under the `(round, cid)` rng
+//!   keying, and its error-feedback accumulator is what makes aggressive
+//!   rates converge: at the same rate, the `:nofb` ablation trains to a
+//!   strictly worse loss.
+
+use fedpara::config::{CodecSpec, Optimizer, RunConfig, Sharing, WireConfig};
+use fedpara::coordinator::{Federation, FINGERPRINT_BYTES};
+use fedpara::data::{partition, synth_vision, Dataset};
+use fedpara::runtime::native::{self, NativeScheme, NativeSpec};
+use fedpara::runtime::{BatchShape, Engine};
+use fedpara::util::rng::Rng;
+
+fn iid_locals(n_per: usize, clients: usize, seed: u64) -> (Vec<Dataset>, Dataset) {
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, clients * n_per, seed);
+    let test = synth_vision::generate(&spec, 256, seed ^ 0xE0E0);
+    let mut rng = Rng::new(seed);
+    let part = partition::iid(data.len(), clients, &mut rng);
+    let locals = part.clients.iter().map(|idx| data.subset(idx)).collect();
+    (locals, test)
+}
+
+/// Small native artifacts so the optimizer×wire sweeps stay fast in debug
+/// builds (the wire seam is size-independent).
+fn small_engine() -> Engine {
+    let train = BatchShape { nbatches: 2, batch: 16, feature_dim: 784 };
+    let eval = BatchShape { nbatches: 2, batch: 64, feature_dim: 784 };
+    let spec = |scheme| NativeSpec::mlp_dims(784, 24, 10, scheme);
+    Engine::with_artifacts(vec![
+        native::artifact("wire_orig", spec(NativeScheme::Original), train, eval),
+        native::artifact("wire_pfedpara", spec(NativeScheme::PFedPara { gamma: 0.5 }), train, eval),
+    ])
+}
+
+fn base_cfg(artifact: &str, wire: WireConfig) -> RunConfig {
+    RunConfig {
+        artifact: artifact.into(),
+        sample_frac: 0.5,
+        rounds: 3,
+        local_epochs: 1,
+        lr: 0.1,
+        lr_decay: 0.992,
+        optimizer: Optimizer::FedAvg,
+        wire,
+        sharing: Sharing::Full,
+        eval_every: 0,
+        seed: 311,
+        num_threads: 2,
+    }
+}
+
+/// Everything a run produces, bit-exact (wall clock excluded).
+#[derive(Debug, PartialEq)]
+struct RunKey {
+    reports: Vec<(usize, u32, usize, u64, u64, u64)>,
+    server_global: Vec<u32>,
+    ledger: Vec<(u64, u64)>,
+}
+
+fn run_key(cfg: RunConfig, rounds: usize) -> RunKey {
+    let engine = small_engine();
+    let (locals, test) = iid_locals(48, 8, 77);
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    fed.run(rounds).unwrap();
+    RunKey {
+        reports: fed
+            .reports
+            .iter()
+            .map(|r| {
+                (
+                    r.round,
+                    r.lr.to_bits(),
+                    r.participants,
+                    r.mean_train_loss.to_bits(),
+                    r.up_bytes,
+                    r.down_bytes,
+                )
+            })
+            .collect(),
+        server_global: fed.server_global().iter().map(|p| p.to_bits()).collect(),
+        ledger: fed.comm.per_round.clone(),
+    }
+}
+
+/// Like [`RunKey`] but with the download bytes masked out — the shape two
+/// runs must share when they may differ *only* in download billing.
+fn billing_blind(key: &RunKey) -> (Vec<(usize, u32, usize, u64, u64)>, Vec<u32>, Vec<u64>) {
+    (
+        key.reports.iter().map(|r| (r.0, r.1, r.2, r.3, r.4)).collect(),
+        key.server_global.clone(),
+        key.ledger.iter().map(|&(up, _)| up).collect(),
+    )
+}
+
+#[test]
+fn explicit_identity_wire_is_the_default_for_every_optimizer() {
+    for optimizer in [
+        Optimizer::FedAvg,
+        Optimizer::FedProx { mu: 0.1 },
+        Optimizer::Scaffold,
+        Optimizer::FedDyn { alpha: 0.1 },
+        Optimizer::FedAdam,
+    ] {
+        let mut explicit = base_cfg("wire_orig", WireConfig::identity());
+        explicit.optimizer = optimizer;
+        let mut default = base_cfg("wire_orig", Default::default());
+        default.optimizer = optimizer;
+        assert_eq!(
+            run_key(explicit, 2),
+            run_key(default, 2),
+            "{}: explicit identity wire diverged from the default",
+            optimizer.name()
+        );
+    }
+}
+
+#[test]
+fn fingerprinting_changes_billing_only() {
+    for optimizer in [Optimizer::FedAvg, Optimizer::Scaffold] {
+        let mut plain = base_cfg("wire_orig", WireConfig::identity());
+        plain.optimizer = optimizer;
+        plain.sample_frac = 1.0;
+        let mut fp = plain.clone();
+        fp.wire.fingerprint_downloads = true;
+
+        let rounds = 3;
+        let plain_key = run_key(plain, rounds);
+        let fp_key = run_key(fp, rounds);
+
+        // Training bits and uplink billing are invariant under
+        // fingerprinting — only download billing may move.
+        assert_eq!(
+            billing_blind(&plain_key),
+            billing_blind(&fp_key),
+            "{}: fingerprinting leaked into training or uplink",
+            optimizer.name()
+        );
+
+        // Round 0: every client implicitly holds the init broadcast, and
+        // with the identity downlink the round-0 global *is* the init —
+        // each participant pays the hash check instead of the model. For
+        // SCAFFOLD the control variate (exactly half the plain round-0
+        // bill under Full sharing) still rides in full: it is never
+        // fingerprint-cached.
+        let participants = fp_key.reports[0].2 as u64;
+        let plain_round0 = plain_key.reports[0].5;
+        let expected_round0 = if matches!(optimizer, Optimizer::Scaffold) {
+            participants * FINGERPRINT_BYTES + plain_round0 / 2
+        } else {
+            participants * FINGERPRINT_BYTES
+        };
+        assert_eq!(
+            fp_key.reports[0].5,
+            expected_round0,
+            "{}: round-0 fingerprinted download bill",
+            optimizer.name()
+        );
+
+        // After round 0 the global has moved, so later rounds redeliver in
+        // full — identical to the plain run.
+        for r in 1..rounds {
+            assert_eq!(
+                fp_key.reports[r].5, plain_key.reports[r].5,
+                "{}: round {r} should redeliver in full",
+                optimizer.name()
+            );
+        }
+
+        // The acceptance inequality: strictly fewer download bytes overall.
+        let total = |k: &RunKey| k.reports.iter().map(|r| r.5).sum::<u64>();
+        assert!(
+            total(&fp_key) < total(&plain_key),
+            "{}: fingerprinting saved nothing ({} vs {})",
+            optimizer.name(),
+            total(&fp_key),
+            total(&plain_key)
+        );
+    }
+}
+
+/// Satellite-2 audit: the downlink bill is the *scattered segment length*
+/// — `server_global().len()`, the post-`Sharing` global view — never the
+/// full parameter count. Pinned for FedPer (partial sharing over a dense
+/// artifact) and pFedPara global-segments, raw and fp16-down.
+#[test]
+fn download_bills_scattered_segment_length_under_partial_sharing() {
+    let cells: [(&str, Sharing); 2] = [
+        ("wire_orig", Sharing::FedPer { local_prefixes: vec!["fc2".into()] }),
+        ("wire_pfedpara", Sharing::GlobalSegments),
+    ];
+    for (artifact, sharing) in cells {
+        for down in [CodecSpec::Identity, CodecSpec::Fp16] {
+            let engine = small_engine();
+            let (locals, test) = iid_locals(48, 4, 91);
+            let wire = WireConfig { down: down.clone(), ..WireConfig::identity() };
+            let mut cfg = base_cfg(artifact, wire);
+            cfg.sharing = sharing.clone();
+            cfg.sample_frac = 1.0;
+            let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+            fed.run_round().unwrap();
+            let gl = fed.server_global().len() as u64;
+            let full = fed.meta().param_count as u64;
+            assert!(gl < full, "{artifact}: partial sharing must shrink the global view");
+            let per_value: u64 = match down {
+                CodecSpec::Fp16 => 2,
+                _ => 4,
+            };
+            assert_eq!(
+                fed.comm.down_bytes,
+                4 * per_value * gl,
+                "{artifact} × {sharing:?} × {down:?}: down bytes must be \
+                 participants × {per_value} × scattered length {gl}, not the \
+                 full model ({full} params)"
+            );
+            // Uplink stayed raw fp32 over the same segment view.
+            assert_eq!(fed.comm.up_bytes, 4 * 4 * gl);
+        }
+    }
+}
+
+#[test]
+fn fp16_up_bills_half_and_stays_deterministic() {
+    let cfg = base_cfg("wire_orig", WireConfig::fp16_up());
+    let a = run_key(cfg.clone(), 2);
+    let b = run_key(cfg, 2);
+    assert_eq!(a, b, "fp16 uplink must be deterministic");
+    for r in &a.reports {
+        // up = fp16 (2 B/value), down = raw fp32 (4 B/value), same length.
+        assert_eq!(2 * r.4, r.5, "round {}: up must bill half of down", r.0);
+    }
+    // Quantization is real: the identity run lands on different bits.
+    let identity = run_key(base_cfg("wire_orig", WireConfig::identity()), 2);
+    assert_ne!(a.server_global, identity.server_global);
+}
+
+#[test]
+fn subsample_quant_is_deterministic_and_bills_sketch_bytes() {
+    let wire = WireConfig {
+        up: CodecSpec::SubsampleQuant { rate: 0.25, levels: 16, feedback: true },
+        ..WireConfig::identity()
+    };
+    let mut cfg = base_cfg("wire_orig", wire);
+    cfg.sample_frac = 1.0;
+    let a = run_key(cfg.clone(), 2);
+    let b = run_key(cfg, 2);
+    assert_eq!(a, b, "sketched uplink must be deterministic under (round, cid) rng keys");
+    // 8-byte header + 5 bytes per sampled coordinate, per participant.
+    let gl = a.server_global.len() as u64;
+    let k = (gl as f64 * 0.25).ceil() as u64;
+    for r in &a.reports {
+        assert_eq!(r.4, r.2 as u64 * (8 + 5 * k), "round {}: sketch bill", r.0);
+    }
+}
+
+/// The error-feedback satellite: at the same aggressive rate, the
+/// accumulator arm must train to a strictly better loss than the `:nofb`
+/// ablation — untransmitted mass is carried forward, not dropped.
+#[test]
+fn error_feedback_beats_the_nofb_ablation_at_equal_rate() {
+    let run_loss = |feedback: bool| -> f64 {
+        let wire = WireConfig {
+            up: CodecSpec::SubsampleQuant { rate: 0.1, levels: 4, feedback },
+            ..WireConfig::identity()
+        };
+        let mut cfg = base_cfg("wire_orig", wire);
+        cfg.sample_frac = 1.0;
+        cfg.lr_decay = 1.0;
+        let engine = small_engine();
+        let (locals, test) = iid_locals(48, 8, 77);
+        let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+        fed.run(16).unwrap();
+        let tail: Vec<f64> =
+            fed.reports.iter().rev().take(3).map(|r| r.mean_train_loss).collect();
+        assert!(tail.iter().all(|l| l.is_finite()));
+        tail.iter().sum::<f64>() / tail.len() as f64
+    };
+    let with_fb = run_loss(true);
+    let without_fb = run_loss(false);
+    assert!(
+        with_fb < without_fb,
+        "error feedback should win at rate 0.1: fb {with_fb:.4} vs nofb {without_fb:.4}"
+    );
+}
