@@ -6,9 +6,13 @@
 //! federated round on the `native_cnn10_fedpara` artifact — plus the
 //! cross-device **scale** section (a round over 10⁴- vs 10⁶-client
 //! virtual populations at equal participants: round time and live store
-//! state must be population-independent) and the **wire** section
+//! state must be population-independent), the **wire** section
 //! (per-codec uplink transmit throughput and the deterministic
-//! billed-bytes ratio vs raw fp32), and writes the numbers to
+//! billed-bytes ratio vs raw fp32), and the **sched** section (the
+//! virtual event clock under the three round policies on a spread-10
+//! fleet: the partial policies' simulated-time win over the sync barrier
+//! is analytic, so the ratios gate host-invariantly), and writes the
+//! numbers to
 //! `BENCH_native.json` so the repo's perf trajectory is tracked run over
 //! run (CI uploads the file as an artifact on every push).
 //!
@@ -27,9 +31,11 @@
 
 use std::time::Instant;
 
-use fedpara::config::{CodecSpec, Optimizer, RunConfig, Sharing};
+use fedpara::config::{
+    CodecSpec, Optimizer, RoundPolicy, RunConfig, SchedConfig, Sharing, TimeModel,
+};
 use fedpara::coordinator::{wire, ClientDataSource, Federation};
-use fedpara::data::{partition, synth_vision};
+use fedpara::data::{partition, synth_vision, Dataset};
 use fedpara::linalg::kernels;
 use fedpara::runtime::native::{self, NativeScheme, NativeSpec};
 use fedpara::runtime::{BatchShape, Engine};
@@ -191,6 +197,7 @@ fn bench_round(smoke: bool, iters: usize) -> anyhow::Result<Json> {
         optimizer: Optimizer::FedAvg,
         wire: Default::default(),
         sharing: Sharing::Full,
+        sched: Default::default(),
         eval_every: 0,
         seed: 4,
         num_threads: 0,
@@ -278,6 +285,7 @@ fn bench_scale(smoke: bool, iters: usize) -> anyhow::Result<Json> {
             optimizer: Optimizer::FedAvg,
             wire: Default::default(),
             sharing: Sharing::Full,
+            sched: Default::default(),
             eval_every: 0,
             seed: 23,
             num_threads: 0,
@@ -380,6 +388,136 @@ fn bench_wire(smoke: bool, iters: usize) -> Json {
         ]));
     }
     Json::Arr(rows)
+}
+
+/// One policy run for the sched section: `rounds` federated rounds under
+/// `policy` at device-speed spread `spread`, returning the summed
+/// simulated seconds, straggler/drop counts, and the per-round wall-time
+/// distribution.
+fn sched_policy_run(
+    engine: &Engine,
+    locals: &[Dataset],
+    test: &Dataset,
+    policy: RoundPolicy,
+    spread: f64,
+    rounds: usize,
+) -> anyhow::Result<(f64, usize, usize, Welford)> {
+    let cfg = RunConfig {
+        artifact: "sched_mlp".into(),
+        sample_frac: 0.5,
+        rounds,
+        local_epochs: 1,
+        lr: 0.05,
+        lr_decay: 1.0,
+        optimizer: Optimizer::FedAvg,
+        wire: Default::default(),
+        sharing: Sharing::Full,
+        sched: SchedConfig {
+            policy,
+            faults: Default::default(),
+            // Fast links + slow devices: compute dominates the arrival
+            // time, so the spread controls the straggler severity.
+            time: TimeModel {
+                up_mbps: 100.0,
+                down_mbps: 100.0,
+                device_gflops: 0.05,
+                speed_spread: spread,
+            },
+        },
+        eval_every: 0,
+        seed: 31,
+        num_threads: 0,
+    };
+    let mut fed = Federation::new(engine, cfg, locals.to_vec(), test.clone())?;
+    let (mut sim, mut stragglers, mut dropped) = (0.0f64, 0usize, 0usize);
+    let mut w = Welford::new();
+    for _ in 0..rounds {
+        let t0 = Instant::now();
+        let r = fed.run_round()?;
+        w.push(t0.elapsed().as_secs_f64() * 1e3);
+        sim += r.t_sim_secs;
+        stragglers += r.stragglers;
+        dropped += r.dropped;
+    }
+    Ok((sim, stragglers, dropped, w))
+}
+
+/// Scheduler section: the virtual event clock under the three round
+/// policies on a deliberately heterogeneous fleet (device speed spread
+/// 10×, compute-dominated arrivals). Simulated seconds are **analytic** —
+/// a pure function of config and seed, identical on every host and at
+/// every thread count — so the sync/deadline and sync/async sim-time
+/// ratios are host-invariant gate metrics: they quantify the partial
+/// policies' straggler win over the synchronous barrier, the scheduler's
+/// whole reason to exist. The sync run's wall time per round (scheduler
+/// bookkeeping included) keeps the usual catastrophic backstop.
+fn bench_sched(smoke: bool) -> anyhow::Result<Json> {
+    const CLIENTS: usize = 16;
+    const SPREAD: f64 = 10.0;
+    let rounds = if smoke { 4 } else { 8 };
+
+    // Tiny 4×4×3 MLP — the section measures the scheduler's clock and
+    // bookkeeping, not GEMM throughput.
+    let feat = 4 * 4 * 3;
+    let train = BatchShape { nbatches: 1, batch: 8, feature_dim: feat };
+    let eval = BatchShape { nbatches: 1, batch: 16, feature_dim: feat };
+    let engine = Engine::with_artifacts(vec![native::artifact(
+        "sched_mlp",
+        NativeSpec::mlp_dims(feat, 8, 4, NativeScheme::Original),
+        train,
+        eval,
+    )]);
+    let spec = synth_vision::cifar_like_sized(4, 4, 4);
+    let data = synth_vision::generate(&spec, CLIENTS * 16, 31);
+    let test = synth_vision::generate(&spec, 32, 32);
+    let mut rng = Rng::new(33);
+    let part = partition::iid(data.len(), CLIENTS, &mut rng);
+    let locals: Vec<_> = part.clients.iter().map(|i| data.subset(i)).collect();
+
+    let run = |policy: RoundPolicy, spread: f64, rounds: usize| {
+        sched_policy_run(&engine, &locals, &test, policy, spread, rounds)
+    };
+
+    // Calibrate the deadline off a homogeneous one-round probe, exactly
+    // like `exp async`: 2.5× the nominal barrier admits roughly the
+    // faster half of a log-uniform [1, 10] fleet and cuts the tail.
+    let (nominal, _, _, _) = run(RoundPolicy::Sync, 1.0, 1)?;
+    let deadline = RoundPolicy::SyncDeadline { deadline_secs: nominal * 2.5, over_select: 1.5 };
+    let fedbuff = RoundPolicy::Async { buffer_k: 4, beta: 0.5, max_staleness: 4 };
+
+    let (sync_sim, _, _, sync_w) = run(RoundPolicy::Sync, SPREAD, rounds)?;
+    let (dead_sim, stragglers, _, _) = run(deadline, SPREAD, rounds)?;
+    let (async_sim, _, async_dropped, _) = run(fedbuff, SPREAD, rounds)?;
+    let ratio_dead = sync_sim / dead_sim.max(1e-12);
+    let ratio_async = sync_sim / async_sim.max(1e-12);
+
+    println!(
+        "\n== scheduler: virtual clock, spread-{SPREAD}x fleet ({CLIENTS} clients, {rounds} rounds) =="
+    );
+    println!(
+        "sync {sync_sim:>8.1}s  deadline {dead_sim:>8.1}s ({ratio_dead:.2}x)  \
+         async {async_sim:>8.1}s ({ratio_async:.2}x)  [simulated]"
+    );
+    println!(
+        "sync round wall {:.3} ms; deadline stragglers {stragglers}, \
+         async over-stale drops {async_dropped}",
+        sync_w.mean()
+    );
+    Ok(Json::obj(vec![
+        ("clients", Json::Num(CLIENTS as f64)),
+        ("participants", Json::Num(CLIENTS as f64 * 0.5)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("speed_spread", Json::Num(SPREAD)),
+        ("nominal_sim_secs", Json::Num(nominal)),
+        ("sync_sim_secs", Json::Num(sync_sim)),
+        ("deadline_sim_secs", Json::Num(dead_sim)),
+        ("async_sim_secs", Json::Num(async_sim)),
+        ("sim_ratio_deadline", Json::Num(ratio_dead)),
+        ("sim_ratio_async", Json::Num(ratio_async)),
+        ("deadline_stragglers", Json::Num(stragglers as f64)),
+        ("async_dropped", Json::Num(async_dropped as f64)),
+        ("sync_round_ms", Json::Num(sync_w.mean())),
+    ]))
 }
 
 /// Baseline entries whose reference time sits below this are pure timer
@@ -609,6 +747,67 @@ fn gate_check_wire(base: &Json, cur: Option<&Json>, tol_pct: f64, regressions: &
     primary
 }
 
+/// Gate check of the scheduler section. The **primary** metrics are the
+/// simulated-time ratios sync/deadline and sync/async: simulated seconds
+/// are analytic (a pure function of config and seed), so the ratios
+/// transfer across hosts exactly, and a drop below the baseline floor
+/// means the partial policies stopped beating the synchronous barrier on
+/// a straggler-heavy fleet. The sync run's wall time keeps the usual
+/// catastrophic backstop. Returns `true` when a primary comparison
+/// happened.
+fn gate_check_sched(base: &Json, cur: &Json, tol_pct: f64, regressions: &mut usize) -> bool {
+    let label = "sched: policy sim-time ratios (spread 10x)";
+    // Only comparable when the harness shape matches.
+    for key in ["clients", "participants", "rounds", "speed_spread"] {
+        if base.get(key).as_f64() != cur.get(key).as_f64() {
+            println!("  {label:<44} SKIP ({key} differs — refresh the baseline)");
+            return false;
+        }
+    }
+    let mut ok = true;
+    let mut primary = false;
+    for key in ["sim_ratio_deadline", "sim_ratio_async"] {
+        if let (Some(br), Some(cr)) = (base.get(key).as_f64(), cur.get(key).as_f64()) {
+            primary = true;
+            let floor = br * (1.0 - tol_pct / 100.0);
+            if cr < floor {
+                *regressions += 1;
+                ok = false;
+                println!(
+                    "  {label:<44} REGRESSION: {key} {cr:.2}x < {br:.2}x −{tol_pct}% \
+                     (floor {floor:.2}x) — the partial policies lost their straggler win"
+                );
+            }
+        }
+    }
+    if !primary {
+        println!("  {label:<44} note: sim-ratio fields missing — backstop check only");
+    }
+    if let (Some(bm), Some(cm)) =
+        (base.get("sync_round_ms").as_f64(), cur.get("sync_round_ms").as_f64())
+    {
+        if bm >= GATE_NOISE_FLOOR_MS {
+            let limit = bm * GATE_CATASTROPHIC_FACTOR;
+            if cm > limit {
+                *regressions += 1;
+                ok = false;
+                println!(
+                    "  {label:<44} REGRESSION: sync round {cm:.3} ms > \
+                     {GATE_CATASTROPHIC_FACTOR}x baseline {bm:.3} ms"
+                );
+            }
+        }
+    }
+    if ok {
+        println!(
+            "  {label:<44} ok: deadline {:.2}x, async {:.2}x (simulated)",
+            cur.get("sim_ratio_deadline").as_f64().unwrap_or(f64::NAN),
+            cur.get("sim_ratio_async").as_f64().unwrap_or(f64::NAN)
+        );
+    }
+    primary
+}
+
 /// Find the wire row matching `codec`.
 fn wire_row<'a>(doc: &'a Json, codec: &str) -> Option<&'a Json> {
     doc.get("wire")
@@ -710,6 +909,15 @@ fn compare_against_baseline(
     } else {
         println!("  wire: SKIP (baseline has no wire section — refresh the baseline)");
     }
+    // Scheduler policies: host-invariant simulated-time ratios (only
+    // when the baseline has the section — older baselines predate it).
+    if base.get("sched") != &Json::Null {
+        compared +=
+            gate_check_sched(base.get("sched"), doc.get("sched"), tol_pct, &mut regressions)
+                as usize;
+    } else {
+        println!("  sched: SKIP (baseline has no sched section — refresh the baseline)");
+    }
     if compared == 0 {
         // Every row skipped ⇒ the baseline no longer matches the harness
         // (renamed shapes/fields/artifact). A vacuously-green gate is
@@ -786,6 +994,7 @@ fn main() -> anyhow::Result<()> {
     let round = bench_round(smoke, iters)?;
     let scale = bench_scale(smoke, iters)?;
     let wire = bench_wire(smoke, iters);
+    let sched = bench_sched(smoke)?;
 
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let doc = Json::obj(vec![
@@ -797,6 +1006,7 @@ fn main() -> anyhow::Result<()> {
         ("round", round),
         ("scale", scale),
         ("wire", wire),
+        ("sched", sched),
     ]);
     std::fs::write(&out_path, doc.to_string_pretty())?;
     println!("\nwrote {out_path}");

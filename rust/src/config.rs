@@ -295,6 +295,313 @@ impl Default for WireConfig {
     }
 }
 
+/// When a round aggregates: the scheduler's barrier policy. `Sync` is
+/// today's full barrier (bit-identical to the historical loop); the other
+/// arms trade cohort completeness for simulated wall-clock, the lever that
+/// matters once client speeds are heterogeneous (FedHM's device-class
+/// setting; ROADMAP item 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RoundPolicy {
+    /// Wait for every sampled participant — the classic FedAvg barrier.
+    Sync,
+    /// Aggregate whatever arrived by the deadline; the weighted mean
+    /// renormalizes over arrivals automatically and stragglers are counted
+    /// (and optionally retried next round). `over_select` inflates the
+    /// sample to compensate for expected losses (Bonawitz et al. 2019).
+    SyncDeadline { deadline_secs: f64, over_select: f64 },
+    /// FedBuff-style buffered async (Nguyen et al. 2022): fold the first
+    /// `buffer_k` arrivals with staleness-discounted weights
+    /// `1/(1+s)^beta`, carry the rest across rounds, and drop updates
+    /// staler than `max_staleness` server versions.
+    Async { buffer_k: usize, beta: f64, max_staleness: usize },
+}
+
+impl RoundPolicy {
+    /// Parse a policy spec: `sync`, `deadline:<secs>[:over=<x>]`, or
+    /// `async[:k=<n>][:beta=<f>][:max=<n>]` (defaults k=8, beta=0.5,
+    /// max=4).
+    pub fn parse(s: &str) -> Result<RoundPolicy, String> {
+        if s == "sync" {
+            return Ok(RoundPolicy::Sync);
+        }
+        if s == "deadline" {
+            return Err("deadline needs seconds: deadline:<secs>[:over=<x>]".into());
+        }
+        if let Some(rest) = s.strip_prefix("deadline:") {
+            let mut parts = rest.split(':');
+            let secs_s = parts.next().unwrap_or("");
+            let deadline_secs: f64 = secs_s
+                .parse()
+                .map_err(|_| format!("deadline: seconds '{secs_s}' is not a number"))?;
+            let mut over_select = 1.0f64;
+            for p in parts {
+                let Some(v) = p.strip_prefix("over=") else {
+                    return Err(format!(
+                        "deadline: unexpected field ':{p}' (deadline:<secs>[:over=<x>])"
+                    ));
+                };
+                over_select =
+                    v.parse().map_err(|_| format!("deadline: over '{v}' is not a number"))?;
+            }
+            let policy = RoundPolicy::SyncDeadline { deadline_secs, over_select };
+            policy.validate()?;
+            return Ok(policy);
+        }
+        if s == "async" || s.starts_with("async:") {
+            let (mut buffer_k, mut beta, mut max_staleness) = (8usize, 0.5f64, 4usize);
+            if let Some(rest) = s.strip_prefix("async:") {
+                for p in rest.split(':') {
+                    if let Some(v) = p.strip_prefix("k=") {
+                        buffer_k = v
+                            .parse()
+                            .map_err(|_| format!("async: k '{v}' is not an integer"))?;
+                    } else if let Some(v) = p.strip_prefix("beta=") {
+                        beta =
+                            v.parse().map_err(|_| format!("async: beta '{v}' is not a number"))?;
+                    } else if let Some(v) = p.strip_prefix("max=") {
+                        max_staleness = v
+                            .parse()
+                            .map_err(|_| format!("async: max '{v}' is not an integer"))?;
+                    } else {
+                        return Err(format!(
+                            "async: unexpected field ':{p}' (async[:k=<n>][:beta=<f>][:max=<n>])"
+                        ));
+                    }
+                }
+            }
+            let policy = RoundPolicy::Async { buffer_k, beta, max_staleness };
+            policy.validate()?;
+            return Ok(policy);
+        }
+        Err(format!(
+            "unknown policy '{s}' (sync|deadline:<secs>[:over=<x>]|async[:k=<n>][:beta=<f>][:max=<n>])"
+        ))
+    }
+
+    /// Canonical spec string; `parse(spec_string())` round-trips exactly.
+    pub fn spec_string(&self) -> String {
+        match self {
+            RoundPolicy::Sync => "sync".into(),
+            RoundPolicy::SyncDeadline { deadline_secs, over_select } => {
+                format!("deadline:{deadline_secs}:over={over_select}")
+            }
+            RoundPolicy::Async { buffer_k, beta, max_staleness } => {
+                format!("async:k={buffer_k}:beta={beta}:max={max_staleness}")
+            }
+        }
+    }
+
+    /// Range checks shared by `parse` and the manifest validator.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            RoundPolicy::Sync => {}
+            RoundPolicy::SyncDeadline { deadline_secs, over_select } => {
+                if !deadline_secs.is_finite() || *deadline_secs <= 0.0 {
+                    return Err(format!(
+                        "policy deadline: seconds must be finite and > 0, got {deadline_secs}"
+                    ));
+                }
+                if !over_select.is_finite() || *over_select < 1.0 {
+                    return Err(format!(
+                        "policy deadline: over-selection must be finite and >= 1, got {over_select}"
+                    ));
+                }
+            }
+            RoundPolicy::Async { buffer_k, beta, max_staleness } => {
+                if *buffer_k == 0 {
+                    return Err("policy async: k must be >= 1".into());
+                }
+                if !beta.is_finite() || *beta < 0.0 {
+                    return Err(format!("policy async: beta must be finite and >= 0, got {beta}"));
+                }
+                if *max_staleness == 0 {
+                    return Err("policy async: max staleness must be >= 1".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for RoundPolicy {
+    fn default() -> RoundPolicy {
+        RoundPolicy::Sync
+    }
+}
+
+/// Injected client failures, drawn per `(round, cid)` from their own seeded
+/// stream so fault patterns replay exactly and never perturb training rng.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Per-selection probability a client silently drops before training
+    /// (device offline): download billed, nothing uploaded.
+    pub dropout: f64,
+    /// Per-selection probability a client crashes mid-upload: download and
+    /// a partial upload billed, update discarded.
+    pub crash_upload: f64,
+    /// Re-queue failed/straggling clients for the next round's cohort.
+    pub retry_failed: bool,
+}
+
+impl FaultConfig {
+    /// Parse a fault spec: `none`, or a comma list of
+    /// `dropout:<p>`, `crash:<p>`, `retry` (e.g. `dropout:0.1,retry`).
+    pub fn parse(s: &str) -> Result<FaultConfig, String> {
+        let mut f = FaultConfig::default();
+        if s == "none" {
+            return Ok(f);
+        }
+        for part in s.split(',') {
+            let part = part.trim();
+            if part == "retry" {
+                f.retry_failed = true;
+            } else if let Some(v) = part.strip_prefix("dropout:") {
+                f.dropout = v
+                    .parse()
+                    .map_err(|_| format!("faults: dropout '{v}' is not a number"))?;
+            } else if let Some(v) = part.strip_prefix("crash:") {
+                f.crash_upload =
+                    v.parse().map_err(|_| format!("faults: crash '{v}' is not a number"))?;
+            } else {
+                return Err(format!(
+                    "faults: unknown field '{part}' (none | dropout:<p>,crash:<p>,retry)"
+                ));
+            }
+        }
+        f.validate()?;
+        Ok(f)
+    }
+
+    /// Canonical spec string; `parse(spec_string())` round-trips exactly.
+    pub fn spec_string(&self) -> String {
+        let mut parts = Vec::new();
+        if self.dropout > 0.0 {
+            parts.push(format!("dropout:{}", self.dropout));
+        }
+        if self.crash_upload > 0.0 {
+            parts.push(format!("crash:{}", self.crash_upload));
+        }
+        if self.retry_failed {
+            parts.push("retry".into());
+        }
+        if parts.is_empty() {
+            "none".into()
+        } else {
+            parts.join(",")
+        }
+    }
+
+    /// Range checks shared by `parse` and the manifest validator.
+    pub fn validate(&self) -> Result<(), String> {
+        for (what, p) in [("dropout", self.dropout), ("crash", self.crash_upload)] {
+            if !p.is_finite() || !(0.0..1.0).contains(&p) {
+                return Err(format!("faults: {what} must be in [0, 1), got {p}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// True when any failure can fire. The scheduler only constructs a
+    /// fault rng stream when this holds, so `none` stays bit-free.
+    pub fn enabled(&self) -> bool {
+        self.dropout > 0.0 || self.crash_upload > 0.0
+    }
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig { dropout: 0.0, crash_upload: 0.0, retry_failed: false }
+    }
+}
+
+/// The virtual-time model: analytic per-client latencies for the
+/// discrete-event clock. Never consults the host wall clock, so simulated
+/// times are bit-deterministic and thread-count invariant by construction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimeModel {
+    /// Client uplink bandwidth (the cross-device bottleneck direction).
+    pub up_mbps: f64,
+    /// Server downlink bandwidth.
+    pub down_mbps: f64,
+    /// Compute throughput of a speed-1 device, in Gflop/s.
+    pub device_gflops: f64,
+    /// Device heterogeneity: per-client slowdown multipliers are drawn
+    /// log-uniformly from `[1, speed_spread]`, fixed per `(seed, cid)`.
+    /// 1 = homogeneous fleet.
+    pub speed_spread: f64,
+}
+
+impl TimeModel {
+    /// Range checks shared by the manifest validator.
+    pub fn validate(&self) -> Result<(), String> {
+        for (what, v) in [
+            ("up_mbps", self.up_mbps),
+            ("down_mbps", self.down_mbps),
+            ("device_gflops", self.device_gflops),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("time: {what} must be finite and > 0, got {v}"));
+            }
+        }
+        if !self.speed_spread.is_finite() || self.speed_spread < 1.0 {
+            return Err(format!(
+                "time: speed_spread must be finite and >= 1, got {}",
+                self.speed_spread
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for TimeModel {
+    fn default() -> TimeModel {
+        TimeModel { up_mbps: 10.0, down_mbps: 50.0, device_gflops: 1.0, speed_spread: 1.0 }
+    }
+}
+
+/// The scheduling model of one run: round policy × fault injection ×
+/// virtual-time model. The default (`sync`, no faults, homogeneous fleet)
+/// is the historical barrier loop, pinned bit-identical by
+/// `tests/sched_equivalence.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct SchedConfig {
+    pub policy: RoundPolicy,
+    pub faults: FaultConfig,
+    pub time: TimeModel,
+}
+
+impl SchedConfig {
+    /// Joint validity: per-block ranges.
+    pub fn validate(&self) -> Result<(), String> {
+        self.policy.validate()?;
+        self.faults.validate()?;
+        self.time.validate()
+    }
+
+    /// True when scheduling cannot change training bits: the full barrier
+    /// with fault injection off. (The time model alone never affects bits —
+    /// it only fills the simulated-clock report fields.)
+    pub fn is_sync_faultless(&self) -> bool {
+        self.policy == RoundPolicy::Sync && !self.faults.enabled()
+    }
+
+    /// Async folding mixes per-client snapshots across server versions,
+    /// which SCAFFOLD's control-variate step and FedDyn's server state both
+    /// reject — their `step_from_means` needs one coherent cohort.
+    pub fn check_optimizer(&self, opt: &Optimizer) -> Result<(), String> {
+        if matches!(self.policy, RoundPolicy::Async { .. })
+            && matches!(opt, Optimizer::Scaffold | Optimizer::FedDyn { .. })
+        {
+            return Err(format!(
+                "policy 'async' is incompatible with {} (its server step needs a coherent \
+                 participant cohort; use sync or deadline)",
+                opt.name()
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// One federated run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -315,6 +622,9 @@ pub struct RunConfig {
     /// (The old `quantize_upload: true` is exactly `WireConfig::fp16_up()`.)
     pub wire: WireConfig,
     pub sharing: Sharing,
+    /// Round policy × fault injection × virtual-time model. The default is
+    /// the historical synchronous barrier with no faults.
+    pub sched: SchedConfig,
     /// Evaluate the global model every `eval_every` rounds (0 = only final).
     pub eval_every: usize,
     pub seed: u64,
@@ -337,6 +647,7 @@ impl Default for RunConfig {
             optimizer: Optimizer::FedAvg,
             wire: WireConfig::default(),
             sharing: Sharing::Full,
+            sched: SchedConfig::default(),
             eval_every: 1,
             seed: 42,
             num_threads: 0,
@@ -564,6 +875,106 @@ mod tests {
         assert!(CodecSpec::parse("subsample_quant:0.5:300").is_err());
         assert!(CodecSpec::parse("subsample_quant:0.5:16:bogus").is_err());
         assert!(CodecSpec::parse("subsample_quant:0.5:16:nofb:extra").is_err());
+    }
+
+    #[test]
+    fn policy_parsing_round_trips() {
+        assert_eq!(RoundPolicy::parse("sync").unwrap(), RoundPolicy::Sync);
+        assert_eq!(
+            RoundPolicy::parse("deadline:30").unwrap(),
+            RoundPolicy::SyncDeadline { deadline_secs: 30.0, over_select: 1.0 }
+        );
+        assert_eq!(
+            RoundPolicy::parse("deadline:12.5:over=1.3").unwrap(),
+            RoundPolicy::SyncDeadline { deadline_secs: 12.5, over_select: 1.3 }
+        );
+        assert_eq!(
+            RoundPolicy::parse("async").unwrap(),
+            RoundPolicy::Async { buffer_k: 8, beta: 0.5, max_staleness: 4 }
+        );
+        assert_eq!(
+            RoundPolicy::parse("async:k=4:beta=0.25:max=2").unwrap(),
+            RoundPolicy::Async { buffer_k: 4, beta: 0.25, max_staleness: 2 }
+        );
+        assert_eq!(
+            RoundPolicy::parse("async:beta=1").unwrap(),
+            RoundPolicy::Async { buffer_k: 8, beta: 1.0, max_staleness: 4 }
+        );
+        for p in [
+            RoundPolicy::Sync,
+            RoundPolicy::SyncDeadline { deadline_secs: 7.5, over_select: 1.25 },
+            RoundPolicy::Async { buffer_k: 3, beta: 0.5, max_staleness: 6 },
+        ] {
+            assert_eq!(RoundPolicy::parse(&p.spec_string()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn policy_parsing_rejects_bad_specs() {
+        assert!(RoundPolicy::parse("barrier").is_err());
+        assert!(RoundPolicy::parse("deadline").is_err());
+        assert!(RoundPolicy::parse("deadline:0").is_err());
+        assert!(RoundPolicy::parse("deadline:-5").is_err());
+        assert!(RoundPolicy::parse("deadline:5:bogus").is_err());
+        assert!(RoundPolicy::parse("deadline:5:over=0.5").is_err());
+        assert!(RoundPolicy::parse("async:k=0").is_err());
+        assert!(RoundPolicy::parse("async:beta=-1").is_err());
+        assert!(RoundPolicy::parse("async:max=0").is_err());
+        assert!(RoundPolicy::parse("async:q=2").is_err());
+    }
+
+    #[test]
+    fn fault_parsing_round_trips() {
+        assert_eq!(FaultConfig::parse("none").unwrap(), FaultConfig::default());
+        assert_eq!(
+            FaultConfig::parse("dropout:0.1").unwrap(),
+            FaultConfig { dropout: 0.1, crash_upload: 0.0, retry_failed: false }
+        );
+        assert_eq!(
+            FaultConfig::parse("dropout:0.1,crash:0.05,retry").unwrap(),
+            FaultConfig { dropout: 0.1, crash_upload: 0.05, retry_failed: true }
+        );
+        for f in [
+            FaultConfig::default(),
+            FaultConfig { dropout: 0.2, crash_upload: 0.0, retry_failed: false },
+            FaultConfig { dropout: 0.0, crash_upload: 0.1, retry_failed: true },
+            FaultConfig { dropout: 0.0, crash_upload: 0.0, retry_failed: true },
+        ] {
+            assert_eq!(FaultConfig::parse(&f.spec_string()).unwrap(), f);
+        }
+        assert!(FaultConfig::parse("dropout:1.5").is_err());
+        assert!(FaultConfig::parse("crash:-0.1").is_err());
+        assert!(FaultConfig::parse("flaky:0.1").is_err());
+        assert!(!FaultConfig::default().enabled());
+        assert!(FaultConfig { dropout: 0.1, ..Default::default() }.enabled());
+    }
+
+    #[test]
+    fn sched_defaults_are_passthrough() {
+        let s = SchedConfig::default();
+        assert!(s.is_sync_faultless());
+        assert!(s.validate().is_ok());
+        let d = TimeModel { up_mbps: 10.0, down_mbps: 50.0, device_gflops: 1.0, speed_spread: 1.0 };
+        assert_eq!(s.time, d);
+        // A heterogeneous time model alone keeps the faultless-sync guarantee.
+        let mut het = s;
+        het.time.speed_spread = 100.0;
+        assert!(het.is_sync_faultless());
+        // Async is rejected for cohort-coupled server optimizers only.
+        let mut a = s;
+        a.policy = RoundPolicy::Async { buffer_k: 4, beta: 0.5, max_staleness: 4 };
+        assert!(a.check_optimizer(&Optimizer::FedAvg).is_ok());
+        assert!(a.check_optimizer(&Optimizer::FedAdam).is_ok());
+        assert!(a.check_optimizer(&Optimizer::Scaffold).is_err());
+        assert!(a.check_optimizer(&Optimizer::FedDyn { alpha: 0.1 }).is_err());
+        assert!(s.check_optimizer(&Optimizer::Scaffold).is_ok());
+        // Time-model range checks.
+        let mut bad = s;
+        bad.time.speed_spread = 0.5;
+        assert!(bad.validate().is_err());
+        bad = s;
+        bad.time.up_mbps = 0.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

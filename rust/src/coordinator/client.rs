@@ -39,6 +39,12 @@ pub struct ClientRecord {
     pub last_global: Option<[u8; 32]>,
     /// Rounds this client has participated in (diagnostics).
     pub participations: u32,
+    /// Server model version this client last trained against (async
+    /// scheduling's staleness anchor; 0 ⇒ never recorded).
+    pub last_version: u64,
+    /// True while an async upload from this client is buffered server-side
+    /// awaiting its fold turn — the sampler skips in-flight clients.
+    pub in_flight: bool,
 }
 
 impl ClientRecord {
@@ -74,6 +80,8 @@ mod tests {
             feedback: Some(vec![0.0; 6]),
             last_global: Some([0u8; 32]),
             participations: 3,
+            last_version: 2,
+            in_flight: true,
         };
         assert!(r.heap_bytes() >= (10 + 4 + 6) * 4);
     }

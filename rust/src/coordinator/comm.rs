@@ -140,13 +140,6 @@ impl Network {
         (bytes as f64 * 8.0) / (self.down_mbps * 1e6)
     }
 
-    /// Seconds to transfer `bytes` one way at the uplink rate. Retained
-    /// for the symmetric tables; asymmetric callers should say which
-    /// direction they mean via [`Network::up_secs`]/[`Network::down_secs`].
-    pub fn transfer_secs(&self, bytes: u64) -> f64 {
-        self.up_secs(bytes)
-    }
-
     /// Per-round communication time for one client: download + upload of
     /// `model_bytes` (the paper's `2·size/speed` on symmetric links).
     pub fn round_comm_secs(&self, model_bytes: u64) -> f64 {
@@ -346,13 +339,13 @@ mod tests {
             l.record_upload(per_round_up);
             l.record_download(per_round_down);
             l.end_round();
-            t_secs += net.transfer_secs(per_round_up + per_round_down);
+            t_secs += net.round_comm_secs_split(per_round_up, per_round_down);
         }
         assert_eq!(l.up_bytes, rounds * per_round_up);
         assert_eq!(l.down_bytes, rounds * per_round_down);
         assert_eq!(l.per_round.len(), rounds as usize);
         assert_eq!(l.per_round[77_777], (per_round_up, per_round_down));
-        let expected_t = rounds as f64 * net.transfer_secs(per_round_up + per_round_down);
+        let expected_t = rounds as f64 * net.round_comm_secs_split(per_round_up, per_round_down);
         assert!(
             (t_secs - expected_t).abs() / expected_t < 1e-9,
             "transfer-time accumulation drifted: {t_secs} vs {expected_t}"

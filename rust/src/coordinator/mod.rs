@@ -5,11 +5,13 @@ pub mod aggregate;
 pub mod client;
 pub mod comm;
 pub mod sampler;
+pub mod sched;
 pub mod server;
 pub mod store;
 pub mod wire;
 
 pub use comm::{CommLedger, Network};
+pub use sched::{EventQueue, Fate, RoundPlan, Scheduler};
 pub use wire::{WireCodec, WirePayload, FINGERPRINT_BYTES};
 pub use server::{eval_on, eval_on_ws, EvalScratch, Federation, RoundReport};
 pub use store::{ClientDataSource, ClientStore, ParamPolicy, RoundData};

@@ -35,17 +35,30 @@ impl Sampler {
         self.per_round
     }
 
+    pub fn population(&self) -> usize {
+        self.num_clients
+    }
+
     /// Sample the participant set for `round` (sorted for determinism of
     /// downstream iteration order).
     pub fn sample(&self, round: usize) -> Vec<usize> {
+        self.sample_n(round, self.per_round)
+    }
+
+    /// Sample `k` participants for `round` — the over-selection hook for
+    /// deadline scheduling. `sample_n(round, per_round())` is exactly the
+    /// historical `sample` draw (same child stream, same Fisher-Yates
+    /// sequence), so the default path stays bit-identical.
+    pub fn sample_n(&self, round: usize, k: usize) -> Vec<usize> {
+        let k = k.clamp(1, self.num_clients);
         // Full participation sorts to exactly 0..n whatever the draw —
         // skip the n rng draws (the per-round child rng is discarded, so
         // the output is identical).
-        if self.per_round == self.num_clients {
+        if k == self.num_clients {
             return (0..self.num_clients).collect();
         }
         let mut rng = self.root.child(round as u64);
-        let mut ids = rng.sample_indices(self.num_clients, self.per_round);
+        let mut ids = rng.sample_indices(self.num_clients, k);
         ids.sort_unstable();
         ids
     }
@@ -118,6 +131,25 @@ mod tests {
         let mut generic = rng.sample_indices(40, 40);
         generic.sort_unstable();
         assert_eq!(s.sample(5), generic);
+    }
+
+    #[test]
+    fn sample_n_extends_the_same_draw() {
+        // Over-selection shares the per-round stream: k = per_round is the
+        // historical draw, larger k is the same Fisher-Yates continued.
+        let s = Sampler::new(50, 0.2, 7);
+        for r in 0..5 {
+            assert_eq!(s.sample_n(r, s.per_round()), s.sample(r));
+            let over = s.sample_n(r, 15);
+            assert_eq!(over.len(), 15);
+            assert!(over.windows(2).all(|w| w[0] < w[1]));
+            for id in s.sample(r) {
+                assert!(over.contains(&id), "over-selection must contain the base draw");
+            }
+        }
+        // k clamps to the population (full fast path) and to at least 1.
+        assert_eq!(s.sample_n(0, 500), (0..50).collect::<Vec<_>>());
+        assert_eq!(s.sample_n(0, 0).len(), 1);
     }
 
     #[test]

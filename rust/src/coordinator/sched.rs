@@ -1,0 +1,608 @@
+//! Deterministic discrete-event scheduling for the round loop: virtual
+//! per-client latencies, fault injection, and the straggler-tolerant round
+//! policies (`sync` / `deadline` / `async`).
+//!
+//! # Virtual time
+//!
+//! The clock is *analytic*, never the host wall clock: a client's arrival
+//! time is `down_secs(billed download) + compute + up_secs(billed upload)`,
+//! where compute is the runtime's FLOP estimate divided by the device's
+//! throughput, scaled by a per-client slowdown multiplier drawn
+//! log-uniformly from `[1, speed_spread]` on a stream keyed by
+//! `(seed, cid)` alone. Nothing here consults threads or timers, so
+//! simulated times are bit-deterministic and thread-count invariant by
+//! construction. Events are totally ordered by `(time, seq)` — `seq` is a
+//! global arrival counter that breaks exact ties.
+//!
+//! # Determinism contract
+//!
+//! Client training RNG streams stay keyed by `(round, cid)` exactly as the
+//! barrier loop draws them; the scheduler derives its own *read-only*
+//! child streams (speed: `seed ^ SPEED_TAG`; faults: `seed ^ FAULT_TAG`,
+//! only when faults are enabled), so `RoundPolicy::Sync` with faults off
+//! is bit-identical to the historical path — pinned by
+//! `tests/sched_equivalence.rs`.
+
+use std::collections::HashMap;
+
+use crate::config::{RoundPolicy, SchedConfig};
+use crate::util::rng::Rng;
+
+use super::comm::Network;
+
+/// Stream tag for per-client device-speed multipliers.
+const SPEED_TAG: u64 = 0x5BEE_DD0C_5BEE_DD0C;
+/// Stream tag for per-(round, cid) fault draws.
+const FAULT_TAG: u64 = 0xFA17_0B0B_FA17_0B0B;
+
+/// One scheduled event; `seq` breaks exact time ties deterministically.
+#[derive(Clone, Debug)]
+pub struct Event<T> {
+    pub time: f64,
+    pub seq: u64,
+    pub payload: T,
+}
+
+/// A queue of events with a total, insertion-order-independent ordering:
+/// ascending `(time, seq)`, times compared by `total_cmp`.
+#[derive(Clone, Debug, Default)]
+pub struct EventQueue<T> {
+    events: Vec<Event<T>>,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue { events: Vec::new() }
+    }
+
+    pub fn push(&mut self, time: f64, seq: u64, payload: T) {
+        self.events.push(Event { time, seq, payload });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Consume the queue in event order.
+    pub fn drain_sorted(mut self) -> Vec<Event<T>> {
+        self.events
+            .sort_by(|a, b| a.time.total_cmp(&b.time).then(a.seq.cmp(&b.seq)));
+        self.events
+    }
+}
+
+/// What the fault model decreed for one sampled client this round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fate {
+    /// Trains and uploads normally.
+    Healthy,
+    /// Offline before training: download billed, nothing trained.
+    Dropout,
+    /// Crashes mid-upload: trains, bills `frac` of the upload, then dies —
+    /// the update never reaches the server.
+    CrashUpload { frac: f64 },
+}
+
+/// Per-fresh-job verdict from [`Scheduler::plan`], in job order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decision {
+    /// Fold into this round's aggregate (fresh arrivals have staleness 0,
+    /// so their discount is exactly 1).
+    Admit,
+    /// Async: the upload lands after this round's buffer filled — carry it
+    /// in the scheduler and fold it in a later round, discounted.
+    Defer,
+    /// Deadline: arrived too late; the update is discarded (and the client
+    /// optionally re-queued).
+    Straggle,
+}
+
+/// A carried update that this round's plan admitted: fold `upload` with
+/// the staleness-discounted `weight`.
+#[derive(Clone, Debug)]
+pub struct ReadyUpdate {
+    pub cid: usize,
+    pub upload: Vec<f32>,
+    pub weight: f64,
+}
+
+/// The plan for one round, computed *before* any job runs — admission
+/// depends only on arrival times, so the expensive fold stays streaming.
+#[derive(Clone, Debug, Default)]
+pub struct RoundPlan {
+    /// Verdict per fresh job, same order as the `arrivals` slice.
+    pub decisions: Vec<Decision>,
+    /// Buffered updates from earlier rounds whose turn has come, in
+    /// deterministic `(finish time, seq)` order, weights pre-discounted.
+    pub ready: Vec<ReadyUpdate>,
+    /// Clients whose buffered updates exceeded the staleness bound and
+    /// were discarded this round.
+    pub dropped_cids: Vec<usize>,
+    /// Fresh jobs that missed the deadline.
+    pub stragglers: usize,
+    /// Simulated seconds this round occupies on the event clock.
+    pub round_secs: f64,
+}
+
+/// An upload buffered across rounds (async policy).
+#[derive(Clone, Debug)]
+struct Buffered {
+    cid: usize,
+    seq: u64,
+    /// Absolute virtual arrival time.
+    finish_abs: f64,
+    /// Server version the client trained against.
+    snapshot_version: u64,
+    upload: Vec<f32>,
+    weight: f64,
+}
+
+/// Defer bookkeeping between `plan` and the fold delivering the outcome.
+#[derive(Clone, Copy, Debug)]
+struct DeferSlot {
+    seq: u64,
+    finish_abs: f64,
+    snapshot_version: u64,
+}
+
+/// The event-driven round scheduler. Owns the virtual clock, the server
+/// version counter, the cross-round upload buffer, and the retry queue.
+#[derive(Debug)]
+pub struct Scheduler {
+    cfg: SchedConfig,
+    net: Network,
+    seed: u64,
+    /// Absolute virtual time at the start of the current round.
+    clock: f64,
+    /// Server model version: increments once per applied aggregation.
+    version: u64,
+    /// Global arrival sequence counter (ties on the event clock).
+    seq: u64,
+    /// Async: uploads that arrived after their round's buffer filled.
+    buffer: Vec<Buffered>,
+    /// Plan-time metadata for this round's deferred jobs, keyed by cid.
+    planned_defers: HashMap<usize, DeferSlot>,
+    /// Clients queued for re-selection next round (`faults.retry_failed`).
+    retry: Vec<usize>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedConfig, seed: u64) -> Scheduler {
+        let net = Network::asymmetric(cfg.time.up_mbps, cfg.time.down_mbps);
+        Scheduler {
+            cfg,
+            net,
+            seed,
+            clock: 0.0,
+            version: 0,
+            seq: 0,
+            buffer: Vec::new(),
+            planned_defers: HashMap::new(),
+            retry: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> RoundPolicy {
+        self.cfg.policy
+    }
+
+    /// Absolute virtual time at the start of the current round.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Current server model version.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Per-client device slowdown in `[1, speed_spread]`, log-uniform and
+    /// fixed for the whole run — a device class, not per-round jitter.
+    pub fn speed_mult(&self, cid: usize) -> f64 {
+        let spread = self.cfg.time.speed_spread;
+        if spread <= 1.0 {
+            return 1.0;
+        }
+        let u = Rng::new(self.seed ^ SPEED_TAG).child(cid as u64).f64();
+        (spread.ln() * u).exp()
+    }
+
+    /// Simulated seconds from broadcast to upload landing for one client.
+    pub fn arrival_secs(&self, cid: usize, down_bytes: u64, up_bytes: u64, comp_secs: f64) -> f64 {
+        self.net.down_secs(down_bytes)
+            + comp_secs * self.speed_mult(cid)
+            + self.net.up_secs(up_bytes)
+    }
+
+    /// Draw this client's fate for the round. With faults disabled no rng
+    /// stream is even constructed, so `none` can never perturb a run.
+    pub fn fate(&self, round: usize, cid: usize) -> Fate {
+        let f = self.cfg.faults;
+        if !f.enabled() {
+            return Fate::Healthy;
+        }
+        let mut rng =
+            Rng::new(self.seed ^ FAULT_TAG).child(((round as u64) << 32) | cid as u64);
+        if rng.f64() < f.dropout {
+            return Fate::Dropout;
+        }
+        if rng.f64() < f.crash_upload {
+            return Fate::CrashUpload { frac: rng.f64() };
+        }
+        Fate::Healthy
+    }
+
+    /// Queue a failed/straggling client for next round, if retries are on.
+    pub fn note_failure(&mut self, cid: usize) {
+        if self.cfg.faults.retry_failed {
+            self.retry.push(cid);
+        }
+    }
+
+    /// Drain the retry queue (sorted, deduplicated).
+    pub fn take_retries(&mut self) -> Vec<usize> {
+        let mut r = std::mem::take(&mut self.retry);
+        r.sort_unstable();
+        r.dedup();
+        r
+    }
+
+    /// Decide the round before any job runs: which fresh arrivals fold now,
+    /// which buffered updates' turn has come, and how long the round takes
+    /// on the virtual clock. `arrivals` is `(cid, relative seconds)` in job
+    /// order for this round's healthy participants.
+    pub fn plan(&mut self, arrivals: &[(usize, f64)]) -> RoundPlan {
+        self.planned_defers.clear();
+        match self.cfg.policy {
+            RoundPolicy::Sync => {
+                let round_secs = arrivals.iter().map(|&(_, t)| t).fold(0.0f64, f64::max);
+                self.seq += arrivals.len() as u64;
+                RoundPlan {
+                    decisions: vec![Decision::Admit; arrivals.len()],
+                    round_secs,
+                    ..Default::default()
+                }
+            }
+            RoundPolicy::SyncDeadline { deadline_secs, .. } => {
+                let mut decisions = Vec::with_capacity(arrivals.len());
+                let mut stragglers = 0;
+                let mut latest_admitted = 0.0f64;
+                for &(_, t) in arrivals {
+                    if t <= deadline_secs {
+                        decisions.push(Decision::Admit);
+                        latest_admitted = latest_admitted.max(t);
+                    } else {
+                        decisions.push(Decision::Straggle);
+                        stragglers += 1;
+                    }
+                }
+                self.seq += arrivals.len() as u64;
+                // The barrier lifts when the last admitted client lands —
+                // or at the deadline itself if anyone had to be cut off.
+                let round_secs = if stragglers > 0 { deadline_secs } else { latest_admitted };
+                RoundPlan { decisions, stragglers, round_secs, ..Default::default() }
+            }
+            RoundPolicy::Async { buffer_k, beta, max_staleness } => {
+                self.plan_async(arrivals, buffer_k, beta, max_staleness)
+            }
+        }
+    }
+
+    /// FedBuff-style admission: merge the carried buffer with this round's
+    /// fresh arrivals on the event clock, drop over-stale carries, admit
+    /// the first `buffer_k` events, and defer the rest.
+    fn plan_async(
+        &mut self,
+        arrivals: &[(usize, f64)],
+        buffer_k: usize,
+        beta: f64,
+        max_staleness: usize,
+    ) -> RoundPlan {
+        #[derive(Clone, Copy)]
+        enum Src {
+            Carried(usize),
+            Fresh(usize),
+        }
+
+        // Over-stale carries are discarded before admission.
+        let mut dropped_cids = Vec::new();
+        let carried = std::mem::take(&mut self.buffer);
+        let mut live = Vec::with_capacity(carried.len());
+        for b in carried {
+            if (self.version - b.snapshot_version) as usize > max_staleness {
+                dropped_cids.push(b.cid);
+                let cid = b.cid;
+                self.note_failure(cid);
+            } else {
+                live.push(b);
+            }
+        }
+
+        let mut q = EventQueue::new();
+        for (i, b) in live.iter().enumerate() {
+            q.push(b.finish_abs, b.seq, Src::Carried(i));
+        }
+        let seq_base = self.seq;
+        for (i, &(_, t)) in arrivals.iter().enumerate() {
+            q.push(self.clock + t, seq_base + i as u64, Src::Fresh(i));
+        }
+        self.seq += arrivals.len() as u64;
+
+        let mut decisions = vec![Decision::Defer; arrivals.len()];
+        let mut ready = Vec::new();
+        let mut carried_deferred: Vec<bool> = vec![false; live.len()];
+        let mut round_end = self.clock;
+        for (admitted, ev) in q.drain_sorted().into_iter().enumerate() {
+            if admitted < buffer_k {
+                round_end = round_end.max(ev.time);
+                match ev.payload {
+                    Src::Carried(i) => {
+                        let b = &live[i];
+                        let staleness = (self.version - b.snapshot_version) as f64;
+                        let discount = 1.0 / (1.0 + staleness).powf(beta);
+                        ready.push(ReadyUpdate {
+                            cid: b.cid,
+                            upload: b.upload.clone(),
+                            weight: b.weight * discount,
+                        });
+                    }
+                    Src::Fresh(i) => decisions[i] = Decision::Admit,
+                }
+            } else {
+                match ev.payload {
+                    Src::Carried(i) => carried_deferred[i] = true,
+                    Src::Fresh(i) => {
+                        self.planned_defers.insert(
+                            arrivals[i].0,
+                            DeferSlot {
+                                seq: ev.seq,
+                                finish_abs: ev.time,
+                                snapshot_version: self.version,
+                            },
+                        );
+                        debug_assert_eq!(decisions[i], Decision::Defer);
+                    }
+                }
+            }
+        }
+        // Carries that didn't make this buffer stay carried.
+        for (i, b) in live.into_iter().enumerate() {
+            if carried_deferred[i] {
+                self.buffer.push(b);
+            }
+        }
+        RoundPlan {
+            decisions,
+            ready,
+            dropped_cids,
+            stragglers: 0,
+            round_secs: round_end - self.clock,
+        }
+    }
+
+    /// Hand a deferred fresh outcome to the cross-round buffer. Must match
+    /// a `Decision::Defer` from this round's plan.
+    pub fn buffer_upload(&mut self, cid: usize, upload: Vec<f32>, weight: f64) {
+        let slot = self
+            .planned_defers
+            .remove(&cid)
+            .expect("buffer_upload without a planned defer");
+        self.buffer.push(Buffered {
+            cid,
+            seq: slot.seq,
+            finish_abs: slot.finish_abs,
+            snapshot_version: slot.snapshot_version,
+            upload,
+            weight,
+        });
+    }
+
+    /// Number of uploads currently carried across rounds.
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Advance the clock past the round; bump the server version iff an
+    /// aggregate was applied.
+    pub fn end_round(&mut self, aggregated: bool, round_secs: f64) {
+        self.clock += round_secs;
+        if aggregated {
+            self.version += 1;
+        }
+        self.planned_defers.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FaultConfig, TimeModel};
+
+    fn sched(policy: RoundPolicy, faults: FaultConfig, spread: f64, seed: u64) -> Scheduler {
+        let cfg = SchedConfig {
+            policy,
+            faults,
+            time: TimeModel { speed_spread: spread, ..Default::default() },
+        };
+        Scheduler::new(cfg, seed)
+    }
+
+    #[test]
+    fn event_queue_order_is_insertion_invariant() {
+        let evs = [(3.0, 7u64, 'a'), (1.0, 2, 'b'), (2.0, 5, 'c'), (1.0, 1, 'd')];
+        let mut fwd = EventQueue::new();
+        for &(t, s, p) in &evs {
+            fwd.push(t, s, p);
+        }
+        let mut rev = EventQueue::new();
+        for &(t, s, p) in evs.iter().rev() {
+            rev.push(t, s, p);
+        }
+        let a: Vec<char> = fwd.drain_sorted().into_iter().map(|e| e.payload).collect();
+        let b: Vec<char> = rev.drain_sorted().into_iter().map(|e| e.payload).collect();
+        assert_eq!(a, b);
+        assert_eq!(a, vec!['d', 'b', 'c', 'a'], "time first, then seq");
+    }
+
+    #[test]
+    fn event_queue_breaks_exact_ties_by_seq() {
+        let mut q = EventQueue::new();
+        q.push(5.0, 9, "late");
+        q.push(5.0, 3, "early");
+        q.push(5.0, 6, "mid");
+        let order: Vec<&str> = q.drain_sorted().into_iter().map(|e| e.payload).collect();
+        assert_eq!(order, vec!["early", "mid", "late"]);
+    }
+
+    #[test]
+    fn speed_multipliers_are_deterministic_and_bounded() {
+        let s = sched(RoundPolicy::Sync, FaultConfig::default(), 100.0, 42);
+        let t = sched(RoundPolicy::Sync, FaultConfig::default(), 100.0, 42);
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for cid in 0..256 {
+            let m = s.speed_mult(cid);
+            assert_eq!(m.to_bits(), t.speed_mult(cid).to_bits(), "cid {cid}");
+            assert!((1.0..=100.0).contains(&m), "cid {cid}: {m}");
+            lo = lo.min(m);
+            hi = hi.max(m);
+        }
+        assert!(hi / lo > 10.0, "spread 100 fleet should span >10x, got {}", hi / lo);
+        // Homogeneous fleet: exactly 1, no rng drawn.
+        let h = sched(RoundPolicy::Sync, FaultConfig::default(), 1.0, 42);
+        assert_eq!(h.speed_mult(0), 1.0);
+        assert_eq!(h.speed_mult(123), 1.0);
+    }
+
+    #[test]
+    fn fates_are_deterministic_and_respect_rates() {
+        let faults = FaultConfig { dropout: 0.2, crash_upload: 0.1, retry_failed: false };
+        let s = sched(RoundPolicy::Sync, faults, 1.0, 7);
+        let t = sched(RoundPolicy::Sync, faults, 1.0, 7);
+        let mut drops = 0;
+        let mut crashes = 0;
+        let n = 4000usize;
+        for i in 0..n {
+            let (round, cid) = (i / 100, i % 100);
+            let f = s.fate(round, cid);
+            assert_eq!(f, t.fate(round, cid));
+            match f {
+                Fate::Dropout => drops += 1,
+                Fate::CrashUpload { frac } => {
+                    assert!((0.0..1.0).contains(&frac));
+                    crashes += 1;
+                }
+                Fate::Healthy => {}
+            }
+        }
+        let drop_rate = drops as f64 / n as f64;
+        assert!((drop_rate - 0.2).abs() < 0.04, "drop rate {drop_rate}");
+        assert!(crashes > 0);
+        // Faults off: always healthy.
+        let off = sched(RoundPolicy::Sync, FaultConfig::default(), 1.0, 7);
+        assert_eq!(off.fate(3, 5), Fate::Healthy);
+    }
+
+    #[test]
+    fn sync_plan_admits_all_and_waits_for_the_slowest() {
+        let mut s = sched(RoundPolicy::Sync, FaultConfig::default(), 1.0, 1);
+        let plan = s.plan(&[(0, 4.0), (1, 9.5), (2, 1.0)]);
+        assert_eq!(plan.decisions, vec![Decision::Admit; 3]);
+        assert_eq!(plan.round_secs, 9.5);
+        assert_eq!(plan.stragglers, 0);
+        assert!(plan.ready.is_empty());
+        // Zero arrivals degrade to a zero-length round.
+        assert_eq!(s.plan(&[]).round_secs, 0.0);
+    }
+
+    #[test]
+    fn deadline_plan_cuts_stragglers_and_degrades_gracefully() {
+        let policy = RoundPolicy::SyncDeadline { deadline_secs: 5.0, over_select: 1.0 };
+        let mut s = sched(policy, FaultConfig::default(), 1.0, 1);
+        let plan = s.plan(&[(0, 2.0), (1, 8.0), (2, 4.0)]);
+        assert_eq!(
+            plan.decisions,
+            vec![Decision::Admit, Decision::Straggle, Decision::Admit]
+        );
+        assert_eq!(plan.stragglers, 1);
+        assert_eq!(plan.round_secs, 5.0, "cut-off rounds bill the full deadline");
+        // All on time: the round ends when the last admitted lands.
+        let early = s.plan(&[(0, 2.0), (1, 3.0)]);
+        assert_eq!(early.round_secs, 3.0);
+        // Nobody on time: zero admissions, still no panic, deadline billed.
+        let none = s.plan(&[(0, 6.0), (1, 7.0)]);
+        assert_eq!(none.decisions, vec![Decision::Straggle; 2]);
+        assert_eq!(none.round_secs, 5.0);
+    }
+
+    #[test]
+    fn async_plan_buffers_first_k_and_discounts_carries() {
+        let policy = RoundPolicy::Async { buffer_k: 2, beta: 1.0, max_staleness: 10 };
+        let mut s = sched(policy, FaultConfig::default(), 1.0, 1);
+        // Round 0: three arrivals, K = 2 → fastest two admitted, slowest deferred.
+        let plan = s.plan(&[(0, 4.0), (1, 1.0), (2, 2.0)]);
+        assert_eq!(
+            plan.decisions,
+            vec![Decision::Defer, Decision::Admit, Decision::Admit]
+        );
+        assert_eq!(plan.round_secs, 2.0, "round ends at the K-th arrival");
+        s.buffer_upload(0, vec![1.0, 1.0], 10.0);
+        assert_eq!(s.buffered(), 1);
+        s.end_round(true, plan.round_secs);
+        assert_eq!(s.version(), 1);
+        // Round 1: the carried upload (staleness 1) is first in line.
+        let plan = s.plan(&[(3, 5.0)]);
+        assert_eq!(plan.ready.len(), 1);
+        assert_eq!(plan.ready[0].cid, 0);
+        assert!((plan.ready[0].weight - 5.0).abs() < 1e-12, "10 * 1/(1+1)^1");
+        assert_eq!(plan.decisions, vec![Decision::Admit]);
+        assert_eq!(s.buffered(), 0);
+    }
+
+    #[test]
+    fn async_k1_admits_only_the_earliest_event() {
+        let policy = RoundPolicy::Async { buffer_k: 1, beta: 0.5, max_staleness: 10 };
+        let mut s = sched(policy, FaultConfig::default(), 1.0, 1);
+        let plan = s.plan(&[(0, 3.0), (1, 1.5)]);
+        assert_eq!(plan.decisions, vec![Decision::Defer, Decision::Admit]);
+        assert_eq!(plan.round_secs, 1.5);
+        s.buffer_upload(0, vec![2.0], 1.0);
+        s.end_round(true, plan.round_secs);
+        // The carried upload beats a slow fresh client next round.
+        let plan = s.plan(&[(2, 50.0)]);
+        assert_eq!(plan.ready.len(), 1);
+        assert_eq!(plan.decisions, vec![Decision::Defer]);
+    }
+
+    #[test]
+    fn async_drops_over_stale_carries() {
+        let policy = RoundPolicy::Async { buffer_k: 1, beta: 0.5, max_staleness: 1 };
+        let faults = FaultConfig { retry_failed: true, ..Default::default() };
+        let mut s = sched(policy, faults, 1.0, 1);
+        let plan = s.plan(&[(7, 10.0), (8, 1.0)]);
+        assert_eq!(plan.decisions, vec![Decision::Defer, Decision::Admit]);
+        s.buffer_upload(7, vec![1.0], 1.0);
+        s.end_round(true, plan.round_secs);
+        // Two more aggregates land before cid 7's turn → staleness 2 > max 1.
+        let plan = s.plan(&[(9, 0.5)]);
+        assert_eq!(plan.dropped_cids, Vec::<usize>::new());
+        s.end_round(true, plan.round_secs);
+        let plan = s.plan(&[(10, 0.1)]);
+        assert_eq!(plan.dropped_cids, vec![7]);
+        assert_eq!(s.buffered(), 0);
+        assert_eq!(s.take_retries(), vec![7], "dropped carries re-queue under retry");
+    }
+
+    #[test]
+    fn arrival_times_compose_transfer_and_compute() {
+        let s = sched(RoundPolicy::Sync, FaultConfig::default(), 1.0, 1);
+        // Defaults: 10 Mbps up, 50 Mbps down, 1 Gflop/s, homogeneous.
+        let t = s.arrival_secs(0, 1_000_000, 1_000_000, 2.0);
+        let expected = (1e6 * 8.0) / 50e6 + 2.0 + (1e6 * 8.0) / 10e6;
+        assert!((t - expected).abs() < 1e-12, "{t} vs {expected}");
+    }
+}

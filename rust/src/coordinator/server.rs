@@ -35,9 +35,10 @@ use anyhow::{anyhow, Result};
 use super::aggregate::{self, AdamState, FedDynState, ScaffoldState, WeightedAccumulator};
 use super::comm::{CommDelta, CommLedger};
 use super::sampler::Sampler;
+use super::sched::{Decision, Fate, Scheduler};
 use super::store::{ClientDataSource, ClientStore, RoundData};
 use super::wire::{self, Downlink, WireCodec, FINGERPRINT_BYTES};
-use crate::config::{Optimizer, RunConfig, Sharing};
+use crate::config::{Optimizer, RoundPolicy, RunConfig, Sharing};
 use crate::data::{assemble_batches_into, BatchStack, Dataset};
 use crate::parameterization::{Layout, SegmentKind};
 use crate::runtime::{Engine, EvalOutput, ModelRuntime, Workspace};
@@ -60,6 +61,14 @@ pub struct RoundReport {
     pub test_loss: Option<f64>,
     /// Measured local-compute wall time this round (seconds).
     pub t_comp_secs: f64,
+    /// Simulated seconds this round occupied on the scheduler's virtual
+    /// event clock (analytic — thread-count invariant, never host time).
+    pub t_sim_secs: f64,
+    /// Sampled clients that trained but missed the aggregation deadline.
+    pub stragglers: usize,
+    /// Sampled clients lost to fault injection (dropout/crash) plus async
+    /// buffered updates discarded as over-stale.
+    pub dropped: usize,
 }
 
 /// Server-side optimizer state.
@@ -85,6 +94,9 @@ pub struct Federation {
     opt: ServerOpt,
     pub comm: CommLedger,
     sampler: Sampler,
+    /// Virtual-time round scheduler: fault fates, arrival times, and the
+    /// policy's admission plan (sync barrier / deadline cut / async buffer).
+    sched: Scheduler,
     root_rng: Rng,
     /// Uplink wire codec (shared by every job; stateless — per-client
     /// error-feedback accumulators live in the store).
@@ -386,6 +398,8 @@ impl Federation {
             ));
         }
         cfg.wire.validate().map_err(|e| anyhow!("invalid wire config: {e}"))?;
+        cfg.sched.validate().map_err(|e| anyhow!("invalid sched config: {e}"))?;
+        cfg.sched.check_optimizer(&cfg.optimizer).map_err(|e| anyhow!("{e}"))?;
         let up_codec = wire::codec_for(&cfg.wire.up);
         let downlink = Downlink::new(&cfg.wire.down, cfg.wire.fingerprint_downloads, cfg.seed);
         let mut root_rng = Rng::new(cfg.seed);
@@ -432,6 +446,7 @@ impl Federation {
         // row-blocked GEMMs.
         let mut eval_ws = EvalScratch::new(&rt);
         eval_ws.set_pool(Some(Arc::clone(&pool)));
+        let sched = Scheduler::new(cfg.sched, cfg.seed);
         Ok(Federation {
             cfg,
             rt,
@@ -442,6 +457,7 @@ impl Federation {
             opt,
             comm: CommLedger::new(),
             sampler,
+            sched,
             root_rng,
             up_codec,
             downlink,
@@ -484,10 +500,37 @@ impl Federation {
         (self.cfg.lr as f64 * self.cfg.lr_decay.powi(self.round as i32)) as f32
     }
 
+    /// This round's cohort under the scheduler's policy. `Sync` is the
+    /// historical sampler draw, bit for bit. `SyncDeadline` over-selects
+    /// (Bonawitz et al. 2019) so deadline losses don't starve the round.
+    /// `Async` draws normally but skips clients whose previous upload is
+    /// still buffered server-side. Failed clients from earlier rounds are
+    /// merged back in when the fault model retries them.
+    fn select_participants(&mut self) -> Vec<usize> {
+        let mut ids = match self.sched.policy() {
+            RoundPolicy::Sync | RoundPolicy::Async { .. } => self.sampler.sample(self.round),
+            RoundPolicy::SyncDeadline { over_select, .. } => {
+                let k = (self.sampler.per_round() as f64 * over_select).ceil() as usize;
+                self.sampler.sample_n(self.round, k)
+            }
+        };
+        let retries = self.sched.take_retries();
+        if !retries.is_empty() {
+            ids.extend(retries);
+            ids.sort_unstable();
+            ids.dedup();
+        }
+        if matches!(self.sched.policy(), RoundPolicy::Async { .. }) {
+            let store = &self.store;
+            ids.retain(|&cid| !store.in_flight(cid));
+        }
+        ids
+    }
+
     /// Run one federated round.
     pub fn run_round(&mut self) -> Result<RoundReport> {
         let lr = self.current_lr();
-        let participants = self.sampler.sample(self.round);
+        let participants = self.select_participants();
         let local_only = matches!(self.cfg.sharing, Sharing::LocalOnly);
         // The raw global feeds the FedAdam server step below; what clients
         // download is the *wire* global — encoded once per round by the
@@ -522,9 +565,33 @@ impl Federation {
         // dropped when the job folds) and the parameter snapshot
         // (reconstructed from the shared init + the client's sparse
         // record). Round cost is O(participants), never O(population).
+        //
+        // Virtual time is analytic: nominal compute seconds come from the
+        // runtime's flops estimate (×local epochs, ÷device gflops), scaled
+        // per client by the scheduler's deterministic speed multiplier;
+        // transfer seconds come from billed bytes over the asymmetric
+        // link. No wall clock is ever consulted, so simulated time is
+        // thread-count invariant by construction. Upload bytes are the
+        // codec's billed size for the wire lengths this round will send —
+        // a pure function of length, so it is known before any job runs.
+        let analytic_up_bytes: u64 = if local_only {
+            0
+        } else {
+            self.up_codec.billed_bytes(self.layout.global_len())
+                + c_global
+                    .as_ref()
+                    .map(|c| self.up_codec.billed_bytes(c.len()))
+                    .unwrap_or(0)
+        };
+        let comp_secs = self.rt.train_flops_estimate().unwrap_or(1e7)
+            * self.cfg.local_epochs as f64
+            / (self.cfg.sched.time.device_gflops * 1e9);
         let mut jobs: Vec<LocalTrainJob> = Vec::with_capacity(participants.len());
+        let mut arrivals: Vec<(usize, f64)> = Vec::with_capacity(participants.len());
+        let mut fault_losses = 0usize;
         for &cid in &participants {
             let mut comm = CommDelta::default();
+            let mut down_billed = 0u64;
             if !local_only {
                 // Fingerprint-cached redelivery: a client whose last
                 // received wire global is bit-identical to this round's
@@ -533,12 +600,40 @@ impl Federation {
                 // are invariant under fingerprinting.
                 let cached = wire_hash.is_some()
                     && self.store.last_global_hash(cid) == wire_hash;
-                comm.record_download(if cached { FINGERPRINT_BYTES } else { down_model_bytes });
+                let model_down = if cached { FINGERPRINT_BYTES } else { down_model_bytes };
+                comm.record_download(model_down);
+                down_billed += model_down;
                 if matches!(self.cfg.optimizer, Optimizer::Scaffold) {
                     // Server control variate rides along with the model.
                     comm.record_download(c_global_bytes);
+                    down_billed += c_global_bytes;
                 }
             }
+            match self.sched.fate(self.round, cid) {
+                Fate::Healthy => {}
+                Fate::Dropout => {
+                    // The broadcast went out before the device vanished:
+                    // the download is billed, nothing trains, no upload.
+                    self.comm.apply(comm);
+                    self.sched.note_failure(cid);
+                    fault_losses += 1;
+                    continue;
+                }
+                Fate::CrashUpload { frac } => {
+                    // Device trained, started uploading, died partway:
+                    // bill the download plus the partial upload; the
+                    // update never reaches the aggregator.
+                    comm.record_upload((analytic_up_bytes as f64 * frac) as u64);
+                    self.comm.apply(comm);
+                    self.sched.note_failure(cid);
+                    fault_losses += 1;
+                    continue;
+                }
+            }
+            arrivals.push((
+                cid,
+                self.sched.arrival_secs(cid, down_billed, analytic_up_bytes, comp_secs),
+            ));
             let opt = match &self.cfg.optimizer {
                 Optimizer::FedAvg | Optimizer::FedAdam => JobOpt::Plain,
                 Optimizer::FedProx { mu } => JobOpt::Prox { mu: *mu },
@@ -582,6 +677,22 @@ impl Federation {
             });
         }
 
+        // ---- plan the round on the virtual clock --------------------------
+        // Admission is a pure function of the analytic arrival times, so
+        // the whole plan (who is admitted, deferred, or cut) exists before
+        // any job executes — the fold below stays one O(dim) streaming
+        // pass. Under the default sync/faultless config the plan admits
+        // everyone and the round is bit-identical to the pre-scheduler
+        // path.
+        let plan = self.sched.plan(&arrivals);
+        for r in &plan.ready {
+            self.store.set_in_flight(r.cid, false);
+        }
+        for &cid in &plan.dropped_cids {
+            self.store.set_in_flight(cid, false);
+        }
+        let version_now = self.sched.version();
+
         // ---- run on the pool, reduce in participant order -----------------
         let needs_full = matches!(
             self.cfg.optimizer,
@@ -593,6 +704,15 @@ impl Federation {
         // SCAFFOLD folds model/control deltas; FedDyn folds full models.
         let mut acc_a = WeightedAccumulator::new(if needs_full { param_count } else { 0 });
         let mut acc_b = WeightedAccumulator::new(if needs_full { param_count } else { 0 });
+        // Carried async uploads admitted this round fold first, in their
+        // deterministic (arrival, seq) order, weights already discounted
+        // by staleness. Their training loss was counted the round they
+        // trained. (Async is restricted to mean-style optimizers, so the
+        // plain accumulator is always the right sink.)
+        let mut admitted = plan.ready.len();
+        for r in &plan.ready {
+            acc_upload.push(&r.upload, r.weight);
+        }
         let mut loss_acc = 0.0f64;
         let mut first_err: Option<anyhow::Error> = None;
         let t_comp_start = Instant::now();
@@ -602,23 +722,22 @@ impl Federation {
             let server_params = &self.server_params;
             let optimizer = self.cfg.optimizer;
             let scratch_pool = &mut self.scratch_pool;
-            self.pool.scope_fold(
+            let sched = &mut self.sched;
+            let decisions = &plan.decisions;
+            self.pool.scope_fold_cancel(
                 jobs,
                 LocalTrainJob::run,
-                |_, outcome: Result<LocalTrainOutcome>| {
-                    // After a failure, later outcomes are discarded so the
-                    // committed state is a clean participant-order prefix —
-                    // the same shape a sequential loop leaves on early
-                    // return. (Jobs already in flight still finish; the
-                    // pool has no cancellation.)
-                    let out = match (outcome, first_err.is_some()) {
-                        (Ok(o), false) => o,
-                        (Ok(_), true) => return,
-                        (Err(e), prior) => {
-                            if !prior {
-                                first_err = Some(e);
-                            }
-                            return;
+                |idx, outcome: Result<LocalTrainOutcome>| {
+                    // A failure flips the pool's cancel flag: queued jobs
+                    // are skipped, in-flight jobs drain with their results
+                    // discarded, and the committed state is a clean
+                    // participant-order prefix — the same shape a
+                    // sequential loop leaves on early return.
+                    let out = match outcome {
+                        Ok(o) => o,
+                        Err(e) => {
+                            first_err = Some(e);
+                            return false;
                         }
                     };
                     scratch_pool.push(out.scratch);
@@ -636,9 +755,30 @@ impl Federation {
                         out.feedback,
                         wire_hash,
                     );
-                    if local_only {
-                        return;
+                    match decisions[idx] {
+                        Decision::Admit => {}
+                        Decision::Straggle => {
+                            // Finished after the deadline: the client did
+                            // train (state committed above) but the upload
+                            // is discarded; the fault model may retry it.
+                            sched.note_failure(out.cid);
+                            return true;
+                        }
+                        Decision::Defer => {
+                            // Async, beyond the first K arrivals: the
+                            // upload waits in the server buffer for a
+                            // later round's fold, discounted by staleness
+                            // when it finally lands.
+                            store.set_in_flight(out.cid, true);
+                            store.set_last_version(out.cid, version_now);
+                            sched.buffer_upload(out.cid, out.upload, out.weight);
+                            return true;
+                        }
                     }
+                    if local_only {
+                        return true;
+                    }
+                    admitted += 1;
                     match optimizer {
                         Optimizer::Scaffold => {
                             // Stream Δθ = (wire model) − θ and Δc, reusing
@@ -654,6 +794,7 @@ impl Federation {
                         _ => acc_upload.push(&out.upload, out.weight),
                     }
                     // The upload drops here — aggregation stays O(dim).
+                    true
                 },
             );
         }
@@ -663,7 +804,11 @@ impl Federation {
         }
 
         // ---- aggregation --------------------------------------------------
-        if !local_only {
+        // With faults or a deadline in play a round can end with nothing
+        // admitted; the server then holds its model (and version) and the
+        // round degrades to a no-op instead of dividing by zero.
+        let aggregated = !local_only && admitted > 0;
+        if aggregated {
             let new_global = match &mut self.opt {
                 ServerOpt::Plain => acc_upload.mean(),
                 ServerOpt::Adam(adam) => adam.step(&server_global, &acc_upload.mean()),
@@ -672,7 +817,7 @@ impl Federation {
                         &self.server_params,
                         &acc_a.mean(),
                         &acc_b.mean(),
-                        participants.len(),
+                        admitted,
                     );
                     self.server_params = new_full;
                     self.layout.gather_global(&self.server_params)
@@ -681,7 +826,7 @@ impl Federation {
                     let new_full = fd.step_from_mean(
                         &self.server_params,
                         acc_a.mean(),
-                        participants.len(),
+                        admitted,
                     );
                     self.server_params = new_full;
                     self.layout.gather_global(&self.server_params)
@@ -690,6 +835,7 @@ impl Federation {
             self.layout.scatter_global(&mut self.server_params, &new_global);
         }
         self.comm.end_round();
+        self.sched.end_round(aggregated, plan.round_secs);
 
         // ---- report -------------------------------------------------------
         let evaluate = self.cfg.eval_every > 0 && (self.round + 1) % self.cfg.eval_every == 0;
@@ -713,6 +859,9 @@ impl Federation {
             test_acc,
             test_loss,
             t_comp_secs: t_comp,
+            t_sim_secs: plan.round_secs,
+            stragglers: plan.stragglers,
+            dropped: fault_losses + plan.dropped_cids.len(),
         };
         self.round += 1;
         self.reports.push(report.clone());
@@ -876,6 +1025,7 @@ mod tests {
             optimizer: Optimizer::FedAvg,
             wire: Default::default(),
             sharing: Sharing::GlobalSegments,
+            sched: Default::default(),
             eval_every: 0,
             seed: 9,
             num_threads: 1,

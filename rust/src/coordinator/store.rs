@@ -301,6 +301,24 @@ impl ClientStore {
         self.record(cid).map(|r| r.participations).unwrap_or(0)
     }
 
+    /// True while an async upload from `cid` is buffered server-side.
+    pub fn in_flight(&self, cid: usize) -> bool {
+        self.record(cid).map(|r| r.in_flight).unwrap_or(false)
+    }
+
+    pub fn set_in_flight(&mut self, cid: usize, in_flight: bool) {
+        self.record_mut(cid).in_flight = in_flight;
+    }
+
+    /// Server model version `cid` last trained against (0 = never).
+    pub fn last_version(&self, cid: usize) -> u64 {
+        self.record(cid).map(|r| r.last_version).unwrap_or(0)
+    }
+
+    pub fn set_last_version(&mut self, cid: usize, version: u64) {
+        self.record_mut(cid).last_version = version;
+    }
+
     /// Uplink error-feedback accumulator for client `cid` (empty until the
     /// client first transmits through a feedback codec — the codec treats
     /// an empty accumulator as zeros). Does not instantiate a record.

@@ -1,0 +1,249 @@
+//! Straggler tolerance: simulated wall-clock to a target loss under the
+//! three round policies, across device-speed heterogeneity.
+//!
+//! The classic async-FL motivation (FedBuff, Nguyen et al. 2022): with a
+//! synchronous barrier the round takes as long as the *slowest* sampled
+//! device, so on a heterogeneous fleet wall-clock-to-accuracy degrades with
+//! the speed spread even though per-round convergence is unchanged. A
+//! deadline cut or buffered async aggregation trades cohort completeness
+//! for round latency.
+//!
+//! This experiment sweeps the scheduler's `speed_spread` (per-client
+//! slowdowns drawn log-uniformly from `[1, spread]`) over {1, 10, 100} and
+//! runs the same tiny FedAvg federation under `sync`, `deadline`, and
+//! `async` policies on the virtual event clock. For each run it records
+//! the cumulative *simulated* seconds until the running-best training loss
+//! first reaches the worst policy's final loss (so every run provably gets
+//! there). At spread ≥ 10 the partial policies must win: the experiment
+//! asserts async and deadline reach the target in strictly less simulated
+//! time than sync. At spread 1 (homogeneous fleet) sync is expected to win
+//! — waiting for everyone costs nothing and uses every update.
+//!
+//! Everything is seeded: speed multipliers are a pure function of
+//! `(seed, cid)`, so reruns reproduce the table bit for bit.
+
+use anyhow::Result;
+
+use super::common::{banner, print_row, resolve_artifact_set, ExpCtx};
+use crate::config::{FaultConfig, Optimizer, RoundPolicy, SchedConfig, Sharing, TimeModel};
+use crate::scenario::{DataSource, DatasetSpec, PartitionSpec, ScenarioBuilder, ScenarioManifest};
+use crate::util::json::Json;
+
+struct PolicyRun {
+    policy: &'static str,
+    spread: f64,
+    /// Cumulative simulated seconds after each round.
+    sim_curve: Vec<f64>,
+    /// Running-best mean training loss after each round.
+    best_curve: Vec<f64>,
+    final_best: f64,
+    total_sim_secs: f64,
+    stragglers: usize,
+    dropped: usize,
+}
+
+impl PolicyRun {
+    /// First cumulative simulated time at which the running-best loss
+    /// reaches `target` (None if the run never gets there).
+    fn time_to(&self, target: f64) -> Option<f64> {
+        self.best_curve
+            .iter()
+            .position(|&l| l <= target)
+            .map(|i| self.sim_curve[i])
+    }
+
+    fn to_json(&self, target: f64) -> Json {
+        Json::obj(vec![
+            ("policy", Json::Str(self.policy.into())),
+            ("speed_spread", Json::Num(self.spread)),
+            ("final_best_loss", Json::Num(self.final_best)),
+            ("total_sim_secs", Json::Num(self.total_sim_secs)),
+            (
+                "sim_secs_to_target",
+                self.time_to(target).map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("stragglers", Json::Num(self.stragglers as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+        ])
+    }
+}
+
+fn run_policy(
+    ctx: &ExpCtx,
+    artifact: &str,
+    name: &'static str,
+    policy: RoundPolicy,
+    faults: FaultConfig,
+    spread: f64,
+    rounds: usize,
+) -> Result<PolicyRun> {
+    let m = ScenarioManifest {
+        name: format!("async_{name}_s{spread}"),
+        artifact: artifact.to_string(),
+        dataset: DatasetSpec {
+            source: DataSource::Mnist,
+            partition: PartitionSpec::Iid,
+            clients: Some(16),
+            population: None,
+            samples_per_client: 64,
+            test_samples: 128,
+            holdout: None,
+        },
+        optimizer: Optimizer::FedAvg,
+        sharing: Sharing::Full,
+        wire: Default::default(),
+        sched: SchedConfig {
+            policy,
+            faults,
+            // Fast links + slow devices: compute dominates the arrival
+            // time, so `speed_spread` controls the straggler severity.
+            time: TimeModel {
+                up_mbps: 100.0,
+                down_mbps: 100.0,
+                device_gflops: 0.05,
+                speed_spread: spread,
+            },
+        },
+        sample_frac: 0.5,
+        rounds,
+        local_epochs: 1,
+        lr: 0.1,
+        lr_decay: 1.0,
+        eval_every: 0,
+        seed: ctx.seed,
+        num_threads: 0,
+    };
+    let mut fed = ScenarioBuilder::new(ctx.engine).build(&m)?.federation;
+    let mut sim_curve = Vec::with_capacity(rounds);
+    let mut best_curve = Vec::with_capacity(rounds);
+    let (mut sim, mut best) = (0.0f64, f64::INFINITY);
+    let (mut stragglers, mut dropped) = (0usize, 0usize);
+    for _ in 0..rounds {
+        let r = fed.run_round()?;
+        sim += r.t_sim_secs;
+        best = best.min(r.mean_train_loss);
+        sim_curve.push(sim);
+        best_curve.push(best);
+        stragglers += r.stragglers;
+        dropped += r.dropped;
+    }
+    Ok(PolicyRun {
+        policy: name,
+        spread,
+        sim_curve,
+        best_curve,
+        final_best: best,
+        total_sim_secs: sim,
+        stragglers,
+        dropped,
+    })
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<Json> {
+    banner(
+        "async",
+        "straggler tolerance",
+        "sync vs deadline vs buffered-async on the virtual event clock",
+        ctx.scale,
+    );
+    let artifact = resolve_artifact_set(ctx, &["mlp10_fedpara"], &["native_mlp10_fedpara"])[0];
+    let rounds = ctx.rounds.unwrap_or(24);
+    let no_faults = FaultConfig::default();
+
+    // Calibrate the deadline from a homogeneous probe: one sync round at
+    // spread 1 yields the nominal (fastest-possible) barrier time. A
+    // deadline of 2.5x nominal admits roughly the faster half of a
+    // log-uniform [1, 10] fleet and cuts the tail.
+    let probe = run_policy(ctx, artifact, "probe", RoundPolicy::Sync, no_faults, 1.0, 1)?;
+    let nominal = probe.total_sim_secs;
+    let deadline = RoundPolicy::SyncDeadline { deadline_secs: nominal * 2.5, over_select: 1.5 };
+    let fedbuff = RoundPolicy::Async { buffer_k: 4, beta: 0.5, max_staleness: 4 };
+
+    println!(
+        "nominal sync round (homogeneous fleet): {nominal:.2}s; \
+         deadline policy: {}; async policy: {}\n",
+        deadline.spec_string(),
+        fedbuff.spec_string()
+    );
+    println!("spread    policy      final loss   total sim    sim-to-target  stragglers/dropped");
+
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for &spread in &[1.0f64, 10.0, 100.0] {
+        let runs = vec![
+            run_policy(ctx, artifact, "sync", RoundPolicy::Sync, no_faults, spread, rounds)?,
+            run_policy(ctx, artifact, "deadline", deadline, no_faults, spread, rounds)?,
+            run_policy(ctx, artifact, "async", fedbuff, no_faults, spread, rounds)?,
+        ];
+        // Target: the worst policy's final running-best loss — every run
+        // reaches it by construction, so time-to-target is well-defined.
+        let target = runs.iter().map(|r| r.final_best).fold(f64::MIN, f64::max);
+        for r in &runs {
+            let t = r.time_to(target).expect("target is the max of finals");
+            print_row(
+                &format!("{spread:>6}"),
+                &[
+                    format!("{:<10}", r.policy),
+                    format!("{:>10.4}", r.final_best),
+                    format!("{:>9.1}s", r.total_sim_secs),
+                    format!("{:>12.1}s", t),
+                    format!("{:>8}/{}", r.stragglers, r.dropped),
+                ],
+            );
+            rows.push(r.to_json(target));
+        }
+        let t_sync = runs[0].time_to(target).unwrap();
+        let t_dead = runs[1].time_to(target).unwrap();
+        let t_async = runs[2].time_to(target).unwrap();
+        if spread >= 10.0 {
+            // The acceptance property: once the fleet is heterogeneous
+            // enough, not waiting for the tail is a strict win in
+            // simulated wall-clock.
+            assert!(
+                t_dead < t_sync && t_async < t_sync,
+                "at spread {spread}, partial policies must beat the sync barrier \
+                 (sync {t_sync:.1}s, deadline {t_dead:.1}s, async {t_async:.1}s)"
+            );
+        }
+        out.push(Json::obj(vec![
+            ("speed_spread", Json::Num(spread)),
+            ("target_loss", Json::Num(target)),
+            ("sim_secs_sync", Json::Num(t_sync)),
+            ("sim_secs_deadline", Json::Num(t_dead)),
+            ("sim_secs_async", Json::Num(t_async)),
+            ("speedup_deadline", Json::Num(t_sync / t_dead)),
+            ("speedup_async", Json::Num(t_sync / t_async)),
+        ]));
+    }
+
+    // Fault tolerance: a dropout-injected deadline run must complete every
+    // round without panicking and report its losses per round.
+    let faults = FaultConfig { dropout: 0.2, crash_upload: 0.1, retry_failed: true };
+    let faulty = run_policy(ctx, artifact, "deadline", deadline, faults, 10.0, rounds)?;
+    assert_eq!(faulty.sim_curve.len(), rounds, "faulty run must finish all rounds");
+    assert!(
+        faulty.dropped > 0,
+        "20% dropout + 10% crash over {rounds} rounds must lose someone"
+    );
+    println!(
+        "\nfault injection (dropout 20%, crash 10%, retry): {} rounds completed, \
+         {} stragglers, {} dropped, final best loss {:.4}",
+        rounds, faulty.stragglers, faulty.dropped, faulty.final_best
+    );
+
+    Ok(Json::obj(vec![
+        ("artifact", Json::Str(artifact.to_string())),
+        ("rounds", Json::Num(rounds as f64)),
+        ("nominal_sync_secs", Json::Num(nominal)),
+        ("runs", Json::Arr(rows)),
+        ("speedups", Json::Arr(out)),
+        (
+            "fault_run",
+            Json::obj(vec![
+                ("stragglers", Json::Num(faulty.stragglers as f64)),
+                ("dropped", Json::Num(faulty.dropped as f64)),
+                ("final_best_loss", Json::Num(faulty.final_best)),
+            ]),
+        ),
+    ]))
+}

@@ -185,6 +185,7 @@ fn preset_manifest(
         optimizer: Optimizer::FedAvg,
         sharing: Sharing::Full,
         wire: Default::default(),
+        sched: Default::default(),
         sample_frac: ctx.scale.sample_frac(),
         rounds: ctx.rounds_for(paper_rounds),
         local_epochs: if non_iid {

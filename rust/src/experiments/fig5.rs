@@ -115,6 +115,7 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
                     optimizer: Optimizer::FedAvg,
                     sharing: sharing.clone(),
                     wire: Default::default(),
+                    sched: Default::default(),
                     sample_frac: 1.0,
                     rounds,
                     local_epochs: 2,

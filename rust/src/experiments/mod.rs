@@ -6,6 +6,9 @@
 //! records paper-vs-measured.
 
 pub mod common;
+// `async` is a keyword, so the module is `async_fed`; the registry id
+// stays "async".
+pub mod async_fed;
 pub mod fig3;
 pub mod scale;
 pub mod fig4;
@@ -142,6 +145,12 @@ pub fn registry() -> Vec<(&'static str, &'static str, &'static str, ExpFn)> {
             "cross-device",
             "million-client virtual federation: round cost O(participants)",
             scale::run,
+        ),
+        (
+            "async",
+            "straggler tolerance",
+            "sync vs deadline vs buffered-async time-to-loss on the virtual clock",
+            async_fed::run,
         ),
     ]
 }

@@ -82,6 +82,7 @@ fn run_population(
         optimizer: Optimizer::FedAvg,
         sharing: Sharing::Full,
         wire,
+        sched: Default::default(),
         sample_frac,
         rounds,
         local_epochs: 1,

@@ -13,7 +13,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
 
-use fedpara::config::{CodecSpec, Optimizer, Scale, Sharing, WireConfig};
+use fedpara::config::{
+    CodecSpec, FaultConfig, Optimizer, RoundPolicy, Scale, SchedConfig, Sharing, WireConfig,
+};
 use fedpara::experiments::{self, common, ExpCtx};
 use fedpara::runtime::Engine;
 use fedpara::scenario::{
@@ -109,6 +111,40 @@ fn wire_from_flags(args: &Args) -> Result<WireConfig> {
     Ok(wire)
 }
 
+/// Scheduler config from `run` flags: `--policy` takes the round-policy
+/// spec string (`--deadline <secs>` is shorthand for `--policy
+/// deadline:<secs>`), `--faults` the fault spec, `--speed-spread` the
+/// device-heterogeneity knob of the virtual-time model.
+fn sched_from_flags(args: &Args, base: SchedConfig) -> Result<SchedConfig> {
+    let mut sched = base;
+    match (args.get("policy"), args.get("deadline")) {
+        (Some(_), Some(_)) => {
+            return Err(anyhow!(
+                "--deadline (shorthand for --policy deadline:<secs>) and --policy \
+                 are mutually exclusive"
+            ))
+        }
+        (Some(spec), None) => {
+            sched.policy = RoundPolicy::parse(spec).map_err(|e| anyhow!("--policy: {e}"))?;
+        }
+        (None, Some(secs)) => {
+            sched.policy = RoundPolicy::parse(&format!("deadline:{secs}"))
+                .map_err(|e| anyhow!("--deadline: {e}"))?;
+        }
+        (None, None) => {}
+    }
+    if let Some(spec) = args.get("faults") {
+        sched.faults = FaultConfig::parse(spec).map_err(|e| anyhow!("--faults: {e}"))?;
+    }
+    if let Some(spread) = args.get("speed-spread") {
+        sched.time.speed_spread = spread
+            .parse()
+            .map_err(|_| anyhow!("--speed-spread expects a number >= 1"))?;
+    }
+    sched.validate().map_err(|e| anyhow!(e))?;
+    Ok(sched)
+}
+
 /// Build a [`ScenarioManifest`] from `run` subcommand flags, reproducing the
 /// historical flag-driven behavior exactly (populations, seeds, schedules).
 fn manifest_from_flags(args: &Args, ctx: &ExpCtx) -> Result<ScenarioManifest> {
@@ -172,6 +208,7 @@ fn manifest_from_flags(args: &Args, ctx: &ExpCtx) -> Result<ScenarioManifest> {
         optimizer: Optimizer::parse(args.get_or("optimizer", "fedavg")).map_err(|e| anyhow!(e))?,
         sharing,
         wire: wire_from_flags(args)?,
+        sched: sched_from_flags(args, SchedConfig::default())?,
         sample_frac: args.get_f64("frac", ctx.scale.sample_frac()).map_err(|e| anyhow!(e))?,
         rounds: ctx.rounds_for(100),
         local_epochs: args.get_usize("epochs", ctx.scale.local_epochs()).map_err(|e| anyhow!(e))?,
@@ -198,6 +235,8 @@ fn run_cmd(args: &Args) -> Result<()> {
         if args.get("threads").is_some() {
             m.num_threads = args.get_usize("threads", 0).map_err(|e| anyhow!(e))?;
         }
+        // Scheduler flags override the manifest's policy/faults/time blocks.
+        m.sched = sched_from_flags(args, m.sched)?;
         m
     } else {
         manifest_from_flags(args, &ctx)?
@@ -216,17 +255,34 @@ fn run_cmd(args: &Args) -> Result<()> {
             .map(|p| format!(" population={p} (virtual)"))
             .unwrap_or_default()
     );
+    if m.sched != SchedConfig::default() {
+        println!(
+            "sched: policy={} faults={} speed_spread={}",
+            m.sched.policy.spec_string(),
+            m.sched.faults.spec_string(),
+            m.sched.time.speed_spread,
+        );
+    }
     let mut fed = ScenarioBuilder::new(&engine).build(&m)?.federation;
+    let mut sim_total = 0.0f64;
     for _ in 0..m.rounds {
         let r = fed.run_round()?;
+        sim_total += r.t_sim_secs;
+        let losses = if r.stragglers > 0 || r.dropped > 0 {
+            format!("  stragglers {} dropped {}", r.stragglers, r.dropped)
+        } else {
+            String::new()
+        };
         println!(
-            "round {:>4}  loss {:.4}  acc {}  cum {:.4} GB  ({} clients, {:.2}s compute)",
+            "round {:>4}  loss {:.4}  acc {}  cum {:.4} GB  sim {:.1}s  ({} clients, {:.2}s compute){}",
             r.round,
             r.mean_train_loss,
             r.test_acc.map(|a| format!("{:.2}%", a * 100.0)).unwrap_or("-".into()),
             r.cum_gbytes,
+            sim_total,
             r.participants,
             r.t_comp_secs,
+            losses,
         );
     }
     let final_eval = fed.evaluate_global()?;
@@ -417,7 +473,20 @@ fn dispatch(mut args: Args) -> Result<()> {
                     "cross-device: virtual client population (per-client data synthesized \
                      lazily per round; state stays O(participants), so millions work)",
                 )
-                .declare("per-client", "samples per virtual client (with --population; default 16)");
+                .declare("per-client", "samples per virtual client (with --population; default 16)")
+                .declare(
+                    "policy",
+                    "round policy: sync|deadline:<secs>[:over=<x>]|async[:k=<n>][:beta=<f>][:max=<n>]",
+                )
+                .declare("deadline", "shorthand for --policy deadline:<secs>")
+                .declare(
+                    "faults",
+                    "fault injection: none|dropout:<p>[,crash:<p>][,retry]",
+                )
+                .declare(
+                    "speed-spread",
+                    "device heterogeneity: per-client slowdowns drawn log-uniformly from [1, x]",
+                );
             args.validate().map_err(|e| anyhow!(e))?;
             run_cmd(&args)
         }

@@ -208,6 +208,7 @@ mod tests {
             optimizer: Optimizer::FedAvg,
             sharing: Sharing::Full,
             wire: Default::default(),
+            sched: Default::default(),
             sample_frac: 0.5,
             rounds: 1,
             local_epochs: 1,

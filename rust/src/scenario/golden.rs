@@ -121,7 +121,10 @@ pub fn digest_federation(fed: &Federation) -> RunDigest {
             }
         }
         // t_comp_secs and the cumulative-telemetry fields are wall-time /
-        // derived values and stay out of the digest.
+        // derived values and stay out of the digest. The scheduler's
+        // simulated-time fields (t_sim_secs/stragglers/dropped) are
+        // deterministic but also stay out, so recorded digests survive
+        // time-model tuning that doesn't change training bits.
     }
     RunDigest {
         rounds: fed.reports.len(),

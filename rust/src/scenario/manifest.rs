@@ -49,7 +49,10 @@
 
 use std::path::Path;
 
-use crate::config::{CodecSpec, Optimizer, RunConfig, Sharing, WireConfig};
+use crate::config::{
+    CodecSpec, FaultConfig, Optimizer, RoundPolicy, RunConfig, SchedConfig, Sharing, TimeModel,
+    WireConfig,
+};
 use crate::data::{synth_text, synth_vision};
 use crate::util::hash::sha256_hex;
 use crate::util::json::{Json, JsonPath};
@@ -370,6 +373,10 @@ pub struct ScenarioManifest {
     pub optimizer: Optimizer,
     pub sharing: Sharing,
     pub wire: WireConfig,
+    /// Round policy × fault injection × virtual-time model (`policy` /
+    /// `faults` / `time` manifest blocks; all default to the historical
+    /// synchronous faultless barrier).
+    pub sched: SchedConfig,
     pub sample_frac: f64,
     pub rounds: usize,
     pub local_epochs: usize,
@@ -393,6 +400,9 @@ impl ScenarioManifest {
             "sharing",
             "wire",
             "quantize_upload",
+            "policy",
+            "faults",
+            "time",
             "sample_frac",
             "rounds",
             "local_epochs",
@@ -432,6 +442,20 @@ impl ScenarioManifest {
             }
             (None, None) => WireConfig::identity(),
         };
+        let sched = SchedConfig {
+            policy: match root.key_opt("policy")? {
+                None => RoundPolicy::default(),
+                Some(p) => policy_from_path(&p)?,
+            },
+            faults: match root.key_opt("faults")? {
+                None => FaultConfig::default(),
+                Some(p) => faults_from_path(&p)?,
+            },
+            time: match root.key_opt("time")? {
+                None => TimeModel::default(),
+                Some(p) => time_from_path(&p)?,
+            },
+        };
         let m = ScenarioManifest {
             name,
             artifact,
@@ -439,6 +463,7 @@ impl ScenarioManifest {
             optimizer,
             sharing,
             wire,
+            sched,
             sample_frac: f64_or(&root, "sample_frac", 0.25)?,
             rounds: root.key("rounds")?.usize()?,
             local_epochs: usize_or(&root, "local_epochs", 2)?,
@@ -493,6 +518,10 @@ impl ScenarioManifest {
             return Err("`lr_decay` must be finite and > 0".into());
         }
         self.wire.validate().map_err(|e| format!("`wire`: {e}"))?;
+        self.sched.validate().map_err(|e| format!("`policy`/`faults`/`time`: {e}"))?;
+        self.sched
+            .check_optimizer(&self.optimizer)
+            .map_err(|e| format!("`policy`: {e}"))?;
         let d = &self.dataset;
         match (d.clients, d.population) {
             (None, None) => {
@@ -580,6 +609,9 @@ impl ScenarioManifest {
             ("optimizer", optimizer_canonical(&self.optimizer)),
             ("sharing", sharing_canonical(&self.sharing)),
             ("wire", wire_canonical(&self.wire)),
+            ("policy", policy_canonical(&self.sched.policy)),
+            ("faults", faults_canonical(&self.sched.faults)),
+            ("time", time_canonical(&self.sched.time)),
             ("sample_frac", Json::Num(self.sample_frac)),
             ("rounds", Json::Num(self.rounds as f64)),
             ("local_epochs", Json::Num(self.local_epochs as f64)),
@@ -620,6 +652,7 @@ impl ScenarioManifest {
             optimizer: self.optimizer,
             wire: self.wire.clone(),
             sharing: self.sharing.clone(),
+            sched: self.sched,
             eval_every: self.eval_every,
             seed: self.seed,
             num_threads: self.num_threads,
@@ -831,6 +864,99 @@ fn wire_canonical(w: &WireConfig) -> Json {
         ("up", codec_canonical(&w.up)),
         ("down", codec_canonical(&w.down)),
         ("fingerprint_downloads", Json::Bool(w.fingerprint_downloads)),
+    ])
+}
+
+// ---- scheduler JSON forms ------------------------------------------------
+
+fn policy_from_path(p: &JsonPath) -> Result<RoundPolicy, String> {
+    // String shorthand: the CLI spec ("sync", "deadline:30:over=1.3",
+    // "async:k=8:beta=0.5:max=4").
+    if let Some(s) = p.json().as_str() {
+        return RoundPolicy::parse(s).map_err(|e| format!("`{}`: {e}", p.path()));
+    }
+    let kind = p.key("kind")?.str()?;
+    match kind {
+        "sync" => {
+            p.expect_keys(&["kind"])?;
+            Ok(RoundPolicy::Sync)
+        }
+        "deadline" => {
+            p.expect_keys(&["kind", "secs", "over_select"])?;
+            let deadline_secs = p.key("secs")?.f64()?;
+            let over_select = f64_or(p, "over_select", 1.0)?;
+            Ok(RoundPolicy::SyncDeadline { deadline_secs, over_select })
+        }
+        "async" => {
+            p.expect_keys(&["kind", "k", "beta", "max_staleness"])?;
+            Ok(RoundPolicy::Async {
+                buffer_k: usize_or(p, "k", 8)?,
+                beta: f64_or(p, "beta", 0.5)?,
+                max_staleness: usize_or(p, "max_staleness", 4)?,
+            })
+        }
+        other => Err(format!(
+            "`{}`: unknown policy kind '{other}' (sync|deadline|async)",
+            p.path()
+        )),
+    }
+}
+
+fn policy_canonical(policy: &RoundPolicy) -> Json {
+    match policy {
+        RoundPolicy::Sync => Json::obj(vec![("kind", Json::Str("sync".into()))]),
+        RoundPolicy::SyncDeadline { deadline_secs, over_select } => Json::obj(vec![
+            ("kind", Json::Str("deadline".into())),
+            ("secs", Json::Num(*deadline_secs)),
+            ("over_select", Json::Num(*over_select)),
+        ]),
+        RoundPolicy::Async { buffer_k, beta, max_staleness } => Json::obj(vec![
+            ("kind", Json::Str("async".into())),
+            ("k", Json::Num(*buffer_k as f64)),
+            ("beta", Json::Num(*beta)),
+            ("max_staleness", Json::Num(*max_staleness as f64)),
+        ]),
+    }
+}
+
+fn faults_from_path(p: &JsonPath) -> Result<FaultConfig, String> {
+    // String shorthand: the CLI spec ("none", "dropout:0.1,crash:0.05,retry").
+    if let Some(s) = p.json().as_str() {
+        return FaultConfig::parse(s).map_err(|e| format!("`{}`: {e}", p.path()));
+    }
+    p.expect_keys(&["dropout", "crash_upload", "retry"])?;
+    Ok(FaultConfig {
+        dropout: f64_or(p, "dropout", 0.0)?,
+        crash_upload: f64_or(p, "crash_upload", 0.0)?,
+        retry_failed: bool_or(p, "retry", false)?,
+    })
+}
+
+fn faults_canonical(f: &FaultConfig) -> Json {
+    Json::obj(vec![
+        ("dropout", Json::Num(f.dropout)),
+        ("crash_upload", Json::Num(f.crash_upload)),
+        ("retry", Json::Bool(f.retry_failed)),
+    ])
+}
+
+fn time_from_path(p: &JsonPath) -> Result<TimeModel, String> {
+    p.expect_keys(&["up_mbps", "down_mbps", "device_gflops", "speed_spread"])?;
+    let d = TimeModel::default();
+    Ok(TimeModel {
+        up_mbps: f64_or(p, "up_mbps", d.up_mbps)?,
+        down_mbps: f64_or(p, "down_mbps", d.down_mbps)?,
+        device_gflops: f64_or(p, "device_gflops", d.device_gflops)?,
+        speed_spread: f64_or(p, "speed_spread", d.speed_spread)?,
+    })
+}
+
+fn time_canonical(t: &TimeModel) -> Json {
+    Json::obj(vec![
+        ("up_mbps", Json::Num(t.up_mbps)),
+        ("down_mbps", Json::Num(t.down_mbps)),
+        ("device_gflops", Json::Num(t.device_gflops)),
+        ("speed_spread", Json::Num(t.speed_spread)),
     ])
 }
 
@@ -1063,6 +1189,62 @@ mod tests {
     }
 
     #[test]
+    fn sched_forms_agree_and_incompatibilities_are_caught() {
+        // String shorthand (the CLI spec) and object form parse to the
+        // same scheduler config and hash.
+        let a = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "policy":"async:k=4:beta=0.5:max=2",
+                "faults":"dropout:0.1,crash:0.05,retry",
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        let b = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "policy":{"kind":"async","k":4,"beta":0.5,"max_staleness":2},
+                "faults":{"dropout":0.1,"crash_upload":0.05,"retry":true},
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_eq!(
+            a.sched.policy,
+            RoundPolicy::Async { buffer_k: 4, beta: 0.5, max_staleness: 2 }
+        );
+        assert_eq!(a.sched.faults.dropout, 0.1);
+        assert!(a.sched.faults.retry_failed);
+
+        // A time block fills unspecified knobs with the defaults.
+        let m = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "time":{"speed_spread":10},
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        assert_eq!(m.sched.time.speed_spread, 10.0);
+        assert_eq!(m.sched.time.up_mbps, TimeModel::default().up_mbps);
+
+        // Async × SCAFFOLD is rejected at validation.
+        let m = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "policy":"async","optimizer":"scaffold",
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        let e = m.validate().unwrap_err();
+        assert!(e.contains("incompatible"), "{e}");
+
+        // Bad policy strings carry the key path.
+        let e = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,"policy":"gossip",
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("`policy`"), "{e}");
+    }
+
+    #[test]
     fn hash_is_default_whitespace_and_name_insensitive() {
         let sparse = ScenarioManifest::from_json_str(tiny_manifest_text()).unwrap();
         // Everything spelled out explicitly, different formatting and name.
@@ -1177,6 +1359,38 @@ mod tests {
                 };
                 let down = if rng.below(2) == 0 { CodecSpec::Identity } else { CodecSpec::Fp16 };
                 WireConfig { up, down, fingerprint_downloads: rng.below(2) == 0 }
+            },
+            sched: {
+                // Async is incompatible with SCAFFOLD/FedDyn, so only roll
+                // it for cohort-agnostic optimizers.
+                let async_ok =
+                    !matches!(optimizer, Optimizer::Scaffold | Optimizer::FedDyn { .. });
+                let policy = match rng.below(if async_ok { 3 } else { 2 }) {
+                    0 => RoundPolicy::Sync,
+                    1 => RoundPolicy::SyncDeadline {
+                        deadline_secs: (1 + rng.below(600)) as f64,
+                        over_select: 1.0 + (rng.below(10) as f64) / 10.0,
+                    },
+                    _ => RoundPolicy::Async {
+                        buffer_k: 1 + rng.below(16),
+                        beta: (rng.below(20) as f64) / 10.0,
+                        max_staleness: 1 + rng.below(8),
+                    },
+                };
+                SchedConfig {
+                    policy,
+                    faults: FaultConfig {
+                        dropout: (rng.below(10) as f64) / 20.0,
+                        crash_upload: (rng.below(10) as f64) / 20.0,
+                        retry_failed: rng.below(2) == 0,
+                    },
+                    time: TimeModel {
+                        up_mbps: (1 + rng.below(100)) as f64,
+                        down_mbps: (1 + rng.below(100)) as f64,
+                        device_gflops: (1 + rng.below(50)) as f64 / 10.0,
+                        speed_spread: 1.0 + rng.below(100) as f64,
+                    },
+                }
             },
             sample_frac: (1 + rng.below(100)) as f64 / 100.0,
             rounds: 1 + rng.below(50),

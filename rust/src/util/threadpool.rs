@@ -14,6 +14,7 @@
 //! win over collect-then-fold is typical-case, not worst-case.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -151,34 +152,74 @@ impl ThreadPool {
         F: Fn(T) -> R + Send + Sync + 'static,
         G: FnMut(usize, R),
     {
+        self.scope_fold_cancel(items, f, move |i, r| {
+            fold(i, r);
+            true
+        });
+    }
+
+    /// [`scope_fold`] with cooperative cancellation: `fold` returns `false`
+    /// to cancel the remaining work. A shared flag is checked before each
+    /// queued job starts, so jobs that have not begun are skipped (no
+    /// wasted CPU on a doomed round); jobs already in flight still drain —
+    /// their results are received but no longer folded. Every item is
+    /// accounted for either way, so the call always returns only after the
+    /// pool holds no reference to this scope. Panics in jobs are
+    /// propagated.
+    ///
+    /// [`scope_fold`]: ThreadPool::scope_fold
+    pub fn scope_fold_cancel<T, R, F, G>(&self, items: Vec<T>, f: F, mut fold: G)
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+        G: FnMut(usize, R) -> bool,
+    {
         let n = items.len();
         if n == 0 {
             return;
         }
         let f = Arc::new(f);
-        let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
+        let cancel = Arc::new(AtomicBool::new(false));
+        // `None` marks a job skipped by cancellation — it still occupies
+        // its slot in the ordered drain so `next` advances past it.
+        let (tx, rx) = mpsc::channel::<(usize, Option<thread::Result<R>>)>();
         for (i, item) in items.into_iter().enumerate() {
             let tx = tx.clone();
             let f = Arc::clone(&f);
+            let cancel = Arc::clone(&cancel);
             self.execute(move || {
+                if cancel.load(Ordering::SeqCst) {
+                    let _ = tx.send((i, None));
+                    return;
+                }
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(item)));
                 // Receiver may be gone if an earlier job already panicked.
-                let _ = tx.send((i, out));
+                let _ = tx.send((i, Some(out)));
             });
         }
         drop(tx);
-        let mut pending: BTreeMap<usize, R> = BTreeMap::new();
+        let mut pending: BTreeMap<usize, Option<R>> = BTreeMap::new();
         let mut next = 0usize;
+        let mut live = true;
         for _ in 0..n {
             let (i, res) = rx.recv().expect("all senders dropped early");
             match res {
-                Ok(r) => {
-                    pending.insert(i, r);
+                None => {
+                    pending.insert(i, None);
                 }
-                Err(p) => std::panic::resume_unwind(p),
+                Some(Ok(r)) => {
+                    pending.insert(i, Some(r));
+                }
+                Some(Err(p)) => std::panic::resume_unwind(p),
             }
-            while let Some(r) = pending.remove(&next) {
-                fold(next, r);
+            while let Some(slot) = pending.remove(&next) {
+                if let Some(r) = slot {
+                    if live && !fold(next, r) {
+                        live = false;
+                        cancel.store(true, Ordering::SeqCst);
+                    }
+                }
                 next += 1;
             }
         }
@@ -303,6 +344,78 @@ mod tests {
         let mut calls = 0;
         pool.scope_fold(Vec::<usize>::new(), |x| x, |_, _| calls += 1);
         assert_eq!(calls, 0);
+    }
+
+    #[test]
+    fn scope_fold_cancel_skips_queued_jobs_after_error() {
+        // One worker, job 0 fails immediately, jobs 1..N block on a gate
+        // released by the cancelling fold. The fold cancels on the first
+        // (failed) result, so at most the one job already dequeued by the
+        // worker can still run — every other queued job must be skipped
+        // before `f` starts, while the scope still drains all N+1 slots.
+        const N: usize = 64;
+        let pool = ThreadPool::new(1);
+        let executed = Arc::new(AtomicUsize::new(0));
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate_rx = Arc::new(Mutex::new(gate_rx));
+        let exec = Arc::clone(&executed);
+        let mut fold_calls = 0usize;
+        pool.scope_fold_cancel(
+            (0..=N).collect::<Vec<usize>>(),
+            move |i| {
+                if i == 0 {
+                    return Err("boom");
+                }
+                // In-flight jobs drain: they wait for the gate, then run.
+                gate_rx.lock().unwrap().recv().unwrap();
+                exec.fetch_add(1, Ordering::SeqCst);
+                Ok(i)
+            },
+            |idx, r: Result<usize, &str>| {
+                fold_calls += 1;
+                assert_eq!(idx, 0, "fold must stop being called after cancelling");
+                assert!(r.is_err());
+                // Release every gated job *before* cancelling, so any job
+                // already past the flag check can finish (drain), while
+                // the rest observe the flag and skip.
+                for _ in 0..N {
+                    gate_tx.send(()).unwrap();
+                }
+                false
+            },
+        );
+        assert_eq!(fold_calls, 1, "results after a cancel are not folded");
+        let ran = executed.load(Ordering::SeqCst);
+        assert!(ran <= 2, "only jobs in flight at cancel time may run, {ran} did");
+    }
+
+    #[test]
+    fn scope_fold_cancel_suppresses_fold_after_false() {
+        // Multi-worker: cancel at index 10 of 200. All 200 slots drain
+        // (the call returns), but the fold sees exactly indices 0..=10.
+        let pool = ThreadPool::new(4);
+        let mut seen = Vec::new();
+        pool.scope_fold_cancel(
+            (0..200usize).collect::<Vec<_>>(),
+            |x| x,
+            |idx, r| {
+                assert_eq!(idx, r);
+                seen.push(idx);
+                idx < 10
+            },
+        );
+        assert_eq!(seen, (0..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_fold_cancel_without_cancel_matches_scope_fold() {
+        let pool = ThreadPool::new(3);
+        let mut a = Vec::new();
+        pool.scope_fold_cancel((0..40usize).collect::<Vec<_>>(), |x| x * 3, |_, r| {
+            a.push(r);
+            true
+        });
+        assert_eq!(a, (0..40).map(|x| x * 3).collect::<Vec<_>>());
     }
 
     #[test]

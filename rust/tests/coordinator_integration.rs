@@ -46,6 +46,7 @@ fn base_cfg(artifact: &str) -> RunConfig {
         optimizer: Optimizer::FedAvg,
         wire: WireConfig::identity(),
         sharing: Sharing::Full,
+        sched: Default::default(),
         eval_every: 3,
         seed: 1,
         num_threads: 0,

@@ -50,6 +50,7 @@ fn base_cfg(artifact: &str, num_threads: usize) -> RunConfig {
         optimizer: Optimizer::FedAvg,
         wire: WireConfig::identity(),
         sharing: Sharing::Full,
+        sched: Default::default(),
         eval_every: 2,
         seed: 11,
         num_threads,

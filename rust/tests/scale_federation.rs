@@ -53,6 +53,7 @@ fn virtual_fed(
         optimizer,
         wire: Default::default(),
         sharing,
+        sched: Default::default(),
         eval_every: 0,
         seed: 77,
         num_threads: 0,

@@ -1,0 +1,235 @@
+//! Scheduler equivalence + robustness suite (ISSUE 8).
+//!
+//! The event-driven scheduler must be a **pure observer** under the
+//! default config: with `policy: sync` and faults off, the virtual clock
+//! and fault machinery may not perturb a single training bit — same
+//! `RoundReport` stream (minus the new sim fields), same communication
+//! ledger, same final `server_global` vector, for all five optimizers.
+//! That is the contract that lets every pre-scheduler golden digest and
+//! equivalence suite stay green.
+//!
+//! On top of the passthrough pin, this suite exercises the robustness
+//! paths end to end through a real [`Federation`]: simulated time must be
+//! thread-count invariant (it is analytic, never host time), a deadline
+//! nobody can meet must degrade to a no-op round instead of dividing by
+//! zero, buffered-async runs must stay deterministic under rerun, and a
+//! fault-injected run must complete every round while reporting its
+//! losses.
+
+use fedpara::config::{
+    FaultConfig, Optimizer, RoundPolicy, RunConfig, SchedConfig, Sharing, TimeModel,
+};
+use fedpara::coordinator::Federation;
+use fedpara::data::{partition, synth_vision, Dataset};
+use fedpara::runtime::Engine;
+use fedpara::util::rng::Rng;
+
+const CLIENTS: usize = 12;
+const PER_CLIENT: usize = 24;
+const ROUNDS: usize = 3;
+
+/// A heterogeneous-fleet time model: fast links, slow devices, 10× speed
+/// spread — compute dominates the arrival times, so the spread actually
+/// spreads them.
+fn spread_time() -> TimeModel {
+    TimeModel { up_mbps: 100.0, down_mbps: 100.0, device_gflops: 0.05, speed_spread: 10.0 }
+}
+
+/// Sync policy, faults off, over `time` — the passthrough shape.
+fn sync_with(time: TimeModel) -> SchedConfig {
+    SchedConfig { policy: RoundPolicy::Sync, faults: Default::default(), time }
+}
+
+fn federation(cfg: RunConfig) -> Federation {
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, CLIENTS * PER_CLIENT, 9);
+    let test = synth_vision::generate(&spec, 64, 0x9E);
+    let mut rng = Rng::new(9);
+    let part = partition::iid(data.len(), CLIENTS, &mut rng);
+    let locals: Vec<Dataset> = part.clients.iter().map(|i| data.subset(i)).collect();
+    Federation::new(&Engine::native(), cfg, locals, test).unwrap()
+}
+
+fn cfg(optimizer: Optimizer, sched: SchedConfig) -> RunConfig {
+    RunConfig {
+        artifact: "native_mlp10_fedpara".into(),
+        sample_frac: 0.5,
+        rounds: ROUNDS,
+        local_epochs: 1,
+        lr: 0.1,
+        lr_decay: 0.992,
+        optimizer,
+        wire: Default::default(),
+        sharing: Sharing::Full,
+        sched,
+        eval_every: 1,
+        seed: 23,
+        num_threads: 2,
+    }
+}
+
+/// The training-visible half of a run, bit-exact: everything except the
+/// scheduler's sim fields and wall clock.
+#[derive(Debug, PartialEq)]
+struct TrainKey {
+    reports: Vec<(usize, u32, usize, u64, u64, u64, u64, Option<u64>, Option<u64>)>,
+    server_global: Vec<u32>,
+    ledger: Vec<(u64, u64)>,
+}
+
+/// The whole run including the scheduler's outputs — what must be
+/// identical under rerun and across thread counts.
+#[derive(Debug, PartialEq)]
+struct FullKey {
+    train: TrainKey,
+    sim: Vec<(u64, usize, usize)>,
+}
+
+fn run_keys(mut fed: Federation, rounds: usize) -> FullKey {
+    fed.run(rounds).unwrap();
+    let train = TrainKey {
+        reports: fed
+            .reports
+            .iter()
+            .map(|r| {
+                (
+                    r.round,
+                    r.lr.to_bits(),
+                    r.participants,
+                    r.mean_train_loss.to_bits(),
+                    r.up_bytes,
+                    r.down_bytes,
+                    r.cum_gbytes.to_bits(),
+                    r.test_acc.map(f64::to_bits),
+                    r.test_loss.map(f64::to_bits),
+                )
+            })
+            .collect(),
+        server_global: fed.server_global().iter().map(|p| p.to_bits()).collect(),
+        ledger: fed.comm.per_round.clone(),
+    };
+    let sim =
+        fed.reports.iter().map(|r| (r.t_sim_secs.to_bits(), r.stragglers, r.dropped)).collect();
+    FullKey { train, sim }
+}
+
+/// Sync + faults off is a **pure passthrough**: swapping the default time
+/// model for a wildly heterogeneous one changes the simulated clock and
+/// nothing else — no training bit may move, for any optimizer. (The
+/// scheduler's speed sampling draws from its own seeded stream, never
+/// from the training RNG tree.)
+#[test]
+fn sync_passthrough_is_bit_identical_for_all_optimizers() {
+    for optimizer in [
+        Optimizer::FedAvg,
+        Optimizer::FedProx { mu: 0.1 },
+        Optimizer::Scaffold,
+        Optimizer::FedDyn { alpha: 0.1 },
+        Optimizer::FedAdam,
+    ] {
+        let baseline = run_keys(federation(cfg(optimizer, SchedConfig::default())), ROUNDS);
+        let timed = run_keys(federation(cfg(optimizer, sync_with(spread_time()))), ROUNDS);
+        assert_eq!(
+            baseline.train,
+            timed.train,
+            "{}: a sync time model perturbed training bits",
+            optimizer.name()
+        );
+        // The clock itself must have responded to the new time model —
+        // otherwise the passthrough pin above is vacuous.
+        assert_ne!(
+            baseline.sim,
+            timed.sim,
+            "{}: sim fields ignored the time model",
+            optimizer.name()
+        );
+        assert!(timed.sim.iter().all(|&(_, s, d)| s == 0 && d == 0), "sync never drops anyone");
+    }
+}
+
+/// Simulated seconds are analytic, so the full report stream — sim
+/// fields included — is invariant to the worker thread count.
+#[test]
+fn simulated_time_is_thread_count_invariant() {
+    let sched = sync_with(spread_time());
+    let mut one = cfg(Optimizer::FedAvg, sched);
+    one.num_threads = 1;
+    let mut four = cfg(Optimizer::FedAvg, sched);
+    four.num_threads = 4;
+    assert_eq!(
+        run_keys(federation(one), ROUNDS),
+        run_keys(federation(four), ROUNDS),
+        "t_sim_secs depended on the thread count"
+    );
+}
+
+/// A deadline nobody can meet degrades to a no-op round: every sampled
+/// client trains and straggles, nothing is admitted, and the server holds
+/// its model instead of dividing by zero.
+#[test]
+fn impossible_deadline_holds_the_server_model() {
+    let sched = SchedConfig {
+        policy: RoundPolicy::SyncDeadline { deadline_secs: 1e-9, over_select: 1.0 },
+        faults: Default::default(),
+        time: TimeModel::default(),
+    };
+    let mut fed = federation(cfg(Optimizer::FedAvg, sched));
+    let before: Vec<u32> = fed.server_global().iter().map(|p| p.to_bits()).collect();
+    let r = fed.run_round().unwrap();
+    assert!(r.participants > 0);
+    assert_eq!(r.stragglers, r.participants, "everyone misses a 1ns deadline");
+    let after: Vec<u32> = fed.server_global().iter().map(|p| p.to_bits()).collect();
+    assert_eq!(before, after, "a zero-admission round must not move the global model");
+}
+
+/// Buffered-async edge cases, end to end: K=1 with a huge staleness bound
+/// admits exactly one update per round and never drops; an aggressive
+/// bound (max staleness 1) discards over-stale carries; both runs finish
+/// every round and reproduce bit-for-bit when rerun.
+#[test]
+fn fedbuff_edge_cases_are_deterministic_and_complete() {
+    for (policy, expect_drops) in [
+        (RoundPolicy::Async { buffer_k: 1, beta: 0.0, max_staleness: 100 }, false),
+        (RoundPolicy::Async { buffer_k: 2, beta: 0.5, max_staleness: 1 }, true),
+    ] {
+        let sched = SchedConfig {
+            policy,
+            faults: Default::default(),
+            time: TimeModel { speed_spread: 100.0, ..spread_time() },
+        };
+        let rounds = 4;
+        let mut c = cfg(Optimizer::FedAvg, sched);
+        c.rounds = rounds;
+        let a = run_keys(federation(c.clone()), rounds);
+        let b = run_keys(federation(c), rounds);
+        assert_eq!(a, b, "{policy:?}: async run not reproducible");
+        assert_eq!(a.train.reports.len(), rounds, "{policy:?}: a round went missing");
+        let dropped: usize = a.sim.iter().map(|&(_, _, d)| d).sum();
+        if expect_drops {
+            assert!(dropped > 0, "{policy:?}: staleness bound 1 at spread 100 must drop carries");
+        } else {
+            assert_eq!(dropped, 0, "{policy:?}: nothing can exceed a staleness bound of 100");
+        }
+    }
+}
+
+/// Fault injection never aborts a run: with heavy dropout and upload
+/// crashes (plus retry), every round completes, losses are reported, and
+/// the whole thing is deterministic under rerun.
+#[test]
+fn fault_injected_run_completes_all_rounds() {
+    let sched = SchedConfig {
+        policy: RoundPolicy::Sync,
+        faults: FaultConfig { dropout: 0.3, crash_upload: 0.2, retry_failed: true },
+        time: TimeModel::default(),
+    };
+    let rounds = 4;
+    let mut c = cfg(Optimizer::FedAvg, sched);
+    c.rounds = rounds;
+    let a = run_keys(federation(c.clone()), rounds);
+    let b = run_keys(federation(c), rounds);
+    assert_eq!(a, b, "fault stream not reproducible");
+    assert_eq!(a.train.reports.len(), rounds);
+    let dropped: usize = a.sim.iter().map(|&(_, _, d)| d).sum();
+    assert!(dropped > 0, "30% dropout + 20% crash over {rounds} rounds must lose someone");
+}

@@ -57,6 +57,7 @@ fn paper_cfg(artifact: &str, optimizer: Optimizer, sharing: Sharing) -> RunConfi
         optimizer,
         wire: Default::default(),
         sharing,
+        sched: Default::default(),
         eval_every: 1,
         seed: 23,
         num_threads: 2,

@@ -59,6 +59,7 @@ fn base_cfg(artifact: &str, wire: WireConfig) -> RunConfig {
         optimizer: Optimizer::FedAvg,
         wire,
         sharing: Sharing::Full,
+        sched: Default::default(),
         eval_every: 0,
         seed: 311,
         num_threads: 2,
