@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use fedpara::data::{assemble_batches, synth_vision};
 use fedpara::linalg::kernels::{
-    self, col2im, im2col, im2col_row, matmul_nn, matmul_nt, matmul_tn,
+    col2im, im2col, im2col_row, matmul_nn, matmul_nt, matmul_tn, GemmBackend, GemmCtx,
 };
 use fedpara::parameterization::compose::ConvFactors;
 use fedpara::runtime::Engine;
@@ -105,8 +105,10 @@ fn conv_kernels() {
         );
         // The same forward GEMM through the pre-blocking naive loops — the
         // "before" row of DESIGN.md's native-kernel-performance table
-        // (regenerate via `cargo run --release --bin bench_report`).
-        kernels::force_naive(true);
+        // (regenerate via `cargo run --release --bin bench_report`). The
+        // backend is a per-call `GemmCtx` value, so this row cannot leak
+        // process state into any other measurement.
+        let naive = GemmCtx { backend: GemmBackend::Naive, pool: None };
         bench_rate(
             &format!("  ^ naive kernels {bsz}x{h}x{w}x{ci} -> {o}"),
             10,
@@ -114,11 +116,10 @@ fn conv_kernels() {
             fwd_bytes,
             || {
                 im2col(&x, bsz, h, w, ci, k, &mut cols);
-                matmul_nt(&cols, &wmat, rows, ikk, o, &mut out);
+                naive.matmul_nt(&cols, &wmat, rows, ikk, o, &mut out);
                 std::hint::black_box(&out);
             },
         );
-        kernels::force_naive(false);
     }
 }
 

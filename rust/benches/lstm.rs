@@ -8,7 +8,7 @@
 //! Run via `cargo bench --bench lstm`.
 
 use fedpara::data::{assemble_batches, synth_text};
-use fedpara::linalg::kernels::{self, matmul_nn, matmul_nt, matmul_tn};
+use fedpara::linalg::kernels::{GemmBackend, GemmCtx};
 use fedpara::runtime::Engine;
 use fedpara::util::rng::Rng;
 use fedpara::util::stats::time_ms;
@@ -36,7 +36,7 @@ fn randn(n: usize, rng: &mut Rng) -> Vec<f32> {
 /// `X·W_ihᵀ`, the L sequential recurrent projections `h_{t-1}·W_hhᵀ`, and
 /// the batched BPTT contraction `dZᵀ·H_prev`.
 fn cell_kernels() {
-    println!("== LSTM cell GEMMs (L=48, bsz=16, e=16, h=32), naive vs blocked ==");
+    println!("== LSTM cell GEMMs (L=48, bsz=16, e=16, h=32), default vs naive ==");
     let (l, bsz, e, h) = (48usize, 16usize, 16usize, 32usize);
     let g4 = 4 * h;
     let rows = l * bsz;
@@ -51,15 +51,15 @@ fn cell_kernels() {
     let mut dw = vec![0f32; g4 * h];
     let mut dh = vec![0f32; bsz * h];
 
-    for naive in [false, true] {
-        kernels::force_naive(naive);
-        let tag = if naive { " (naive)" } else { "" };
+    for backend in [GemmBackend::Auto, GemmBackend::Naive] {
+        let ctx = GemmCtx { backend, pool: None };
+        let tag = if backend == GemmBackend::Naive { " (naive)" } else { "" };
         bench_rate(
             &format!("input projection X·W_ihᵀ [{rows}x{e}]→[{rows}x{g4}]{tag}"),
             20,
             2.0 * (rows * e * g4) as f64,
             || {
-                matmul_nt(&x, &w_ih, rows, e, g4, &mut z);
+                ctx.matmul_nt(&x, &w_ih, rows, e, g4, &mut z);
                 std::hint::black_box(&z);
             },
         );
@@ -69,7 +69,7 @@ fn cell_kernels() {
             2.0 * (l * bsz * h * g4) as f64,
             || {
                 for t in 0..l {
-                    matmul_nt(&hprev[t * bsz * h..(t + 1) * bsz * h], &w_hh, bsz, h, g4, &mut rec);
+                    ctx.matmul_nt(&hprev[t * bsz * h..(t + 1) * bsz * h], &w_hh, bsz, h, g4, &mut rec);
                 }
                 std::hint::black_box(&rec);
             },
@@ -79,7 +79,7 @@ fn cell_kernels() {
             20,
             2.0 * (rows * g4 * h) as f64,
             || {
-                matmul_tn(&dz, &hprev, rows, g4, h, &mut dw);
+                ctx.matmul_tn(&dz, &hprev, rows, g4, h, &mut dw);
                 std::hint::black_box(&dw);
             },
         );
@@ -89,17 +89,16 @@ fn cell_kernels() {
             2.0 * (l * bsz * g4 * h) as f64,
             || {
                 for t in 0..l {
-                    matmul_nn(&dz[t * bsz * g4..(t + 1) * bsz * g4], &w_hh, bsz, g4, h, &mut dh);
+                    ctx.matmul_nn(&dz[t * bsz * g4..(t + 1) * bsz * g4], &w_hh, bsz, g4, h, &mut dh);
                 }
                 std::hint::black_box(&dh);
             },
         );
     }
-    kernels::force_naive(false);
 }
 
 /// One character-LSTM local epoch per built-in artifact (the zero-alloc
-/// `train_epoch_ws` path the round loop runs), naive vs blocked.
+/// `train_epoch_ws` path the round loop runs), default backend vs naive.
 fn lstm_epoch() -> anyhow::Result<()> {
     println!("\n== native LSTM local epoch (built-in Shakespeare-like artifacts) ==");
     let engine = Engine::native();
@@ -115,9 +114,9 @@ fn lstm_epoch() -> anyhow::Result<()> {
         let flops = rt.train_flops_estimate().unwrap_or(0.0);
         let mut ws = rt.workspace();
         let mut p = params.clone();
-        for naive in [false, true] {
-            kernels::force_naive(naive);
-            let tag = if naive { " (naive)" } else { "" };
+        for backend in [GemmBackend::Auto, GemmBackend::Naive] {
+            ws.set_backend(backend);
+            let tag = if backend == GemmBackend::Naive { " (naive)" } else { "" };
             bench_rate(
                 &format!("train_epoch {name} ({} params){tag}", rt.meta.param_count),
                 10,
@@ -131,7 +130,6 @@ fn lstm_epoch() -> anyhow::Result<()> {
                 },
             );
         }
-        kernels::force_naive(false);
     }
     Ok(())
 }

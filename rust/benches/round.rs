@@ -22,8 +22,7 @@ use std::time::Instant;
 use fedpara::config::{Optimizer, RunConfig, Sharing};
 use fedpara::coordinator::Federation;
 use fedpara::data::{partition, synth_text, synth_vision};
-use fedpara::linalg::kernels;
-use fedpara::runtime::Engine;
+use fedpara::runtime::{Engine, GemmBackend};
 use fedpara::util::rng::Rng;
 use fedpara::util::stats::Welford;
 
@@ -109,14 +108,14 @@ fn kernel_speedup_round() -> anyhow::Result<()> {
     let locals: Vec<_> = part.clients.iter().map(|i| data.subset(i)).collect();
     println!("\n== kernel speedup: federated round on native_cnn10_fedpara ==");
     let mut naive_ms = 0.0f64;
-    for use_naive in [true, false] {
-        kernels::force_naive(use_naive);
+    for backend in [GemmBackend::Naive, GemmBackend::Blocked] {
         let mut fed = Federation::new(
             &engine,
             native_cfg("native_cnn10_fedpara", 0),
             locals.clone(),
             test.clone(),
         )?;
+        fed.set_gemm_backend(backend);
         fed.run_round()?; // Warmup.
         let mut w = Welford::new();
         for _ in 0..5 {
@@ -124,7 +123,7 @@ fn kernel_speedup_round() -> anyhow::Result<()> {
             fed.run_round()?;
             w.push(t0.elapsed().as_secs_f64() * 1e3);
         }
-        if use_naive {
+        if backend == GemmBackend::Naive {
             naive_ms = w.mean();
             println!("naive   round {:>8.1} ms ± {:>6.1}", w.mean(), w.std_dev());
         } else {
@@ -136,7 +135,6 @@ fn kernel_speedup_round() -> anyhow::Result<()> {
             );
         }
     }
-    kernels::force_naive(false);
     Ok(())
 }
 

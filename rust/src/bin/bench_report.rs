@@ -1,20 +1,25 @@
 //! `bench_report` — the native-backend performance harness.
 //!
-//! Times the blocked/packed GEMM core against the retained naive kernels
-//! (`linalg::kernels::naive`, toggled at runtime via `force_naive`) at
-//! three granularities — raw kernels, one CNN `train_epoch`, and a full
-//! federated round on the `native_cnn10_fedpara` artifact — plus the
-//! cross-device **scale** section (a round over 10⁴- vs 10⁶-client
-//! virtual populations at equal participants: round time and live store
-//! state must be population-independent), the **wire** section
-//! (per-codec uplink transmit throughput and the deterministic
-//! billed-bytes ratio vs raw fp32), and the **sched** section (the
-//! virtual event clock under the three round policies on a spread-10
-//! fleet: the partial policies' simulated-time win over the sync barrier
-//! is analytic, so the ratios gate host-invariantly), and writes the
-//! numbers to
-//! `BENCH_native.json` so the repo's perf trajectory is tracked run over
-//! run (CI uploads the file as an artifact on every push).
+//! Times the packed GEMM core against the retained naive kernels — each
+//! path selected per call via an explicit [`GemmCtx`], never process
+//! state — at three granularities: raw kernels, one CNN `train_epoch`,
+//! and a full federated round on the `native_cnn10_fedpara` artifact.
+//! Two SIMD/threading sections pin ROADMAP item 2's speedups:
+//! **blocked_vs_simd** (the scalar vs `std::arch` microkernel on the
+//! same packed loop nest) and **threads_1_vs_n** (train_epoch serial vs
+//! row-panel-parallel over the host pool), plus a **cpu** block
+//! recording the detected features so a gate skip is triageable from the
+//! JSON alone. Then the cross-device **scale** section (a round over
+//! 10⁴- vs 10⁶-client virtual populations at equal participants: round
+//! time and live store state must be population-independent), the
+//! **wire** section (per-codec uplink transmit throughput and the
+//! deterministic billed-bytes ratio vs raw fp32), and the **sched**
+//! section (the virtual event clock under the three round policies on a
+//! spread-10 fleet: the partial policies' simulated-time win over the
+//! sync barrier is analytic, so the ratios gate host-invariantly).
+//! Everything is written to `BENCH_native.json` so the repo's perf
+//! trajectory is tracked run over run (CI uploads the file as an
+//! artifact on every push).
 //!
 //! ```text
 //! cargo run --release --bin bench_report            # full shapes
@@ -29,6 +34,7 @@
 //! cargo run --release --bin bench_report -- --smoke --out BENCH_baseline.json
 //! ```
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use fedpara::config::{
@@ -36,9 +42,10 @@ use fedpara::config::{
 };
 use fedpara::coordinator::{wire, ClientDataSource, Federation};
 use fedpara::data::{partition, synth_vision, Dataset};
-use fedpara::linalg::kernels;
+use fedpara::linalg::kernels::{self, GemmBackend, GemmCtx};
 use fedpara::runtime::native::{self, NativeScheme, NativeSpec};
 use fedpara::runtime::{BatchShape, Engine};
+use fedpara::util::threadpool::ThreadPool;
 use fedpara::util::json::Json;
 use fedpara::util::rng::Rng;
 use fedpara::util::stats::Welford;
@@ -85,17 +92,15 @@ fn bench_gemm(smoke: bool, iters: usize) -> Json {
                 "nt" => (randn(n * k, &mut rng), vec![0f32; m * n]),
                 _ => (randn(m * n, &mut rng), vec![0f32; k * n]),
             };
-            let run = |use_naive: bool, out: &mut [f32]| {
-                kernels::force_naive(use_naive);
-                match op {
-                    "nn" => kernels::matmul_nn(&a, &b, m, k, n, out),
-                    "nt" => kernels::matmul_nt(&a, &b, m, k, n, out),
-                    _ => kernels::matmul_tn(&a, &b, m, k, n, out),
-                }
-                kernels::force_naive(false);
+            let run = |ctx: GemmCtx, out: &mut [f32]| match op {
+                "nn" => ctx.matmul_nn(&a, &b, m, k, n, out),
+                "nt" => ctx.matmul_nt(&a, &b, m, k, n, out),
+                _ => ctx.matmul_tn(&a, &b, m, k, n, out),
             };
-            let naive = time_ms(iters, || run(true, &mut out));
-            let blocked = time_ms(iters, || run(false, &mut out));
+            let naive_ctx = GemmCtx { backend: GemmBackend::Naive, pool: None };
+            let blocked_ctx = GemmCtx { backend: GemmBackend::Blocked, pool: None };
+            let naive = time_ms(iters, || run(naive_ctx, &mut out));
+            let blocked = time_ms(iters, || run(blocked_ctx, &mut out));
             std::hint::black_box(&out);
             let (ng, bg) = (gflops(flops, naive.mean()), gflops(flops, blocked.mean()));
             println!(
@@ -122,40 +127,47 @@ fn bench_gemm(smoke: bool, iters: usize) -> Json {
     Json::Arr(rows)
 }
 
-/// One CNN local epoch through the native backend, naive vs blocked.
-fn bench_train_epoch(smoke: bool, iters: usize) -> anyhow::Result<Json> {
-    let artifact = "native_cnn10_fedpara";
-    let engine = Engine::native();
-    let rt = engine.load(artifact)?;
+/// Time one CNN `train_epoch` on `rt` with an explicit backend and pool —
+/// shared by the train_epoch, blocked_vs_simd, and threads_1_vs_n
+/// sections so all three compare exactly the same zero-alloc hot path.
+/// `p` is reset (not re-allocated) per iteration so the timed region is
+/// exactly that hot path and nothing else.
+fn time_train_epoch(
+    rt: &fedpara::runtime::ModelRuntime,
+    backend: GemmBackend,
+    pool: Option<Arc<ThreadPool>>,
+    iters: usize,
+) -> Welford {
     let t = rt.meta.train;
     let mut rng = Rng::new(4);
     let params = rt.meta.layout.init_params(&mut rng);
     let n = t.samples_per_call();
     let x = randn(n * t.feature_dim, &mut rng);
     let y: Vec<f32> = (0..n).map(|_| rng.below(10) as f32).collect();
+    let mut ws = rt.workspace();
+    ws.set_backend(backend);
+    ws.set_pool(pool);
+    let mut p = params.clone();
+    time_ms(iters, || {
+        p.copy_from_slice(&params);
+        let loss = rt
+            .train_epoch_ws(&mut ws, &mut p, &x, &y, 0.05, None, None, 0.0)
+            .expect("train_epoch");
+        std::hint::black_box(loss);
+    })
+}
+
+/// One CNN local epoch through the native backend, naive vs blocked.
+fn bench_train_epoch(smoke: bool, iters: usize) -> anyhow::Result<Json> {
+    let artifact = "native_cnn10_fedpara";
+    let engine = Engine::native();
+    let rt = engine.load(artifact)?;
     let flops = rt.train_flops_estimate().unwrap_or(0.0);
     // ≥3 timed iterations even in smoke: the mean feeds the regression
     // gate, and a single sample is too noisy to compare against.
     let iters = if smoke { 3 } else { iters };
-
-    let mut ws = rt.workspace();
-    // `p` is reset (not re-allocated) per iteration so the timed region is
-    // exactly the zero-alloc hot path being measured.
-    let mut p = params.clone();
-    let mut run = |use_naive: bool| {
-        kernels::force_naive(use_naive);
-        let w = time_ms(iters, || {
-            p.copy_from_slice(&params);
-            let loss = rt
-                .train_epoch_ws(&mut ws, &mut p, &x, &y, 0.05, None, None, 0.0)
-                .expect("train_epoch");
-            std::hint::black_box(loss);
-        });
-        kernels::force_naive(false);
-        w
-    };
-    let naive = run(true);
-    let blocked = run(false);
+    let naive = time_train_epoch(&rt, GemmBackend::Naive, None, iters);
+    let blocked = time_train_epoch(&rt, GemmBackend::Blocked, None, iters);
     let (ng, bg) = (gflops(flops, naive.mean()), gflops(flops, blocked.mean()));
     println!("\n== CNN train_epoch ({artifact}, {} params) ==", rt.meta.param_count);
     println!(
@@ -206,9 +218,9 @@ fn bench_round(smoke: bool, iters: usize) -> anyhow::Result<Json> {
 
     let mut up_bytes = 0u64;
     let mut down_bytes = 0u64;
-    let mut run = |use_naive: bool| -> anyhow::Result<Welford> {
-        kernels::force_naive(use_naive);
+    let mut run = |backend: GemmBackend| -> anyhow::Result<Welford> {
         let mut fed = Federation::new(&engine, cfg.clone(), locals.clone(), test.clone())?;
+        fed.set_gemm_backend(backend);
         fed.run_round()?; // Warmup (fills the per-job scratch pool).
         let mut w = Welford::new();
         for _ in 0..iters {
@@ -218,11 +230,10 @@ fn bench_round(smoke: bool, iters: usize) -> anyhow::Result<Json> {
             up_bytes = r.up_bytes;
             down_bytes = r.down_bytes;
         }
-        kernels::force_naive(false);
         Ok(w)
     };
-    let naive = run(true)?;
-    let blocked = run(false)?;
+    let naive = run(GemmBackend::Naive)?;
+    let blocked = run(GemmBackend::Blocked)?;
     let speedup = naive.mean() / blocked.mean();
     println!("\n== federated round ({artifact}, {clients} clients, E=2) ==");
     println!(
@@ -241,6 +252,95 @@ fn bench_round(smoke: bool, iters: usize) -> anyhow::Result<Json> {
         ("speedup", Json::Num(speedup)),
         ("up_bytes", Json::Num(up_bytes as f64)),
         ("down_bytes", Json::Num(down_bytes as f64)),
+    ]))
+}
+
+/// Blocked-vs-SIMD section: the same packed loop nest with the portable
+/// scalar microkernel vs the `std::arch` AVX2+FMA one, serial, at two
+/// granularities — the gate's 128³ kernel shape and the CNN
+/// `train_epoch` (where the win has to survive im2col and the small
+/// Hadamard-factor GEMMs). Both sides run in the same process on the
+/// same host, so the speedup ratios are host-invariant gate metrics.
+/// When the host lacks AVX2+FMA, `Simd` resolves to `Blocked`; the row
+/// records `simd_available: false` and the gate skips it with a message
+/// instead of comparing a vacuous 1.0× ratio.
+fn bench_blocked_vs_simd(smoke: bool, iters: usize) -> anyhow::Result<Json> {
+    let (m, k, n) = (128usize, 128, 128);
+    let mut rng = Rng::new(23);
+    let a = randn(m * k, &mut rng);
+    let b = randn(n * k, &mut rng);
+    let mut out = vec![0f32; m * n];
+    let blocked_ctx = GemmCtx { backend: GemmBackend::Blocked, pool: None };
+    let simd_ctx = GemmCtx { backend: GemmBackend::Simd, pool: None };
+    let blocked = time_ms(iters, || blocked_ctx.matmul_nt(&a, &b, m, k, n, &mut out));
+    let simd = time_ms(iters, || simd_ctx.matmul_nt(&a, &b, m, k, n, &mut out));
+    std::hint::black_box(&out);
+
+    let artifact = "native_cnn10_fedpara";
+    let engine = Engine::native();
+    let rt = engine.load(artifact)?;
+    let iters_te = if smoke { 3 } else { iters };
+    let train_blocked = time_train_epoch(&rt, GemmBackend::Blocked, None, iters_te);
+    let train_simd = time_train_epoch(&rt, GemmBackend::Simd, None, iters_te);
+
+    let avail = kernels::simd_available();
+    let speedup = blocked.mean() / simd.mean();
+    let train_speedup = train_blocked.mean() / train_simd.mean();
+    println!("\n== blocked vs SIMD microkernel (AVX2+FMA {}) ==", if avail { "on" } else { "OFF" });
+    println!(
+        "matmul_nt {m}x{k}x{n}: blocked {:>8.3} ms  simd {:>8.3} ms  {speedup:.2}x",
+        blocked.mean(),
+        simd.mean()
+    );
+    println!(
+        "train_epoch {artifact}: blocked {:>8.2} ms  simd {:>8.2} ms  {train_speedup:.2}x",
+        train_blocked.mean(),
+        train_simd.mean()
+    );
+    Ok(Json::obj(vec![
+        ("simd_available", Json::Bool(avail)),
+        ("op", Json::Str("nt".to_string())),
+        ("m", Json::Num(m as f64)),
+        ("k", Json::Num(k as f64)),
+        ("n", Json::Num(n as f64)),
+        ("blocked_ms", Json::Num(blocked.mean())),
+        ("simd_ms", Json::Num(simd.mean())),
+        ("speedup", Json::Num(speedup)),
+        ("artifact", Json::Str(artifact.to_string())),
+        ("train_blocked_ms", Json::Num(train_blocked.mean())),
+        ("train_simd_ms", Json::Num(train_simd.mean())),
+        ("train_speedup", Json::Num(train_speedup)),
+    ]))
+}
+
+/// 1-vs-N-thread section: the CNN `train_epoch` with the workspace GEMMs
+/// serial vs row-panel-parallel over a host-sized pool, on the default
+/// (`Auto`) backend — exactly what production job scratch runs. The
+/// serial and parallel legs run on the same host so the speedup is a
+/// host-invariant gate metric; a single-core host records `threads: 1`
+/// and the gate skips the row.
+fn bench_threads(smoke: bool, iters: usize) -> anyhow::Result<Json> {
+    let artifact = "native_cnn10_fedpara";
+    let engine = Engine::native();
+    let rt = engine.load(artifact)?;
+    let iters = if smoke { 3 } else { iters };
+    let threads = ThreadPool::host_parallelism();
+    let serial = time_train_epoch(&rt, GemmBackend::Auto, None, iters);
+    let parallel =
+        time_train_epoch(&rt, GemmBackend::Auto, Some(Arc::new(ThreadPool::new(threads))), iters);
+    let speedup = serial.mean() / parallel.mean();
+    println!("\n== train_epoch threading: 1 vs {threads} threads ({artifact}) ==");
+    println!(
+        "serial {:>8.2} ms  {threads}-thread {:>8.2} ms  {speedup:.2}x",
+        serial.mean(),
+        parallel.mean()
+    );
+    Ok(Json::obj(vec![
+        ("artifact", Json::Str(artifact.to_string())),
+        ("threads", Json::Num(threads as f64)),
+        ("serial_ms", Json::Num(serial.mean())),
+        ("parallel_ms", Json::Num(parallel.mean())),
+        ("speedup", Json::Num(speedup)),
     ]))
 }
 
@@ -602,6 +702,120 @@ fn gate_check(
     primary
 }
 
+/// Gate check of the blocked-vs-SIMD section. The **primary** metrics
+/// are the two speedup ratios (kernel-shape and train_epoch): both
+/// microkernels run in the same process on the same host, so the ratios
+/// transfer across hardware classes. Skips (with a message, not a pass)
+/// when either run lacked AVX2+FMA — a feature gap is a host property,
+/// not a regression. The SIMD wall time keeps the usual catastrophic
+/// backstop, active only when the baseline carries measured ms (the
+/// placeholder omits them until a gate-class refresh).
+fn gate_check_simd(base: &Json, cur: &Json, tol_pct: f64, regressions: &mut usize) -> bool {
+    let label = "simd: blocked vs simd microkernel";
+    if base.get("simd_available").as_bool() == Some(false)
+        || cur.get("simd_available").as_bool() == Some(false)
+    {
+        println!("  {label:<44} SKIP (no AVX2+FMA — scalar fallback on one side)");
+        return false;
+    }
+    let mut ok = true;
+    let mut primary = false;
+    for key in ["speedup", "train_speedup"] {
+        if let (Some(bs), Some(cs)) = (base.get(key).as_f64(), cur.get(key).as_f64()) {
+            primary = true;
+            let floor = bs * (1.0 - tol_pct / 100.0);
+            if cs < floor {
+                *regressions += 1;
+                ok = false;
+                println!(
+                    "  {label:<44} REGRESSION: {key} {cs:.2}x < {bs:.2}x −{tol_pct}% \
+                     (floor {floor:.2}x) — the SIMD path lost its win over scalar"
+                );
+            }
+        }
+    }
+    if !primary {
+        println!("  {label:<44} note: speedup fields missing — backstop check only");
+    }
+    if let (Some(bm), Some(cm)) = (base.get("simd_ms").as_f64(), cur.get("simd_ms").as_f64()) {
+        if bm >= GATE_NOISE_FLOOR_MS && cm > bm * GATE_CATASTROPHIC_FACTOR {
+            *regressions += 1;
+            ok = false;
+            println!(
+                "  {label:<44} REGRESSION: simd {cm:.3} ms > \
+                 {GATE_CATASTROPHIC_FACTOR}x baseline {bm:.3} ms"
+            );
+        }
+    }
+    if ok {
+        println!(
+            "  {label:<44} ok: kernel {:.2}x, train {:.2}x",
+            cur.get("speedup").as_f64().unwrap_or(f64::NAN),
+            cur.get("train_speedup").as_f64().unwrap_or(f64::NAN)
+        );
+    }
+    primary
+}
+
+/// Gate check of the 1-vs-N-thread section. The **primary** metric is
+/// the serial/parallel train_epoch speedup — measured in one process on
+/// one host, so the ratio transfers where wall time does not. Skips on a
+/// single-core current host (no parallel leg exists to compare); a
+/// thread-count mismatch vs the baseline host is only noted, because the
+/// generous ratio tolerance absorbs pool-width differences where a hard
+/// skip would silently un-gate most hosts. The parallel wall time keeps
+/// the catastrophic backstop when the baseline carries measured ms.
+fn gate_check_threads(base: &Json, cur: &Json, tol_pct: f64, regressions: &mut usize) -> bool {
+    let label = "threads: train_epoch 1 vs N";
+    if cur.get("threads").as_f64().unwrap_or(1.0) < 2.0 {
+        println!("  {label:<44} SKIP (single-core host — no parallel leg to compare)");
+        return false;
+    }
+    if let (Some(bt), Some(ct)) = (base.get("threads").as_f64(), cur.get("threads").as_f64()) {
+        if bt != ct {
+            println!("  {label:<44} note: pool width {ct} vs baseline {bt} — ratio still gated");
+        }
+    }
+    let mut ok = true;
+    let primary = match (base.get("speedup").as_f64(), cur.get("speedup").as_f64()) {
+        (Some(bs), Some(cs)) => {
+            let floor = bs * (1.0 - tol_pct / 100.0);
+            if cs < floor {
+                *regressions += 1;
+                ok = false;
+                println!(
+                    "  {label:<44} REGRESSION: 1-vs-N speedup {cs:.2}x < {bs:.2}x −{tol_pct}% \
+                     (floor {floor:.2}x) — the parallel panels lost their win"
+                );
+            }
+            true
+        }
+        _ => {
+            println!("  {label:<44} note: speedup field missing — backstop check only");
+            false
+        }
+    };
+    if let (Some(bm), Some(cm)) = (base.get("parallel_ms").as_f64(), cur.get("parallel_ms").as_f64())
+    {
+        if bm >= GATE_NOISE_FLOOR_MS && cm > bm * GATE_CATASTROPHIC_FACTOR {
+            *regressions += 1;
+            ok = false;
+            println!(
+                "  {label:<44} REGRESSION: parallel {cm:.3} ms > \
+                 {GATE_CATASTROPHIC_FACTOR}x baseline {bm:.3} ms"
+            );
+        }
+    }
+    if ok {
+        println!(
+            "  {label:<44} ok: {:.2}x over {} threads",
+            cur.get("speedup").as_f64().unwrap_or(f64::NAN),
+            cur.get("threads").as_f64().unwrap_or(f64::NAN)
+        );
+    }
+    primary
+}
+
 /// Gate check of the cross-device scale section. The **primary** metric
 /// is `live_bytes_ratio` (live store state at 10⁶ vs 10⁴ clients, equal
 /// participants): it is a deterministic byte count, so it transfers
@@ -888,6 +1102,29 @@ fn compare_against_baseline(
              refresh the baseline)"
         );
     }
+    // SIMD microkernel and threading speedups: ratio-primary like the
+    // sections above; hosts without AVX2+FMA or a second core record the
+    // condition in the JSON and skip with a message.
+    if base.get("blocked_vs_simd") != &Json::Null {
+        compared += gate_check_simd(
+            base.get("blocked_vs_simd"),
+            doc.get("blocked_vs_simd"),
+            tol_pct,
+            &mut regressions,
+        ) as usize;
+    } else {
+        println!("  blocked_vs_simd: SKIP (baseline has no section — refresh the baseline)");
+    }
+    if base.get("threads_1_vs_n") != &Json::Null {
+        compared += gate_check_threads(
+            base.get("threads_1_vs_n"),
+            doc.get("threads_1_vs_n"),
+            tol_pct,
+            &mut regressions,
+        ) as usize;
+    } else {
+        println!("  threads_1_vs_n: SKIP (baseline has no section — refresh the baseline)");
+    }
     // Cross-device scale: population-independence of round cost and
     // live store state (only when the baseline has the section — older
     // baselines predate it).
@@ -989,9 +1226,25 @@ fn main() -> anyhow::Result<()> {
     // means feed the regression gate, so n=1 noise is not acceptable.
     let iters = if smoke { 5 } else { 10 };
 
+    let features = kernels::detected_cpu_features();
+    println!(
+        "cpu features: [{}] (simd backend {})",
+        features.join(", "),
+        if kernels::simd_available() { "available" } else { "unavailable — scalar fallback" }
+    );
+    let cpu = Json::obj(vec![
+        ("simd_available", Json::Bool(kernels::simd_available())),
+        (
+            "features",
+            Json::Arr(features.into_iter().map(|f| Json::Str(f.to_string())).collect()),
+        ),
+    ]);
+
     let gemm = bench_gemm(smoke, iters);
     let epoch = bench_train_epoch(smoke, iters)?;
     let round = bench_round(smoke, iters)?;
+    let simd = bench_blocked_vs_simd(smoke, iters)?;
+    let threads = bench_threads(smoke, iters)?;
     let scale = bench_scale(smoke, iters)?;
     let wire = bench_wire(smoke, iters);
     let sched = bench_sched(smoke)?;
@@ -1001,9 +1254,12 @@ fn main() -> anyhow::Result<()> {
         ("schema", Json::Num(1.0)),
         ("mode", Json::Str(if smoke { "smoke" } else { "full" }.to_string())),
         ("host_threads", Json::Num(host as f64)),
+        ("cpu", cpu),
         ("gemm", gemm),
         ("train_epoch", epoch),
         ("round", round),
+        ("blocked_vs_simd", simd),
+        ("threads_1_vs_n", threads),
         ("scale", scale),
         ("wire", wire),
         ("sched", sched),

@@ -41,7 +41,7 @@ use super::wire::{self, Downlink, WireCodec, FINGERPRINT_BYTES};
 use crate::config::{Optimizer, RoundPolicy, RunConfig, Sharing};
 use crate::data::{assemble_batches_into, BatchStack, Dataset};
 use crate::parameterization::{Layout, SegmentKind};
-use crate::runtime::{Engine, EvalOutput, ModelRuntime, Workspace};
+use crate::runtime::{Engine, EvalOutput, GemmBackend, ModelRuntime, Workspace};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
@@ -106,6 +106,9 @@ pub struct Federation {
     /// Shared (`Arc` so eval workspaces can borrow it for intra-op
     /// row-blocked GEMMs while the fan-out is idle).
     pool: Arc<ThreadPool>,
+    /// GEMM backend every scratch workspace (training jobs **and** eval)
+    /// routes through — one knob, no per-path asymmetry.
+    gemm_backend: GemmBackend,
     /// Reusable per-job scratch, one entry per in-flight client job,
     /// returned to the pool at fold time — so steady-state rounds run the
     /// whole local-training hot path without heap allocation.
@@ -128,9 +131,15 @@ struct JobScratch {
 }
 
 impl JobScratch {
-    fn new(rt: &ModelRuntime) -> JobScratch {
+    /// Job workspaces run *inside* pool jobs, so they never attach the
+    /// pool themselves (`ThreadPool::run_borrowed` must not be re-entered)
+    /// — but they do take the federation's backend choice, so training and
+    /// eval can never disagree about which GEMM path executes.
+    fn new(rt: &ModelRuntime, backend: GemmBackend) -> JobScratch {
+        let mut ws = rt.workspace();
+        ws.set_backend(backend);
         JobScratch {
-            ws: rt.workspace(),
+            ws,
             stack: BatchStack { x: Vec::new(), y: Vec::new(), nbatches: 0, batch: 0, feature_dim: 0 },
         }
     }
@@ -441,11 +450,14 @@ impl Federation {
             n => n,
         };
         let pool = Arc::new(ThreadPool::new(requested.min(population)));
+        let gemm_backend = GemmBackend::default();
         // Evaluation runs on the coordinator thread while the fan-out is
         // idle, so its workspace can safely borrow the pool for intra-op
-        // row-blocked GEMMs.
+        // row-blocked GEMMs. It shares the training jobs' backend choice —
+        // the two paths route through the same `GemmCtx` by construction.
         let mut eval_ws = EvalScratch::new(&rt);
         eval_ws.set_pool(Some(Arc::clone(&pool)));
+        eval_ws.set_backend(gemm_backend);
         let sched = Scheduler::new(cfg.sched, cfg.seed);
         Ok(Federation {
             cfg,
@@ -462,6 +474,7 @@ impl Federation {
             up_codec,
             downlink,
             pool,
+            gemm_backend,
             scratch_pool: Vec::new(),
             eval_scratch: Mutex::new(eval_ws),
             round: 0,
@@ -471,6 +484,19 @@ impl Federation {
 
     pub fn meta(&self) -> &crate::runtime::ArtifactMeta {
         &self.rt.meta
+    }
+
+    /// Select the GEMM backend for **all** federation compute — pooled job
+    /// scratch (training) and the cached eval scratch alike. Replaces the
+    /// old process-global `force_naive` toggle: the choice is per
+    /// federation, applied to already-pooled workspaces immediately, and
+    /// carried into every scratch allocated later.
+    pub fn set_gemm_backend(&mut self, backend: GemmBackend) {
+        self.gemm_backend = backend;
+        for scratch in self.scratch_pool.iter_mut() {
+            scratch.ws.set_backend(backend);
+        }
+        self.eval_scratch.lock().expect("eval workspace lock poisoned").set_backend(backend);
     }
 
     pub fn num_clients(&self) -> usize {
@@ -673,7 +699,7 @@ impl Federation {
                 scratch: self
                     .scratch_pool
                     .pop()
-                    .unwrap_or_else(|| JobScratch::new(&self.rt)),
+                    .unwrap_or_else(|| JobScratch::new(&self.rt, self.gemm_backend)),
             });
         }
 
@@ -957,6 +983,11 @@ impl EvalScratch {
     /// See [`Workspace::set_pool`] (same safety caveat).
     pub fn set_pool(&mut self, pool: Option<Arc<ThreadPool>>) {
         self.ws.set_pool(pool);
+    }
+
+    /// See [`Workspace::set_backend`].
+    pub fn set_backend(&mut self, backend: GemmBackend) {
+        self.ws.set_backend(backend);
     }
 }
 

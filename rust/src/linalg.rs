@@ -16,27 +16,35 @@ use crate::util::rng::Rng;
 /// benches: matmuls in the three contraction shapes a dense net needs, and
 /// im2col/col2im for stride-1 same-padding conv2d.
 ///
-/// All three matmul entry points are thin transpose-flag wrappers over one
-/// cache-blocked, register-tiled GEMM core ([`gemm`]): A/B panels are
-/// packed into contiguous MC×KC / KC×NC buffers and consumed by a branch-
-/// free MR×NR microkernel whose inner loops autovectorize. The pre-blocking
-/// scalar triple loops survive as [`naive`] — the property-test oracle and
-/// the "before" side of `bench_report`'s speedup measurement, selectable at
-/// runtime via [`force_naive`].
+/// Every matmul routes through a [`GemmCtx`] — a per-call-site descriptor
+/// naming the kernel implementation ([`GemmBackend`]) and an optional
+/// `ThreadPool` the packed macro-loops may fan out over. The blocked core
+/// packs A/B panels into contiguous MC×KC / KC×NC buffers consumed by an
+/// MR×NR register tile; `Simd` swaps that tile for an AVX2+FMA microkernel
+/// when the host has it (runtime-detected via [`simd_available`],
+/// portable-scalar fallback otherwise) and `Auto` (the default) picks the
+/// best available. The pre-blocking scalar triple loops survive as
+/// [`naive`] — the property-test oracle and the "before" side of
+/// `bench_report`'s speedup measurement, selectable per call via
+/// [`GemmBackend::Naive`]. The bare [`matmul_nt`]/[`matmul_nn`]/
+/// [`matmul_tn`] free functions are thin `GemmCtx::default()` (Auto,
+/// serial) wrappers.
 ///
-/// Unlike the old loops, the core has **no** `if av == 0.0 { continue }`
+/// Unlike the old loops, the packed core has **no** `if av == 0.0`
 /// skip: every k term is accumulated, so IEEE non-finite propagation is
 /// exact (`0 · Inf = NaN` reaches the output) and the inner loop carries no
 /// data-dependent branch.
 ///
 /// Determinism: each output element accumulates its k terms in a fixed
 /// order that depends only on `k`, never on the tile sizes, the position of
-/// the row in a pack panel, or the number of rows in the call — so
-/// per-row results are bit-identical across batch sizes and across the
-/// row-blocked parallel variant ([`matmul_nt_on`]).
+/// the row in a pack panel, or the number of rows in the call — so, for a
+/// fixed backend, per-row results are bit-identical across batch sizes and
+/// across row-parallel partitions (any pool, any thread count). The AVX2
+/// tile fuses each multiply-add (one rounding per term instead of two), so
+/// `Simd` output may differ from `Blocked` by that rounding — once,
+/// deterministically — never across splits of the same backend.
 pub mod kernels {
     use std::cell::RefCell;
-    use std::sync::atomic::{AtomicBool, Ordering};
 
     use crate::util::threadpool::ThreadPool;
 
@@ -51,21 +59,154 @@ pub mod kernels {
     /// Column-block of B packed per (KC, NC) panel.
     const NC: usize = 512;
 
-    /// Benchmark hook: route the three matmul entry points through the
-    /// pre-blocking [`naive`] loops instead of the packed core, so
-    /// `bench_report` can measure before/after on the same build. Not for
-    /// production use — the naive `nn`/`tn` loops skip zero A terms and
-    /// therefore do not propagate `0 · Inf` to the output (`nt` never had
-    /// the skip and propagates like the core).
-    pub fn force_naive(on: bool) {
-        FORCE_NAIVE.store(on, Ordering::Relaxed);
+    /// Which kernel implementation a [`GemmCtx`] routes through.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+    pub enum GemmBackend {
+        /// The pre-blocking scalar loops ([`naive`]) — the measurable
+        /// "before" baseline. Not for production: the naive `nn`/`tn`
+        /// loops skip zero A terms and therefore do not propagate
+        /// `0 · Inf` to the output (`nt` never had the skip).
+        Naive,
+        /// The packed cache-blocked core with the portable scalar tile.
+        Blocked,
+        /// The packed core with the AVX2+FMA register tile. Silently runs
+        /// as [`Blocked`](GemmBackend::Blocked) when the host lacks the
+        /// features (or off x86-64), so it is always safe to request.
+        Simd,
+        /// Best available: [`Simd`](GemmBackend::Simd) where
+        /// [`simd_available`], else [`Blocked`](GemmBackend::Blocked).
+        #[default]
+        Auto,
     }
 
-    static FORCE_NAIVE: AtomicBool = AtomicBool::new(false);
+    impl GemmBackend {
+        /// Collapse `Auto` / unavailable-`Simd` onto the backend that will
+        /// actually execute on this host.
+        #[inline]
+        pub fn resolve(self) -> GemmBackend {
+            match self {
+                GemmBackend::Auto | GemmBackend::Simd if simd_available() => GemmBackend::Simd,
+                GemmBackend::Auto | GemmBackend::Simd => GemmBackend::Blocked,
+                other => other,
+            }
+        }
 
-    #[inline]
-    fn naive_enabled() -> bool {
-        FORCE_NAIVE.load(Ordering::Relaxed)
+        /// Stable lower-case name for bench/JSON output.
+        pub fn name(self) -> &'static str {
+            match self {
+                GemmBackend::Naive => "naive",
+                GemmBackend::Blocked => "blocked",
+                GemmBackend::Simd => "simd",
+                GemmBackend::Auto => "auto",
+            }
+        }
+    }
+
+    /// Whether the AVX2+FMA microkernel can run on this host, detected
+    /// once per process. Always `false` off x86-64.
+    pub fn simd_available() -> bool {
+        #[cfg(target_arch = "x86_64")]
+        {
+            static AVAIL: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+            *AVAIL.get_or_init(|| {
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+            })
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    }
+
+    /// The x86 SIMD feature levels this host reports, lowest first — for
+    /// the bench harness's triage output. Empty off x86-64.
+    pub fn detected_cpu_features() -> Vec<&'static str> {
+        #[cfg(target_arch = "x86_64")]
+        {
+            let mut out = Vec::new();
+            if is_x86_feature_detected!("sse2") {
+                out.push("sse2");
+            }
+            if is_x86_feature_detected!("sse4.1") {
+                out.push("sse4.1");
+            }
+            if is_x86_feature_detected!("avx") {
+                out.push("avx");
+            }
+            if is_x86_feature_detected!("avx2") {
+                out.push("avx2");
+            }
+            if is_x86_feature_detected!("fma") {
+                out.push("fma");
+            }
+            if is_x86_feature_detected!("avx512f") {
+                out.push("avx512f");
+            }
+            out
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            Vec::new()
+        }
+    }
+
+    /// Per-call-site GEMM descriptor: which backend runs and which pool
+    /// (if any) the packed macro-loops may fan out over. `Copy` and cheap —
+    /// build one where the call-site context (workspace, job scratch,
+    /// bench arm) is decided and pass it down. `GemmCtx::default()` is the
+    /// serial Auto context the bare free functions use.
+    ///
+    /// Threading: the row-panel split preserves each output element's
+    /// k-accumulation order exactly (see `gemm_rows`), so results are
+    /// bit-identical across pool sizes — `pool: None` vs `Some` never
+    /// changes a bit, only wall time. **The pool must be idle**: never
+    /// call through a pool-carrying context from inside a job already
+    /// running on that same pool (the blocked wait would deadlock); keep
+    /// training-job scratch contexts pool-less
+    /// ([`serial`](GemmCtx::serial)) unless the caller owns the fan-out.
+    #[derive(Clone, Copy, Debug, Default)]
+    pub struct GemmCtx<'p> {
+        /// Kernel implementation, resolved per call via
+        /// [`GemmBackend::resolve`].
+        pub backend: GemmBackend,
+        /// Worker pool for the row-panel fan-out; `None` = serial.
+        pub pool: Option<&'p ThreadPool>,
+    }
+
+    impl<'p> GemmCtx<'p> {
+        /// This context with the pool dropped — for nested or per-timestep
+        /// GEMMs where fan-out overhead (or a busy pool) rules threading
+        /// out but the backend choice must stick.
+        pub fn serial(self) -> GemmCtx<'p> {
+            GemmCtx { backend: self.backend, pool: None }
+        }
+
+        /// `out[m,n] = a[m,k] · b[n,k]ᵀ` — the X·Yᵀ / forward-pass shape.
+        pub fn matmul_nt(self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+            debug_assert_eq!(b.len(), n * k);
+            match self.backend.resolve() {
+                GemmBackend::Naive => naive::matmul_nt(a, b, m, k, n, out),
+                be => gemm_par(be == GemmBackend::Simd, self.pool, false, true, m, k, n, a, b, out),
+            }
+        }
+
+        /// `out[m,n] = a[m,k] · b[k,n]`.
+        pub fn matmul_nn(self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+            match self.backend.resolve() {
+                GemmBackend::Naive => naive::matmul_nn(a, b, m, k, n, out),
+                be => gemm_par(be == GemmBackend::Simd, self.pool, false, false, m, k, n, a, b, out),
+            }
+        }
+
+        /// `out[k,n] = a[m,k]ᵀ · b[m,n]` — gradient contractions over the
+        /// batch. The parallel split is over the *output* rows (columns of
+        /// `a`), so this shape threads like the other two.
+        pub fn matmul_tn(self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+            match self.backend.resolve() {
+                GemmBackend::Naive => naive::matmul_tn(a, b, m, k, n, out),
+                be => gemm_par(be == GemmBackend::Simd, self.pool, true, false, k, m, n, a, b, out),
+            }
+        }
     }
 
     /// The pre-blocking scalar kernels, kept verbatim (zero-skip branches
@@ -231,12 +372,12 @@ pub mod kernels {
         }
     }
 
-    /// MR×NR register tile: accumulate `kc` outer products from the packed
-    /// panels, then add the live `mr × nr` corner into C. The p-loop body
-    /// is branch-free and fully unrollable — each `acc[i][j]` is an
-    /// independent chain over p, so results never depend on tiling.
-    /// Padded panel lanes can hold garbage (0 · Inf); they are masked off
-    /// by the `mr`/`nr` bounds at writeback.
+    /// Portable-scalar MR×NR register tile: accumulate `kc` outer products
+    /// from the packed panels, then add the live `mr × nr` corner into C.
+    /// The p-loop body is branch-free and fully unrollable — each
+    /// `acc[i][j]` is an independent chain over p, so results never depend
+    /// on tiling. Padded panel lanes can hold garbage (0 · Inf); they are
+    /// masked off by the `mr`/`nr` bounds at writeback.
     fn micro(kc: usize, apan: &[f32], bpan: &[f32], c: &mut [f32], ldc: usize, mr: usize, nr: usize) {
         let mut acc = [[0f32; NR]; MR];
         for p in 0..kc {
@@ -256,16 +397,129 @@ pub mod kernels {
         }
     }
 
-    /// The one packed GEMM core: `out[m,n] = op(A)[m,k] · op(B)[k,n]`,
-    /// fully overwriting `out`. `a` stores A row-major as m×k (k×m when
-    /// `ta`); `b` stores B as k×n (n×k when `tb`).
+    /// AVX2+FMA variant of [`micro`]: each output row is held in two
+    /// 8-lane f32 accumulators (NR = 16 = 2 × 8 AVX2 lanes). Per (i, j)
+    /// the k-chain is one fused multiply-add per p in ascending order —
+    /// the *same per-element order* as the scalar tile, so a fixed `Simd`
+    /// backend is deterministic and partition-invariant; FMA's single
+    /// rounding per term shifts values vs the scalar tile once, globally,
+    /// never per-split.
+    #[cfg(target_arch = "x86_64")]
+    mod avx2 {
+        use super::{MR, NR};
+        use std::arch::x86_64::*;
+
+        /// # Safety
+        /// Requires AVX2 and FMA, which callers establish at runtime via
+        /// [`super::simd_available`].
+        #[target_feature(enable = "avx2", enable = "fma")]
+        pub unsafe fn micro(
+            kc: usize,
+            apan: &[f32],
+            bpan: &[f32],
+            c: &mut [f32],
+            ldc: usize,
+            mr: usize,
+            nr: usize,
+        ) {
+            debug_assert!(apan.len() >= kc * MR);
+            debug_assert!(bpan.len() >= kc * NR);
+            unsafe {
+                let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+                for p in 0..kc {
+                    let b0 = _mm256_loadu_ps(bpan.as_ptr().add(p * NR));
+                    let b1 = _mm256_loadu_ps(bpan.as_ptr().add(p * NR + 8));
+                    for (i, row) in acc.iter_mut().enumerate() {
+                        let ai = _mm256_broadcast_ss(&apan[p * MR + i]);
+                        row[0] = _mm256_fmadd_ps(ai, b0, row[0]);
+                        row[1] = _mm256_fmadd_ps(ai, b1, row[1]);
+                    }
+                }
+                if nr == NR {
+                    for (i, row) in acc.iter().enumerate().take(mr) {
+                        let cp = c.as_mut_ptr().add(i * ldc);
+                        _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), row[0]));
+                        _mm256_storeu_ps(
+                            cp.add(8),
+                            _mm256_add_ps(_mm256_loadu_ps(cp.add(8)), row[1]),
+                        );
+                    }
+                } else {
+                    // Ragged corner: spill the full tile row, then add only
+                    // the live prefix — padded lanes may hold 0·Inf garbage
+                    // and must never touch C.
+                    let mut spill = [0f32; NR];
+                    for (i, row) in acc.iter().enumerate().take(mr) {
+                        _mm256_storeu_ps(spill.as_mut_ptr(), row[0]);
+                        _mm256_storeu_ps(spill.as_mut_ptr().add(8), row[1]);
+                        let cr = &mut c[i * ldc..i * ldc + nr];
+                        for (cv, &av) in cr.iter_mut().zip(spill.iter()) {
+                            *cv += av;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Route one register tile to the scalar or AVX2 microkernel. Both
+    /// compute identical per-element accumulation chains in identical
+    /// order, so for a given `simd` flag the result is deterministic and
+    /// split-invariant.
     #[allow(clippy::too_many_arguments)]
-    fn gemm(ta: bool, tb: bool, m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    #[inline]
+    fn micro_dispatch(
+        simd: bool,
+        kc: usize,
+        apan: &[f32],
+        bpan: &[f32],
+        c: &mut [f32],
+        ldc: usize,
+        mr: usize,
+        nr: usize,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if simd {
+            // SAFETY: `simd` is only ever set after `simd_available()`
+            // confirmed AVX2+FMA on this host.
+            unsafe { avx2::micro(kc, apan, bpan, c, ldc, mr, nr) };
+            return;
+        }
+        let _ = simd;
+        micro(kc, apan, bpan, c, ldc, mr, nr);
+    }
+
+    /// Row-range packed GEMM core: computes output rows
+    /// `[row0, row0 + rows)` of `op(A)[m,k] · op(B)[k,n]` into `out` (the
+    /// `rows × n` slice for that range, fully overwritten). `a` stores A
+    /// row-major as m×k (k×m when `ta`); `b` stores B as k×n (n×k when
+    /// `tb`). `row0` offsets the A packing only — `a` and `b` stay whole,
+    /// which is what lets the `tn` shape split its output rows (columns of
+    /// `a`) without slicing `a`'s storage.
+    ///
+    /// The j/p loop order and each element's k-accumulation order are
+    /// identical for every `(row0, rows)` split, so parallel partitions
+    /// are bit-identical to the serial `(0, m)` call.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_rows(
+        simd: bool,
+        ta: bool,
+        tb: bool,
+        row0: usize,
+        rows: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+    ) {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), k * n);
-        debug_assert_eq!(out.len(), m * n);
+        debug_assert_eq!(out.len(), rows * n);
+        debug_assert!(row0 + rows <= m);
         out.fill(0.0);
-        if m == 0 || n == 0 || k == 0 {
+        if rows == 0 || n == 0 || k == 0 {
             return;
         }
         PACK.with(|cell| {
@@ -277,9 +531,9 @@ pub mod kernels {
                 for p0 in (0..k).step_by(KC) {
                     let kc = KC.min(k - p0);
                     pack_b(b, tb, k, n, p0, j0, kc, nc, pb);
-                    for i0 in (0..m).step_by(MC) {
-                        let mc = MC.min(m - i0);
-                        pack_a(a, ta, m, k, i0, p0, mc, kc, pa);
+                    for i0 in (0..rows).step_by(MC) {
+                        let mc = MC.min(rows - i0);
+                        pack_a(a, ta, m, k, row0 + i0, p0, mc, kc, pa);
                         for bp in 0..nc.div_ceil(NR) {
                             let jb = bp * NR;
                             let nr = NR.min(nc - jb);
@@ -288,7 +542,8 @@ pub mod kernels {
                                 let ib = ap * MR;
                                 let mr = MR.min(mc - ib);
                                 let apan = &pa[ap * kc * MR..(ap * kc + kc) * MR];
-                                micro(
+                                micro_dispatch(
+                                    simd,
                                     kc,
                                     apan,
                                     bpan,
@@ -305,49 +560,26 @@ pub mod kernels {
         });
     }
 
-    /// `out[m,n] = a[m,k] · b[n,k]ᵀ` — the X·Yᵀ / forward-pass shape.
-    pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-        if naive_enabled() {
-            naive::matmul_nt(a, b, m, k, n, out);
-        } else {
-            gemm(false, true, m, k, n, a, b, out);
-        }
-    }
-
-    /// `out[m,n] = a[m,k] · b[k,n]`.
-    pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-        if naive_enabled() {
-            naive::matmul_nn(a, b, m, k, n, out);
-        } else {
-            gemm(false, false, m, k, n, a, b, out);
-        }
-    }
-
-    /// `out[k,n] = a[m,k]ᵀ · b[m,n]` — gradient contractions over the batch.
-    pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-        if naive_enabled() {
-            naive::matmul_tn(a, b, m, k, n, out);
-        } else {
-            gemm(true, false, k, m, n, a, b, out);
-        }
-    }
-
-    /// Minimum multiply count before the row-parallel variants fan out;
-    /// below this the task hand-off costs more than it saves.
+    /// Minimum multiply count before the packed GEMM fans out over a
+    /// pool; below this the task hand-off costs more than it saves.
     const PAR_MIN_MULS: usize = 1 << 21;
 
-    /// Row-blocked parallel `A·Bᵀ` over `pool`: splits the `m` output rows
-    /// into one contiguous block per worker, each running the serial core
-    /// on its slice of A and C. Per-row results are bit-identical to the
-    /// serial kernels (the k-accumulation order is row-independent).
+    /// Pool-aware front of the packed core: split the `m` output rows of
+    /// `op(A) · op(B)` into one contiguous chunk per worker, each running
+    /// [`gemm_rows`] on its disjoint slice of `out` with the whole `a`/`b`
+    /// shared. Chunks are absolute row ranges and `gemm_rows` keeps each
+    /// element's k-order fixed, so every split — including the serial
+    /// `None` path — produces bit-identical output.
     ///
-    /// Runs serially when `pool` is `None`, the pool has one worker, or
-    /// the problem is too small to amortize the fan-out. **Must not be
-    /// called from inside a job running on the same pool** — the blocked
-    /// wait would deadlock against the occupied workers.
+    /// Runs serially when `pool` is `None`, has one worker, or the
+    /// problem is too small to amortize the fan-out. **Must not be called
+    /// from inside a job running on the same pool** — the blocked wait
+    /// would deadlock against the occupied workers.
     #[allow(clippy::too_many_arguments)]
-    fn rows_par(
+    fn gemm_par(
+        simd: bool,
         pool: Option<&ThreadPool>,
+        ta: bool,
         tb: bool,
         m: usize,
         k: usize,
@@ -356,48 +588,38 @@ pub mod kernels {
         b: &[f32],
         out: &mut [f32],
     ) {
-        let serial = |a: &[f32], m: usize, out: &mut [f32]| {
-            if naive_enabled() {
-                if tb {
-                    naive::matmul_nt(a, b, m, k, n, out);
-                } else {
-                    naive::matmul_nn(a, b, m, k, n, out);
-                }
-            } else {
-                gemm(false, tb, m, k, n, a, b, out);
-            }
-        };
         let pool = match pool {
             Some(p) if p.size() > 1 && m >= 2 * MR && m * k * n >= PAR_MIN_MULS => p,
-            _ => return serial(a, m, out),
+            _ => return gemm_rows(simd, ta, tb, 0, m, m, k, n, a, b, out),
         };
         debug_assert!(n > 0, "parallel threshold guarantees a non-empty row");
         let chunk = m.div_ceil(pool.size()).max(MR);
         let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(pool.size());
         for (ci, oc) in out.chunks_mut(chunk * n).enumerate() {
             let rows = oc.len() / n;
-            let ac = &a[ci * chunk * k..(ci * chunk + rows) * k];
-            tasks.push(Box::new(move || serial(ac, rows, oc)));
+            tasks.push(Box::new(move || {
+                gemm_rows(simd, ta, tb, ci * chunk, rows, m, k, n, a, b, oc)
+            }));
         }
         pool.run_borrowed(tasks);
     }
 
-    /// [`matmul_nt`] with optional row-blocked parallelism over `pool` —
-    /// the forward-pass shape is the only one the eval/bench hot paths
-    /// parallelize (an `nn`/`tn` variant would be dead API today; add one
-    /// alongside a consumer when backward needs it).
-    #[allow(clippy::too_many_arguments)]
-    pub fn matmul_nt_on(
-        pool: Option<&ThreadPool>,
-        a: &[f32],
-        b: &[f32],
-        m: usize,
-        k: usize,
-        n: usize,
-        out: &mut [f32],
-    ) {
-        debug_assert_eq!(b.len(), n * k);
-        rows_par(pool, true, m, k, n, a, b, out);
+    /// `out[m,n] = a[m,k] · b[n,k]ᵀ` under the default (Auto, serial)
+    /// [`GemmCtx`].
+    pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        GemmCtx::default().matmul_nt(a, b, m, k, n, out);
+    }
+
+    /// `out[m,n] = a[m,k] · b[k,n]` under the default (Auto, serial)
+    /// [`GemmCtx`].
+    pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        GemmCtx::default().matmul_nn(a, b, m, k, n, out);
+    }
+
+    /// `out[k,n] = a[m,k]ᵀ · b[m,n]` under the default (Auto, serial)
+    /// [`GemmCtx`].
+    pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        GemmCtx::default().matmul_tn(a, b, m, k, n, out);
     }
 
     /// Column count of one im2col row: the conv's fan-in `c·k·k`.
@@ -944,87 +1166,99 @@ mod tests {
 
     #[test]
     fn matmuls_propagate_zero_times_inf() {
-        // Removing the naive nn/tn kernels' `av == 0.0` skip changes
-        // semantics when the other operand is non-finite: IEEE says
-        // 0·Inf = NaN, and the blocked core must deliver that NaN to the
-        // output for every shape. (The retained naive nn/tn reference
-        // would silently produce 0 here; naive nt never had the skip.)
-        let (m, k, n) = (3usize, 4usize, 2usize);
-        let mut a = vec![0f32; m * k]; // Row 1 is all zeros.
-        for (j, v) in a.iter_mut().enumerate() {
-            if j / k != 1 {
-                *v = 1.0;
+        use kernels::{GemmBackend, GemmCtx};
+        // The packed core has no `av == 0.0` skip, in any tile: IEEE says
+        // 0·Inf = NaN, and every non-naive backend must deliver that NaN
+        // to the output for every shape — the AVX2 tile included. (The
+        // retained naive nn/tn reference would silently produce 0 here;
+        // naive nt never had the skip.)
+        for backend in [GemmBackend::Blocked, GemmBackend::Simd, GemmBackend::Auto] {
+            let ctx = GemmCtx { backend, pool: None };
+            let (m, k, n) = (3usize, 4usize, 2usize);
+            let mut a = vec![0f32; m * k]; // Row 1 is all zeros.
+            for (j, v) in a.iter_mut().enumerate() {
+                if j / k != 1 {
+                    *v = 1.0;
+                }
             }
-        }
-        let b_nn = vec![f32::INFINITY; k * n];
-        let mut out = vec![0f32; m * n];
-        kernels::matmul_nn(&a, &b_nn, m, k, n, &mut out);
-        assert!(out[n].is_nan(), "0·Inf must reach matmul_nn output");
+            let b_nn = vec![f32::INFINITY; k * n];
+            let mut out = vec![0f32; m * n];
+            ctx.matmul_nn(&a, &b_nn, m, k, n, &mut out);
+            assert!(out[n].is_nan(), "{backend:?}: 0·Inf must reach matmul_nn output");
 
-        let b_nt = vec![f32::INFINITY; n * k];
-        kernels::matmul_nt(&a, &b_nt, m, k, n, &mut out);
-        assert!(out[n].is_nan(), "0·Inf must reach matmul_nt output");
+            let b_nt = vec![f32::INFINITY; n * k];
+            ctx.matmul_nt(&a, &b_nt, m, k, n, &mut out);
+            assert!(out[n].is_nan(), "{backend:?}: 0·Inf must reach matmul_nt output");
 
-        // tn: zero *column* of A (row of Aᵀ) hits an Inf B.
-        let mut a_tn = vec![1f32; m * k];
-        for i in 0..m {
-            a_tn[i * k + 2] = 0.0;
+            // tn: zero *column* of A (row of Aᵀ) hits an Inf B.
+            let mut a_tn = vec![1f32; m * k];
+            for i in 0..m {
+                a_tn[i * k + 2] = 0.0;
+            }
+            let b_tn = vec![f32::INFINITY; m * n];
+            let mut out_kn = vec![0f32; k * n];
+            ctx.matmul_tn(&a_tn, &b_tn, m, k, n, &mut out_kn);
+            assert!(out_kn[2 * n].is_nan(), "{backend:?}: 0·Inf must reach matmul_tn output");
+            // NaN in an input always lands in the affected outputs.
+            let mut a_nan = vec![1f32; m * k];
+            a_nan[0] = f32::NAN;
+            let b_one = vec![1f32; k * n];
+            ctx.matmul_nn(&a_nan, &b_one, m, k, n, &mut out);
+            assert!(out[0].is_nan(), "{backend:?}");
+            assert!(!out[m * n - 1].is_nan(), "{backend:?}");
         }
-        let b_tn = vec![f32::INFINITY; m * n];
-        let mut out_kn = vec![0f32; k * n];
-        kernels::matmul_tn(&a_tn, &b_tn, m, k, n, &mut out_kn);
-        assert!(out_kn[2 * n].is_nan(), "0·Inf must reach matmul_tn output");
-        // NaN in an input always lands in the affected outputs.
-        let mut a_nan = vec![1f32; m * k];
-        a_nan[0] = f32::NAN;
-        let b_one = vec![1f32; k * n];
-        kernels::matmul_nn(&a_nan, &b_one, m, k, n, &mut out);
-        assert!(out[0].is_nan());
-        assert!(!out[m * n - 1].is_nan());
     }
 
-    /// All three contraction shapes against the f64 `Mat` reference on
-    /// non-tile-multiple sizes — every edge case of the MR/NR/MC/KC/NC
-    /// blocking (partial panels, single rows/cols, k spanning one panel).
+    /// All three contraction shapes, every backend, against the f64 `Mat`
+    /// reference on non-tile-multiple sizes — every edge case of the
+    /// MR/NR/MC/KC/NC blocking (partial panels, single rows/cols, k
+    /// spanning one panel), plus the SIMD tile's ragged writeback corner.
+    /// Looping `Naive` too doubles as the all-backends build/pass smoke.
     #[test]
-    fn blocked_matmuls_match_reference_on_ragged_sizes() {
+    fn matmuls_match_reference_on_ragged_sizes_for_all_backends() {
+        use kernels::{GemmBackend, GemmCtx};
         let mut rng = Rng::new(2024);
         for &m in &[1usize, 3, 7, 17, 33] {
             for &k in &[1usize, 3, 7, 17, 33] {
                 for &n in &[1usize, 3, 7, 17, 33] {
                     let a = randn32(m * k, &mut rng);
                     let am = Mat::from_f32(m, k, &a);
-                    let mut out = vec![0f32; m * n];
+                    let b_nt = randn32(n * k, &mut rng);
+                    let r_nt = am.matmul_t(&Mat::from_f32(n, k, &b_nt));
+                    let b_nn = randn32(k * n, &mut rng);
+                    let r_nn = am.matmul(&Mat::from_f32(k, n, &b_nn));
+                    let b_tn = randn32(m * n, &mut rng);
+                    let r_tn = am.transpose().matmul(&Mat::from_f32(m, n, &b_tn));
+                    for backend in
+                        [GemmBackend::Naive, GemmBackend::Blocked, GemmBackend::Simd]
+                    {
+                        let ctx = GemmCtx { backend, pool: None };
+                        let mut out = vec![0f32; m * n];
 
-                    let b = randn32(n * k, &mut rng);
-                    kernels::matmul_nt(&a, &b, m, k, n, &mut out);
-                    let r = am.matmul_t(&Mat::from_f32(n, k, &b));
-                    for (j, (x, y)) in out.iter().zip(r.data.iter()).enumerate() {
-                        assert!(
-                            (*x as f64 - y).abs() < 1e-4 * (1.0 + y.abs()),
-                            "nt ({m},{k},{n}) elem {j}: {x} vs {y}"
-                        );
-                    }
+                        ctx.matmul_nt(&a, &b_nt, m, k, n, &mut out);
+                        for (j, (x, y)) in out.iter().zip(r_nt.data.iter()).enumerate() {
+                            assert!(
+                                (*x as f64 - y).abs() < 1e-4 * (1.0 + y.abs()),
+                                "{backend:?} nt ({m},{k},{n}) elem {j}: {x} vs {y}"
+                            );
+                        }
 
-                    let b = randn32(k * n, &mut rng);
-                    kernels::matmul_nn(&a, &b, m, k, n, &mut out);
-                    let r = am.matmul(&Mat::from_f32(k, n, &b));
-                    for (j, (x, y)) in out.iter().zip(r.data.iter()).enumerate() {
-                        assert!(
-                            (*x as f64 - y).abs() < 1e-4 * (1.0 + y.abs()),
-                            "nn ({m},{k},{n}) elem {j}: {x} vs {y}"
-                        );
-                    }
+                        ctx.matmul_nn(&a, &b_nn, m, k, n, &mut out);
+                        for (j, (x, y)) in out.iter().zip(r_nn.data.iter()).enumerate() {
+                            assert!(
+                                (*x as f64 - y).abs() < 1e-4 * (1.0 + y.abs()),
+                                "{backend:?} nn ({m},{k},{n}) elem {j}: {x} vs {y}"
+                            );
+                        }
 
-                    let b = randn32(m * n, &mut rng);
-                    let mut out_kn = vec![0f32; k * n];
-                    kernels::matmul_tn(&a, &b, m, k, n, &mut out_kn);
-                    let r = am.transpose().matmul(&Mat::from_f32(m, n, &b));
-                    for (j, (x, y)) in out_kn.iter().zip(r.data.iter()).enumerate() {
-                        assert!(
-                            (*x as f64 - y).abs() < 1e-4 * (1.0 + y.abs()),
-                            "tn ({m},{k},{n}) elem {j}: {x} vs {y}"
-                        );
+                        let mut out_kn = vec![0f32; k * n];
+                        ctx.matmul_tn(&a, &b_tn, m, k, n, &mut out_kn);
+                        for (j, (x, y)) in out_kn.iter().zip(r_tn.data.iter()).enumerate() {
+                            assert!(
+                                (*x as f64 - y).abs() < 1e-4 * (1.0 + y.abs()),
+                                "{backend:?} tn ({m},{k},{n}) elem {j}: {x} vs {y}"
+                            );
+                        }
                     }
                 }
             }
@@ -1032,48 +1266,103 @@ mod tests {
     }
 
     #[test]
-    fn blocked_matches_naive_on_blocking_boundaries() {
+    fn packed_backends_match_naive_on_blocking_boundaries() {
+        use kernels::{GemmBackend, GemmCtx};
         // Sizes straddling the KC/NC/MC block edges, checked against the
         // retained naive loops (f32 tolerance: summation order differs).
         let mut rng = Rng::new(77);
         for &(m, k, n) in &[(65usize, 257usize, 30usize), (130, 300, 513), (5, 512, 17)] {
             let a = randn32(m * k, &mut rng);
             let b = randn32(k * n, &mut rng);
-            let mut fast = vec![0f32; m * n];
             let mut slow = vec![0f32; m * n];
-            kernels::matmul_nn(&a, &b, m, k, n, &mut fast);
             kernels::naive::matmul_nn(&a, &b, m, k, n, &mut slow);
-            for (j, (x, y)) in fast.iter().zip(&slow).enumerate() {
-                assert!(
-                    (x - y).abs() < 1e-3 * (1.0 + y.abs()),
-                    "nn ({m},{k},{n}) elem {j}: {x} vs {y}"
-                );
+            for backend in [GemmBackend::Blocked, GemmBackend::Simd] {
+                let mut fast = vec![0f32; m * n];
+                GemmCtx { backend, pool: None }.matmul_nn(&a, &b, m, k, n, &mut fast);
+                for (j, (x, y)) in fast.iter().zip(&slow).enumerate() {
+                    assert!(
+                        (x - y).abs() < 1e-3 * (1.0 + y.abs()),
+                        "{backend:?} nn ({m},{k},{n}) elem {j}: {x} vs {y}"
+                    );
+                }
             }
         }
     }
 
+    /// The PR-3 invariant under the new API: for a fixed backend, pooled
+    /// partitions of all three shapes are **bit-identical** to the serial
+    /// call, for even (4-worker) and ragged (3-worker) row chunkings and
+    /// for the `pool: None` fallback.
     #[test]
     fn row_parallel_matmuls_are_bit_identical_to_serial() {
         use crate::util::threadpool::ThreadPool;
-        // Big enough to clear the parallel threshold; per-row accumulation
-        // order is row-independent, so equality must be exact.
+        use kernels::{GemmBackend, GemmCtx};
+        // Big enough to clear the parallel threshold (m·k·n = 2.3M) in
+        // every shape; matmul_tn splits over its k_out = 256 output rows.
         let (m, k, n) = (256usize, 48usize, 192usize);
         let mut rng = Rng::new(78);
         let a = randn32(m * k, &mut rng);
         let b_nt = randn32(n * k, &mut rng);
-        let mut serial = vec![0f32; m * n];
-        let mut par = vec![0f32; m * n];
-        let pool = ThreadPool::new(4);
-        kernels::matmul_nt(&a, &b_nt, m, k, n, &mut serial);
-        kernels::matmul_nt_on(Some(&pool), &a, &b_nt, m, k, n, &mut par);
-        assert_eq!(serial, par, "matmul_nt_on must be bit-identical");
-        // And the serial fallback path (no pool) matches too.
-        kernels::matmul_nt_on(None, &a, &b_nt, m, k, n, &mut par);
-        assert_eq!(serial, par);
-        // A 3-worker pool gives ragged row chunks; still bit-identical.
+        let b_nn = randn32(k * n, &mut rng);
+        // tn operands: a_tn is [n × m] so its transpose has m = 256 output
+        // rows (the axis the pool splits), b_tn is [n × k].
+        let a_tn = randn32(n * m, &mut rng);
+        let b_tn = randn32(n * k, &mut rng);
+        let pool4 = ThreadPool::new(4);
         let pool3 = ThreadPool::new(3);
-        kernels::matmul_nt_on(Some(&pool3), &a, &b_nt, m, k, n, &mut par);
-        assert_eq!(serial, par);
+        for backend in [GemmBackend::Blocked, GemmBackend::Simd] {
+            let serial = GemmCtx { backend, pool: None };
+            let mut want = vec![0f32; m * n];
+            let mut got = vec![0f32; m * n];
+            serial.matmul_nt(&a, &b_nt, m, k, n, &mut want);
+            for pool in [Some(&pool4), None, Some(&pool3)] {
+                GemmCtx { backend, pool }.matmul_nt(&a, &b_nt, m, k, n, &mut got);
+                assert_eq!(want, got, "{backend:?} nt, pool {:?}", pool.map(|p| p.size()));
+            }
+            serial.matmul_nn(&a, &b_nn, m, k, n, &mut want);
+            for pool in [Some(&pool4), None, Some(&pool3)] {
+                GemmCtx { backend, pool }.matmul_nn(&a, &b_nn, m, k, n, &mut got);
+                assert_eq!(want, got, "{backend:?} nn, pool {:?}", pool.map(|p| p.size()));
+            }
+            // tn with m_in = n rows, k_out = m, n_out = k: output is m×k.
+            let mut want_tn = vec![0f32; m * k];
+            let mut got_tn = vec![0f32; m * k];
+            serial.matmul_tn(&a_tn, &b_tn, n, m, k, &mut want_tn);
+            for pool in [Some(&pool4), None, Some(&pool3)] {
+                GemmCtx { backend, pool }.matmul_tn(&a_tn, &b_tn, n, m, k, &mut got_tn);
+                assert_eq!(want_tn, got_tn, "{backend:?} tn, pool {:?}", pool.map(|p| p.size()));
+            }
+        }
+    }
+
+    /// Same backend → same bits, across reruns and across thread counts;
+    /// and `Auto` is exactly its resolved backend, so defaulted call sites
+    /// inherit the same guarantee.
+    #[test]
+    fn backend_choice_is_deterministic_and_auto_matches_resolved() {
+        use crate::util::threadpool::ThreadPool;
+        use kernels::{GemmBackend, GemmCtx};
+        let (m, k, n) = (256usize, 48usize, 192usize);
+        let mut rng = Rng::new(79);
+        let a = randn32(m * k, &mut rng);
+        let b = randn32(n * k, &mut rng);
+        let pool = ThreadPool::new(4);
+        for backend in [GemmBackend::Naive, GemmBackend::Blocked, GemmBackend::Simd] {
+            let mut first = vec![0f32; m * n];
+            GemmCtx { backend, pool: None }.matmul_nt(&a, &b, m, k, n, &mut first);
+            let mut again = vec![0f32; m * n];
+            GemmCtx { backend, pool: None }.matmul_nt(&a, &b, m, k, n, &mut again);
+            assert_eq!(first, again, "{backend:?}: rerun changed bits");
+            GemmCtx { backend, pool: Some(&pool) }.matmul_nt(&a, &b, m, k, n, &mut again);
+            assert_eq!(first, again, "{backend:?}: pooled run changed bits");
+        }
+        let mut auto = vec![0f32; m * n];
+        GemmCtx::default().matmul_nt(&a, &b, m, k, n, &mut auto);
+        let mut resolved = vec![0f32; m * n];
+        let be = GemmBackend::Auto.resolve();
+        assert_ne!(be, GemmBackend::Auto, "resolve() must pick a concrete backend");
+        GemmCtx { backend: be, pool: None }.matmul_nt(&a, &b, m, k, n, &mut resolved);
+        assert_eq!(auto, resolved, "Auto must be bit-identical to {be:?}");
     }
 
     #[test]

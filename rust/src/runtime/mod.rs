@@ -37,6 +37,7 @@ use anyhow::{anyhow, Result};
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
+pub use crate::linalg::kernels::GemmBackend;
 pub use manifest::{ArtifactMeta, Backend, BatchShape, Manifest};
 
 /// Compiled train+eval executables for one artifact.
@@ -93,6 +94,14 @@ impl Workspace {
     pub fn set_pool(&mut self, pool: Option<Arc<crate::util::threadpool::ThreadPool>>) {
         if let Some(ws) = &mut self.native {
             ws.set_pool(pool);
+        }
+    }
+
+    /// Select the GEMM backend every kernel in this workspace routes
+    /// through (default [`GemmBackend::Auto`]). No-op for PJRT.
+    pub fn set_backend(&mut self, backend: GemmBackend) {
+        if let Some(ws) = &mut self.native {
+            ws.set_backend(backend);
         }
     }
 }

@@ -47,7 +47,7 @@ use std::ops::Range;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use crate::linalg::kernels::{col2im, im2col, matmul_nn, matmul_nt, matmul_nt_on, matmul_tn};
+use crate::linalg::kernels::{col2im, im2col, GemmBackend, GemmCtx};
 use crate::parameterization::{
     gamma_rank, lowrank_rank_for_budget, Layout, LayerShape, Segment, SegmentKind,
 };
@@ -764,25 +764,36 @@ pub struct Workspace {
     dc: Vec<f32>,
     /// Flat parameter gradient of the last backward pass.
     grad: Vec<f32>,
-    /// Optional intra-op pool for row-blocked forward GEMMs on large
-    /// batches (eval / bench paths).
+    /// Optional intra-op pool for row-parallel GEMMs on large batches
+    /// (eval / bench paths); combined with `backend` into the
+    /// [`GemmCtx`] every forward/backward/compose contraction runs under.
     pool: Option<Arc<ThreadPool>>,
+    /// GEMM kernel implementation for every contraction this workspace
+    /// runs (`Auto` = best available on the host).
+    backend: GemmBackend,
 }
 
 impl Workspace {
-    /// Attach (or detach) a pool for row-blocked intra-op parallelism on
-    /// the large forward GEMMs. Only safe when the caller does not itself
-    /// run as a job on that pool — see [`ThreadPool::run_borrowed`]; the
-    /// coordinator attaches its pool for global/personalized evaluation
-    /// (which runs on the coordinator thread while the pool is idle) and
-    /// never for client training jobs (which run *on* the pool).
+    /// Attach (or detach) a pool for row-parallel intra-op GEMMs. Only
+    /// safe when the caller does not itself run as a job on that pool —
+    /// see [`ThreadPool::run_borrowed`]; the coordinator attaches its pool
+    /// for global/personalized evaluation (which runs on the coordinator
+    /// thread while the pool is idle) and never for client training jobs
+    /// (which run *on* the pool).
     pub fn set_pool(&mut self, pool: Option<Arc<ThreadPool>>) {
         self.pool = pool;
+    }
+
+    /// Select the GEMM kernel implementation for every contraction this
+    /// workspace runs (forward, backward, compose, im2col contractions).
+    pub fn set_backend(&mut self, backend: GemmBackend) {
+        self.backend = backend;
     }
 }
 
 /// Backward-pass temporaries split out of the workspace so the layer
-/// helpers can borrow them alongside `grad`, the activations and the tape.
+/// helpers can borrow them alongside `grad`, the activations and the tape,
+/// plus the [`GemmCtx`] every backward contraction runs under.
 struct GradScratch<'a> {
     dw: &'a mut Vec<f32>,
     dw1: &'a mut Vec<f32>,
@@ -796,6 +807,7 @@ struct GradScratch<'a> {
     dz: &'a mut Vec<f32>,
     dh: &'a mut Vec<f32>,
     dc: &'a mut Vec<f32>,
+    ctx: GemmCtx<'a>,
 }
 
 // ---------------------------------------------------------------------------
@@ -820,6 +832,7 @@ fn hadamard_into(w1: &[f32], w2: &[f32], personalized: bool, w: &mut [f32]) {
 /// (shared by FC layers and both LSTM gate matrices).
 #[allow(clippy::too_many_arguments)]
 fn compose_fcparam(
+    ctx: GemmCtx,
     param: &FcParam,
     m: usize,
     n: usize,
@@ -834,30 +847,30 @@ fn compose_fcparam(
         FcParam::LowRank { x, y, r } => {
             *dense = None;
             ensure(w, m * n);
-            matmul_nt(&params[x.clone()], &params[y.clone()], m, *r, n, w);
+            ctx.matmul_nt(&params[x.clone()], &params[y.clone()], m, *r, n, w);
         }
         FcParam::Factored { x1, y1, x2, y2, r, personalized } => {
             *dense = None;
             ensure(w1, m * n);
             ensure(w2, m * n);
             ensure(w, m * n);
-            matmul_nt(&params[x1.clone()], &params[y1.clone()], m, *r, n, w1);
-            matmul_nt(&params[x2.clone()], &params[y2.clone()], m, *r, n, w2);
+            ctx.matmul_nt(&params[x1.clone()], &params[y1.clone()], m, *r, n, w1);
+            ctx.matmul_nt(&params[x2.clone()], &params[y2.clone()], m, *r, n, w2);
             hadamard_into(w1, w2, *personalized, w);
         }
     }
 }
 
-fn compose_fc_ws(desc: &FcDesc, params: &[f32], lb: &mut LayerBufs) {
+fn compose_fc_ws(ctx: GemmCtx, desc: &FcDesc, params: &[f32], lb: &mut LayerBufs) {
     let LayerBufs { w, w1, w2, dense, .. } = lb;
-    compose_fcparam(&desc.param, desc.m, desc.n, params, w, w1, w2, dense);
+    compose_fcparam(ctx, &desc.param, desc.m, desc.n, params, w, w1, w2, dense);
 }
 
-fn compose_lstm_ws(desc: &LstmDesc, params: &[f32], lb: &mut LayerBufs) {
+fn compose_lstm_ws(ctx: GemmCtx, desc: &LstmDesc, params: &[f32], lb: &mut LayerBufs) {
     let g4 = 4 * desc.h;
     let LayerBufs { w, w1, w2, dense, wh, w1h, w2h, dense_h, .. } = lb;
-    compose_fcparam(&desc.w_ih, g4, desc.e, params, w, w1, w2, dense);
-    compose_fcparam(&desc.w_hh, g4, desc.h, params, wh, w1h, w2h, dense_h);
+    compose_fcparam(ctx, &desc.w_ih, g4, desc.e, params, w, w1, w2, dense);
+    compose_fcparam(ctx, &desc.w_hh, g4, desc.h, params, wh, w1h, w2h, dense_h);
 }
 
 /// One Tucker-2 half of the Prop-3 composition: `W = 𝒯 ×₁ X ×₂ Y`
@@ -865,6 +878,7 @@ fn compose_lstm_ws(desc: &LstmDesc, params: &[f32], lb: &mut LayerBufs) {
 /// then `W[o,(i,κ)] = Σ_a X[o,a]·U[a,(i,κ)]`, written into `w` and `u`.
 #[allow(clippy::too_many_arguments)]
 fn tucker2_into(
+    ctx: GemmCtx,
     x: &[f32],
     y: &[f32],
     t: &[f32],
@@ -876,12 +890,20 @@ fn tucker2_into(
     u: &mut [f32],
 ) {
     for a in 0..r {
-        matmul_nn(y, &t[a * r * kk..(a + 1) * r * kk], i, r, kk, &mut u[a * i * kk..(a + 1) * i * kk]);
+        // Per-slice GEMMs are small — keep them serial under any pool.
+        ctx.serial().matmul_nn(
+            y,
+            &t[a * r * kk..(a + 1) * r * kk],
+            i,
+            r,
+            kk,
+            &mut u[a * i * kk..(a + 1) * i * kk],
+        );
     }
-    matmul_nn(x, u, o, r, i * kk, w);
+    ctx.matmul_nn(x, u, o, r, i * kk, w);
 }
 
-fn compose_conv_ws(desc: &ConvDesc, params: &[f32], lb: &mut LayerBufs) {
+fn compose_conv_ws(ctx: GemmCtx, desc: &ConvDesc, params: &[f32], lb: &mut LayerBufs) {
     let (o, i, kk) = (desc.o, desc.i, desc.k * desc.k);
     match &desc.param {
         ConvParam::Dense { w } => lb.dense = Some(w.clone()),
@@ -893,6 +915,7 @@ fn compose_conv_ws(desc: &ConvDesc, params: &[f32], lb: &mut LayerBufs) {
             ensure(&mut lb.u1, r * i * kk);
             ensure(&mut lb.u2, r * i * kk);
             tucker2_into(
+                ctx,
                 &params[x1.clone()],
                 &params[y1.clone()],
                 &params[t1.clone()],
@@ -904,6 +927,7 @@ fn compose_conv_ws(desc: &ConvDesc, params: &[f32], lb: &mut LayerBufs) {
                 &mut lb.u1,
             );
             tucker2_into(
+                ctx,
                 &params[x2.clone()],
                 &params[y2.clone()],
                 &params[t2.clone()],
@@ -964,16 +988,16 @@ fn scatter_fcparam_grad(
         FcParam::Dense { w } => grad[w.clone()].copy_from_slice(s.dw),
         FcParam::LowRank { x, y, r } => {
             // dX = dW·Y, dY = dWᵀ·X.
-            matmul_nn(s.dw, &params[y.clone()], m, n, *r, &mut grad[x.clone()]);
-            matmul_tn(s.dw, &params[x.clone()], m, n, *r, &mut grad[y.clone()]);
+            s.ctx.matmul_nn(s.dw, &params[y.clone()], m, n, *r, &mut grad[x.clone()]);
+            s.ctx.matmul_tn(s.dw, &params[x.clone()], m, n, *r, &mut grad[y.clone()]);
         }
         FcParam::Factored { x1, y1, x2, y2, r, personalized } => {
             hadamard_grad_split(s.dw, w1, w2, *personalized, s.dw1, s.dw2);
             // dX1 = dW1·Y1, dY1 = dW1ᵀ·X1 (and likewise for the 2nd factor).
-            matmul_nn(s.dw1, &params[y1.clone()], m, n, *r, &mut grad[x1.clone()]);
-            matmul_tn(s.dw1, &params[x1.clone()], m, n, *r, &mut grad[y1.clone()]);
-            matmul_nn(s.dw2, &params[y2.clone()], m, n, *r, &mut grad[x2.clone()]);
-            matmul_tn(s.dw2, &params[x2.clone()], m, n, *r, &mut grad[y2.clone()]);
+            s.ctx.matmul_nn(s.dw1, &params[y1.clone()], m, n, *r, &mut grad[x1.clone()]);
+            s.ctx.matmul_tn(s.dw1, &params[x1.clone()], m, n, *r, &mut grad[y1.clone()]);
+            s.ctx.matmul_nn(s.dw2, &params[y2.clone()], m, n, *r, &mut grad[x2.clone()]);
+            s.ctx.matmul_tn(s.dw2, &params[x2.clone()], m, n, *r, &mut grad[y2.clone()]);
         }
     }
 }
@@ -993,6 +1017,7 @@ fn scatter_fc_grad_ws(
 /// `d𝒯[a,b,κ] = Σ_i Y[i,b]·V[a,i,κ]` and `dY[i,b] = Σ_{a,κ} V[a,i,κ]·𝒯[a,b,κ]`.
 #[allow(clippy::too_many_arguments)]
 fn tucker2_grad_ws(
+    ctx: GemmCtx,
     x: &[f32],
     y: &[f32],
     t: &[f32],
@@ -1010,18 +1035,33 @@ fn tucker2_grad_ws(
 ) {
     let ikk = i * kk;
     ensure(gx, o * r);
-    matmul_nt(dwh, u, o, ikk, r, gx);
+    ctx.matmul_nt(dwh, u, o, ikk, r, gx);
     ensure(v, r * ikk);
-    matmul_tn(x, dwh, o, r, ikk, v);
+    ctx.matmul_tn(x, dwh, o, r, ikk, v);
     ensure(gt, r * r * kk);
     for a in 0..r {
-        matmul_tn(y, &v[a * ikk..(a + 1) * ikk], i, r, kk, &mut gt[a * r * kk..(a + 1) * r * kk]);
+        // Per-slice contractions are small — serial under any pool.
+        ctx.serial().matmul_tn(
+            y,
+            &v[a * ikk..(a + 1) * ikk],
+            i,
+            r,
+            kk,
+            &mut gt[a * r * kk..(a + 1) * r * kk],
+        );
     }
     ensure(gy, i * r);
     gy.fill(0.0);
     ensure(tmp, i * r);
     for a in 0..r {
-        matmul_nt(&v[a * ikk..(a + 1) * ikk], &t[a * r * kk..(a + 1) * r * kk], i, kk, r, tmp);
+        ctx.serial().matmul_nt(
+            &v[a * ikk..(a + 1) * ikk],
+            &t[a * r * kk..(a + 1) * r * kk],
+            i,
+            kk,
+            r,
+            tmp,
+        );
         for (g, &tv) in gy.iter_mut().zip(tmp.iter()) {
             *g += tv;
         }
@@ -1044,6 +1084,7 @@ fn scatter_conv_grad_ws(
         ConvParam::Factored { x1, y1, t1, x2, y2, t2, r, personalized } => {
             hadamard_grad_split(s.dw, &lb.w1, &lb.w2, *personalized, s.dw1, s.dw2);
             tucker2_grad_ws(
+                s.ctx,
                 &params[x1.clone()],
                 &params[y1.clone()],
                 &params[t1.clone()],
@@ -1063,6 +1104,7 @@ fn scatter_conv_grad_ws(
             grad[y1.clone()].copy_from_slice(s.gy);
             grad[t1.clone()].copy_from_slice(s.gt);
             tucker2_grad_ws(
+                s.ctx,
                 &params[x2.clone()],
                 &params[y2.clone()],
                 &params[t2.clone()],
@@ -1091,18 +1133,18 @@ fn scatter_conv_grad_ws(
 
 #[allow(clippy::too_many_arguments)]
 fn forward_fc_ws(
+    ctx: GemmCtx,
     desc: &FcDesc,
     lb: &LayerBufs,
     params: &[f32],
     input: &[f32],
     out: &mut Vec<f32>,
     bsz: usize,
-    pool: Option<&ThreadPool>,
 ) {
     let (m, n) = (desc.m, desc.n);
     let rows = bsz * desc.rows_per_sample;
     ensure(out, rows * m);
-    matmul_nt_on(pool, input, lb.weight(params), rows, n, m, out);
+    ctx.matmul_nt(input, lb.weight(params), rows, n, m, out);
     let bias = &params[desc.bias.clone()];
     for b in 0..rows {
         let or = &mut out[b * m..(b + 1) * m];
@@ -1155,13 +1197,13 @@ fn sigmoid(x: f32) -> f32 {
 /// Output: `[L·bsz, h]` — every step's hidden state, feeding the
 /// per-position head.
 fn forward_lstm_ws(
+    ctx: GemmCtx,
     desc: &LstmDesc,
     lb: &mut LayerBufs,
     params: &[f32],
     input: &[f32],
     out: &mut Vec<f32>,
     bsz: usize,
-    pool: Option<&ThreadPool>,
 ) {
     let (e, h, l) = (desc.e, desc.h, desc.seq_len);
     let g4 = 4 * h;
@@ -1170,7 +1212,7 @@ fn forward_lstm_ws(
     let w_ih = weight_of(dense, w, params);
     let w_hh = weight_of(dense_h, wh, params);
     ensure(gates, rows * g4);
-    matmul_nt_on(pool, input, w_ih, rows, e, g4, gates);
+    ctx.matmul_nt(input, w_ih, rows, e, g4, gates);
     ensure(hs, (l + 1) * bsz * h);
     ensure(cells, (l + 1) * bsz * h);
     ensure(tanhc, rows * h);
@@ -1187,7 +1229,7 @@ fn forward_lstm_ws(
         let c_next = &mut c_future[..bsz * h];
         let tc_t = &mut tanhc[t * bsz * h..(t + 1) * bsz * h];
         // rec = h_{t-1} · W_hhᵀ — serial: per-step GEMMs are small.
-        matmul_nt(h_prev, w_hh, bsz, h, g4, rec);
+        ctx.serial().matmul_nt(h_prev, w_hh, bsz, h, g4, rec);
         let zt = &mut gates[t * bsz * g4..(t + 1) * bsz * g4];
         for b in 0..bsz {
             let zr = &mut zt[b * g4..(b + 1) * g4];
@@ -1218,13 +1260,13 @@ fn forward_lstm_ws(
 
 #[allow(clippy::too_many_arguments)]
 fn forward_conv_ws(
+    ctx: GemmCtx,
     desc: &ConvDesc,
     lb: &mut LayerBufs,
     params: &[f32],
     input: &[f32],
     out: &mut Vec<f32>,
     bsz: usize,
-    pool: Option<&ThreadPool>,
 ) {
     let (o, i, k, h, w) = (desc.o, desc.i, desc.k, desc.h, desc.w);
     let ikk = i * k * k;
@@ -1232,7 +1274,7 @@ fn forward_conv_ws(
     ensure(&mut lb.cols, rows * ikk);
     im2col(input, bsz, h, w, i, k, &mut lb.cols);
     ensure(out, rows * o);
-    matmul_nt_on(pool, &lb.cols, lb.weight(params), rows, ikk, o, out);
+    ctx.matmul_nt(&lb.cols, lb.weight(params), rows, ikk, o, out);
     let bias = &params[desc.bias.clone()];
     for row in 0..rows {
         let or = &mut out[row * o..(row + 1) * o];
@@ -1320,11 +1362,11 @@ fn backward_fc_ws(
         grad[desc.bias.start + j] = acc;
     }
     ensure(s.dw, m * n);
-    matmul_tn(d, input, rows, m, n, s.dw);
+    s.ctx.matmul_tn(d, input, rows, m, n, s.dw);
     scatter_fc_grad_ws(desc, lb, params, grad, s);
     if need_dx {
         ensure(d_next, rows * n);
-        matmul_nn(d, lb.weight(params), rows, m, n, d_next);
+        s.ctx.matmul_nn(d, lb.weight(params), rows, m, n, d_next);
     }
     // Else: first layer — nothing upstream consumes the input gradient.
 }
@@ -1401,8 +1443,9 @@ fn backward_lstm_ws(
                 s.dc[b * h + j] = dcv * f;
             }
         }
-        // dh_{t-1} = dz_t · W_hh (fully overwrites the carry).
-        matmul_nn(dzt, w_hh, bsz, g4, h, s.dh);
+        // dh_{t-1} = dz_t · W_hh (fully overwrites the carry; serial:
+        // per-step GEMMs are small).
+        s.ctx.serial().matmul_nn(dzt, w_hh, bsz, g4, h, s.dh);
     }
     for q in 0..g4 {
         let mut acc = 0f32;
@@ -1412,15 +1455,15 @@ fn backward_lstm_ws(
         grad[desc.bias.start + q] = acc;
     }
     ensure(s.dw, g4 * e);
-    matmul_tn(s.dz, input, rows, g4, e, s.dw);
+    s.ctx.matmul_tn(s.dz, input, rows, g4, e, s.dw);
     scatter_fcparam_grad(&desc.w_ih, g4, e, &lb.w1, &lb.w2, params, grad, s);
     ensure(s.dw, g4 * h);
-    matmul_tn(s.dz, &lb.hs[..rows * h], rows, g4, h, s.dw);
+    s.ctx.matmul_tn(s.dz, &lb.hs[..rows * h], rows, g4, h, s.dw);
     scatter_fcparam_grad(&desc.w_hh, g4, h, &lb.w1h, &lb.w2h, params, grad, s);
     if need_dx {
         let w_ih = weight_of(&lb.dense, &lb.w, params);
         ensure(d_next, rows * e);
-        matmul_nn(s.dz, w_ih, rows, g4, e, d_next);
+        s.ctx.matmul_nn(s.dz, w_ih, rows, g4, e, d_next);
     }
 }
 
@@ -1453,11 +1496,11 @@ fn backward_conv_ws(
         grad[desc.bias.start + oc] = acc;
     }
     ensure(s.dw, o * ikk);
-    matmul_tn(d, &lb.cols, rows, o, ikk, s.dw);
+    s.ctx.matmul_tn(d, &lb.cols, rows, o, ikk, s.dw);
     scatter_conv_grad_ws(desc, lb, params, grad, s);
     if need_dx {
         ensure(s.dcols, rows * ikk);
-        matmul_nn(d, lb.weight(params), rows, o, ikk, s.dcols);
+        s.ctx.matmul_nn(d, lb.weight(params), rows, o, ikk, s.dcols);
         ensure(d_next, bsz * h * w * i);
         col2im(s.dcols, bsz, h, w, i, k, d_next);
     }
@@ -1498,6 +1541,7 @@ impl NativeExec {
             dc: Vec::new(),
             grad: Vec::new(),
             pool: None,
+            backend: GemmBackend::default(),
         }
     }
 
@@ -1513,11 +1557,13 @@ impl NativeExec {
     /// the low-rank Hadamard/Tucker composition; dense layers just record
     /// their parameter range).
     fn compose_ws(&self, ws: &mut Workspace, params: &[f32]) {
+        let Workspace { layer, pool, backend, .. } = ws;
+        let ctx = GemmCtx { backend: *backend, pool: pool.as_deref() };
         for (l, desc) in self.layers.iter().enumerate() {
             match desc {
-                LayerDesc::Fc(d) => compose_fc_ws(d, params, &mut ws.layer[l]),
-                LayerDesc::Conv(d) => compose_conv_ws(d, params, &mut ws.layer[l]),
-                LayerDesc::Lstm(d) => compose_lstm_ws(d, params, &mut ws.layer[l]),
+                LayerDesc::Fc(d) => compose_fc_ws(ctx, d, params, &mut layer[l]),
+                LayerDesc::Conv(d) => compose_conv_ws(ctx, d, params, &mut layer[l]),
+                LayerDesc::Lstm(d) => compose_lstm_ws(ctx, d, params, &mut layer[l]),
                 LayerDesc::Pool2(_) | LayerDesc::Embed(_) => {}
             }
         }
@@ -1527,8 +1573,8 @@ impl NativeExec {
     /// activation chain (`ws.acts[0]` = input, last = logits) and the
     /// conv/pool tape in the arena. Weights must already be composed.
     fn forward_ws(&self, ws: &mut Workspace, params: &[f32], xb: &[f32], bsz: usize) {
-        let Workspace { acts, layer, pool, .. } = ws;
-        let pool = pool.as_deref();
+        let Workspace { acts, layer, pool, backend, .. } = ws;
+        let ctx = GemmCtx { backend: *backend, pool: pool.as_deref() };
         ensure(&mut acts[0], xb.len());
         acts[0].copy_from_slice(xb);
         for (l, desc) in self.layers.iter().enumerate() {
@@ -1536,9 +1582,9 @@ impl NativeExec {
             let input = head[l].as_slice();
             let out = &mut tail[0];
             match desc {
-                LayerDesc::Fc(d) => forward_fc_ws(d, &layer[l], params, input, out, bsz, pool),
+                LayerDesc::Fc(d) => forward_fc_ws(ctx, d, &layer[l], params, input, out, bsz),
                 LayerDesc::Conv(d) => {
-                    forward_conv_ws(d, &mut layer[l], params, input, out, bsz, pool)
+                    forward_conv_ws(ctx, d, &mut layer[l], params, input, out, bsz)
                 }
                 LayerDesc::Pool2(d) => {
                     let lb = &mut layer[l];
@@ -1546,7 +1592,7 @@ impl NativeExec {
                 }
                 LayerDesc::Embed(d) => forward_embed_ws(d, params, input, out, bsz),
                 LayerDesc::Lstm(d) => {
-                    forward_lstm_ws(d, &mut layer[l], params, input, out, bsz, pool)
+                    forward_lstm_ws(ctx, d, &mut layer[l], params, input, out, bsz)
                 }
             }
         }
@@ -1567,8 +1613,28 @@ impl NativeExec {
         let c = self.classes;
         let text_l = self.text_len();
         let Workspace {
-            acts, layer, d_a, d_b, dw, dw1, dw2, dcols, v, gx, gy, gt, tmp, dz, dh, dc, grad, ..
+            acts,
+            layer,
+            d_a,
+            d_b,
+            dw,
+            dw1,
+            dw2,
+            dcols,
+            v,
+            gx,
+            gy,
+            gt,
+            tmp,
+            dz,
+            dh,
+            dc,
+            grad,
+            pool,
+            backend,
+            ..
         } = ws;
+        let ctx = GemmCtx { backend: *backend, pool: pool.as_deref() };
         let z = acts.last().expect("logits").as_slice();
 
         // Softmax cross-entropy, mean over every prediction — one per
@@ -1606,7 +1672,7 @@ impl NativeExec {
         // gradient has no consumer, so its dx computation is skipped.
         ensure(grad, self.total);
         grad.fill(0.0);
-        let mut s = GradScratch { dw, dw1, dw2, dcols, v, gx, gy, gt, tmp, dz, dh, dc };
+        let mut s = GradScratch { dw, dw1, dw2, dcols, v, gx, gy, gt, tmp, dz, dh, dc, ctx };
         for l in (0..self.layers.len()).rev() {
             let need_dx = l > 0;
             let lb = &layer[l];
@@ -2296,7 +2362,58 @@ mod tests {
                 exec.train_epoch_ws(&mut ws, sh, &mut p_again, &x, &y, 0.05, &zeros, &zeros, 0.0);
             assert_eq!(p_fresh, p_again);
             assert_eq!(loss_fresh.to_bits(), loss_again.to_bits());
+
+            // Reuse must also be exact with an explicit SIMD backend and
+            // an attached pool: serial and pooled runs through the same
+            // dirty workspace stay bit-identical (the PR-3 accumulation
+            // order carried through the row-panel split).
+            let mut ws_simd = exec.workspace();
+            ws_simd.set_backend(GemmBackend::Simd);
+            let mut p_serial = params.clone();
+            let loss_serial = exec
+                .train_epoch_ws(&mut ws_simd, sh, &mut p_serial, &x, &y, 0.05, &zeros, &zeros, 0.0);
+            ws_simd.set_pool(Some(Arc::new(ThreadPool::new(4))));
+            let mut p_pooled = params.clone();
+            let loss_pooled = exec
+                .train_epoch_ws(&mut ws_simd, sh, &mut p_pooled, &x, &y, 0.05, &zeros, &zeros, 0.0);
+            assert_eq!(p_serial, p_pooled, "{s:?}: SIMD result depends on the pool");
+            assert_eq!(loss_serial.to_bits(), loss_pooled.to_bits());
         }
+    }
+
+    /// Backend choice is explicit, deterministic, and thread-count
+    /// invariant through the full training path: every backend is
+    /// bit-identical to itself across reruns and pool sizes, and `Auto`
+    /// matches whatever backend it resolves to on this host.
+    #[test]
+    fn train_epoch_backend_is_deterministic_and_pool_invariant() {
+        let s = cnn_spec(NativeScheme::FedPara { gamma: 0.5 });
+        let exec = NativeExec::new(s);
+        let sh = shape(2, 4, s.in_dim());
+        let (params, x, y) = random_problem(s, 2, 4, 1234);
+        let zeros = vec![0f32; exec.param_count()];
+        let run = |backend: GemmBackend, pool: Option<Arc<ThreadPool>>| {
+            let mut ws = exec.workspace();
+            ws.set_backend(backend);
+            ws.set_pool(pool);
+            let mut p = params.clone();
+            let loss = exec.train_epoch_ws(&mut ws, sh, &mut p, &x, &y, 0.05, &zeros, &zeros, 0.0);
+            (p, loss)
+        };
+        for backend in [GemmBackend::Naive, GemmBackend::Blocked, GemmBackend::Simd] {
+            let (p_serial, loss_serial) = run(backend, None);
+            let (p_rerun, _) = run(backend, None);
+            assert_eq!(p_serial, p_rerun, "{backend:?}: rerun diverged");
+            for threads in [2usize, 5] {
+                let (p_pooled, loss_pooled) =
+                    run(backend, Some(Arc::new(ThreadPool::new(threads))));
+                assert_eq!(p_serial, p_pooled, "{backend:?}: {threads}-thread pool diverged");
+                assert_eq!(loss_serial.to_bits(), loss_pooled.to_bits());
+            }
+        }
+        let (p_auto, _) = run(GemmBackend::Auto, None);
+        let (p_resolved, _) = run(GemmBackend::Auto.resolve(), None);
+        assert_eq!(p_auto, p_resolved, "Auto must match its resolved backend");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use fedpara::config::{Optimizer, RunConfig, Sharing, WireConfig};
 use fedpara::coordinator::{eval_on, Federation};
 use fedpara::data::{partition, synth_vision, Dataset};
 use fedpara::runtime::native::{self, NativeScheme, NativeSpec};
-use fedpara::runtime::{BatchShape, Engine};
+use fedpara::runtime::{BatchShape, Engine, GemmBackend};
 use fedpara::util::rng::Rng;
 
 fn iid_locals(n_per: usize, clients: usize, seed: u64) -> (Vec<Dataset>, Dataset) {
@@ -72,9 +72,18 @@ struct ReportKey {
 }
 
 fn run_stream(cfg: RunConfig, rounds: usize) -> (Vec<ReportKey>, Vec<u32>, Vec<(u64, u64)>) {
+    run_stream_with(cfg, rounds, GemmBackend::Auto)
+}
+
+fn run_stream_with(
+    cfg: RunConfig,
+    rounds: usize,
+    backend: GemmBackend,
+) -> (Vec<ReportKey>, Vec<u32>, Vec<(u64, u64)>) {
     let engine = small_engine();
     let (locals, test) = iid_locals(48, 8, 21);
     let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    fed.set_gemm_backend(backend);
     fed.run(rounds).unwrap();
     let keys = fed
         .reports
@@ -128,6 +137,27 @@ fn bit_identical_across_pool_sizes_all_optimizers() {
                 "{}: comm ledger diverges at pool size {threads}",
                 optimizer.name()
             );
+        }
+    }
+}
+
+/// The ISSUE-9 acceptance pin: with the GEMM backend pinned explicitly —
+/// the packed scalar tile and the AVX2+FMA one alike — results stay
+/// bit-identical across pool sizes. (The sweeps above already cover the
+/// default `Auto` backend, i.e. SIMD wherever the host supports it; this
+/// one proves the invariant holds for each packed backend by name, so a
+/// host-side feature difference can never masquerade as pool-size drift.)
+#[test]
+fn bit_identical_across_pool_sizes_with_pinned_backends() {
+    for backend in [GemmBackend::Blocked, GemmBackend::Simd] {
+        let mut cfg = base_cfg("small_orig", 1);
+        cfg.local_epochs = 1;
+        let reference = run_stream_with(cfg.clone(), 2, backend);
+        for threads in [2usize, 8] {
+            let mut c = cfg.clone();
+            c.num_threads = threads;
+            let got = run_stream_with(c, 2, backend);
+            assert_eq!(reference, got, "{backend:?}: diverged at pool size {threads}");
         }
     }
 }
