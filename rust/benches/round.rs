@@ -38,6 +38,7 @@ fn native_cfg(artifact: &str, num_threads: usize) -> RunConfig {
         wire: Default::default(),
         sharing: Sharing::Full,
         sched: Default::default(),
+        devices: Default::default(),
         eval_every: 0,
         seed: 4,
         num_threads,

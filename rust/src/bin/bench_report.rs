@@ -210,6 +210,7 @@ fn bench_round(smoke: bool, iters: usize) -> anyhow::Result<Json> {
         wire: Default::default(),
         sharing: Sharing::Full,
         sched: Default::default(),
+        devices: Default::default(),
         eval_every: 0,
         seed: 4,
         num_threads: 0,
@@ -386,6 +387,7 @@ fn bench_scale(smoke: bool, iters: usize) -> anyhow::Result<Json> {
             wire: Default::default(),
             sharing: Sharing::Full,
             sched: Default::default(),
+            devices: Default::default(),
             eval_every: 0,
             seed: 23,
             num_threads: 0,
@@ -524,6 +526,7 @@ fn sched_policy_run(
                 speed_spread: spread,
             },
         },
+        devices: Default::default(),
         eval_every: 0,
         seed: 31,
         num_threads: 0,

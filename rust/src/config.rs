@@ -1,6 +1,8 @@
 //! Run configuration: the knobs of one federated training run, mirroring
 //! the paper's hyper-parameter table (Supp. Table 6).
 
+use crate::util::rng::Rng;
+
 /// Which FL optimizer drives the run (Table 3 compatibility set).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Optimizer {
@@ -602,6 +604,188 @@ impl SchedConfig {
     }
 }
 
+/// Stream tag for per-client device-class draws (FedHM-style rank
+/// elasticity). Like the scheduler's speed/fault tags, the class stream is
+/// derived from `seed ^ tag` and keyed by `cid` alone, so assignments are
+/// fixed for the whole run and never perturb training rng.
+const DEVICE_TAG: u64 = 0xDE1C_E0DE_DE1C_E0DE;
+
+/// One device class of a heterogeneous fleet (FedHM, PAPERS.md): clients
+/// of this class train only the leading `⌈rank_frac·r⌉` columns of every
+/// FedPara factor (and the matching Tucker-core block), upload/download at
+/// the truncated size, and run `slowdown`× slower in the virtual clock —
+/// small-rank devices are also slow devices.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceClass {
+    /// Fraction of each layer's inner rank this class trains, in (0, 1].
+    pub rank_frac: f64,
+    /// Relative probability a client is assigned this class (normalized
+    /// over the fleet's classes).
+    pub prob: f64,
+    /// Compute slowdown multiplier fed to the sched time model (≥ 1).
+    pub slowdown: f64,
+}
+
+impl DeviceClass {
+    /// A full-rank, full-speed device.
+    pub fn full() -> DeviceClass {
+        DeviceClass { rank_frac: 1.0, prob: 1.0, slowdown: 1.0 }
+    }
+}
+
+/// The fleet's device-class mix. Empty = the homogeneous full-rank fleet
+/// (today's path, byte-untouched). Assignments are drawn deterministically
+/// per client from a dedicated stream; with at most one class no rng is
+/// constructed at all.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct DeviceClasses {
+    pub classes: Vec<DeviceClass>,
+}
+
+impl DeviceClasses {
+    /// Parse a device-class spec: `uniform`, or a comma list of
+    /// `<rank_frac>[:p=<prob>][:slow=<mult>]` (prob defaults 1, slow
+    /// defaults 1), e.g. `1.0:p=0.4,0.5:p=0.4:slow=2,0.25:p=0.2:slow=4`.
+    pub fn parse(s: &str) -> Result<DeviceClasses, String> {
+        if s == "uniform" {
+            return Ok(DeviceClasses::default());
+        }
+        let mut classes = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            let mut fields = part.split(':');
+            let frac_s = fields.next().unwrap_or("");
+            let rank_frac: f64 = frac_s.parse().map_err(|_| {
+                format!("devices: rank fraction '{frac_s}' is not a number (in '{part}')")
+            })?;
+            let mut prob = 1.0f64;
+            let mut slowdown = 1.0f64;
+            for f in fields {
+                if let Some(v) = f.strip_prefix("p=") {
+                    prob = v
+                        .parse()
+                        .map_err(|_| format!("devices: p '{v}' is not a number"))?;
+                } else if let Some(v) = f.strip_prefix("slow=") {
+                    slowdown = v
+                        .parse()
+                        .map_err(|_| format!("devices: slow '{v}' is not a number"))?;
+                } else {
+                    return Err(format!(
+                        "devices: unexpected field ':{f}' \
+                         (<rank_frac>[:p=<prob>][:slow=<mult>], comma-separated)"
+                    ));
+                }
+            }
+            classes.push(DeviceClass { rank_frac, prob, slowdown });
+        }
+        let d = DeviceClasses { classes };
+        d.validate()?;
+        Ok(d)
+    }
+
+    /// Canonical spec string; `parse(spec_string())` round-trips exactly.
+    pub fn spec_string(&self) -> String {
+        if self.classes.is_empty() {
+            return "uniform".into();
+        }
+        self.classes
+            .iter()
+            .map(|c| format!("{}:p={}:slow={}", c.rank_frac, c.prob, c.slowdown))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Range checks shared by `parse` and the manifest validator.
+    pub fn validate(&self) -> Result<(), String> {
+        for c in &self.classes {
+            if !c.rank_frac.is_finite() || c.rank_frac <= 0.0 || c.rank_frac > 1.0 {
+                return Err(format!(
+                    "devices: rank fraction must be in (0, 1], got {}",
+                    c.rank_frac
+                ));
+            }
+            if !c.prob.is_finite() || c.prob <= 0.0 {
+                return Err(format!("devices: p must be finite and > 0, got {}", c.prob));
+            }
+            if !c.slowdown.is_finite() || c.slowdown < 1.0 {
+                return Err(format!("devices: slow must be finite and >= 1, got {}", c.slowdown));
+            }
+        }
+        Ok(())
+    }
+
+    /// True when any class deviates from a full-rank full-speed device —
+    /// the only case where the coordinator does elasticity work at all.
+    pub fn enabled(&self) -> bool {
+        self.classes.iter().any(|c| c.rank_frac < 1.0 || c.slowdown > 1.0)
+    }
+
+    /// True when some class actually truncates ranks (masking, per-class
+    /// billing, and per-coordinate aggregation are needed).
+    pub fn truncates(&self) -> bool {
+        self.classes.iter().any(|c| c.rank_frac < 1.0)
+    }
+
+    /// Deterministic class index for `cid`. With at most one class no rng
+    /// stream is constructed, so `uniform` stays bit-free.
+    pub fn class_of(&self, seed: u64, cid: usize) -> usize {
+        if self.classes.len() <= 1 {
+            return 0;
+        }
+        let total: f64 = self.classes.iter().map(|c| c.prob).sum();
+        let u = Rng::new(seed ^ DEVICE_TAG).child(cid as u64).f64() * total;
+        let mut acc = 0.0;
+        for (i, c) in self.classes.iter().enumerate() {
+            acc += c.prob;
+            if u < acc {
+                return i;
+            }
+        }
+        self.classes.len() - 1
+    }
+
+    /// The class record for `cid` (a full device on the uniform fleet).
+    pub fn class_for(&self, seed: u64, cid: usize) -> DeviceClass {
+        if self.classes.is_empty() {
+            DeviceClass::full()
+        } else {
+            self.classes[self.class_of(seed, cid)]
+        }
+    }
+
+    /// Rank truncation composes per coordinate, which cohort-coupled server
+    /// state does not: SCAFFOLD's control variates and FedDyn's λ update
+    /// would re-populate masked coordinates from full-vector state. Same
+    /// restriction pattern as [`SchedConfig::check_optimizer`].
+    pub fn check_optimizer(&self, opt: &Optimizer) -> Result<(), String> {
+        if self.truncates() && matches!(opt, Optimizer::Scaffold | Optimizer::FedDyn { .. }) {
+            return Err(format!(
+                "device-class rank truncation is incompatible with {} (its full-vector \
+                 server state repopulates truncated coordinates; use fedavg, fedprox, \
+                 or fedadam)",
+                opt.name()
+            ));
+        }
+        Ok(())
+    }
+
+    /// The sketch uplink delta-codes against unmasked receiver state and
+    /// carries an error-feedback accumulator, both of which would smear
+    /// nonzero mass into truncated coordinates; identity and fp16 preserve
+    /// exact zeros.
+    pub fn check_wire(&self, wire: &WireConfig) -> Result<(), String> {
+        if self.truncates() && matches!(wire.up, CodecSpec::SubsampleQuant { .. }) {
+            return Err(
+                "device-class rank truncation is incompatible with a subsample_quant \
+                 uplink (the sketch's delta/feedback state smears mass into truncated \
+                 coordinates; use identity or fp16)"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
 /// One federated run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -625,6 +809,11 @@ pub struct RunConfig {
     /// Round policy × fault injection × virtual-time model. The default is
     /// the historical synchronous barrier with no faults.
     pub sched: SchedConfig,
+    /// Heterogeneous-device fleet mix (FedHM-style rank elasticity). The
+    /// default (`uniform`) is the homogeneous full-rank fleet, pinned
+    /// bit-identical to the pre-elasticity path by
+    /// `tests/hetero_equivalence.rs`.
+    pub devices: DeviceClasses,
     /// Evaluate the global model every `eval_every` rounds (0 = only final).
     pub eval_every: usize,
     pub seed: u64,
@@ -648,6 +837,7 @@ impl Default for RunConfig {
             wire: WireConfig::default(),
             sharing: Sharing::Full,
             sched: SchedConfig::default(),
+            devices: DeviceClasses::default(),
             eval_every: 1,
             seed: 42,
             num_threads: 0,
@@ -975,6 +1165,82 @@ mod tests {
         bad = s;
         bad.time.up_mbps = 0.0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn device_class_parsing_round_trips() {
+        assert_eq!(DeviceClasses::parse("uniform").unwrap(), DeviceClasses::default());
+        assert!(!DeviceClasses::default().enabled());
+        let d = DeviceClasses::parse("1.0:p=0.4,0.5:p=0.4:slow=2,0.25:p=0.2:slow=4").unwrap();
+        assert_eq!(d.classes.len(), 3);
+        assert_eq!(d.classes[1], DeviceClass { rank_frac: 0.5, prob: 0.4, slowdown: 2.0 });
+        assert!(d.enabled() && d.truncates());
+        for spec in [
+            DeviceClasses::default(),
+            DeviceClasses { classes: vec![DeviceClass::full()] },
+            DeviceClasses {
+                classes: vec![
+                    DeviceClass { rank_frac: 1.0, prob: 2.0, slowdown: 1.0 },
+                    DeviceClass { rank_frac: 0.5, prob: 1.0, slowdown: 3.0 },
+                ],
+            },
+        ] {
+            assert_eq!(DeviceClasses::parse(&spec.spec_string()).unwrap(), spec);
+        }
+        // Bare fraction defaults p=1, slow=1.
+        let bare = DeviceClasses::parse("0.5").unwrap();
+        assert_eq!(bare.classes, vec![DeviceClass { rank_frac: 0.5, prob: 1.0, slowdown: 1.0 }]);
+        // Range rejections.
+        assert!(DeviceClasses::parse("0").is_err());
+        assert!(DeviceClasses::parse("1.5").is_err());
+        assert!(DeviceClasses::parse("0.5:p=0").is_err());
+        assert!(DeviceClasses::parse("0.5:slow=0.5").is_err());
+        assert!(DeviceClasses::parse("0.5:q=2").is_err());
+        assert!(DeviceClasses::parse("abc").is_err());
+    }
+
+    #[test]
+    fn device_class_assignment_deterministic() {
+        let d = DeviceClasses::parse("1.0:p=0.5,0.5:p=0.3:slow=2,0.25:p=0.2:slow=4").unwrap();
+        let mut counts = [0usize; 3];
+        for cid in 0..3000 {
+            let a = d.class_of(7, cid);
+            assert_eq!(a, d.class_of(7, cid), "cid {cid} not stable");
+            counts[a] += 1;
+        }
+        // Roughly proportional to the weights (loose 3σ-ish bounds).
+        assert!((1300..=1700).contains(&counts[0]), "{counts:?}");
+        assert!((750..=1050).contains(&counts[1]), "{counts:?}");
+        assert!((450..=750).contains(&counts[2]), "{counts:?}");
+        // A different seed reshuffles assignments.
+        assert!((0..3000).any(|cid| d.class_of(7, cid) != d.class_of(8, cid)));
+        // Single-class fleets never consult rng.
+        let one = DeviceClasses::parse("0.5:slow=2").unwrap();
+        assert_eq!(one.class_of(7, 123), 0);
+        assert_eq!(one.class_for(7, 123).slowdown, 2.0);
+        assert_eq!(DeviceClasses::default().class_for(7, 5), DeviceClass::full());
+    }
+
+    #[test]
+    fn device_class_compat_checks() {
+        let trunc = DeviceClasses::parse("1.0,0.5").unwrap();
+        assert!(trunc.check_optimizer(&Optimizer::FedAvg).is_ok());
+        assert!(trunc.check_optimizer(&Optimizer::FedProx { mu: 0.1 }).is_ok());
+        assert!(trunc.check_optimizer(&Optimizer::FedAdam).is_ok());
+        assert!(trunc.check_optimizer(&Optimizer::Scaffold).is_err());
+        assert!(trunc.check_optimizer(&Optimizer::FedDyn { alpha: 0.1 }).is_err());
+        assert!(trunc.check_wire(&WireConfig::identity()).is_ok());
+        assert!(trunc.check_wire(&WireConfig::fp16_up()).is_ok());
+        let sketch = WireConfig {
+            up: CodecSpec::SubsampleQuant { rate: 0.5, levels: 16, feedback: true },
+            ..WireConfig::identity()
+        };
+        assert!(trunc.check_wire(&sketch).is_err());
+        // Slow-only fleets (no truncation) are compatible with everything.
+        let slow = DeviceClasses::parse("1.0:slow=4").unwrap();
+        assert!(slow.enabled() && !slow.truncates());
+        assert!(slow.check_optimizer(&Optimizer::Scaffold).is_ok());
+        assert!(slow.check_wire(&sketch).is_ok());
     }
 
     #[test]

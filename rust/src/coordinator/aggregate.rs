@@ -24,11 +24,16 @@ pub struct WeightedAccumulator {
     sum: Vec<f64>,
     total_weight: f64,
     count: usize,
+    /// Per-coordinate weight totals, allocated lazily by the first
+    /// [`WeightedAccumulator::push_masked`] call. `None` means every push
+    /// so far covered all coordinates (the homogeneous fast path — zero
+    /// extra state, arithmetic untouched).
+    coord_weight: Option<Vec<f64>>,
 }
 
 impl WeightedAccumulator {
     pub fn new(dim: usize) -> WeightedAccumulator {
-        WeightedAccumulator { sum: vec![0.0; dim], total_weight: 0.0, count: 0 }
+        WeightedAccumulator { sum: vec![0.0; dim], total_weight: 0.0, count: 0, coord_weight: None }
     }
 
     /// Fold one vector in with weight `w` (> 0).
@@ -37,6 +42,34 @@ impl WeightedAccumulator {
         assert!(w > 0.0, "non-positive weight");
         for (o, &x) in self.sum.iter_mut().zip(v.iter()) {
             *o += w * x as f64;
+        }
+        if let Some(cw) = &mut self.coord_weight {
+            for c in cw.iter_mut() {
+                *c += w;
+            }
+        }
+        self.total_weight += w;
+        self.count += 1;
+    }
+
+    /// Fold one vector in with weight `w`, counting only the coordinates
+    /// where `active[i]` is true — the factor-space aggregation path for
+    /// rank-truncated clients: a small device contributes nothing (neither
+    /// value nor weight) at coordinates outside its rank budget, so
+    /// coordinates seen by fewer clients are renormalized by their own
+    /// weight total instead of being systematically shrunk toward zero.
+    pub fn push_masked(&mut self, v: &[f32], w: f64, active: &[bool]) {
+        assert_eq!(v.len(), self.sum.len(), "inconsistent vector lengths");
+        assert_eq!(active.len(), self.sum.len(), "inconsistent mask length");
+        assert!(w > 0.0, "non-positive weight");
+        // Every earlier full push weighted all coordinates equally.
+        let prior = self.total_weight;
+        let cw = self.coord_weight.get_or_insert_with(|| vec![prior; v.len()]);
+        for i in 0..v.len() {
+            if active[i] {
+                self.sum[i] += w * v[i] as f64;
+                cw[i] += w;
+            }
         }
         self.total_weight += w;
         self.count += 1;
@@ -56,6 +89,26 @@ impl WeightedAccumulator {
         assert!(self.total_weight > 0.0, "weights sum to zero");
         let inv = 1.0 / self.total_weight;
         self.sum.iter().map(|&x| (x * inv) as f32).collect()
+    }
+
+    /// [`WeightedAccumulator::mean`] with per-coordinate renormalization:
+    /// each coordinate divides by the weight that actually covered it, and
+    /// a coordinate no push covered falls back to `fallback` (the server's
+    /// previous global — the model holds where nobody trained). With no
+    /// masked pushes this delegates to [`WeightedAccumulator::mean`]
+    /// bit-for-bit, so the homogeneous default is pinned unchanged.
+    pub fn mean_or(&self, fallback: &[f32]) -> Vec<f32> {
+        assert_eq!(fallback.len(), self.sum.len(), "inconsistent fallback length");
+        let Some(cw) = &self.coord_weight else {
+            return self.mean();
+        };
+        assert!(self.count > 0, "no vectors to aggregate");
+        self.sum
+            .iter()
+            .zip(cw)
+            .zip(fallback)
+            .map(|((&s, &w), &f)| if w > 0.0 { (s / w) as f32 } else { f })
+            .collect()
     }
 }
 
@@ -367,6 +420,42 @@ mod tests {
         // out = avg - h/alpha = [2,2] + [1,1] = [3,3].
         assert!((out[0] - 3.0).abs() < 1e-5, "{out:?}");
         assert!((out[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn masked_pushes_renormalize_per_coordinate() {
+        // Two full clients, then one rank-truncated client active on
+        // coordinate 0 only — order mixed both ways.
+        let mut acc = WeightedAccumulator::new(2);
+        acc.push(&[1.0, 1.0], 1.0);
+        acc.push_masked(&[9.0, 0.0], 2.0, &[true, false]);
+        acc.push(&[3.0, 3.0], 1.0);
+        let m = acc.mean_or(&[-7.0, -7.0]);
+        // coord 0: (1 + 18 + 3) / 4 = 5.5; coord 1: (1 + 3) / 2 = 2.0.
+        assert!((m[0] - 5.5).abs() < 1e-6, "{m:?}");
+        assert!((m[1] - 2.0).abs() < 1e-6, "{m:?}");
+        assert_eq!(acc.count(), 3);
+    }
+
+    #[test]
+    fn mean_or_without_masked_pushes_is_bit_identical_to_mean() {
+        let mut rng = Rng::new(7);
+        let mut acc = WeightedAccumulator::new(9);
+        for _ in 0..5 {
+            let v: Vec<f32> = (0..9).map(|_| rng.gaussian() as f32).collect();
+            acc.push(&v, 0.5 + rng.f64());
+        }
+        let fallback = vec![123.0f32; 9];
+        assert_eq!(acc.mean_or(&fallback), acc.mean());
+    }
+
+    #[test]
+    fn fully_masked_coordinate_falls_back_to_previous_global() {
+        let mut acc = WeightedAccumulator::new(2);
+        acc.push_masked(&[4.0, 0.0], 1.5, &[true, false]);
+        let m = acc.mean_or(&[0.25, 0.75]);
+        assert!((m[0] - 4.0).abs() < 1e-6, "{m:?}");
+        assert_eq!(m[1], 0.75);
     }
 
     #[test]

@@ -38,7 +38,7 @@ use super::sampler::Sampler;
 use super::sched::{Decision, Fate, Scheduler};
 use super::store::{ClientDataSource, ClientStore, RoundData};
 use super::wire::{self, Downlink, WireCodec, FINGERPRINT_BYTES};
-use crate::config::{Optimizer, RoundPolicy, RunConfig, Sharing};
+use crate::config::{DeviceClasses, Optimizer, RoundPolicy, RunConfig, Sharing};
 use crate::data::{assemble_batches_into, BatchStack, Dataset};
 use crate::parameterization::{Layout, SegmentKind};
 use crate::runtime::{Engine, EvalOutput, GemmBackend, ModelRuntime, Workspace};
@@ -97,6 +97,10 @@ pub struct Federation {
     /// Virtual-time round scheduler: fault fates, arrival times, and the
     /// policy's admission plan (sync barrier / deadline cut / async buffer).
     sched: Scheduler,
+    /// Heterogeneous-device fleet (rank truncation masks + slowdowns);
+    /// `None` for the homogeneous default — that path is bit-identical to
+    /// the pre-elasticity coordinator (`tests/hetero_equivalence.rs`).
+    fleet: Option<DeviceFleet>,
     root_rng: Rng,
     /// Uplink wire codec (shared by every job; stateless — per-client
     /// error-feedback accumulators live in the store).
@@ -142,6 +146,33 @@ impl JobScratch {
             ws,
             stack: BatchStack { x: Vec::new(), y: Vec::new(), nbatches: 0, batch: 0, feature_dim: 0 },
         }
+    }
+}
+
+/// Resolved heterogeneous-device fleet (FedHM-style rank elasticity):
+/// per-class truncation masks over the *global* coordinate space plus the
+/// deterministic per-client class assignment. Built once at federation
+/// construction; absent (`None` on [`Federation`]) for the homogeneous
+/// default, so that path carries zero extra state.
+struct DeviceFleet {
+    classes: DeviceClasses,
+    seed: u64,
+    /// Per device class: `None` for full-rank classes, else the active-
+    /// coordinate mask (`false` at truncated factor columns / Tucker
+    /// blocks) and its active count — the billed wire length. Truncation
+    /// requires `Sharing::Full`, so global coordinates == full vector.
+    masks: Vec<Option<(Arc<Vec<bool>>, usize)>>,
+}
+
+impl DeviceFleet {
+    /// This client's truncation mask (`None` ⇒ full rank).
+    fn mask_for(&self, cid: usize) -> Option<&(Arc<Vec<bool>>, usize)> {
+        self.masks[self.classes.class_of(self.seed, cid)].as_ref()
+    }
+
+    /// This client's compute slowdown multiplier (≥ 1).
+    fn slowdown(&self, cid: usize) -> f64 {
+        self.classes.class_for(self.seed, cid).slowdown
     }
 }
 
@@ -211,6 +242,15 @@ struct LocalTrainJob {
     /// scheduling cannot reorder its updates, and persisted back through
     /// the outcome.
     feedback: Option<Vec<f32>>,
+    /// Device-class rank-truncation mask (`None` = full rank). Applied to
+    /// the post-download parameters: zeroed factor columns/Tucker blocks
+    /// have identically zero gradients through the Hadamard product, so
+    /// training runs exactly the truncated factorization with no kernel
+    /// changes and no new allocation.
+    rank_mask: Option<Arc<Vec<bool>>>,
+    /// Billed uplink value count for truncated clients — the coordinates
+    /// inside the rank budget (`None` bills the full wire length).
+    billed_up_len: Option<usize>,
     local_only: bool,
     /// Download bytes recorded at job construction.
     comm: CommDelta,
@@ -238,6 +278,9 @@ struct LocalTrainOutcome {
     new_lambda: Option<Vec<f32>>,
     /// Updated error-feedback accumulator (returned to the store).
     feedback: Option<Vec<f32>>,
+    /// The client's truncation mask, passed through for the masked
+    /// aggregation fold.
+    rank_mask: Option<Arc<Vec<bool>>>,
     /// The job's scratch, returned to the federation's pool.
     scratch: JobScratch,
 }
@@ -257,6 +300,8 @@ impl LocalTrainJob {
             opt,
             up,
             mut feedback,
+            rank_mask,
+            billed_up_len,
             local_only,
             mut comm,
             mut scratch,
@@ -270,6 +315,21 @@ impl LocalTrainJob {
         let mut p = params;
         if let Some(g) = &download {
             layout.scatter_global(&mut p, g);
+        }
+        // Rank truncation: zero the factor coordinates outside this
+        // device's budget *before* the optimizer anchor snapshot, so the
+        // FedProx/FedDyn proximal pull can't repopulate them. From here
+        // the run is exactly the truncated factorization — the composed
+        // weight equals the truncated composition, and every masked
+        // coordinate's gradient is identically zero (each factor column's
+        // gradient is linear in the matching column of its partner
+        // factor, which is also zeroed), so SGD holds them at 0.
+        if let Some(mask) = &rank_mask {
+            for (v, &keep) in p.iter_mut().zip(mask.iter()) {
+                if !keep {
+                    *v = 0.0;
+                }
+            }
         }
         // FedProx/FedDyn anchor and SCAFFOLD's control update need the
         // post-download snapshot; plain FedAvg/FedAdam skip the clone.
@@ -340,6 +400,13 @@ impl LocalTrainJob {
             // (round, cid) and pool-size invariant like everything else.
             let reference = download.as_ref().map(|g| g.as_slice());
             let bytes = up.transmit(&mut gathered, reference, feedback.as_mut(), &mut rng);
+            // Truncated clients only put their in-budget coordinates on
+            // the wire (the rest are structural zeros the server already
+            // knows about), so they are billed at the truncated length.
+            let bytes = match billed_up_len {
+                Some(len) => up.billed_bytes(len),
+                None => bytes,
+            };
             comm.record_upload(bytes);
             if let Some(mut dc) = delta_control.take() {
                 // The SCAFFOLD control variate rides the same uplink codec
@@ -364,6 +431,7 @@ impl LocalTrainJob {
             delta_control,
             new_lambda,
             feedback,
+            rank_mask,
             scratch,
         })
     }
@@ -409,6 +477,50 @@ impl Federation {
         cfg.wire.validate().map_err(|e| anyhow!("invalid wire config: {e}"))?;
         cfg.sched.validate().map_err(|e| anyhow!("invalid sched config: {e}"))?;
         cfg.sched.check_optimizer(&cfg.optimizer).map_err(|e| anyhow!("{e}"))?;
+        cfg.devices.validate().map_err(|e| anyhow!("invalid device classes: {e}"))?;
+        cfg.devices.check_optimizer(&cfg.optimizer).map_err(|e| anyhow!("{e}"))?;
+        cfg.devices.check_wire(&cfg.wire).map_err(|e| anyhow!("{e}"))?;
+        let fleet = if cfg.devices.enabled() {
+            let mut masks: Vec<Option<(Arc<Vec<bool>>, usize)>> =
+                vec![None; cfg.devices.classes.len()];
+            if cfg.devices.truncates() {
+                if !matches!(cfg.sharing, Sharing::Full) {
+                    return Err(anyhow!(
+                        "device rank truncation requires full sharing — the factor masks \
+                         span the whole parameter vector"
+                    ));
+                }
+                let map = rt.rank_map().ok_or_else(|| {
+                    anyhow!(
+                        "device rank truncation needs the native backend; AOT artifacts \
+                         bake full-rank shapes into their compiled programs"
+                    )
+                })?;
+                if map.blocks.is_empty() {
+                    return Err(anyhow!(
+                        "artifact '{}' has no low-rank factor segments to truncate; use a \
+                         fedpara/lowrank artifact or a full-rank device fleet",
+                        cfg.artifact
+                    ));
+                }
+                for (slot, class) in masks.iter_mut().zip(&cfg.devices.classes) {
+                    if !map.truncates_at(class.rank_frac) {
+                        continue;
+                    }
+                    // The mask is the rank truncation applied to a ones
+                    // vector: exactly the coordinates the masked client
+                    // can represent survive.
+                    let mut ones = vec![1.0f32; meta.param_count];
+                    map.mask(&mut ones, class.rank_frac);
+                    let active: Vec<bool> = ones.iter().map(|&x| x != 0.0).collect();
+                    let active_len = active.iter().filter(|&&b| b).count();
+                    *slot = Some((Arc::new(active), active_len));
+                }
+            }
+            Some(DeviceFleet { classes: cfg.devices.clone(), seed: cfg.seed, masks })
+        } else {
+            None
+        };
         let up_codec = wire::codec_for(&cfg.wire.up);
         let downlink = Downlink::new(&cfg.wire.down, cfg.wire.fingerprint_downloads, cfg.seed);
         let mut root_rng = Rng::new(cfg.seed);
@@ -470,6 +582,7 @@ impl Federation {
             comm: CommLedger::new(),
             sampler,
             sched,
+            fleet,
             root_rng,
             up_codec,
             downlink,
@@ -616,6 +729,27 @@ impl Federation {
         let mut arrivals: Vec<(usize, f64)> = Vec::with_capacity(participants.len());
         let mut fault_losses = 0usize;
         for &cid in &participants {
+            // Heterogeneous fleet: the client's device class decides its
+            // truncation mask (billed wire length) and compute slowdown.
+            // `fleet` is `None` on the homogeneous default — every branch
+            // below then takes the historical path bit-for-bit.
+            let (rank_mask, active_len, slowdown) = match &self.fleet {
+                Some(f) => {
+                    let m = f.mask_for(cid);
+                    (
+                        m.map(|(mask, _)| Arc::clone(mask)),
+                        m.map(|&(_, len)| len),
+                        f.slowdown(cid),
+                    )
+                }
+                None => (None, None, 1.0),
+            };
+            // A truncated client uploads (and on a cache miss, downloads)
+            // only the coordinates inside its rank budget.
+            let client_up_bytes = match active_len {
+                Some(len) if !local_only => self.up_codec.billed_bytes(len),
+                _ => analytic_up_bytes,
+            };
             let mut comm = CommDelta::default();
             let mut down_billed = 0u64;
             if !local_only {
@@ -626,7 +760,14 @@ impl Federation {
                 // are invariant under fingerprinting.
                 let cached = wire_hash.is_some()
                     && self.store.last_global_hash(cid) == wire_hash;
-                let model_down = if cached { FINGERPRINT_BYTES } else { down_model_bytes };
+                let model_down = if cached {
+                    FINGERPRINT_BYTES
+                } else {
+                    match active_len {
+                        Some(len) => self.downlink.side_bytes(len),
+                        None => down_model_bytes,
+                    }
+                };
                 comm.record_download(model_down);
                 down_billed += model_down;
                 if matches!(self.cfg.optimizer, Optimizer::Scaffold) {
@@ -649,7 +790,7 @@ impl Federation {
                     // Device trained, started uploading, died partway:
                     // bill the download plus the partial upload; the
                     // update never reaches the aggregator.
-                    comm.record_upload((analytic_up_bytes as f64 * frac) as u64);
+                    comm.record_upload((client_up_bytes as f64 * frac) as u64);
                     self.comm.apply(comm);
                     self.sched.note_failure(cid);
                     fault_losses += 1;
@@ -658,7 +799,7 @@ impl Federation {
             }
             arrivals.push((
                 cid,
-                self.sched.arrival_secs(cid, down_billed, analytic_up_bytes, comp_secs),
+                self.sched.arrival_secs(cid, down_billed, client_up_bytes, comp_secs * slowdown),
             ));
             let opt = match &self.cfg.optimizer {
                 Optimizer::FedAvg | Optimizer::FedAdam => JobOpt::Plain,
@@ -691,6 +832,8 @@ impl Federation {
                     .up_codec
                     .uses_feedback()
                     .then(|| self.store.feedback(cid)),
+                rank_mask,
+                billed_up_len: active_len,
                 local_only,
                 comm,
                 // Reuse last round's scratch where available; the pool
@@ -737,7 +880,13 @@ impl Federation {
         // plain accumulator is always the right sink.)
         let mut admitted = plan.ready.len();
         for r in &plan.ready {
-            acc_upload.push(&r.upload, r.weight);
+            // Carried uploads keep their origin client's rank budget: the
+            // class is a pure function of (seed, cid), so re-deriving the
+            // mask here matches what the client trained with.
+            match self.fleet.as_ref().and_then(|f| f.mask_for(r.cid)) {
+                Some((mask, _)) => acc_upload.push_masked(&r.upload, r.weight, mask),
+                None => acc_upload.push(&r.upload, r.weight),
+            }
         }
         let mut loss_acc = 0.0f64;
         let mut first_err: Option<anyhow::Error> = None;
@@ -817,7 +966,16 @@ impl Federation {
                         Optimizer::FedDyn { .. } => {
                             acc_a.push(&out.upload, 1.0);
                         }
-                        _ => acc_upload.push(&out.upload, out.weight),
+                        _ => match &out.rank_mask {
+                            // Renormalized factor-space aggregation: a
+                            // truncated client only votes on coordinates
+                            // inside its budget, and each coordinate is
+                            // averaged over the weight that actually
+                            // covered it (FedHM-style), so leading columns
+                            // seen by everyone aren't diluted by zeros.
+                            Some(mask) => acc_upload.push_masked(&out.upload, out.weight, mask),
+                            None => acc_upload.push(&out.upload, out.weight),
+                        },
                     }
                     // The upload drops here — aggregation stays O(dim).
                     true
@@ -836,8 +994,8 @@ impl Federation {
         let aggregated = !local_only && admitted > 0;
         if aggregated {
             let new_global = match &mut self.opt {
-                ServerOpt::Plain => acc_upload.mean(),
-                ServerOpt::Adam(adam) => adam.step(&server_global, &acc_upload.mean()),
+                ServerOpt::Plain => acc_upload.mean_or(&server_global),
+                ServerOpt::Adam(adam) => adam.step(&server_global, &acc_upload.mean_or(&server_global)),
                 ServerOpt::Scaffold(sc) => {
                     let new_full = sc.step_from_means(
                         &self.server_params,
@@ -1057,6 +1215,7 @@ mod tests {
             wire: Default::default(),
             sharing: Sharing::GlobalSegments,
             sched: Default::default(),
+            devices: Default::default(),
             eval_every: 0,
             seed: 9,
             num_threads: 1,

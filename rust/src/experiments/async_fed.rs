@@ -104,6 +104,7 @@ fn run_policy(
                 speed_spread: spread,
             },
         },
+        devices: Default::default(),
         sample_frac: 0.5,
         rounds,
         local_epochs: 1,

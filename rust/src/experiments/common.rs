@@ -186,6 +186,7 @@ fn preset_manifest(
         sharing: Sharing::Full,
         wire: Default::default(),
         sched: Default::default(),
+        devices: Default::default(),
         sample_frac: ctx.scale.sample_frac(),
         rounds: ctx.rounds_for(paper_rounds),
         local_epochs: if non_iid {

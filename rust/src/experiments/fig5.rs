@@ -116,6 +116,7 @@ pub fn run(ctx: &ExpCtx) -> Result<Json> {
                     sharing: sharing.clone(),
                     wire: Default::default(),
                     sched: Default::default(),
+                    devices: Default::default(),
                     sample_frac: 1.0,
                     rounds,
                     local_epochs: 2,

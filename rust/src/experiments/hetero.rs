@@ -1,0 +1,176 @@
+//! Heterogeneous-device rank elasticity (FedHM-style, PAPERS.md): the same
+//! FedPara federation run under three device-class fleets.
+//!
+//! FedPara's factors make device heterogeneity cheap to accommodate: a
+//! weak client trains only the leading `⌈frac·r⌉` columns of every factor
+//! (realized by zero-masking, so kernels are untouched) and ships only
+//! those coordinates; the server renormalizes per coordinate so leading
+//! columns — seen by everyone — aren't diluted by the clients that never
+//! vote on the tail. Small-rank classes also carry a compute `slowdown`,
+//! so the fleet mirrors reality: weak devices are slow *and* small.
+//!
+//! Three fleets, identical data/seed/schedule:
+//!   * `all-full`  — the homogeneous baseline (uniform full-rank fleet);
+//!   * `mixed`     — full / half / quarter rank classes (FedHM's setting);
+//!   * `all-small` — every client at quarter rank.
+//!
+//! Acceptance properties asserted here:
+//!   * mixed final accuracy strictly beats all-small — the strong devices'
+//!     full-rank updates must survive aggregation;
+//!   * mixed uplink bytes are strictly below all-full — truncated clients
+//!     are billed at the truncated size through the wire ledger.
+
+use anyhow::Result;
+
+use super::common::{banner, print_row, resolve_artifact_set, ExpCtx};
+use crate::config::{DeviceClasses, Optimizer, Sharing};
+use crate::scenario::{DataSource, DatasetSpec, PartitionSpec, ScenarioBuilder, ScenarioManifest};
+use crate::util::json::Json;
+
+struct FleetRun {
+    fleet: &'static str,
+    spec: String,
+    final_acc: f64,
+    final_loss: f64,
+    up_bytes: u64,
+    down_bytes: u64,
+    total_sim_secs: f64,
+}
+
+impl FleetRun {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fleet", Json::Str(self.fleet.into())),
+            ("devices", Json::Str(self.spec.clone())),
+            ("final_acc", Json::Num(self.final_acc)),
+            ("final_loss", Json::Num(self.final_loss)),
+            ("up_bytes", Json::Num(self.up_bytes as f64)),
+            ("down_bytes", Json::Num(self.down_bytes as f64)),
+            ("total_sim_secs", Json::Num(self.total_sim_secs)),
+        ])
+    }
+}
+
+fn run_fleet(
+    ctx: &ExpCtx,
+    artifact: &str,
+    name: &'static str,
+    devices: &str,
+    rounds: usize,
+) -> Result<FleetRun> {
+    let m = ScenarioManifest {
+        name: format!("hetero_{name}"),
+        artifact: artifact.to_string(),
+        dataset: DatasetSpec {
+            source: DataSource::Mnist,
+            partition: PartitionSpec::Iid,
+            clients: Some(16),
+            population: None,
+            samples_per_client: 64,
+            test_samples: 256,
+            holdout: None,
+        },
+        optimizer: Optimizer::FedAvg,
+        sharing: Sharing::Full,
+        wire: Default::default(),
+        sched: Default::default(),
+        devices: DeviceClasses::parse(devices).map_err(anyhow::Error::msg)?,
+        sample_frac: 0.5,
+        rounds,
+        local_epochs: 1,
+        lr: 0.1,
+        lr_decay: 1.0,
+        eval_every: 0,
+        seed: ctx.seed,
+        num_threads: 0,
+    };
+    let mut fed = ScenarioBuilder::new(ctx.engine).build(&m)?.federation;
+    let mut sim = 0.0f64;
+    let mut final_loss = f64::NAN;
+    for _ in 0..rounds {
+        let r = fed.run_round()?;
+        sim += r.t_sim_secs;
+        final_loss = r.mean_train_loss;
+    }
+    let eval = fed.evaluate_global()?;
+    Ok(FleetRun {
+        fleet: name,
+        spec: devices.to_string(),
+        final_acc: eval.accuracy(),
+        final_loss,
+        up_bytes: fed.comm.up_bytes,
+        down_bytes: fed.comm.down_bytes,
+        total_sim_secs: sim,
+    })
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<Json> {
+    banner(
+        "hetero",
+        "FedHM elasticity",
+        "per-device rank budgets: uniform vs mixed vs all-small fleets",
+        ctx.scale,
+    );
+    let artifact = resolve_artifact_set(ctx, &["mlp10_fedpara"], &["native_mlp10_fedpara"])[0];
+    let rounds = ctx.rounds.unwrap_or(24);
+
+    let fleets: [(&'static str, &'static str); 3] = [
+        ("all-full", "uniform"),
+        ("mixed", "1.0:p=0.5,0.5:p=0.3:slow=2,0.25:p=0.2:slow=4"),
+        ("all-small", "0.25:slow=4"),
+    ];
+    println!("fleet       devices                                        acc      up MB    sim secs");
+    let mut runs = Vec::with_capacity(fleets.len());
+    for (name, spec) in fleets {
+        let r = run_fleet(ctx, artifact, name, spec, rounds)?;
+        print_row(
+            &format!("{:<11}", r.fleet),
+            &[
+                format!("{:<44}", r.spec),
+                format!("{:>7.2}%", r.final_acc * 100.0),
+                format!("{:>8.3}", r.up_bytes as f64 / 1e6),
+                format!("{:>9.1}", r.total_sim_secs),
+            ],
+        );
+        runs.push(r);
+    }
+    let (full, mixed, small) = (&runs[0], &runs[1], &runs[2]);
+
+    // Acceptance: keeping the strong half of the fleet at full rank must
+    // beat truncating everyone...
+    assert!(
+        mixed.final_acc > small.final_acc,
+        "mixed fleet must beat all-small on accuracy \
+         (mixed {:.4}, all-small {:.4})",
+        mixed.final_acc,
+        small.final_acc
+    );
+    // ...while the truncated uploads of the weak classes make the round
+    // strictly cheaper than the all-full fleet on the wire.
+    assert!(
+        mixed.up_bytes < full.up_bytes,
+        "mixed fleet must upload fewer bytes than all-full \
+         (mixed {}, all-full {})",
+        mixed.up_bytes,
+        full.up_bytes
+    );
+    println!(
+        "\nmixed vs all-small: +{:.2}% accuracy; mixed vs all-full: {:.1}% of the uplink bytes",
+        (mixed.final_acc - small.final_acc) * 100.0,
+        mixed.up_bytes as f64 / full.up_bytes as f64 * 100.0
+    );
+
+    Ok(Json::obj(vec![
+        ("artifact", Json::Str(artifact.to_string())),
+        ("rounds", Json::Num(rounds as f64)),
+        ("fleets", Json::Arr(runs.iter().map(FleetRun::to_json).collect())),
+        (
+            "acc_gain_mixed_vs_small",
+            Json::Num(mixed.final_acc - small.final_acc),
+        ),
+        (
+            "up_bytes_ratio_mixed_vs_full",
+            Json::Num(mixed.up_bytes as f64 / full.up_bytes as f64),
+        ),
+    ]))
+}

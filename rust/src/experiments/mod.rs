@@ -16,6 +16,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod hetero;
 pub mod table1;
 pub mod table10;
 pub mod table11;
@@ -151,6 +152,12 @@ pub fn registry() -> Vec<(&'static str, &'static str, &'static str, ExpFn)> {
             "straggler tolerance",
             "sync vs deadline vs buffered-async time-to-loss on the virtual clock",
             async_fed::run,
+        ),
+        (
+            "hetero",
+            "FedHM elasticity",
+            "heterogeneous device ranks: uniform vs mixed vs all-small fleets",
+            hetero::run,
         ),
     ]
 }

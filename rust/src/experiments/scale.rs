@@ -83,6 +83,7 @@ fn run_population(
         sharing: Sharing::Full,
         wire,
         sched: Default::default(),
+        devices: Default::default(),
         sample_frac,
         rounds,
         local_epochs: 1,

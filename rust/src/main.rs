@@ -14,7 +14,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Result};
 
 use fedpara::config::{
-    CodecSpec, FaultConfig, Optimizer, RoundPolicy, Scale, SchedConfig, Sharing, WireConfig,
+    CodecSpec, DeviceClasses, FaultConfig, Optimizer, RoundPolicy, Scale, SchedConfig, Sharing,
+    WireConfig,
 };
 use fedpara::experiments::{self, common, ExpCtx};
 use fedpara::runtime::Engine;
@@ -209,6 +210,8 @@ fn manifest_from_flags(args: &Args, ctx: &ExpCtx) -> Result<ScenarioManifest> {
         sharing,
         wire: wire_from_flags(args)?,
         sched: sched_from_flags(args, SchedConfig::default())?,
+        devices: DeviceClasses::parse(args.get_or("device-classes", "uniform"))
+            .map_err(|e| anyhow!("--device-classes: {e}"))?,
         sample_frac: args.get_f64("frac", ctx.scale.sample_frac()).map_err(|e| anyhow!(e))?,
         rounds: ctx.rounds_for(100),
         local_epochs: args.get_usize("epochs", ctx.scale.local_epochs()).map_err(|e| anyhow!(e))?,
@@ -237,6 +240,11 @@ fn run_cmd(args: &Args) -> Result<()> {
         }
         // Scheduler flags override the manifest's policy/faults/time blocks.
         m.sched = sched_from_flags(args, m.sched)?;
+        if let Some(spec) = args.get("device-classes") {
+            m.devices =
+                DeviceClasses::parse(spec).map_err(|e| anyhow!("--device-classes: {e}"))?;
+            m.validate().map_err(|e| anyhow!(e))?;
+        }
         m
     } else {
         manifest_from_flags(args, &ctx)?
@@ -262,6 +270,9 @@ fn run_cmd(args: &Args) -> Result<()> {
             m.sched.faults.spec_string(),
             m.sched.time.speed_spread,
         );
+    }
+    if m.devices.enabled() {
+        println!("devices: {}", m.devices.spec_string());
     }
     let mut fed = ScenarioBuilder::new(&engine).build(&m)?.federation;
     let mut sim_total = 0.0f64;
@@ -367,14 +378,35 @@ fn golden_cmd(args: &Args) -> Result<()> {
         report.parsed, report.replayed
     );
     for w in &report.unrecorded {
-        println!("  unrecorded: {w} (no digest in {}; run `fedpara golden --record`)",
-            reg_path.display());
+        // An all-null registry turns the gate into a no-op (nothing is
+        // ever replayed), so strict mode treats every null digest as a
+        // hard, named failure instead of a footnote.
+        if strict {
+            println!(
+                "  FAIL (strict): {w}: registry digest is null in {} — the golden gate \
+                 replays nothing for this manifest; run `fedpara golden --record` and \
+                 commit the updated registry",
+                reg_path.display()
+            );
+        } else {
+            println!(
+                "  unrecorded: {w} (no digest in {}; run `fedpara golden --record`)",
+                reg_path.display()
+            );
+        }
     }
     for w in &report.stale {
         println!("  stale registry entry: {w} (manifest file not found)");
     }
     for f in &report.failures {
         println!("  FAIL: {f}");
+    }
+    if strict && report.replayed == 0 && report.parsed > 0 {
+        println!(
+            "  FAIL (strict): 0 of {} golden-set manifest(s) were replayed — the \
+             registry is all placeholders and the determinism gate is a no-op",
+            report.parsed
+        );
     }
     if report.passed(strict) {
         println!("golden check passed{}", if strict { " (strict)" } else { "" });
@@ -385,7 +417,7 @@ fn golden_cmd(args: &Args) -> Result<()> {
             report.failures.len(),
             report.unrecorded.len(),
             report.stale.len(),
-            if strict { " (strict)" } else { "" }
+            if strict { " (strict, null digests are failures)" } else { "" }
         ))
     }
 }
@@ -486,6 +518,12 @@ fn dispatch(mut args: Args) -> Result<()> {
                 .declare(
                     "speed-spread",
                     "device heterogeneity: per-client slowdowns drawn log-uniformly from [1, x]",
+                )
+                .declare(
+                    "device-classes",
+                    "heterogeneous fleet: comma list of \
+                     <rank_frac>[:p=<prob>][:slow=<mult>] (or `uniform`); \
+                     fractional-rank classes train/ship truncated FedPara factors",
                 );
             args.validate().map_err(|e| anyhow!(e))?;
             run_cmd(&args)

@@ -75,13 +75,18 @@ impl Layout {
     }
 
     /// Parse from the manifest's `layout` array:
-    /// `[{"name": ..., "len": ..., "kind": "global"|"local"}, ...]`
+    /// `[{"name": ..., "len": ..., "init_std": ..., "kind": "global"|"local"}, ...]`
     /// (offsets are implied by order, matching the python packer).
+    ///
+    /// `init_std` is required: a silent 0.0 default turned a typo'd
+    /// manifest into dead all-zero segments, which trains but never
+    /// learns. Zero must be spelled out (biases/offsets), and negative or
+    /// non-finite values are rejected.
     pub fn from_json(j: &Json) -> Result<Layout, String> {
         let arr = j.as_arr().ok_or("layout must be an array")?;
         let mut segments = Vec::with_capacity(arr.len());
         let mut offset = 0usize;
-        for item in arr {
+        for (idx, item) in arr.iter().enumerate() {
             let name = item
                 .get("name")
                 .as_str()
@@ -96,7 +101,17 @@ impl Layout {
                 Some("local") => SegmentKind::Local,
                 Some(other) => return Err(format!("unknown segment kind '{other}'")),
             };
-            let init_std = item.get("init_std").as_f64().unwrap_or(0.0);
+            let init_std = item.get("init_std").as_f64().ok_or_else(|| {
+                format!(
+                    "layout[{idx}] '{name}': missing numeric 'init_std' \
+                     (gaussian init std; use 0.0 explicitly for zero-init segments)"
+                )
+            })?;
+            if !init_std.is_finite() || init_std < 0.0 {
+                return Err(format!(
+                    "layout[{idx}] '{name}': 'init_std' must be finite and >= 0, got {init_std}"
+                ));
+            }
             segments.push(Segment { name, offset, len, kind, init_std });
             offset += len;
         }
@@ -220,6 +235,116 @@ impl Layout {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Rank map: which flat-vector coordinates belong to which factor columns
+// ---------------------------------------------------------------------------
+
+/// Index structure of one truncatable factor segment, for FedHM-style rank
+/// elasticity: a device-class client trains only the leading `r_c ≤ r`
+/// columns of each factor. Truncation is realized by **zero-masking** the
+/// trailing columns of the full-rank flat vector: the composed weight then
+/// exactly equals the composition of the truncated factors (every dropped
+/// term has a zero coefficient), and the gradient of every masked
+/// coordinate is identically zero through the Hadamard/Tucker chain, so
+/// masked coordinates are an exact fixed point of local SGD — no kernel or
+/// allocation changes are needed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FactorDims {
+    /// Row-major `rows × r` factor matrix (X or Y): entry (i, j) lives at
+    /// `offset + i·r + j`; truncation zeroes columns `j ≥ r_c`.
+    Cols { rows: usize, r: usize },
+    /// Row-major Tucker core `r × r × kk` (Prop-3 conv): entry (a, b, κ)
+    /// lives at `offset + (a·r + b)·kk + κ`; truncation zeroes every
+    /// (a, b) block with `a ≥ r_c` or `b ≥ r_c`.
+    Core { r: usize, kk: usize },
+}
+
+/// One truncatable block of the flat parameter vector.
+#[derive(Clone, Copy, Debug)]
+pub struct RankBlock {
+    pub offset: usize,
+    pub dims: FactorDims,
+}
+
+impl RankBlock {
+    pub fn len(&self) -> usize {
+        match self.dims {
+            FactorDims::Cols { rows, r } => rows * r,
+            FactorDims::Core { r, kk } => r * r * kk,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// All truncatable factor blocks of an artifact's layout. Segments not
+/// listed (biases, embeddings, dense weights, rank-1 factors) are
+/// unaffected by truncation.
+#[derive(Clone, Debug, Default)]
+pub struct RankMap {
+    pub blocks: Vec<RankBlock>,
+}
+
+impl RankMap {
+    /// The truncated rank for a full inner rank `r` at `rank_frac ∈ (0,1]`:
+    /// `max(1, ⌈frac·r⌉)`, never above `r`.
+    pub fn truncated_rank(r: usize, rank_frac: f64) -> usize {
+        ((r as f64 * rank_frac).ceil() as usize).clamp(1, r.max(1))
+    }
+
+    /// Zero every coordinate belonging to a factor column (or Tucker-core
+    /// block) with index `≥ ⌈frac·r⌉`. `frac ≥ 1` is a no-op, keeping the
+    /// homogeneous path byte-untouched.
+    pub fn mask(&self, v: &mut [f32], rank_frac: f64) {
+        if rank_frac >= 1.0 {
+            return;
+        }
+        for blk in &self.blocks {
+            match blk.dims {
+                FactorDims::Cols { rows, r } => {
+                    let rc = Self::truncated_rank(r, rank_frac);
+                    if rc >= r {
+                        continue;
+                    }
+                    for i in 0..rows {
+                        let row = blk.offset + i * r;
+                        v[row + rc..row + r].fill(0.0);
+                    }
+                }
+                FactorDims::Core { r, kk } => {
+                    let rc = Self::truncated_rank(r, rank_frac);
+                    if rc >= r {
+                        continue;
+                    }
+                    for a in 0..r {
+                        for b in 0..r {
+                            if a < rc && b < rc {
+                                continue;
+                            }
+                            let base = blk.offset + (a * r + b) * kk;
+                            v[base..base + kk].fill(0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Whether any coordinate would actually be zeroed at this fraction
+    /// (false when every block's rank is already 1, or frac ≥ 1).
+    pub fn truncates_at(&self, rank_frac: f64) -> bool {
+        rank_frac < 1.0
+            && self.blocks.iter().any(|blk| {
+                let r = match blk.dims {
+                    FactorDims::Cols { r, .. } | FactorDims::Core { r, .. } => r,
+                };
+                Self::truncated_rank(r, rank_frac) < r
+            })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -329,9 +454,79 @@ mod tests {
 
     #[test]
     fn from_json_defaults_to_global() {
-        let j = Json::parse(r#"[{"name":"w","len":7}]"#).unwrap();
+        let j = Json::parse(r#"[{"name":"w","len":7,"init_std":0.1}]"#).unwrap();
         let l = Layout::from_json(&j).unwrap();
         assert_eq!(l.global_len(), 7);
+    }
+
+    #[test]
+    fn from_json_requires_valid_init_std() {
+        // Missing key: previously silently became 0.0 (a dead segment).
+        let missing = Json::parse(r#"[{"name":"w","len":7}]"#).unwrap();
+        let err = Layout::from_json(&missing).unwrap_err();
+        assert!(err.contains("init_std") && err.contains("'w'"), "err: {err}");
+        // Non-numeric.
+        let bad = Json::parse(r#"[{"name":"w","len":7,"init_std":"big"}]"#).unwrap();
+        assert!(Layout::from_json(&bad).is_err());
+        // Negative.
+        let neg = Json::parse(r#"[{"name":"w","len":7,"init_std":-0.5}]"#).unwrap();
+        let err = Layout::from_json(&neg).unwrap_err();
+        assert!(err.contains(">= 0"), "err: {err}");
+        // Explicit zero stays legal (biases).
+        let zero = Json::parse(r#"[{"name":"b","len":3,"init_std":0.0}]"#).unwrap();
+        assert!(Layout::from_json(&zero).is_ok());
+    }
+
+    #[test]
+    fn rank_mask_zeroes_trailing_columns_only() {
+        // One 3×4 factor matrix followed by a 2×2×3 Tucker core.
+        let map = RankMap {
+            blocks: vec![
+                RankBlock { offset: 0, dims: FactorDims::Cols { rows: 3, r: 4 } },
+                RankBlock { offset: 12, dims: FactorDims::Core { r: 2, kk: 3 } },
+            ],
+        };
+        assert_eq!(map.blocks.iter().map(|b| b.len()).sum::<usize>(), 24);
+        let full: Vec<f32> = (1..=24).map(|i| i as f32).collect();
+
+        // frac = 1.0: byte-identical no-op.
+        let mut v = full.clone();
+        map.mask(&mut v, 1.0);
+        assert_eq!(v, full);
+        assert!(!map.truncates_at(1.0));
+
+        // frac = 0.5: cols r_c = 2 of 4 → columns 2,3 of each row zeroed;
+        // core r_c = 1 of 2 → every (a,b) block except (0,0) zeroed.
+        let mut v = full.clone();
+        map.mask(&mut v, 0.5);
+        assert!(map.truncates_at(0.5));
+        for i in 0..3 {
+            for j in 0..4 {
+                let idx = i * 4 + j;
+                if j < 2 {
+                    assert_eq!(v[idx], full[idx], "col {j} row {i} changed");
+                } else {
+                    assert_eq!(v[idx], 0.0, "col {j} row {i} not masked");
+                }
+            }
+        }
+        for a in 0..2 {
+            for b in 0..2 {
+                for k in 0..3 {
+                    let idx = 12 + (a * 2 + b) * 3 + k;
+                    if a == 0 && b == 0 {
+                        assert_eq!(v[idx], full[idx]);
+                    } else {
+                        assert_eq!(v[idx], 0.0, "core ({a},{b},{k}) not masked");
+                    }
+                }
+            }
+        }
+
+        // Tiny fractions floor at rank 1, never 0.
+        assert_eq!(RankMap::truncated_rank(4, 0.01), 1);
+        assert_eq!(RankMap::truncated_rank(1, 0.01), 1);
+        assert_eq!(RankMap::truncated_rank(4, 0.75), 3);
     }
 
     /// Property: scatter(gather(p)) over fresh zeros then gather again is

@@ -16,5 +16,5 @@ pub mod compose;
 pub mod layout;
 pub mod shapes;
 
-pub use layout::{Layout, Segment, SegmentKind};
+pub use layout::{FactorDims, Layout, RankBlock, RankMap, Segment, SegmentKind};
 pub use shapes::{gamma_rank, lowrank_rank_for_budget, r_max, r_min, LayerShape, Scheme};

@@ -130,9 +130,13 @@ pub fn r_min(shape: LayerShape) -> usize {
 }
 
 /// Largest inner rank whose FedPara parameter count stays within the
-/// original layer's parameter budget.
+/// original layer's parameter budget, clamped to the dimension cap
+/// `min(m,n)` of the unfolded weight so no caller of this re-exported
+/// helper can violate the Prop-1/3 precondition `r ≤ min(m,n)` (skewed
+/// conv shapes like O=1 otherwise afford more rank than the dimensions
+/// admit).
 pub fn r_max(shape: LayerShape) -> usize {
-    match shape {
+    let raw = match shape {
         LayerShape::Fc { m, n } => {
             // 2R(m+n) <= mn  =>  R <= mn / (2(m+n)).
             ((m * n) as f64 / (2.0 * (m + n) as f64)).floor() as usize
@@ -146,17 +150,23 @@ pub fn r_max(shape: LayerShape) -> usize {
             let disc = (b * b + 2.0 * kk * c).sqrt();
             ((disc - b) / (2.0 * kk)).floor() as usize
         }
-    }
-    .max(1)
+    };
+    raw.clamp(1, shape.max_possible_rank().max(1))
 }
 
 /// The paper's rank schedule: `r = (1−γ)·r_min + γ·r_max`, γ ∈ [0,1].
 /// Clamped so the result is always at least 1 and at most min(m,n)
 /// (Propositions require r ≤ min(m,n)).
+///
+/// Tiny layers can invert the endpoints (Fc 2×2: `r_min = 2` but the
+/// budget cap computes to 1); the schedule holds at the Corollary-1
+/// floor instead of decreasing with γ — rank capability over budget,
+/// the same choice `build_fc`/`build_conv` make when the floor exceeds
+/// the dense count.
 pub fn gamma_rank(shape: LayerShape, gamma: f64) -> usize {
     assert!((0.0..=1.0).contains(&gamma), "gamma must be in [0,1]");
     let lo = r_min(shape) as f64;
-    let hi = r_max(shape) as f64;
+    let hi = (r_max(shape) as f64).max(lo);
     let r = ((1.0 - gamma) * lo + gamma * hi).round() as usize;
     let (m, n) = shape.unfolded();
     r.clamp(1, m.min(n).max(1))
@@ -318,6 +328,70 @@ mod tests {
             }
             assert_eq!(best_pair, (cap, cap), "R={cap}");
             assert_eq!(best, 2 * cap * (m + n));
+        }
+    }
+
+    #[test]
+    fn tiny_layer_schedule_not_inverted() {
+        // The ISSUE-10 repro: Fc 2×2 has r_min = 2 (Corollary 1) but a
+        // budget cap of 1, so the un-fixed interpolation *decreased* with
+        // γ. The schedule must hold at the floor instead.
+        let s = LayerShape::Fc { m: 2, n: 2 };
+        assert_eq!(r_min(s), 2);
+        assert_eq!(gamma_rank(s, 0.0), 2);
+        assert_eq!(gamma_rank(s, 0.5), 2);
+        assert_eq!(gamma_rank(s, 1.0), 2);
+    }
+
+    #[test]
+    fn r_max_clamped_to_dimension_cap() {
+        // Skewed conv: O=1 makes the unfolded weight 1×(I·K²), so any
+        // r > 1 violates the Prop-3 precondition even though the budget
+        // quadratic affords ~3.
+        let s = LayerShape::Conv { o: 1, i: 2, k1: 3, k2: 3 };
+        assert_eq!(shape_cap(s), 1);
+        assert_eq!(r_max(s), 1);
+    }
+
+    fn shape_cap(s: LayerShape) -> usize {
+        s.max_possible_rank().max(1)
+    }
+
+    /// Degenerate-shape sweep (dims ∈ {1,2,3,7}, γ ∈ {0, 0.5, 1}): every
+    /// rank helper must stay inside `[1, min(m,n)]`, the γ schedule must be
+    /// nondecreasing, and the budget matcher must never exceed its target.
+    #[test]
+    fn degenerate_shapes_stay_in_bounds() {
+        let dims = [1usize, 2, 3, 7];
+        let mut shapes = Vec::new();
+        for &a in &dims {
+            for &b in &dims {
+                shapes.push(LayerShape::Fc { m: a, n: b });
+                for &k in &[1usize, 3] {
+                    shapes.push(LayerShape::Conv { o: a, i: b, k1: k, k2: k });
+                }
+            }
+        }
+        for &shape in &shapes {
+            let cap = shape_cap(shape);
+            assert!(r_min(shape) >= 1, "{shape:?}: r_min < 1");
+            let rmax = r_max(shape);
+            assert!((1..=cap).contains(&rmax), "{shape:?}: r_max={rmax} outside [1,{cap}]");
+            let mut prev = 0usize;
+            for &gamma in &[0.0, 0.5, 1.0] {
+                let r = gamma_rank(shape, gamma);
+                assert!((1..=cap).contains(&r), "{shape:?} γ={gamma}: r={r} outside [1,{cap}]");
+                assert!(r >= prev, "{shape:?}: schedule decreased at γ={gamma}: {r} < {prev}");
+                prev = r;
+            }
+            for &budget in &[1usize, 8, 64] {
+                let lr = lowrank_rank_for_budget(shape, budget);
+                assert!((1..=cap).contains(&lr), "{shape:?}: budget rank {lr} outside [1,{cap}]");
+                let p = (Scheme::LowRank { r: lr }).params(shape);
+                // lowrank_rank_for_budget floors at rank 1 even when rank 1
+                // already exceeds a tiny budget — non-excess applies beyond it.
+                assert!(lr == 1 || p <= budget, "{shape:?}: budget {budget} exceeded ({p})");
+            }
         }
     }
 

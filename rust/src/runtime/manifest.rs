@@ -166,10 +166,10 @@ mod tests {
           "param_count": 14,
           "global_len": 10,
           "layout": [
-            {"name": "a.x1", "len": 4, "kind": "global"},
-            {"name": "a.y1", "len": 6, "kind": "global"},
-            {"name": "a.x2", "len": 2, "kind": "local"},
-            {"name": "a.y2", "len": 2, "kind": "local"}
+            {"name": "a.x1", "len": 4, "init_std": 0.1, "kind": "global"},
+            {"name": "a.y1", "len": 6, "init_std": 0.1, "kind": "global"},
+            {"name": "a.x2", "len": 2, "init_std": 0.1, "kind": "local"},
+            {"name": "a.y2", "len": 2, "init_std": 0.1, "kind": "local"}
           ],
           "train": {"nbatches": 4, "batch": 32, "feature_dim": 8},
           "eval": {"nbatches": 2, "batch": 16, "feature_dim": 8},

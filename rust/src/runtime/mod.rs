@@ -179,6 +179,18 @@ impl ModelRuntime {
         }
     }
 
+    /// The factor-column coordinate map device-rank truncation masks over
+    /// (see [`crate::parameterization::RankMap`]). `None` for PJRT
+    /// artifacts — the AOT programs bake full-rank shapes in, so rank
+    /// elasticity is rejected for them at federation construction.
+    pub fn rank_map(&self) -> Option<crate::parameterization::RankMap> {
+        match &self.exec {
+            Exec::Native(exec) => Some(exec.rank_map()),
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt(_) => None,
+        }
+    }
+
     /// Run one local epoch. `correction`/`anchor` default to zeros and `mu`
     /// to 0 (plain FedAvg SGD); see python/compile/train.py for the
     /// optimizer mapping.
@@ -711,7 +723,7 @@ mod tests {
             r#"{"artifacts": {"demo": {
                 "train_hlo": "demo.train.hlo.txt", "eval_hlo": "demo.eval.hlo.txt",
                 "param_count": 5, "global_len": 5,
-                "layout": [{"name": "w", "len": 5, "kind": "global"}],
+                "layout": [{"name": "w", "len": 5, "init_std": 0.1, "kind": "global"}],
                 "train": {"nbatches": 1, "batch": 2, "feature_dim": 3},
                 "eval": {"nbatches": 1, "batch": 2, "feature_dim": 3}
             }}}"#,

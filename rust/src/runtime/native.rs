@@ -49,7 +49,8 @@ use std::sync::Arc;
 
 use crate::linalg::kernels::{col2im, im2col, GemmBackend, GemmCtx};
 use crate::parameterization::{
-    gamma_rank, lowrank_rank_for_budget, Layout, LayerShape, Segment, SegmentKind,
+    gamma_rank, lowrank_rank_for_budget, FactorDims, Layout, LayerShape, RankBlock, RankMap,
+    Segment, SegmentKind,
 };
 use crate::runtime::manifest::Backend;
 use crate::runtime::{ArtifactMeta, BatchShape, Manifest};
@@ -571,6 +572,64 @@ impl NativeExec {
 
     pub fn spec(&self) -> &NativeSpec {
         &self.spec
+    }
+
+    /// The factor-column coordinate map device-rank truncation masks over:
+    /// one [`RankBlock`] per low-rank factor matrix (`X`/`Y` columns) or
+    /// Tucker core (`𝒯` rank×rank blocks). Dense weights, biases, and the
+    /// embed table carry no blocks and are never truncated.
+    pub fn rank_map(&self) -> RankMap {
+        fn push_fc(p: &FcParam, blocks: &mut Vec<RankBlock>) {
+            match p {
+                FcParam::Dense { .. } => {}
+                FcParam::LowRank { x, y, r } => {
+                    for f in [x, y] {
+                        blocks.push(RankBlock {
+                            offset: f.start,
+                            dims: FactorDims::Cols { rows: f.len() / r, r: *r },
+                        });
+                    }
+                }
+                FcParam::Factored { x1, y1, x2, y2, r, .. } => {
+                    for f in [x1, y1, x2, y2] {
+                        blocks.push(RankBlock {
+                            offset: f.start,
+                            dims: FactorDims::Cols { rows: f.len() / r, r: *r },
+                        });
+                    }
+                }
+            }
+        }
+        let mut blocks = Vec::new();
+        for layer in &self.layers {
+            match layer {
+                LayerDesc::Fc(d) => push_fc(&d.param, &mut blocks),
+                LayerDesc::Conv(d) => match &d.param {
+                    ConvParam::Dense { .. } => {}
+                    ConvParam::Factored { x1, y1, t1, x2, y2, t2, r, .. } => {
+                        let kk = t1.len() / (r * r);
+                        for f in [x1, y1, x2, y2] {
+                            blocks.push(RankBlock {
+                                offset: f.start,
+                                dims: FactorDims::Cols { rows: f.len() / r, r: *r },
+                            });
+                        }
+                        for t in [t1, t2] {
+                            blocks.push(RankBlock {
+                                offset: t.start,
+                                dims: FactorDims::Core { r: *r, kk },
+                            });
+                        }
+                    }
+                },
+                LayerDesc::Pool2(_) | LayerDesc::Embed(_) => {}
+                LayerDesc::Lstm(d) => {
+                    push_fc(&d.w_ih, &mut blocks);
+                    push_fc(&d.w_hh, &mut blocks);
+                }
+            }
+        }
+        RankMap { blocks }
     }
 }
 

@@ -209,6 +209,7 @@ mod tests {
             sharing: Sharing::Full,
             wire: Default::default(),
             sched: Default::default(),
+            devices: Default::default(),
             sample_frac: 0.5,
             rounds: 1,
             local_epochs: 1,

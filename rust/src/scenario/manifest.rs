@@ -50,8 +50,8 @@
 use std::path::Path;
 
 use crate::config::{
-    CodecSpec, FaultConfig, Optimizer, RoundPolicy, RunConfig, SchedConfig, Sharing, TimeModel,
-    WireConfig,
+    CodecSpec, DeviceClass, DeviceClasses, FaultConfig, Optimizer, RoundPolicy, RunConfig,
+    SchedConfig, Sharing, TimeModel, WireConfig,
 };
 use crate::data::{synth_text, synth_vision};
 use crate::util::hash::sha256_hex;
@@ -377,6 +377,11 @@ pub struct ScenarioManifest {
     /// `faults` / `time` manifest blocks; all default to the historical
     /// synchronous faultless barrier).
     pub sched: SchedConfig,
+    /// Heterogeneous-device fleet mix (`devices` block: string shorthand
+    /// `"1.0:p=0.4,0.5:p=0.6:slow=2"` or an array of
+    /// `{rank_frac, prob, slowdown}` objects). Defaults to the uniform
+    /// full-rank fleet.
+    pub devices: DeviceClasses,
     pub sample_frac: f64,
     pub rounds: usize,
     pub local_epochs: usize,
@@ -403,6 +408,7 @@ impl ScenarioManifest {
             "policy",
             "faults",
             "time",
+            "devices",
             "sample_frac",
             "rounds",
             "local_epochs",
@@ -456,6 +462,10 @@ impl ScenarioManifest {
                 Some(p) => time_from_path(&p)?,
             },
         };
+        let devices = match root.key_opt("devices")? {
+            None => DeviceClasses::default(),
+            Some(p) => devices_from_path(&p)?,
+        };
         let m = ScenarioManifest {
             name,
             artifact,
@@ -464,6 +474,7 @@ impl ScenarioManifest {
             sharing,
             wire,
             sched,
+            devices,
             sample_frac: f64_or(&root, "sample_frac", 0.25)?,
             rounds: root.key("rounds")?.usize()?,
             local_epochs: usize_or(&root, "local_epochs", 2)?,
@@ -522,6 +533,13 @@ impl ScenarioManifest {
         self.sched
             .check_optimizer(&self.optimizer)
             .map_err(|e| format!("`policy`: {e}"))?;
+        self.devices.validate().map_err(|e| format!("`devices`: {e}"))?;
+        self.devices
+            .check_optimizer(&self.optimizer)
+            .map_err(|e| format!("`devices`: {e}"))?;
+        self.devices
+            .check_wire(&self.wire)
+            .map_err(|e| format!("`devices`: {e}"))?;
         let d = &self.dataset;
         match (d.clients, d.population) {
             (None, None) => {
@@ -612,6 +630,7 @@ impl ScenarioManifest {
             ("policy", policy_canonical(&self.sched.policy)),
             ("faults", faults_canonical(&self.sched.faults)),
             ("time", time_canonical(&self.sched.time)),
+            ("devices", devices_canonical(&self.devices)),
             ("sample_frac", Json::Num(self.sample_frac)),
             ("rounds", Json::Num(self.rounds as f64)),
             ("local_epochs", Json::Num(self.local_epochs as f64)),
@@ -653,6 +672,7 @@ impl ScenarioManifest {
             wire: self.wire.clone(),
             sharing: self.sharing.clone(),
             sched: self.sched,
+            devices: self.devices.clone(),
             eval_every: self.eval_every,
             seed: self.seed,
             num_threads: self.num_threads,
@@ -960,6 +980,43 @@ fn time_canonical(t: &TimeModel) -> Json {
     ])
 }
 
+fn devices_from_path(p: &JsonPath) -> Result<DeviceClasses, String> {
+    // String shorthand: the CLI spec ("uniform", "1.0:p=0.4,0.5:p=0.6:slow=2").
+    if let Some(s) = p.json().as_str() {
+        return DeviceClasses::parse(s).map_err(|e| format!("`{}`: {e}", p.path()));
+    }
+    let items = p.arr()?;
+    let mut classes = Vec::with_capacity(items.len());
+    for item in &items {
+        item.expect_keys(&["rank_frac", "prob", "slowdown"])?;
+        classes.push(DeviceClass {
+            rank_frac: item.key("rank_frac")?.f64()?,
+            prob: f64_or(item, "prob", 1.0)?,
+            slowdown: f64_or(item, "slowdown", 1.0)?,
+        });
+    }
+    let d = DeviceClasses { classes };
+    d.validate().map_err(|e| format!("`{}`: {e}", p.path()))?;
+    Ok(d)
+}
+
+fn devices_canonical(d: &DeviceClasses) -> Json {
+    // The uniform fleet canonicalizes to the empty list, so manifests that
+    // never mention `devices` hash identically to an explicit `"uniform"`.
+    Json::Arr(
+        d.classes
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("rank_frac", Json::Num(c.rank_frac)),
+                    ("prob", Json::Num(c.prob)),
+                    ("slowdown", Json::Num(c.slowdown)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 fn sharing_canonical(s: &Sharing) -> Json {
     match s {
         Sharing::Full => Json::obj(vec![("kind", Json::Str("full".into()))]),
@@ -1189,6 +1246,86 @@ mod tests {
     }
 
     #[test]
+    fn device_forms_agree_and_restrictions_are_caught() {
+        // String shorthand (the CLI spec) and array-of-objects form parse
+        // to the same fleet and hash.
+        let a = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "devices":"1.0:p=0.4,0.5:p=0.6:slow=2",
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        let b = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "devices":[{"rank_frac":1.0,"prob":0.4},
+                           {"rank_frac":0.5,"prob":0.6,"slowdown":2}],
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_eq!(
+            a.devices.classes,
+            vec![
+                DeviceClass { rank_frac: 1.0, prob: 0.4, slowdown: 1.0 },
+                DeviceClass { rank_frac: 0.5, prob: 0.6, slowdown: 2.0 },
+            ]
+        );
+        a.validate().unwrap();
+
+        // Omitting the block is the uniform fleet — and hashes identically
+        // to spelling `uniform`, so adding the key never perturbs golden
+        // hashes for homogeneous manifests.
+        let plain = ScenarioManifest::from_json_str(tiny_manifest_text()).unwrap();
+        assert_eq!(plain.devices, DeviceClasses::default());
+        let spelled = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"native_mlp10_orig","rounds":3,"devices":"uniform",
+                "dataset":{"source":"mnist","clients":8,"samples_per_client":96}}"#,
+        )
+        .unwrap();
+        assert_eq!(plain.content_hash(), spelled.content_hash());
+
+        // Truncation composes per coordinate; cohort-coupled server state
+        // does not: SCAFFOLD (and FedDyn) are rejected at validation.
+        let m = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,"devices":"1.0,0.5",
+                "optimizer":"scaffold",
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        let e = m.validate().unwrap_err();
+        assert!(e.contains("`devices`") && e.contains("SCAFFOLD"), "{e}");
+
+        // The sketch uplink smears mass into truncated coordinates.
+        let m = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,"devices":"1.0,0.5",
+                "wire":{"up":"subsample_quant:0.1"},
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        let e = m.validate().unwrap_err();
+        assert!(e.contains("`devices`") && e.contains("subsample_quant"), "{e}");
+
+        // Range errors carry the key path.
+        let e = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,"devices":"1.5",
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("`devices`") && e.contains("(0, 1]"), "{e}");
+
+        // Slowdown-only fleets stay legal with every optimizer.
+        let m = ScenarioManifest::from_json_str(
+            r#"{"name":"t","artifact":"a","rounds":1,
+                "devices":[{"rank_frac":1.0,"slowdown":4}],
+                "optimizer":"scaffold",
+                "dataset":{"source":"mnist","clients":2,"samples_per_client":8}}"#,
+        )
+        .unwrap();
+        m.validate().unwrap();
+    }
+
+    #[test]
     fn sched_forms_agree_and_incompatibilities_are_caught() {
         // String shorthand (the CLI spec) and object form parse to the
         // same scheduler config and hash.
@@ -1333,6 +1470,19 @@ mod tests {
             },
             _ => Sharing::LocalOnly,
         };
+        let wire = {
+            let up = match rng.below(3) {
+                0 => CodecSpec::Identity,
+                1 => CodecSpec::Fp16,
+                _ => CodecSpec::SubsampleQuant {
+                    rate: (1 + rng.below(100)) as f64 / 100.0,
+                    levels: (2 + rng.below(255)) as u32,
+                    feedback: rng.below(2) == 0,
+                },
+            };
+            let down = if rng.below(2) == 0 { CodecSpec::Identity } else { CodecSpec::Fp16 };
+            WireConfig { up, down, fingerprint_downloads: rng.below(2) == 0 }
+        };
         ScenarioManifest {
             name: format!("rand_{}", rng.below(1 << 30)),
             artifact: "native_mlp10_orig".into(),
@@ -1347,19 +1497,7 @@ mod tests {
             },
             optimizer,
             sharing,
-            wire: {
-                let up = match rng.below(3) {
-                    0 => CodecSpec::Identity,
-                    1 => CodecSpec::Fp16,
-                    _ => CodecSpec::SubsampleQuant {
-                        rate: (1 + rng.below(100)) as f64 / 100.0,
-                        levels: (2 + rng.below(255)) as u32,
-                        feedback: rng.below(2) == 0,
-                    },
-                };
-                let down = if rng.below(2) == 0 { CodecSpec::Identity } else { CodecSpec::Fp16 };
-                WireConfig { up, down, fingerprint_downloads: rng.below(2) == 0 }
-            },
+            wire: wire.clone(),
             sched: {
                 // Async is incompatible with SCAFFOLD/FedDyn, so only roll
                 // it for cohort-agnostic optimizers.
@@ -1390,6 +1528,38 @@ mod tests {
                         device_gflops: (1 + rng.below(50)) as f64 / 10.0,
                         speed_spread: 1.0 + rng.below(100) as f64,
                     },
+                }
+            },
+            devices: {
+                // Truncating classes are only legal against mean-style
+                // optimizers and zero-preserving uplinks; slowdown-only
+                // fleets compose with everything.
+                let trunc_ok = matches!(
+                    optimizer,
+                    Optimizer::FedAvg | Optimizer::FedProx { .. } | Optimizer::FedAdam
+                ) && !matches!(wire.up, CodecSpec::SubsampleQuant { .. });
+                match rng.below(3) {
+                    0 => DeviceClasses::default(),
+                    1 => DeviceClasses {
+                        classes: (0..1 + rng.below(3))
+                            .map(|_| DeviceClass {
+                                rank_frac: 1.0,
+                                prob: (1 + rng.below(10)) as f64 / 10.0,
+                                slowdown: 1.0 + (rng.below(30) as f64) / 10.0,
+                            })
+                            .collect(),
+                    },
+                    _ if trunc_ok => DeviceClasses {
+                        classes: vec![
+                            DeviceClass { rank_frac: 1.0, prob: 1.0, slowdown: 1.0 },
+                            DeviceClass {
+                                rank_frac: (1 + rng.below(10)) as f64 / 10.0,
+                                prob: (1 + rng.below(10)) as f64 / 10.0,
+                                slowdown: 1.0 + rng.below(4) as f64,
+                            },
+                        ],
+                    },
+                    _ => DeviceClasses::default(),
                 }
             },
             sample_frac: (1 + rng.below(100)) as f64 / 100.0,

@@ -47,6 +47,7 @@ fn base_cfg(artifact: &str) -> RunConfig {
         wire: WireConfig::identity(),
         sharing: Sharing::Full,
         sched: Default::default(),
+        devices: Default::default(),
         eval_every: 3,
         seed: 1,
         num_threads: 0,

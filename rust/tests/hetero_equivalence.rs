@@ -1,0 +1,262 @@
+//! Heterogeneous-device rank-elasticity suite (ISSUE 10).
+//!
+//! The FedHM-style device-class contracts, pinned end-to-end through
+//! `Federation` on the native backend (always runs):
+//!
+//! * the **homogeneous default** (`devices: uniform`) is the historical
+//!   bit path for *every* optimizer — and so is any enabled fleet whose
+//!   classes don't actually truncate (full-rank slowdown-only classes,
+//!   and fractional ranks that round up to the full rank), because the
+//!   fleet then carries no masks and `slowdown` only moves virtual time;
+//! * a **truncating fleet** zero-masks the trailing factor columns for
+//!   the whole round trip: masked coordinates of the server global never
+//!   move off the shared init, while active coordinates train, and the
+//!   ledger bills both directions at the truncated coordinate count;
+//! * truncation is **rejected up front** for configurations that would
+//!   silently repopulate masked coordinates: SCAFFOLD/FedDyn server
+//!   state, partial sharing, the sketched uplink, and dense artifacts
+//!   with no factors to truncate.
+
+use fedpara::config::{CodecSpec, DeviceClasses, Optimizer, RunConfig, Sharing, WireConfig};
+use fedpara::coordinator::Federation;
+use fedpara::data::{partition, synth_vision, Dataset};
+use fedpara::runtime::native::{self, NativeScheme, NativeSpec};
+use fedpara::runtime::{BatchShape, Engine};
+use fedpara::util::rng::Rng;
+
+fn iid_locals(n_per: usize, clients: usize, seed: u64) -> (Vec<Dataset>, Dataset) {
+    let spec = synth_vision::mnist_like();
+    let data = synth_vision::generate(&spec, clients * n_per, seed);
+    let test = synth_vision::generate(&spec, 256, seed ^ 0xE0E0);
+    let mut rng = Rng::new(seed);
+    let part = partition::iid(data.len(), clients, &mut rng);
+    let locals = part.clients.iter().map(|idx| data.subset(idx)).collect();
+    (locals, test)
+}
+
+/// Small native artifacts: a FedPara MLP (factors to truncate) and the
+/// dense original (nothing to truncate — the rejection case).
+fn small_engine() -> Engine {
+    let train = BatchShape { nbatches: 2, batch: 16, feature_dim: 784 };
+    let eval = BatchShape { nbatches: 2, batch: 64, feature_dim: 784 };
+    let spec = |scheme| NativeSpec::mlp_dims(784, 24, 10, scheme);
+    Engine::with_artifacts(vec![
+        native::artifact("hetero_fedpara", spec(NativeScheme::FedPara { gamma: 0.5 }), train, eval),
+        native::artifact("hetero_orig", spec(NativeScheme::Original), train, eval),
+    ])
+}
+
+fn base_cfg(artifact: &str, devices: DeviceClasses) -> RunConfig {
+    RunConfig {
+        artifact: artifact.into(),
+        sample_frac: 0.5,
+        rounds: 3,
+        local_epochs: 1,
+        lr: 0.1,
+        lr_decay: 0.992,
+        optimizer: Optimizer::FedAvg,
+        wire: WireConfig::identity(),
+        sharing: Sharing::Full,
+        sched: Default::default(),
+        devices,
+        eval_every: 0,
+        seed: 311,
+        num_threads: 2,
+    }
+}
+
+/// Everything a run produces, bit-exact (wall/virtual clock excluded).
+#[derive(Debug, PartialEq)]
+struct RunKey {
+    reports: Vec<(usize, u32, usize, u64, u64, u64)>,
+    server_global: Vec<u32>,
+    ledger: Vec<(u64, u64)>,
+}
+
+fn run_key(cfg: RunConfig, rounds: usize) -> RunKey {
+    let engine = small_engine();
+    let (locals, test) = iid_locals(48, 8, 77);
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    fed.run(rounds).unwrap();
+    RunKey {
+        reports: fed
+            .reports
+            .iter()
+            .map(|r| {
+                (
+                    r.round,
+                    r.lr.to_bits(),
+                    r.participants,
+                    r.mean_train_loss.to_bits(),
+                    r.up_bytes,
+                    r.down_bytes,
+                )
+            })
+            .collect(),
+        server_global: fed.server_global().iter().map(|p| p.to_bits()).collect(),
+        ledger: fed.comm.per_round.clone(),
+    }
+}
+
+/// The tentpole equivalence: the homogeneous default must be bit-identical
+/// to a slowdown-only fleet (enabled, but with no masks — `slowdown` only
+/// moves virtual time, which is outside the key) for all five optimizers.
+#[test]
+fn homogeneous_default_is_bit_identical_for_every_optimizer() {
+    let slow_fleet = DeviceClasses::parse("1.0:p=0.3:slow=3,1.0:p=0.7:slow=1.5").unwrap();
+    assert!(slow_fleet.enabled() && !slow_fleet.truncates());
+    for optimizer in [
+        Optimizer::FedAvg,
+        Optimizer::FedProx { mu: 0.1 },
+        Optimizer::Scaffold,
+        Optimizer::FedDyn { alpha: 0.1 },
+        Optimizer::FedAdam,
+    ] {
+        let mut uniform = base_cfg("hetero_fedpara", DeviceClasses::default());
+        uniform.optimizer = optimizer;
+        let mut slow = base_cfg("hetero_fedpara", slow_fleet.clone());
+        slow.optimizer = optimizer;
+        assert_eq!(
+            run_key(uniform, 2),
+            run_key(slow, 2),
+            "{}: a slowdown-only fleet leaked into training or billing",
+            optimizer.name()
+        );
+    }
+}
+
+/// A fractional rank that rounds up to the full rank (`⌈0.99·r⌉ = r` for
+/// every r ≤ 24 here) builds no masks and must stay on the historical bit
+/// path for the truncation-compatible optimizers.
+#[test]
+fn non_truncating_fraction_is_bit_identical() {
+    let fleet = DeviceClasses::parse("0.99").unwrap();
+    assert!(fleet.truncates(), "0.99 < 1.0 must request truncation");
+    for optimizer in
+        [Optimizer::FedAvg, Optimizer::FedProx { mu: 0.1 }, Optimizer::FedAdam]
+    {
+        let mut uniform = base_cfg("hetero_fedpara", DeviceClasses::default());
+        uniform.optimizer = optimizer;
+        let mut frac = base_cfg("hetero_fedpara", fleet.clone());
+        frac.optimizer = optimizer;
+        assert_eq!(
+            run_key(uniform, 2),
+            run_key(frac, 2),
+            "{}: a no-op rank fraction diverged from the uniform fleet",
+            optimizer.name()
+        );
+    }
+}
+
+/// A single truncating class covering every client: masked coordinates of
+/// the server global never move off the shared init (no client ever votes
+/// on them, and the per-coordinate renormalization falls back to the
+/// previous global), active coordinates train, and both wire directions
+/// bill exactly 4 bytes × the active coordinate count.
+#[test]
+fn truncating_fleet_masks_training_and_bills_truncated_bytes() {
+    let engine = small_engine();
+    let rt = engine.load("hetero_fedpara").unwrap();
+    let map = rt.rank_map().expect("native artifacts expose a rank map");
+    let mut ones = vec![1.0f32; rt.meta.param_count];
+    map.mask(&mut ones, 0.5);
+    let active: Vec<bool> = ones.iter().map(|&x| x != 0.0).collect();
+    let active_len = active.iter().filter(|&&b| b).count();
+    assert!(
+        0 < active_len && active_len < rt.meta.param_count,
+        "rank_frac 0.5 must truncate something ({active_len} of {})",
+        rt.meta.param_count
+    );
+
+    let mut cfg = base_cfg("hetero_fedpara", DeviceClasses::parse("0.5:slow=2").unwrap());
+    cfg.sample_frac = 1.0;
+    let (locals, test) = iid_locals(48, 8, 77);
+    let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+    let init_global = fed.server_global();
+    assert_eq!(init_global.len(), rt.meta.param_count, "full sharing: global == params");
+
+    let rounds = 3;
+    fed.run(rounds).unwrap();
+    for r in &fed.reports {
+        let n = r.participants as u64;
+        assert_eq!(r.up_bytes, n * 4 * active_len as u64, "round {}: uplink bill", r.round);
+        assert_eq!(r.down_bytes, n * 4 * active_len as u64, "round {}: downlink bill", r.round);
+    }
+
+    let final_global = fed.server_global();
+    let mut active_moved = false;
+    for (i, (&f, &i0)) in final_global.iter().zip(&init_global).enumerate() {
+        if active[i] {
+            active_moved |= f != i0;
+        } else {
+            assert_eq!(
+                f.to_bits(),
+                i0.to_bits(),
+                "coordinate {i} is masked fleet-wide and must stay at the init bits"
+            );
+        }
+    }
+    assert!(active_moved, "training must move at least one active coordinate");
+}
+
+/// A mixed fleet bills each client at its own class's truncated length:
+/// total uplink lands strictly between the all-small and all-full bills.
+#[test]
+fn mixed_fleet_bills_between_the_pure_fleets() {
+    let run_up = |devices: &str| -> u64 {
+        let engine = small_engine();
+        let mut cfg = base_cfg("hetero_fedpara", DeviceClasses::parse(devices).unwrap());
+        cfg.sample_frac = 1.0;
+        let (locals, test) = iid_locals(48, 8, 77);
+        let mut fed = Federation::new(&engine, cfg, locals, test).unwrap();
+        fed.run(2).unwrap();
+        fed.comm.up_bytes
+    };
+    let full = run_up("uniform");
+    let mixed = run_up("1.0:p=0.5,0.5:p=0.5");
+    let small = run_up("0.5");
+    assert!(
+        small < mixed && mixed < full,
+        "mixed-fleet uplink must sit strictly between the pure fleets \
+         (small {small}, mixed {mixed}, full {full})"
+    );
+}
+
+/// Configurations that would silently repopulate masked coordinates are
+/// rejected at federation construction, with actionable messages.
+#[test]
+fn incompatible_truncation_configs_are_rejected() {
+    let trunc = DeviceClasses::parse("1.0,0.5").unwrap();
+    let build = |cfg: RunConfig| -> Result<(), String> {
+        let engine = small_engine();
+        let (locals, test) = iid_locals(48, 4, 91);
+        Federation::new(&engine, cfg, locals, test).map(|_| ()).map_err(|e| e.to_string())
+    };
+
+    // Cohort-coupled server state.
+    for optimizer in [Optimizer::Scaffold, Optimizer::FedDyn { alpha: 0.1 }] {
+        let mut cfg = base_cfg("hetero_fedpara", trunc.clone());
+        cfg.optimizer = optimizer;
+        let e = build(cfg).unwrap_err();
+        assert!(e.contains("truncation"), "{}: {e}", optimizer.name());
+    }
+
+    // Partial sharing: the masks span the whole parameter vector.
+    let mut cfg = base_cfg("hetero_fedpara", trunc.clone());
+    cfg.sharing = Sharing::FedPer { local_prefixes: vec!["fc2".into()] };
+    let e = build(cfg).unwrap_err();
+    assert!(e.contains("full sharing"), "{e}");
+
+    // The sketched uplink smears mass into masked coordinates.
+    let mut cfg = base_cfg("hetero_fedpara", trunc.clone());
+    cfg.wire.up = CodecSpec::SubsampleQuant { rate: 0.25, levels: 16, feedback: true };
+    let e = build(cfg).unwrap_err();
+    assert!(e.contains("subsample_quant"), "{e}");
+
+    // Dense artifacts have no factor columns to truncate.
+    let e = build(base_cfg("hetero_orig", trunc.clone())).unwrap_err();
+    assert!(e.contains("no low-rank factor segments"), "{e}");
+
+    // The same fleet on the FedPara artifact builds fine.
+    build(base_cfg("hetero_fedpara", trunc)).unwrap();
+}

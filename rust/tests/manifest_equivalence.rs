@@ -33,6 +33,7 @@ fn legacy_config(artifact: &str, lr: f32, local_epochs: usize, sample_frac: f64)
         wire: Default::default(),
         sharing: Sharing::Full,
         sched: Default::default(),
+        devices: Default::default(),
         eval_every: 1,
         seed: 42,
         num_threads: 0,

@@ -51,6 +51,7 @@ fn base_cfg(artifact: &str, num_threads: usize) -> RunConfig {
         wire: WireConfig::identity(),
         sharing: Sharing::Full,
         sched: Default::default(),
+        devices: Default::default(),
         eval_every: 2,
         seed: 11,
         num_threads,

@@ -54,6 +54,7 @@ fn virtual_fed(
         wire: Default::default(),
         sharing,
         sched: Default::default(),
+        devices: Default::default(),
         eval_every: 0,
         seed: 77,
         num_threads: 0,

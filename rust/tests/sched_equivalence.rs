@@ -62,6 +62,7 @@ fn cfg(optimizer: Optimizer, sched: SchedConfig) -> RunConfig {
         wire: Default::default(),
         sharing: Sharing::Full,
         sched,
+        devices: Default::default(),
         eval_every: 1,
         seed: 23,
         num_threads: 2,

@@ -58,6 +58,7 @@ fn paper_cfg(artifact: &str, optimizer: Optimizer, sharing: Sharing) -> RunConfi
         wire: Default::default(),
         sharing,
         sched: Default::default(),
+        devices: Default::default(),
         eval_every: 1,
         seed: 23,
         num_threads: 2,

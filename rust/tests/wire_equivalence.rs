@@ -60,6 +60,7 @@ fn base_cfg(artifact: &str, wire: WireConfig) -> RunConfig {
         wire,
         sharing: Sharing::Full,
         sched: Default::default(),
+        devices: Default::default(),
         eval_every: 0,
         seed: 311,
         num_threads: 2,
